@@ -1,0 +1,111 @@
+//! End-to-end validation driver (DESIGN.md deliverable (b)): loads the
+//! Qwen3-Omni-sim any-to-any pipeline, serves a batched multimodal
+//! workload through the fully disaggregated backend AND the monolithic
+//! baseline, and reports latency/throughput for both.  This is the run
+//! recorded in EXPERIMENTS.md §End-to-end.
+//!
+//! ```sh
+//! cargo run --release --offline --example omni_serving -- [n_requests]
+//! ```
+
+use std::sync::Arc;
+
+use omni_serve::baseline::{run_monolithic, BaselineOptions};
+use omni_serve::config::presets;
+use omni_serve::orchestrator::{Orchestrator, RunOptions};
+use omni_serve::runtime::Artifacts;
+use omni_serve::stage_graph::transfers::Registry;
+use omni_serve::trace::datasets;
+use omni_serve::util::fmt;
+
+fn main() -> anyhow::Result<()> {
+    let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(12);
+    let artifacts = Arc::new(Artifacts::load(&Artifacts::default_dir())?);
+    let workload = datasets::ucf101(42, n, 0.0);
+    println!(
+        "workload: {} x {} (avg input {:.1} tok, text out {:.1}, audio out {:.1})",
+        workload.len(),
+        workload.name,
+        workload.avg_input_tokens(),
+        workload.avg_text_out(),
+        workload.avg_audio_out()
+    );
+
+    // --- disaggregated (vLLM-Omni-style) ---
+    let orch = Orchestrator::new(
+        presets::qwen3_omni(),
+        artifacts.clone(),
+        Registry::builtin(),
+        RunOptions::default(),
+    )?;
+    let ours = orch.run_workload(&workload, Some("talker"))?;
+    println!("\n-- omni-serve (disaggregated, streaming, continuous batching) --");
+    print_summary(&ours.report, ours.wall_s);
+    for s in &ours.stages {
+        if let Some(ar) = &s.ar {
+            println!(
+                "   {:>8}: {} calls ({} scan), exec {}, marshal {}, preempt {}",
+                s.name,
+                ar.prefill_calls + ar.decode_calls + ar.scan_calls,
+                ar.scan_calls,
+                fmt::dur(ar.exec_seconds),
+                fmt::dur(ar.marshal_seconds),
+                ar.preemptions,
+            );
+        }
+    }
+
+    // --- monolithic baseline (HF-Transformers-like) ---
+    let base = run_monolithic(
+        &artifacts,
+        &presets::qwen3_omni(),
+        &workload,
+        &BaselineOptions { lazy_compile: true, no_kv_cache: false },
+        Some("talker"),
+    )?;
+    println!("\n-- baseline (monolithic, serial, lazy compile) --");
+    print_summary(&base, base.wall_s);
+
+    println!("\n-- comparison (paper Fig. 6 shape) --");
+    println!(
+        "  JCT reduction: {:.1}%   (paper: 91.4% for Qwen3-Omni)",
+        (1.0 - ours.report.mean_jct() / base.mean_jct()) * 100.0
+    );
+    println!(
+        "  RTF reduction: {:.1}%   (paper: 90.7%)",
+        (1.0 - ours.report.mean_rtf() / base.mean_rtf()) * 100.0
+    );
+    println!(
+        "  Thinker TPS: {:.1} vs {:.1}  ({:.2}x; paper: 12.97x)",
+        ours.report.stage_tps("thinker"),
+        base.stage_tps("thinker"),
+        ours.report.stage_tps("thinker") / base.stage_tps("thinker"),
+    );
+    println!(
+        "  Talker  TPS: {:.1} vs {:.1}  ({:.2}x; paper: 7.98x)",
+        ours.report.stage_tps("talker"),
+        base.stage_tps("talker"),
+        ours.report.stage_tps("talker") / base.stage_tps("talker"),
+    );
+    Ok(())
+}
+
+fn print_summary(r: &omni_serve::metrics::RunReport, wall: f64) {
+    println!(
+        "   completed={} wall={} JCT mean={} TTFT mean={} RTF mean={:.3}",
+        r.completed,
+        fmt::dur(wall),
+        fmt::dur(r.mean_jct()),
+        fmt::dur(r.mean_ttft()),
+        r.mean_rtf()
+    );
+    for s in ["thinker", "talker", "vocoder"] {
+        println!(
+            "   {:>8}: residence {} | tokens {} | TPS {:.1}",
+            s,
+            fmt::dur(r.stage_mean_time(s)),
+            r.stage_tokens(s),
+            r.stage_tps(s)
+        );
+    }
+}

@@ -1,0 +1,82 @@
+//! Quickstart: serve a couple of multimodal requests through the
+//! Qwen2.5-Omni-sim pipeline (Thinker -> Talker -> DiT Vocoder).
+//!
+//! Run `make artifacts` first, then:
+//! ```sh
+//! cargo run --release --offline --example quickstart
+//! ```
+
+use std::sync::Arc;
+
+use omni_serve::config::presets;
+use omni_serve::orchestrator::{Orchestrator, RunOptions};
+use omni_serve::runtime::Artifacts;
+use omni_serve::stage_graph::transfers::Registry;
+use omni_serve::tokenizer::Tokenizer;
+use omni_serve::trace::{Modality, Request, Workload};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Load the AOT artifacts produced by `make artifacts`.
+    let artifacts = Arc::new(Artifacts::load(&Artifacts::default_dir())?);
+
+    // 2. Pick a pipeline preset (stage graph + placement + batching).
+    let config = presets::qwen25_omni();
+    println!("pipeline `{}` with {} stages", config.name, config.stages.len());
+
+    // 3. Build the disaggregated orchestrator.
+    let orch = Orchestrator::new(
+        config,
+        artifacts,
+        Registry::builtin(),
+        RunOptions::default(),
+    )?;
+
+    // 4. Create two requests: one spoken-audio question, one image.
+    let tok = Tokenizer::new(4096);
+    let requests = vec![
+        Request {
+            id: 1,
+            arrival_s: 0.0,
+            modality: Modality::Audio,
+            prompt_tokens: tok.encode("please describe this recording"),
+            mm_frames: 48,
+            seed: 11,
+            max_text_tokens: 24,
+            max_audio_tokens: 80,
+            diffusion_steps: 0,
+            ignore_eos: true,
+        },
+        Request {
+            id: 2,
+            arrival_s: 0.0,
+            modality: Modality::Image,
+            prompt_tokens: tok.encode("what dish is shown in the photo"),
+            mm_frames: 32,
+            seed: 22,
+            max_text_tokens: 20,
+            max_audio_tokens: 64,
+            diffusion_steps: 0,
+            ignore_eos: true,
+        },
+    ];
+    let workload = Workload { name: "quickstart".into(), requests };
+
+    // 5. Serve and report.
+    let summary = orch.run_workload(&workload, Some("talker"))?;
+    println!(
+        "completed {} requests in {:.2}s  (mean JCT {:.2}s, mean TTFT {:.2}s, mean RTF {:.2})",
+        summary.report.completed,
+        summary.wall_s,
+        summary.report.mean_jct(),
+        summary.report.mean_ttft(),
+        summary.report.mean_rtf(),
+    );
+    for stage in ["thinker", "talker", "vocoder"] {
+        println!(
+            "  {stage:>8}: mean residence {:.2}s, {} output tokens/frames",
+            summary.report.stage_mean_time(stage),
+            summary.report.stage_tokens(stage),
+        );
+    }
+    Ok(())
+}

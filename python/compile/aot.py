@@ -1,0 +1,311 @@
+"""AOT compiler: lower every stage function to HLO text + write the manifest.
+
+Run once at build time (``make artifacts``); Python is never on the request
+path.  Produces, under ``--out`` (default ``../artifacts``):
+
+  <model>.<fn>.b<B>[...].hlo.txt   one executable per (model, entry, bucket)
+  <model>.weights.bin              raw little-endian f32 weight blob
+  manifest.json                    configs + weight leaf order + entry IO specs
+
+Interchange is HLO *text*: jax >= 0.5 serializes HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (the version behind the Rust
+`xla` crate) rejects; the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import configs as C
+from . import layers as L
+from . import model as M
+
+MANIFEST_VERSION = 3
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+_DTYPE_NAMES = {jnp.float32.dtype: "f32", jnp.int32.dtype: "i32"}
+
+
+def _iospec(name, s):
+    return {"name": name, "shape": [int(d) for d in s.shape],
+            "dtype": _DTYPE_NAMES[jnp.dtype(s.dtype)]}
+
+
+class Builder:
+    def __init__(self, out_dir: str, verbose: bool = True):
+        self.out = out_dir
+        self.manifest = {"version": MANIFEST_VERSION, "models": {}}
+        self.verbose = verbose
+        os.makedirs(out_dir, exist_ok=True)
+
+    def log(self, msg):
+        if self.verbose:
+            print(msg, flush=True)
+
+    # -- weights ------------------------------------------------------------
+
+    def add_model(self, name: str, kind: str, cfg, params: dict):
+        leaf_names = sorted(params)
+        blob = bytearray()
+        leaves = []
+        for n in leaf_names:
+            arr = np.asarray(params[n], dtype=np.float32)
+            leaves.append({"name": n, "shape": list(arr.shape),
+                           "offset": len(blob) // 4, "size": int(arr.size)})
+            blob += arr.tobytes()
+        wfile = f"{name}.weights.bin"
+        with open(os.path.join(self.out, wfile), "wb") as f:
+            f.write(bytes(blob))
+        self.manifest["models"][name] = {
+            "kind": kind,
+            "config": C.config_dict(cfg),
+            "weights": {"file": wfile, "dtype": "f32", "leaves": leaves},
+            "entries": {},
+        }
+        self.log(f"[aot] {name}: {len(blob)//4} weight floats -> {wfile}")
+        return leaf_names
+
+    # -- entries ------------------------------------------------------------
+
+    def add_entry(self, model: str, entry: str, fn, weight_specs, arg_specs,
+                  arg_names, out_names, donate=()):
+        """Lower fn(weights_tuple, *args) and record the entry.
+
+        ``donate`` lists arg names whose buffers the executable may update
+        in place (input_output_alias in the HLO — XLA then avoids copying
+        the KV cache on every decode step; see EXPERIMENTS.md §Perf).
+        """
+        t0 = time.time()
+        # keep_unused: entries that use a subset of the weight leaves
+        # (e.g. patch_codec encode/decode) must still accept ALL leaves,
+        # since the Rust runtime passes the full weight set per model.
+        donate_argnums = tuple(1 + arg_names.index(d) for d in donate)
+        lowered = jax.jit(fn, keep_unused=True,
+                          donate_argnums=donate_argnums).lower(
+            tuple(weight_specs), *arg_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{model}.{entry}.hlo.txt"
+        with open(os.path.join(self.out, fname), "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, tuple(weight_specs), *arg_specs)
+        if not isinstance(outs, (tuple, list)):
+            outs = (outs,)
+        assert len(outs) == len(out_names), (model, entry, len(outs), out_names)
+        self.manifest["models"][model]["entries"][entry] = {
+            "file": fname,
+            "inputs": [_iospec(n, s) for n, s in zip(arg_names, arg_specs)],
+            "outputs": [_iospec(n, s) for n, s in zip(out_names, outs)],
+        }
+        self.log(f"[aot]   {model}.{entry}: {len(text)//1024} KiB HLO "
+                 f"({time.time()-t0:.1f}s)")
+
+    def finish(self):
+        path = os.path.join(self.out, "manifest.json")
+        with open(path, "w") as f:
+            json.dump(self.manifest, f, indent=1, sort_keys=True)
+        self.log(f"[aot] wrote {path}")
+
+
+# ---------------------------------------------------------------------------
+# Per-family builders
+# ---------------------------------------------------------------------------
+
+
+def build_ar(b: Builder, cfg: C.ArConfig, seed: int, *, scan: bool):
+    params = L.ar_init(cfg, seed)
+    names = b.add_model(cfg.name, "ar", cfg, params)
+    wspecs = [_spec(params[n].shape) for n in names]
+
+    def bind(f):
+        def wrapped(ws, *args):
+            return f(dict(zip(names, ws)), cfg, *args)
+        return wrapped
+
+    kv = lambda bb: _spec(L.kv_shape(cfg, bb))
+    ib = lambda bb: _spec((bb,), jnp.int32)
+    fb = lambda *s: _spec(s)
+
+    # decode
+    for bb in C.AR_DECODE_BUCKETS:
+        if cfg.cond_dim:
+            fn = bind(M.ar_decode_step)
+            args = [ib(bb), fb(bb, cfg.cond_dim), kv(bb), ib(bb)]
+            argn = ["token", "cond", "kv", "length"]
+        else:
+            fn = bind(lambda p, c, token, kvv, length:
+                      M.ar_decode_step(p, c, token, None, kvv, length))
+            args = [ib(bb), kv(bb), ib(bb)]
+            argn = ["token", "kv", "length"]
+        b.add_entry(cfg.name, f"decode.b{bb}", fn, wspecs, args, argn,
+                    ["logits", "hidden", "kv"], donate=("kv",))
+
+    # prefill
+    cch = C.PREFILL_CHUNK
+    emb_dim = cfg.cond_dim if cfg.cond_dim else cfg.d_model
+    for bb in C.AR_PREFILL_BUCKETS:
+        fn = bind(M.ar_prefill_chunk)
+        args = [_spec((bb, cch), jnp.int32), fb(bb, cch, emb_dim),
+                fb(bb, cch), kv(bb), ib(bb)]
+        argn = ["tokens", "mm_embeds", "mm_mask", "kv", "base"]
+        b.add_entry(cfg.name, f"prefill.b{bb}.c{cch}", fn, wspecs, args, argn,
+                    ["logits", "hidden", "kv"], donate=("kv",))
+
+    # fused decode scan
+    if scan:
+        k = C.SCAN_STEPS
+        for bb in C.AR_SCAN_BUCKETS:
+            if cfg.cond_dim:
+                fn = bind(functools.partial(M.ar_decode_scan, n_steps=k))
+                args = [ib(bb), fb(bb, cfg.cond_dim), kv(bb), ib(bb), fb(bb),
+                        ib(bb)]
+                argn = ["token", "cond", "kv", "length", "active", "eos"]
+            else:
+                fn = bind(lambda p, c, token, kvv, length, active, eos:
+                          M.ar_decode_scan(p, c, token, None, kvv, length,
+                                           active, eos, n_steps=k))
+                args = [ib(bb), kv(bb), ib(bb), fb(bb), ib(bb)]
+                argn = ["token", "kv", "length", "active", "eos"]
+            b.add_entry(cfg.name, f"scan.b{bb}.k{k}", fn, wspecs, args, argn,
+                        ["tokens", "hiddens", "kv", "length", "active"],
+                        donate=("kv",))
+
+
+def build_encoder(b: Builder, cfg: C.EncoderConfig, seed: int):
+    params = L.encoder_init(cfg, seed)
+    names = b.add_model(cfg.name, "encoder", cfg, params)
+    wspecs = [_spec(params[n].shape) for n in names]
+
+    def fn(ws, feats, mask):
+        return (M.mm_encode(dict(zip(names, ws)), cfg, feats, mask),)
+
+    for bb in C.ENCODER_BUCKETS:
+        args = [_spec((bb, cfg.t_max, cfg.feat_dim)), _spec((bb, cfg.t_max))]
+        b.add_entry(cfg.name, f"encode.b{bb}", fn, wspecs, args,
+                    ["feats", "mask"], ["embeds"])
+
+
+def build_dit(b: Builder, cfg: C.DitConfig, seed: int, buckets):
+    params = L.dit_init(cfg, seed)
+    names = b.add_model(cfg.name, "dit", cfg, params)
+    wspecs = [_spec(params[n].shape) for n in names]
+
+    def fn(ws, latent, cond, cond_tokens, t, cfg_scale):
+        return M.dit_step(dict(zip(names, ws)), cfg, latent, cond,
+                          cond_tokens, t, cfg_scale)
+
+    for bb in buckets:
+        args = [
+            _spec((bb, cfg.n_tokens, cfg.latent_dim)),
+            _spec((bb, max(cfg.cond_dim, 1))),
+            _spec((bb, cfg.n_tokens, max(cfg.cond_tokens_dim, 1))),
+            _spec((bb,)),
+            _spec((bb,)),
+        ]
+        argn = ["latent", "cond", "cond_tokens", "t", "cfg_scale"]
+        b.add_entry(cfg.name, f"step.b{bb}", fn, wspecs, args, argn,
+                    ["eps", "t_mod"])
+
+
+def build_cnn_vocoder(b: Builder, cfg: C.CnnVocoderConfig, seed: int):
+    params = L.cnn_vocoder_init(cfg, seed)
+    names = b.add_model(cfg.name, "cnn_vocoder", cfg, params)
+    wspecs = [_spec(params[n].shape) for n in names]
+
+    def fn(ws, tokens):
+        return (M.cnn_vocoder(dict(zip(names, ws)), cfg, tokens),)
+
+    for bb in C.CNN_VOC_BUCKETS:
+        args = [_spec((bb, cfg.t_frames), jnp.int32)]
+        b.add_entry(cfg.name, f"vocode.b{bb}", fn, wspecs, args,
+                    ["tokens"], ["wave"])
+
+
+def build_patch_codec(b: Builder, cfg: C.PatchCodecConfig, seed: int):
+    params = L.patch_codec_init(cfg, seed)
+    names = b.add_model(cfg.name, "patch_codec", cfg, params)
+    wspecs = [_spec(params[n].shape) for n in names]
+
+    def enc(ws, feats):
+        return (M.patch_encode(dict(zip(names, ws)), cfg, feats),)
+
+    def dec(ws, tokens):
+        return (M.patch_decode(dict(zip(names, ws)), cfg, tokens),)
+
+    for bb in C.PATCH_BUCKETS:
+        b.add_entry(cfg.name, f"encode.b{bb}", enc, wspecs,
+                    [_spec((bb, cfg.t_max, cfg.patch_dim))], ["feats"],
+                    ["embeds"])
+        b.add_entry(cfg.name, f"decode.b{bb}", dec, wspecs,
+                    [_spec((bb, cfg.t_max), jnp.int32)], ["tokens"],
+                    ["patches"])
+
+
+# ---------------------------------------------------------------------------
+
+
+def build_all(out_dir: str, only=None, verbose=True):
+    b = Builder(out_dir, verbose=verbose)
+    seed = 20260203  # paper preprint date
+
+    def want(name):
+        return only is None or name in only
+
+    for i, (name, cfg) in enumerate(sorted(C.AR_MODELS.items())):
+        if want(name):
+            build_ar(b, cfg, seed + i, scan=name in C.SCAN_MODELS)
+    for i, (name, cfg) in enumerate(sorted(C.ENCODERS.items())):
+        if want(name):
+            build_encoder(b, cfg, seed + 100 + i)
+    for i, (name, cfg) in enumerate(sorted(C.DIT_MODELS.items())):
+        if want(name):
+            buckets = C.DIT_VOC_BUCKETS if name.startswith("voc_") else C.IMAGE_DIT_BUCKETS
+            build_dit(b, cfg, seed + 200 + i, buckets)
+    for i, (name, cfg) in enumerate(sorted(C.CNN_VOCODERS.items())):
+        if want(name):
+            build_cnn_vocoder(b, cfg, seed + 300 + i)
+    for i, (name, cfg) in enumerate(sorted(C.PATCH_CODECS.items())):
+        if want(name):
+            build_patch_codec(b, cfg, seed + 400 + i)
+    b.finish()
+    return b.manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="limit to these model names (debugging)")
+    ap.add_argument("-q", "--quiet", action="store_true")
+    args = ap.parse_args()
+    t0 = time.time()
+    m = build_all(args.out, only=args.only, verbose=not args.quiet)
+    n_entries = sum(len(v["entries"]) for v in m["models"].values())
+    print(f"[aot] done: {len(m['models'])} models, {n_entries} entries "
+          f"in {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,196 @@
+"""Model-zoo configurations for the omni-serve reproduction.
+
+These are laptop-scale stand-ins for the paper's models (DESIGN.md §7):
+the pipeline *topology* (Thinker->Talker->Vocoder, AR+DiT, patch codec)
+and the relative scale ordering (Qwen3 Thinker > Qwen2.5 Thinker > Talker)
+are preserved; parameter counts are scaled to CPU-PJRT practicality.
+
+Every config here is mirrored in the manifest consumed by the Rust
+runtime, so Rust never hard-codes shapes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ArConfig:
+    """Autoregressive decoder stage (Thinker / Talker / MiMo backbone)."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_head: int
+    d_ff: int
+    max_seq: int
+    # Per-step conditioning width (Talker: Thinker hidden size). 0 = none.
+    cond_dim: int = 0
+    eos_id: int = 2
+
+    @property
+    def kv_floats_per_slot(self) -> int:
+        return self.n_layers * 2 * self.n_heads * self.max_seq * self.d_head
+
+    @property
+    def n_params(self) -> int:
+        d = self.d_model
+        per_layer = 3 * d * self.n_heads * self.d_head + self.n_heads * self.d_head * d
+        per_layer += d * self.d_ff + self.d_ff * d + 2 * d
+        total = self.vocab * d + self.max_seq * d + self.n_layers * per_layer
+        total += d + d * self.vocab
+        if self.cond_dim:
+            total += self.cond_dim * d
+        return total
+
+
+@dataclass(frozen=True)
+class DitConfig:
+    """Diffusion-transformer stage (vocoder or image/video generator)."""
+
+    name: str
+    n_tokens: int      # latent tokens per sample
+    latent_dim: int    # channels per latent token
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    cond_dim: int      # conditioning vector width (text/codec summary)
+    # Per-token conditioning stream (vocoder codec embeds); 0 = none.
+    cond_tokens_dim: int = 0
+    default_steps: int = 10
+
+
+@dataclass(frozen=True)
+class CnnVocoderConfig:
+    """Lightweight CNN vocoder (Qwen3-Omni style)."""
+
+    name: str
+    vocab: int        # codec vocabulary
+    t_frames: int     # codec frames per chunk
+    d_embed: int
+    channels: int
+    upsample: int     # total waveform samples per frame
+
+
+@dataclass(frozen=True)
+class EncoderConfig:
+    """Multimodal input encoder (audio/image/video -> embeddings)."""
+
+    name: str
+    feat_dim: int
+    t_max: int
+    d_inner: int
+    n_layers: int
+    n_heads: int
+    d_out: int
+
+
+@dataclass(frozen=True)
+class PatchCodecConfig:
+    """MiMo-Audio patch encoder/decoder pair."""
+
+    name: str
+    patch_dim: int     # input feature dim per audio patch
+    t_max: int         # patches per call
+    d_model: int       # backbone embedding width
+    vocab: int         # audio token vocabulary
+    samples_per_patch: int
+
+
+# --------------------------------------------------------------------------
+# The model zoo.  Names are referenced by python/compile/aot.py and by the
+# Rust config presets (rust/src/config/presets.rs).
+# --------------------------------------------------------------------------
+
+AR_MODELS = {
+    # Qwen2.5-Omni sim: 7B Thinker -> small; Talker smaller still.
+    "thinker25": ArConfig("thinker25", vocab=4096, d_model=256, n_layers=4,
+                          n_heads=4, d_head=64, d_ff=1024, max_seq=256),
+    # Qwen3-Omni sim: 30B Thinker -> deliberately larger than thinker25.
+    "thinker3": ArConfig("thinker3", vocab=4096, d_model=384, n_layers=6,
+                         n_heads=6, d_head=64, d_ff=1536, max_seq=256),
+    "talker25": ArConfig("talker25", vocab=2048, d_model=192, n_layers=3,
+                         n_heads=4, d_head=48, d_ff=768, max_seq=256,
+                         cond_dim=256),
+    "talker3": ArConfig("talker3", vocab=2048, d_model=256, n_layers=4,
+                        n_heads=4, d_head=64, d_ff=1024, max_seq=256,
+                        cond_dim=384),
+    # MiMo-Audio backbone.
+    "mimo": ArConfig("mimo", vocab=2048, d_model=256, n_layers=4,
+                     n_heads=4, d_head=64, d_ff=1024, max_seq=256),
+    # BAGEL understanding expert (MoT understanding half).
+    "bagel_und": ArConfig("bagel_und", vocab=4096, d_model=256, n_layers=4,
+                          n_heads=4, d_head=64, d_ff=1024, max_seq=256),
+}
+
+DIT_MODELS = {
+    # Qwen2.5-Omni DiT vocoder: codec frames -> mel-ish latents.
+    "voc_dit25": DitConfig("voc_dit25", n_tokens=64, latent_dim=32,
+                           d_model=192, n_layers=3, n_heads=4, d_ff=768,
+                           cond_dim=0, cond_tokens_dim=48, default_steps=10),
+    # BAGEL generation expert.
+    "bagel_t2i": DitConfig("bagel_t2i", n_tokens=256, latent_dim=16,
+                           d_model=256, n_layers=4, n_heads=4, d_ff=1024,
+                           cond_dim=256, default_steps=24),
+    "bagel_i2i": DitConfig("bagel_i2i", n_tokens=512, latent_dim=16,
+                           d_model=256, n_layers=4, n_heads=4, d_ff=1024,
+                           cond_dim=256, default_steps=24),
+    # Qwen-Image / Qwen-Image-Edit sims (wider trunk).
+    "qwen_image": DitConfig("qwen_image", n_tokens=256, latent_dim=16,
+                            d_model=320, n_layers=4, n_heads=4, d_ff=1280,
+                            cond_dim=256, default_steps=20),
+    "qwen_image_edit": DitConfig("qwen_image_edit", n_tokens=512, latent_dim=16,
+                                 d_model=320, n_layers=4, n_heads=4, d_ff=1280,
+                                 cond_dim=256, default_steps=20),
+    # Wan2.2 video sims (more latent tokens = frames x patches).
+    "wan22_t2v": DitConfig("wan22_t2v", n_tokens=384, latent_dim=16,
+                           d_model=256, n_layers=4, n_heads=4, d_ff=1024,
+                           cond_dim=256, default_steps=20),
+    "wan22_i2v": DitConfig("wan22_i2v", n_tokens=448, latent_dim=16,
+                           d_model=256, n_layers=4, n_heads=4, d_ff=1024,
+                           cond_dim=256, default_steps=20),
+}
+
+CNN_VOCODERS = {
+    # Qwen3-Omni lightweight CNN vocoder.
+    "voc_cnn3": CnnVocoderConfig("voc_cnn3", vocab=2048, t_frames=64,
+                                 d_embed=64, channels=64, upsample=16),
+}
+
+ENCODERS = {
+    "enc25": EncoderConfig("enc25", feat_dim=64, t_max=128, d_inner=128,
+                           n_layers=2, n_heads=4, d_out=256),
+    "enc3": EncoderConfig("enc3", feat_dim=64, t_max=128, d_inner=128,
+                          n_layers=2, n_heads=4, d_out=384),
+}
+
+PATCH_CODECS = {
+    "mimo_codec": PatchCodecConfig("mimo_codec", patch_dim=64, t_max=64,
+                                   d_model=256, vocab=2048,
+                                   samples_per_patch=128),
+}
+
+# Chunk size for chunked prefill; decode-scan unroll length.
+PREFILL_CHUNK = 32
+SCAN_STEPS = 8
+
+AR_DECODE_BUCKETS = (1, 2, 4, 8)
+AR_PREFILL_BUCKETS = (1, 2, 4)
+AR_SCAN_BUCKETS = (1, 2, 4)
+DIT_VOC_BUCKETS = (1, 2, 4)
+CNN_VOC_BUCKETS = (1, 2, 4)
+IMAGE_DIT_BUCKETS = (1,)
+ENCODER_BUCKETS = (1, 4)
+PATCH_BUCKETS = (1, 4)
+
+# Which AR models get a decode_scan entry (long-generation stages).
+SCAN_MODELS = ("talker25", "talker3", "mimo")
+
+
+def config_dict(cfg) -> dict:
+    """Dataclass -> plain dict for the JSON manifest."""
+    return dataclasses.asdict(cfg)

@@ -1,0 +1,158 @@
+"""L1 Pallas kernels: decode-step and chunked-prefill attention.
+
+TPU-shaped design (see DESIGN.md §Hardware-Adaptation): the paper's serving
+engines lean on CUDA flash-attention; here the same IO-awareness insight is
+expressed for the TPU memory hierarchy.  The KV cache lives in "HBM" and is
+staged into VMEM per (batch, head) program via BlockSpec; within a program
+we run an online-softmax sweep over KV blocks so the full [S] score row is
+never materialized.
+
+All kernels are lowered with ``interpret=True`` — the CPU PJRT plugin
+cannot execute Mosaic custom-calls, and the interpret path lowers to plain
+HLO that the Rust runtime replays.  VMEM budgeting (the real-TPU argument)
+is documented in DESIGN.md §Perf:
+
+  decode kernel, per program: K tile [S, dh] + V tile [S, dh]
+    = 2 * 256 * 64 * 4 B = 128 KiB  « 16 MiB VMEM
+  chunk kernel adds Q [C, dh] (C=32): + 8 KiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+DEFAULT_KV_BLOCK = 64
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *, kv_block: int):
+    """One program handles one (batch, head) pair.
+
+    q_ref: [dh]; k_ref/v_ref: [S, dh]; len_ref: scalar prefetch-ish [1];
+    o_ref: [dh].
+    """
+    s, dh = k_ref.shape
+    length = len_ref[0]
+    q = q_ref[...].astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, dtype=jnp.float32))
+
+    n_blocks = s // kv_block
+
+    def body(i, carry):
+        m_prev, l_prev, acc = carry
+        start = i * kv_block
+        k_blk = k_ref[pl.dslice(start, kv_block), :].astype(jnp.float32)
+        v_blk = v_ref[pl.dslice(start, kv_block), :].astype(jnp.float32)
+        scores = jnp.dot(k_blk, q) * scale  # [kv_block]
+        pos = start + jax.lax.broadcasted_iota(jnp.int32, (kv_block,), 0)
+        scores = jnp.where(pos < length, scores, NEG_INF)
+        m_cur = jnp.maximum(m_prev, jnp.max(scores))
+        alpha = jnp.exp(m_prev - m_cur)
+        # Guard the all-masked case: exp(NEG_INF - NEG_INF) would be 1.
+        p = jnp.where(scores > NEG_INF * 0.5, jnp.exp(scores - m_cur), 0.0)
+        l_cur = l_prev * alpha + jnp.sum(p)
+        acc = acc * alpha + jnp.dot(p, v_blk)
+        return m_cur, l_cur, acc
+
+    m0 = jnp.asarray(NEG_INF, dtype=jnp.float32)
+    l0 = jnp.asarray(0.0, dtype=jnp.float32)
+    acc0 = jnp.zeros((dh,), dtype=jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_blocks, body, (m0, l0, acc0))
+    out = acc / jnp.where(l == 0.0, 1.0, l)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, lengths, *, kv_block: int = DEFAULT_KV_BLOCK, interpret: bool = True):
+    """Flash decode attention.  Shapes as in ``ref.decode_attention_ref``.
+
+    q: [B, H, dh], k/v: [B, H, S, dh], lengths: [B] int32 -> [B, H, dh].
+    """
+    b, h, s, dh = k.shape
+    assert q.shape == (b, h, dh), (q.shape, k.shape)
+    kv_block = min(kv_block, s)
+    assert s % kv_block == 0, f"S={s} must be a multiple of kv_block={kv_block}"
+    kernel = functools.partial(_decode_kernel, kv_block=kv_block)
+    grid = (b, h)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (i,)),          # lengths[b]
+            pl.BlockSpec((None, None, dh), lambda i, j: (i, j, 0)),  # q[b,h]
+            pl.BlockSpec((None, None, s, dh), lambda i, j: (i, j, 0, 0)),  # k[b,h]
+            pl.BlockSpec((None, None, s, dh), lambda i, j: (i, j, 0, 0)),  # v[b,h]
+        ],
+        out_specs=pl.BlockSpec((None, None, dh), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, dh), q.dtype),
+        interpret=interpret,
+    )(lengths, q, k, v)
+
+
+def _chunk_kernel(base_ref, q_ref, k_ref, v_ref, o_ref, *, kv_block: int):
+    """Chunked-prefill attention for one (batch, head) pair.
+
+    q_ref: [C, dh]; k_ref/v_ref: [S, dh]; base_ref: [1];
+    o_ref: [C, dh].  Row t attends to cache rows <= base + t.
+    """
+    s, dh = k_ref.shape
+    c = q_ref.shape[0]
+    base = base_ref[0]
+    q = q_ref[...].astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, dtype=jnp.float32))
+    n_blocks = s // kv_block
+    rows = jax.lax.broadcasted_iota(jnp.int32, (c, 1), 0)  # [C,1]
+
+    def body(i, carry):
+        m_prev, l_prev, acc = carry  # [C,1], [C,1], [C,dh]
+        start = i * kv_block
+        k_blk = k_ref[pl.dslice(start, kv_block), :].astype(jnp.float32)
+        v_blk = v_ref[pl.dslice(start, kv_block), :].astype(jnp.float32)
+        scores = jnp.dot(q, k_blk.T) * scale  # [C, kv_block]
+        pos = start + jax.lax.broadcasted_iota(jnp.int32, (1, kv_block), 1)
+        valid = pos <= (base + rows)  # [C, kv_block]
+        scores = jnp.where(valid, scores, NEG_INF)
+        m_cur = jnp.maximum(m_prev, jnp.max(scores, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_cur)
+        # Guard fully-masked rows: exp(NEG_INF - NEG_INF) would be 1.
+        p = jnp.where(scores > NEG_INF * 0.5, jnp.exp(scores - m_cur), 0.0)
+        l_cur = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha + jnp.dot(p, v_blk)
+        return m_cur, l_cur, acc
+
+    m0 = jnp.full((c, 1), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((c, 1), dtype=jnp.float32)
+    acc0 = jnp.zeros((c, dh), dtype=jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_blocks, body, (m0, l0, acc0))
+    out = acc / jnp.where(l == 0.0, 1.0, l)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+def prefix_chunk_attention(q, k, v, base, *, kv_block: int = DEFAULT_KV_BLOCK, interpret: bool = True):
+    """Chunked-prefill flash attention.  Shapes as in
+    ``ref.prefix_chunk_attention_ref``.
+
+    q: [B, H, C, dh], k/v: [B, H, S, dh], base: [B] int32 -> [B, H, C, dh].
+    """
+    b, h, c, dh = q.shape
+    s = k.shape[2]
+    kv_block = min(kv_block, s)
+    assert s % kv_block == 0, f"S={s} must be a multiple of kv_block={kv_block}"
+    kernel = functools.partial(_chunk_kernel, kv_block=kv_block)
+    grid = (b, h)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+            pl.BlockSpec((None, None, c, dh), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((None, None, s, dh), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((None, None, s, dh), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, c, dh), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, c, dh), q.dtype),
+        interpret=interpret,
+    )(base, q, k, v)

@@ -1,0 +1,123 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the CORE correctness signal: every Pallas kernel in this package
+must match its oracle here under `numpy.testing.assert_allclose` across the
+shape/dtype sweep in ``python/tests/test_kernels.py`` (hypothesis-driven).
+
+The oracles are deliberately written in the most direct way possible (no
+blocking, no online softmax, no fused modulation) so that a bug in the
+kernel cannot be mirrored in the reference.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k, v, lengths):
+    """Single-query (decode-step) attention over a padded KV cache.
+
+    Args:
+      q:       [B, H, dh]  query for the current decode position.
+      k, v:    [B, H, S, dh]  padded KV cache (rows >= lengths[b] are junk).
+      lengths: [B] int32  number of valid cache rows per sequence.
+
+    Returns:
+      [B, H, dh] attention output.  Sequences with length == 0 return 0.
+    """
+    b, h, s, dh = k.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, dtype=jnp.float32))
+    scores = jnp.einsum("bhd,bhsd->bhs", q.astype(jnp.float32), k.astype(jnp.float32))
+    scores = scores * scale
+    pos = jnp.arange(s, dtype=jnp.int32)[None, None, :]
+    valid = pos < lengths[:, None, None]
+    scores = jnp.where(valid, scores, NEG_INF)
+    # A fully-masked row would produce NaN through softmax; force it to 0.
+    any_valid = jnp.any(valid, axis=-1, keepdims=True)
+    probs = jnp.where(
+        any_valid,
+        jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True)),
+        0.0,
+    )
+    denom = jnp.sum(probs, axis=-1, keepdims=True)
+    probs = probs / jnp.where(denom == 0.0, 1.0, denom)
+    out = jnp.einsum("bhs,bhsd->bhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def prefix_chunk_attention_ref(q, k, v, base):
+    """Chunked-prefill attention oracle.
+
+    Args:
+      q:    [B, H, C, dh]  queries for chunk rows (absolute pos = base+t).
+      k, v: [B, H, S, dh]  padded cache holding prefix AND the chunk rows.
+      base: [B] int32  absolute position of the first chunk row.
+
+    Row t of the chunk may attend to cache rows [0, base+t] (causal within
+    the chunk, full visibility of the prefix).
+    """
+    bsz, h, c, dh = q.shape
+    s = k.shape[2]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, dtype=jnp.float32))
+    scores = jnp.einsum("bhtd,bhsd->bhts", q.astype(jnp.float32), k.astype(jnp.float32))
+    scores = scores * scale
+    pos = jnp.arange(s, dtype=jnp.int32)[None, None, None, :]  # [1,1,1,S]
+    row = jnp.arange(c, dtype=jnp.int32)[None, None, :, None]  # [1,1,C,1]
+    limit = base[:, None, None, None] + row  # inclusive upper bound
+    valid = pos <= limit
+    scores = jnp.where(valid, scores, NEG_INF)
+    probs = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    denom = jnp.sum(probs, axis=-1, keepdims=True)
+    probs = probs / jnp.where(denom == 0.0, 1.0, denom)
+    out = jnp.einsum("bhts,bhsd->bhtd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def adaln_block_ref(x, t_emb, wq, wk, wv, wo, w1, w2, mod_w, mod_b, n_heads=4):
+    """DiT block oracle: AdaLN-Zero modulation + self-attention + MLP.
+
+    Args:
+      x:     [B, N, D]   token latents.
+      t_emb: [B, D]      timestep/conditioning embedding.
+      wq/wk/wv/wo: [D, D] attention projections (no bias).
+      w1: [D, F], w2: [F, D] MLP projections.
+      mod_w: [D, 6*D], mod_b: [6*D]  modulation producing
+             (shift_a, scale_a, gate_a, shift_m, scale_m, gate_m).
+
+    Returns [B, N, D].
+    """
+    b, n, d = x.shape
+    h = n_heads
+    dh = d // h
+    x = x.astype(jnp.float32)
+    t_emb = t_emb.astype(jnp.float32)
+    mod = jnp.dot(t_emb, mod_w.astype(jnp.float32)) + mod_b.astype(jnp.float32)
+    sa, ca, ga, sm, cm, gm = jnp.split(mod, 6, axis=-1)
+
+    def layernorm(y):
+        mu = jnp.mean(y, axis=-1, keepdims=True)
+        var = jnp.var(y, axis=-1, keepdims=True)
+        return (y - mu) / jnp.sqrt(var + 1e-6)
+
+    def gelu(y):
+        return 0.5 * y * (1.0 + jnp.tanh(jnp.sqrt(2.0 / jnp.pi) * (y + 0.044715 * y**3)))
+
+    # --- attention branch ---
+    xn = layernorm(x) * (1.0 + ca[:, None, :]) + sa[:, None, :]
+    q = jnp.einsum("bnd,de->bne", xn, wq).reshape(b, n, h, dh).transpose(0, 2, 1, 3)
+    k = jnp.einsum("bnd,de->bne", xn, wk).reshape(b, n, h, dh).transpose(0, 2, 1, 3)
+    v = jnp.einsum("bnd,de->bne", xn, wv).reshape(b, n, h, dh).transpose(0, 2, 1, 3)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, dtype=jnp.float32))
+    att = jnp.einsum("bhtd,bhsd->bhts", q, k) * scale
+    att = jnp.exp(att - jnp.max(att, axis=-1, keepdims=True))
+    att = att / jnp.sum(att, axis=-1, keepdims=True)
+    o = jnp.einsum("bhts,bhsd->bhtd", att, v).transpose(0, 2, 1, 3).reshape(b, n, d)
+    x = x + ga[:, None, :] * jnp.einsum("bnd,de->bne", o, wo)
+
+    # --- MLP branch ---
+    xn = layernorm(x) * (1.0 + cm[:, None, :]) + sm[:, None, :]
+    hdn = gelu(jnp.einsum("bnd,df->bnf", xn, w1))
+    x = x + gm[:, None, :] * jnp.einsum("bnf,fd->bnd", hdn, w2)
+    return x

@@ -1,0 +1,191 @@
+"""Shared L2 building blocks: parameter init and transformer primitives.
+
+All stage functions in ``model.py`` are pure functions of
+``(params: dict[str, Array], *tensors)``.  Params are flat string-keyed
+dicts so that the AOT flattening order (sorted keys) is deterministic and
+recordable in the manifest for the Rust runtime.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ArConfig, CnnVocoderConfig, DitConfig, EncoderConfig, PatchCodecConfig
+from .kernels.attention import decode_attention, prefix_chunk_attention
+
+
+def rms_norm(x, g, eps=1e-6):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * g
+
+
+def layer_norm(x, eps=1e-6):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps)
+
+
+def gelu(y):
+    return 0.5 * y * (1.0 + jnp.tanh(jnp.sqrt(2.0 / jnp.pi) * (y + 0.044715 * y**3)))
+
+
+def sinusoidal_embed(t, dim):
+    """t: [B] float in [0, 1] -> [B, dim] sinusoidal timestep embedding."""
+    half = dim // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = t[:, None] * 1000.0 * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def full_attention(x, wq, wk, wv, wo, n_heads):
+    """Bidirectional (encoder) attention, [B, T, D] -> [B, T, D]."""
+    b, t, d = x.shape
+    dh = wq.shape[1] // n_heads
+    q = jnp.einsum("btd,de->bte", x, wq).reshape(b, t, n_heads, dh).transpose(0, 2, 1, 3)
+    k = jnp.einsum("btd,de->bte", x, wk).reshape(b, t, n_heads, dh).transpose(0, 2, 1, 3)
+    v = jnp.einsum("btd,de->bte", x, wv).reshape(b, t, n_heads, dh).transpose(0, 2, 1, 3)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    att = jnp.einsum("bhtd,bhsd->bhts", q, k) * scale
+    att = jax.nn.softmax(att, axis=-1)
+    o = jnp.einsum("bhts,bhsd->bhtd", att, v).transpose(0, 2, 1, 3).reshape(b, t, -1)
+    return jnp.einsum("bte,ed->btd", o, wo)
+
+
+# ---------------------------------------------------------------------------
+# Parameter init.  Scaled-normal init with a fixed per-model seed so that
+# `make artifacts` is reproducible byte-for-byte.
+# ---------------------------------------------------------------------------
+
+def _normal(key, shape, scale):
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * scale).astype(jnp.float32)
+
+
+def ar_init(cfg: ArConfig, seed: int) -> dict:
+    key = jax.random.PRNGKey(seed)
+    d, dh, h = cfg.d_model, cfg.d_head, cfg.n_heads
+    params = {}
+    ks = jax.random.split(key, 8 + cfg.n_layers * 8)
+    it = iter(range(len(ks)))
+    s = 0.02
+    params["embed"] = _normal(ks[next(it)], (cfg.vocab, d), s)
+    params["pos"] = _normal(ks[next(it)], (cfg.max_seq, d), s)
+    if cfg.cond_dim:
+        params["cond_proj"] = _normal(ks[next(it)], (cfg.cond_dim, d), s)
+    for l in range(cfg.n_layers):
+        p = f"l{l:02d}."
+        params[p + "ln1"] = jnp.ones((d,), jnp.float32)
+        params[p + "wq"] = _normal(ks[next(it)], (d, h * dh), s)
+        params[p + "wk"] = _normal(ks[next(it)], (d, h * dh), s)
+        params[p + "wv"] = _normal(ks[next(it)], (d, h * dh), s)
+        params[p + "wo"] = _normal(ks[next(it)], (h * dh, d), s)
+        params[p + "ln2"] = jnp.ones((d,), jnp.float32)
+        params[p + "w1"] = _normal(ks[next(it)], (d, cfg.d_ff), s)
+        params[p + "w2"] = _normal(ks[next(it)], (cfg.d_ff, d), s)
+    params["lnf"] = jnp.ones((d,), jnp.float32)
+    params["lm_head"] = _normal(ks[next(it)], (d, cfg.vocab), s)
+    return params
+
+
+def dit_init(cfg: DitConfig, seed: int) -> dict:
+    key = jax.random.PRNGKey(seed)
+    d = cfg.d_model
+    params = {}
+    ks = jax.random.split(key, 10 + cfg.n_layers * 10)
+    it = iter(range(len(ks)))
+    s = 0.02
+    params["in_proj"] = _normal(ks[next(it)], (cfg.latent_dim, d), s)
+    params["pos"] = _normal(ks[next(it)], (cfg.n_tokens, d), s)
+    params["t_mlp1"] = _normal(ks[next(it)], (d, d), s)
+    params["t_mlp2"] = _normal(ks[next(it)], (d, d), s)
+    if cfg.cond_dim:
+        params["cond_proj"] = _normal(ks[next(it)], (cfg.cond_dim, d), s)
+    if cfg.cond_tokens_dim:
+        params["cond_tok_proj"] = _normal(ks[next(it)], (cfg.cond_tokens_dim, d), s)
+    for l in range(cfg.n_layers):
+        p = f"l{l:02d}."
+        params[p + "wq"] = _normal(ks[next(it)], (d, d), s)
+        params[p + "wk"] = _normal(ks[next(it)], (d, d), s)
+        params[p + "wv"] = _normal(ks[next(it)], (d, d), s)
+        params[p + "wo"] = _normal(ks[next(it)], (d, d), s)
+        params[p + "w1"] = _normal(ks[next(it)], (d, cfg.d_ff), s)
+        params[p + "w2"] = _normal(ks[next(it)], (cfg.d_ff, d), s)
+        params[p + "mod_w"] = _normal(ks[next(it)], (d, 6 * d), s)
+        params[p + "mod_b"] = jnp.zeros((6 * d,), jnp.float32)
+    params["out_ln"] = jnp.ones((d,), jnp.float32)
+    params["out_proj"] = _normal(ks[next(it)], (d, cfg.latent_dim), s)
+    return params
+
+
+def encoder_init(cfg: EncoderConfig, seed: int) -> dict:
+    key = jax.random.PRNGKey(seed)
+    di = cfg.d_inner
+    params = {}
+    ks = jax.random.split(key, 4 + cfg.n_layers * 8)
+    it = iter(range(len(ks)))
+    s = 0.02
+    params["in_proj"] = _normal(ks[next(it)], (cfg.feat_dim, di), s)
+    params["pos"] = _normal(ks[next(it)], (cfg.t_max, di), s)
+    for l in range(cfg.n_layers):
+        p = f"l{l:02d}."
+        params[p + "ln1"] = jnp.ones((di,), jnp.float32)
+        params[p + "wq"] = _normal(ks[next(it)], (di, di), s)
+        params[p + "wk"] = _normal(ks[next(it)], (di, di), s)
+        params[p + "wv"] = _normal(ks[next(it)], (di, di), s)
+        params[p + "wo"] = _normal(ks[next(it)], (di, di), s)
+        params[p + "ln2"] = jnp.ones((di,), jnp.float32)
+        params[p + "w1"] = _normal(ks[next(it)], (di, 4 * di), s)
+        params[p + "w2"] = _normal(ks[next(it)], (4 * di, di), s)
+    params["out_proj"] = _normal(ks[next(it)], (di, cfg.d_out), s)
+    return params
+
+
+def cnn_vocoder_init(cfg: CnnVocoderConfig, seed: int) -> dict:
+    key = jax.random.PRNGKey(seed)
+    ch = cfg.channels
+    params = {}
+    ks = jax.random.split(key, 6)
+    s = 0.05
+    params["embed"] = _normal(ks[0], (cfg.vocab, cfg.d_embed), s)
+    params["in_proj"] = _normal(ks[1], (cfg.d_embed, ch), s)
+    params["conv1"] = _normal(ks[2], (5, ch, ch), s)   # [k, in, out]
+    params["conv2"] = _normal(ks[3], (5, ch, ch), s)
+    params["out_proj"] = _normal(ks[4], (ch, 1), s)
+    return params
+
+
+def patch_codec_init(cfg: PatchCodecConfig, seed: int) -> dict:
+    key = jax.random.PRNGKey(seed)
+    params = {}
+    ks = jax.random.split(key, 6)
+    s = 0.02
+    params["enc_w1"] = _normal(ks[0], (cfg.patch_dim, cfg.d_model), s)
+    params["enc_w2"] = _normal(ks[1], (cfg.d_model, cfg.d_model), s)
+    params["dec_embed"] = _normal(ks[2], (cfg.vocab, cfg.d_model), s)
+    params["dec_w1"] = _normal(ks[3], (cfg.d_model, cfg.d_model), s)
+    params["dec_w2"] = _normal(ks[4], (cfg.d_model, cfg.samples_per_patch), s)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# KV-cache plumbing.  Cache layout: [L, 2, B, H, S, dh] (single tensor so
+# the Rust side marshals one buffer per call).
+# ---------------------------------------------------------------------------
+
+def kv_shape(cfg: ArConfig, batch: int):
+    return (cfg.n_layers, 2, batch, cfg.n_heads, cfg.max_seq, cfg.d_head)
+
+
+def kv_write_rows(kv_l, new_k, new_v, start):
+    """Write rows into one layer's cache at per-sequence offsets.
+
+    kv_l: [2, B, H, S, dh]; new_k/new_v: [B, H, C, dh]; start: [B] int32.
+    Returns updated [2, B, H, S, dh].
+    """
+    def upd(cache_b, rows_b, pos):
+        # cache_b: [H, S, dh], rows_b: [H, C, dh]
+        return jax.lax.dynamic_update_slice(cache_b, rows_b, (0, pos, 0))
+
+    k_upd = jax.vmap(upd)(kv_l[0], new_k, start)
+    v_upd = jax.vmap(upd)(kv_l[1], new_v, start)
+    return jnp.stack([k_upd, v_upd])

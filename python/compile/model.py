@@ -1,0 +1,292 @@
+"""L2 stage functions: the compute graphs AOT-lowered to HLO artifacts.
+
+Every public function here is a pure function ``fn(params, *tensors)`` that
+``aot.py`` lowers once per (model, batch-bucket) and dumps as HLO text.
+The Rust L3 coordinator replays these executables from its engines:
+
+  AR stages   : ``ar_prefill_chunk`` / ``ar_decode_step`` / ``ar_decode_scan``
+  DiT stages  : ``dit_step`` (vocoder + image/video, CFG folded in)
+  CNN vocoder : ``cnn_vocoder``
+  Encoders    : ``mm_encode`` (audio/image/video -> embeddings)
+  Patch codec : ``patch_encode`` / ``patch_decode`` (MiMo-Audio)
+
+Conventions shared with Rust (do not change without bumping manifest
+version): KV layout [L, 2, B, H, S, dh]; `length`/`base` are i32[B] counts
+of valid cache rows; new decode token is written at row `length` and
+attention covers `length + 1` rows; chunk rows are written at
+`base .. base+C` and row t attends to `[0, base+t]`.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ArConfig, CnnVocoderConfig, DitConfig, EncoderConfig, PatchCodecConfig
+from .kernels.attention import decode_attention, prefix_chunk_attention
+from .kernels.dit_block import adaln_block
+from .layers import (
+    full_attention,
+    gelu,
+    kv_write_rows,
+    layer_norm,
+    rms_norm,
+    sinusoidal_embed,
+)
+
+# ---------------------------------------------------------------------------
+# AR stage
+# ---------------------------------------------------------------------------
+
+
+def _ar_layer_decode(params, prefix, cfg: ArConfig, x, kv_l, length):
+    """One decoder layer for a single new token.
+
+    x: [B, D]; kv_l: [2, B, H, S, dh]; length: [B].
+    Returns (x', kv_l').
+    """
+    b, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    xn = rms_norm(x, params[prefix + "ln1"])
+    q = jnp.dot(xn, params[prefix + "wq"]).reshape(b, h, dh)
+    k = jnp.dot(xn, params[prefix + "wk"]).reshape(b, h, 1, dh)
+    v = jnp.dot(xn, params[prefix + "wv"]).reshape(b, h, 1, dh)
+    kv_l = kv_write_rows(kv_l, k, v, length)
+    att = decode_attention(q, kv_l[0], kv_l[1], length + 1)
+    x = x + jnp.dot(att.reshape(b, h * dh), params[prefix + "wo"])
+    xn = rms_norm(x, params[prefix + "ln2"])
+    x = x + jnp.dot(gelu(jnp.dot(xn, params[prefix + "w1"])), params[prefix + "w2"])
+    return x, kv_l
+
+
+def ar_decode_step(params, cfg: ArConfig, token, cond, kv, length):
+    """One decode iteration for a batch of sequences.
+
+    token: [B] i32; cond: [B, cond_dim] f32 (absent when cond_dim == 0);
+    kv: [L, 2, B, H, S, dh]; length: [B] i32 (valid rows BEFORE this token).
+
+    Returns (logits [B, V], hidden [B, D], new_kv).
+    """
+    b = token.shape[0]
+    pos = jnp.clip(length, 0, cfg.max_seq - 1)
+    x = params["embed"][token] + params["pos"][pos]
+    if cfg.cond_dim:
+        x = x + jnp.dot(cond, params["cond_proj"])
+    new_layers = []
+    for l in range(cfg.n_layers):
+        x, kv_l = _ar_layer_decode(params, f"l{l:02d}.", cfg, x, kv[l], length)
+        new_layers.append(kv_l)
+    new_kv = jnp.stack(new_layers)
+    hidden = rms_norm(x, params["lnf"])
+    logits = jnp.dot(hidden, params["lm_head"])
+    return logits, hidden, new_kv
+
+
+def ar_prefill_chunk(params, cfg: ArConfig, tokens, mm_embeds, mm_mask, kv, base):
+    """One chunked-prefill iteration.
+
+    tokens: [B, C] i32; mm_embeds: [B, C, E] f32 where E = cond_dim if the
+    model has a conditioning stream (Talker: Thinker hidden prefix) else
+    d_model (Thinker: multimodal encoder output); mm_mask: [B, C] f32 in
+    {0,1} selecting the embedding stream over the token stream;
+    kv: [L, 2, B, H, S, dh]; base: [B] i32 rows already in cache.
+
+    Returns (logits [B, C, V], hidden [B, C, D], new_kv).
+    """
+    b, c = tokens.shape
+    d = cfg.d_model
+    h, dh = cfg.n_heads, cfg.d_head
+    pos = jnp.clip(base[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :], 0, cfg.max_seq - 1)
+    tok_x = params["embed"][tokens]
+    if cfg.cond_dim:
+        mm_x = jnp.einsum("bce,ed->bcd", mm_embeds, params["cond_proj"])
+    else:
+        mm_x = mm_embeds
+    x = jnp.where(mm_mask[:, :, None] > 0.5, mm_x, tok_x) + params["pos"][pos]
+    new_layers = []
+    for l in range(cfg.n_layers):
+        p = f"l{l:02d}."
+        xn = rms_norm(x, params[p + "ln1"])
+        q = jnp.einsum("bcd,de->bce", xn, params[p + "wq"]).reshape(b, c, h, dh).transpose(0, 2, 1, 3)
+        k = jnp.einsum("bcd,de->bce", xn, params[p + "wk"]).reshape(b, c, h, dh).transpose(0, 2, 1, 3)
+        v = jnp.einsum("bcd,de->bce", xn, params[p + "wv"]).reshape(b, c, h, dh).transpose(0, 2, 1, 3)
+        kv_l = kv_write_rows(kv[l], k, v, base)
+        att = prefix_chunk_attention(q, kv_l[0], kv_l[1], base)  # [B,H,C,dh]
+        att = att.transpose(0, 2, 1, 3).reshape(b, c, h * dh)
+        x = x + jnp.einsum("bce,ed->bcd", att, params[p + "wo"])
+        xn = rms_norm(x, params[p + "ln2"])
+        x = x + jnp.einsum("bcf,fd->bcd", gelu(jnp.einsum("bcd,df->bcf", xn, params[p + "w1"])), params[p + "w2"])
+        new_layers.append(kv_l)
+    new_kv = jnp.stack(new_layers)
+    hidden = rms_norm(x, params["lnf"])
+    logits = jnp.einsum("bcd,dv->bcv", hidden, params["lm_head"])
+    return logits, hidden, new_kv
+
+
+def ar_decode_scan(params, cfg: ArConfig, token0, cond, kv, length, active0, eos_ids, n_steps: int):
+    """Fused multi-step greedy decode ("execution-graph compilation" mode).
+
+    Runs ``n_steps`` decode iterations inside one executable, sampling
+    greedily and freezing sequences that emit EOS.  This is the analog of
+    CUDA-graph / compiled-decode serving: per-step host round-trips
+    (KV marshaling, dispatch) amortize over n_steps.
+
+    token0: [B] i32 first input token; cond: [B, cond_dim] (fixed across
+    the scanned steps, matching the paper's "concatenate the SAME Thinker
+    hidden states at each decoding step"); active0: [B] f32 {0,1};
+    eos_ids: [B] i32 per-lane stop token (pass -1 to never stop, the
+    ignore_eos serving mode).
+
+    Returns (tokens [B, K] i32, hiddens [B, K, D], new_kv, new_length,
+    active [B] f32).
+    """
+    def body(carry, _):
+        token, kv_c, length_c, active = carry
+        logits, hidden, kv_n = ar_decode_step(params, cfg, token, cond, kv_c, length_c)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        is_active = active > 0.5
+        emitted = jnp.where(is_active, nxt, jnp.zeros_like(nxt))
+        new_active = jnp.where(is_active & (nxt != eos_ids), 1.0, 0.0).astype(jnp.float32)
+        # Frozen sequences must not advance their cache.
+        kv_keep = jnp.where(is_active[None, None, :, None, None, None], kv_n, kv_c)
+        len_next = jnp.where(is_active, length_c + 1, length_c)
+        # Guard cache overflow inside the scan.
+        len_next = jnp.minimum(len_next, cfg.max_seq - 1)
+        return (emitted, kv_keep, len_next, new_active), (emitted, hidden)
+
+    carry0 = (token0, kv, length, active0)
+    (tok_f, kv_f, len_f, act_f), (toks, hiddens) = jax.lax.scan(
+        body, carry0, None, length=n_steps
+    )
+    return (
+        toks.transpose(1, 0),            # [B, K]
+        hiddens.transpose(1, 0, 2),      # [B, K, D]
+        kv_f,
+        len_f,
+        act_f,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Multimodal encoder stage
+# ---------------------------------------------------------------------------
+
+
+def mm_encode(params, cfg: EncoderConfig, feats, t_mask):
+    """Multimodal encoder: features -> embeddings in the Thinker's width.
+
+    feats: [B, T, feat_dim]; t_mask: [B, T] f32 {0,1} valid-frame mask.
+    Returns [B, T, d_out].
+    """
+    x = jnp.einsum("btf,fd->btd", feats, params["in_proj"]) + params["pos"][None, :, :]
+    x = x * t_mask[:, :, None]
+    for l in range(cfg.n_layers):
+        p = f"l{l:02d}."
+        xn = rms_norm(x, params[p + "ln1"])
+        x = x + full_attention(xn, params[p + "wq"], params[p + "wk"],
+                               params[p + "wv"], params[p + "wo"], cfg.n_heads)
+        xn = rms_norm(x, params[p + "ln2"])
+        x = x + jnp.einsum("btf,fd->btd", gelu(jnp.einsum("btd,df->btf", xn, params[p + "w1"])), params[p + "w2"])
+    out = jnp.einsum("btd,de->bte", x, params["out_proj"])
+    return out * t_mask[:, :, None]
+
+
+# ---------------------------------------------------------------------------
+# DiT stage (vocoder + image/video), CFG folded into the executable
+# ---------------------------------------------------------------------------
+
+
+def _dit_trunk(params, cfg: DitConfig, x, t_emb):
+    for l in range(cfg.n_layers):
+        p = f"l{l:02d}."
+        x = adaln_block(
+            x, t_emb,
+            params[p + "wq"], params[p + "wk"], params[p + "wv"], params[p + "wo"],
+            params[p + "w1"], params[p + "w2"], params[p + "mod_w"], params[p + "mod_b"],
+            n_heads=cfg.n_heads,
+        )
+    x = layer_norm(x) * params["out_ln"]
+    return jnp.einsum("bnd,dl->bnl", x, params["out_proj"])
+
+
+def dit_step(params, cfg: DitConfig, latent, cond, cond_tokens, t, cfg_scale):
+    """One denoising step (epsilon prediction) with classifier-free guidance.
+
+    latent: [B, N, latent_dim]; cond: [B, cond_dim] (zeros if cond_dim==0);
+    cond_tokens: [B, N, cond_tokens_dim] per-token conditioning (vocoder
+    codec embeds; zeros if unused); t: [B] f32 noise level in [0,1];
+    cfg_scale: [B] f32 guidance strength (1.0 = no guidance branch mixing).
+
+    Returns (eps [B, N, latent_dim], t_mod [B, D]) where t_mod is the
+    modulation embedding exposed for the TeaCache-style step cache at L3.
+    """
+    x = jnp.einsum("bnl,ld->bnd", latent, params["in_proj"]) + params["pos"][None, :, :]
+    if cfg.cond_tokens_dim:
+        x = x + jnp.einsum("bnc,cd->bnd", cond_tokens, params["cond_tok_proj"])
+    t_base = sinusoidal_embed(t, cfg.d_model)
+    t_base = jnp.dot(gelu(jnp.dot(t_base, params["t_mlp1"])), params["t_mlp2"])
+    if cfg.cond_dim:
+        t_cond = t_base + jnp.dot(cond, params["cond_proj"])
+        eps_c = _dit_trunk(params, cfg, x, t_cond)
+        eps_u = _dit_trunk(params, cfg, x, t_base)
+        eps = eps_u + cfg_scale[:, None, None] * (eps_c - eps_u)
+        t_mod = t_cond
+    else:
+        eps = _dit_trunk(params, cfg, x, t_base)
+        t_mod = t_base
+    return eps, t_mod
+
+
+# ---------------------------------------------------------------------------
+# CNN vocoder stage (Qwen3-Omni style lightweight waveform head)
+# ---------------------------------------------------------------------------
+
+
+def cnn_vocoder(params, cfg: CnnVocoderConfig, tokens):
+    """Codec tokens -> waveform chunk.
+
+    tokens: [B, T] i32 codec ids.  Returns wave [B, T * upsample] f32.
+    """
+    up1 = 4
+    up2 = cfg.upsample // up1
+    x = params["embed"][tokens]                       # [B, T, de]
+    x = jnp.einsum("btd,dc->btc", x, params["in_proj"])
+    x = jnp.repeat(x, up1, axis=1)                    # [B, 4T, C]
+    x = _conv1d(x, params["conv1"])
+    x = gelu(x)
+    x = jnp.repeat(x, up2, axis=1)                    # [B, 16T, C]
+    x = _conv1d(x, params["conv2"])
+    x = jnp.tanh(x)
+    wave = jnp.einsum("btc,co->bto", x, params["out_proj"])[:, :, 0]
+    return wave
+
+
+def _conv1d(x, w):
+    """x: [B, T, Cin], w: [K, Cin, Cout] -> same-padded conv."""
+    return jax.lax.conv_general_dilated(
+        x, w,
+        window_strides=(1,),
+        padding="SAME",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+    )
+
+
+# ---------------------------------------------------------------------------
+# MiMo-Audio patch codec stages
+# ---------------------------------------------------------------------------
+
+
+def patch_encode(params, cfg: PatchCodecConfig, feats):
+    """Audio patches -> backbone embeddings.  feats: [B, T, patch_dim]."""
+    x = gelu(jnp.einsum("btp,pd->btd", feats, params["enc_w1"]))
+    return jnp.einsum("btd,de->bte", x, params["enc_w2"])
+
+
+def patch_decode(params, cfg: PatchCodecConfig, tokens):
+    """Audio tokens -> waveform patches.  tokens: [B, T] i32.
+
+    Returns [B, T, samples_per_patch].
+    """
+    x = params["dec_embed"][tokens]
+    x = gelu(jnp.einsum("btd,de->bte", x, params["dec_w1"]))
+    return jnp.tanh(jnp.einsum("btd,ds->bts", x, params["dec_w2"]))

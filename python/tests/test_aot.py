@@ -1,0 +1,80 @@
+"""AOT pipeline sanity: manifest structure, weight-blob layout, and HLO
+text loadability for a tiny model set (fast — avoids relowering the zoo).
+"""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import configs as C
+from compile import layers as L
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_weight_blob_matches_leaves(tmp_path):
+    b = aot.Builder(str(tmp_path), verbose=False)
+    cfg = C.ArConfig("t", vocab=32, d_model=16, n_layers=1, n_heads=2,
+                     d_head=8, d_ff=32, max_seq=32)
+    params = L.ar_init(cfg, 0)
+    names = b.add_model("t", "ar", cfg, params)
+    assert names == sorted(params)
+    rec = b.manifest["models"]["t"]
+    blob = np.fromfile(tmp_path / rec["weights"]["file"], dtype=np.float32)
+    total = sum(l["size"] for l in rec["weights"]["leaves"])
+    assert blob.size == total
+    # Offsets are contiguous and in leaf order.
+    off = 0
+    for leaf in rec["weights"]["leaves"]:
+        assert leaf["offset"] == off
+        expect = np.asarray(params[leaf["name"]], np.float32).ravel()
+        got = blob[off:off + leaf["size"]]
+        np.testing.assert_array_equal(got, expect)
+        off += leaf["size"]
+
+
+def test_entry_io_specs(tmp_path):
+    cfg = C.ArConfig("t", vocab=32, d_model=16, n_layers=1, n_heads=2,
+                     d_head=8, d_ff=32, max_seq=32)
+    b = aot.Builder(str(tmp_path), verbose=False)
+    aot.build_ar(b, cfg, 0, scan=False)
+    b.finish()
+    m = json.load(open(tmp_path / "manifest.json"))
+    ent = m["models"]["t"]["entries"]["decode.b1"]
+    names = [i["name"] for i in ent["inputs"]]
+    assert names == ["token", "kv", "length"]
+    assert ent["inputs"][1]["shape"] == [1, 2, 1, 2, 32, 8]
+    outs = [o["name"] for o in ent["outputs"]]
+    assert outs == ["logits", "hidden", "kv"]
+    assert ent["outputs"][0]["shape"] == [1, 32]
+    assert (tmp_path / ent["file"]).exists()
+    text = open(tmp_path / ent["file"]).read()
+    assert text.lstrip().startswith("HloModule")
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="run `make artifacts` first")
+def test_shipped_manifest_is_complete():
+    m = json.load(open(os.path.join(ART, "manifest.json")))
+    assert m["version"] == aot.MANIFEST_VERSION
+    # Every pipeline model the Rust presets reference must be present.
+    for name in ["thinker25", "thinker3", "talker25", "talker3", "mimo",
+                 "bagel_und", "voc_dit25", "voc_cnn3", "bagel_t2i",
+                 "bagel_i2i", "qwen_image", "qwen_image_edit", "wan22_t2v",
+                 "wan22_i2v", "enc25", "enc3", "mimo_codec"]:
+        assert name in m["models"], name
+    for name, rec in m["models"].items():
+        assert os.path.exists(os.path.join(ART, rec["weights"]["file"])), name
+        for ename, ent in rec["entries"].items():
+            assert os.path.exists(os.path.join(ART, ent["file"])), (name, ename)
+            for io in ent["inputs"] + ent["outputs"]:
+                assert io["dtype"] in ("f32", "i32")
+                assert all(d > 0 for d in io["shape"])
+    # AR models expose the decode buckets the scheduler relies on.
+    for ar in ["thinker25", "thinker3", "talker25", "talker3"]:
+        for bb in C.AR_DECODE_BUCKETS:
+            assert f"decode.b{bb}" in m["models"][ar]["entries"]

@@ -1,0 +1,200 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and dtypes; every property asserts allclose
+against ``compile.kernels.ref``.  This is the core correctness signal for
+the compute hot path that the Rust runtime replays.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as A
+from compile.kernels import dit_block as D
+from compile.kernels import ref as R
+
+settings.register_profile("ci", deadline=None, max_examples=20)
+settings.load_profile("ci")
+
+
+def _rand(rng, shape, dtype):
+    x = rng.normal(size=shape).astype(np.float32)
+    return jnp.asarray(x, dtype)
+
+
+def _tol(dtype):
+    return dict(rtol=3e-5, atol=3e-5) if dtype == jnp.float32 else dict(rtol=3e-2, atol=3e-2)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+@given(
+    b=st.integers(1, 5),
+    h=st.sampled_from([1, 2, 4]),
+    s=st.sampled_from([64, 128, 256]),
+    dh=st.sampled_from([16, 32, 64]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_decode_attention_matches_ref(b, h, s, dh, dtype, seed):
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, (b, h, dh), dtype)
+    k = _rand(rng, (b, h, s, dh), dtype)
+    v = _rand(rng, (b, h, s, dh), dtype)
+    lengths = jnp.asarray(rng.integers(0, s + 1, size=(b,)), jnp.int32)
+    out = A.decode_attention(q, k, v, lengths)
+    ref = R.decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_decode_attention_zero_length_is_zero():
+    rng = np.random.default_rng(0)
+    q = _rand(rng, (2, 2, 16), jnp.float32)
+    k = _rand(rng, (2, 2, 64, 16), jnp.float32)
+    v = _rand(rng, (2, 2, 64, 16), jnp.float32)
+    out = A.decode_attention(q, k, v, jnp.zeros((2,), jnp.int32))
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+def test_decode_attention_full_length_equals_softmax():
+    """length == S must equal plain softmax attention."""
+    rng = np.random.default_rng(1)
+    b, h, s, dh = 2, 2, 128, 32
+    q = _rand(rng, (b, h, dh), jnp.float32)
+    k = _rand(rng, (b, h, s, dh), jnp.float32)
+    v = _rand(rng, (b, h, s, dh), jnp.float32)
+    out = A.decode_attention(q, k, v, jnp.full((b,), s, jnp.int32))
+    scores = jnp.einsum("bhd,bhsd->bhs", q, k) / np.sqrt(dh)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ref = jnp.einsum("bhs,bhsd->bhd", probs, v)
+    np.testing.assert_allclose(out, ref, rtol=3e-5, atol=3e-5)
+
+
+def test_decode_attention_is_batch_independent():
+    """Masked/padded slots must not affect other slots."""
+    rng = np.random.default_rng(2)
+    b, h, s, dh = 4, 2, 64, 16
+    q = _rand(rng, (b, h, dh), jnp.float32)
+    k = _rand(rng, (b, h, s, dh), jnp.float32)
+    v = _rand(rng, (b, h, s, dh), jnp.float32)
+    lengths = jnp.asarray([5, 10, 20, 40], jnp.int32)
+    full = A.decode_attention(q, k, v, lengths)
+    solo = A.decode_attention(q[1:2], k[1:2], v[1:2], lengths[1:2])
+    np.testing.assert_allclose(full[1:2], solo, rtol=1e-6, atol=1e-6)
+
+
+@given(kv_block=st.sampled_from([32, 64, 128]))
+def test_decode_attention_block_size_invariance(kv_block):
+    rng = np.random.default_rng(3)
+    b, h, s, dh = 2, 2, 256, 32
+    q = _rand(rng, (b, h, dh), jnp.float32)
+    k = _rand(rng, (b, h, s, dh), jnp.float32)
+    v = _rand(rng, (b, h, s, dh), jnp.float32)
+    lengths = jnp.asarray([100, 256], jnp.int32)
+    a = A.decode_attention(q, k, v, lengths, kv_block=kv_block)
+    ref = R.decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(a, ref, rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill attention
+# ---------------------------------------------------------------------------
+
+@given(
+    b=st.integers(1, 4),
+    h=st.sampled_from([1, 2, 4]),
+    c=st.sampled_from([8, 16, 32]),
+    s=st.sampled_from([128, 256]),
+    dh=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_chunk_attention_matches_ref(b, h, c, s, dh, seed):
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, (b, h, c, dh), jnp.float32)
+    k = _rand(rng, (b, h, s, dh), jnp.float32)
+    v = _rand(rng, (b, h, s, dh), jnp.float32)
+    base = jnp.asarray(rng.integers(0, s - c + 1, size=(b,)), jnp.int32)
+    out = A.prefix_chunk_attention(q, k, v, base)
+    ref = R.prefix_chunk_attention_ref(q, k, v, base)
+    np.testing.assert_allclose(out, ref, rtol=3e-5, atol=3e-5)
+
+
+def test_chunk_attention_first_row_sees_only_base_plus_one():
+    """Row 0 with base=0 attends only to cache row 0 => output == v[0]."""
+    rng = np.random.default_rng(4)
+    b, h, c, s, dh = 1, 1, 4, 64, 8
+    q = _rand(rng, (b, h, c, dh), jnp.float32)
+    k = _rand(rng, (b, h, s, dh), jnp.float32)
+    v = _rand(rng, (b, h, s, dh), jnp.float32)
+    out = A.prefix_chunk_attention(q, k, v, jnp.zeros((b,), jnp.int32))
+    np.testing.assert_allclose(out[0, 0, 0], v[0, 0, 0], rtol=1e-5, atol=1e-5)
+
+
+def test_chunk_attention_is_causal():
+    """Perturbing cache rows BEYOND base+t must not change row t."""
+    rng = np.random.default_rng(5)
+    b, h, c, s, dh = 1, 2, 8, 64, 16
+    q = _rand(rng, (b, h, c, dh), jnp.float32)
+    k = np.asarray(_rand(rng, (b, h, s, dh), jnp.float32))
+    v = np.asarray(_rand(rng, (b, h, s, dh), jnp.float32))
+    base = jnp.asarray([10], jnp.int32)
+    out1 = A.prefix_chunk_attention(q, jnp.asarray(k), jnp.asarray(v), base)
+    k2, v2 = k.copy(), v.copy()
+    k2[:, :, 30:, :] = 99.0  # rows 30.. are beyond base+c-1 = 17
+    v2[:, :, 30:, :] = -99.0
+    out2 = A.prefix_chunk_attention(q, jnp.asarray(k2), jnp.asarray(v2), base)
+    np.testing.assert_allclose(out1, out2, rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# fused AdaLN DiT block
+# ---------------------------------------------------------------------------
+
+@given(
+    b=st.integers(1, 3),
+    n=st.sampled_from([16, 64, 128]),
+    d=st.sampled_from([64, 128, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_adaln_block_matches_ref(b, n, d, seed):
+    rng = np.random.default_rng(seed)
+    f = 4 * d
+    w = lambda *s: _rand(rng, s, jnp.float32) * 0.05
+    x, t = w(b, n, d), w(b, d)
+    wq, wk, wv, wo = w(d, d), w(d, d), w(d, d), w(d, d)
+    w1, w2 = w(d, f), w(f, d)
+    mw, mb = w(d, 6 * d), w(6 * d)
+    out = D.adaln_block(x, t, wq, wk, wv, wo, w1, w2, mw, mb)
+    ref = R.adaln_block_ref(x, t, wq, wk, wv, wo, w1, w2, mw, mb)
+    np.testing.assert_allclose(out, ref, rtol=5e-5, atol=5e-5)
+
+
+def test_adaln_block_zero_gates_is_identity():
+    """mod_w = mod_b = 0 => gates are 0 => block is the identity."""
+    rng = np.random.default_rng(6)
+    b, n, d = 2, 32, 64
+    f = 4 * d
+    w = lambda *s: _rand(rng, s, jnp.float32)
+    x = w(b, n, d)
+    out = D.adaln_block(
+        x, w(b, d), w(d, d), w(d, d), w(d, d), w(d, d), w(d, f), w(f, d),
+        jnp.zeros((d, 6 * d), jnp.float32), jnp.zeros((6 * d,), jnp.float32),
+    )
+    np.testing.assert_allclose(out, x, rtol=1e-6, atol=1e-6)
+
+
+def test_adaln_block_batch_independence():
+    rng = np.random.default_rng(7)
+    b, n, d = 3, 16, 64
+    f = 4 * d
+    w = lambda *s: _rand(rng, s, jnp.float32) * 0.05
+    x, t = w(b, n, d), w(b, d)
+    ws = [w(d, d), w(d, d), w(d, d), w(d, d), w(d, f), w(f, d), w(d, 6 * d), w(6 * d)]
+    full = D.adaln_block(x, t, *ws)
+    solo = D.adaln_block(x[2:3], t[2:3], *ws)
+    np.testing.assert_allclose(full[2:3], solo, rtol=2e-5, atol=2e-5)

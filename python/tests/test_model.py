@@ -1,0 +1,286 @@
+"""L2 stage-function correctness: shapes, KV-cache semantics, and
+equivalence between the incremental (prefill+decode) path and a
+one-shot full-attention reference.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs as C
+from compile import layers as L
+from compile import model as M
+
+TINY = C.ArConfig("tiny", vocab=64, d_model=32, n_layers=2, n_heads=2,
+                  d_head=16, d_ff=64, max_seq=64)
+TINY_COND = C.ArConfig("tiny_cond", vocab=64, d_model=32, n_layers=2,
+                       n_heads=2, d_head=16, d_ff=64, max_seq=64, cond_dim=24)
+
+
+@pytest.fixture(scope="module")
+def tiny_params():
+    return L.ar_init(TINY, 0)
+
+
+@pytest.fixture(scope="module")
+def tiny_cond_params():
+    return L.ar_init(TINY_COND, 1)
+
+
+def _full_forward_ref(params, cfg, tokens):
+    """One-shot causal forward over a full sequence (no cache): the oracle
+    the incremental path must match.  tokens: [B, T]."""
+    b, t = tokens.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    x = params["embed"][tokens] + params["pos"][jnp.arange(t)][None]
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    for l in range(cfg.n_layers):
+        p = f"l{l:02d}."
+        xn = L.rms_norm(x, params[p + "ln1"])
+        q = jnp.einsum("btd,de->bte", xn, params[p + "wq"]).reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+        k = jnp.einsum("btd,de->bte", xn, params[p + "wk"]).reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+        v = jnp.einsum("btd,de->bte", xn, params[p + "wv"]).reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+        att = jnp.einsum("bhtd,bhsd->bhts", q, k) / np.sqrt(dh)
+        att = jnp.where(mask[None, None], att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhts,bhsd->bhtd", att, v).transpose(0, 2, 1, 3).reshape(b, t, -1)
+        x = x + jnp.einsum("bte,ed->btd", o, params[p + "wo"])
+        xn = L.rms_norm(x, params[p + "ln2"])
+        x = x + jnp.einsum("btf,fd->btd", L.gelu(jnp.einsum("btd,df->btf", xn, params[p + "w1"])), params[p + "w2"])
+    hidden = L.rms_norm(x, params["lnf"])
+    return jnp.einsum("btd,dv->btv", hidden, params["lm_head"])
+
+
+def test_decode_steps_match_full_forward(tiny_params):
+    """Feeding tokens one-by-one through ar_decode_step must reproduce the
+    one-shot causal forward logits at every position."""
+    rng = np.random.default_rng(0)
+    b, t = 2, 12
+    tokens = jnp.asarray(rng.integers(0, TINY.vocab, (b, t)), jnp.int32)
+    ref_logits = _full_forward_ref(tiny_params, TINY, tokens)
+
+    kv = jnp.zeros(L.kv_shape(TINY, b), jnp.float32)
+    length = jnp.zeros((b,), jnp.int32)
+    for i in range(t):
+        logits, hidden, kv = M.ar_decode_step(tiny_params, TINY, tokens[:, i], None, kv, length)
+        length = length + 1
+        np.testing.assert_allclose(logits, ref_logits[:, i], rtol=2e-4, atol=2e-4)
+
+
+def test_prefill_chunks_match_full_forward(tiny_params):
+    """Chunked prefill over C-sized chunks must reproduce the one-shot
+    causal forward logits."""
+    rng = np.random.default_rng(1)
+    b, t, c = 2, 24, 8
+    tokens = jnp.asarray(rng.integers(0, TINY.vocab, (b, t)), jnp.int32)
+    ref_logits = _full_forward_ref(tiny_params, TINY, tokens)
+
+    kv = jnp.zeros(L.kv_shape(TINY, b), jnp.float32)
+    base = jnp.zeros((b,), jnp.int32)
+    mm = jnp.zeros((b, c, TINY.d_model), jnp.float32)
+    mask = jnp.zeros((b, c), jnp.float32)
+    for i in range(0, t, c):
+        logits, hidden, kv = M.ar_prefill_chunk(
+            tiny_params, TINY, tokens[:, i:i + c], mm, mask, kv, base)
+        base = base + c
+        np.testing.assert_allclose(logits, ref_logits[:, i:i + c], rtol=2e-4, atol=2e-4)
+
+
+def test_prefill_then_decode_consistent(tiny_params):
+    """Prefill a prompt, then decode: logits must match the full forward."""
+    rng = np.random.default_rng(2)
+    b, t, c = 1, 8, 8
+    tokens = jnp.asarray(rng.integers(0, TINY.vocab, (b, t + 1)), jnp.int32)
+    ref_logits = _full_forward_ref(tiny_params, TINY, tokens)
+
+    kv = jnp.zeros(L.kv_shape(TINY, b), jnp.float32)
+    mm = jnp.zeros((b, c, TINY.d_model), jnp.float32)
+    mask = jnp.zeros((b, c), jnp.float32)
+    logits, _, kv = M.ar_prefill_chunk(tiny_params, TINY, tokens[:, :c], mm, mask, kv,
+                                       jnp.zeros((b,), jnp.int32))
+    np.testing.assert_allclose(logits[:, -1], ref_logits[:, c - 1], rtol=2e-4, atol=2e-4)
+    logits2, _, kv = M.ar_decode_step(tiny_params, TINY, tokens[:, c], None, kv,
+                                      jnp.full((b,), c, jnp.int32))
+    np.testing.assert_allclose(logits2, ref_logits[:, c], rtol=2e-4, atol=2e-4)
+
+
+def test_mm_embeds_replace_tokens(tiny_params):
+    """Rows with mm_mask=1 must use the embedding stream: supplying the
+    model's own token embedding as mm_embeds must equal the token path."""
+    rng = np.random.default_rng(3)
+    b, c = 2, 8
+    tokens = jnp.asarray(rng.integers(0, TINY.vocab, (b, c)), jnp.int32)
+    kv0 = jnp.zeros(L.kv_shape(TINY, b), jnp.float32)
+    base = jnp.zeros((b,), jnp.int32)
+
+    mm_zero = jnp.zeros((b, c, TINY.d_model), jnp.float32)
+    l_tok, _, _ = M.ar_prefill_chunk(tiny_params, TINY, tokens, mm_zero,
+                                     jnp.zeros((b, c)), kv0, base)
+    mm_emb = tiny_params["embed"][tokens]
+    junk = jnp.asarray(rng.integers(0, TINY.vocab, (b, c)), jnp.int32)
+    l_mm, _, _ = M.ar_prefill_chunk(tiny_params, TINY, junk, mm_emb,
+                                    jnp.ones((b, c)), kv0, base)
+    np.testing.assert_allclose(l_tok, l_mm, rtol=2e-5, atol=2e-5)
+
+
+def test_cond_stream_changes_output(tiny_cond_params):
+    rng = np.random.default_rng(4)
+    b = 2
+    kv = jnp.zeros(L.kv_shape(TINY_COND, b), jnp.float32)
+    token = jnp.asarray([1, 2], jnp.int32)
+    length = jnp.zeros((b,), jnp.int32)
+    cond0 = jnp.zeros((b, TINY_COND.cond_dim), jnp.float32)
+    cond1 = jnp.asarray(rng.normal(size=(b, TINY_COND.cond_dim)), jnp.float32)
+    l0, _, _ = M.ar_decode_step(tiny_cond_params, TINY_COND, token, cond0, kv, length)
+    l1, _, _ = M.ar_decode_step(tiny_cond_params, TINY_COND, token, cond1, kv, length)
+    assert not np.allclose(l0, l1)
+
+
+def test_decode_scan_matches_stepwise(tiny_params):
+    """ar_decode_scan greedy rollout == repeated ar_decode_step + argmax."""
+    rng = np.random.default_rng(5)
+    b, k = 2, 6
+    kv = jnp.zeros(L.kv_shape(TINY, b), jnp.float32)
+    length = jnp.zeros((b,), jnp.int32)
+    token0 = jnp.asarray([3, 4], jnp.int32)
+    active = jnp.ones((b,), jnp.float32)
+
+    toks, hid, kv_s, len_s, act_s = M.ar_decode_scan(
+        tiny_params, TINY, token0, None, kv, length, active,
+        jnp.full((b,), TINY.eos_id, jnp.int32), n_steps=k)
+
+    # step-by-step reference
+    cur, kv_r, len_r = token0, kv, length
+    out = []
+    alive = np.ones(b, bool)
+    for i in range(k):
+        logits, _, kv_n = M.ar_decode_step(tiny_params, TINY, cur, None, kv_r, len_r)
+        nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
+        emitted = np.where(alive, nxt, 0)
+        out.append(emitted)
+        kv_r = jnp.where(jnp.asarray(alive)[None, None, :, None, None, None], kv_n, kv_r)
+        len_r = jnp.where(jnp.asarray(alive), len_r + 1, len_r)
+        alive = alive & (nxt != TINY.eos_id)
+        cur = jnp.asarray(emitted, jnp.int32)
+    np.testing.assert_array_equal(np.asarray(toks), np.stack(out, axis=1))
+    np.testing.assert_array_equal(np.asarray(len_s), np.asarray(len_r))
+
+
+def test_decode_scan_freezes_after_eos(tiny_params):
+    """Once a lane emits EOS its length must stop advancing."""
+    b, k = 1, 8
+    kv = jnp.zeros(L.kv_shape(TINY, b), jnp.float32)
+    toks, _, _, len_f, act_f = M.ar_decode_scan(
+        tiny_params, TINY, jnp.asarray([0], jnp.int32), None, kv,
+        jnp.zeros((b,), jnp.int32), jnp.ones((b,), jnp.float32),
+        jnp.full((b,), TINY.eos_id, jnp.int32), n_steps=k)
+    toks = np.asarray(toks)[0]
+    if (toks == TINY.eos_id).any():
+        stop = int(np.argmax(toks == TINY.eos_id))
+        assert (toks[stop + 1:] == 0).all()
+        assert int(len_f[0]) == stop + 1
+
+
+def test_inactive_lane_is_inert(tiny_params):
+    """active=0 lanes emit 0 tokens and leave kv/length untouched."""
+    b, k = 2, 4
+    kv = jnp.zeros(L.kv_shape(TINY, b), jnp.float32)
+    length = jnp.asarray([0, 5], jnp.int32)
+    active = jnp.asarray([1.0, 0.0], jnp.float32)
+    toks, _, kv_f, len_f, _ = M.ar_decode_scan(
+        tiny_params, TINY, jnp.asarray([1, 1], jnp.int32), None, kv, length,
+        active, jnp.full((b,), TINY.eos_id, jnp.int32), n_steps=k)
+    assert (np.asarray(toks)[1] == 0).all()
+    assert int(len_f[1]) == 5
+    np.testing.assert_array_equal(np.asarray(kv_f[:, :, 1]), np.asarray(kv[:, :, 1]))
+
+
+# ---------------------------------------------------------------------------
+# DiT / vocoder / codec shapes & behaviours
+# ---------------------------------------------------------------------------
+
+VOC = C.DitConfig("voc_t", n_tokens=16, latent_dim=8, d_model=64, n_layers=2,
+                  n_heads=2, d_ff=128, cond_dim=0, cond_tokens_dim=12)
+IMG = C.DitConfig("img_t", n_tokens=16, latent_dim=8, d_model=64, n_layers=2,
+                  n_heads=2, d_ff=128, cond_dim=24)
+
+
+def test_dit_step_shapes_and_tmod():
+    params = L.dit_init(IMG, 7)
+    b = 2
+    rng = np.random.default_rng(8)
+    latent = jnp.asarray(rng.normal(size=(b, IMG.n_tokens, IMG.latent_dim)), jnp.float32)
+    cond = jnp.asarray(rng.normal(size=(b, IMG.cond_dim)), jnp.float32)
+    ct = jnp.zeros((b, IMG.n_tokens, 1), jnp.float32)
+    t = jnp.asarray([0.5, 0.9], jnp.float32)
+    g = jnp.ones((b,), jnp.float32)
+    eps, t_mod = M.dit_step(params, IMG, latent, cond, ct, t, g)
+    assert eps.shape == (b, IMG.n_tokens, IMG.latent_dim)
+    assert t_mod.shape == (b, IMG.d_model)
+
+
+def test_dit_cfg_scale_one_equals_cond_branch():
+    """cfg_scale == 1 must equal the pure conditional branch."""
+    params = L.dit_init(IMG, 9)
+    rng = np.random.default_rng(9)
+    b = 1
+    latent = jnp.asarray(rng.normal(size=(b, IMG.n_tokens, IMG.latent_dim)), jnp.float32)
+    cond = jnp.asarray(rng.normal(size=(b, IMG.cond_dim)), jnp.float32)
+    ct = jnp.zeros((b, IMG.n_tokens, 1), jnp.float32)
+    t = jnp.asarray([0.3], jnp.float32)
+    eps1, t_mod = M.dit_step(params, IMG, latent, cond, ct, t, jnp.ones((b,)))
+    # conditional branch computed directly
+    x = jnp.einsum("bnl,ld->bnd", latent, params["in_proj"]) + params["pos"][None]
+    tb = L.sinusoidal_embed(t, IMG.d_model)
+    tb = jnp.dot(L.gelu(jnp.dot(tb, params["t_mlp1"])), params["t_mlp2"])
+    tc = tb + jnp.dot(cond, params["cond_proj"])
+    eps_c = M._dit_trunk(params, IMG, x, tc)
+    np.testing.assert_allclose(eps1, eps_c, rtol=2e-4, atol=2e-4)
+
+
+def test_dit_timestep_sensitivity():
+    """t_mod must move between timesteps (TeaCache signal is non-trivial)."""
+    params = L.dit_init(VOC, 10)
+    b = 1
+    latent = jnp.zeros((b, VOC.n_tokens, VOC.latent_dim), jnp.float32)
+    cond = jnp.zeros((b, 1), jnp.float32)
+    ct = jnp.zeros((b, VOC.n_tokens, VOC.cond_tokens_dim), jnp.float32)
+    _, m1 = M.dit_step(params, VOC, latent, cond, ct, jnp.asarray([0.9]), jnp.ones((b,)))
+    _, m2 = M.dit_step(params, VOC, latent, cond, ct, jnp.asarray([0.1]), jnp.ones((b,)))
+    assert float(jnp.abs(m1 - m2).max()) > 1e-3
+
+
+def test_cnn_vocoder_shape_and_range():
+    cfg = C.CnnVocoderConfig("t", vocab=32, t_frames=8, d_embed=16,
+                             channels=16, upsample=16)
+    params = L.cnn_vocoder_init(cfg, 11)
+    tokens = jnp.asarray(np.random.default_rng(0).integers(0, 32, (2, 8)), jnp.int32)
+    wave = M.cnn_vocoder(params, cfg, tokens)
+    assert wave.shape == (2, 8 * 16)
+    assert float(jnp.abs(wave).max()) <= 1.0 + 1e-6
+
+
+def test_patch_codec_roundtrip_shapes():
+    cfg = C.PatchCodecConfig("t", patch_dim=16, t_max=8, d_model=32,
+                             vocab=64, samples_per_patch=20)
+    params = L.patch_codec_init(cfg, 12)
+    feats = jnp.zeros((2, 8, 16), jnp.float32)
+    emb = M.patch_encode(params, cfg, feats)
+    assert emb.shape == (2, 8, 32)
+    toks = jnp.zeros((2, 8), jnp.int32)
+    patches = M.patch_decode(params, cfg, toks)
+    assert patches.shape == (2, 8, 20)
+    assert float(jnp.abs(patches).max()) <= 1.0 + 1e-6
+
+
+def test_mm_encode_respects_mask():
+    cfg = C.EncoderConfig("t", feat_dim=8, t_max=16, d_inner=32, n_layers=1,
+                          n_heads=2, d_out=24)
+    params = L.encoder_init(cfg, 13)
+    rng = np.random.default_rng(14)
+    feats = jnp.asarray(rng.normal(size=(1, 16, 8)), jnp.float32)
+    mask = jnp.asarray([[1.0] * 4 + [0.0] * 12])
+    out = M.mm_encode(params, cfg, feats, mask)
+    assert out.shape == (1, 16, 24)
+    np.testing.assert_array_equal(np.asarray(out[0, 4:]), 0.0)

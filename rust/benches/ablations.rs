@@ -1,0 +1,155 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!   1. streaming stage output on/off          (TTFT, §3.3)
+//!   2. chunked prefill on/off                 (JCT under mixed load)
+//!   3. per-stage batch cap sweep              (throughput scaling)
+//!   4. step-cache threshold sweep             (DiT quality/speed knob)
+//!   5. multi-step fused decode sweep          (dispatch amortization)
+//!
+//! Run a subset: `cargo bench --bench ablations -- streaming batching`
+
+use std::sync::Arc;
+
+use omni_serve::bench_util::{self, Table};
+use omni_serve::config::presets;
+use omni_serve::orchestrator::{Orchestrator, RunOptions};
+use omni_serve::stage_graph::transfers::Registry;
+use omni_serve::trace::datasets;
+
+fn want(which: &[String], name: &str) -> bool {
+    which.is_empty() || which.iter().any(|w| w == name)
+}
+
+fn main() -> anyhow::Result<()> {
+    let which: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
+    let artifacts = bench_util::load_artifacts();
+    let n = bench_util::bench_n(6);
+
+    if want(&which, "streaming") {
+        let wl = datasets::ucf101(3, n, 0.0);
+        let mut t = Table::new(
+            "Ablation: streaming stage output (qwen3-omni, ucf101-sim)",
+            &["streaming", "TTFT(s)", "JCT(s)"],
+        );
+        for streaming in [true, false] {
+            let orch = Orchestrator::new(
+                presets::qwen3_omni(),
+                Arc::clone(&artifacts),
+                Registry::builtin(),
+                RunOptions { streaming, ..Default::default() },
+            )?;
+            let r = orch.run_workload(&wl, Some("talker"))?.report;
+            t.row(vec![
+                streaming.to_string(),
+                format!("{:.2}", r.mean_ttft()),
+                format!("{:.2}", r.mean_jct()),
+            ]);
+        }
+        t.print();
+    }
+
+    if want(&which, "chunked_prefill") {
+        let wl = datasets::ucf101(4, n, 0.0); // video = long prompts
+        let mut t = Table::new(
+            "Ablation: chunked prefill (qwen3-omni, long multimodal prompts)",
+            &["chunked", "TTFT(s)", "JCT(s)"],
+        );
+        for chunked in [true, false] {
+            let mut cfg = presets::qwen3_omni();
+            for s in &mut cfg.stages {
+                s.chunked_prefill = chunked;
+            }
+            let orch = Orchestrator::new(
+                cfg,
+                Arc::clone(&artifacts),
+                Registry::builtin(),
+                RunOptions::default(),
+            )?;
+            let r = orch.run_workload(&wl, Some("talker"))?.report;
+            t.row(vec![
+                chunked.to_string(),
+                format!("{:.2}", r.mean_ttft()),
+                format!("{:.2}", r.mean_jct()),
+            ]);
+        }
+        t.print();
+    }
+
+    if want(&which, "batching") {
+        let wl = datasets::seedtts(9, n.max(8), 0.0);
+        let mut t = Table::new(
+            "Ablation: per-stage batch cap (mimo-audio, seedtts-sim)",
+            &["max_batch", "wall(s)", "JCT(s)", "backbone TPS"],
+        );
+        for cap in [1usize, 2, 4, 8] {
+            let mut cfg = presets::mimo_audio(1);
+            for s in &mut cfg.stages {
+                s.max_batch = cap;
+            }
+            let orch = Orchestrator::new(
+                cfg,
+                Arc::clone(&artifacts),
+                Registry::builtin(),
+                RunOptions::default(),
+            )?;
+            let summary = orch.run_workload(&wl, Some("backbone"))?;
+            t.row(vec![
+                cap.to_string(),
+                format!("{:.2}", summary.wall_s),
+                format!("{:.2}", summary.report.mean_jct()),
+                format!("{:.1}", summary.report.stage_tps("backbone")),
+            ]);
+        }
+        t.print();
+    }
+
+    if want(&which, "stepcache") {
+        let wl = datasets::vbench(6, 3, 0.0, 20, false);
+        let mut t = Table::new(
+            "Ablation: TeaCache-style step-cache threshold (qwen_image)",
+            &["threshold", "JCT(s)", "steps run", "steps skipped"],
+        );
+        for thr in [0.0f32, 0.10, 0.15, 0.25] {
+            let orch = Orchestrator::new(
+                presets::dit_single("qwen_image", 20, thr),
+                Arc::clone(&artifacts),
+                Registry::builtin(),
+                RunOptions::default(),
+            )?;
+            let summary = orch.run_workload(&wl, None)?;
+            let d = summary.stages.iter().find_map(|s| s.diffusion.clone()).unwrap_or_default();
+            t.row(vec![
+                format!("{thr}"),
+                format!("{:.2}", summary.report.mean_jct()),
+                d.steps_run.to_string(),
+                d.steps_skipped.to_string(),
+            ]);
+        }
+        t.print();
+    }
+
+    if want(&which, "multistep") {
+        let wl = datasets::seedtts(12, n, 0.0);
+        let mut t = Table::new(
+            "Ablation: fused multi-step decode (mimo-audio)",
+            &["multi_step", "wall(s)", "JCT(s)", "RTF"],
+        );
+        for ms in [1usize, omni_serve::engine::ar::SCAN_STEPS] {
+            let orch = Orchestrator::new(
+                presets::mimo_audio(ms),
+                Arc::clone(&artifacts),
+                Registry::builtin(),
+                RunOptions::default(),
+            )?;
+            let summary = orch.run_workload(&wl, Some("backbone"))?;
+            t.row(vec![
+                ms.to_string(),
+                format!("{:.2}", summary.wall_s),
+                format!("{:.2}", summary.report.mean_jct()),
+                format!("{:.3}", summary.report.mean_rtf()),
+            ]);
+        }
+        t.print();
+    }
+
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! Fig. 6 reproduction: end-to-end RTF / JCT / Thinker TPS / Talker TPS
+//! on the Qwen-Omni pipelines, omni-serve (disaggregated) vs the
+//! monolithic HF-style baseline, across the three input modalities
+//! (librispeech/food101/ucf101 sims).
+//!
+//! Paper reference points: Qwen2.5-Omni RTF -61.4% JCT -61.6%
+//! (Thinker TPS x1.29, Talker x1.97); Qwen3-Omni RTF -90.7% JCT -91.4%
+//! (Thinker x12.97, Talker x7.98 — the baseline lacks execution-graph
+//! compilation, modeled as per-request recompilation).
+
+use std::sync::Arc;
+
+use omni_serve::baseline::{run_monolithic, BaselineOptions};
+use omni_serve::bench_util::{self, Table};
+use omni_serve::config::presets;
+use omni_serve::orchestrator::{Orchestrator, RunOptions};
+use omni_serve::stage_graph::transfers::Registry;
+use omni_serve::trace::datasets;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = bench_util::load_artifacts();
+    let n = bench_util::bench_n(6);
+    let seed = 42;
+
+    let mut table = Table::new(
+        "Fig. 6 — end-to-end on Qwen-Omni models",
+        &["model", "dataset", "system", "RTF", "JCT(s)", "thinker TPS", "talker TPS"],
+    );
+    let mut summary = Table::new(
+        "Fig. 6 — reductions vs baseline (paper: Qwen2.5 RTF-61.4%/JCT-61.6%; Qwen3 RTF-90.7%/JCT-91.4%)",
+        &["model", "dataset", "RTF red.", "JCT red.", "thinker TPS x", "talker TPS x"],
+    );
+
+    for (model, cfg_fn, baseline_lazy) in [
+        ("qwen2.5-omni", presets::qwen25_omni as fn() -> omni_serve::config::PipelineConfig, false),
+        ("qwen3-omni", presets::qwen3_omni as fn() -> omni_serve::config::PipelineConfig, true),
+    ] {
+        for (dsname, wl) in [
+            ("librispeech", datasets::librispeech(seed, n, 0.0)),
+            ("food101", datasets::food101(seed, n, 0.0)),
+            ("ucf101", datasets::ucf101(seed, n, 0.0)),
+        ] {
+            // --- disaggregated ---
+            let orch = Orchestrator::new(
+                cfg_fn(),
+                Arc::clone(&artifacts),
+                Registry::builtin(),
+                RunOptions::default(),
+            )?;
+            let ours = orch.run_workload(&wl, Some("talker"))?.report;
+            // --- baseline ---
+            let base = run_monolithic(
+                &artifacts,
+                &cfg_fn(),
+                &wl,
+                &BaselineOptions { lazy_compile: baseline_lazy, no_kv_cache: false },
+                Some("talker"),
+            )?;
+            for (sys, r) in [("baseline", &base), ("omni-serve", &ours)] {
+                table.row(vec![
+                    model.into(),
+                    dsname.into(),
+                    sys.into(),
+                    format!("{:.3}", r.mean_rtf()),
+                    format!("{:.2}", r.mean_jct()),
+                    format!("{:.1}", r.stage_tps("thinker")),
+                    format!("{:.1}", r.stage_tps("talker")),
+                ]);
+            }
+            summary.row(vec![
+                model.into(),
+                dsname.into(),
+                bench_util::reduction_pct(base.mean_rtf(), ours.mean_rtf()),
+                bench_util::reduction_pct(base.mean_jct(), ours.mean_jct()),
+                format!("{:.2}x", ours.stage_tps("thinker") / base.stage_tps("thinker").max(1e-9)),
+                format!("{:.2}x", ours.stage_tps("talker") / base.stage_tps("talker").max(1e-9)),
+            ]);
+        }
+    }
+    table.print();
+    summary.print();
+    Ok(())
+}

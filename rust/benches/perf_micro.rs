@@ -1,0 +1,81 @@
+//! §Perf microbenchmarks: per-layer hot-path timings used for the
+//! optimization pass (EXPERIMENTS.md §Perf).
+//!
+//! L3 measurements: AR decode step cost decomposition (executable time vs
+//! host KV marshaling) across batch buckets, prefill chunk cost, DiT step
+//! cost, and connector overhead per decode step.
+
+use omni_serve::bench_util::{self, Table};
+use omni_serve::engine::ar::{token_job, ArEngine, ArEngineOptions};
+use omni_serve::engine::SamplingParams;
+use omni_serve::tokenizer::BOS_ID;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = bench_util::load_artifacts();
+    let steps = bench_util::bench_n(48);
+
+    let mut t = Table::new(
+        "Perf: AR decode step decomposition (thinker3 = largest model)",
+        &["batch", "steps", "total/step", "exec/step", "marshal/step", "marshal %", "tok/s"],
+    );
+    for batch in [1usize, 2, 4, 8] {
+        let mut e = ArEngine::new(
+            &artifacts,
+            "thinker3",
+            ArEngineOptions { max_batch: batch, stream_chunk: 0, ..Default::default() },
+        )?;
+        for i in 0..batch {
+            e.submit(token_job(
+                i as u64,
+                &[BOS_ID, 7 + i as u32],
+                SamplingParams { max_new_tokens: steps, ignore_eos: true, ..Default::default() },
+            ));
+        }
+        let t0 = std::time::Instant::now();
+        e.run_to_completion()?;
+        let wall = t0.elapsed().as_secs_f64();
+        let iters = e.stats.decode_calls.max(1) as f64;
+        let toks = e.stats.decode_tokens as f64;
+        t.row(vec![
+            batch.to_string(),
+            format!("{}", e.stats.decode_calls),
+            format!("{:.2}ms", wall / iters * 1e3),
+            format!("{:.2}ms", e.stats.exec_seconds / iters * 1e3),
+            format!("{:.2}ms", e.stats.marshal_seconds / iters * 1e3),
+            format!("{:.0}%", 100.0 * e.stats.marshal_seconds / wall),
+            format!("{:.1}", toks / wall),
+        ]);
+    }
+    t.print();
+
+    // Prefill throughput (chunked).
+    let mut t = Table::new(
+        "Perf: chunked prefill throughput (thinker3)",
+        &["batch", "prompt", "prefill tok/s"],
+    );
+    for batch in [1usize, 4] {
+        let mut e = ArEngine::new(
+            &artifacts,
+            "thinker3",
+            ArEngineOptions { max_batch: batch, stream_chunk: 0, ..Default::default() },
+        )?;
+        let prompt: Vec<u32> = std::iter::once(BOS_ID).chain(2..128).collect();
+        for i in 0..batch {
+            e.submit(token_job(
+                i as u64,
+                &prompt,
+                SamplingParams { max_new_tokens: 1, ignore_eos: true, ..Default::default() },
+            ));
+        }
+        let t0 = std::time::Instant::now();
+        e.run_to_completion()?;
+        let wall = t0.elapsed().as_secs_f64();
+        t.row(vec![
+            batch.to_string(),
+            prompt.len().to_string(),
+            format!("{:.0}", e.stats.prefill_tokens as f64 / wall),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! Table 1 reproduction: unified-connector data-transfer latency for the
+//! two Qwen-Omni edges (Thinker2Talker hidden states, Talker2Vocoder
+//! codec tokens), per connector transport.
+//!
+//! Paper reference (Qwen2.5-Omni): Thinker2Talker shm 5.49 ms / Mooncake
+//! 8.28 ms; Talker2Vocoder 0.53 ms.  The shape to reproduce: shm < TCP,
+//! and the token edge is ~10x cheaper than the hidden-state edge.
+
+use omni_serve::bench_util::{self, Table};
+use omni_serve::config::ConnectorKind;
+use omni_serve::connector::{self, tcp::MooncakeStore};
+use omni_serve::engine::StageItem;
+use omni_serve::runtime::HostTensor;
+use omni_serve::util::fmt;
+
+fn payload_hiddens() -> StageItem {
+    // Thinker2Talker: one request's hidden-state stream for a Qwen2.5-sim
+    // response (~150 paper tokens -> 38 scaled, d=256) per stream chunk
+    // of 16 plus tokens.
+    StageItem::new(1)
+        .with("tokens", HostTensor::i32(vec![38], vec![7; 38]))
+        .with("hiddens", HostTensor::f32(vec![38, 256], vec![0.5; 38 * 256]))
+}
+
+fn payload_tokens() -> StageItem {
+    // Talker2Vocoder: one codec chunk (64 frames of token ids).
+    StageItem::new(1).with("tokens", HostTensor::i32(vec![64], vec![9; 64]))
+}
+
+fn bench_edge(kind: ConnectorKind, store: Option<&str>, item: &StageItem, iters: usize) -> f64 {
+    let (mut tx, mut rx) = connector::pair(kind, "bench", store).unwrap();
+    // Warmup.
+    for _ in 0..8 {
+        tx.send(item.clone()).unwrap();
+        rx.recv().unwrap().unwrap();
+    }
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        tx.send(item.clone()).unwrap();
+        rx.recv().unwrap().unwrap();
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+fn main() -> anyhow::Result<()> {
+    let store = MooncakeStore::spawn("127.0.0.1:0")?;
+    let addr = store.addr().to_string();
+    let iters = bench_util::bench_n(200);
+
+    let mut t = Table::new(
+        "Table 1 — unified connector transfer latency (paper: T2T shm 5.49ms / Mooncake 8.28ms; T2V 0.53ms)",
+        &["edge", "payload", "inline", "shared memory", "mooncake (TCP)"],
+    );
+    for (edge, item) in [
+        ("Thinker2Talker", payload_hiddens()),
+        ("Talker2Vocoder", payload_tokens()),
+    ] {
+        let inline = bench_edge(ConnectorKind::Inline, None, &item, iters);
+        let shm = bench_edge(ConnectorKind::Shm, None, &item, iters);
+        let tcp = bench_edge(ConnectorKind::Tcp, Some(&addr), &item, iters);
+        t.row(vec![
+            edge.into(),
+            fmt::bytes(item.payload_bytes()),
+            fmt::dur(inline),
+            fmt::dur(shm),
+            fmt::dur(tcp),
+        ]);
+    }
+    t.print();
+    println!("(one-way send->recv latency, mean of {iters} transfers)");
+    Ok(())
+}

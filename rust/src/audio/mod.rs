@@ -1,0 +1,93 @@
+//! Audio substrate: codec-frame bookkeeping, RTF computation, WAV output.
+//!
+//! The Talker emits *codec tokens*; the Vocoder turns codec frames into
+//! waveform samples.  RTF (real-time factor, the paper's §4.1 metric) is
+//! `processing_time / generated_audio_duration`, so the system needs an
+//! authoritative mapping from token counts to audio seconds.
+
+/// Global audio clock for the reproduction (samples per second).
+pub const SAMPLE_RATE: u32 = 16_000;
+
+/// Codec frame rate used by all talkers (frames per second of audio).
+/// 50 Hz matches the common 20 ms codec frame.
+pub const CODEC_FRAME_HZ: u32 = 50;
+
+/// Seconds of audio represented by `n` codec tokens (1 token = 1 frame).
+pub fn codec_tokens_to_seconds(n: usize) -> f64 {
+    n as f64 / CODEC_FRAME_HZ as f64
+}
+
+/// Samples represented by `n` codec tokens.
+pub fn codec_tokens_to_samples(n: usize) -> usize {
+    n * (SAMPLE_RATE / CODEC_FRAME_HZ) as usize
+}
+
+/// Real-time factor: processing seconds per generated-audio second.
+/// Returns `f64::INFINITY` when no audio was produced.
+pub fn rtf(processing_s: f64, audio_tokens: usize) -> f64 {
+    let audio_s = codec_tokens_to_seconds(audio_tokens);
+    if audio_s <= 0.0 {
+        f64::INFINITY
+    } else {
+        processing_s / audio_s
+    }
+}
+
+/// Minimal mono 16-bit PCM WAV writer (for the streaming-TTS example).
+pub fn write_wav(path: &std::path::Path, samples: &[f32]) -> std::io::Result<()> {
+    use std::io::Write;
+    let mut f = std::fs::File::create(path)?;
+    let n = samples.len() as u32;
+    let data_len = n * 2;
+    let byte_rate = SAMPLE_RATE * 2;
+
+    f.write_all(b"RIFF")?;
+    f.write_all(&(36 + data_len).to_le_bytes())?;
+    f.write_all(b"WAVE")?;
+    f.write_all(b"fmt ")?;
+    f.write_all(&16u32.to_le_bytes())?;
+    f.write_all(&1u16.to_le_bytes())?; // PCM
+    f.write_all(&1u16.to_le_bytes())?; // mono
+    f.write_all(&SAMPLE_RATE.to_le_bytes())?;
+    f.write_all(&byte_rate.to_le_bytes())?;
+    f.write_all(&2u16.to_le_bytes())?; // block align
+    f.write_all(&16u16.to_le_bytes())?; // bits
+    f.write_all(b"data")?;
+    f.write_all(&data_len.to_le_bytes())?;
+    for &s in samples {
+        let v = (s.clamp(-1.0, 1.0) * i16::MAX as f32) as i16;
+        f.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_time_mapping() {
+        assert_eq!(codec_tokens_to_seconds(50), 1.0);
+        assert_eq!(codec_tokens_to_samples(50), SAMPLE_RATE as usize);
+    }
+
+    #[test]
+    fn rtf_definition() {
+        // 2 s of processing for 4 s of audio -> RTF 0.5 (faster than RT).
+        assert!((rtf(2.0, 200) - 0.5).abs() < 1e-12);
+        assert!(rtf(1.0, 0).is_infinite());
+    }
+
+    #[test]
+    fn wav_header() {
+        let dir = std::env::temp_dir().join("omni_serve_wav_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.wav");
+        write_wav(&p, &[0.0, 0.5, -0.5, 1.0]).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        assert_eq!(&bytes[..4], b"RIFF");
+        assert_eq!(&bytes[8..12], b"WAVE");
+        assert_eq!(bytes.len(), 44 + 8);
+        std::fs::remove_file(&p).ok();
+    }
+}

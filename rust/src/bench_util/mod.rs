@@ -1,0 +1,112 @@
+//! Benchmark harness (the offline registry has no `criterion`): timing
+//! helpers + paper-style table rendering shared by every `[[bench]]`
+//! binary under `rust/benches/`.
+
+use crate::util::fmt;
+use crate::util::stats::Samples;
+
+/// Measure a closure `iters` times after `warmup` runs; returns samples
+/// of seconds.
+pub fn measure<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Samples {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut s = Samples::new();
+    for _ in 0..iters {
+        let t0 = std::time::Instant::now();
+        f();
+        s.push(t0.elapsed().as_secs_f64());
+    }
+    s
+}
+
+/// A paper-style result table builder.
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn print(&self) {
+        println!("\n=== {} ===", self.title);
+        let hdrs: Vec<&str> = self.headers.iter().map(|s| s.as_str()).collect();
+        print!("{}", fmt::table(&hdrs, &self.rows));
+    }
+}
+
+/// Format a mean ± stddev pair.
+pub fn pm(s: &Samples) -> String {
+    format!("{} ±{}", fmt::dur(s.mean()), fmt::dur(s.stddev()))
+}
+
+/// Format a speedup factor baseline/ours.
+pub fn speedup(baseline: f64, ours: f64) -> String {
+    if ours <= 0.0 {
+        "-".into()
+    } else {
+        format!("{:.2}x", baseline / ours)
+    }
+}
+
+/// Format a reduction percentage (paper reports "reduces JCT by 91.4%").
+pub fn reduction_pct(baseline: f64, ours: f64) -> String {
+    if baseline <= 0.0 {
+        "-".into()
+    } else {
+        format!("{:.1}%", (1.0 - ours / baseline) * 100.0)
+    }
+}
+
+/// Standard bench prologue: resolve artifacts or exit loudly.
+pub fn load_artifacts() -> std::sync::Arc<crate::runtime::Artifacts> {
+    let dir = crate::runtime::Artifacts::default_dir();
+    match crate::runtime::Artifacts::load(&dir) {
+        Ok(a) => std::sync::Arc::new(a),
+        Err(e) => {
+            eprintln!("cannot load artifacts from {}: {e}\nrun `make artifacts` first", dir.display());
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Honor `OMNI_BENCH_N` for request-count scaling (CI vs full runs).
+pub fn bench_n(default: usize) -> usize {
+    std::env::var("OMNI_BENCH_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_counts() {
+        let mut n = 0;
+        let s = measure(2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(s.len(), 5);
+    }
+
+    #[test]
+    fn format_helpers() {
+        assert_eq!(speedup(2.0, 1.0), "2.00x");
+        assert_eq!(reduction_pct(10.0, 1.0), "90.0%");
+        assert_eq!(speedup(1.0, 0.0), "-");
+    }
+}

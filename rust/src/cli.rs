@@ -1,0 +1,118 @@
+//! Hand-rolled CLI argument parsing (no `clap` in the offline registry).
+//!
+//! Grammar: `omni-serve <command> [--flag[=value] | --flag value | positional]...`
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+/// Flags that never take a value (`--flag value` ambiguity resolution).
+pub const BOOL_FLAGS: &[&str] =
+    &["verbose", "baseline", "no-streaming", "lazy-compile", "list", "help", "quiet"];
+
+impl Args {
+    /// Parse from an iterator of argument strings (sans argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Self> {
+        let mut it = args.into_iter().peekable();
+        let command = it.next().unwrap_or_default();
+        let mut out = Args { command, ..Default::default() };
+        while let Some(a) = it.next() {
+            if let Some(flag) = a.strip_prefix("--") {
+                if let Some((k, v)) = flag.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if !BOOL_FLAGS.contains(&flag)
+                    && it.peek().map(|n| !n.starts_with("--")).unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(flag.to_string(), v);
+                } else {
+                    out.flags.insert(flag.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag_bool(&self, name: &str) -> bool {
+        matches!(self.flag(name), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn flag_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{name} expects an integer, got `{v}`")),
+        }
+    }
+
+    pub fn flag_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{name} expects a number, got `{v}`")),
+        }
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str> {
+        self.flag(name).ok_or_else(|| anyhow::anyhow!("missing required --{name}"))
+    }
+
+    pub fn unknown_check(&self, known: &[&str]) -> Result<()> {
+        for k in self.flags.keys() {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown flag --{k} (known: {})", known.join(", "));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn commands_flags_positionals() {
+        let a = parse("serve --pipeline qwen3-omni --port=8090 --verbose extra");
+        assert_eq!(a.command, "serve");
+        assert_eq!(a.flag("pipeline"), Some("qwen3-omni"));
+        assert_eq!(a.flag("port"), Some("8090"));
+        assert!(a.flag_bool("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn typed_flags() {
+        let a = parse("run --n 12 --rate 2.5");
+        assert_eq!(a.flag_usize("n", 0).unwrap(), 12);
+        assert_eq!(a.flag_f64("rate", 0.0).unwrap(), 2.5);
+        assert_eq!(a.flag_usize("missing", 7).unwrap(), 7);
+        assert!(parse("run --n abc").flag_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_detection() {
+        let a = parse("x --good 1 --bad 2");
+        assert!(a.unknown_check(&["good"]).is_err());
+        assert!(a.unknown_check(&["good", "bad"]).is_ok());
+    }
+}

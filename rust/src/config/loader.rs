@@ -1,0 +1,160 @@
+//! JSON <-> [`PipelineConfig`] (de)serialization, so deployments can be
+//! described in files (`omni-serve serve --config pipeline.json`).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::{ConnectorKind, DiffusionParams, EdgeConfig, PipelineConfig, StageConfig, StageKind};
+use crate::jobj;
+use crate::json::{self, Value};
+
+pub fn from_file(path: &Path) -> Result<PipelineConfig> {
+    let v = json::from_file(path)?;
+    from_value(&v).with_context(|| format!("in config {}", path.display()))
+}
+
+pub fn from_value(v: &Value) -> Result<PipelineConfig> {
+    let mut stages = Vec::new();
+    for sv in v.req_arr("stages")? {
+        let kind = StageKind::from_name(sv.req_str("kind")?)?;
+        let mut s = StageConfig::new(sv.req_str("name")?, sv.req_str("model")?, kind);
+        if let Some(devs) = sv.get("devices").as_arr() {
+            s.devices = devs.iter().filter_map(|d| d.as_usize()).collect();
+        }
+        if let Some(b) = sv.get("max_batch").as_usize() {
+            s.max_batch = b;
+        }
+        if let Some(f) = sv.get("kv_memory_frac").as_f64() {
+            s.kv_memory_frac = f;
+        }
+        if let Some(b) = sv.get("chunked_prefill").as_bool() {
+            s.chunked_prefill = b;
+        }
+        if let Some(k) = sv.get("multi_step").as_usize() {
+            s.multi_step = k;
+        }
+        if let Some(c) = sv.get("stream_chunk").as_usize() {
+            s.stream_chunk = c;
+        }
+        let dv = sv.get("diffusion");
+        if !dv.is_null() {
+            s.diffusion = DiffusionParams {
+                steps: dv.get("steps").as_usize().unwrap_or(20),
+                cfg_scale: dv.get("cfg_scale").as_f64().unwrap_or(3.0) as f32,
+                stepcache_threshold: dv.get("stepcache_threshold").as_f64().unwrap_or(0.0) as f32,
+            };
+        }
+        stages.push(s);
+    }
+    let mut edges = Vec::new();
+    if let Some(evs) = v.get("edges").as_arr() {
+        for ev in evs {
+            edges.push(EdgeConfig {
+                from: ev.req_str("from")?.to_string(),
+                to: ev.req_str("to")?.to_string(),
+                transfer: ev.req_str("transfer")?.to_string(),
+                connector: ConnectorKind::from_name(
+                    ev.get("connector").as_str().unwrap_or("inline"),
+                )?,
+            });
+        }
+    }
+    let cfg = PipelineConfig {
+        name: v.req_str("name")?.to_string(),
+        stages,
+        edges,
+        n_devices: v.get("n_devices").as_usize().unwrap_or(2),
+        device_bytes: v
+            .get("device_bytes")
+            .as_usize()
+            .unwrap_or(crate::device::DEFAULT_DEVICE_BYTES),
+    };
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+pub fn to_value(p: &PipelineConfig) -> Value {
+    let stages: Vec<Value> = p
+        .stages
+        .iter()
+        .map(|s| {
+            jobj! {
+                "name" => s.name.clone(),
+                "model" => s.model.clone(),
+                "kind" => s.kind.name(),
+                "devices" => s.devices.clone(),
+                "max_batch" => s.max_batch,
+                "kv_memory_frac" => s.kv_memory_frac,
+                "chunked_prefill" => s.chunked_prefill,
+                "multi_step" => s.multi_step,
+                "stream_chunk" => s.stream_chunk,
+                "diffusion" => jobj! {
+                    "steps" => s.diffusion.steps,
+                    "cfg_scale" => s.diffusion.cfg_scale as f64,
+                    "stepcache_threshold" => s.diffusion.stepcache_threshold as f64,
+                },
+            }
+        })
+        .collect();
+    let edges: Vec<Value> = p
+        .edges
+        .iter()
+        .map(|e| {
+            jobj! {
+                "from" => e.from.clone(),
+                "to" => e.to.clone(),
+                "transfer" => e.transfer.clone(),
+                "connector" => e.connector.name(),
+            }
+        })
+        .collect();
+    jobj! {
+        "name" => p.name.clone(),
+        "stages" => Value::Arr(stages),
+        "edges" => Value::Arr(edges),
+        "n_devices" => p.n_devices,
+        "device_bytes" => p.device_bytes,
+    }
+}
+
+pub fn to_json_string(p: &PipelineConfig) -> String {
+    json::to_string_pretty(&to_value(p))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn presets_roundtrip_through_json() {
+        for p in presets::all() {
+            let s = to_json_string(&p);
+            let v = json::parse(&s).unwrap();
+            let q = from_value(&v).unwrap();
+            assert_eq!(p.name, q.name);
+            assert_eq!(p.stages.len(), q.stages.len());
+            for (a, b) in p.stages.iter().zip(&q.stages) {
+                assert_eq!(a.name, b.name);
+                assert_eq!(a.model, b.model);
+                assert_eq!(a.kind, b.kind);
+                assert_eq!(a.devices, b.devices);
+                assert_eq!(a.max_batch, b.max_batch);
+                assert_eq!(a.multi_step, b.multi_step);
+                assert_eq!(a.diffusion.steps, b.diffusion.steps);
+            }
+            assert_eq!(p.edges.len(), q.edges.len());
+            for (a, b) in p.edges.iter().zip(&q.edges) {
+                assert_eq!(a.transfer, b.transfer);
+                assert_eq!(a.connector, b.connector);
+            }
+        }
+    }
+
+    #[test]
+    fn invalid_config_rejected() {
+        let v = json::parse(r#"{"name": "x", "stages": []}"#).unwrap();
+        assert!(from_value(&v).is_err());
+    }
+}

@@ -1,0 +1,303 @@
+//! Configuration system (paper Fig. 3(c)): per-stage runtime settings —
+//! parallelism, device placement, memory budgets, batching, streaming —
+//! tunable without touching model code.
+//!
+//! Configs load from JSON ([`loader`]) or from the built-in presets that
+//! mirror the paper's evaluated models ([`presets`]).
+
+pub mod loader;
+pub mod presets;
+
+use anyhow::{bail, Result};
+
+/// What kind of engine serves a stage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageKind {
+    /// Autoregressive LLM stage (vLLM-like engine).
+    Ar,
+    /// Diffusion-transformer stage (diffusion engine).
+    Dit,
+    /// Lightweight CNN vocoder stage.
+    CnnVocoder,
+    /// MiMo patch decoder stage.
+    PatchDecoder,
+    /// Standalone multimodal encoder stage (EPD disaggregation, §3.4).
+    Encoder,
+}
+
+impl StageKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            StageKind::Ar => "ar",
+            StageKind::Dit => "dit",
+            StageKind::CnnVocoder => "cnn_vocoder",
+            StageKind::PatchDecoder => "patch_decoder",
+            StageKind::Encoder => "encoder",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<Self> {
+        Ok(match s {
+            "ar" => StageKind::Ar,
+            "dit" => StageKind::Dit,
+            "cnn_vocoder" => StageKind::CnnVocoder,
+            "patch_decoder" => StageKind::PatchDecoder,
+            "encoder" => StageKind::Encoder,
+            other => bail!("unknown stage kind `{other}`"),
+        })
+    }
+}
+
+/// Diffusion-stage runtime parameters.
+#[derive(Debug, Clone)]
+pub struct DiffusionParams {
+    /// Denoising steps per job.
+    pub steps: usize,
+    /// Classifier-free guidance scale.
+    pub cfg_scale: f32,
+    /// TeaCache-style step-cache threshold on the relative change of the
+    /// modulation embedding; 0.0 disables caching.
+    pub stepcache_threshold: f32,
+}
+
+impl Default for DiffusionParams {
+    fn default() -> Self {
+        Self { steps: 20, cfg_scale: 3.0, stepcache_threshold: 0.0 }
+    }
+}
+
+/// Per-stage configuration (paper Fig. 3(b)/(c)).
+#[derive(Debug, Clone)]
+pub struct StageConfig {
+    /// Stage name within the pipeline ("thinker", "talker", "vocoder").
+    pub name: String,
+    /// Manifest model served by this stage ("thinker3", "voc_cnn3", ...).
+    pub model: String,
+    pub kind: StageKind,
+    /// Device placement.  More than one device = tensor parallel
+    /// (memory-sharded in the device model; see DESIGN.md §6).
+    pub devices: Vec<usize>,
+    /// Maximum scheduler batch (must be <= the largest compiled bucket).
+    pub max_batch: usize,
+    /// Fraction of the stage's device budget reserved for KV cache (AR).
+    pub kv_memory_frac: f64,
+    /// Enable chunked prefill (AR stages).
+    pub chunked_prefill: bool,
+    /// Decode steps fused per scheduler iteration: 1 = classic continuous
+    /// batching; >1 uses the AOT `scan` executable ("execution-graph
+    /// compilation" mode).
+    pub multi_step: usize,
+    /// Streaming granularity: emit partial outputs to the next stage every
+    /// `stream_chunk` tokens (0 = only at stage completion).
+    pub stream_chunk: usize,
+    /// Diffusion parameters (DiT stages only).
+    pub diffusion: DiffusionParams,
+}
+
+impl StageConfig {
+    pub fn new(name: &str, model: &str, kind: StageKind) -> Self {
+        Self {
+            name: name.into(),
+            model: model.into(),
+            kind,
+            devices: vec![0],
+            max_batch: 4,
+            kv_memory_frac: 0.5,
+            chunked_prefill: true,
+            multi_step: 1,
+            stream_chunk: 16,
+            diffusion: DiffusionParams::default(),
+        }
+    }
+
+    pub fn on_devices(mut self, devices: &[usize]) -> Self {
+        self.devices = devices.to_vec();
+        self
+    }
+
+    pub fn with_batch(mut self, b: usize) -> Self {
+        self.max_batch = b;
+        self
+    }
+
+    pub fn with_multi_step(mut self, k: usize) -> Self {
+        self.multi_step = k;
+        self
+    }
+
+    pub fn with_stream_chunk(mut self, c: usize) -> Self {
+        self.stream_chunk = c;
+        self
+    }
+
+    pub fn with_diffusion(mut self, d: DiffusionParams) -> Self {
+        self.diffusion = d;
+        self
+    }
+}
+
+/// Connector selection per edge (paper §3.4, Table 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConnectorKind {
+    /// In-process queue (control plane + payload inline).
+    Inline,
+    /// POSIX shared memory for payloads, inline queue for metadata.
+    Shm,
+    /// Mooncake-like TCP put/get store with metadata control plane.
+    Tcp,
+}
+
+impl ConnectorKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ConnectorKind::Inline => "inline",
+            ConnectorKind::Shm => "shm",
+            ConnectorKind::Tcp => "tcp",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<Self> {
+        Ok(match s {
+            "inline" => ConnectorKind::Inline,
+            "shm" => ConnectorKind::Shm,
+            "tcp" => ConnectorKind::Tcp,
+            other => bail!("unknown connector kind `{other}`"),
+        })
+    }
+}
+
+/// An edge of the stage graph: a named transfer function plus transport.
+#[derive(Debug, Clone)]
+pub struct EdgeConfig {
+    pub from: String,
+    pub to: String,
+    /// Name of a registered transfer function (see
+    /// [`crate::stage_graph::transfers`]).
+    pub transfer: String,
+    pub connector: ConnectorKind,
+}
+
+/// A full pipeline: stage graph + resources.
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    pub name: String,
+    pub stages: Vec<StageConfig>,
+    pub edges: Vec<EdgeConfig>,
+    /// Simulated accelerator pool.
+    pub n_devices: usize,
+    pub device_bytes: usize,
+}
+
+impl PipelineConfig {
+    /// Structural validation (placement bounds, edge endpoints, name
+    /// uniqueness).  Graph-level checks (acyclicity, entry/exit stages)
+    /// happen in [`crate::stage_graph`].
+    pub fn validate(&self) -> Result<()> {
+        if self.stages.is_empty() {
+            bail!("pipeline `{}` has no stages", self.name);
+        }
+        let mut seen = std::collections::HashSet::new();
+        for s in &self.stages {
+            if !seen.insert(&s.name) {
+                bail!("duplicate stage name `{}`", s.name);
+            }
+            if s.devices.is_empty() {
+                bail!("stage `{}` has no device placement", s.name);
+            }
+            for &d in &s.devices {
+                if d >= self.n_devices {
+                    bail!("stage `{}` placed on device {d} but pool has {}", s.name, self.n_devices);
+                }
+            }
+            if s.max_batch == 0 {
+                bail!("stage `{}` max_batch must be >= 1", s.name);
+            }
+            if s.multi_step == 0 {
+                bail!("stage `{}` multi_step must be >= 1", s.name);
+            }
+            if !(0.0..=1.0).contains(&s.kv_memory_frac) {
+                bail!("stage `{}` kv_memory_frac out of [0,1]", s.name);
+            }
+        }
+        for e in &self.edges {
+            for end in [&e.from, &e.to] {
+                if !self.stages.iter().any(|s| &s.name == end) {
+                    bail!("edge references unknown stage `{end}`");
+                }
+            }
+            if e.from == e.to {
+                bail!("self-edge on `{}`", e.from);
+            }
+        }
+        Ok(())
+    }
+
+    pub fn stage(&self, name: &str) -> Option<&StageConfig> {
+        self.stages.iter().find(|s| s.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_stage() -> PipelineConfig {
+        PipelineConfig {
+            name: "t".into(),
+            stages: vec![
+                StageConfig::new("a", "thinker25", StageKind::Ar),
+                StageConfig::new("b", "talker25", StageKind::Ar),
+            ],
+            edges: vec![EdgeConfig {
+                from: "a".into(),
+                to: "b".into(),
+                transfer: "thinker2talker".into(),
+                connector: ConnectorKind::Inline,
+            }],
+            n_devices: 2,
+            device_bytes: 1 << 20,
+        }
+    }
+
+    #[test]
+    fn valid_pipeline_passes() {
+        two_stage().validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_placement() {
+        let mut p = two_stage();
+        p.stages[0].devices = vec![5];
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_names() {
+        let mut p = two_stage();
+        p.stages[1].name = "a".into();
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_edge_endpoint() {
+        let mut p = two_stage();
+        p.edges[0].to = "zzz".into();
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_self_edge() {
+        let mut p = two_stage();
+        p.edges[0].to = "a".into();
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn kind_roundtrip() {
+        for k in [StageKind::Ar, StageKind::Dit, StageKind::CnnVocoder,
+                  StageKind::PatchDecoder, StageKind::Encoder] {
+            assert_eq!(StageKind::from_name(k.name()).unwrap(), k);
+        }
+        assert!(StageKind::from_name("nope").is_err());
+    }
+}

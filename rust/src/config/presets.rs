@@ -1,0 +1,221 @@
+//! Built-in pipeline presets mirroring the paper's evaluated models
+//! (§4.1), with the paper's 2-device placement for the Omni pipelines:
+//! Thinker tensor-parallel across both accelerators, Talker on device 1,
+//! Vocoder on device 0.
+//!
+//! Batch caps are tuned for the CPU-PJRT testbed (see EXPERIMENTS.md
+//! §Perf / ablation `batching`): XLA's CPU backend already uses all cores
+//! within a single call, so intra-stage batching saturates at ~2; the
+//! disaggregation win on this testbed comes from inter-stage overlap,
+//! streaming, and fused multi-step decode.  On real accelerators raise
+//! `max_batch` to the compiled bucket limit (8).
+
+use super::{ConnectorKind, DiffusionParams, EdgeConfig, PipelineConfig, StageConfig, StageKind};
+
+fn edge(from: &str, to: &str, transfer: &str) -> EdgeConfig {
+    EdgeConfig {
+        from: from.into(),
+        to: to.into(),
+        transfer: transfer.into(),
+        connector: ConnectorKind::Inline,
+    }
+}
+
+/// Qwen2.5-Omni sim: Thinker(7B-sim) -> Talker -> DiT Vocoder.
+pub fn qwen25_omni() -> PipelineConfig {
+    PipelineConfig {
+        name: "qwen2.5-omni-sim".into(),
+        stages: vec![
+            StageConfig::new("thinker", "thinker25", StageKind::Ar)
+                .on_devices(&[0, 1])
+                .with_batch(2),
+            StageConfig::new("talker", "talker25", StageKind::Ar)
+                .on_devices(&[1])
+                .with_batch(2)
+                .with_multi_step(crate::engine::ar::SCAN_STEPS),
+            StageConfig::new("vocoder", "voc_dit25", StageKind::Dit)
+                .on_devices(&[0])
+                .with_batch(2)
+                .with_diffusion(DiffusionParams {
+                    steps: 10,
+                    cfg_scale: 1.0,
+                    stepcache_threshold: 0.15,
+                }),
+        ],
+        edges: vec![
+            edge("thinker", "talker", "thinker2talker"),
+            edge("talker", "vocoder", "talker2vocoder"),
+        ],
+        n_devices: 2,
+        device_bytes: crate::device::DEFAULT_DEVICE_BYTES,
+    }
+}
+
+/// Qwen3-Omni sim: larger Thinker (30B-sim), CNN vocoder.
+pub fn qwen3_omni() -> PipelineConfig {
+    PipelineConfig {
+        name: "qwen3-omni-sim".into(),
+        stages: vec![
+            StageConfig::new("thinker", "thinker3", StageKind::Ar)
+                .on_devices(&[0, 1])
+                .with_batch(2),
+            StageConfig::new("talker", "talker3", StageKind::Ar)
+                .on_devices(&[1])
+                .with_batch(2)
+                // Fused multi-step decode on the longest stage (§Perf):
+                // amortizes dispatch + KV round-trips over 8 tokens.
+                .with_multi_step(crate::engine::ar::SCAN_STEPS),
+            StageConfig::new("vocoder", "voc_cnn3", StageKind::CnnVocoder)
+                .on_devices(&[0])
+                .with_batch(4),
+        ],
+        edges: vec![
+            edge("thinker", "talker", "thinker2talker"),
+            edge("talker", "vocoder", "talker2vocoder"),
+        ],
+        n_devices: 2,
+        device_bytes: crate::device::DEFAULT_DEVICE_BYTES,
+    }
+}
+
+/// Qwen3-Omni with EPD disaggregation (paper §3.4): the multimodal
+/// encoder runs as its OWN stage on device 0 instead of fused into the
+/// Thinker, exercising the encoder->prefill edge of the unified
+/// connector.
+pub fn qwen3_omni_epd() -> PipelineConfig {
+    let mut p = qwen3_omni();
+    p.name = "qwen3-omni-sim-epd".into();
+    p.stages.insert(
+        0,
+        StageConfig::new("encoder", "enc3", StageKind::Encoder)
+            .on_devices(&[0])
+            .with_batch(4),
+    );
+    p.edges.insert(0, edge("encoder", "thinker", "embeds2prompt"));
+    p
+}
+
+/// BAGEL sim: understanding expert (AR) -> generation expert (DiT).
+/// `i2i` switches the generation expert to the longer image-conditioned
+/// variant (ref-image tokens concatenated into the latent sequence).
+pub fn bagel(i2i: bool) -> PipelineConfig {
+    let gen_model = if i2i { "bagel_i2i" } else { "bagel_t2i" };
+    PipelineConfig {
+        name: format!("bagel-sim-{}", if i2i { "i2i" } else { "t2i" }),
+        stages: vec![
+            StageConfig::new("understand", "bagel_und", StageKind::Ar)
+                .on_devices(&[0])
+                .with_batch(2),
+            StageConfig::new("generate", gen_model, StageKind::Dit)
+                .on_devices(&[0])
+                .with_batch(1)
+                .with_diffusion(DiffusionParams {
+                    steps: 24,
+                    cfg_scale: 3.0,
+                    stepcache_threshold: 0.15,
+                }),
+        ],
+        edges: vec![edge("understand", "generate", "hidden2cond")],
+        n_devices: 1,
+        device_bytes: crate::device::DEFAULT_DEVICE_BYTES,
+    }
+}
+
+/// MiMo-Audio sim: AR backbone -> patch decoder.  `multi_step > 1` is the
+/// "with execution-graph compilation" configuration from §4.2.
+pub fn mimo_audio(multi_step: usize) -> PipelineConfig {
+    PipelineConfig {
+        name: format!("mimo-audio-sim-ms{multi_step}"),
+        stages: vec![
+            StageConfig::new("backbone", "mimo", StageKind::Ar)
+                .on_devices(&[0])
+                .with_batch(2)
+                .with_multi_step(multi_step),
+            StageConfig::new("patch_dec", "mimo_codec", StageKind::PatchDecoder)
+                .on_devices(&[0])
+                .with_batch(4),
+        ],
+        edges: vec![edge("backbone", "patch_dec", "tokens2patches")],
+        n_devices: 1,
+        device_bytes: crate::device::DEFAULT_DEVICE_BYTES,
+    }
+}
+
+/// Single-stage DiT pipelines for Fig. 8 (Qwen-Image, Qwen-Image-Edit,
+/// Wan2.2 T2V/I2V).
+pub fn dit_single(model: &str, steps: usize, stepcache: f32) -> PipelineConfig {
+    PipelineConfig {
+        name: format!("{model}-pipeline"),
+        stages: vec![StageConfig::new("dit", model, StageKind::Dit)
+            .on_devices(&[0])
+            .with_batch(1)
+            .with_diffusion(DiffusionParams {
+                steps,
+                cfg_scale: 3.0,
+                stepcache_threshold: stepcache,
+            })],
+        edges: vec![],
+        n_devices: 1,
+        device_bytes: crate::device::DEFAULT_DEVICE_BYTES,
+    }
+}
+
+/// Every preset, for `omni-serve graph --list` and tests.
+pub fn all() -> Vec<PipelineConfig> {
+    vec![
+        qwen25_omni(),
+        qwen3_omni(),
+        qwen3_omni_epd(),
+        bagel(false),
+        bagel(true),
+        mimo_audio(1),
+        mimo_audio(crate::engine::ar::SCAN_STEPS),
+        dit_single("qwen_image", 20, 0.15),
+        dit_single("qwen_image_edit", 20, 0.15),
+        dit_single("wan22_t2v", 20, 0.15),
+        dit_single("wan22_i2v", 20, 0.15),
+    ]
+}
+
+pub fn by_name(name: &str) -> Option<PipelineConfig> {
+    match name {
+        "qwen2.5-omni" | "qwen25-omni" => Some(qwen25_omni()),
+        "qwen3-omni" => Some(qwen3_omni()),
+        "qwen3-omni-epd" => Some(qwen3_omni_epd()),
+        "bagel-t2i" => Some(bagel(false)),
+        "bagel-i2i" => Some(bagel(true)),
+        "mimo-audio" => Some(mimo_audio(1)),
+        "mimo-audio-compiled" => Some(mimo_audio(crate::engine::ar::SCAN_STEPS)),
+        "qwen-image" => Some(dit_single("qwen_image", 20, 0.15)),
+        "qwen-image-edit" => Some(dit_single("qwen_image_edit", 20, 0.15)),
+        "wan22-t2v" => Some(dit_single("wan22_t2v", 20, 0.15)),
+        "wan22-i2v" => Some(dit_single("wan22_i2v", 20, 0.15)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_presets_validate() {
+        for p in all() {
+            p.validate().unwrap_or_else(|e| panic!("{}: {e}", p.name));
+        }
+    }
+
+    #[test]
+    fn paper_placement_for_omni() {
+        let p = qwen3_omni();
+        assert_eq!(p.stage("thinker").unwrap().devices, vec![0, 1]); // TP2
+        assert_eq!(p.stage("talker").unwrap().devices, vec![1]);
+        assert_eq!(p.stage("vocoder").unwrap().devices, vec![0]);
+    }
+
+    #[test]
+    fn by_name_resolves() {
+        assert!(by_name("qwen3-omni").is_some());
+        assert!(by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,96 @@
+//! POSIX shared-memory payload plane (single-node large transfers,
+//! paper Table 1 "Shared Memory" row).
+//!
+//! Uses `shm_open`/`mmap` directly through `libc` — real shared memory,
+//! not a file copy — so the measured latency is representative.
+
+use anyhow::{bail, Result};
+
+/// Create a segment, copy `bytes` into it, close the mapping (the name
+/// persists until unlink).
+pub fn write_segment(name: &str, bytes: &[u8]) -> Result<()> {
+    unsafe {
+        let cname = std::ffi::CString::new(name)?;
+        let fd = libc::shm_open(
+            cname.as_ptr(),
+            libc::O_CREAT | libc::O_RDWR | libc::O_EXCL,
+            0o600,
+        );
+        if fd < 0 {
+            bail!("shm_open({name}) failed: {}", std::io::Error::last_os_error());
+        }
+        if libc::ftruncate(fd, bytes.len() as libc::off_t) != 0 {
+            libc::close(fd);
+            libc::shm_unlink(cname.as_ptr());
+            bail!("ftruncate failed: {}", std::io::Error::last_os_error());
+        }
+        let ptr = libc::mmap(
+            std::ptr::null_mut(),
+            bytes.len(),
+            libc::PROT_WRITE,
+            libc::MAP_SHARED,
+            fd,
+            0,
+        );
+        libc::close(fd);
+        if ptr == libc::MAP_FAILED {
+            libc::shm_unlink(cname.as_ptr());
+            bail!("mmap failed: {}", std::io::Error::last_os_error());
+        }
+        std::ptr::copy_nonoverlapping(bytes.as_ptr(), ptr as *mut u8, bytes.len());
+        libc::munmap(ptr, bytes.len());
+    }
+    Ok(())
+}
+
+/// Map a segment read-only and copy it out.
+pub fn read_segment(name: &str, len: usize) -> Result<Vec<u8>> {
+    unsafe {
+        let cname = std::ffi::CString::new(name)?;
+        let fd = libc::shm_open(cname.as_ptr(), libc::O_RDONLY, 0);
+        if fd < 0 {
+            bail!("shm_open({name}) for read failed: {}", std::io::Error::last_os_error());
+        }
+        let ptr = libc::mmap(std::ptr::null_mut(), len, libc::PROT_READ, libc::MAP_SHARED, fd, 0);
+        libc::close(fd);
+        if ptr == libc::MAP_FAILED {
+            bail!("mmap for read failed: {}", std::io::Error::last_os_error());
+        }
+        let mut out = vec![0u8; len];
+        std::ptr::copy_nonoverlapping(ptr as *const u8, out.as_mut_ptr(), len);
+        libc::munmap(ptr, len);
+        Ok(out)
+    }
+}
+
+pub fn unlink(name: &str) {
+    if let Ok(cname) = std::ffi::CString::new(name) {
+        unsafe {
+            libc::shm_unlink(cname.as_ptr());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_read_unlink() {
+        let name = format!("/omni_shm_test_{}", std::process::id());
+        let data: Vec<u8> = (0..4096u32).map(|i| (i % 251) as u8).collect();
+        write_segment(&name, &data).unwrap();
+        let got = read_segment(&name, data.len()).unwrap();
+        assert_eq!(got, data);
+        unlink(&name);
+        assert!(read_segment(&name, data.len()).is_err());
+    }
+
+    #[test]
+    fn duplicate_name_rejected() {
+        let name = format!("/omni_shm_dup_{}", std::process::id());
+        write_segment(&name, b"abc").unwrap();
+        assert!(write_segment(&name, b"xyz").is_err());
+        unlink(&name);
+    }
+}

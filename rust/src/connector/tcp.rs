@@ -1,0 +1,203 @@
+//! Mooncake-like TCP put/get store (paper §3.4: "A Mooncake-based
+//! connector ... enabling TCP- or RDMA-based transport, allowing stages
+//! on different servers to exchange data via a common put/get interface
+//! while passing only lightweight metadata through the control plane").
+//!
+//! Protocol (little-endian):
+//!   PUT: `b'P' | key_len u32 | key | val_len u64 | val`      -> `b'K'`
+//!   GET: `b'G' | key_len u32 | key`  -> `b'V' | val_len u64 | val`
+//!        (blocks server-side until the key exists, then removes it)
+//!
+//! One thread per connection; the store is an in-memory map + condvar.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Default)]
+struct Shared {
+    map: Mutex<HashMap<String, Vec<u8>>>,
+    cv: Condvar,
+}
+
+/// The store server.  Dropping the handle leaves the daemon thread
+/// running for process lifetime (detached), which is fine for tests and
+/// benches; `addr()` gives the bound address.
+pub struct MooncakeStore {
+    addr: String,
+    shared: Arc<Shared>,
+}
+
+impl MooncakeStore {
+    pub fn spawn(bind: &str) -> Result<Self> {
+        let listener = TcpListener::bind(bind).context("binding mooncake store")?;
+        let addr = listener.local_addr()?.to_string();
+        let shared = Arc::new(Shared::default());
+        let s2 = shared.clone();
+        std::thread::Builder::new()
+            .name("mooncake-store".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    let Ok(stream) = conn else { continue };
+                    let s3 = s2.clone();
+                    std::thread::spawn(move || {
+                        let _ = serve_conn(stream, s3);
+                    });
+                }
+            })?;
+        Ok(Self { addr, shared })
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Number of keys currently stored (tests / metrics).
+    pub fn len(&self) -> usize {
+        self.shared.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+fn serve_conn(mut stream: TcpStream, shared: Arc<Shared>) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    loop {
+        let mut op = [0u8; 1];
+        if stream.read_exact(&mut op).is_err() {
+            return Ok(()); // client hung up
+        }
+        match op[0] {
+            b'P' => {
+                let key = read_key(&mut stream)?;
+                let mut len8 = [0u8; 8];
+                stream.read_exact(&mut len8)?;
+                let vlen = u64::from_le_bytes(len8) as usize;
+                let mut val = vec![0u8; vlen];
+                stream.read_exact(&mut val)?;
+                {
+                    let mut map = shared.map.lock().unwrap();
+                    map.insert(key, val);
+                    shared.cv.notify_all();
+                }
+                stream.write_all(b"K")?;
+            }
+            b'G' => {
+                let key = read_key(&mut stream)?;
+                let val = {
+                    let mut map = shared.map.lock().unwrap();
+                    loop {
+                        if let Some(v) = map.remove(&key) {
+                            break v;
+                        }
+                        map = shared.cv.wait(map).unwrap();
+                    }
+                };
+                stream.write_all(b"V")?;
+                stream.write_all(&(val.len() as u64).to_le_bytes())?;
+                stream.write_all(&val)?;
+            }
+            other => bail!("mooncake: unknown op {other}"),
+        }
+    }
+}
+
+fn read_key(stream: &mut TcpStream) -> Result<String> {
+    let mut len4 = [0u8; 4];
+    stream.read_exact(&mut len4)?;
+    let klen = u32::from_le_bytes(len4) as usize;
+    if klen > 4096 {
+        bail!("mooncake: key too long");
+    }
+    let mut key = vec![0u8; klen];
+    stream.read_exact(&mut key)?;
+    Ok(String::from_utf8(key)?)
+}
+
+/// Client handle (one TCP connection; not thread-safe — one per thread).
+pub struct StoreClient {
+    stream: TcpStream,
+}
+
+impl StoreClient {
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr).context("connecting to mooncake store")?;
+        stream.set_nodelay(true).ok();
+        Ok(Self { stream })
+    }
+
+    pub fn put(&mut self, key: &str, val: &[u8]) -> Result<()> {
+        self.stream.write_all(b"P")?;
+        self.stream.write_all(&(key.len() as u32).to_le_bytes())?;
+        self.stream.write_all(key.as_bytes())?;
+        self.stream.write_all(&(val.len() as u64).to_le_bytes())?;
+        self.stream.write_all(val)?;
+        let mut ack = [0u8; 1];
+        self.stream.read_exact(&mut ack)?;
+        if ack[0] != b'K' {
+            bail!("mooncake: bad PUT ack");
+        }
+        Ok(())
+    }
+
+    /// Blocking get-and-remove.
+    pub fn get(&mut self, key: &str) -> Result<Vec<u8>> {
+        self.stream.write_all(b"G")?;
+        self.stream.write_all(&(key.len() as u32).to_le_bytes())?;
+        self.stream.write_all(key.as_bytes())?;
+        let mut tag = [0u8; 1];
+        self.stream.read_exact(&mut tag)?;
+        if tag[0] != b'V' {
+            bail!("mooncake: bad GET tag");
+        }
+        let mut len8 = [0u8; 8];
+        self.stream.read_exact(&mut len8)?;
+        let vlen = u64::from_le_bytes(len8) as usize;
+        let mut val = vec![0u8; vlen];
+        self.stream.read_exact(&mut val)?;
+        Ok(val)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_removes() {
+        let store = MooncakeStore::spawn("127.0.0.1:0").unwrap();
+        let mut c = StoreClient::connect(store.addr()).unwrap();
+        c.put("k1", b"hello").unwrap();
+        assert_eq!(store.len(), 1);
+        assert_eq!(c.get("k1").unwrap(), b"hello");
+        assert_eq!(store.len(), 0);
+    }
+
+    #[test]
+    fn get_blocks_until_put() {
+        let store = MooncakeStore::spawn("127.0.0.1:0").unwrap();
+        let addr = store.addr().to_string();
+        let getter = std::thread::spawn(move || {
+            let mut c = StoreClient::connect(&addr).unwrap();
+            c.get("later").unwrap()
+        });
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        let mut c = StoreClient::connect(store.addr()).unwrap();
+        c.put("later", b"worth-the-wait").unwrap();
+        assert_eq!(getter.join().unwrap(), b"worth-the-wait");
+    }
+
+    #[test]
+    fn large_payload() {
+        let store = MooncakeStore::spawn("127.0.0.1:0").unwrap();
+        let mut c = StoreClient::connect(store.addr()).unwrap();
+        let big: Vec<u8> = (0..2_000_000u32).map(|i| i as u8).collect();
+        c.put("big", &big).unwrap();
+        assert_eq!(c.get("big").unwrap(), big);
+    }
+}

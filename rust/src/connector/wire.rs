@@ -1,0 +1,110 @@
+//! Wire format for [`StageItem`]s crossing shm/TCP connectors.
+//!
+//! Layout (little-endian):
+//! `magic u32 | req_id u64 | flags u8 | n_tensors u32 |`
+//! per tensor: `name_len u32 | name bytes | blob_len u64 | tensor blob`
+//! (tensor blob as produced by [`HostTensor::to_bytes`]).
+
+use anyhow::{bail, Result};
+
+use crate::engine::StageItem;
+use crate::runtime::HostTensor;
+
+const MAGIC: u32 = 0x4F4D4E49; // "OMNI"
+
+pub fn encode(item: &StageItem) -> Vec<u8> {
+    let mut out = Vec::with_capacity(64 + item.payload_bytes());
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.extend_from_slice(&item.req_id.to_le_bytes());
+    out.push(item.finished as u8);
+    out.extend_from_slice(&(item.tensors.len() as u32).to_le_bytes());
+    for (name, t) in &item.tensors {
+        out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        out.extend_from_slice(name.as_bytes());
+        let blob = t.to_bytes();
+        out.extend_from_slice(&(blob.len() as u64).to_le_bytes());
+        out.extend_from_slice(&blob);
+    }
+    out
+}
+
+pub fn decode(bytes: &[u8]) -> Result<StageItem> {
+    let mut pos = 0usize;
+    let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+        if *pos + n > bytes.len() {
+            bail!("wire: truncated at {} (+{n} > {})", *pos, bytes.len());
+        }
+        let s = &bytes[*pos..*pos + n];
+        *pos += n;
+        Ok(s)
+    };
+    let magic = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+    if magic != MAGIC {
+        bail!("wire: bad magic {magic:#x}");
+    }
+    let req_id = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
+    let finished = take(&mut pos, 1)?[0] != 0;
+    let n = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+    let mut item = StageItem::new(req_id);
+    item.finished = finished;
+    for _ in 0..n {
+        let name_len = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+        let name = String::from_utf8(take(&mut pos, name_len)?.to_vec())
+            .map_err(|_| anyhow::anyhow!("wire: non-utf8 tensor name"))?;
+        let blob_len = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap()) as usize;
+        let t = HostTensor::from_bytes(take(&mut pos, blob_len)?)?;
+        item.tensors.insert(name, t);
+    }
+    Ok(item)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::quick;
+
+    #[test]
+    fn roundtrip() {
+        let item = StageItem::new(42)
+            .with("a", HostTensor::f32(vec![2], vec![1.5, -2.5]))
+            .with("b", HostTensor::i32(vec![1, 3], vec![7, 8, 9]))
+            .finished();
+        let got = decode(&encode(&item)).unwrap();
+        assert_eq!(got.req_id, 42);
+        assert!(got.finished);
+        assert_eq!(got.tensors, item.tensors);
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let item = StageItem::new(1).with("a", HostTensor::f32(vec![4], vec![0.0; 4]));
+        let mut bytes = encode(&item);
+        bytes[0] ^= 0xFF; // magic
+        assert!(decode(&bytes).is_err());
+        let bytes2 = encode(&item);
+        assert!(decode(&bytes2[..bytes2.len() - 2]).is_err());
+    }
+
+    #[test]
+    fn prop_roundtrip_random_items() {
+        quick("wire_roundtrip", |rng| {
+            let mut item = StageItem::new(rng.next_u64());
+            item.finished = rng.bool(0.5);
+            for ti in 0..rng.range(0, 4) {
+                let n = rng.range(0, 16);
+                if rng.bool(0.5) {
+                    let v: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+                    item.tensors
+                        .insert(format!("t{ti}"), HostTensor::f32(vec![n], v));
+                } else {
+                    let v: Vec<i32> = (0..n).map(|_| rng.next_u64() as i32).collect();
+                    item.tensors
+                        .insert(format!("t{ti}"), HostTensor::i32(vec![n], v));
+                }
+            }
+            let got = decode(&encode(&item)).unwrap();
+            assert_eq!(got.req_id, item.req_id);
+            assert_eq!(got.tensors, item.tensors);
+        });
+    }
+}

@@ -1,0 +1,826 @@
+//! The AR engine core: scheduler + model runner, advanced by `step()`.
+
+use std::collections::VecDeque;
+
+use anyhow::{bail, Context, Result};
+
+use super::sampler;
+use super::sequence::{FinishReason, PromptItem, SeqPhase, Sequence};
+use super::{PREFILL_CHUNK, SCAN_STEPS};
+use crate::engine::{SamplingParams, StageItem};
+use crate::kv_cache::BlockManager;
+use crate::runtime::{Artifacts, HostTensor, StageRuntime};
+use crate::tokenizer::BOS_ID;
+
+/// How each sequence's conditioning vector is recomputed before every
+/// decode iteration (the paper's `process_input`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Preprocess {
+    /// No conditioning stream (Thinker, MiMo backbone).
+    None,
+    /// Running mean of upstream hidden rows (Talker default — the
+    /// "concatenate Thinker hidden states each step" summary).
+    UpstreamMean,
+    /// Most recent upstream hidden row.
+    UpstreamLast,
+}
+
+/// Engine construction options (derived from [`crate::config::StageConfig`]).
+#[derive(Debug, Clone)]
+pub struct ArEngineOptions {
+    pub max_batch: usize,
+    pub chunked_prefill: bool,
+    /// 1 = per-step decode; SCAN_STEPS = fused scan decode.
+    pub multi_step: usize,
+    /// Emit partial outputs every N tokens (0 = only on completion).
+    pub stream_chunk: usize,
+    pub preprocess: Preprocess,
+    /// KV pool size in blocks (admission accounting).
+    pub kv_blocks: usize,
+    pub kv_block_size: usize,
+    /// Baseline mode: evict compiled executables after every call, paying
+    /// compilation on the next one (eager-framework analog; §4 baselines).
+    pub lazy_compile: bool,
+    /// Emit hidden-state rows alongside tokens (needed when a downstream
+    /// stage consumes them; costs an extra d_model floats per token).
+    pub emit_hiddens: bool,
+}
+
+impl Default for ArEngineOptions {
+    fn default() -> Self {
+        Self {
+            max_batch: 4,
+            chunked_prefill: true,
+            multi_step: 1,
+            stream_chunk: 16,
+            preprocess: Preprocess::None,
+            kv_blocks: 512,
+            kv_block_size: 16,
+            lazy_compile: false,
+            emit_hiddens: true,
+        }
+    }
+}
+
+/// A request submitted to the engine.
+#[derive(Debug, Clone)]
+pub struct ArJob {
+    pub req_id: u64,
+    pub prompt: Vec<PromptItem>,
+    /// Embedding-stream rows `[n, emb_dim]` referenced by
+    /// `PromptItem::Embed` indices.
+    pub mm_embeds: Vec<f32>,
+    pub emb_dim: usize,
+    pub sampling: SamplingParams,
+}
+
+/// Aggregate engine counters (drained by benches / orchestrator).
+#[derive(Debug, Default, Clone)]
+pub struct EngineStats {
+    pub iterations: u64,
+    pub prefill_tokens: u64,
+    pub decode_tokens: u64,
+    pub prefill_calls: u64,
+    pub decode_calls: u64,
+    pub scan_calls: u64,
+    pub preemptions: u64,
+    pub exec_seconds: f64,
+    /// Seconds spent assembling/scattering batch KV (marshaling).
+    pub marshal_seconds: f64,
+}
+
+/// The engine.  Owns a thread-local PJRT runtime; not `Send` — run it on
+/// its own thread (see [`crate::orchestrator`]).
+pub struct ArEngine {
+    rt: StageRuntime,
+    opts: ArEngineOptions,
+    // Model dims (from the manifest).
+    d_model: usize,
+    n_layers: usize,
+    n_heads: usize,
+    d_head: usize,
+    max_seq: usize,
+    cond_dim: usize,
+    eos_id: u32,
+    // Scheduler state.
+    waiting: VecDeque<Sequence>,
+    slots: Vec<Option<Sequence>>,
+    /// Per-slot KV storage `[L, 2, H, S, dh]` row-major.
+    slot_kv: Vec<Vec<f32>>,
+    /// Batch-layout KV cache: the last executable's output KV kept in
+    /// `[L, 2, b, H, S, dh]` layout together with its slot mapping.
+    /// While batch membership is stable (the common case: a decode run
+    /// of hundreds of steps), assemble/scatter round trips are skipped
+    /// entirely — see EXPERIMENTS.md §Perf.
+    batch_kv: Option<(Vec<usize>, usize, Vec<f32>)>,
+    blocks: BlockManager,
+    iter: u64,
+    pub stats: EngineStats,
+}
+
+impl ArEngine {
+    pub fn new(artifacts: &Artifacts, model: &str, opts: ArEngineOptions) -> Result<Self> {
+        let rt = StageRuntime::new(artifacts, model)
+            .with_context(|| format!("creating AR engine for {model}"))?;
+        let spec = rt.model().clone();
+        let d_model = spec.cfg_usize("d_model")?;
+        let n_layers = spec.cfg_usize("n_layers")?;
+        let n_heads = spec.cfg_usize("n_heads")?;
+        let d_head = spec.cfg_usize("d_head")?;
+        let max_seq = spec.cfg_usize("max_seq")?;
+        let cond_dim = spec.cfg_usize("cond_dim").unwrap_or(0);
+        let eos_id = spec.cfg_usize("eos_id").unwrap_or(2) as u32;
+        let slot_len = n_layers * 2 * n_heads * max_seq * d_head;
+        let max_batch = opts.max_batch;
+        let blocks = BlockManager::new(opts.kv_blocks, opts.kv_block_size);
+        let mut eng = Self {
+            rt,
+            opts,
+            d_model,
+            n_layers,
+            n_heads,
+            d_head,
+            max_seq,
+            cond_dim,
+            eos_id,
+            waiting: VecDeque::new(),
+            slots: (0..max_batch).map(|_| None).collect(),
+            slot_kv: (0..max_batch).map(|_| vec![0.0f32; slot_len]).collect(),
+            batch_kv: None,
+            blocks,
+            iter: 0,
+            stats: EngineStats::default(),
+        };
+        if !eng.opts.lazy_compile {
+            eng.precompile()?;
+        }
+        Ok(eng)
+    }
+
+    /// Compile the entries the configured policy will use.
+    fn precompile(&mut self) -> Result<()> {
+        let mut entries = vec![];
+        for b in self.rt.model().buckets("decode") {
+            if b <= self.opts.max_batch.next_power_of_two() {
+                entries.push(format!("decode.b{b}"));
+            }
+        }
+        for b in self.rt.model().buckets("prefill") {
+            if b <= self.opts.max_batch.next_power_of_two() {
+                entries.push(format!("prefill.b{b}.c{PREFILL_CHUNK}"));
+            }
+        }
+        if self.opts.multi_step > 1 {
+            for b in self.rt.model().buckets("scan") {
+                if b <= self.opts.max_batch.next_power_of_two() {
+                    entries.push(format!("scan.b{b}.k{SCAN_STEPS}"));
+                }
+            }
+        }
+        self.rt.precompile(&entries)
+    }
+
+    pub fn model_name(&self) -> &str {
+        &self.rt.model().name
+    }
+
+    pub fn d_model(&self) -> usize {
+        self.d_model
+    }
+
+    pub fn cond_dim(&self) -> usize {
+        self.cond_dim
+    }
+
+    pub fn max_seq(&self) -> usize {
+        self.max_seq
+    }
+
+    /// Submit a new request.
+    pub fn submit(&mut self, job: ArJob) {
+        let seq = Sequence::new(job.req_id, job.prompt, job.mm_embeds, job.emb_dim, job.sampling);
+        self.waiting.push_back(seq);
+    }
+
+    /// Feed upstream hidden rows for a request's conditioning stream
+    /// (whether waiting or running).
+    pub fn push_upstream(&mut self, req_id: u64, rows: &[f32], dim: usize, complete: bool) {
+        for seq in self
+            .waiting
+            .iter_mut()
+            .chain(self.slots.iter_mut().flatten())
+        {
+            if seq.id == req_id {
+                if !rows.is_empty() {
+                    seq.upstream.push_rows(rows, dim);
+                }
+                seq.upstream.complete |= complete;
+                return;
+            }
+        }
+    }
+
+    /// Anything left to do?
+    pub fn idle(&self) -> bool {
+        self.waiting.is_empty() && self.slots.iter().all(|s| s.is_none())
+    }
+
+    pub fn queued(&self) -> usize {
+        self.waiting.len()
+    }
+
+    pub fn running(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    // ------------------------------------------------------------------
+    // Scheduler iteration
+    // ------------------------------------------------------------------
+
+    /// Advance one engine iteration; returns emitted stage items.
+    pub fn step(&mut self) -> Result<Vec<StageItem>> {
+        self.iter += 1;
+        self.stats.iterations += 1;
+        let mut out = Vec::new();
+
+        self.admit();
+
+        // 1) prefill phase (one chunk per prefilling sequence).
+        let prefilling: Vec<usize> = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| matches!(s, Some(q) if matches!(q.phase, SeqPhase::Prefill(_))))
+            .map(|(i, _)| i)
+            .take(self.rt.model().buckets("prefill").last().copied().unwrap_or(1))
+            .collect();
+        if !prefilling.is_empty() {
+            self.run_prefill(&prefilling, &mut out)?;
+            if !self.opts.chunked_prefill {
+                // Non-chunked mode: keep prefilling until all prompts are
+                // fully in cache before any decode runs (HF-style stall).
+                while self
+                    .slots
+                    .iter()
+                    .any(|s| matches!(s, Some(q) if matches!(q.phase, SeqPhase::Prefill(_))))
+                {
+                    let again: Vec<usize> = self
+                        .slots
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, s)| {
+                            matches!(s, Some(q) if matches!(q.phase, SeqPhase::Prefill(_)))
+                        })
+                        .map(|(i, _)| i)
+                        .collect();
+                    self.run_prefill(&again, &mut out)?;
+                }
+            }
+        }
+
+        // 2) decode phase.
+        let decoding: Vec<usize> = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| matches!(s, Some(q) if q.phase == SeqPhase::Decode))
+            .map(|(i, _)| i)
+            .collect();
+        if !decoding.is_empty() {
+            let use_scan = self.opts.multi_step > 1
+                && decoding.iter().all(|&i| {
+                    let s = self.slots[i].as_ref().unwrap();
+                    s.sampling.temperature <= 0.0
+                        && s.sampling.max_new_tokens.saturating_sub(s.generated.len())
+                            >= SCAN_STEPS
+                        && s.prompt_len() + s.generated.len() + SCAN_STEPS < self.max_seq
+                });
+            if use_scan {
+                self.run_scan(&decoding, &mut out)?;
+            } else {
+                self.run_decode(&decoding, &mut out)?;
+            }
+        }
+
+        Ok(out)
+    }
+
+    /// Run until every submitted request has completed; returns all items.
+    pub fn run_to_completion(&mut self) -> Result<Vec<StageItem>> {
+        let mut all = Vec::new();
+        while !self.idle() {
+            let items = self.step()?;
+            all.extend(items);
+        }
+        Ok(all)
+    }
+
+    fn admit(&mut self) {
+        while let Some(front) = self.waiting.front() {
+            let Some(slot) = self.slots.iter().position(|s| s.is_none()) else { break };
+            let worst_case = front.prompt_len() + front.sampling.max_new_tokens + 1;
+            if !self.blocks.can_allocate(worst_case.min(self.max_seq)) {
+                break;
+            }
+            let mut seq = self.waiting.pop_front().unwrap();
+            let hash_tokens = prompt_hash_tokens(&seq);
+            match self.blocks.allocate_prompt(&hash_tokens) {
+                Ok(table) => {
+                    seq.block_table = table;
+                    seq.phase = SeqPhase::Prefill(0);
+                    seq.admitted_iter = self.iter;
+                    // The slot's KV may live in the batch cache; flush
+                    // before clearing so neighbours are preserved.
+                    self.flush_batch_kv();
+                    self.slot_kv[slot].iter_mut().for_each(|x| *x = 0.0);
+                    self.slots[slot] = Some(seq);
+                }
+                Err(_) => {
+                    self.waiting.push_front(seq);
+                    break;
+                }
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Prefill
+    // ------------------------------------------------------------------
+
+    fn run_prefill(&mut self, slot_ids: &[usize], out: &mut Vec<StageItem>) -> Result<()> {
+        let b = self.bucket_for("prefill", slot_ids.len())?;
+        let ids = &slot_ids[..slot_ids.len().min(b)];
+        let c = PREFILL_CHUNK;
+        let emb_dim = if self.cond_dim > 0 { self.cond_dim } else { self.d_model };
+
+        let mut tokens = vec![0i32; b * c];
+        let mut mm = vec![0f32; b * c * emb_dim];
+        let mut mask = vec![0f32; b * c];
+        let mut base = vec![0i32; b];
+        for (bi, &sid) in ids.iter().enumerate() {
+            let seq = self.slots[sid].as_ref().unwrap();
+            let SeqPhase::Prefill(done) = seq.phase else { unreachable!() };
+            base[bi] = done as i32;
+            for ci in 0..c {
+                let idx = done + ci;
+                if idx >= seq.prompt_len() {
+                    break;
+                }
+                match seq.prompt[idx] {
+                    PromptItem::Token(t) => tokens[bi * c + ci] = t as i32,
+                    PromptItem::Embed(row) => {
+                        mask[bi * c + ci] = 1.0;
+                        let src = &seq.mm_embeds[row * seq.emb_dim..(row + 1) * seq.emb_dim];
+                        debug_assert_eq!(seq.emb_dim, emb_dim);
+                        mm[(bi * c + ci) * emb_dim..(bi * c + ci + 1) * emb_dim]
+                            .copy_from_slice(src);
+                    }
+                }
+            }
+        }
+
+        let kv = self.assemble_kv(ids, b);
+        let entry = format!("prefill.b{b}.c{c}");
+        let inputs = vec![
+            HostTensor::i32(vec![b, c], tokens),
+            HostTensor::f32(vec![b, c, emb_dim], mm),
+            HostTensor::f32(vec![b, c], mask),
+            kv,
+            HostTensor::i32(vec![b], base),
+        ];
+        let mut outputs = self.execute(&entry, &inputs)?;
+        let logits = outputs[0].as_f32()?.to_vec();
+        let hidden = outputs[1].as_f32()?.to_vec();
+        let vocab = outputs[0].shape[2];
+        self.store_batch_kv(ids, b, outputs.remove(2))?;
+
+        for (bi, &sid) in ids.iter().enumerate() {
+            let seq = self.slots[sid].as_mut().unwrap();
+            let SeqPhase::Prefill(done) = seq.phase else { unreachable!() };
+            let remaining = seq.prompt_len() - done;
+            let consumed = remaining.min(c);
+            self.stats.prefill_tokens += consumed as u64;
+            if remaining <= c {
+                // Final chunk: sample the first token from the last real
+                // prompt position's logits.
+                let last_row = remaining - 1;
+                let row =
+                    &logits[(bi * c + last_row) * vocab..(bi * c + last_row + 1) * vocab];
+                let tok = sampler::sample(
+                    row,
+                    seq.sampling.temperature,
+                    seq.sampling.top_k,
+                    &mut seq.prng,
+                );
+                seq.generated.push(tok);
+                if self.opts.emit_hiddens {
+                    let h = &hidden
+                        [(bi * c + last_row) * self.d_model..(bi * c + last_row + 1) * self.d_model];
+                    seq.hiddens.extend_from_slice(h);
+                }
+                seq.phase = SeqPhase::Decode;
+                // Account the generated token's cache row.
+                let mut table = std::mem::take(&mut seq.block_table);
+                let grew = self.blocks.append_token(&mut table);
+                self.slots[sid].as_mut().unwrap().block_table = table;
+                if grew.is_err() {
+                    self.preempt_for(sid)?;
+                }
+                // EOS straight out of prefill.
+                self.post_token_checks(sid, out);
+            } else {
+                seq.phase = SeqPhase::Prefill(done + consumed);
+            }
+        }
+        self.stats.prefill_calls += 1;
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Decode (per-step)
+    // ------------------------------------------------------------------
+
+    fn run_decode(&mut self, slot_ids: &[usize], out: &mut Vec<StageItem>) -> Result<()> {
+        let b = self.bucket_for("decode", slot_ids.len())?;
+        // Oversized active sets are processed in bucket-size groups.
+        for group in slot_ids.chunks(b) {
+            self.run_decode_group(group, b, out)?;
+        }
+        Ok(())
+    }
+
+    fn run_decode_group(&mut self, ids: &[usize], b: usize, out: &mut Vec<StageItem>) -> Result<()> {
+        let mut token = vec![0i32; b];
+        let mut length = vec![0i32; b];
+        let mut cond = vec![0f32; b * self.cond_dim.max(1)];
+        for (bi, &sid) in ids.iter().enumerate() {
+            // Preprocess hook: recompute conditioning every iteration.
+            self.apply_preprocess(sid);
+            let seq = self.slots[sid].as_ref().unwrap();
+            token[bi] = seq.next_input_token() as i32;
+            length[bi] = (seq.prompt_len() + seq.generated.len() - 1) as i32;
+            if self.cond_dim > 0 {
+                cond[bi * self.cond_dim..(bi + 1) * self.cond_dim].copy_from_slice(&seq.cond);
+            }
+        }
+        let kv = self.assemble_kv(ids, b);
+        let entry = format!("decode.b{b}");
+        let mut inputs = vec![HostTensor::i32(vec![b], token)];
+        if self.cond_dim > 0 {
+            inputs.push(HostTensor::f32(vec![b, self.cond_dim], cond));
+        }
+        inputs.push(kv);
+        inputs.push(HostTensor::i32(vec![b], length));
+        let mut outputs = self.execute(&entry, &inputs)?;
+        let kv_out = outputs.remove(2);
+        let logits = outputs[0].as_f32()?;
+        let hidden = outputs[1].as_f32()?;
+        let vocab = outputs[0].shape[1];
+        self.store_batch_kv(ids, b, kv_out)?;
+
+        for (bi, &sid) in ids.iter().enumerate() {
+            let seq = self.slots[sid].as_mut().unwrap();
+            let row = &logits[bi * vocab..(bi + 1) * vocab];
+            let tok =
+                sampler::sample(row, seq.sampling.temperature, seq.sampling.top_k, &mut seq.prng);
+            seq.generated.push(tok);
+            if self.opts.emit_hiddens {
+                seq.hiddens
+                    .extend_from_slice(&hidden[bi * self.d_model..(bi + 1) * self.d_model]);
+            }
+            self.stats.decode_tokens += 1;
+            let mut table = std::mem::take(&mut seq.block_table);
+            let grew = self.blocks.append_token(&mut table);
+            self.slots[sid].as_mut().unwrap().block_table = table;
+            if grew.is_err() {
+                self.preempt_for(sid)?;
+            }
+            self.post_token_checks(sid, out);
+        }
+        self.stats.decode_calls += 1;
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Decode (fused multi-step scan)
+    // ------------------------------------------------------------------
+
+    fn run_scan(&mut self, slot_ids: &[usize], out: &mut Vec<StageItem>) -> Result<()> {
+        let b = self.bucket_for("scan", slot_ids.len())?;
+        for group in slot_ids.chunks(b) {
+            self.run_scan_group(group, b, out)?;
+        }
+        Ok(())
+    }
+
+    fn run_scan_group(&mut self, ids: &[usize], b: usize, out: &mut Vec<StageItem>) -> Result<()> {
+        let k = SCAN_STEPS;
+        let mut token = vec![0i32; b];
+        let mut length = vec![0i32; b];
+        let mut active = vec![0f32; b];
+        let mut cond = vec![0f32; b * self.cond_dim.max(1)];
+        let mut eos = vec![0i32; b];
+        for (bi, &sid) in ids.iter().enumerate() {
+            self.apply_preprocess(sid);
+            let seq = self.slots[sid].as_ref().unwrap();
+            token[bi] = seq.next_input_token() as i32;
+            length[bi] = (seq.prompt_len() + seq.generated.len() - 1) as i32;
+            active[bi] = 1.0;
+            // ignore_eos: pass an unreachable id so the scan never freezes.
+            eos[bi] = if seq.sampling.ignore_eos { -1 } else { self.eos_id as i32 };
+            if self.cond_dim > 0 {
+                cond[bi * self.cond_dim..(bi + 1) * self.cond_dim].copy_from_slice(&seq.cond);
+            }
+        }
+        let kv = self.assemble_kv(ids, b);
+        let entry = format!("scan.b{b}.k{k}");
+        let mut inputs = vec![HostTensor::i32(vec![b], token)];
+        if self.cond_dim > 0 {
+            inputs.push(HostTensor::f32(vec![b, self.cond_dim], cond));
+        }
+        inputs.push(kv);
+        inputs.push(HostTensor::i32(vec![b], length));
+        inputs.push(HostTensor::f32(vec![b], active));
+        inputs.push(HostTensor::i32(vec![b], eos));
+        let mut outputs = self.execute(&entry, &inputs)?;
+        let kv_out = outputs.remove(2);
+        let toks = outputs[0].as_i32()?;
+        let hiddens = outputs[1].as_f32()?;
+        self.store_batch_kv(ids, b, kv_out)?;
+
+        for (bi, &sid) in ids.iter().enumerate() {
+            let seq = self.slots[sid].as_mut().unwrap();
+            let mut stopped = false;
+            for ki in 0..k {
+                let t = toks[bi * k + ki];
+                if stopped {
+                    break;
+                }
+                let tok = t as u32;
+                seq.generated.push(tok);
+                if self.opts.emit_hiddens {
+                    let off = (bi * k + ki) * self.d_model;
+                    seq.hiddens.extend_from_slice(&hiddens[off..off + self.d_model]);
+                }
+                self.stats.decode_tokens += 1;
+                if !seq.sampling.ignore_eos && tok == self.eos_id {
+                    stopped = true;
+                }
+                let mut table = std::mem::take(&mut seq.block_table);
+                let grew = self.blocks.append_token(&mut table);
+                seq.block_table = table;
+                if grew.is_err() {
+                    self.preempt_for(sid)?;
+                    break;
+                }
+            }
+            self.post_token_checks(sid, out);
+        }
+        self.stats.scan_calls += 1;
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Bookkeeping
+    // ------------------------------------------------------------------
+
+    fn apply_preprocess(&mut self, sid: usize) {
+        if self.cond_dim == 0 {
+            return;
+        }
+        let seq = self.slots[sid].as_mut().unwrap();
+        seq.cond = match self.opts.preprocess {
+            Preprocess::None => vec![0.0; self.cond_dim],
+            Preprocess::UpstreamMean => seq.upstream.mean(self.cond_dim),
+            Preprocess::UpstreamLast => {
+                if seq.upstream.rows > 0 {
+                    seq.upstream.last.clone()
+                } else {
+                    vec![0.0; self.cond_dim]
+                }
+            }
+        };
+    }
+
+    /// EOS / cap checks + streaming + completion for a slot.
+    fn post_token_checks(&mut self, sid: usize, out: &mut Vec<StageItem>) {
+        let Some(seq) = self.slots[sid].as_mut() else { return };
+        if seq.phase == SeqPhase::Done {
+            return;
+        }
+        let total = seq.prompt_len() + seq.generated.len();
+        if !seq.sampling.ignore_eos && seq.generated.last() == Some(&self.eos_id) {
+            seq.finish_reason = Some(FinishReason::Eos);
+            seq.phase = SeqPhase::Done;
+        } else if seq.generated.len() >= seq.sampling.max_new_tokens {
+            seq.finish_reason = Some(FinishReason::MaxTokens);
+            seq.phase = SeqPhase::Done;
+        } else if total + 1 >= self.max_seq {
+            seq.finish_reason = Some(FinishReason::CacheCap);
+            seq.phase = SeqPhase::Done;
+        }
+        let done = seq.phase == SeqPhase::Done;
+        let should_stream = self.opts.stream_chunk > 0
+            && seq.generated.len() - seq.streamed >= self.opts.stream_chunk;
+        if done || should_stream {
+            out.push(self.make_item(sid, done));
+        }
+        if done {
+            let seq = self.slots[sid].take().unwrap();
+            self.blocks.release(&seq.block_table);
+        }
+    }
+
+    fn make_item(&mut self, sid: usize, finished: bool) -> StageItem {
+        let seq = self.slots[sid].as_mut().unwrap();
+        let from = seq.streamed;
+        let to = seq.generated.len();
+        let toks: Vec<i32> = seq.generated[from..to].iter().map(|&t| t as i32).collect();
+        let mut item = StageItem::new(seq.id)
+            .with("tokens", HostTensor::i32(vec![to - from], toks));
+        if self.opts.emit_hiddens {
+            let h = seq.hiddens[from * self.d_model..to * self.d_model].to_vec();
+            item = item.with("hiddens", HostTensor::f32(vec![to - from, self.d_model], h));
+        }
+        seq.streamed = to;
+        if finished {
+            item = item.finished();
+        }
+        item
+    }
+
+    /// Preempt the youngest running sequence to free KV blocks (recompute
+    /// preemption).  `for_sid` is the slot that failed to grow; if it is
+    /// itself the only candidate it finishes with `CacheCap`.
+    fn preempt_for(&mut self, for_sid: usize) -> Result<()> {
+        self.stats.preemptions += 1;
+        let youngest = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter(|(i, s)| *i != for_sid && s.is_some())
+            .max_by_key(|(_, s)| s.as_ref().unwrap().admitted_iter)
+            .map(|(i, _)| i);
+        match youngest {
+            Some(v) => {
+                let mut seq = self.slots[v].take().unwrap();
+                self.blocks.release(&seq.block_table);
+                seq.block_table = Default::default();
+                seq.phase = SeqPhase::Waiting;
+                seq.generated.clear();
+                seq.hiddens.clear();
+                seq.streamed = 0;
+                self.waiting.push_front(seq);
+                // Retry the failed growth for the original slot.
+                if let Some(seq) = self.slots[for_sid].as_mut() {
+                    // The failed append neither allocated nor counted, so
+                    // retrying it is clean.
+                    let mut table = std::mem::take(&mut seq.block_table);
+                    let r = self.blocks.append_token(&mut table);
+                    self.slots[for_sid].as_mut().unwrap().block_table = table;
+                    if r.is_err() {
+                        return self.preempt_for(for_sid);
+                    }
+                }
+                Ok(())
+            }
+            None => {
+                if let Some(seq) = self.slots[for_sid].as_mut() {
+                    seq.finish_reason = Some(FinishReason::CacheCap);
+                    seq.phase = SeqPhase::Done;
+                }
+                Ok(())
+            }
+        }
+    }
+
+    fn bucket_for(&self, family: &str, n: usize) -> Result<usize> {
+        let buckets = self.rt.model().buckets(family);
+        buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+            .or(buckets.last().copied())
+            .ok_or_else(|| anyhow::anyhow!("no {family} buckets for {}", self.model_name()))
+    }
+
+    fn execute(&mut self, entry: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let t0 = std::time::Instant::now();
+        let r = self.rt.run(entry, inputs);
+        self.stats.exec_seconds += t0.elapsed().as_secs_f64();
+        r
+    }
+
+    /// Drop every compiled executable (the baseline's per-request
+    /// recompilation mode — no cross-request graph reuse).
+    pub fn evict_compiled(&mut self) {
+        self.rt.evict_all();
+    }
+
+    // ------------------------------------------------------------------
+    // KV marshaling: slot store <-> bucket-shaped batch tensor
+    // ------------------------------------------------------------------
+
+    fn kv_chunk(&self) -> usize {
+        self.n_heads * self.max_seq * self.d_head
+    }
+
+    /// Build the `[L, 2, b, H, S, dh]` input KV for a batch call.  Fast
+    /// path: if the previous call had the same slot mapping, its output
+    /// is reused verbatim (zero copies).
+    fn assemble_kv(&mut self, ids: &[usize], b: usize) -> HostTensor {
+        let t0 = std::time::Instant::now();
+        let shape = vec![self.n_layers, 2, b, self.n_heads, self.max_seq, self.d_head];
+        // §Perf escape hatch: OMNI_DISABLE_BATCH_KV=1 forces the original
+        // assemble/scatter-every-step path (before/after measurements).
+        if std::env::var_os("OMNI_DISABLE_BATCH_KV").is_some() {
+            self.flush_batch_kv();
+        }
+        if let Some((cached_ids, cached_b, _)) = &self.batch_kv {
+            if cached_ids == ids && *cached_b == b {
+                let (_, _, data) = self.batch_kv.take().unwrap();
+                self.stats.marshal_seconds += t0.elapsed().as_secs_f64();
+                return HostTensor::f32(shape, data);
+            }
+        }
+        // Slow path: membership changed — flush the cache into slots,
+        // then gather the requested slots.
+        self.flush_batch_kv();
+        let chunk = self.kv_chunk();
+        let lk = self.n_layers * 2;
+        let mut out = vec![0f32; lk * b * chunk];
+        for li in 0..lk {
+            for (bi, &sid) in ids.iter().enumerate() {
+                let src = &self.slot_kv[sid][li * chunk..(li + 1) * chunk];
+                out[(li * b + bi) * chunk..(li * b + bi + 1) * chunk].copy_from_slice(src);
+            }
+        }
+        self.stats.marshal_seconds += t0.elapsed().as_secs_f64();
+        HostTensor::f32(shape, out)
+    }
+
+    /// Record a call's output KV in batch layout (deferred scatter).
+    fn store_batch_kv(&mut self, ids: &[usize], b: usize, kv: HostTensor) -> Result<()> {
+        let chunk = self.kv_chunk();
+        let lk = self.n_layers * 2;
+        let data = match kv.data {
+            crate::runtime::TensorData::F32(v) => v,
+            _ => bail!("store_batch_kv: kv must be f32"),
+        };
+        if data.len() != lk * b * chunk {
+            bail!("store_batch_kv: unexpected kv size {}", data.len());
+        }
+        self.batch_kv = Some((ids.to_vec(), b, data));
+        Ok(())
+    }
+
+    /// Write the cached batch-layout KV back into per-slot storage
+    /// (called when membership changes or a slot is re-used).
+    fn flush_batch_kv(&mut self) {
+        let Some((ids, b, data)) = self.batch_kv.take() else { return };
+        let t0 = std::time::Instant::now();
+        let chunk = self.kv_chunk();
+        let lk = self.n_layers * 2;
+        for li in 0..lk {
+            for (bi, &sid) in ids.iter().enumerate() {
+                let src = &data[(li * b + bi) * chunk..(li * b + bi + 1) * chunk];
+                self.slot_kv[sid][li * chunk..(li + 1) * chunk].copy_from_slice(src);
+            }
+        }
+        self.stats.marshal_seconds += t0.elapsed().as_secs_f64();
+    }
+}
+
+/// Token vector used for block-table hashing: real tokens hash as
+/// themselves (prefix sharing), embed rows hash uniquely per request so
+/// multimodal prefixes never falsely share.
+fn prompt_hash_tokens(seq: &Sequence) -> Vec<u32> {
+    seq.prompt
+        .iter()
+        .map(|p| match p {
+            PromptItem::Token(t) => *t,
+            PromptItem::Embed(i) => {
+                0x8000_0000u32 | ((seq.id as u32).wrapping_mul(2654435761) ^ (*i as u32))
+            }
+        })
+        .collect()
+}
+
+/// Convenience: build an [`ArJob`] from a plain token prompt.
+pub fn token_job(req_id: u64, tokens: &[u32], sampling: SamplingParams) -> ArJob {
+    ArJob {
+        req_id,
+        prompt: tokens.iter().map(|&t| PromptItem::Token(t)).collect(),
+        mm_embeds: vec![],
+        emb_dim: 0,
+        sampling,
+    }
+}
+
+/// Convenience: prompt = BOS + embedding rows (Talker-style).
+pub fn embed_job(req_id: u64, rows: &[f32], dim: usize, sampling: SamplingParams) -> ArJob {
+    let n = if dim == 0 { 0 } else { rows.len() / dim };
+    let mut prompt = vec![PromptItem::Token(BOS_ID)];
+    prompt.extend((0..n).map(PromptItem::Embed));
+    ArJob { req_id, prompt, mm_embeds: rows.to_vec(), emb_dim: dim, sampling }
+}

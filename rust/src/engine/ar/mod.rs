@@ -1,0 +1,32 @@
+//! vLLM-like autoregressive engine (paper §3.3 "AR stage support").
+//!
+//! Serves one AR model stage with:
+//! * **continuous batching** — sequences join/leave the running batch at
+//!   every iteration (Orca-style), with bucketed executables;
+//! * **chunked prefill** — prompts enter the cache in fixed-size chunks
+//!   interleaved with decode iterations (Sarathi-style);
+//! * **paged-KV admission & preemption** — [`crate::kv_cache`] gates
+//!   admission; on pool exhaustion the youngest sequence is preempted and
+//!   recomputed (vLLM recompute-preemption);
+//! * **per-iteration preprocess** — a hook recomputes each sequence's
+//!   conditioning vector before every decode step (the paper's
+//!   `process_input`, e.g. Talker consuming Thinker hidden states);
+//! * **multi-step fused decode** — `multi_step > 1` replays the AOT
+//!   `scan` executable, amortizing per-step dispatch + KV marshaling
+//!   ("execution-graph compilation" mode);
+//! * **streaming stage output** — partial outputs emitted every
+//!   `stream_chunk` tokens so downstream stages overlap (paper §3.3).
+
+pub mod core;
+pub mod sampler;
+pub mod sequence;
+
+pub use core::{embed_job, token_job, ArEngine, ArEngineOptions, ArJob, EngineStats, Preprocess};
+pub use sequence::{PromptItem, SeqPhase, Sequence};
+
+/// Decode steps fused by the AOT scan executable (lockstep with
+/// `python/compile/configs.py::SCAN_STEPS`).
+pub const SCAN_STEPS: usize = 8;
+
+/// Prefill chunk size (lockstep with `configs.py::PREFILL_CHUNK`).
+pub const PREFILL_CHUNK: usize = 32;

@@ -1,0 +1,107 @@
+//! Token sampling for AR stages: greedy, temperature, and top-k.
+
+use crate::util::Prng;
+
+/// Sample one token from a logits row.
+pub fn sample(logits: &[f32], temperature: f32, top_k: usize, rng: &mut Prng) -> u32 {
+    if temperature <= 0.0 {
+        return argmax(logits);
+    }
+    // Collect candidate (index, logit) pairs, top-k if requested.
+    let mut idx: Vec<u32> = (0..logits.len() as u32).collect();
+    if top_k > 0 && top_k < logits.len() {
+        idx.select_nth_unstable_by(top_k - 1, |&a, &b| {
+            logits[b as usize].partial_cmp(&logits[a as usize]).unwrap()
+        });
+        idx.truncate(top_k);
+    }
+    // Softmax over candidates at the given temperature.
+    let max = idx.iter().map(|&i| logits[i as usize]).fold(f32::NEG_INFINITY, f32::max);
+    let mut probs: Vec<f64> = idx
+        .iter()
+        .map(|&i| (((logits[i as usize] - max) / temperature) as f64).exp())
+        .collect();
+    let sum: f64 = probs.iter().sum();
+    for p in &mut probs {
+        *p /= sum;
+    }
+    let mut u = rng.f64();
+    for (i, &p) in probs.iter().enumerate() {
+        if u < p {
+            return idx[i];
+        }
+        u -= p;
+    }
+    *idx.last().unwrap()
+}
+
+pub fn argmax(logits: &[f32]) -> u32 {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::quick;
+
+    #[test]
+    fn greedy_is_argmax() {
+        let logits = [0.1, 2.0, -1.0, 1.9];
+        let mut rng = Prng::new(0);
+        assert_eq!(sample(&logits, 0.0, 0, &mut rng), 1);
+    }
+
+    #[test]
+    fn low_temperature_concentrates() {
+        let logits = [0.0, 5.0, 0.0, 0.0];
+        let mut rng = Prng::new(1);
+        let mut hits = 0;
+        for _ in 0..200 {
+            if sample(&logits, 0.1, 0, &mut rng) == 1 {
+                hits += 1;
+            }
+        }
+        assert!(hits > 195, "hits {hits}");
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        let logits = [10.0, 9.0, -50.0, -60.0];
+        let mut rng = Prng::new(2);
+        for _ in 0..100 {
+            let t = sample(&logits, 1.0, 2, &mut rng);
+            assert!(t == 0 || t == 1, "sampled {t}");
+        }
+    }
+
+    #[test]
+    fn high_temperature_spreads() {
+        let logits = [1.0, 1.0, 1.0, 1.0];
+        let mut rng = Prng::new(3);
+        let mut seen = [false; 4];
+        for _ in 0..200 {
+            seen[sample(&logits, 1.0, 0, &mut rng) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "{seen:?}");
+    }
+
+    #[test]
+    fn prop_sample_in_vocab() {
+        quick("sampler_in_vocab", |rng| {
+            let n = rng.range(1, 64);
+            let logits: Vec<f32> = (0..n).map(|_| (rng.f32() - 0.5) * 10.0).collect();
+            let temp = if rng.bool(0.5) { 0.0 } else { rng.f32() * 2.0 };
+            let top_k = rng.range(0, n + 2);
+            let t = sample(&logits, temp, top_k, rng);
+            assert!((t as usize) < n);
+        });
+    }
+}

@@ -1,0 +1,193 @@
+//! Per-sequence state for the AR engine.
+
+use crate::engine::SamplingParams;
+use crate::kv_cache::BlockTable;
+use crate::util::Prng;
+
+/// One element of the prompt stream: a vocabulary token or a row of the
+/// embedding stream (multimodal encoder output / upstream hidden state).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PromptItem {
+    Token(u32),
+    /// Index into the request's `mm_embeds` rows.
+    Embed(usize),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SeqPhase {
+    /// Waiting for admission.
+    Waiting,
+    /// Prefilling; `usize` = prompt items already in cache.
+    Prefill(usize),
+    /// Decoding.
+    Decode,
+    /// Finished (EOS / caps); terminal.
+    Done,
+}
+
+/// Why a sequence stopped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    Eos,
+    MaxTokens,
+    CacheCap,
+}
+
+#[derive(Debug)]
+pub struct Sequence {
+    pub id: u64,
+    pub prompt: Vec<PromptItem>,
+    /// Embedding-stream rows, row-major `[n_rows, emb_dim]`.
+    pub mm_embeds: Vec<f32>,
+    pub emb_dim: usize,
+    pub sampling: SamplingParams,
+    pub phase: SeqPhase,
+    /// Generated token ids.
+    pub generated: Vec<u32>,
+    /// Hidden state per generated token, row-major `[n, d_model]`
+    /// (streamed to downstream stages, e.g. Thinker -> Talker).
+    pub hiddens: Vec<f32>,
+    /// Tokens already streamed out.
+    pub streamed: usize,
+    /// KV accounting table (admission handled by the engine).
+    pub block_table: BlockTable,
+    /// Conditioning summary (cond_dim floats) recomputed by the
+    /// preprocess hook before every decode iteration.
+    pub cond: Vec<f32>,
+    /// Upstream hidden rows received so far (for cond computation),
+    /// row-major `[n, upstream_dim]`, plus running sum for O(1) mean.
+    pub upstream: UpstreamBuffer,
+    pub finish_reason: Option<FinishReason>,
+    pub prng: Prng,
+    /// Engine-iteration timestamp of admission (for fairness metrics).
+    pub admitted_iter: u64,
+}
+
+impl Sequence {
+    pub fn new(id: u64, prompt: Vec<PromptItem>, mm_embeds: Vec<f32>, emb_dim: usize, sampling: SamplingParams) -> Self {
+        let seed = sampling.seed ^ id.wrapping_mul(0x9E3779B97F4A7C15);
+        Self {
+            id,
+            prompt,
+            mm_embeds,
+            emb_dim,
+            sampling,
+            phase: SeqPhase::Waiting,
+            generated: Vec::new(),
+            hiddens: Vec::new(),
+            streamed: 0,
+            block_table: BlockTable::default(),
+            cond: Vec::new(),
+            upstream: UpstreamBuffer::default(),
+            finish_reason: None,
+            prng: Prng::new(seed),
+            admitted_iter: 0,
+        }
+    }
+
+    pub fn prompt_len(&self) -> usize {
+        self.prompt.len()
+    }
+
+    /// Total tokens in cache once fully prefetched + generated.
+    pub fn cache_len(&self) -> usize {
+        match self.phase {
+            SeqPhase::Waiting => 0,
+            SeqPhase::Prefill(done) => done,
+            SeqPhase::Decode | SeqPhase::Done => self.prompt_len() + self.generated.len(),
+        }
+    }
+
+    /// The token fed to the next decode step (last generated, or a BOS-
+    /// like start token after prefill).
+    pub fn next_input_token(&self) -> u32 {
+        *self.generated.last().unwrap_or(&crate::tokenizer::BOS_ID)
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.phase == SeqPhase::Done
+    }
+}
+
+/// Accumulates upstream hidden rows and exposes an O(1) running mean —
+/// the "concatenate Thinker hidden states at every decoding step"
+/// summary (see DESIGN.md: running mean instead of full concat).
+#[derive(Debug, Default)]
+pub struct UpstreamBuffer {
+    pub rows: usize,
+    pub dim: usize,
+    sum: Vec<f32>,
+    pub last: Vec<f32>,
+    /// Upstream stage finished producing.
+    pub complete: bool,
+}
+
+impl UpstreamBuffer {
+    pub fn push_rows(&mut self, data: &[f32], dim: usize) {
+        assert!(dim > 0 && data.len() % dim == 0, "bad upstream rows");
+        if self.dim == 0 {
+            self.dim = dim;
+            self.sum = vec![0.0; dim];
+            self.last = vec![0.0; dim];
+        }
+        assert_eq!(self.dim, dim, "upstream dim changed");
+        for row in data.chunks_exact(dim) {
+            for (s, &x) in self.sum.iter_mut().zip(row) {
+                *s += x;
+            }
+            self.rows += 1;
+        }
+        if let Some(last) = data.chunks_exact(dim).last() {
+            self.last.copy_from_slice(last);
+        }
+    }
+
+    /// Running mean (zeros if nothing received yet).
+    pub fn mean(&self, dim: usize) -> Vec<f32> {
+        if self.rows == 0 {
+            return vec![0.0; dim];
+        }
+        assert_eq!(dim, self.dim);
+        self.sum.iter().map(|&s| s / self.rows as f32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn upstream_mean() {
+        let mut u = UpstreamBuffer::default();
+        u.push_rows(&[1.0, 2.0, 3.0, 4.0], 2); // rows [1,2], [3,4]
+        assert_eq!(u.rows, 2);
+        assert_eq!(u.mean(2), vec![2.0, 3.0]);
+        assert_eq!(u.last, vec![3.0, 4.0]);
+        u.push_rows(&[5.0, 6.0], 2);
+        assert_eq!(u.mean(2), vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn empty_mean_is_zero() {
+        let u = UpstreamBuffer::default();
+        assert_eq!(u.mean(3), vec![0.0; 3]);
+    }
+
+    #[test]
+    fn cache_len_by_phase() {
+        let mut s = Sequence::new(
+            1,
+            vec![PromptItem::Token(1), PromptItem::Token(5)],
+            vec![],
+            0,
+            SamplingParams::default(),
+        );
+        assert_eq!(s.cache_len(), 0);
+        s.phase = SeqPhase::Prefill(1);
+        assert_eq!(s.cache_len(), 1);
+        s.phase = SeqPhase::Decode;
+        s.generated.push(9);
+        assert_eq!(s.cache_len(), 3);
+        assert_eq!(s.next_input_token(), 9);
+    }
+}

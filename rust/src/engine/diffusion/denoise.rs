@@ -1,0 +1,317 @@
+//! The diffusion engine core: batched flow-matching (Euler) denoising
+//! over the AOT `step` executable, with per-lane timesteps (continuous
+//! batching for diffusion) and the TeaCache-style step cache.
+
+use std::collections::VecDeque;
+
+use anyhow::{Context, Result};
+
+use super::stepcache::StepCache;
+use crate::engine::StageItem;
+use crate::runtime::{Artifacts, HostTensor, StageRuntime};
+use crate::util::Prng;
+
+#[derive(Debug, Clone)]
+pub struct DiffusionOptions {
+    pub max_batch: usize,
+    pub steps: usize,
+    pub cfg_scale: f32,
+    /// TeaCache threshold (0 disables the step cache).
+    pub stepcache_threshold: f32,
+    /// Baseline mode: evict compiled executables after every call.
+    pub lazy_compile: bool,
+}
+
+impl Default for DiffusionOptions {
+    fn default() -> Self {
+        Self { max_batch: 2, steps: 20, cfg_scale: 3.0, stepcache_threshold: 0.0, lazy_compile: false }
+    }
+}
+
+/// One denoising job (a whole image, a video clip, or one vocoder chunk).
+#[derive(Debug, Clone)]
+pub struct DiffusionJob {
+    pub req_id: u64,
+    /// Chunk index for streaming stages (0 for one-shot jobs).
+    pub chunk_idx: usize,
+    /// Conditioning vector (`cond_dim` floats; empty if the model is
+    /// unconditioned — it is zero-padded to the manifest width).
+    pub cond: Vec<f32>,
+    /// Per-token conditioning stream (vocoder codec embeds), row-major
+    /// `[n_tokens, cond_tokens_dim]`; empty if unused.
+    pub cond_tokens: Vec<f32>,
+    pub seed: u64,
+    /// Overrides engine default when > 0.
+    pub steps: usize,
+    /// Marks the request's final chunk (propagates `finished`).
+    pub final_chunk: bool,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct DiffusionStats {
+    pub jobs_done: u64,
+    pub steps_run: u64,
+    pub steps_skipped: u64,
+    pub calls: u64,
+    pub exec_seconds: f64,
+}
+
+struct Lane {
+    job: DiffusionJob,
+    latent: Vec<f32>,
+    step: usize,
+    steps_total: usize,
+    cache: StepCache,
+}
+
+/// The engine.  Owns a thread-local PJRT runtime; not `Send`.
+pub struct DiffusionEngine {
+    rt: StageRuntime,
+    opts: DiffusionOptions,
+    n_tokens: usize,
+    latent_dim: usize,
+    cond_dim: usize,
+    cond_tokens_dim: usize,
+    queue: VecDeque<DiffusionJob>,
+    lanes: Vec<Lane>,
+    pub stats: DiffusionStats,
+}
+
+impl DiffusionEngine {
+    pub fn new(artifacts: &Artifacts, model: &str, opts: DiffusionOptions) -> Result<Self> {
+        let rt = StageRuntime::new(artifacts, model)
+            .with_context(|| format!("creating diffusion engine for {model}"))?;
+        let spec = rt.model().clone();
+        let mut eng = Self {
+            rt,
+            n_tokens: spec.cfg_usize("n_tokens")?,
+            latent_dim: spec.cfg_usize("latent_dim")?,
+            cond_dim: spec.cfg_usize("cond_dim").unwrap_or(0),
+            cond_tokens_dim: spec.cfg_usize("cond_tokens_dim").unwrap_or(0),
+            opts,
+            queue: VecDeque::new(),
+            lanes: Vec::new(),
+            stats: DiffusionStats::default(),
+        };
+        if !eng.opts.lazy_compile {
+            let entries: Vec<String> = eng
+                .rt
+                .model()
+                .buckets("step")
+                .into_iter()
+                .filter(|&b| b <= eng.opts.max_batch.next_power_of_two())
+                .map(|b| format!("step.b{b}"))
+                .collect();
+            eng.rt.precompile(&entries)?;
+        }
+        Ok(eng)
+    }
+
+    pub fn model_name(&self) -> &str {
+        &self.rt.model().name
+    }
+
+    pub fn n_tokens(&self) -> usize {
+        self.n_tokens
+    }
+
+    pub fn cond_dim(&self) -> usize {
+        self.cond_dim
+    }
+
+    pub fn cond_tokens_dim(&self) -> usize {
+        self.cond_tokens_dim
+    }
+
+    pub fn submit(&mut self, job: DiffusionJob) {
+        self.queue.push_back(job);
+    }
+
+    pub fn idle(&self) -> bool {
+        self.queue.is_empty() && self.lanes.is_empty()
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Advance one engine iteration: admit jobs, run one denoise step for
+    /// every active lane (batched), emit finished jobs.
+    pub fn step(&mut self) -> Result<Vec<StageItem>> {
+        // Admit.
+        while self.lanes.len() < self.opts.max_batch {
+            let Some(job) = self.queue.pop_front() else { break };
+            let mut prng = Prng::new(job.seed ^ 0xD1F);
+            let latent: Vec<f32> =
+                (0..self.n_tokens * self.latent_dim).map(|_| prng.normal() as f32).collect();
+            let steps_total = if job.steps > 0 { job.steps } else { self.opts.steps };
+            self.lanes.push(Lane { job, latent, step: 0, steps_total, cache: StepCache::default() });
+        }
+        if self.lanes.is_empty() {
+            return Ok(vec![]);
+        }
+
+        // Split lanes into cache-hits (skip) and real computation.
+        let thr = self.opts.stepcache_threshold;
+        let mut run_ids: Vec<usize> = Vec::new();
+        for (i, lane) in self.lanes.iter_mut().enumerate() {
+            let t = lane_t(lane.step, lane.steps_total);
+            // Cache signal: relative drift of the noise level since the
+            // last real trunk run (cheap host-side proxy for the
+            // modulation-embedding drift TeaCache tracks).
+            let sig = [t];
+            if lane.cache.should_reuse(&sig, thr) {
+                let eps = lane.cache.reused(&sig).to_vec();
+                advance(lane, &eps);
+            } else {
+                run_ids.push(i);
+            }
+        }
+        self.stats.steps_skipped += (self.lanes.len() - run_ids.len()) as u64;
+
+        // Batched trunk execution for the rest.
+        let buckets = self.rt.model().buckets("step");
+        let mut idx = 0;
+        while idx < run_ids.len() {
+            let remaining = run_ids.len() - idx;
+            let b = buckets
+                .iter()
+                .copied()
+                .find(|&b| b >= remaining)
+                .or(buckets.last().copied())
+                .ok_or_else(|| anyhow::anyhow!("no step buckets for {}", self.model_name()))?;
+            let group: Vec<usize> = run_ids[idx..(idx + b.min(remaining))].to_vec();
+            idx += group.len();
+            self.run_group(&group, b)?;
+        }
+
+        // Collect finished lanes.
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.lanes.len() {
+            if self.lanes[i].step >= self.lanes[i].steps_total {
+                let lane = self.lanes.swap_remove(i);
+                self.stats.jobs_done += 1;
+                let mut wave: Vec<f32> = lane.latent.iter().map(|&x| x.tanh()).collect();
+                wave.truncate(self.n_tokens * self.latent_dim);
+                let mut item = StageItem::new(lane.job.req_id)
+                    .with(
+                        "latent",
+                        HostTensor::f32(vec![self.n_tokens, self.latent_dim], lane.latent),
+                    )
+                    .with("wave", HostTensor::f32(vec![wave.len()], wave))
+                    .with(
+                        "chunk_idx",
+                        HostTensor::i32(vec![1], vec![lane.job.chunk_idx as i32]),
+                    )
+                    .with("n_frames", HostTensor::i32(vec![1], vec![self.n_tokens as i32]));
+                if lane.job.final_chunk {
+                    item = item.finished();
+                }
+                out.push(item);
+            } else {
+                i += 1;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Drop every compiled executable (baseline per-request recompile).
+    pub fn evict_compiled(&mut self) {
+        self.rt.evict_all();
+    }
+
+    pub fn run_to_completion(&mut self) -> Result<Vec<StageItem>> {
+        let mut all = Vec::new();
+        while !self.idle() {
+            all.extend(self.step()?);
+        }
+        Ok(all)
+    }
+
+    fn run_group(&mut self, lane_ids: &[usize], b: usize) -> Result<()> {
+        let n = self.n_tokens;
+        let ld = self.latent_dim;
+        let cd = self.cond_dim.max(1);
+        let ctd = self.cond_tokens_dim.max(1);
+        let mut latent = vec![0f32; b * n * ld];
+        let mut cond = vec![0f32; b * cd];
+        let mut cond_tokens = vec![0f32; b * n * ctd];
+        let mut t = vec![0f32; b];
+        let mut g = vec![1f32; b];
+        for (bi, &li) in lane_ids.iter().enumerate() {
+            let lane = &self.lanes[li];
+            latent[bi * n * ld..(bi + 1) * n * ld].copy_from_slice(&lane.latent);
+            if !lane.job.cond.is_empty() {
+                let m = lane.job.cond.len().min(cd);
+                cond[bi * cd..bi * cd + m].copy_from_slice(&lane.job.cond[..m]);
+            }
+            if !lane.job.cond_tokens.is_empty() {
+                let m = lane.job.cond_tokens.len().min(n * ctd);
+                cond_tokens[bi * n * ctd..bi * n * ctd + m]
+                    .copy_from_slice(&lane.job.cond_tokens[..m]);
+            }
+            t[bi] = lane_t(lane.step, lane.steps_total);
+            g[bi] = self.opts.cfg_scale;
+        }
+        let entry = format!("step.b{b}");
+        let inputs = vec![
+            HostTensor::f32(vec![b, n, ld], latent),
+            HostTensor::f32(vec![b, cd], cond),
+            HostTensor::f32(vec![b, n, ctd], cond_tokens),
+            HostTensor::f32(vec![b], t),
+            HostTensor::f32(vec![b], g),
+        ];
+        let t0 = std::time::Instant::now();
+        let outputs = self.rt.run(&entry, &inputs)?;
+        self.stats.exec_seconds += t0.elapsed().as_secs_f64();
+        self.stats.calls += 1;
+        let eps = outputs[0].as_f32()?;
+        for (bi, &li) in lane_ids.iter().enumerate() {
+            let lane = &mut self.lanes[li];
+            let e = &eps[bi * n * ld..(bi + 1) * n * ld];
+            let tt = lane_t(lane.step, lane.steps_total);
+            lane.cache.store(&[tt], e);
+            advance(lane, e);
+            self.stats.steps_run += 1;
+        }
+        Ok(())
+    }
+}
+
+/// Noise level for step `i` of `n`: linear 1 -> 1/n (flow-matching grid).
+fn lane_t(i: usize, n: usize) -> f32 {
+    1.0 - i as f32 / n as f32
+}
+
+/// Euler update: latent <- latent - dt * eps.
+fn advance(lane: &mut Lane, eps: &[f32]) {
+    let dt = 1.0 / lane.steps_total as f32;
+    for (x, &e) in lane.latent.iter_mut().zip(eps) {
+        *x -= dt * e;
+    }
+    lane.step += 1;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn t_grid_monotone() {
+        let n = 10;
+        for i in 1..n {
+            assert!(lane_t(i, n) < lane_t(i - 1, n));
+        }
+        assert!((lane_t(0, n) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cache_skips_with_wide_threshold() {
+        // 20-step schedule, threshold 0.3: early steps (small relative
+        // drift of t) must be reusable.
+        let mut c = crate::engine::diffusion::stepcache::StepCache::default();
+        c.store(&[1.0], &[0.5]);
+        assert!(c.should_reuse(&[0.95], 0.3));
+    }
+}

@@ -1,0 +1,17 @@
+//! Diffusion engine (paper §3.3 "DiT stage support").
+//!
+//! Serves DiT stages — the Qwen2.5-Omni vocoder and the image/video
+//! generators (BAGEL, Qwen-Image, Wan2.2 sims) — with:
+//! * batched denoising across requests (per-stage request batching);
+//! * classifier-free guidance folded into the AOT step executable;
+//! * a **TeaCache-style step cache** ([`stepcache`]): when the timestep
+//!   modulation embedding barely moves between steps, the previous
+//!   epsilon is reused instead of running the trunk;
+//! * streaming input (vocoder jobs arrive as codec-chunk items while the
+//!   Talker is still generating).
+
+pub mod denoise;
+pub mod stepcache;
+
+pub use denoise::{DiffusionEngine, DiffusionJob, DiffusionOptions, DiffusionStats};
+pub use stepcache::StepCache;

@@ -1,0 +1,126 @@
+//! TeaCache-style denoising step cache (paper §3.3 cites TeaCache /
+//! cache-dit as the diffusion engine's caching strategies).
+//!
+//! TeaCache's observation: the timestep (modulation) embedding is a cheap,
+//! accurate proxy for how much the model output will change between
+//! consecutive denoising steps.  We accumulate the relative L1 change of
+//! the modulation embedding; while the accumulated change stays under a
+//! threshold, the trunk is skipped and the cached epsilon is reused.
+
+/// Per-job cache state.
+#[derive(Debug, Clone, Default)]
+pub struct StepCache {
+    /// Previous step's modulation embedding.
+    prev_mod: Vec<f32>,
+    /// Cached model output (epsilon).
+    cached_eps: Vec<f32>,
+    /// Accumulated relative change since the last real trunk run.
+    accum: f32,
+    pub hits: usize,
+    pub misses: usize,
+}
+
+impl StepCache {
+    /// Decide whether the cached epsilon may be reused given the new
+    /// modulation embedding.  `threshold <= 0` disables caching.
+    /// Call [`Self::store`] after a real run; on reuse call [`Self::reused`].
+    pub fn should_reuse(&mut self, t_mod: &[f32], threshold: f32) -> bool {
+        if threshold <= 0.0 || self.cached_eps.is_empty() || self.prev_mod.len() != t_mod.len() {
+            return false;
+        }
+        let mut num = 0.0f32;
+        let mut den = 0.0f32;
+        for (&a, &b) in self.prev_mod.iter().zip(t_mod) {
+            num += (a - b).abs();
+            den += a.abs();
+        }
+        let rel = if den > 0.0 { num / den } else { f32::INFINITY };
+        self.accum + rel < threshold
+    }
+
+    /// Record a real trunk run; accumulation restarts.
+    pub fn store(&mut self, t_mod: &[f32], eps: &[f32]) {
+        self.prev_mod = t_mod.to_vec();
+        self.cached_eps = eps.to_vec();
+        self.accum = 0.0;
+        self.misses += 1;
+    }
+
+    /// Record a cache reuse, accumulating the skipped drift.
+    pub fn reused(&mut self, t_mod: &[f32]) -> &[f32] {
+        let mut num = 0.0f32;
+        let mut den = 0.0f32;
+        for (&a, &b) in self.prev_mod.iter().zip(t_mod) {
+            num += (a - b).abs();
+            den += a.abs();
+        }
+        self.accum += if den > 0.0 { num / den } else { 0.0 };
+        self.prev_mod = t_mod.to_vec();
+        self.hits += 1;
+        &self.cached_eps
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_when_threshold_zero() {
+        let mut c = StepCache::default();
+        c.store(&[1.0, 1.0], &[0.5]);
+        assert!(!c.should_reuse(&[1.0, 1.0], 0.0));
+    }
+
+    #[test]
+    fn identical_mod_reuses() {
+        let mut c = StepCache::default();
+        c.store(&[1.0, 2.0], &[0.5, 0.6]);
+        assert!(c.should_reuse(&[1.0, 2.0], 0.05));
+        assert_eq!(c.reused(&[1.0, 2.0]), &[0.5, 0.6]);
+        assert_eq!(c.hits, 1);
+    }
+
+    #[test]
+    fn large_change_misses() {
+        let mut c = StepCache::default();
+        c.store(&[1.0, 1.0], &[0.5]);
+        assert!(!c.should_reuse(&[3.0, -1.0], 0.05));
+    }
+
+    #[test]
+    fn accumulated_drift_eventually_misses() {
+        let mut c = StepCache::default();
+        c.store(&[1.0; 8], &[0.5]);
+        let mut m = vec![1.0f32; 8];
+        let mut reuses = 0;
+        for _ in 0..100 {
+            for x in &mut m {
+                *x += 0.001; // small per-step drift
+            }
+            if c.should_reuse(&m, 0.02) {
+                c.reused(&m);
+                reuses += 1;
+            } else {
+                break;
+            }
+        }
+        assert!(reuses > 0, "some reuse expected");
+        assert!(reuses < 100, "drift must eventually force a real run");
+    }
+
+    #[test]
+    fn empty_cache_never_reuses() {
+        let mut c = StepCache::default();
+        assert!(!c.should_reuse(&[1.0], 1.0));
+    }
+}

@@ -1,0 +1,149 @@
+//! Standalone multimodal-encoder engine (paper §3.4: the unified
+//! connector "remains compatible with existing EPD (encode–prefill–
+//! decode) disaggregation").
+//!
+//! By default the encoder runs inside the Thinker stage (Fig. 4
+//! footnote 4); with EPD disaggregation it becomes its own stage on its
+//! own device, producing embedding items that an `embeds2prompt`
+//! transfer turns into Thinker submissions.  Batched across requests.
+
+use std::collections::VecDeque;
+
+use anyhow::{Context, Result};
+
+use crate::engine::StageItem;
+use crate::runtime::{Artifacts, HostTensor, StageRuntime};
+
+#[derive(Debug, Clone)]
+pub struct EncodeJob {
+    pub req_id: u64,
+    /// Feature rows, row-major `[frames, feat_dim]` (padded here).
+    pub feats: Vec<f32>,
+    pub frames: usize,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct EncoderStats {
+    pub jobs_done: u64,
+    pub calls: u64,
+    pub exec_seconds: f64,
+}
+
+/// Batched single-forward encoder engine.
+pub struct EncoderEngine {
+    rt: StageRuntime,
+    t_max: usize,
+    feat_dim: usize,
+    d_out: usize,
+    max_batch: usize,
+    queue: VecDeque<EncodeJob>,
+    pub stats: EncoderStats,
+}
+
+impl EncoderEngine {
+    pub fn new(artifacts: &Artifacts, model: &str, max_batch: usize) -> Result<Self> {
+        let rt = StageRuntime::new(artifacts, model)
+            .with_context(|| format!("creating encoder engine for {model}"))?;
+        let spec = rt.model().clone();
+        let mut eng = Self {
+            t_max: spec.cfg_usize("t_max")?,
+            feat_dim: spec.cfg_usize("feat_dim")?,
+            d_out: spec.cfg_usize("d_out")?,
+            rt,
+            max_batch,
+            queue: VecDeque::new(),
+            stats: EncoderStats::default(),
+        };
+        let entries: Vec<String> = eng
+            .rt
+            .model()
+            .buckets("encode")
+            .into_iter()
+            .filter(|&b| b <= max_batch.next_power_of_two())
+            .map(|b| format!("encode.b{b}"))
+            .collect();
+        eng.rt.precompile(&entries)?;
+        Ok(eng)
+    }
+
+    pub fn t_max(&self) -> usize {
+        self.t_max
+    }
+
+    pub fn feat_dim(&self) -> usize {
+        self.feat_dim
+    }
+
+    pub fn d_out(&self) -> usize {
+        self.d_out
+    }
+
+    pub fn submit(&mut self, job: EncodeJob) {
+        self.queue.push_back(job);
+    }
+
+    pub fn idle(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Encode one batch of queued jobs; emits one finished item per job
+    /// carrying `embeds [frames, d_out]`.
+    pub fn step(&mut self) -> Result<Vec<StageItem>> {
+        if self.queue.is_empty() {
+            return Ok(vec![]);
+        }
+        let take = self.queue.len().min(self.max_batch);
+        let jobs: Vec<EncodeJob> = self.queue.drain(..take).collect();
+        let buckets = self.rt.model().buckets("encode");
+        let b = buckets
+            .iter()
+            .copied()
+            .find(|&x| x >= jobs.len())
+            .or(buckets.last().copied())
+            .ok_or_else(|| anyhow::anyhow!("no encode buckets"))?;
+
+        let (t, fd, d) = (self.t_max, self.feat_dim, self.d_out);
+        let mut feats = vec![0f32; b * t * fd];
+        let mut mask = vec![0f32; b * t];
+        for (bi, job) in jobs.iter().enumerate() {
+            let frames = job.frames.min(t);
+            let n = (frames * fd).min(job.feats.len());
+            feats[bi * t * fd..bi * t * fd + n].copy_from_slice(&job.feats[..n]);
+            for m in mask[bi * t..bi * t + frames].iter_mut() {
+                *m = 1.0;
+            }
+        }
+        let t0 = std::time::Instant::now();
+        let outs = self.rt.run(
+            &format!("encode.b{b}"),
+            &[
+                HostTensor::f32(vec![b, t, fd], feats),
+                HostTensor::f32(vec![b, t], mask),
+            ],
+        )?;
+        self.stats.exec_seconds += t0.elapsed().as_secs_f64();
+        self.stats.calls += 1;
+        let embeds = outs[0].as_f32()?;
+
+        let mut items = Vec::with_capacity(jobs.len());
+        for (bi, job) in jobs.iter().enumerate() {
+            let frames = job.frames.min(t);
+            let rows = embeds[bi * t * d..bi * t * d + frames * d].to_vec();
+            self.stats.jobs_done += 1;
+            items.push(
+                StageItem::new(job.req_id)
+                    .with("embeds", HostTensor::f32(vec![frames, d], rows))
+                    .finished(),
+            );
+        }
+        Ok(items)
+    }
+
+    pub fn run_to_completion(&mut self) -> Result<Vec<StageItem>> {
+        let mut all = Vec::new();
+        while !self.idle() {
+            all.extend(self.step()?);
+        }
+        Ok(all)
+    }
+}

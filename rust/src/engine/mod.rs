@@ -1,0 +1,78 @@
+//! Stage execution engines (paper §3.3).
+//!
+//! Each stage of a pipeline is served by an independent engine owning its
+//! own PJRT client, compiled executables, scheduler, and (for AR stages)
+//! KV manager:
+//!
+//! * [`ar`] — vLLM-like autoregressive engine: continuous batching,
+//!   chunked prefill, paged-KV admission, per-iteration preprocess,
+//!   multi-step fused decode.
+//! * [`diffusion`] — DiT engine: batched denoising with CFG and a
+//!   TeaCache-style step cache.
+//! * [`vocoder`] — single-forward stages (CNN vocoder, patch decoder).
+//!
+//! Engines are synchronous state machines (`step()` advances one
+//! iteration) so they are unit-testable; [`crate::orchestrator`] wraps
+//! them in threads and wires connectors between them.
+
+pub mod ar;
+pub mod diffusion;
+pub mod encoder;
+pub mod vocoder;
+
+use std::collections::BTreeMap;
+
+use crate::runtime::HostTensor;
+
+/// One unit of data flowing between stages: named tensors + lifecycle
+/// flags.  Produced by engines, mapped by edge transfer functions, and
+/// consumed by downstream engines.
+#[derive(Debug, Clone)]
+pub struct StageItem {
+    pub req_id: u64,
+    /// Named payload tensors ("tokens", "hiddens", "wave", "cond", ...).
+    pub tensors: BTreeMap<String, HostTensor>,
+    /// True when this is the request's final item from the stage.
+    pub finished: bool,
+}
+
+impl StageItem {
+    pub fn new(req_id: u64) -> Self {
+        Self { req_id, tensors: BTreeMap::new(), finished: false }
+    }
+
+    pub fn with(mut self, name: &str, t: HostTensor) -> Self {
+        self.tensors.insert(name.to_string(), t);
+        self
+    }
+
+    pub fn finished(mut self) -> Self {
+        self.finished = true;
+        self
+    }
+
+    pub fn tensor(&self, name: &str) -> Option<&HostTensor> {
+        self.tensors.get(name)
+    }
+
+    pub fn payload_bytes(&self) -> usize {
+        self.tensors.values().map(|t| t.byte_len()).sum()
+    }
+}
+
+/// Sampling parameters for AR stages.
+#[derive(Debug, Clone)]
+pub struct SamplingParams {
+    pub max_new_tokens: usize,
+    /// 0.0 = greedy.
+    pub temperature: f32,
+    pub top_k: usize,
+    pub ignore_eos: bool,
+    pub seed: u64,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        Self { max_new_tokens: 64, temperature: 0.0, top_k: 0, ignore_eos: false, seed: 0 }
+    }
+}

@@ -1,0 +1,186 @@
+//! Single-forward stages: the CNN vocoder (Qwen3-Omni) and the MiMo
+//! patch decoder.  Each submitted chunk of codec tokens is one batched
+//! forward; no iterative state.
+
+use std::collections::VecDeque;
+
+use anyhow::{Context, Result};
+
+use crate::engine::StageItem;
+use crate::runtime::{Artifacts, HostTensor, StageRuntime};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VocoderKind {
+    /// `voc_cnn3`-style: entry `vocode.bN`, tokens [B, T] -> wave [B, T*up].
+    Cnn,
+    /// `mimo_codec`-style: entry `decode.bN`, tokens [B, T] ->
+    /// patches [B, T, samples_per_patch].
+    PatchDecoder,
+}
+
+#[derive(Debug, Clone)]
+pub struct VocoderJob {
+    pub req_id: u64,
+    pub chunk_idx: usize,
+    /// Codec token ids for this chunk (<= frame capacity; padded here).
+    pub tokens: Vec<u32>,
+    pub final_chunk: bool,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct VocoderStats {
+    pub chunks_done: u64,
+    pub calls: u64,
+    pub exec_seconds: f64,
+}
+
+/// Batched single-forward engine.
+pub struct VocoderEngine {
+    rt: StageRuntime,
+    kind: VocoderKind,
+    /// Frames per call (t_frames / t_max from the manifest).
+    t_frames: usize,
+    /// Output samples per frame.
+    upsample: usize,
+    max_batch: usize,
+    queue: VecDeque<VocoderJob>,
+    pub stats: VocoderStats,
+}
+
+impl VocoderEngine {
+    pub fn new(
+        artifacts: &Artifacts,
+        model: &str,
+        kind: VocoderKind,
+        max_batch: usize,
+        lazy_compile: bool,
+    ) -> Result<Self> {
+        let rt = StageRuntime::new(artifacts, model)
+            .with_context(|| format!("creating vocoder engine for {model}"))?;
+        let spec = rt.model().clone();
+        let (t_frames, upsample) = match kind {
+            VocoderKind::Cnn => (spec.cfg_usize("t_frames")?, spec.cfg_usize("upsample")?),
+            VocoderKind::PatchDecoder => {
+                (spec.cfg_usize("t_max")?, spec.cfg_usize("samples_per_patch")?)
+            }
+        };
+        let mut eng = Self {
+            rt,
+            kind,
+            t_frames,
+            upsample,
+            max_batch,
+            queue: VecDeque::new(),
+            stats: VocoderStats::default(),
+        };
+        if !lazy_compile {
+            let fam = eng.family();
+            let entries: Vec<String> = eng
+                .rt
+                .model()
+                .buckets(fam)
+                .into_iter()
+                .filter(|&b| b <= max_batch.next_power_of_two())
+                .map(|b| format!("{fam}.b{b}"))
+                .collect();
+            eng.rt.precompile(&entries)?;
+        }
+        Ok(eng)
+    }
+
+    fn family(&self) -> &'static str {
+        match self.kind {
+            VocoderKind::Cnn => "vocode",
+            VocoderKind::PatchDecoder => "decode",
+        }
+    }
+
+    /// Frames consumed per chunk.
+    pub fn frames_per_chunk(&self) -> usize {
+        self.t_frames
+    }
+
+    pub fn samples_per_frame(&self) -> usize {
+        self.upsample
+    }
+
+    pub fn submit(&mut self, job: VocoderJob) {
+        self.queue.push_back(job);
+    }
+
+    pub fn idle(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Process one batch of queued chunks.
+    pub fn step(&mut self) -> Result<Vec<StageItem>> {
+        if self.queue.is_empty() {
+            return Ok(vec![]);
+        }
+        let take = self.queue.len().min(self.max_batch);
+        let jobs: Vec<VocoderJob> = self.queue.drain(..take).collect();
+        let buckets = self.rt.model().buckets(self.family());
+        let b = buckets
+            .iter()
+            .copied()
+            .find(|&x| x >= jobs.len())
+            .or(buckets.last().copied())
+            .ok_or_else(|| anyhow::anyhow!("no buckets for {}", self.model_name()))?;
+
+        let t = self.t_frames;
+        let mut tokens = vec![0i32; b * t];
+        for (bi, job) in jobs.iter().enumerate() {
+            for (ti, &tok) in job.tokens.iter().take(t).enumerate() {
+                tokens[bi * t + ti] = tok as i32;
+            }
+        }
+        let entry = format!("{}.b{b}", self.family());
+        let t0 = std::time::Instant::now();
+        let outputs = self.rt.run(&entry, &[HostTensor::i32(vec![b, t], tokens)])?;
+        self.stats.exec_seconds += t0.elapsed().as_secs_f64();
+        self.stats.calls += 1;
+        let wave = outputs[0].as_f32()?;
+        let per_lane = wave.len() / b;
+
+        let mut out = Vec::with_capacity(jobs.len());
+        for (bi, job) in jobs.iter().enumerate() {
+            // Trim padding: only real frames produce audio.
+            let real = job.tokens.len().min(t) * self.upsample;
+            let w = wave[bi * per_lane..bi * per_lane + real].to_vec();
+            self.stats.chunks_done += 1;
+            let mut item = StageItem::new(job.req_id)
+                .with("wave", HostTensor::f32(vec![w.len()], w))
+                .with("chunk_idx", HostTensor::i32(vec![1], vec![job.chunk_idx as i32]))
+                .with(
+                    "n_frames",
+                    HostTensor::i32(vec![1], vec![job.tokens.len().min(t) as i32]),
+                );
+            if job.final_chunk {
+                item = item.finished();
+            }
+            out.push(item);
+        }
+        Ok(out)
+    }
+
+    /// Drop every compiled executable (baseline per-request recompile).
+    pub fn evict_compiled(&mut self) {
+        self.rt.evict_all();
+    }
+
+    pub fn run_to_completion(&mut self) -> Result<Vec<StageItem>> {
+        let mut all = Vec::new();
+        while !self.idle() {
+            all.extend(self.step()?);
+        }
+        Ok(all)
+    }
+
+    pub fn model_name(&self) -> &str {
+        &self.rt.model().name
+    }
+}

@@ -1,0 +1,208 @@
+//! Minimal JSON substrate (the offline registry has no `serde_json`).
+//!
+//! Covers everything the system needs: the artifact manifest, config
+//! files, the TCP serving protocol, and bench output.  Full RFC 8259
+//! parsing (strings with escapes, nested containers, numbers, literals)
+//! plus a compact/pretty serializer.
+
+mod parse;
+mod ser;
+
+pub use parse::{parse, ParseError};
+pub use ser::{to_string, to_string_pretty};
+
+use std::collections::BTreeMap;
+
+/// A JSON value.  Objects use `BTreeMap` for deterministic ordering
+/// (reproducible serialization matters for config hashing).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    Obj(BTreeMap<String, Value>),
+}
+
+impl Value {
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        self.as_f64().map(|n| n as i64)
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().and_then(|n| if n >= 0.0 { Some(n as usize) } else { None })
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Value>> {
+        match self {
+            Value::Obj(o) => Some(o),
+            _ => None,
+        }
+    }
+
+    /// Object field lookup; `Value::Null` for missing keys / non-objects.
+    pub fn get(&self, key: &str) -> &Value {
+        static NULL: Value = Value::Null;
+        match self {
+            Value::Obj(o) => o.get(key).unwrap_or(&NULL),
+            _ => &NULL,
+        }
+    }
+
+    /// Array index lookup; `Value::Null` out of range.
+    pub fn idx(&self, i: usize) -> &Value {
+        static NULL: Value = Value::Null;
+        match self {
+            Value::Arr(a) => a.get(i).unwrap_or(&NULL),
+            _ => &NULL,
+        }
+    }
+
+    pub fn is_null(&self) -> bool {
+        matches!(self, Value::Null)
+    }
+
+    /// Required-field helpers that produce good error messages.
+    pub fn req_str(&self, key: &str) -> anyhow::Result<&str> {
+        self.get(key)
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("missing/invalid string field `{key}`"))
+    }
+
+    pub fn req_usize(&self, key: &str) -> anyhow::Result<usize> {
+        self.get(key)
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("missing/invalid integer field `{key}`"))
+    }
+
+    pub fn req_f64(&self, key: &str) -> anyhow::Result<f64> {
+        self.get(key)
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("missing/invalid number field `{key}`"))
+    }
+
+    pub fn req_arr(&self, key: &str) -> anyhow::Result<&[Value]> {
+        self.get(key)
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("missing/invalid array field `{key}`"))
+    }
+}
+
+impl From<&str> for Value {
+    fn from(s: &str) -> Self {
+        Value::Str(s.to_string())
+    }
+}
+
+impl From<String> for Value {
+    fn from(s: String) -> Self {
+        Value::Str(s)
+    }
+}
+
+impl From<f64> for Value {
+    fn from(n: f64) -> Self {
+        Value::Num(n)
+    }
+}
+
+impl From<usize> for Value {
+    fn from(n: usize) -> Self {
+        Value::Num(n as f64)
+    }
+}
+
+impl From<i64> for Value {
+    fn from(n: i64) -> Self {
+        Value::Num(n as f64)
+    }
+}
+
+impl From<bool> for Value {
+    fn from(b: bool) -> Self {
+        Value::Bool(b)
+    }
+}
+
+impl<T: Into<Value>> From<Vec<T>> for Value {
+    fn from(v: Vec<T>) -> Self {
+        Value::Arr(v.into_iter().map(Into::into).collect())
+    }
+}
+
+/// Object construction macro used across configs and the server protocol.
+#[macro_export]
+macro_rules! jobj {
+    ( $( $k:expr => $v:expr ),* $(,)? ) => {{
+        let mut m = std::collections::BTreeMap::new();
+        $( m.insert($k.to_string(), $crate::json::Value::from($v)); )*
+        $crate::json::Value::Obj(m)
+    }};
+}
+
+/// Parse a file as JSON.
+pub fn from_file(path: &std::path::Path) -> anyhow::Result<Value> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+    parse(&text).map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accessors() {
+        let v = parse(r#"{"a": [1, "two", true, null], "b": {"c": 3.5}}"#).unwrap();
+        assert_eq!(v.get("a").idx(0).as_f64(), Some(1.0));
+        assert_eq!(v.get("a").idx(1).as_str(), Some("two"));
+        assert_eq!(v.get("a").idx(2).as_bool(), Some(true));
+        assert!(v.get("a").idx(3).is_null());
+        assert!(v.get("a").idx(9).is_null());
+        assert_eq!(v.get("b").get("c").as_f64(), Some(3.5));
+        assert!(v.get("zzz").is_null());
+    }
+
+    #[test]
+    fn jobj_macro() {
+        let v = jobj! { "x" => 1usize, "s" => "hi", "f" => 2.5f64 };
+        assert_eq!(v.get("x").as_usize(), Some(1));
+        assert_eq!(v.get("s").as_str(), Some("hi"));
+    }
+
+    #[test]
+    fn req_errors_mention_key() {
+        let v = parse(r#"{"a": 1}"#).unwrap();
+        let err = v.req_str("missing").unwrap_err().to_string();
+        assert!(err.contains("missing"), "{err}");
+    }
+}

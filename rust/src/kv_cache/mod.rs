@@ -1,0 +1,350 @@
+//! Paged KV-cache manager (vLLM-style, paper §3.3 "KV manager").
+//!
+//! Tracks device KV memory in fixed-size token blocks with reference
+//! counting, copy-on-write forking, and hash-based prefix sharing.  The
+//! AR scheduler consults it for admission (a sequence runs only while its
+//! blocks fit the stage's KV budget) and preemption.
+//!
+//! Note on fidelity: the compiled decode executables hold KV densely per
+//! batch slot (HLO shapes are static), so the block table is the
+//! *accounting* layer — exactly the admission/preemption role vLLM's
+//! block manager plays — while the per-slot dense tensors are the storage
+//! layer.  See DESIGN.md §6.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+pub type BlockId = u32;
+
+/// Content hash chain for prefix sharing: hash of (parent_hash, tokens).
+fn chain_hash(parent: u64, tokens: &[u32]) -> u64 {
+    let mut h = parent ^ 0x9E3779B97F4A7C15;
+    for &t in tokens {
+        h ^= t as u64;
+        h = h.wrapping_mul(0x100000001B3);
+        h ^= h >> 29;
+    }
+    h
+}
+
+#[derive(Debug, Clone)]
+struct Block {
+    refcount: u32,
+    /// Prefix hash when the block is full and shareable.
+    hash: Option<u64>,
+}
+
+/// Per-sequence block table.
+#[derive(Debug, Clone, Default)]
+pub struct BlockTable {
+    pub blocks: Vec<BlockId>,
+    /// Tokens stored so far.
+    pub len: usize,
+}
+
+/// The paged allocator for one stage's KV pool.
+#[derive(Debug)]
+pub struct BlockManager {
+    block_size: usize,
+    blocks: Vec<Block>,
+    free: Vec<BlockId>,
+    /// full-block prefix hash -> block id (prefix cache).
+    prefix_index: HashMap<u64, BlockId>,
+    /// cache hits since creation (metrics).
+    pub prefix_hits: u64,
+}
+
+impl BlockManager {
+    pub fn new(n_blocks: usize, block_size: usize) -> Self {
+        assert!(block_size > 0 && n_blocks > 0);
+        Self {
+            block_size,
+            blocks: vec![Block { refcount: 0, hash: None }; n_blocks],
+            free: (0..n_blocks as BlockId).rev().collect(),
+            prefix_index: HashMap::new(),
+            prefix_hits: 0,
+        }
+    }
+
+    /// Build a manager sized from a byte budget.
+    pub fn from_bytes(budget_bytes: usize, bytes_per_token: usize, block_size: usize) -> Self {
+        let tokens = budget_bytes / bytes_per_token.max(1);
+        let n_blocks = (tokens / block_size).max(1);
+        Self::new(n_blocks, block_size)
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn blocks_needed(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_size)
+    }
+
+    /// Can a sequence of `tokens` total tokens be admitted right now?
+    pub fn can_allocate(&self, tokens: usize) -> bool {
+        self.blocks_needed(tokens) <= self.free.len()
+    }
+
+    fn pop_free(&mut self) -> Result<BlockId> {
+        let Some(id) = self.free.pop() else { bail!("KV pool exhausted") };
+        let b = &mut self.blocks[id as usize];
+        debug_assert_eq!(b.refcount, 0);
+        b.refcount = 1;
+        // Block content is being rewritten; drop any stale prefix entry.
+        if let Some(h) = b.hash.take() {
+            if self.prefix_index.get(&h) == Some(&id) {
+                self.prefix_index.remove(&h);
+            }
+        }
+        Ok(id)
+    }
+
+    /// Allocate a table for a prompt, reusing shared full-block prefixes
+    /// when the token content matches (prefix caching).
+    pub fn allocate_prompt(&mut self, tokens: &[u32]) -> Result<BlockTable> {
+        let mut table = BlockTable::default();
+        let mut parent = 0u64;
+        let mut i = 0;
+        // Full blocks: try the prefix cache first.
+        while i + self.block_size <= tokens.len() {
+            let h = chain_hash(parent, &tokens[i..i + self.block_size]);
+            if let Some(&bid) = self.prefix_index.get(&h) {
+                self.blocks[bid as usize].refcount += 1;
+                self.prefix_hits += 1;
+                table.blocks.push(bid);
+            } else {
+                match self.pop_free() {
+                    Ok(bid) => {
+                        self.blocks[bid as usize].hash = Some(h);
+                        self.prefix_index.insert(h, bid);
+                        table.blocks.push(bid);
+                    }
+                    Err(e) => {
+                        self.release(&table);
+                        return Err(e);
+                    }
+                }
+            }
+            parent = h;
+            i += self.block_size;
+        }
+        // Tail partial block (never shared).
+        if i < tokens.len() {
+            match self.pop_free() {
+                Ok(bid) => table.blocks.push(bid),
+                Err(e) => {
+                    self.release(&table);
+                    return Err(e);
+                }
+            }
+        }
+        table.len = tokens.len();
+        Ok(table)
+    }
+
+    /// Extend a table by one generated token, allocating a block at the
+    /// boundary.  Returns true if a new block was allocated.
+    pub fn append_token(&mut self, table: &mut BlockTable) -> Result<bool> {
+        let need_new = table.len % self.block_size == 0;
+        if need_new {
+            let bid = self.pop_free()?;
+            table.blocks.push(bid);
+        }
+        table.len += 1;
+        Ok(need_new)
+    }
+
+    /// Copy-on-write fork (e.g. beam/parallel sampling): shares all
+    /// blocks, bumping refcounts.
+    pub fn fork(&mut self, table: &BlockTable) -> BlockTable {
+        for &bid in &table.blocks {
+            self.blocks[bid as usize].refcount += 1;
+        }
+        table.clone()
+    }
+
+    /// Release a table (sequence finished or preempted).
+    pub fn release(&mut self, table: &BlockTable) {
+        for &bid in &table.blocks {
+            let b = &mut self.blocks[bid as usize];
+            assert!(b.refcount > 0, "double free of block {bid}");
+            b.refcount -= 1;
+            if b.refcount == 0 {
+                // A freed block must not be resurrected through the prefix
+                // cache while it sits on the free list.
+                if let Some(h) = b.hash.take() {
+                    if self.prefix_index.get(&h) == Some(&bid) {
+                        self.prefix_index.remove(&h);
+                    }
+                }
+                self.free.push(bid);
+            }
+        }
+    }
+
+    /// Invariant check (used by property tests): every block is either
+    /// free xor referenced, and the free list has no duplicates.
+    pub fn check_invariants(&self) -> Result<()> {
+        let mut seen = vec![false; self.blocks.len()];
+        for &f in &self.free {
+            if seen[f as usize] {
+                bail!("duplicate free block {f}");
+            }
+            seen[f as usize] = true;
+            if self.blocks[f as usize].refcount != 0 {
+                bail!("free block {f} has refcount {}", self.blocks[f as usize].refcount);
+            }
+        }
+        for (i, b) in self.blocks.iter().enumerate() {
+            if b.refcount == 0 && !seen[i] {
+                bail!("leaked block {i} (refcount 0 but not free)");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::quick;
+    use crate::util::Prng;
+
+    #[test]
+    fn prompt_allocation_and_release() {
+        let mut m = BlockManager::new(10, 4);
+        let t = m.allocate_prompt(&[1, 2, 3, 4, 5, 6]).unwrap(); // 2 blocks
+        assert_eq!(t.blocks.len(), 2);
+        assert_eq!(m.free_blocks(), 8);
+        m.release(&t);
+        assert_eq!(m.free_blocks(), 10);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn append_allocates_at_boundary() {
+        let mut m = BlockManager::new(10, 4);
+        let mut t = m.allocate_prompt(&[1, 2, 3]).unwrap(); // 1 block, len 3
+        assert!(!m.append_token(&mut t).unwrap()); // len 4, fits
+        assert!(m.append_token(&mut t).unwrap()); // len 5, new block
+        assert_eq!(t.blocks.len(), 2);
+        m.release(&t);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn prefix_sharing_hits() {
+        let mut m = BlockManager::new(10, 4);
+        let prompt = [7u32, 8, 9, 10, 11, 12, 13, 14];
+        let a = m.allocate_prompt(&prompt).unwrap();
+        let used_after_a = m.free_blocks();
+        let b = m.allocate_prompt(&prompt).unwrap();
+        // Both full blocks shared; no extra allocation.
+        assert_eq!(m.free_blocks(), used_after_a);
+        assert_eq!(m.prefix_hits, 2);
+        assert_eq!(a.blocks, b.blocks);
+        m.release(&a);
+        m.release(&b);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn different_prefix_not_shared() {
+        let mut m = BlockManager::new(10, 4);
+        let a = m.allocate_prompt(&[1, 2, 3, 4]).unwrap();
+        let b = m.allocate_prompt(&[1, 2, 3, 5]).unwrap();
+        assert_ne!(a.blocks, b.blocks);
+        assert_eq!(m.prefix_hits, 0);
+        m.release(&a);
+        m.release(&b);
+    }
+
+    #[test]
+    fn exhaustion_fails_cleanly_and_rolls_back() {
+        let mut m = BlockManager::new(2, 4);
+        let err = m.allocate_prompt(&(0..20).collect::<Vec<u32>>());
+        assert!(err.is_err());
+        // Partial allocation must have been rolled back.
+        assert_eq!(m.free_blocks(), 2);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fork_shares_and_releases() {
+        let mut m = BlockManager::new(4, 4);
+        let a = m.allocate_prompt(&[1, 2, 3, 4, 5]).unwrap();
+        let free_before = m.free_blocks();
+        let b = m.fork(&a);
+        assert_eq!(m.free_blocks(), free_before);
+        m.release(&a);
+        m.check_invariants().unwrap();
+        m.release(&b);
+        assert_eq!(m.free_blocks(), 4);
+    }
+
+    #[test]
+    fn prop_alloc_free_never_leaks() {
+        quick("kv_no_leak", |rng: &mut Prng| {
+            let mut m = BlockManager::new(rng.range(4, 32), rng.range(1, 8));
+            let mut live: Vec<BlockTable> = vec![];
+            for _ in 0..rng.range(1, 60) {
+                match rng.range(0, 2) {
+                    0 => {
+                        let n = rng.range(1, 30);
+                        let toks: Vec<u32> = (0..n).map(|_| rng.below(50) as u32).collect();
+                        if let Ok(t) = m.allocate_prompt(&toks) {
+                            live.push(t);
+                        }
+                    }
+                    1 if !live.is_empty() => {
+                        let i = rng.range(0, live.len() - 1);
+                        let t = live.swap_remove(i);
+                        m.release(&t);
+                    }
+                    _ => {
+                        if let Some(t) = live.last_mut() {
+                            let _ = m.append_token(t);
+                        }
+                    }
+                }
+                m.check_invariants().unwrap();
+            }
+            for t in live.drain(..) {
+                m.release(&t);
+            }
+            assert_eq!(m.free_blocks(), m.n_blocks());
+        });
+    }
+
+    #[test]
+    fn prop_prefix_cache_consistent_with_content() {
+        quick("kv_prefix_consistency", |rng: &mut Prng| {
+            let bs = 4;
+            let mut m = BlockManager::new(64, bs);
+            // Same content must share, different must not (while blocks live).
+            let n = rng.range(1, 4) * bs;
+            let toks: Vec<u32> = (0..n).map(|_| rng.below(10) as u32).collect();
+            let a = m.allocate_prompt(&toks).unwrap();
+            let b = m.allocate_prompt(&toks).unwrap();
+            assert_eq!(a.blocks[..n / bs], b.blocks[..n / bs]);
+            let mut other = toks.clone();
+            other[0] ^= 1;
+            let c = m.allocate_prompt(&other).unwrap();
+            assert_ne!(a.blocks[0], c.blocks[0]);
+            m.release(&a);
+            m.release(&b);
+            m.release(&c);
+            m.check_invariants().unwrap();
+        });
+    }
+}

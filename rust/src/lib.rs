@@ -1,0 +1,49 @@
+//! # omni-serve
+//!
+//! A fully disaggregated serving system for any-to-any multimodal models —
+//! a from-scratch reproduction of *vLLM-Omni: Fully Disaggregated Serving
+//! for Any-to-Any Multimodal Models* (CS.DC 2026).
+//!
+//! The system decomposes complex any-to-any architectures (Thinker→Talker→
+//! Vocoder speech pipelines, AR+DiT image pipelines, patch-codec audio
+//! pipelines) into a [`stage_graph::StageGraph`]: nodes are model stages
+//! served by independent engines ([`engine::ar`] — a vLLM-like continuous-
+//! batching engine — and [`engine::diffusion`] — a DiT denoising engine),
+//! edges are transfer functions routed through a unified
+//! [`connector::Connector`] (inline queue / POSIX shared memory /
+//! Mooncake-like TCP).  The [`orchestrator`] owns request lifecycles and
+//! streaming stage output.
+//!
+//! Model compute is AOT-lowered from JAX/Pallas (see `python/compile/`)
+//! into HLO-text artifacts executed through the PJRT CPU client
+//! ([`runtime`]).  Python never runs on the request path.
+//!
+//! ```text
+//!  requests ──► orchestrator ──► [Thinker engine] ─connector─► [Talker engine]
+//!                   │                 (AR, vLLM-like)             (AR, per-step
+//!                   │                                              preprocess)
+//!                   └── metrics ◄── [Vocoder engine] ◄─connector─────┘
+//!                                     (DiT / CNN)
+//! ```
+
+pub mod audio;
+pub mod baseline;
+pub mod bench_util;
+pub mod cli;
+pub mod config;
+pub mod connector;
+pub mod device;
+pub mod engine;
+pub mod json;
+pub mod kv_cache;
+pub mod metrics;
+pub mod orchestrator;
+pub mod runtime;
+pub mod server;
+pub mod stage_graph;
+pub mod tokenizer;
+pub mod trace;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,165 @@
+//! omni-serve launcher: `serve`, `run`, `graph`, `baseline`.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+use omni_serve::cli::Args;
+use omni_serve::config::{loader, presets};
+use omni_serve::orchestrator::{Orchestrator, RunOptions};
+use omni_serve::runtime::Artifacts;
+use omni_serve::stage_graph::transfers::Registry;
+use omni_serve::trace::datasets;
+use omni_serve::util::fmt;
+
+const USAGE: &str = "\
+omni-serve — fully disaggregated serving for any-to-any multimodal models
+
+USAGE:
+  omni-serve serve --pipeline <name> [--addr 127.0.0.1:8090] [--config file.json]
+  omni-serve run   --pipeline <name> --dataset <librispeech|food101|ucf101|seedtts|vbench>
+                   [--n 8] [--rate 0] [--seed 1] [--no-streaming] [--baseline]
+  omni-serve graph [--pipeline <name>] [--list]
+  omni-serve help
+
+Pipelines: qwen2.5-omni, qwen3-omni, qwen3-omni-epd, bagel-t2i, bagel-i2i,
+           mimo-audio, mimo-audio-compiled, qwen-image, qwen-image-edit,
+           wan22-t2v, wan22-i2v
+";
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn pipeline_from(args: &Args) -> Result<omni_serve::config::PipelineConfig> {
+    if let Some(path) = args.flag("config") {
+        return loader::from_file(std::path::Path::new(path));
+    }
+    let name = args.flag("pipeline").unwrap_or("qwen3-omni");
+    presets::by_name(name).ok_or_else(|| anyhow::anyhow!("unknown pipeline `{name}` (see `omni-serve help`)"))
+}
+
+fn real_main() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.command.as_str() {
+        "serve" => {
+            let config = pipeline_from(&args)?;
+            let artifacts = Arc::new(Artifacts::load(&Artifacts::default_dir())?);
+            let addr = args.flag("addr").unwrap_or("127.0.0.1:8090");
+            let server = omni_serve::server::Server::bind(addr, config, artifacts)?;
+            server.serve()
+        }
+        "run" => {
+            let config = pipeline_from(&args)?;
+            let artifacts = Arc::new(Artifacts::load(&Artifacts::default_dir())?);
+            let n = args.flag_usize("n", 8)?;
+            let rate = args.flag_f64("rate", 0.0)?;
+            let seed = args.flag_usize("seed", 1)? as u64;
+            let dataset = args.flag("dataset").unwrap_or("ucf101");
+            let workload = match dataset {
+                "librispeech" => datasets::librispeech(seed, n, rate),
+                "food101" => datasets::food101(seed, n, rate),
+                "ucf101" => datasets::ucf101(seed, n, rate),
+                "seedtts" => datasets::seedtts(seed, n, rate),
+                "vbench" => datasets::vbench(seed, n, rate, 20, false),
+                other => bail!("unknown dataset `{other}`"),
+            };
+            let audio_stage: Option<&'static str> = if config.stage("talker").is_some() {
+                Some("talker")
+            } else if config.stage("backbone").is_some() {
+                Some("backbone")
+            } else {
+                None
+            };
+            println!(
+                "pipeline={} dataset={} n={} (avg in {:.1} tok, text out {:.1}, audio out {:.1})",
+                config.name,
+                workload.name,
+                workload.len(),
+                workload.avg_input_tokens(),
+                workload.avg_text_out(),
+                workload.avg_audio_out(),
+            );
+            if args.flag_bool("baseline") {
+                let report = omni_serve::baseline::run_monolithic(
+                    &artifacts,
+                    &config,
+                    &workload,
+                    &omni_serve::baseline::BaselineOptions {
+                        lazy_compile: args.flag_bool("lazy-compile"),
+                        no_kv_cache: false,
+                    },
+                    audio_stage,
+                )?;
+                print_report(&report);
+            } else {
+                let opts = RunOptions {
+                    streaming: !args.flag_bool("no-streaming"),
+                    lazy_compile: args.flag_bool("lazy-compile"),
+                    realtime_arrivals: rate > 0.0,
+                    store_addr: None,
+                };
+                let orch = Orchestrator::new(config, artifacts, Registry::builtin(), opts)?;
+                let summary = orch.run_workload(&workload, audio_stage)?;
+                print_report(&summary.report);
+                for s in &summary.stages {
+                    if let Some(ar) = &s.ar {
+                        println!(
+                            "stage {:>10}: {} prefill tok, {} decode tok, {} calls, exec {} (marshal {})",
+                            s.name,
+                            ar.prefill_tokens,
+                            ar.decode_tokens,
+                            ar.prefill_calls + ar.decode_calls + ar.scan_calls,
+                            fmt::dur(ar.exec_seconds),
+                            fmt::dur(ar.marshal_seconds),
+                        );
+                    }
+                }
+            }
+            Ok(())
+        }
+        "graph" => {
+            if args.flag_bool("list") {
+                for p in presets::all() {
+                    println!("{}", p.name);
+                }
+                return Ok(());
+            }
+            let config = pipeline_from(&args)?;
+            println!("{}", loader::to_json_string(&config));
+            Ok(())
+        }
+        "help" | "" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command `{other}`\n{USAGE}"),
+    }
+}
+
+fn print_report(r: &omni_serve::metrics::RunReport) {
+    let mut jct = r.jct.clone();
+    println!(
+        "completed={} wall={} | JCT mean={} p50={} p99={} | TTFT mean={} | RTF mean={:.3}",
+        r.completed,
+        fmt::dur(r.wall_s),
+        fmt::dur(r.mean_jct()),
+        fmt::dur(jct.p50()),
+        fmt::dur(jct.p99()),
+        fmt::dur(r.mean_ttft()),
+        if r.rtf.is_empty() { f64::NAN } else { r.mean_rtf() },
+    );
+    let mut stages: Vec<&String> = r.per_stage.keys().collect();
+    stages.sort();
+    for s in stages {
+        println!(
+            "  stage {:>10}: mean residence {} | {} tokens | TPS {:.1}",
+            s,
+            fmt::dur(r.stage_mean_time(s)),
+            r.stage_tokens(s),
+            r.stage_tps(s),
+        );
+    }
+}

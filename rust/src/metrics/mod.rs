@@ -1,0 +1,223 @@
+//! Serving metrics (paper §4.1): JCT, RTF, TTFT, per-stage TPS, and the
+//! per-stage time decomposition behind Fig. 7.
+//!
+//! Engines and the orchestrator emit [`Event`]s into a [`Recorder`]
+//! (lock-protected, cheap); [`RunReport`] aggregates a finished run into
+//! the numbers the bench harness prints.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::audio;
+use crate::util::stats::Samples;
+
+/// Lifecycle events for one request flowing through the stage graph.
+#[derive(Debug, Clone)]
+pub enum Event {
+    /// Request entered the system (run-relative seconds).
+    Arrived { req: u64, t: f64 },
+    /// Request was admitted to a stage's engine.
+    StageAdmit { req: u64, stage: &'static str, t: f64 },
+    /// A stage produced its first output item for this request.
+    StageFirstOutput { req: u64, stage: &'static str, t: f64 },
+    /// A stage finished this request, having produced `tokens` items.
+    StageDone { req: u64, stage: &'static str, t: f64, tokens: usize },
+    /// Request fully completed.
+    Completed { req: u64, t: f64 },
+}
+
+#[derive(Debug, Default, Clone)]
+struct StageRec {
+    admit: Option<f64>,
+    first: Option<f64>,
+    done: Option<f64>,
+    tokens: usize,
+}
+
+#[derive(Debug, Default, Clone)]
+struct ReqRec {
+    arrived: Option<f64>,
+    completed: Option<f64>,
+    stages: HashMap<&'static str, StageRec>,
+}
+
+/// Thread-safe event sink.
+#[derive(Debug, Default)]
+pub struct Recorder {
+    inner: Mutex<HashMap<u64, ReqRec>>,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn emit(&self, e: Event) {
+        let mut m = self.inner.lock().unwrap();
+        match e {
+            Event::Arrived { req, t } => {
+                m.entry(req).or_default().arrived = Some(t);
+            }
+            Event::StageAdmit { req, stage, t } => {
+                m.entry(req).or_default().stages.entry(stage).or_default().admit = Some(t);
+            }
+            Event::StageFirstOutput { req, stage, t } => {
+                let s = m.entry(req).or_default().stages.entry(stage).or_default();
+                if s.first.is_none() {
+                    s.first = Some(t);
+                }
+            }
+            Event::StageDone { req, stage, t, tokens } => {
+                let s = m.entry(req).or_default().stages.entry(stage).or_default();
+                s.done = Some(t);
+                s.tokens = tokens;
+            }
+            Event::Completed { req, t } => {
+                m.entry(req).or_default().completed = Some(t);
+            }
+        }
+    }
+
+    /// Aggregate into a [`RunReport`].  `audio_stage` names the stage whose
+    /// token count measures generated audio (for RTF); `None` = no audio.
+    pub fn report(&self, wall_s: f64, audio_stage: Option<&str>) -> RunReport {
+        let m = self.inner.lock().unwrap();
+        let mut jct = Samples::new();
+        let mut ttft = Samples::new();
+        let mut rtf = Samples::new();
+        let mut per_stage: HashMap<String, StageAgg> = HashMap::new();
+        let mut completed = 0usize;
+
+        for rec in m.values() {
+            let (Some(a), Some(c)) = (rec.arrived, rec.completed) else { continue };
+            completed += 1;
+            jct.push(c - a);
+            // TTFT: first output of the LAST stage that produced anything.
+            if let Some(first) = rec
+                .stages
+                .values()
+                .filter_map(|s| s.first)
+                .fold(None::<f64>, |acc, t| Some(acc.map_or(t, |x| x.max(t))))
+            {
+                ttft.push(first - a);
+            }
+            for (name, s) in &rec.stages {
+                let agg = per_stage.entry(name.to_string()).or_default();
+                if let (Some(ad), Some(dn)) = (s.admit, s.done) {
+                    agg.time.push(dn - ad);
+                    agg.tokens += s.tokens;
+                    agg.requests += 1;
+                }
+            }
+            if let Some(stage) = audio_stage {
+                if let Some(s) = rec.stages.get(stage) {
+                    if s.tokens > 0 {
+                        rtf.push(audio::rtf(c - a, s.tokens));
+                    }
+                }
+            }
+        }
+
+        RunReport { wall_s, completed, jct, ttft, rtf, per_stage }
+    }
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct StageAgg {
+    /// Per-request residence time in the stage (admit -> done).
+    pub time: Samples,
+    pub tokens: usize,
+    pub requests: usize,
+}
+
+/// Aggregated results for one benchmark run.
+#[derive(Debug)]
+pub struct RunReport {
+    pub wall_s: f64,
+    pub completed: usize,
+    pub jct: Samples,
+    pub ttft: Samples,
+    pub rtf: Samples,
+    pub per_stage: HashMap<String, StageAgg>,
+}
+
+impl RunReport {
+    pub fn mean_jct(&self) -> f64 {
+        self.jct.mean()
+    }
+
+    pub fn mean_rtf(&self) -> f64 {
+        self.rtf.mean()
+    }
+
+    pub fn mean_ttft(&self) -> f64 {
+        self.ttft.mean()
+    }
+
+    /// Aggregate tokens-per-second for a stage over the whole run
+    /// (the paper's Thinker/Talker TPS metric).
+    pub fn stage_tps(&self, stage: &str) -> f64 {
+        match self.per_stage.get(stage) {
+            Some(agg) if self.wall_s > 0.0 => agg.tokens as f64 / self.wall_s,
+            _ => 0.0,
+        }
+    }
+
+    /// Mean per-request residence time for a stage (Fig. 7 decomposition).
+    pub fn stage_mean_time(&self, stage: &str) -> f64 {
+        self.per_stage.get(stage).map(|a| a.time.mean()).unwrap_or(0.0)
+    }
+
+    pub fn stage_tokens(&self, stage: &str) -> usize {
+        self.per_stage.get(stage).map(|a| a.tokens).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_lifecycle() {
+        let r = Recorder::new();
+        r.emit(Event::Arrived { req: 1, t: 0.0 });
+        r.emit(Event::StageAdmit { req: 1, stage: "thinker", t: 0.1 });
+        r.emit(Event::StageFirstOutput { req: 1, stage: "thinker", t: 0.2 });
+        r.emit(Event::StageDone { req: 1, stage: "thinker", t: 1.1, tokens: 10 });
+        r.emit(Event::StageAdmit { req: 1, stage: "talker", t: 0.3 });
+        r.emit(Event::StageFirstOutput { req: 1, stage: "talker", t: 0.5 });
+        r.emit(Event::StageDone { req: 1, stage: "talker", t: 2.0, tokens: 100 });
+        r.emit(Event::Completed { req: 1, t: 2.0 });
+        let rep = r.report(2.0, Some("talker"));
+        assert_eq!(rep.completed, 1);
+        assert!((rep.mean_jct() - 2.0).abs() < 1e-9);
+        // RTF: 2 s processing / (100 tokens / 50 Hz = 2 s audio) = 1.0
+        assert!((rep.mean_rtf() - 1.0).abs() < 1e-9);
+        assert!((rep.stage_tps("talker") - 50.0).abs() < 1e-9);
+        assert!((rep.stage_mean_time("thinker") - 1.0).abs() < 1e-9);
+        // TTFT = last stage's first output = 0.5
+        assert!((rep.mean_ttft() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn incomplete_requests_excluded() {
+        let r = Recorder::new();
+        r.emit(Event::Arrived { req: 1, t: 0.0 });
+        let rep = r.report(1.0, None);
+        assert_eq!(rep.completed, 0);
+        assert_eq!(rep.jct.len(), 0);
+    }
+
+    #[test]
+    fn first_output_not_overwritten() {
+        let r = Recorder::new();
+        r.emit(Event::Arrived { req: 1, t: 0.0 });
+        r.emit(Event::StageAdmit { req: 1, stage: "s", t: 0.0 });
+        r.emit(Event::StageFirstOutput { req: 1, stage: "s", t: 0.25 });
+        r.emit(Event::StageFirstOutput { req: 1, stage: "s", t: 0.9 });
+        r.emit(Event::StageDone { req: 1, stage: "s", t: 1.0, tokens: 1 });
+        r.emit(Event::Completed { req: 1, t: 1.0 });
+        let rep = r.report(1.0, None);
+        assert!((rep.mean_ttft() - 0.25).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,313 @@
+//! The orchestrator (paper §3.1/§3.3): launches one engine per stage,
+//! wires connectors along the stage-graph edges, routes requests, and
+//! tracks per-request lifecycle metrics.
+//!
+//! Threading model: engines own non-`Send` PJRT state, so each stage runs
+//! on its own thread, constructed in-thread.  Data crosses threads only
+//! as [`StageItem`]s through [`crate::connector`]s — the disaggregation
+//! boundary.  Transfers run consumer-side (the downstream thread turns
+//! upstream items into engine commands).
+
+pub mod stage;
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::PipelineConfig;
+use crate::connector;
+use crate::engine::StageItem;
+use crate::metrics::{Event, Recorder, RunReport};
+use crate::stage_graph::transfers::{ReqMeta, ReqTable, Registry, TransferCtx};
+use crate::stage_graph::StageGraph;
+use crate::trace::{Request, Workload};
+use crate::runtime::Artifacts;
+
+/// Run-wide options.
+#[derive(Debug, Clone)]
+pub struct RunOptions {
+    /// Stream partial stage outputs (paper §3.3 "streaming stage
+    /// output"); false = stage barriers (full output before transfer).
+    pub streaming: bool,
+    /// Baseline knob: recompile executables per call (eager analog).
+    pub lazy_compile: bool,
+    /// Honor request arrival times (online serving); false = offline
+    /// batch (all requests available at t=0, the paper's eval mode).
+    pub realtime_arrivals: bool,
+    /// External Mooncake store address (spawned automatically if any
+    /// edge uses the TCP connector and this is None).
+    pub store_addr: Option<String>,
+}
+
+impl Default for RunOptions {
+    fn default() -> Self {
+        Self { streaming: true, lazy_compile: false, realtime_arrivals: false, store_addr: None }
+    }
+}
+
+/// Wall clock shared across stage threads (run-relative seconds).
+/// Resettable so engine construction/compilation is excluded from
+/// request timing.
+#[derive(Debug, Clone)]
+pub struct RunClock(Arc<Mutex<Instant>>);
+
+impl RunClock {
+    pub fn new() -> Self {
+        Self(Arc::new(Mutex::new(Instant::now())))
+    }
+
+    pub fn now(&self) -> f64 {
+        self.0.lock().unwrap().elapsed().as_secs_f64()
+    }
+
+    /// Restart the clock (after all engines report ready).
+    pub fn reset(&self) {
+        *self.0.lock().unwrap() = Instant::now();
+    }
+}
+
+impl Default for RunClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Per-stage summary returned after a run.
+#[derive(Debug, Default, Clone)]
+pub struct StageSummary {
+    pub name: String,
+    pub ar: Option<crate::engine::ar::EngineStats>,
+    pub diffusion: Option<crate::engine::diffusion::DiffusionStats>,
+    pub vocoder: Option<crate::engine::vocoder::VocoderStats>,
+    pub bytes_sent: u64,
+}
+
+/// Everything a finished run reports.
+#[derive(Debug)]
+pub struct RunSummary {
+    pub report: RunReport,
+    pub stages: Vec<StageSummary>,
+    pub wall_s: f64,
+}
+
+/// The disaggregated pipeline runner.
+pub struct Orchestrator {
+    graph: StageGraph,
+    registry: Registry,
+    artifacts: Arc<Artifacts>,
+    opts: RunOptions,
+}
+
+impl Orchestrator {
+    pub fn new(
+        config: PipelineConfig,
+        artifacts: Arc<Artifacts>,
+        registry: Registry,
+        opts: RunOptions,
+    ) -> Result<Self> {
+        let graph = StageGraph::build(config, &registry)?;
+        // Device-memory admission for the paper's testbed model.
+        let pool = crate::device::DevicePool::new(
+            graph.config.n_devices,
+            graph.config.device_bytes,
+        );
+        graph
+            .reserve_memory(&pool, &artifacts)
+            .with_context(|| format!("placing pipeline `{}`", graph.config.name))?;
+        Ok(Self { graph, registry, artifacts, opts })
+    }
+
+    pub fn graph(&self) -> &StageGraph {
+        &self.graph
+    }
+
+    /// Serve a whole workload to completion and report metrics.
+    /// `audio_stage` names the stage whose generated tokens measure audio
+    /// duration for RTF (e.g. "talker"), if any.
+    pub fn run_workload(&self, workload: &Workload, audio_stage: Option<&'static str>) -> Result<RunSummary> {
+        let n_stages = self.graph.n_stages();
+        let recorder = Arc::new(Recorder::new());
+        let clock = RunClock::new();
+        let reqs: ReqTable = Arc::new(Mutex::new(Default::default()));
+        let stop = Arc::new(AtomicBool::new(false));
+
+        // Spawn a Mooncake store if any edge wants TCP.
+        let needs_tcp = self
+            .graph
+            .config
+            .edges
+            .iter()
+            .any(|e| e.connector == crate::config::ConnectorKind::Tcp);
+        let _store;
+        let store_addr: Option<String> = if needs_tcp {
+            match &self.opts.store_addr {
+                Some(a) => Some(a.clone()),
+                None => {
+                    let s = connector::tcp::MooncakeStore::spawn("127.0.0.1:0")?;
+                    let a = s.addr().to_string();
+                    _store = s;
+                    Some(a)
+                }
+            }
+        } else {
+            None
+        };
+
+        // Wire connectors: for each edge, tx to producer, (rx, transfer) to
+        // consumer.
+        let mut stage_rxs: Vec<Vec<(connector::ConnectorRx, String)>> =
+            (0..n_stages).map(|_| vec![]).collect();
+        let mut stage_txs: Vec<Vec<connector::ConnectorTx>> =
+            (0..n_stages).map(|_| vec![]).collect();
+        for e in &self.graph.config.edges {
+            let from = self.graph.stage_index(&e.from).unwrap();
+            let to = self.graph.stage_index(&e.to).unwrap();
+            let label = format!("{}2{}", e.from, e.to);
+            let (tx, rx) = connector::pair(e.connector, &label, store_addr.as_deref())?;
+            stage_txs[from].push(tx);
+            stage_rxs[to].push((rx, e.transfer.clone()));
+        }
+
+        // Entry channel + exit collector.
+        let (front_tx, front_rx) = mpsc::channel::<Request>();
+        let (sink_tx, sink_rx) = mpsc::channel::<StageItem>();
+
+        // Spawn stage threads; they build engines (PJRT clients, compiled
+        // executables, weight upload) and then rendezvous on this barrier
+        // so compilation time is excluded from request metrics.
+        let ready = Arc::new(std::sync::Barrier::new(n_stages + 1));
+        let inflight = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        let mut front_rx_opt = Some(front_rx);
+        for i in 0..n_stages {
+            let spec = stage::StageSpec {
+                index: i,
+                cfg: self.graph.stage(i).clone(),
+                artifacts: self.artifacts.clone(),
+                rxs: std::mem::take(&mut stage_rxs[i]),
+                txs: std::mem::take(&mut stage_txs[i]),
+                registry: self.registry.clone(),
+                reqs: reqs.clone(),
+                recorder: recorder.clone(),
+                clock: clock.clone(),
+                stop: stop.clone(),
+                front_rx: if i == self.graph.entry { front_rx_opt.take() } else { None },
+                sink: if self.graph.exits.contains(&i) { Some(sink_tx.clone()) } else { None },
+                streaming: self.opts.streaming,
+                lazy_compile: self.opts.lazy_compile,
+                device_bytes: self.graph.config.device_bytes,
+                downstream_hint: self.downstream_hint(i),
+                ready: ready.clone(),
+            };
+            handles.push(stage::spawn(spec)?);
+        }
+        drop(sink_tx);
+        ready.wait();
+        clock.reset();
+
+        // Feed requests.
+        let n_requests = workload.requests.len();
+        inflight.store(n_requests, Ordering::SeqCst);
+        {
+            let mut table = reqs.lock().unwrap();
+            for r in &workload.requests {
+                table.insert(
+                    r.id,
+                    ReqMeta {
+                        seed: r.seed,
+                        max_audio_tokens: r.max_audio_tokens,
+                        diffusion_steps: r.diffusion_steps,
+                        ignore_eos: r.ignore_eos,
+                        prompt_tokens: r.prompt_tokens.clone(),
+                        max_text_tokens: r.max_text_tokens,
+                    },
+                );
+            }
+        }
+        let feeder = {
+            let clock = clock.clone();
+            let recorder = recorder.clone();
+            let realtime = self.opts.realtime_arrivals;
+            let mut sorted = workload.requests.clone();
+            sorted.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+            std::thread::spawn(move || {
+                for r in sorted {
+                    if realtime {
+                        let wait = r.arrival_s - clock.now();
+                        if wait > 0.0 {
+                            std::thread::sleep(std::time::Duration::from_secs_f64(wait));
+                        }
+                    }
+                    recorder.emit(Event::Arrived { req: r.id, t: clock.now() });
+                    if front_tx.send(r).is_err() {
+                        break;
+                    }
+                }
+            })
+        };
+
+        // Collect completions from exit stages.
+        let mut remaining = n_requests;
+        let mut done: std::collections::HashSet<u64> = Default::default();
+        while remaining > 0 {
+            match sink_rx.recv() {
+                Ok(item) => {
+                    if item.finished && done.insert(item.req_id) {
+                        recorder.emit(Event::Completed { req: item.req_id, t: clock.now() });
+                        remaining -= 1;
+                    }
+                }
+                Err(_) => break,
+            }
+        }
+        feeder.join().ok();
+        stop.store(true, Ordering::SeqCst);
+
+        let mut stages = Vec::new();
+        for h in handles {
+            match h.join() {
+                Ok(Ok(summary)) => stages.push(summary),
+                Ok(Err(e)) => return Err(e),
+                Err(_) => anyhow::bail!("stage thread panicked"),
+            }
+        }
+        let wall = clock.now();
+        let report = recorder.report(wall, audio_stage);
+        Ok(RunSummary { report, stages, wall_s: wall })
+    }
+
+    /// Chunking/conditioning hints a consumer stage's transfers need
+    /// (derived from ITS model manifest, passed to incoming transfers).
+    fn downstream_hint(&self, i: usize) -> TransferCtx {
+        let s = self.graph.stage(i);
+        let (chunk, ctd) = match self.artifacts.model(&s.model) {
+            Ok(m) => match m.kind.as_str() {
+                "dit" => (
+                    m.cfg_usize("n_tokens").unwrap_or(64),
+                    m.cfg_usize("cond_tokens_dim").unwrap_or(0),
+                ),
+                "cnn_vocoder" => (m.cfg_usize("t_frames").unwrap_or(64), 0),
+                "patch_codec" => (m.cfg_usize("t_max").unwrap_or(64), 0),
+                _ => (0, 0),
+            },
+            Err(_) => (0, 0),
+        };
+        TransferCtx {
+            reqs: Arc::new(Mutex::new(Default::default())), // replaced in stage
+            chunk_frames: chunk,
+            cond_tokens_dim: ctd,
+        }
+    }
+}
+
+/// Which multimodal encoder serves a given thinker model (encoder output
+/// width must match the thinker width).
+pub fn encoder_model_for(stage_model: &str) -> Option<&'static str> {
+    match stage_model {
+        "thinker25" => Some("enc25"),
+        "thinker3" => Some("enc3"),
+        _ => None,
+    }
+}

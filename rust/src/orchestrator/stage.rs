@@ -1,0 +1,477 @@
+//! One stage's serving thread: engine construction, input routing
+//! (frontend requests + upstream items through transfers), the engine
+//! loop, and output forwarding.
+
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+
+use anyhow::{bail, Result};
+
+use super::{RunClock, StageSummary};
+use crate::config::{StageConfig, StageKind};
+use crate::connector::{ConnectorRx, ConnectorTx};
+use crate::engine::ar::{ArEngine, ArEngineOptions, ArJob, Preprocess, PromptItem};
+use crate::engine::diffusion::{DiffusionEngine, DiffusionOptions};
+use crate::engine::encoder::{EncodeJob, EncoderEngine};
+use crate::engine::vocoder::{VocoderEngine, VocoderKind};
+use crate::engine::{SamplingParams, StageItem};
+use crate::metrics::{Event, Recorder};
+use crate::runtime::{Artifacts, HostTensor, StageRuntime};
+use crate::stage_graph::transfers::{EngineCmd, ReqTable, Registry, Transfer, TransferCtx};
+use crate::trace::Request;
+use crate::util::Prng;
+
+pub struct StageSpec {
+    pub index: usize,
+    pub cfg: StageConfig,
+    pub artifacts: Arc<Artifacts>,
+    /// Incoming edges: connector receiver + transfer name.
+    pub rxs: Vec<(ConnectorRx, String)>,
+    /// Outgoing edges (items are cloned per edge).
+    pub txs: Vec<ConnectorTx>,
+    pub registry: Registry,
+    pub reqs: ReqTable,
+    pub recorder: Arc<Recorder>,
+    pub clock: RunClock,
+    pub stop: Arc<std::sync::atomic::AtomicBool>,
+    /// Entry stage only: frontend request channel.
+    pub front_rx: Option<mpsc::Receiver<Request>>,
+    /// Exit stage only: completed-item sink.
+    pub sink: Option<mpsc::Sender<StageItem>>,
+    pub streaming: bool,
+    pub lazy_compile: bool,
+    /// Per-device memory budget (KV sizing).
+    pub device_bytes: usize,
+    /// Transfer context template for incoming edges (chunk sizes etc.).
+    pub downstream_hint: TransferCtx,
+    /// Rendezvous after engine construction (compilation excluded from
+    /// request timing).
+    pub ready: Arc<std::sync::Barrier>,
+}
+
+enum Engine {
+    Ar(Box<ArEngine>),
+    Diffusion(Box<DiffusionEngine>),
+    Vocoder(Box<VocoderEngine>),
+    Encoder(Box<EncoderEngine>),
+}
+
+impl Engine {
+    fn idle(&self) -> bool {
+        match self {
+            Engine::Ar(e) => e.idle(),
+            Engine::Diffusion(e) => e.idle(),
+            Engine::Vocoder(e) => e.idle(),
+            Engine::Encoder(e) => e.idle(),
+        }
+    }
+
+    fn step(&mut self) -> Result<Vec<StageItem>> {
+        match self {
+            Engine::Ar(e) => e.step(),
+            Engine::Diffusion(e) => e.step(),
+            Engine::Vocoder(e) => e.step(),
+            Engine::Encoder(e) => e.step(),
+        }
+    }
+}
+
+pub fn spawn(spec: StageSpec) -> Result<JoinHandle<Result<StageSummary>>> {
+    let name = spec.cfg.name.clone();
+    std::thread::Builder::new()
+        .name(format!("stage-{name}"))
+        .spawn(move || {
+            let stage = spec.cfg.name.clone();
+            let r = run(spec);
+            if let Err(e) = &r {
+                log::error!("stage `{stage}` failed: {e:#}");
+                eprintln!("stage `{stage}` failed: {e:#}");
+            }
+            r
+        })
+        .map_err(Into::into)
+}
+
+fn build_engine(spec: &StageSpec) -> Result<Engine> {
+    let c = &spec.cfg;
+    Ok(match c.kind {
+        StageKind::Ar => {
+            let model = spec.artifacts.model(&c.model)?;
+            let bytes_per_token = model.cfg_usize("n_layers")?
+                * 2
+                * model.cfg_usize("n_heads")?
+                * model.cfg_usize("d_head")?
+                * 4;
+            // KV budget: fraction of the stage's device memory, summed
+            // over its TP group.
+            let kv_bytes = (c.kv_memory_frac
+                * c.devices.len() as f64
+                * spec.device_bytes as f64) as usize;
+            let block_size = 16;
+            let kv_blocks = (kv_bytes / bytes_per_token / block_size).max(4);
+            let cond_dim = model.cfg_usize("cond_dim").unwrap_or(0);
+            let opts = ArEngineOptions {
+                max_batch: c.max_batch,
+                chunked_prefill: c.chunked_prefill,
+                multi_step: c.multi_step,
+                stream_chunk: if spec.streaming { c.stream_chunk } else { 0 },
+                preprocess: if cond_dim > 0 { Preprocess::UpstreamMean } else { Preprocess::None },
+                kv_blocks,
+                kv_block_size: block_size,
+                lazy_compile: spec.lazy_compile,
+                emit_hiddens: true,
+            };
+            Engine::Ar(Box::new(ArEngine::new(&spec.artifacts, &c.model, opts)?))
+        }
+        StageKind::Dit => {
+            let opts = DiffusionOptions {
+                max_batch: c.max_batch,
+                steps: c.diffusion.steps,
+                cfg_scale: c.diffusion.cfg_scale,
+                stepcache_threshold: c.diffusion.stepcache_threshold,
+                lazy_compile: spec.lazy_compile,
+            };
+            Engine::Diffusion(Box::new(DiffusionEngine::new(&spec.artifacts, &c.model, opts)?))
+        }
+        StageKind::CnnVocoder => Engine::Vocoder(Box::new(VocoderEngine::new(
+            &spec.artifacts,
+            &c.model,
+            VocoderKind::Cnn,
+            c.max_batch,
+            spec.lazy_compile,
+        )?)),
+        StageKind::PatchDecoder => Engine::Vocoder(Box::new(VocoderEngine::new(
+            &spec.artifacts,
+            &c.model,
+            VocoderKind::PatchDecoder,
+            c.max_batch,
+            spec.lazy_compile,
+        )?)),
+        StageKind::Encoder => Engine::Encoder(Box::new(EncoderEngine::new(
+            &spec.artifacts,
+            &c.model,
+            c.max_batch,
+        )?)),
+    })
+}
+
+fn run(mut spec: StageSpec) -> Result<StageSummary> {
+    let stage_name: &'static str = Box::leak(spec.cfg.name.clone().into_boxed_str());
+    let engine_result = build_engine(&spec);
+    // Rendezvous even on failure so the orchestrator never deadlocks.
+    spec.ready.wait();
+    let mut engine = engine_result?;
+
+    // Entry AR stages with multimodal inputs own the encoder (paper: the
+    // encoder is part of the Thinker stage).
+    let mut encoder: Option<StageRuntime> = None;
+    if spec.front_rx.is_some() {
+        if let Some(enc) = super::encoder_model_for(&spec.cfg.model) {
+            if spec.artifacts.models.contains_key(enc) {
+                encoder = Some(StageRuntime::new(&spec.artifacts, enc)?);
+            }
+        }
+    }
+
+    // Instantiate incoming transfers with the request table.
+    let mut inputs: Vec<(ConnectorRx, Transfer)> = Vec::new();
+    for (rx, tname) in spec.rxs.drain(..) {
+        let ctx = TransferCtx {
+            reqs: spec.reqs.clone(),
+            chunk_frames: spec.downstream_hint.chunk_frames,
+            cond_tokens_dim: spec.downstream_hint.cond_tokens_dim,
+        };
+        let t = spec.registry.instantiate(&tname, ctx)?;
+        inputs.push((rx, t));
+    }
+
+    // Per-request output token counters (for StageDone events).
+    let mut tokens_out: HashMap<u64, usize> = HashMap::new();
+    let mut first_out: HashMap<u64, bool> = HashMap::new();
+
+    loop {
+        let mut worked = false;
+
+        // 1) Frontend requests (entry stage only).
+        if let Some(front) = &spec.front_rx {
+            while let Ok(req) = front.try_recv() {
+                spec.recorder.emit(Event::StageAdmit {
+                    req: req.id,
+                    stage: stage_name,
+                    t: spec.clock.now(),
+                });
+                match &mut engine {
+                    Engine::Ar(e) => e.submit(entry_job(&spec, encoder.as_mut(), &req)?),
+                    Engine::Diffusion(e) => e.submit(diffusion_entry_job(e, &req)),
+                    Engine::Vocoder(e) => e.submit(crate::engine::vocoder::VocoderJob {
+                        req_id: req.id,
+                        chunk_idx: 0,
+                        tokens: req.prompt_tokens.clone(),
+                        final_chunk: true,
+                    }),
+                    Engine::Encoder(e) => e.submit(encode_entry_job(e, &req)),
+                }
+                worked = true;
+            }
+        }
+
+        // 2) Upstream items through transfers.
+        for (rx, transfer) in &mut inputs {
+            while let Some(item) = rx.try_recv()? {
+                for cmd in transfer(&item)? {
+                    apply_cmd(
+                        &mut engine,
+                        cmd,
+                        stage_name,
+                        &spec.recorder,
+                        &spec.clock,
+                    )?;
+                }
+                worked = true;
+            }
+        }
+
+        // 3) One engine iteration.
+        if !engine.idle() {
+            let items = engine.step()?;
+            worked = true;
+            for item in items {
+                let rid = item.req_id;
+                if !first_out.contains_key(&rid) {
+                    first_out.insert(rid, true);
+                    spec.recorder.emit(Event::StageFirstOutput {
+                        req: rid,
+                        stage: stage_name,
+                        t: spec.clock.now(),
+                    });
+                }
+                let produced = item
+                    .tensor("tokens")
+                    .map(|t| t.len())
+                    .or_else(|| {
+                        item.tensor("n_frames")
+                            .and_then(|f| f.as_i32().ok().map(|v| v[0] as usize))
+                    })
+                    .or_else(|| item.tensor("latent").map(|_| 1))
+                    .unwrap_or(0);
+                *tokens_out.entry(rid).or_default() += produced;
+                if item.finished {
+                    spec.recorder.emit(Event::StageDone {
+                        req: rid,
+                        stage: stage_name,
+                        t: spec.clock.now(),
+                        tokens: tokens_out.remove(&rid).unwrap_or(0),
+                    });
+                    first_out.remove(&rid);
+                }
+                // Forward a copy along every outgoing edge.  A closed
+                // connector after shutdown is benign: the run completes
+                // when the EXIT stage finishes each request (e.g. the
+                // Talker reaches its audio budget before the Thinker
+                // drains its last text chunks), so late items are dropped.
+                for tx in &mut spec.txs {
+                    if let Err(e) = tx.send(item.clone()) {
+                        if spec.stop.load(Ordering::SeqCst) {
+                            log::debug!("stage `{stage_name}`: dropping post-shutdown item: {e}");
+                        } else {
+                            return Err(e);
+                        }
+                    }
+                }
+                if let Some(sink) = &spec.sink {
+                    let _ = sink.send(item);
+                }
+            }
+        }
+
+        if !worked {
+            if spec.stop.load(Ordering::SeqCst) && engine.idle() {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        }
+    }
+
+    let mut summary = StageSummary { name: spec.cfg.name.clone(), ..Default::default() };
+    match engine {
+        Engine::Ar(e) => summary.ar = Some(e.stats.clone()),
+        Engine::Diffusion(e) => summary.diffusion = Some(e.stats.clone()),
+        Engine::Vocoder(e) => summary.vocoder = Some(e.stats.clone()),
+        Engine::Encoder(_) => {}
+    }
+    summary.bytes_sent = spec.txs.iter().map(|t| t.bytes_sent).sum();
+    Ok(summary)
+}
+
+fn apply_cmd(
+    engine: &mut Engine,
+    cmd: EngineCmd,
+    stage_name: &'static str,
+    recorder: &Recorder,
+    clock: &RunClock,
+) -> Result<()> {
+    match (engine, cmd) {
+        (Engine::Ar(e), EngineCmd::SubmitAr(job)) => {
+            recorder.emit(Event::StageAdmit { req: job.req_id, stage: stage_name, t: clock.now() });
+            e.submit(job);
+        }
+        (Engine::Ar(e), EngineCmd::Upstream { req_id, rows, dim, complete }) => {
+            e.push_upstream(req_id, &rows, dim.max(1), complete);
+        }
+        (Engine::Diffusion(e), EngineCmd::SubmitDiffusion(job)) => {
+            if job.chunk_idx == 0 {
+                recorder.emit(Event::StageAdmit {
+                    req: job.req_id,
+                    stage: stage_name,
+                    t: clock.now(),
+                });
+            }
+            e.submit(job);
+        }
+        (Engine::Vocoder(e), EngineCmd::SubmitVocoder(job)) => {
+            if job.chunk_idx == 0 {
+                recorder.emit(Event::StageAdmit {
+                    req: job.req_id,
+                    stage: stage_name,
+                    t: clock.now(),
+                });
+            }
+            e.submit(job);
+        }
+        (_, cmd) => bail!("stage `{stage_name}`: engine cannot handle {cmd:?}"),
+    }
+    Ok(())
+}
+
+/// Entry job for a standalone encoder stage (EPD disaggregation):
+/// synthesize the request's multimodal features exactly as the fused
+/// Thinker-side encoder path does, so EPD and fused modes agree.
+fn encode_entry_job(eng: &EncoderEngine, req: &Request) -> EncodeJob {
+    let frames = req.mm_frames.min(eng.t_max());
+    let fd = eng.feat_dim();
+    let mut prng = Prng::new(req.seed ^ 0x33C0DE);
+    let mut feats = vec![0f32; frames * fd];
+    for x in feats.iter_mut() {
+        *x = prng.normal() as f32 * 0.5;
+    }
+    EncodeJob { req_id: req.id, feats, frames }
+}
+
+/// Entry job for a standalone DiT stage (Fig. 8 single-model pipelines):
+/// the text/image conditioning encoder is not part of these pipelines, so
+/// conditioning features are synthesized deterministically from the
+/// prompt tokens (and mm seed for image-conditioned tasks).
+fn diffusion_entry_job(
+    eng: &crate::engine::diffusion::DiffusionEngine,
+    req: &Request,
+) -> crate::engine::diffusion::DiffusionJob {
+    let cd = eng.cond_dim();
+    let mut cond = vec![0f32; cd];
+    for (i, &t) in req.prompt_tokens.iter().enumerate() {
+        for (j, c) in cond.iter_mut().enumerate() {
+            *c += ((t as f32) * 0.013 + (i as f32) * 0.61 + (j as f32) * 0.29).sin();
+        }
+    }
+    let norm = (req.prompt_tokens.len().max(1)) as f32;
+    cond.iter_mut().for_each(|c| *c /= norm);
+    // Image-conditioned tasks (I2I / I2V) mix in reference-image features.
+    if req.mm_frames > 0 {
+        let mut prng = Prng::new(req.seed ^ 0x1A6E);
+        for c in cond.iter_mut() {
+            *c += prng.normal() as f32 * 0.2;
+        }
+    }
+    crate::engine::diffusion::DiffusionJob {
+        req_id: req.id,
+        chunk_idx: 0,
+        cond,
+        cond_tokens: vec![],
+        seed: req.seed,
+        steps: req.diffusion_steps,
+        final_chunk: true,
+    }
+}
+
+/// Build the entry-stage job for a frontend request: text tokens plus,
+/// for multimodal requests, encoder embeddings (the Thinker-side
+/// `mm_encode` preprocess from the paper's Fig. 4).
+fn entry_job(spec: &StageSpec, encoder: Option<&mut StageRuntime>, req: &Request) -> Result<ArJob> {
+    let mut prompt: Vec<PromptItem> =
+        req.prompt_tokens.iter().map(|&t| PromptItem::Token(t)).collect();
+    let mut mm_embeds: Vec<f32> = vec![];
+    let mut emb_dim = 0usize;
+
+    if req.mm_frames > 0 {
+        let Some(enc) = encoder else {
+            // Stages without a dedicated encoder (e.g. BAGEL's
+            // understanding expert, whose ViT is folded into the stage)
+            // consume synthetic reference-image embeddings directly.
+            let model = spec.artifacts.model(&spec.cfg.model)?;
+            let d = model.cfg_usize("d_model")?;
+            let mut prng = Prng::new(req.seed ^ 0x77E1);
+            emb_dim = d;
+            mm_embeds.extend((0..req.mm_frames * d).map(|_| prng.normal() as f32 * 0.1));
+            prompt.extend((0..req.mm_frames).map(PromptItem::Embed));
+            return Ok(ArJob {
+                req_id: req.id,
+                prompt,
+                mm_embeds,
+                emb_dim,
+                sampling: SamplingParams {
+                    max_new_tokens: req.max_text_tokens.max(1),
+                    temperature: 0.0,
+                    top_k: 0,
+                    ignore_eos: req.ignore_eos,
+                    seed: req.seed,
+                },
+            });
+        };
+        let spec_m = enc.model().clone();
+        let t_max = spec_m.cfg_usize("t_max")?;
+        let feat_dim = spec_m.cfg_usize("feat_dim")?;
+        let d_out = spec_m.cfg_usize("d_out")?;
+        let frames = req.mm_frames.min(t_max);
+        // Deterministic synthetic features standing in for audio/image/
+        // video frontends (DESIGN.md §7).
+        let mut prng = Prng::new(req.seed ^ 0x33C0DE);
+        let mut feats = vec![0f32; t_max * feat_dim];
+        for x in feats.iter_mut().take(frames * feat_dim) {
+            *x = prng.normal() as f32 * 0.5;
+        }
+        let mut mask = vec![0f32; t_max];
+        for m in mask.iter_mut().take(frames) {
+            *m = 1.0;
+        }
+        let entry = spec_m.bucket_entry("encode", 1, "")?;
+        let outs = enc.run(
+            &entry,
+            &[
+                HostTensor::f32(vec![1, t_max, feat_dim], feats),
+                HostTensor::f32(vec![1, t_max], mask),
+            ],
+        )?;
+        let embeds = outs[0].as_f32()?;
+        emb_dim = d_out;
+        mm_embeds.extend_from_slice(&embeds[..frames * d_out]);
+        let base = prompt.len();
+        let _ = base;
+        let start = mm_embeds.len() / d_out - frames;
+        prompt.extend((start..start + frames).map(PromptItem::Embed));
+    }
+
+    Ok(ArJob {
+        req_id: req.id,
+        prompt,
+        mm_embeds,
+        emb_dim,
+        sampling: SamplingParams {
+            max_new_tokens: req.max_text_tokens.max(1),
+            temperature: 0.0,
+            top_k: 0,
+            ignore_eos: req.ignore_eos,
+            seed: req.seed,
+        },
+    })
+}

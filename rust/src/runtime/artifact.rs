@@ -1,0 +1,272 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime.  Parses `artifacts/manifest.json` into typed records and
+//! loads weight blobs.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::tensor::DType;
+use crate::json::{self, Value};
+
+/// Manifest version this runtime understands (bump in lockstep with
+/// `python/compile/aot.py::MANIFEST_VERSION`).
+pub const SUPPORTED_VERSION: i64 = 3;
+
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl IoSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct EntrySpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct WeightLeaf {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub kind: String,
+    /// Raw config object from the python side (d_model, max_seq, ...).
+    pub config: Value,
+    pub weights_file: PathBuf,
+    pub weight_leaves: Vec<WeightLeaf>,
+    pub entries: HashMap<String, EntrySpec>,
+}
+
+impl ModelSpec {
+    pub fn entry(&self, name: &str) -> Result<&EntrySpec> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("model `{}` has no entry `{name}`", self.name))
+    }
+
+    /// Integer field from the model config (e.g. "max_seq", "d_model").
+    pub fn cfg_usize(&self, key: &str) -> Result<usize> {
+        self.config.req_usize(key)
+    }
+
+    pub fn total_weight_floats(&self) -> usize {
+        self.weight_leaves.iter().map(|l| l.size).sum()
+    }
+
+    /// Weight bytes for device-memory accounting.
+    pub fn weight_bytes(&self) -> usize {
+        self.total_weight_floats() * 4
+    }
+
+    /// Largest batch bucket available for an entry family, e.g.
+    /// `decode` -> 8 when `decode.b8` exists.
+    pub fn buckets(&self, family: &str) -> Vec<usize> {
+        let mut out: Vec<usize> = self
+            .entries
+            .keys()
+            .filter_map(|k| {
+                let rest = k.strip_prefix(family)?.strip_prefix(".b")?;
+                let bucket: String =
+                    rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+                bucket.parse::<usize>().ok()
+            })
+            .collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Entry name for the smallest compiled bucket holding `n` items.
+    pub fn bucket_entry(&self, family: &str, n: usize, suffix: &str) -> Result<String> {
+        let buckets = self.buckets(family);
+        let b = buckets
+            .iter()
+            .find(|&&b| b >= n)
+            .or(buckets.last())
+            .ok_or_else(|| anyhow::anyhow!("no `{family}` buckets for model `{}`", self.name))?;
+        Ok(format!("{family}.b{b}{suffix}"))
+    }
+}
+
+/// The parsed artifact directory.
+#[derive(Debug)]
+pub struct Artifacts {
+    pub dir: PathBuf,
+    pub models: HashMap<String, Arc<ModelSpec>>,
+}
+
+impl Artifacts {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest_path = dir.join("manifest.json");
+        let v = json::from_file(&manifest_path)?;
+        let version = v.get("version").as_i64().unwrap_or(-1);
+        if version != SUPPORTED_VERSION {
+            bail!(
+                "manifest version {version} unsupported (runtime expects {SUPPORTED_VERSION}); \
+                 re-run `make artifacts`"
+            );
+        }
+        let mut models = HashMap::new();
+        let Some(obj) = v.get("models").as_obj() else {
+            bail!("manifest has no models object");
+        };
+        for (name, mv) in obj {
+            let weights = mv.get("weights");
+            let mut leaves = Vec::new();
+            for lv in weights.req_arr("leaves")? {
+                leaves.push(WeightLeaf {
+                    name: lv.req_str("name")?.to_string(),
+                    shape: lv.req_arr("shape")?.iter().filter_map(|d| d.as_usize()).collect(),
+                    offset: lv.req_usize("offset")?,
+                    size: lv.req_usize("size")?,
+                });
+            }
+            let mut entries = HashMap::new();
+            if let Some(eobj) = mv.get("entries").as_obj() {
+                for (ename, ev) in eobj {
+                    let parse_io = |key: &str| -> Result<Vec<IoSpec>> {
+                        ev.req_arr(key)?
+                            .iter()
+                            .map(|io| {
+                                Ok(IoSpec {
+                                    name: io.req_str("name")?.to_string(),
+                                    shape: io
+                                        .req_arr("shape")?
+                                        .iter()
+                                        .filter_map(|d| d.as_usize())
+                                        .collect(),
+                                    dtype: DType::from_name(io.req_str("dtype")?)?,
+                                })
+                            })
+                            .collect()
+                    };
+                    entries.insert(
+                        ename.clone(),
+                        EntrySpec {
+                            name: ename.clone(),
+                            file: dir.join(ev.req_str("file")?),
+                            inputs: parse_io("inputs")
+                                .with_context(|| format!("{name}.{ename} inputs"))?,
+                            outputs: parse_io("outputs")
+                                .with_context(|| format!("{name}.{ename} outputs"))?,
+                        },
+                    );
+                }
+            }
+            models.insert(
+                name.clone(),
+                Arc::new(ModelSpec {
+                    name: name.clone(),
+                    kind: mv.req_str("kind")?.to_string(),
+                    config: mv.get("config").clone(),
+                    weights_file: dir.join(weights.req_str("file")?),
+                    weight_leaves: leaves,
+                    entries,
+                }),
+            );
+        }
+        Ok(Self { dir: dir.to_path_buf(), models })
+    }
+
+    /// Default artifact location: `$OMNI_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("OMNI_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    pub fn model(&self, name: &str) -> Result<Arc<ModelSpec>> {
+        self.models
+            .get(name)
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("manifest has no model `{name}`"))
+    }
+
+    /// Load a model's weight blob (f32 little-endian) into memory.
+    pub fn load_weights(&self, model: &ModelSpec) -> Result<Vec<f32>> {
+        let bytes = std::fs::read(&model.weights_file)
+            .with_context(|| format!("reading {}", model.weights_file.display()))?;
+        if bytes.len() % 4 != 0 {
+            bail!("weight blob not a multiple of 4 bytes");
+        }
+        let floats: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        let expect = model.total_weight_floats();
+        if floats.len() != expect {
+            bail!("weight blob has {} floats, manifest says {expect}", floats.len());
+        }
+        Ok(floats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn art() -> Option<Artifacts> {
+        let dir = Artifacts::default_dir();
+        if dir.join("manifest.json").exists() {
+            Some(Artifacts::load(&dir).unwrap())
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn loads_shipped_manifest() {
+        let Some(a) = art() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let m = a.model("thinker25").unwrap();
+        assert_eq!(m.kind, "ar");
+        assert_eq!(m.cfg_usize("d_model").unwrap(), 256);
+        assert_eq!(m.buckets("decode"), vec![1, 2, 4, 8]);
+        let e = m.entry("decode.b4").unwrap();
+        assert_eq!(e.inputs[0].name, "token");
+        assert_eq!(e.inputs[0].shape, vec![4]);
+        // KV tensor shape: [L, 2, B, H, S, dh]
+        assert_eq!(e.inputs[1].shape, vec![4, 2, 4, 4, 256, 64]);
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let Some(a) = art() else { return };
+        let m = a.model("thinker25").unwrap();
+        assert_eq!(m.bucket_entry("decode", 3, "").unwrap(), "decode.b4");
+        assert_eq!(m.bucket_entry("decode", 1, "").unwrap(), "decode.b1");
+        assert_eq!(m.bucket_entry("decode", 8, "").unwrap(), "decode.b8");
+        // Oversized requests clamp to the largest bucket (caller splits).
+        assert_eq!(m.bucket_entry("decode", 100, "").unwrap(), "decode.b8");
+        assert_eq!(m.bucket_entry("prefill", 2, ".c32").unwrap(), "prefill.b2.c32");
+    }
+
+    #[test]
+    fn weights_load_and_match() {
+        let Some(a) = art() else { return };
+        let m = a.model("talker25").unwrap();
+        let w = a.load_weights(&m).unwrap();
+        assert_eq!(w.len(), m.total_weight_floats());
+        assert!(w.iter().any(|&x| x != 0.0));
+    }
+}

@@ -1,0 +1,17 @@
+//! PJRT runtime layer: loads `artifacts/*.hlo.txt` (AOT-lowered from
+//! JAX/Pallas by `python/compile/aot.py`) and executes them on the CPU
+//! PJRT client from the engines' hot paths.
+//!
+//! Structure:
+//! * [`artifact`] — manifest parsing, weight blobs, bucket lookup.
+//! * [`tensor`] — host tensors and the connector wire format.
+//! * [`stage_rt`] — per-engine-thread client + compiled executables +
+//!   device-resident weights.
+
+pub mod artifact;
+pub mod stage_rt;
+pub mod tensor;
+
+pub use artifact::{Artifacts, EntrySpec, IoSpec, ModelSpec};
+pub use stage_rt::StageRuntime;
+pub use tensor::{DType, HostTensor, TensorData};

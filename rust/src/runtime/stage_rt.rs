@@ -1,0 +1,187 @@
+//! Per-engine PJRT runtime: compiles HLO-text artifacts on a thread-local
+//! CPU client and executes them with device-resident weights.
+//!
+//! `xla::PjRtClient` is `Rc`-based (not `Send`), so each engine thread
+//! owns a [`StageRuntime`].  Only host tensors ([`HostTensor`]) cross
+//! threads — which is exactly the disaggregation boundary the paper draws
+//! between stages.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::artifact::{Artifacts, EntrySpec, ModelSpec};
+use super::tensor::{DType, HostTensor, TensorData};
+use crate::util::stats::Welford;
+
+/// One stage's executable set + weights on a thread-local PJRT client.
+pub struct StageRuntime {
+    client: xla::PjRtClient,
+    model: Arc<ModelSpec>,
+    /// Weight buffers, device-resident, in manifest leaf order.
+    weights: Vec<xla::PjRtBuffer>,
+    /// Lazily compiled executables by entry name.
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Where to find HLO files (from [`Artifacts`]).
+    pub exec_stats: HashMap<String, Welford>,
+}
+
+impl std::fmt::Debug for StageRuntime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("StageRuntime")
+            .field("model", &self.model.name)
+            .field("compiled", &self.executables.keys().collect::<Vec<_>>())
+            .finish()
+    }
+}
+
+impl StageRuntime {
+    /// Create a runtime for `model`, uploading its weights to the device.
+    pub fn new(artifacts: &Artifacts, model_name: &str) -> Result<Self> {
+        let model = artifacts.model(model_name)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let blob = artifacts.load_weights(&model)?;
+        let mut weights = Vec::with_capacity(model.weight_leaves.len());
+        for leaf in &model.weight_leaves {
+            let slice = &blob[leaf.offset..leaf.offset + leaf.size];
+            let buf = client
+                .buffer_from_host_buffer(slice, &leaf.shape, None)
+                .with_context(|| format!("uploading weight {}", leaf.name))?;
+            weights.push(buf);
+        }
+        Ok(Self { client, model, weights, executables: HashMap::new(), exec_stats: HashMap::new() })
+    }
+
+    pub fn model(&self) -> &Arc<ModelSpec> {
+        &self.model
+    }
+
+    /// Pre-compile a set of entries (engine init; avoids first-request
+    /// compile latency — the paper's "execution graph compilation").
+    pub fn precompile(&mut self, entries: &[String]) -> Result<()> {
+        for e in entries {
+            self.ensure_compiled(e)?;
+        }
+        Ok(())
+    }
+
+    pub fn is_compiled(&self, entry: &str) -> bool {
+        self.executables.contains_key(entry)
+    }
+
+    fn ensure_compiled(&mut self, entry: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.executables.contains_key(entry) {
+            let spec = self.model.entry(entry)?;
+            let exe = compile_hlo(&self.client, spec)?;
+            self.executables.insert(entry.to_string(), exe);
+        }
+        Ok(&self.executables[entry])
+    }
+
+    /// Drop a compiled executable.
+    pub fn evict(&mut self, entry: &str) {
+        self.executables.remove(entry);
+    }
+
+    /// Drop all compiled executables (baseline per-request recompile mode:
+    /// no cross-request execution-graph reuse).
+    pub fn evict_all(&mut self) {
+        self.executables.clear();
+    }
+
+    /// Execute `entry` with the given non-weight inputs.  Inputs are
+    /// validated against the manifest spec; outputs are downloaded to
+    /// host tensors in manifest order.
+    pub fn run(&mut self, entry: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let spec = self.model.entry(entry)?.clone();
+        validate_inputs(&spec, inputs)?;
+        self.ensure_compiled(entry)?;
+        let t0 = std::time::Instant::now();
+
+        // Upload per-call args.
+        let mut args: Vec<xla::PjRtBuffer> = Vec::with_capacity(inputs.len());
+        for t in inputs {
+            args.push(upload(&self.client, t)?);
+        }
+        let exe = &self.executables[entry];
+        let mut all: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(self.weights.len() + args.len());
+        all.extend(self.weights.iter());
+        all.extend(args.iter());
+
+        let outs = exe.execute_b(&all).with_context(|| format!("executing {entry}"))?;
+        let tuple = outs
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| anyhow::anyhow!("{entry}: no output buffer"))?;
+        let lit = tuple.to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        if parts.len() != spec.outputs.len() {
+            bail!("{entry}: got {} outputs, manifest says {}", parts.len(), spec.outputs.len());
+        }
+        let mut result = Vec::with_capacity(parts.len());
+        for (p, ospec) in parts.into_iter().zip(&spec.outputs) {
+            result.push(download(p, ospec.dtype)?);
+        }
+        self.exec_stats
+            .entry(entry.to_string())
+            .or_default()
+            .push(t0.elapsed().as_secs_f64());
+        Ok(result)
+    }
+}
+
+fn compile_hlo(client: &xla::PjRtClient, spec: &EntrySpec) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        spec.file
+            .to_str()
+            .ok_or_else(|| anyhow::anyhow!("non-utf8 artifact path"))?,
+    )
+    .with_context(|| format!("loading HLO {}", spec.file.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client.compile(&comp).with_context(|| format!("compiling {}", spec.name))
+}
+
+fn upload(client: &xla::PjRtClient, t: &HostTensor) -> Result<xla::PjRtBuffer> {
+    Ok(match &t.data {
+        TensorData::F32(v) => client.buffer_from_host_buffer(v, &t.shape, None)?,
+        TensorData::I32(v) => client.buffer_from_host_buffer(v, &t.shape, None)?,
+    })
+}
+
+fn download(lit: xla::Literal, dtype: DType) -> Result<HostTensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    Ok(match dtype {
+        DType::F32 => HostTensor::f32(dims, lit.to_vec::<f32>()?),
+        DType::I32 => HostTensor::i32(dims, lit.to_vec::<i32>()?),
+    })
+}
+
+fn validate_inputs(spec: &EntrySpec, inputs: &[HostTensor]) -> Result<()> {
+    if inputs.len() != spec.inputs.len() {
+        bail!(
+            "{}: got {} inputs, manifest says {} ({:?})",
+            spec.name,
+            inputs.len(),
+            spec.inputs.len(),
+            spec.inputs.iter().map(|i| &i.name).collect::<Vec<_>>()
+        );
+    }
+    for (t, ispec) in inputs.iter().zip(&spec.inputs) {
+        if t.shape != ispec.shape {
+            bail!(
+                "{}.{}: shape {:?} != manifest {:?}",
+                spec.name,
+                ispec.name,
+                t.shape,
+                ispec.shape
+            );
+        }
+        if t.dtype() != ispec.dtype {
+            bail!("{}.{}: dtype {:?} != manifest {:?}", spec.name, ispec.name, t.dtype(), ispec.dtype);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,227 @@
+//! Host-side tensors: the currency between engines, connectors, and the
+//! PJRT runtime.  Deliberately simple — dense row-major f32/i32 only,
+//! matching the AOT manifest's dtype universe.
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn from_name(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            other => bail!("unsupported dtype `{other}`"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+        }
+    }
+
+    pub fn size(self) -> usize {
+        4
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// A dense host tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Self { shape, data: TensorData::F32(data) }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Self { shape, data: TensorData::I32(data) }
+    }
+
+    pub fn zeros_f32(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Self::f32(shape, vec![0.0; n])
+    }
+
+    pub fn zeros_i32(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Self::i32(shape, vec![0; n])
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self.data {
+            TensorData::F32(_) => DType::F32,
+            TensorData::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.len() * self.dtype().size()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32_mut(&mut self) -> Result<&mut [i32]> {
+        match &mut self.data {
+            TensorData::I32(v) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    /// Serialize to bytes (connector wire format): dtype tag, rank, dims,
+    /// raw data — all little-endian.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(8 + self.shape.len() * 8 + self.byte_len());
+        out.push(match self.dtype() {
+            DType::F32 => 0u8,
+            DType::I32 => 1u8,
+        });
+        out.extend_from_slice(&(self.shape.len() as u32).to_le_bytes());
+        for &d in &self.shape {
+            out.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+        match &self.data {
+            TensorData::F32(v) => {
+                for x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            TensorData::I32(v) => {
+                for x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+        out
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        if bytes.len() < 5 {
+            bail!("tensor bytes too short");
+        }
+        let tag = bytes[0];
+        let rank = u32::from_le_bytes(bytes[1..5].try_into().unwrap()) as usize;
+        let mut pos = 5;
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            if pos + 8 > bytes.len() {
+                bail!("tensor bytes truncated in dims");
+            }
+            shape.push(u64::from_le_bytes(bytes[pos..pos + 8].try_into().unwrap()) as usize);
+            pos += 8;
+        }
+        let n: usize = shape.iter().product();
+        if pos + n * 4 > bytes.len() {
+            bail!("tensor bytes truncated in data ({} < {})", bytes.len() - pos, n * 4);
+        }
+        match tag {
+            0 => {
+                let v = bytes[pos..pos + n * 4]
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                Ok(Self::f32(shape, v))
+            }
+            1 => {
+                let v = bytes[pos..pos + n * 4]
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                Ok(Self::i32(shape, v))
+            }
+            t => bail!("unknown tensor dtype tag {t}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::quick;
+
+    #[test]
+    fn roundtrip_bytes() {
+        let t = HostTensor::f32(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let u = HostTensor::from_bytes(&t.to_bytes()).unwrap();
+        assert_eq!(t, u);
+        let t = HostTensor::i32(vec![4], vec![-1, 0, 7, 42]);
+        let u = HostTensor::from_bytes(&t.to_bytes()).unwrap();
+        assert_eq!(t, u);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn shape_mismatch_panics() {
+        HostTensor::f32(vec![2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let t = HostTensor::f32(vec![8], vec![0.5; 8]);
+        let mut b = t.to_bytes();
+        b.truncate(b.len() - 3);
+        assert!(HostTensor::from_bytes(&b).is_err());
+    }
+
+    #[test]
+    fn prop_bytes_roundtrip() {
+        quick("tensor_roundtrip", |rng| {
+            let rank = rng.range(0, 3);
+            let shape: Vec<usize> = (0..rank).map(|_| rng.range(1, 8)).collect();
+            let n: usize = shape.iter().product();
+            if rng.bool(0.5) {
+                let data: Vec<f32> = (0..n).map(|_| rng.f32() - 0.5).collect();
+                let t = HostTensor::f32(shape, data);
+                assert_eq!(HostTensor::from_bytes(&t.to_bytes()).unwrap(), t);
+            } else {
+                let data: Vec<i32> = (0..n).map(|_| rng.next_u64() as i32).collect();
+                let t = HostTensor::i32(shape, data);
+                assert_eq!(HostTensor::from_bytes(&t.to_bytes()).unwrap(), t);
+            }
+        });
+    }
+}

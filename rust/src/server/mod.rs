@@ -1,0 +1,170 @@
+//! TCP JSON-lines serving frontend (`omni-serve serve`).
+//!
+//! Protocol: one JSON object per line.
+//!
+//! request:  {"op": "generate", "prompt": "...", "modality": "video",
+//!            "mm_frames": 64, "max_text_tokens": 32,
+//!            "max_audio_tokens": 96}
+//! response: {"req_id": N, "text": "...", "audio_tokens": M,
+//!            "jct_s": 1.23}
+//! request:  {"op": "ping"} -> {"ok": true}
+//!
+//! The server accepts connections on a listener thread and serves each
+//! connection by running the request through a fresh single-request
+//! workload on the shared orchestrator configuration.  (Per-connection
+//! pipelines keep the demo server simple; the bench harness exercises
+//! the long-lived orchestrator path.)
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::PipelineConfig;
+use crate::jobj;
+use crate::json::{self, Value};
+use crate::orchestrator::{Orchestrator, RunOptions};
+use crate::runtime::Artifacts;
+use crate::stage_graph::transfers::Registry;
+use crate::tokenizer::Tokenizer;
+use crate::trace::{Modality, Request, Workload};
+
+pub struct Server {
+    listener: TcpListener,
+    config: PipelineConfig,
+    artifacts: Arc<Artifacts>,
+}
+
+static NEXT_REQ: AtomicU64 = AtomicU64::new(1);
+
+impl Server {
+    pub fn bind(addr: &str, config: PipelineConfig, artifacts: Arc<Artifacts>) -> Result<Self> {
+        Ok(Self { listener: TcpListener::bind(addr)?, config, artifacts })
+    }
+
+    pub fn addr(&self) -> String {
+        self.listener.local_addr().map(|a| a.to_string()).unwrap_or_default()
+    }
+
+    /// Serve forever (blocking).  Each connection handled in turn — the
+    /// underlying pipeline batches *within* a connection's workload.
+    pub fn serve(&self) -> Result<()> {
+        eprintln!("omni-serve listening on {}", self.addr());
+        for conn in self.listener.incoming() {
+            let Ok(stream) = conn else { continue };
+            if let Err(e) = self.handle(stream) {
+                eprintln!("connection error: {e}");
+            }
+        }
+        Ok(())
+    }
+
+    /// Serve exactly `n` connections, then return (tests).
+    pub fn serve_n(&self, n: usize) -> Result<()> {
+        for conn in self.listener.incoming().take(n) {
+            self.handle(conn?)?;
+        }
+        Ok(())
+    }
+
+    fn handle(&self, stream: TcpStream) -> Result<()> {
+        let peer = stream.peer_addr().ok();
+        let mut writer = stream.try_clone()?;
+        let reader = BufReader::new(stream);
+        for line in reader.lines() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let resp = match self.dispatch(&line) {
+                Ok(v) => v,
+                Err(e) => jobj! { "error" => e.to_string() },
+            };
+            writer.write_all(json::to_string(&resp).as_bytes())?;
+            writer.write_all(b"\n")?;
+        }
+        let _ = peer;
+        Ok(())
+    }
+
+    fn dispatch(&self, line: &str) -> Result<Value> {
+        let v = json::parse(line).map_err(|e| anyhow::anyhow!("bad request JSON: {e}"))?;
+        match v.get("op").as_str().unwrap_or("generate") {
+            "ping" => Ok(jobj! { "ok" => true }),
+            "config" => Ok(crate::config::loader::to_value(&self.config)),
+            "generate" => self.generate(&v),
+            other => anyhow::bail!("unknown op `{other}`"),
+        }
+    }
+
+    fn generate(&self, v: &Value) -> Result<Value> {
+        let tokenizer = Tokenizer::new(4096);
+        let id = NEXT_REQ.fetch_add(1, Ordering::SeqCst);
+        let prompt = v.get("prompt").as_str().unwrap_or("hello world");
+        let modality = match v.get("modality").as_str().unwrap_or("text") {
+            "audio" => Modality::Audio,
+            "image" => Modality::Image,
+            "video" => Modality::Video,
+            _ => Modality::Text,
+        };
+        let req = Request {
+            id,
+            arrival_s: 0.0,
+            modality,
+            prompt_tokens: tokenizer.encode(prompt),
+            mm_frames: v.get("mm_frames").as_usize().unwrap_or(0),
+            seed: v.get("seed").as_usize().unwrap_or(id as usize) as u64,
+            max_text_tokens: v.get("max_text_tokens").as_usize().unwrap_or(24),
+            max_audio_tokens: v.get("max_audio_tokens").as_usize().unwrap_or(64),
+            diffusion_steps: v.get("diffusion_steps").as_usize().unwrap_or(0),
+            ignore_eos: v.get("ignore_eos").as_bool().unwrap_or(true),
+        };
+        let workload = Workload { name: "server".into(), requests: vec![req] };
+        let orch = Orchestrator::new(
+            self.config.clone(),
+            self.artifacts.clone(),
+            Registry::builtin(),
+            RunOptions::default(),
+        )?;
+        let audio_stage = if self.config.stage("talker").is_some() { Some("talker") } else { None };
+        let summary = orch.run_workload(&workload, audio_stage)?;
+        Ok(jobj! {
+            "req_id" => id as usize,
+            "jct_s" => summary.report.mean_jct(),
+            "ttft_s" => summary.report.mean_ttft(),
+            "rtf" => if summary.report.rtf.is_empty() { -1.0 } else { summary.report.mean_rtf() },
+            "completed" => summary.report.completed,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ping_roundtrip() {
+        let dir = crate::runtime::Artifacts::default_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let artifacts = Arc::new(Artifacts::load(&dir).unwrap());
+        let server = Server::bind(
+            "127.0.0.1:0",
+            crate::config::presets::mimo_audio(1),
+            artifacts,
+        )
+        .unwrap();
+        let addr = server.addr();
+        let h = std::thread::spawn(move || server.serve_n(1));
+        let mut c = TcpStream::connect(addr).unwrap();
+        c.write_all(b"{\"op\": \"ping\"}\n").unwrap();
+        let mut line = String::new();
+        BufReader::new(c.try_clone().unwrap()).read_line(&mut line).unwrap();
+        assert!(line.contains("true"), "{line}");
+        drop(c);
+        h.join().unwrap().unwrap();
+    }
+}

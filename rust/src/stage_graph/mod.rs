@@ -1,0 +1,202 @@
+//! Stage-graph abstraction (paper §3.2) — the frontend for any-to-any
+//! model programming.
+//!
+//! A pipeline is a DAG whose nodes are model stages (AR / DiT / CNN) and
+//! whose edges carry *stage-transfer functions* that transform one
+//! stage's output items into the next stage's inputs (submissions,
+//! conditioning streams, codec chunks).  [`transfers`] holds the built-in
+//! transfer registry (Thinker2Talker, Talker2Vocoder, ...); library users
+//! register custom transfers with [`transfers::Registry::register`].
+
+pub mod transfers;
+
+use anyhow::{bail, Result};
+
+use crate::config::{EdgeConfig, PipelineConfig, StageConfig};
+
+/// A validated stage graph: topology checked, transfers resolvable.
+#[derive(Debug, Clone)]
+pub struct StageGraph {
+    pub config: PipelineConfig,
+    /// Topological order of stage indices.
+    pub topo: Vec<usize>,
+    /// Entry stage (no incoming edges).
+    pub entry: usize,
+    /// Exit stages (no outgoing edges).
+    pub exits: Vec<usize>,
+}
+
+impl StageGraph {
+    /// Validate the pipeline config structurally and as a graph, using
+    /// `registry` to resolve transfer names.
+    pub fn build(config: PipelineConfig, registry: &transfers::Registry) -> Result<Self> {
+        config.validate()?;
+        let n = config.stages.len();
+        let idx_of = |name: &str| config.stages.iter().position(|s| s.name == name).unwrap();
+
+        for e in &config.edges {
+            if !registry.contains(&e.transfer) {
+                bail!("edge {}->{}: unknown transfer `{}`", e.from, e.to, e.transfer);
+            }
+        }
+
+        // Kahn topo sort.
+        let mut indeg = vec![0usize; n];
+        let mut adj: Vec<Vec<usize>> = vec![vec![]; n];
+        for e in &config.edges {
+            let (f, t) = (idx_of(&e.from), idx_of(&e.to));
+            adj[f].push(t);
+            indeg[t] += 1;
+        }
+        let mut queue: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut topo = Vec::with_capacity(n);
+        let mut head = 0;
+        while head < queue.len() {
+            let u = queue[head];
+            head += 1;
+            topo.push(u);
+            for &v in &adj[u] {
+                indeg[v] -= 1;
+                if indeg[v] == 0 {
+                    queue.push(v);
+                }
+            }
+        }
+        if topo.len() != n {
+            bail!("stage graph `{}` has a cycle", config.name);
+        }
+
+        // Entry/exits.
+        let entries: Vec<usize> = (0..n)
+            .filter(|&i| !config.edges.iter().any(|e| idx_of(&e.to) == i))
+            .collect();
+        if entries.len() != 1 {
+            bail!(
+                "stage graph `{}` must have exactly one entry stage (found {})",
+                config.name,
+                entries.len()
+            );
+        }
+        let exits: Vec<usize> = (0..n)
+            .filter(|&i| !config.edges.iter().any(|e| idx_of(&e.from) == i))
+            .collect();
+
+        Ok(Self { config, topo, entry: entries[0], exits })
+    }
+
+    pub fn n_stages(&self) -> usize {
+        self.config.stages.len()
+    }
+
+    pub fn stage(&self, i: usize) -> &StageConfig {
+        &self.config.stages[i]
+    }
+
+    pub fn stage_index(&self, name: &str) -> Option<usize> {
+        self.config.stages.iter().position(|s| s.name == name)
+    }
+
+    /// Edges into stage `i`.
+    pub fn incoming(&self, i: usize) -> Vec<&EdgeConfig> {
+        let name = &self.config.stages[i].name;
+        self.config.edges.iter().filter(|e| &e.to == name).collect()
+    }
+
+    /// Edges out of stage `i`.
+    pub fn outgoing(&self, i: usize) -> Vec<&EdgeConfig> {
+        let name = &self.config.stages[i].name;
+        self.config.edges.iter().filter(|e| &e.from == name).collect()
+    }
+
+    /// Device-memory admission: reserve weights for every stage on its
+    /// configured devices (TP splits across the group).
+    pub fn reserve_memory(
+        &self,
+        pool: &crate::device::DevicePool,
+        artifacts: &crate::runtime::Artifacts,
+    ) -> Result<Vec<crate::device::Reservation>> {
+        let mut all = Vec::new();
+        for s in &self.config.stages {
+            let model = artifacts.model(&s.model)?;
+            let devices: Vec<crate::device::DeviceId> =
+                s.devices.iter().map(|&d| crate::device::DeviceId(d)).collect();
+            let rs = pool.reserve_tp(&devices, model.weight_bytes(), &s.name)?;
+            all.extend(rs);
+        }
+        Ok(all)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn reg() -> transfers::Registry {
+        transfers::Registry::builtin()
+    }
+
+    #[test]
+    fn builds_all_presets() {
+        for p in presets::all() {
+            let g = StageGraph::build(p, &reg()).unwrap();
+            assert!(g.n_stages() >= 1);
+        }
+    }
+
+    #[test]
+    fn qwen_omni_topology() {
+        let g = StageGraph::build(presets::qwen3_omni(), &reg()).unwrap();
+        assert_eq!(g.entry, g.stage_index("thinker").unwrap());
+        assert_eq!(g.exits, vec![g.stage_index("vocoder").unwrap()]);
+        // topo respects edges
+        let pos = |n: &str| g.topo.iter().position(|&i| g.stage(i).name == n).unwrap();
+        assert!(pos("thinker") < pos("talker"));
+        assert!(pos("talker") < pos("vocoder"));
+    }
+
+    #[test]
+    fn rejects_cycle() {
+        let mut p = presets::qwen3_omni();
+        p.edges.push(crate::config::EdgeConfig {
+            from: "vocoder".into(),
+            to: "thinker".into(),
+            transfer: "thinker2talker".into(),
+            connector: crate::config::ConnectorKind::Inline,
+        });
+        assert!(StageGraph::build(p, &reg()).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_transfer() {
+        let mut p = presets::qwen3_omni();
+        p.edges[0].transfer = "nope".into();
+        assert!(StageGraph::build(p, &reg()).is_err());
+    }
+
+    #[test]
+    fn rejects_multiple_entries() {
+        let mut p = presets::qwen3_omni();
+        p.edges.remove(0); // thinker->talker gone: thinker AND talker are entries
+        assert!(StageGraph::build(p, &reg()).is_err());
+    }
+
+    #[test]
+    fn memory_reservation_respects_budget() {
+        let art_dir = crate::runtime::Artifacts::default_dir();
+        if !art_dir.join("manifest.json").exists() {
+            return;
+        }
+        let artifacts = crate::runtime::Artifacts::load(&art_dir).unwrap();
+        let g = StageGraph::build(presets::qwen3_omni(), &reg()).unwrap();
+        let pool = crate::device::DevicePool::testbed();
+        let rs = g.reserve_memory(&pool, &artifacts).unwrap();
+        assert!(!rs.is_empty());
+        // Thinker TP2: both devices charged.
+        assert!(pool.used(crate::device::DeviceId(0)) > 0);
+        assert!(pool.used(crate::device::DeviceId(1)) > 0);
+        // A pool that is far too small must reject the pipeline.
+        let tiny = crate::device::DevicePool::new(2, 1024);
+        assert!(g.reserve_memory(&tiny, &artifacts).is_err());
+    }
+}

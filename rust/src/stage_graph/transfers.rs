@@ -1,0 +1,417 @@
+//! Stage-transfer functions (the paper's edge functions, §3.2).
+//!
+//! A transfer maps one upstream [`StageItem`] into commands for the
+//! downstream engine.  Transfers run on the *consumer* side of the
+//! connector (the data plane moves raw items; see `connector/`).
+//! Each edge instantiates its own stateful closure from the registry
+//! (per-request accumulation state lives inside).
+
+use std::collections::{HashMap, HashSet};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::engine::ar::ArJob;
+use crate::engine::diffusion::DiffusionJob;
+use crate::engine::vocoder::VocoderJob;
+use crate::engine::{SamplingParams, StageItem};
+
+/// Per-request metadata that transfers need to build downstream jobs
+/// (registered by the orchestrator frontend at submit time).
+#[derive(Debug, Clone, Default)]
+pub struct ReqMeta {
+    pub seed: u64,
+    pub max_audio_tokens: usize,
+    pub diffusion_steps: usize,
+    pub ignore_eos: bool,
+    /// Text prompt (needed by EPD's embeds2prompt transfer, which builds
+    /// the Thinker submission downstream of a standalone encoder stage).
+    pub prompt_tokens: Vec<u32>,
+    pub max_text_tokens: usize,
+}
+
+/// Shared request-metadata table (the paper's "predefined dictionary for
+/// storing intermediate per-request data").
+pub type ReqTable = Arc<Mutex<HashMap<u64, ReqMeta>>>;
+
+/// Context handed to a transfer factory at edge instantiation.
+#[derive(Clone)]
+pub struct TransferCtx {
+    pub reqs: ReqTable,
+    /// Downstream chunk capacity in frames/tokens (vocoder-style edges).
+    pub chunk_frames: usize,
+    /// Downstream per-token conditioning width (DiT vocoder edges).
+    pub cond_tokens_dim: usize,
+}
+
+/// Commands a transfer can issue to its downstream engine.
+#[derive(Debug)]
+pub enum EngineCmd {
+    SubmitAr(ArJob),
+    /// Hidden-state rows feeding a conditioning stream.
+    Upstream { req_id: u64, rows: Vec<f32>, dim: usize, complete: bool },
+    SubmitDiffusion(DiffusionJob),
+    SubmitVocoder(VocoderJob),
+}
+
+/// A stateful transfer instance.
+pub type Transfer = Box<dyn FnMut(&StageItem) -> Result<Vec<EngineCmd>> + Send>;
+
+/// Factory: instantiate a transfer for one edge.
+pub type TransferFactory = Arc<dyn Fn(TransferCtx) -> Transfer + Send + Sync>;
+
+/// Named transfer registry.
+#[derive(Clone)]
+pub struct Registry {
+    map: HashMap<String, TransferFactory>,
+}
+
+impl Registry {
+    pub fn empty() -> Self {
+        Self { map: HashMap::new() }
+    }
+
+    /// The built-in transfers used by the model-zoo presets.
+    pub fn builtin() -> Self {
+        let mut r = Self::empty();
+        r.register("thinker2talker", Arc::new(thinker2talker));
+        r.register("embeds2prompt", Arc::new(embeds2prompt));
+        r.register("talker2vocoder", Arc::new(talker2vocoder));
+        r.register("hidden2cond", Arc::new(hidden2cond));
+        r.register("tokens2patches", Arc::new(tokens2patches));
+        r
+    }
+
+    pub fn register(&mut self, name: &str, f: TransferFactory) {
+        self.map.insert(name.to_string(), f);
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.map.contains_key(name)
+    }
+
+    pub fn instantiate(&self, name: &str, ctx: TransferCtx) -> Result<Transfer> {
+        let f = self
+            .map
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown transfer `{name}`"))?;
+        Ok(f(ctx))
+    }
+}
+
+fn meta(ctx: &TransferCtx, req: u64) -> ReqMeta {
+    ctx.reqs.lock().unwrap().get(&req).cloned().unwrap_or_default()
+}
+
+// ---------------------------------------------------------------------------
+// Built-in transfers
+// ---------------------------------------------------------------------------
+
+/// Encoder -> Thinker (EPD disaggregation): the standalone encoder stage
+/// finishes a request's embeddings; this transfer assembles the Thinker
+/// prompt (text tokens from the request meta + embedding rows) and
+/// submits it.
+fn embeds2prompt(ctx: TransferCtx) -> Transfer {
+    Box::new(move |item: &StageItem| {
+        let mut cmds = Vec::new();
+        if !item.finished {
+            return Ok(cmds);
+        }
+        let m = meta(&ctx, item.req_id);
+        let (rows, dim, frames) = match item.tensor("embeds") {
+            Some(e) => {
+                let dim = *e.shape.last().unwrap_or(&0);
+                (e.as_f32()?.to_vec(), dim, e.shape.first().copied().unwrap_or(0))
+            }
+            None => (vec![], 0, 0),
+        };
+        let mut prompt: Vec<crate::engine::ar::PromptItem> = m
+            .prompt_tokens
+            .iter()
+            .map(|&t| crate::engine::ar::PromptItem::Token(t))
+            .collect();
+        prompt.extend((0..frames).map(crate::engine::ar::PromptItem::Embed));
+        cmds.push(EngineCmd::SubmitAr(ArJob {
+            req_id: item.req_id,
+            prompt,
+            mm_embeds: rows,
+            emb_dim: dim,
+            sampling: SamplingParams {
+                max_new_tokens: m.max_text_tokens.max(1),
+                temperature: 0.0,
+                top_k: 0,
+                ignore_eos: m.ignore_eos,
+                seed: m.seed,
+            },
+        }));
+        Ok(cmds)
+    })
+}
+
+/// Thinker -> Talker (paper Fig. 4): on the first Thinker item, submit the
+/// Talker request (BOS prompt whose generation length comes from the
+/// request meta); every item streams the Thinker hidden rows into the
+/// Talker's conditioning buffer (consumed by the per-iteration
+/// preprocess).
+fn thinker2talker(ctx: TransferCtx) -> Transfer {
+    let mut submitted: HashSet<u64> = HashSet::new();
+    Box::new(move |item: &StageItem| {
+        let mut cmds = Vec::new();
+        let m = meta(&ctx, item.req_id);
+        if submitted.insert(item.req_id) {
+            cmds.push(EngineCmd::SubmitAr(crate::engine::ar::token_job(
+                item.req_id,
+                &[crate::tokenizer::BOS_ID],
+                SamplingParams {
+                    max_new_tokens: m.max_audio_tokens.max(1),
+                    temperature: 0.0,
+                    top_k: 0,
+                    ignore_eos: m.ignore_eos,
+                    seed: m.seed,
+                },
+            )));
+        }
+        if let Some(h) = item.tensor("hiddens") {
+            let dim = *h.shape.last().unwrap_or(&0);
+            cmds.push(EngineCmd::Upstream {
+                req_id: item.req_id,
+                rows: h.as_f32()?.to_vec(),
+                dim,
+                complete: item.finished,
+            });
+        } else if item.finished {
+            cmds.push(EngineCmd::Upstream {
+                req_id: item.req_id,
+                rows: vec![],
+                dim: 0,
+                complete: true,
+            });
+        }
+        Ok(cmds)
+    })
+}
+
+/// Deterministic pseudo-embedding for a codec token (the paper's vocoder
+/// consumes codec embeddings; our DiT vocoder takes `cond_tokens_dim`
+/// features per frame).
+pub fn codec_features(token: u32, dim: usize) -> Vec<f32> {
+    (0..dim)
+        .map(|j| ((token as f32) * 0.061 + (j as f32) * 0.83).sin())
+        .collect()
+}
+
+/// Talker -> Vocoder: accumulate codec tokens into fixed-size frame
+/// chunks; each chunk becomes one vocoder job (DiT denoise, streamed).
+fn talker2vocoder(ctx: TransferCtx) -> Transfer {
+    struct St {
+        tokens: Vec<u32>,
+        chunks: usize,
+    }
+    let mut state: HashMap<u64, St> = HashMap::new();
+    Box::new(move |item: &StageItem| {
+        let mut cmds = Vec::new();
+        let m = meta(&ctx, item.req_id);
+        let st = state.entry(item.req_id).or_insert(St { tokens: vec![], chunks: 0 });
+        if let Some(t) = item.tensor("tokens") {
+            st.tokens.extend(t.as_i32()?.iter().map(|&x| x as u32));
+        }
+        let cap = ctx.chunk_frames.max(1);
+        while st.tokens.len() >= cap || (item.finished && !st.tokens.is_empty()) {
+            let take = st.tokens.len().min(cap);
+            let chunk: Vec<u32> = st.tokens.drain(..take).collect();
+            let is_final = item.finished && st.tokens.is_empty();
+            if ctx.cond_tokens_dim > 0 {
+                // DiT vocoder: codec pseudo-embeddings as per-token cond.
+                let mut ct = Vec::with_capacity(cap * ctx.cond_tokens_dim);
+                for i in 0..cap {
+                    let tok = chunk.get(i).copied().unwrap_or(0);
+                    ct.extend(codec_features(tok, ctx.cond_tokens_dim));
+                }
+                cmds.push(EngineCmd::SubmitDiffusion(DiffusionJob {
+                    req_id: item.req_id,
+                    chunk_idx: st.chunks,
+                    cond: vec![],
+                    cond_tokens: ct,
+                    seed: m.seed ^ st.chunks as u64,
+                    steps: 0,
+                    final_chunk: is_final,
+                }));
+            } else {
+                cmds.push(EngineCmd::SubmitVocoder(VocoderJob {
+                    req_id: item.req_id,
+                    chunk_idx: st.chunks,
+                    tokens: chunk,
+                    final_chunk: is_final,
+                }));
+            }
+            st.chunks += 1;
+            if is_final {
+                break;
+            }
+        }
+        if item.finished && st.tokens.is_empty() && st.chunks == 0 {
+            // Degenerate: request produced no audio tokens at all.
+            cmds.push(EngineCmd::SubmitVocoder(VocoderJob {
+                req_id: item.req_id,
+                chunk_idx: 0,
+                tokens: vec![],
+                final_chunk: true,
+            }));
+        }
+        if item.finished {
+            state.remove(&item.req_id);
+        }
+        Ok(cmds)
+    })
+}
+
+/// Understanding AR -> DiT generator (BAGEL / GLM-Image shape): when the
+/// AR stage finishes, its mean hidden state becomes the DiT conditioning
+/// vector for a one-shot generation job.
+fn hidden2cond(ctx: TransferCtx) -> Transfer {
+    struct Acc {
+        sum: Vec<f32>,
+        rows: usize,
+    }
+    let mut state: HashMap<u64, Acc> = HashMap::new();
+    Box::new(move |item: &StageItem| {
+        let mut cmds = Vec::new();
+        if let Some(h) = item.tensor("hiddens") {
+            let dim = *h.shape.last().unwrap_or(&0);
+            let data = h.as_f32()?;
+            let acc = state
+                .entry(item.req_id)
+                .or_insert_with(|| Acc { sum: vec![0.0; dim], rows: 0 });
+            for row in data.chunks_exact(dim.max(1)) {
+                for (s, &x) in acc.sum.iter_mut().zip(row) {
+                    *s += x;
+                }
+                acc.rows += 1;
+            }
+        }
+        if item.finished {
+            let m = meta(&ctx, item.req_id);
+            let cond = state
+                .remove(&item.req_id)
+                .map(|a| {
+                    let n = a.rows.max(1) as f32;
+                    a.sum.iter().map(|&s| s / n).collect()
+                })
+                .unwrap_or_default();
+            cmds.push(EngineCmd::SubmitDiffusion(DiffusionJob {
+                req_id: item.req_id,
+                chunk_idx: 0,
+                cond,
+                cond_tokens: vec![],
+                seed: m.seed,
+                steps: m.diffusion_steps,
+                final_chunk: true,
+            }));
+        }
+        Ok(cmds)
+    })
+}
+
+/// MiMo backbone -> patch decoder: audio tokens chunked into patch-decoder
+/// calls (CNN-style path of talker2vocoder).
+fn tokens2patches(ctx: TransferCtx) -> Transfer {
+    let inner_ctx = TransferCtx { cond_tokens_dim: 0, ..ctx };
+    talker2vocoder(inner_ctx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::HostTensor;
+
+    fn ctx(chunk: usize, ctd: usize) -> TransferCtx {
+        let reqs: ReqTable = Arc::new(Mutex::new(HashMap::new()));
+        reqs.lock().unwrap().insert(
+            1,
+            ReqMeta { seed: 7, max_audio_tokens: 40, diffusion_steps: 6, ignore_eos: true,
+                      prompt_tokens: vec![1, 5], max_text_tokens: 12 },
+        );
+        TransferCtx { reqs, chunk_frames: chunk, cond_tokens_dim: ctd }
+    }
+
+    fn item_tokens(req: u64, toks: &[i32], hid_dim: usize, fin: bool) -> StageItem {
+        let n = toks.len();
+        let mut it = StageItem::new(req)
+            .with("tokens", HostTensor::i32(vec![n], toks.to_vec()))
+            .with("hiddens", HostTensor::f32(vec![n, hid_dim], vec![0.5; n * hid_dim]));
+        if fin {
+            it = it.finished();
+        }
+        it
+    }
+
+    #[test]
+    fn thinker2talker_submits_once_then_streams() {
+        let mut t = Registry::builtin().instantiate("thinker2talker", ctx(16, 0)).unwrap();
+        let cmds = t(&item_tokens(1, &[5, 6], 8, false)).unwrap();
+        assert_eq!(cmds.len(), 2);
+        assert!(matches!(&cmds[0], EngineCmd::SubmitAr(j) if j.req_id == 1
+            && j.sampling.max_new_tokens == 40 && j.sampling.ignore_eos));
+        assert!(matches!(&cmds[1], EngineCmd::Upstream { rows, dim: 8, complete: false, .. }
+            if rows.len() == 16));
+        let cmds2 = t(&item_tokens(1, &[7], 8, true)).unwrap();
+        assert_eq!(cmds2.len(), 1); // no resubmission
+        assert!(matches!(&cmds2[0], EngineCmd::Upstream { complete: true, .. }));
+    }
+
+    #[test]
+    fn talker2vocoder_chunks_and_flushes() {
+        let mut t = Registry::builtin().instantiate("talker2vocoder", ctx(4, 0)).unwrap();
+        let cmds = t(&item_tokens(1, &[1, 2, 3, 4, 5], 4, false)).unwrap();
+        assert_eq!(cmds.len(), 1); // one full chunk, 1 leftover
+        assert!(matches!(&cmds[0], EngineCmd::SubmitVocoder(j)
+            if j.tokens == vec![1, 2, 3, 4] && !j.final_chunk && j.chunk_idx == 0));
+        let cmds2 = t(&item_tokens(1, &[6], 4, true)).unwrap();
+        assert_eq!(cmds2.len(), 1); // flush [5, 6] as final
+        assert!(matches!(&cmds2[0], EngineCmd::SubmitVocoder(j)
+            if j.tokens == vec![5, 6] && j.final_chunk && j.chunk_idx == 1));
+    }
+
+    #[test]
+    fn talker2vocoder_dit_path_builds_cond_tokens() {
+        let mut t = Registry::builtin().instantiate("talker2vocoder", ctx(4, 6)).unwrap();
+        let cmds = t(&item_tokens(1, &[1, 2, 3, 4], 4, false)).unwrap();
+        assert_eq!(cmds.len(), 1);
+        match &cmds[0] {
+            EngineCmd::SubmitDiffusion(j) => {
+                assert_eq!(j.cond_tokens.len(), 4 * 6);
+                assert_eq!(j.chunk_idx, 0);
+            }
+            other => panic!("expected diffusion cmd, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn hidden2cond_waits_for_finish() {
+        let mut t = Registry::builtin().instantiate("hidden2cond", ctx(0, 0)).unwrap();
+        assert!(t(&item_tokens(1, &[1, 2], 4, false)).unwrap().is_empty());
+        let cmds = t(&item_tokens(1, &[3], 4, true)).unwrap();
+        assert_eq!(cmds.len(), 1);
+        match &cmds[0] {
+            EngineCmd::SubmitDiffusion(j) => {
+                assert_eq!(j.cond.len(), 4);
+                assert_eq!(j.steps, 6);
+                assert!(j.final_chunk);
+                // mean of constant 0.5 rows is 0.5
+                assert!((j.cond[0] - 0.5).abs() < 1e-6);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn empty_audio_still_completes() {
+        let mut t = Registry::builtin().instantiate("talker2vocoder", ctx(4, 0)).unwrap();
+        let mut fin = StageItem::new(1).finished();
+        fin.tensors.insert("tokens".into(), HostTensor::i32(vec![0], vec![]));
+        let cmds = t(&fin).unwrap();
+        assert_eq!(cmds.len(), 1);
+        assert!(matches!(&cmds[0], EngineCmd::SubmitVocoder(j)
+            if j.tokens.is_empty() && j.final_chunk));
+    }
+}

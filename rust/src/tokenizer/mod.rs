@@ -1,0 +1,121 @@
+//! Synthetic tokenizer substrate.
+//!
+//! The paper serves real Qwen models with real BPE vocabularies; our
+//! scaled models (DESIGN.md §7) use a deterministic hash tokenizer over
+//! whitespace-split words plus byte fallback.  What matters for the
+//! serving system is the *token stream shape* (ids in-vocab, stable
+//! round-trip length), not linguistic fidelity.
+
+/// Reserved special ids, aligned with `python/compile/configs.py`.
+pub const PAD_ID: u32 = 0;
+pub const BOS_ID: u32 = 1;
+pub const EOS_ID: u32 = 2;
+/// First non-special id.
+pub const FIRST_ID: u32 = 8;
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    vocab: u32,
+}
+
+impl Tokenizer {
+    pub fn new(vocab: u32) -> Self {
+        assert!(vocab > FIRST_ID, "vocab too small");
+        Self { vocab }
+    }
+
+    pub fn vocab(&self) -> u32 {
+        self.vocab
+    }
+
+    /// Deterministic word hash into `[FIRST_ID, vocab)`.
+    fn word_id(&self, w: &str) -> u32 {
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in w.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        FIRST_ID + (h % (self.vocab - FIRST_ID) as u64) as u32
+    }
+
+    /// Encode text (BOS + one id per whitespace word; long words split
+    /// into 4-byte subword pieces to mimic BPE length scaling).
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut ids = vec![BOS_ID];
+        for w in text.split_whitespace() {
+            if w.len() <= 6 {
+                ids.push(self.word_id(w));
+            } else {
+                for chunk in w.as_bytes().chunks(4) {
+                    ids.push(self.word_id(std::str::from_utf8(chunk).unwrap_or("?")));
+                }
+            }
+        }
+        ids
+    }
+
+    /// Decode ids to a printable placeholder string (hash tokenizers are
+    /// not invertible; serving only needs a stable surface form).
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let mut out = String::new();
+        for &id in ids {
+            match id {
+                PAD_ID | BOS_ID => {}
+                EOS_ID => break,
+                id => {
+                    if !out.is_empty() {
+                        out.push(' ');
+                    }
+                    out.push_str(&format!("w{id}"));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::quick;
+    use crate::util::Prng;
+
+    #[test]
+    fn encode_is_deterministic_and_in_vocab() {
+        let t = Tokenizer::new(4096);
+        let a = t.encode("the quick brown fox");
+        let b = t.encode("the quick brown fox");
+        assert_eq!(a, b);
+        assert_eq!(a[0], BOS_ID);
+        assert!(a.iter().all(|&id| id < 4096));
+    }
+
+    #[test]
+    fn longer_text_longer_ids() {
+        let t = Tokenizer::new(4096);
+        let short = t.encode("hi there");
+        let long = t.encode("hi there this is a much longer sentence with many words");
+        assert!(long.len() > short.len());
+    }
+
+    #[test]
+    fn decode_stops_at_eos() {
+        let t = Tokenizer::new(64);
+        let s = t.decode(&[BOS_ID, 10, 11, EOS_ID, 12]);
+        assert!(s.contains("w10") && s.contains("w11") && !s.contains("w12"));
+    }
+
+    #[test]
+    fn prop_ids_always_in_vocab() {
+        quick("tokenizer_in_vocab", |rng: &mut Prng| {
+            let vocab = rng.range(16, 8192) as u32;
+            let t = Tokenizer::new(vocab);
+            let n_words = rng.range(0, 30);
+            let text: Vec<String> =
+                (0..n_words).map(|_| format!("word{}", rng.below(1000))).collect();
+            for id in t.encode(&text.join(" ")) {
+                assert!(id < vocab, "id {id} vocab {vocab}");
+            }
+        });
+    }
+}

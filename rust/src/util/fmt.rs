@@ -1,0 +1,85 @@
+//! Human-friendly formatting for benchmark tables and logs.
+
+/// Format seconds adaptively: `1.23s`, `45.6ms`, `789us`.
+pub fn dur(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.2}s")
+    } else if secs >= 1e-3 {
+        format!("{:.2}ms", secs * 1e3)
+    } else {
+        format!("{:.0}us", secs * 1e6)
+    }
+}
+
+/// Format a byte count: `1.5 GiB`, `23.4 MiB`, ...
+pub fn bytes(n: usize) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut x = n as f64;
+    let mut u = 0;
+    while x >= 1024.0 && u < UNITS.len() - 1 {
+        x /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{x:.1} {}", UNITS[u])
+    }
+}
+
+/// Render an aligned ASCII table (used by every bench binary so the
+/// output mirrors the paper's tables).
+pub fn table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let ncol = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncol) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let line = |out: &mut String, cells: &[String]| {
+        for (i, c) in cells.iter().enumerate().take(ncol) {
+            if i > 0 {
+                out.push_str("  ");
+            }
+            out.push_str(&format!("{:<w$}", c, w = widths[i]));
+        }
+        out.push('\n');
+    };
+    line(&mut out, &headers.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+    line(&mut out, &sep);
+    for row in rows {
+        line(&mut out, row);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dur_ranges() {
+        assert_eq!(dur(2.5), "2.50s");
+        assert_eq!(dur(0.0456), "45.60ms");
+        assert_eq!(dur(0.000789), "789us");
+    }
+
+    #[test]
+    fn bytes_ranges() {
+        assert_eq!(bytes(512), "512 B");
+        assert_eq!(bytes(2048), "2.0 KiB");
+        assert_eq!(bytes(3 * 1024 * 1024), "3.0 MiB");
+    }
+
+    #[test]
+    fn table_alignment() {
+        let t = table(&["a", "bb"], &[vec!["x".into(), "y".into()]]);
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("a"));
+        assert!(lines[1].starts_with("-"));
+    }
+}

@@ -1,0 +1,12 @@
+//! Small shared utilities: deterministic PRNG, timing, stats, and a
+//! mini property-testing driver (the offline registry has no `proptest`,
+//! so we ship our own — see [`propcheck`]).
+
+pub mod fmt;
+pub mod propcheck;
+pub mod prng;
+pub mod stats;
+pub mod timer;
+
+pub use prng::Prng;
+pub use timer::Stopwatch;

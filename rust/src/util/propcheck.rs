@@ -1,0 +1,69 @@
+//! Mini property-testing driver.
+//!
+//! The offline registry has no `proptest`/`quickcheck`, so this module
+//! provides the subset we need: run a property over many deterministic
+//! PRNG-seeded cases and, on failure, report the failing seed so the case
+//! can be replayed under a debugger.  No shrinking — cases are generated
+//! from a seed, so re-running with the printed seed reproduces exactly.
+
+use super::prng::Prng;
+
+/// Number of cases per property (kept moderate: properties run under
+/// `cargo test` alongside integration tests).
+pub const DEFAULT_CASES: usize = 256;
+
+/// Run `prop` over `cases` deterministic PRNG streams.  Panics with the
+/// failing seed on the first violation.
+pub fn check<F: FnMut(&mut Prng)>(name: &str, cases: usize, mut prop: F) {
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Prng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property `{name}` failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Shorthand with [`DEFAULT_CASES`].
+pub fn quick<F: FnMut(&mut Prng)>(name: &str, prop: F) {
+    check(name, DEFAULT_CASES, prop);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true_property() {
+        quick("x_lt_n", |rng| {
+            let n = rng.range(1, 100);
+            let x = rng.below(n as u64);
+            assert!((x as usize) < n);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always_fails` failed")]
+    fn reports_failing_seed() {
+        check("always_fails", 4, |_rng| {
+            panic!("boom");
+        });
+    }
+
+    #[test]
+    fn is_deterministic() {
+        let mut first: Vec<u64> = vec![];
+        check("collect", 8, |rng| first.push(rng.next_u64()));
+        let mut second: Vec<u64> = vec![];
+        check("collect", 8, |rng| second.push(rng.next_u64()));
+        assert_eq!(first, second);
+    }
+}

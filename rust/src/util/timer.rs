@@ -1,0 +1,74 @@
+//! Timing helpers used by engines, benches, and the metrics recorder.
+
+use std::time::{Duration, Instant};
+
+/// A stopwatch with lap support.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    start: Instant,
+    last: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        let now = Instant::now();
+        Self { start: now, last: now }
+    }
+
+    /// Seconds since construction.
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Seconds since the previous `lap()` (or construction).
+    pub fn lap(&mut self) -> f64 {
+        let now = Instant::now();
+        let dt = now.duration_since(self.last).as_secs_f64();
+        self.last = now;
+        dt
+    }
+
+    pub fn reset(&mut self) {
+        let now = Instant::now();
+        self.start = now;
+        self.last = now;
+    }
+}
+
+/// Time a closure, returning `(result, seconds)`.
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lap_accumulates() {
+        let mut sw = Stopwatch::new();
+        std::thread::sleep(Duration::from_millis(5));
+        let lap = sw.lap();
+        assert!(lap >= 0.004, "lap {lap}");
+        assert!(sw.elapsed_s() >= lap);
+    }
+
+    #[test]
+    fn timed_returns_value() {
+        let (v, dt) = timed(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(dt >= 0.0);
+    }
+}

@@ -1,0 +1,225 @@
+//! Runtime-layer integration: artifact loading, executable compilation,
+//! numerics of the compiled entries against expected invariants, and the
+//! diffusion/vocoder engines in isolation.
+
+use omni_serve::engine::diffusion::{DiffusionEngine, DiffusionJob, DiffusionOptions};
+use omni_serve::engine::vocoder::{VocoderEngine, VocoderJob, VocoderKind};
+use omni_serve::runtime::{Artifacts, HostTensor, StageRuntime};
+
+fn artifacts() -> Option<Artifacts> {
+    let dir = Artifacts::default_dir();
+    if dir.join("manifest.json").exists() {
+        Some(Artifacts::load(&dir).unwrap())
+    } else {
+        eprintln!("skipping: run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn decode_entry_runs_and_respects_shapes() {
+    let Some(art) = artifacts() else { return };
+    let mut rt = StageRuntime::new(&art, "mimo").unwrap();
+    let m = rt.model().clone();
+    let b = 1usize;
+    let kv_shape: Vec<usize> = m.entry("decode.b1").unwrap().inputs[1].shape.clone();
+    let kv = HostTensor::zeros_f32(kv_shape.clone());
+    let outs = rt
+        .run(
+            "decode.b1",
+            &[
+                HostTensor::i32(vec![b], vec![1]),
+                kv,
+                HostTensor::i32(vec![b], vec![0]),
+            ],
+        )
+        .unwrap();
+    assert_eq!(outs.len(), 3);
+    assert_eq!(outs[0].shape, vec![1, 2048]); // logits [B, vocab]
+    assert_eq!(outs[1].shape, vec![1, 256]); // hidden [B, d]
+    assert_eq!(outs[2].shape, kv_shape);
+    // Writing position 0 must leave rows >= 1 untouched (zeros).
+    let kv_out = outs[2].as_f32().unwrap();
+    let dh = 64;
+    let s = 256;
+    // layer 0, k, batch 0, head 0: row 0 written, row 1 zero.
+    let row0 = &kv_out[0..dh];
+    let row1 = &kv_out[dh..2 * dh];
+    assert!(row0.iter().any(|&x| x != 0.0), "row 0 should be written");
+    assert!(row1.iter().all(|&x| x == 0.0), "row 1 must stay zero");
+    let _ = s;
+}
+
+#[test]
+fn decode_is_deterministic_across_calls() {
+    let Some(art) = artifacts() else { return };
+    let mut rt = StageRuntime::new(&art, "talker25").unwrap();
+    let m = rt.model().clone();
+    let e = m.entry("decode.b2").unwrap();
+    let kv = HostTensor::zeros_f32(e.inputs[2].shape.clone());
+    let cond = HostTensor::f32(vec![2, 256], vec![0.25; 2 * 256]);
+    let inputs = vec![
+        HostTensor::i32(vec![2], vec![5, 9]),
+        cond,
+        kv,
+        HostTensor::i32(vec![2], vec![0, 0]),
+    ];
+    let a = rt.run("decode.b2", &inputs).unwrap();
+    let b = rt.run("decode.b2", &inputs).unwrap();
+    assert_eq!(a[0], b[0]);
+}
+
+#[test]
+fn bad_inputs_rejected_with_clear_errors() {
+    let Some(art) = artifacts() else { return };
+    let mut rt = StageRuntime::new(&art, "mimo").unwrap();
+    // Wrong arity.
+    let err = rt.run("decode.b1", &[HostTensor::i32(vec![1], vec![0])]).unwrap_err();
+    assert!(format!("{err}").contains("inputs"), "{err}");
+    // Wrong shape.
+    let m = rt.model().clone();
+    let kv = HostTensor::zeros_f32(m.entry("decode.b1").unwrap().inputs[1].shape.clone());
+    let err = rt
+        .run(
+            "decode.b1",
+            &[
+                HostTensor::i32(vec![2], vec![0, 0]), // batch 2 into b1
+                kv,
+                HostTensor::i32(vec![1], vec![0]),
+            ],
+        )
+        .unwrap_err();
+    assert!(format!("{err}").contains("shape"), "{err}");
+    // Unknown entry.
+    assert!(rt.run("nope.b1", &[]).is_err());
+}
+
+#[test]
+fn diffusion_engine_denoises_and_caches() {
+    let Some(art) = artifacts() else { return };
+    let mut eng = DiffusionEngine::new(
+        &art,
+        "voc_dit25",
+        DiffusionOptions {
+            max_batch: 2,
+            steps: 8,
+            cfg_scale: 1.0,
+            stepcache_threshold: 0.30,
+            lazy_compile: false,
+        },
+    )
+    .unwrap();
+    let n = eng.n_tokens();
+    let ctd = eng.cond_tokens_dim();
+    for i in 0..2 {
+        eng.submit(DiffusionJob {
+            req_id: i,
+            chunk_idx: 0,
+            cond: vec![],
+            cond_tokens: vec![0.1; n * ctd],
+            seed: i,
+            steps: 0,
+            final_chunk: true,
+        });
+    }
+    let items = eng.run_to_completion().unwrap();
+    assert_eq!(items.len(), 2);
+    for it in &items {
+        assert!(it.finished);
+        let latent = it.tensor("latent").unwrap();
+        assert_eq!(latent.shape, vec![n, 32]);
+        assert!(latent.as_f32().unwrap().iter().all(|x| x.is_finite()));
+    }
+    assert!(eng.stats.steps_run > 0);
+    assert!(
+        eng.stats.steps_skipped > 0,
+        "threshold 0.30 should skip some steps (ran {}, skipped {})",
+        eng.stats.steps_run,
+        eng.stats.steps_skipped
+    );
+    // Skipping never exceeds total work.
+    assert_eq!((eng.stats.steps_run + eng.stats.steps_skipped) as usize, 2 * 8);
+}
+
+#[test]
+fn stepcache_disabled_runs_every_step() {
+    let Some(art) = artifacts() else { return };
+    let mut eng = DiffusionEngine::new(
+        &art,
+        "voc_dit25",
+        DiffusionOptions { max_batch: 1, steps: 6, cfg_scale: 1.0, stepcache_threshold: 0.0, lazy_compile: false },
+    )
+    .unwrap();
+    let n = eng.n_tokens();
+    let ctd = eng.cond_tokens_dim();
+    eng.submit(DiffusionJob {
+        req_id: 1,
+        chunk_idx: 0,
+        cond: vec![],
+        cond_tokens: vec![0.0; n * ctd],
+        seed: 3,
+        steps: 0,
+        final_chunk: true,
+    });
+    eng.run_to_completion().unwrap();
+    assert_eq!(eng.stats.steps_run, 6);
+    assert_eq!(eng.stats.steps_skipped, 0);
+}
+
+#[test]
+fn cnn_vocoder_produces_trimmed_waveform() {
+    let Some(art) = artifacts() else { return };
+    let mut eng = VocoderEngine::new(&art, "voc_cnn3", VocoderKind::Cnn, 2, false).unwrap();
+    let up = eng.samples_per_frame();
+    eng.submit(VocoderJob { req_id: 1, chunk_idx: 0, tokens: vec![5; 10], final_chunk: true });
+    eng.submit(VocoderJob { req_id: 2, chunk_idx: 0, tokens: vec![9; 64], final_chunk: true });
+    let items = eng.run_to_completion().unwrap();
+    assert_eq!(items.len(), 2);
+    let w1 = items.iter().find(|i| i.req_id == 1).unwrap().tensor("wave").unwrap();
+    assert_eq!(w1.shape, vec![10 * up]); // trimmed to real frames
+    let w2 = items.iter().find(|i| i.req_id == 2).unwrap().tensor("wave").unwrap();
+    assert_eq!(w2.shape, vec![64 * up]);
+    // tanh output range
+    assert!(w2.as_f32().unwrap().iter().all(|x| x.abs() <= 1.0));
+}
+
+#[test]
+fn patch_decoder_output_shape() {
+    let Some(art) = artifacts() else { return };
+    let mut eng =
+        VocoderEngine::new(&art, "mimo_codec", VocoderKind::PatchDecoder, 4, false).unwrap();
+    eng.submit(VocoderJob { req_id: 7, chunk_idx: 0, tokens: vec![3; 20], final_chunk: true });
+    let items = eng.run_to_completion().unwrap();
+    let w = items[0].tensor("wave").unwrap();
+    assert_eq!(w.shape, vec![20 * eng.samples_per_frame()]);
+}
+
+#[test]
+fn mm_encoder_masks_padding() {
+    let Some(art) = artifacts() else { return };
+    let mut rt = StageRuntime::new(&art, "enc25").unwrap();
+    let m = rt.model().clone();
+    let t_max = m.cfg_usize("t_max").unwrap();
+    let fd = m.cfg_usize("feat_dim").unwrap();
+    let d = m.cfg_usize("d_out").unwrap();
+    let mut feats = vec![0f32; t_max * fd];
+    for x in feats.iter_mut().take(10 * fd) {
+        *x = 0.3;
+    }
+    let mut mask = vec![0f32; t_max];
+    for x in mask.iter_mut().take(10) {
+        *x = 1.0;
+    }
+    let outs = rt
+        .run(
+            "encode.b1",
+            &[
+                HostTensor::f32(vec![1, t_max, fd], feats),
+                HostTensor::f32(vec![1, t_max], mask),
+            ],
+        )
+        .unwrap();
+    let e = outs[0].as_f32().unwrap();
+    assert!(e[..10 * d].iter().any(|&x| x != 0.0));
+    assert!(e[10 * d..].iter().all(|&x| x == 0.0), "masked rows must be zero");
+}
