@@ -24,13 +24,13 @@ fn main() -> anyhow::Result<()> {
             "thinker3",
             ArEngineOptions { max_batch: batch, stream_chunk: 0, ..Default::default() },
         )?;
-        for i in 0..batch {
-            e.submit(token_job(
+        e.submit_many((0..batch).map(|i| {
+            token_job(
                 i as u64,
                 &[BOS_ID, 7 + i as u32],
                 SamplingParams { max_new_tokens: steps, ignore_eos: true, ..Default::default() },
-            ));
-        }
+            )
+        }));
         let t0 = std::time::Instant::now();
         e.run_to_completion()?;
         let wall = t0.elapsed().as_secs_f64();

@@ -1,0 +1,110 @@
+//! Scheduler-policy benchmark: FIFO (static batching) vs continuous
+//! batching JCT on the bundled AR traces (paper §3.3 — per-stage request
+//! batching is where the serving-efficiency win comes from, on top of
+//! disaggregation itself).
+//!
+//! Unlike the figure benches this one needs no compiled artifacts: it
+//! drives the *real* `BatchPolicy` implementations through the
+//! deterministic discrete-time AR-stage model in
+//! `omni_serve::scheduler::sim`, which reproduces the engine's iteration
+//! skeleton (chunked prefill, one token per decode step, join/evict at
+//! token boundaries) under a calibrated dispatch+per-token cost model.
+//!
+//! Output: mean/p50/p99 JCT, makespan, and batch occupancy per policy and
+//! trace, plus the JCT reduction of continuous batching over FIFO, and a
+//! token-budget sweep showing the admission-control knob.
+
+use omni_serve::bench_util::{self, Table};
+use omni_serve::scheduler::policy::{BatchPolicy, ContinuousBatchingPolicy, FifoPolicy};
+use omni_serve::scheduler::sim::{from_workload, simulate, SimCost, SimReport};
+use omni_serve::trace::Workload;
+use omni_serve::trace::datasets;
+use omni_serve::util::fmt;
+
+const MAX_BATCH: usize = 4;
+
+fn run(policy: &mut dyn BatchPolicy, wl: &Workload) -> SimReport {
+    simulate(policy, MAX_BATCH, &SimCost::default(), &from_workload(wl))
+}
+
+fn main() {
+    let n = bench_util::bench_n(64);
+
+    // The paper's offline-batch evaluation mode (all requests at t=0) and
+    // an online Poisson-arrival mode, across the bundled AR traces.
+    let workloads: Vec<Workload> = vec![
+        datasets::librispeech(1, n, 0.0),
+        datasets::seedtts(1, n, 0.0),
+        datasets::ucf101(1, n, 0.0),
+        datasets::librispeech(2, n, 4.0),
+        datasets::seedtts(2, n, 4.0),
+    ];
+
+    let mut t = Table::new(
+        "Scheduler: FIFO (static batching) vs continuous batching, AR-stage model",
+        &[
+            "trace", "rate", "policy", "mean JCT", "p50", "p99", "makespan", "mean batch",
+            "JCT reduction",
+        ],
+    );
+    for wl in &workloads {
+        let rate = wl.requests.iter().map(|r| r.arrival_s).fold(0.0, f64::max);
+        let mode = if rate > 0.0 { "online" } else { "offline" };
+        let fifo = run(&mut FifoPolicy, wl);
+        let cont = run(&mut ContinuousBatchingPolicy { max_batch_tokens: 0 }, wl);
+        let reductions =
+            ["-".to_string(), bench_util::reduction_pct(fifo.mean_jct(), cont.mean_jct())];
+        for (rep, reduction) in [&fifo, &cont].into_iter().zip(reductions) {
+            let mut jct = rep.jct.clone();
+            t.row(vec![
+                wl.name.clone(),
+                mode.into(),
+                rep.policy.clone(),
+                fmt::dur(rep.mean_jct()),
+                fmt::dur(jct.p50()),
+                fmt::dur(jct.p99()),
+                fmt::dur(rep.makespan_s),
+                format!("{:.2}", rep.mean_batch),
+                reduction,
+            ]);
+        }
+    }
+    t.print();
+
+    // Admission-control sweep: the max-batch-tokens budget trades batch
+    // occupancy (throughput) against queueing (per-request latency).
+    let wl = datasets::librispeech(3, n, 0.0);
+    let mut t = Table::new(
+        "Continuous batching: max_batch_tokens admission budget sweep",
+        &["budget", "mean JCT", "p99", "makespan", "mean batch"],
+    );
+    for budget in [0usize, 512, 256, 128, 64] {
+        let rep = run(&mut ContinuousBatchingPolicy { max_batch_tokens: budget }, &wl);
+        let mut jct = rep.jct.clone();
+        t.row(vec![
+            if budget == 0 { "unlimited".into() } else { budget.to_string() },
+            fmt::dur(rep.mean_jct()),
+            fmt::dur(jct.p99()),
+            fmt::dur(rep.makespan_s),
+            format!("{:.2}", rep.mean_batch),
+        ]);
+    }
+    t.print();
+
+    // Headline check (also pinned by `tests/scheduler.rs`): continuous
+    // batching must beat FIFO mean JCT on the bundled AR traces.
+    let wl = datasets::librispeech(1, n, 0.0);
+    let fifo = run(&mut FifoPolicy, &wl);
+    let cont = run(&mut ContinuousBatchingPolicy { max_batch_tokens: 0 }, &wl);
+    println!(
+        "\ncontinuous batching vs FIFO on {}: mean JCT {} -> {} ({} reduction)",
+        wl.name,
+        fmt::dur(fifo.mean_jct()),
+        fmt::dur(cont.mean_jct()),
+        bench_util::reduction_pct(fifo.mean_jct(), cont.mean_jct()),
+    );
+    assert!(
+        cont.mean_jct() < fifo.mean_jct(),
+        "continuous batching must beat FIFO on the bundled AR trace"
+    );
+}

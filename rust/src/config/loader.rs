@@ -5,7 +5,10 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
-use super::{ConnectorKind, DiffusionParams, EdgeConfig, PipelineConfig, StageConfig, StageKind};
+use super::{
+    ConnectorKind, DiffusionParams, EdgeConfig, PipelineConfig, SchedParams, SchedPolicyKind,
+    StageConfig, StageKind,
+};
 use crate::jobj;
 use crate::json::{self, Value};
 
@@ -43,6 +46,22 @@ pub fn from_value(v: &Value) -> Result<PipelineConfig> {
                 steps: dv.get("steps").as_usize().unwrap_or(20),
                 cfg_scale: dv.get("cfg_scale").as_f64().unwrap_or(3.0) as f32,
                 stepcache_threshold: dv.get("stepcache_threshold").as_f64().unwrap_or(0.0) as f32,
+            };
+        }
+        let scv = sv.get("sched");
+        if !scv.is_null() {
+            let defaults = SchedParams::default();
+            s.sched = SchedParams {
+                policy: match scv.get("policy").as_str() {
+                    Some(p) => SchedPolicyKind::from_name(p)?,
+                    None => defaults.policy,
+                },
+                max_batch_tokens: scv
+                    .get("max_batch_tokens")
+                    .as_usize()
+                    .unwrap_or(defaults.max_batch_tokens),
+                queue_depth: scv.get("queue_depth").as_usize().unwrap_or(defaults.queue_depth),
+                step_window: scv.get("step_window").as_usize().unwrap_or(defaults.step_window),
             };
         }
         stages.push(s);
@@ -94,6 +113,12 @@ pub fn to_value(p: &PipelineConfig) -> Value {
                     "cfg_scale" => s.diffusion.cfg_scale as f64,
                     "stepcache_threshold" => s.diffusion.stepcache_threshold as f64,
                 },
+                "sched" => jobj! {
+                    "policy" => s.sched.policy.name(),
+                    "max_batch_tokens" => s.sched.max_batch_tokens,
+                    "queue_depth" => s.sched.queue_depth,
+                    "step_window" => s.sched.step_window,
+                },
             }
         })
         .collect();
@@ -143,6 +168,10 @@ mod tests {
                 assert_eq!(a.max_batch, b.max_batch);
                 assert_eq!(a.multi_step, b.multi_step);
                 assert_eq!(a.diffusion.steps, b.diffusion.steps);
+                assert_eq!(a.sched.policy, b.sched.policy);
+                assert_eq!(a.sched.max_batch_tokens, b.sched.max_batch_tokens);
+                assert_eq!(a.sched.queue_depth, b.sched.queue_depth);
+                assert_eq!(a.sched.step_window, b.sched.step_window);
             }
             assert_eq!(p.edges.len(), q.edges.len());
             for (a, b) in p.edges.iter().zip(&q.edges) {
@@ -155,6 +184,36 @@ mod tests {
     #[test]
     fn invalid_config_rejected() {
         let v = json::parse(r#"{"name": "x", "stages": []}"#).unwrap();
+        assert!(from_value(&v).is_err());
+    }
+
+    #[test]
+    fn sched_block_parses_with_partial_fields() {
+        let v = json::parse(
+            r#"{"name": "x", "n_devices": 1, "stages": [
+                {"name": "a", "model": "mimo", "kind": "ar", "devices": [0],
+                 "sched": {"policy": "continuous", "max_batch_tokens": 512}}
+            ]}"#,
+        )
+        .unwrap();
+        let p = from_value(&v).unwrap();
+        let s = &p.stages[0].sched;
+        assert_eq!(s.policy, crate::config::SchedPolicyKind::Continuous);
+        assert_eq!(s.max_batch_tokens, 512);
+        // Unspecified fields keep their defaults.
+        assert_eq!(s.queue_depth, 0);
+        assert_eq!(s.step_window, crate::config::SchedParams::default().step_window);
+    }
+
+    #[test]
+    fn unknown_sched_policy_rejected() {
+        let v = json::parse(
+            r#"{"name": "x", "n_devices": 1, "stages": [
+                {"name": "a", "model": "mimo", "kind": "ar", "devices": [0],
+                 "sched": {"policy": "wfq"}}
+            ]}"#,
+        )
+        .unwrap();
         assert!(from_value(&v).is_err());
     }
 }

@@ -48,6 +48,92 @@ impl StageKind {
     }
 }
 
+/// Which batching policy schedules a stage's admission queue
+/// (see [`crate::scheduler::policy`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedPolicyKind {
+    /// Pick by stage kind: AR stages get continuous batching, DiT stages
+    /// get step-level batching, everything else FIFO.  The default.
+    Auto,
+    /// Strict arrival order with drain-then-refill batches (static
+    /// batching; the natural fit for encoder/vocoder stages and the
+    /// baseline the scheduler bench compares against).
+    Fifo,
+    /// Continuous batching: sequences join whenever a slot is free and
+    /// the `max_batch_tokens` budget allows; AR stages only.
+    Continuous,
+    /// Step-level batching: requests grouped into denoise-step-aligned
+    /// cohorts; DiT stages only.
+    StepLevel,
+}
+
+impl SchedPolicyKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SchedPolicyKind::Auto => "auto",
+            SchedPolicyKind::Fifo => "fifo",
+            SchedPolicyKind::Continuous => "continuous",
+            SchedPolicyKind::StepLevel => "step_level",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<Self> {
+        Ok(match s {
+            "auto" => SchedPolicyKind::Auto,
+            "fifo" => SchedPolicyKind::Fifo,
+            "continuous" => SchedPolicyKind::Continuous,
+            "step_level" | "step-level" => SchedPolicyKind::StepLevel,
+            other => bail!("unknown sched policy `{other}`"),
+        })
+    }
+
+    /// Resolve [`SchedPolicyKind::Auto`] by stage kind; explicit choices
+    /// pass through unchanged.  Never returns `Auto`.
+    pub fn resolve(self, kind: StageKind) -> Self {
+        match self {
+            SchedPolicyKind::Auto => match kind {
+                StageKind::Ar => SchedPolicyKind::Continuous,
+                StageKind::Dit => SchedPolicyKind::StepLevel,
+                _ => SchedPolicyKind::Fifo,
+            },
+            explicit => explicit,
+        }
+    }
+}
+
+/// Per-stage scheduling parameters (paper §3.3 "per-stage request
+/// batching").  All defaults reproduce the pre-scheduler behaviour, so
+/// existing configs keep working unchanged.
+#[derive(Debug, Clone)]
+pub struct SchedParams {
+    /// Batching policy; [`SchedPolicyKind::Auto`] (default) picks by
+    /// stage kind.
+    pub policy: SchedPolicyKind,
+    /// Continuous batching only: cap on the summed token commitment
+    /// (prompt + generation budget) of in-flight sequences.  0 (default)
+    /// = no budget, admission is slot-bound only.
+    pub max_batch_tokens: usize,
+    /// Admission-queue depth cap.  When the stage's pending queue reaches
+    /// this many submissions the stage thread stops pulling from its
+    /// connectors, so excess items wait in the connector channel instead
+    /// of this stage's queue.  Note this bounds *this stage's* admission
+    /// queue only — connector channels are unbounded and producers never
+    /// block, so it shapes admission order/timing rather than slowing the
+    /// producer.  Conditioning rows still in the channel are delayed with
+    /// everything else (engines never block on them, so this affects
+    /// freshness, not liveness).  0 (default) = unbounded.
+    pub queue_depth: usize,
+    /// Step-level batching only: a new request may join while every
+    /// running lane is at most this many denoise steps into its schedule.
+    pub step_window: usize,
+}
+
+impl Default for SchedParams {
+    fn default() -> Self {
+        Self { policy: SchedPolicyKind::Auto, max_batch_tokens: 0, queue_depth: 0, step_window: 2 }
+    }
+}
+
 /// Diffusion-stage runtime parameters.
 #[derive(Debug, Clone)]
 pub struct DiffusionParams {
@@ -92,6 +178,8 @@ pub struct StageConfig {
     pub stream_chunk: usize,
     /// Diffusion parameters (DiT stages only).
     pub diffusion: DiffusionParams,
+    /// Scheduling parameters (batching policy, token budget, queue depth).
+    pub sched: SchedParams,
 }
 
 impl StageConfig {
@@ -107,6 +195,7 @@ impl StageConfig {
             multi_step: 1,
             stream_chunk: 16,
             diffusion: DiffusionParams::default(),
+            sched: SchedParams::default(),
         }
     }
 
@@ -132,6 +221,21 @@ impl StageConfig {
 
     pub fn with_diffusion(mut self, d: DiffusionParams) -> Self {
         self.diffusion = d;
+        self
+    }
+
+    pub fn with_sched(mut self, s: SchedParams) -> Self {
+        self.sched = s;
+        self
+    }
+
+    pub fn with_policy(mut self, p: SchedPolicyKind) -> Self {
+        self.sched.policy = p;
+        self
+    }
+
+    pub fn with_max_batch_tokens(mut self, t: usize) -> Self {
+        self.sched.max_batch_tokens = t;
         self
     }
 }
@@ -290,6 +394,30 @@ mod tests {
         let mut p = two_stage();
         p.edges[0].to = "a".into();
         assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn sched_policy_roundtrip_and_resolution() {
+        for p in [SchedPolicyKind::Auto, SchedPolicyKind::Fifo,
+                  SchedPolicyKind::Continuous, SchedPolicyKind::StepLevel] {
+            assert_eq!(SchedPolicyKind::from_name(p.name()).unwrap(), p);
+        }
+        assert!(SchedPolicyKind::from_name("nope").is_err());
+        assert_eq!(SchedPolicyKind::Auto.resolve(StageKind::Ar), SchedPolicyKind::Continuous);
+        assert_eq!(SchedPolicyKind::Auto.resolve(StageKind::Dit), SchedPolicyKind::StepLevel);
+        assert_eq!(SchedPolicyKind::Auto.resolve(StageKind::Encoder), SchedPolicyKind::Fifo);
+        assert_eq!(SchedPolicyKind::Auto.resolve(StageKind::CnnVocoder), SchedPolicyKind::Fifo);
+        // Explicit choices pass through.
+        assert_eq!(SchedPolicyKind::Fifo.resolve(StageKind::Ar), SchedPolicyKind::Fifo);
+    }
+
+    #[test]
+    fn sched_defaults_are_backward_compatible() {
+        let s = StageConfig::new("a", "thinker25", StageKind::Ar);
+        assert_eq!(s.sched.policy, SchedPolicyKind::Auto);
+        assert_eq!(s.sched.max_batch_tokens, 0);
+        assert_eq!(s.sched.queue_depth, 0);
+        assert!(s.sched.step_window > 0);
     }
 
     #[test]

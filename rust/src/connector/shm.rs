@@ -1,74 +1,81 @@
 //! POSIX shared-memory payload plane (single-node large transfers,
 //! paper Table 1 "Shared Memory" row).
 //!
-//! Uses `shm_open`/`mmap` directly through `libc` — real shared memory,
-//! not a file copy — so the measured latency is representative.
+//! POSIX `shm_open` objects are files on the `/dev/shm` tmpfs; the offline
+//! registry has no `libc` crate, so this module manipulates those objects
+//! directly through `std::fs` instead of the `shm_open`/`mmap` FFI.  On
+//! Linux the segments are identical kernel objects (memory-backed, never
+//! touch disk) and the producer/consumer copies match what the FFI path
+//! performed, so the measured latency stays representative; hosts without
+//! `/dev/shm` fall back to the system temp dir.  Segment names follow the
+//! `shm_open` convention of a single leading `/`.
+
+use std::io::{ErrorKind, Read, Write};
+use std::path::PathBuf;
+use std::sync::OnceLock;
 
 use anyhow::{bail, Result};
 
-/// Create a segment, copy `bytes` into it, close the mapping (the name
-/// persists until unlink).
+/// Where POSIX shm objects live on Linux; non-Linux POSIX hosts (no
+/// `/dev/shm`) fall back to the system temp dir so the connector keeps
+/// the portability of the old `shm_open` path (macOS temp dirs are
+/// commonly memory-ish and always present).
+fn shm_dir() -> &'static PathBuf {
+    static DIR: OnceLock<PathBuf> = OnceLock::new();
+    DIR.get_or_init(|| {
+        let dev_shm = PathBuf::from("/dev/shm");
+        if dev_shm.is_dir() {
+            dev_shm
+        } else {
+            std::env::temp_dir()
+        }
+    })
+}
+
+fn segment_path(name: &str) -> PathBuf {
+    // `shm_open("/foo")` creates `<shm dir>/foo`.
+    shm_dir().join(name.trim_start_matches('/'))
+}
+
+/// Create a segment and copy `bytes` into it (the name persists until
+/// [`unlink`]).  Like `shm_open(O_CREAT | O_EXCL)`, an existing segment
+/// with the same name is an error.
 pub fn write_segment(name: &str, bytes: &[u8]) -> Result<()> {
-    unsafe {
-        let cname = std::ffi::CString::new(name)?;
-        let fd = libc::shm_open(
-            cname.as_ptr(),
-            libc::O_CREAT | libc::O_RDWR | libc::O_EXCL,
-            0o600,
-        );
-        if fd < 0 {
-            bail!("shm_open({name}) failed: {}", std::io::Error::last_os_error());
+    let path = segment_path(name);
+    let mut f = match std::fs::OpenOptions::new().write(true).create_new(true).open(&path) {
+        Ok(f) => f,
+        Err(e) if e.kind() == ErrorKind::AlreadyExists => {
+            bail!("shm segment `{name}` already exists");
         }
-        if libc::ftruncate(fd, bytes.len() as libc::off_t) != 0 {
-            libc::close(fd);
-            libc::shm_unlink(cname.as_ptr());
-            bail!("ftruncate failed: {}", std::io::Error::last_os_error());
-        }
-        let ptr = libc::mmap(
-            std::ptr::null_mut(),
-            bytes.len(),
-            libc::PROT_WRITE,
-            libc::MAP_SHARED,
-            fd,
-            0,
-        );
-        libc::close(fd);
-        if ptr == libc::MAP_FAILED {
-            libc::shm_unlink(cname.as_ptr());
-            bail!("mmap failed: {}", std::io::Error::last_os_error());
-        }
-        std::ptr::copy_nonoverlapping(bytes.as_ptr(), ptr as *mut u8, bytes.len());
-        libc::munmap(ptr, bytes.len());
+        Err(e) => bail!("creating shm segment `{name}`: {e}"),
+    };
+    if let Err(e) = f.write_all(bytes) {
+        // Mirror the shm_open-path cleanup: never leave a partial segment
+        // behind — a retry of the same name must not hit `already exists`
+        // and a consumer must not read a short blob.
+        drop(f);
+        unlink(name);
+        bail!("writing shm segment `{name}`: {e}");
     }
     Ok(())
 }
 
-/// Map a segment read-only and copy it out.
+/// Read a segment's first `len` bytes back out.
 pub fn read_segment(name: &str, len: usize) -> Result<Vec<u8>> {
-    unsafe {
-        let cname = std::ffi::CString::new(name)?;
-        let fd = libc::shm_open(cname.as_ptr(), libc::O_RDONLY, 0);
-        if fd < 0 {
-            bail!("shm_open({name}) for read failed: {}", std::io::Error::last_os_error());
-        }
-        let ptr = libc::mmap(std::ptr::null_mut(), len, libc::PROT_READ, libc::MAP_SHARED, fd, 0);
-        libc::close(fd);
-        if ptr == libc::MAP_FAILED {
-            bail!("mmap for read failed: {}", std::io::Error::last_os_error());
-        }
-        let mut out = vec![0u8; len];
-        std::ptr::copy_nonoverlapping(ptr as *const u8, out.as_mut_ptr(), len);
-        libc::munmap(ptr, len);
-        Ok(out)
-    }
+    let path = segment_path(name);
+    let mut f = match std::fs::File::open(&path) {
+        Ok(f) => f,
+        Err(e) => bail!("opening shm segment `{name}` for read: {e}"),
+    };
+    let mut out = vec![0u8; len];
+    f.read_exact(&mut out)
+        .map_err(|e| anyhow::anyhow!("shm segment `{name}` shorter than {len} bytes: {e}"))?;
+    Ok(out)
 }
 
+/// Remove a segment's name (best-effort, like `shm_unlink`).
 pub fn unlink(name: &str) {
-    if let Ok(cname) = std::ffi::CString::new(name) {
-        unsafe {
-            libc::shm_unlink(cname.as_ptr());
-        }
-    }
+    let _ = std::fs::remove_file(segment_path(name));
 }
 
 #[cfg(test)]

@@ -202,6 +202,14 @@ impl ArEngine {
         self.waiting.push_back(seq);
     }
 
+    /// Submit a batch of requests at one token boundary: everything
+    /// submitted together joins the running batch at the same iteration.
+    pub fn submit_many<I: IntoIterator<Item = ArJob>>(&mut self, jobs: I) {
+        for job in jobs {
+            self.submit(job);
+        }
+    }
+
     /// Feed upstream hidden rows for a request's conditioning stream
     /// (whether waiting or running).
     pub fn push_upstream(&mut self, req_id: u64, rows: &[f32], dim: usize, complete: bool) {
@@ -231,6 +239,17 @@ impl ArEngine {
 
     pub fn running(&self) -> usize {
         self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Sum of token commitments (prompt + generation budget) of every
+    /// sequence in flight — waiting or running.  The continuous-batching
+    /// policy's admission signal for the max-batch-tokens budget.
+    pub fn committed_tokens(&self) -> usize {
+        self.waiting
+            .iter()
+            .chain(self.slots.iter().flatten())
+            .map(|s| s.prompt_len() + s.sampling.max_new_tokens)
+            .sum()
     }
 
     // ------------------------------------------------------------------

@@ -21,7 +21,7 @@ pub mod core;
 pub mod sampler;
 pub mod sequence;
 
-pub use core::{embed_job, token_job, ArEngine, ArEngineOptions, ArJob, EngineStats, Preprocess};
+pub use self::core::{embed_job, token_job, ArEngine, ArEngineOptions, ArJob, EngineStats, Preprocess};
 pub use sequence::{PromptItem, SeqPhase, Sequence};
 
 /// Decode steps fused by the AOT scan executable (lockstep with

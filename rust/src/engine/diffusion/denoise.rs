@@ -127,12 +127,31 @@ impl DiffusionEngine {
         self.queue.push_back(job);
     }
 
+    /// Submit a batch of jobs at one step boundary (a step-aligned
+    /// cohort starting together).
+    pub fn submit_many<I: IntoIterator<Item = DiffusionJob>>(&mut self, jobs: I) {
+        for job in jobs {
+            self.submit(job);
+        }
+    }
+
     pub fn idle(&self) -> bool {
         self.queue.is_empty() && self.lanes.is_empty()
     }
 
     pub fn queued(&self) -> usize {
         self.queue.len()
+    }
+
+    /// Lanes currently denoising.
+    pub fn running(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Current denoise step of every active lane (the step-level batching
+    /// policy's cohort-alignment signal).
+    pub fn lane_steps(&self) -> Vec<usize> {
+        self.lanes.iter().map(|l| l.step).collect()
     }
 
     /// Advance one engine iteration: admit jobs, run one denoise step for

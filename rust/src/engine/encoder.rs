@@ -86,6 +86,10 @@ impl EncoderEngine {
         self.queue.is_empty()
     }
 
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
     /// Encode one batch of queued jobs; emits one finished item per job
     /// carrying `embeds [frames, d_out]`.
     pub fn step(&mut self) -> Result<Vec<StageItem>> {

@@ -4,13 +4,20 @@
 use super::Value;
 use std::collections::BTreeMap;
 
-#[derive(Debug, thiserror::Error)]
-#[error("JSON parse error at line {line}, col {col}: {msg}")]
+#[derive(Debug)]
 pub struct ParseError {
     pub line: usize,
     pub col: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "JSON parse error at line {}, col {}: {}", self.line, self.col, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 pub fn parse(text: &str) -> Result<Value, ParseError> {
     let mut p = Parser { bytes: text.as_bytes(), pos: 0 };

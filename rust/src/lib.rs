@@ -10,9 +10,12 @@
 //! served by independent engines ([`engine::ar`] — a vLLM-like continuous-
 //! batching engine — and [`engine::diffusion`] — a DiT denoising engine),
 //! edges are transfer functions routed through a unified
-//! [`connector::Connector`] (inline queue / POSIX shared memory /
-//! Mooncake-like TCP).  The [`orchestrator`] owns request lifecycles and
-//! streaming stage output.
+//! [`connector`] (inline queue / POSIX shared memory / Mooncake-like
+//! TCP).  The [`orchestrator`] owns request lifecycles and streaming
+//! stage output; each stage pulls batches from a per-stage admission
+//! queue governed by a [`scheduler`] batching policy (continuous
+//! batching for AR stages, step-level batching for diffusion stages,
+//! FIFO for encoders/vocoders).
 //!
 //! Model compute is AOT-lowered from JAX/Pallas (see `python/compile/`)
 //! into HLO-text artifacts executed through the PJRT CPU client
@@ -39,6 +42,7 @@ pub mod kv_cache;
 pub mod metrics;
 pub mod orchestrator;
 pub mod runtime;
+pub mod scheduler;
 pub mod server;
 pub mod stage_graph;
 pub mod tokenizer;

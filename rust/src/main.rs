@@ -116,6 +116,17 @@ fn real_main() -> Result<()> {
                             fmt::dur(ar.marshal_seconds),
                         );
                     }
+                    if let Some(sc) = &s.sched {
+                        println!(
+                            "sched {:>10}: policy {} | admitted {} | passthrough {} | peak queue {} | mean wait {}",
+                            s.name,
+                            sc.policy,
+                            sc.admitted,
+                            sc.passthrough,
+                            sc.max_queue_depth,
+                            fmt::dur(sc.queue_wait.mean()),
+                        );
+                    }
                 }
             }
             Ok(())

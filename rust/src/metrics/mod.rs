@@ -24,6 +24,12 @@ pub enum Event {
     StageDone { req: u64, stage: &'static str, t: f64, tokens: usize },
     /// Request fully completed.
     Completed { req: u64, t: f64 },
+    /// Scheduler occupancy sample for a stage (paper §3.3 batching
+    /// observability): pending admission-queue depth, engine occupancy,
+    /// and the in-flight token commitment at one token boundary.
+    SchedSample { stage: &'static str, t: f64, queued: usize, running: usize, committed_tokens: usize },
+    /// A request cleared a stage's admission queue after `wait_s` seconds.
+    SchedAdmitted { stage: &'static str, req: u64, t: f64, wait_s: f64 },
 }
 
 #[derive(Debug, Default, Clone)]
@@ -41,10 +47,28 @@ struct ReqRec {
     stages: HashMap<&'static str, StageRec>,
 }
 
+/// Per-stage scheduler aggregates (queue depth, batch occupancy,
+/// admission waits) built from [`Event::SchedSample`] /
+/// [`Event::SchedAdmitted`].
+#[derive(Debug, Default, Clone)]
+pub struct SchedAgg {
+    /// Pending admission-queue depth per sample.
+    pub queue_depth: Samples,
+    /// Engine occupancy (running + engine-internal queue) per sample.
+    pub occupancy: Samples,
+    /// In-flight token commitment per sample (AR stages).
+    pub committed_tokens: Samples,
+    /// Seconds requests waited in the admission queue.
+    pub admit_wait: Samples,
+    /// Requests admitted through the queue.
+    pub admitted: u64,
+}
+
 /// Thread-safe event sink.
 #[derive(Debug, Default)]
 pub struct Recorder {
     inner: Mutex<HashMap<u64, ReqRec>>,
+    sched: Mutex<HashMap<&'static str, SchedAgg>>,
 }
 
 impl Recorder {
@@ -53,6 +77,24 @@ impl Recorder {
     }
 
     pub fn emit(&self, e: Event) {
+        match &e {
+            Event::SchedSample { stage, queued, running, committed_tokens, .. } => {
+                let mut s = self.sched.lock().unwrap();
+                let agg = s.entry(*stage).or_default();
+                agg.queue_depth.push(*queued as f64);
+                agg.occupancy.push(*running as f64);
+                agg.committed_tokens.push(*committed_tokens as f64);
+                return;
+            }
+            Event::SchedAdmitted { stage, wait_s, .. } => {
+                let mut s = self.sched.lock().unwrap();
+                let agg = s.entry(*stage).or_default();
+                agg.admit_wait.push(*wait_s);
+                agg.admitted += 1;
+                return;
+            }
+            _ => {}
+        }
         let mut m = self.inner.lock().unwrap();
         match e {
             Event::Arrived { req, t } => {
@@ -75,6 +117,8 @@ impl Recorder {
             Event::Completed { req, t } => {
                 m.entry(req).or_default().completed = Some(t);
             }
+            // Handled (with an early return) above.
+            Event::SchedSample { .. } | Event::SchedAdmitted { .. } => unreachable!(),
         }
     }
 
@@ -118,7 +162,15 @@ impl Recorder {
             }
         }
 
-        RunReport { wall_s, completed, jct, ttft, rtf, per_stage }
+        let sched = self
+            .sched
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.clone()))
+            .collect();
+
+        RunReport { wall_s, completed, jct, ttft, rtf, per_stage, sched }
     }
 }
 
@@ -139,6 +191,9 @@ pub struct RunReport {
     pub ttft: Samples,
     pub rtf: Samples,
     pub per_stage: HashMap<String, StageAgg>,
+    /// Per-stage scheduler aggregates (empty for stages that never
+    /// emitted scheduler samples, e.g. baseline runs).
+    pub sched: HashMap<String, SchedAgg>,
 }
 
 impl RunReport {
@@ -170,6 +225,21 @@ impl RunReport {
 
     pub fn stage_tokens(&self, stage: &str) -> usize {
         self.per_stage.get(stage).map(|a| a.tokens).unwrap_or(0)
+    }
+
+    /// Mean pending admission-queue depth observed at a stage.
+    pub fn sched_mean_queue_depth(&self, stage: &str) -> f64 {
+        self.sched.get(stage).map(|a| a.queue_depth.mean()).unwrap_or(0.0)
+    }
+
+    /// Mean engine occupancy (batch fullness) observed at a stage.
+    pub fn sched_mean_occupancy(&self, stage: &str) -> f64 {
+        self.sched.get(stage).map(|a| a.occupancy.mean()).unwrap_or(0.0)
+    }
+
+    /// Mean seconds requests spent in a stage's admission queue.
+    pub fn sched_mean_admit_wait(&self, stage: &str) -> f64 {
+        self.sched.get(stage).map(|a| a.admit_wait.mean()).unwrap_or(0.0)
     }
 }
 
@@ -206,6 +276,21 @@ mod tests {
         let rep = r.report(1.0, None);
         assert_eq!(rep.completed, 0);
         assert_eq!(rep.jct.len(), 0);
+    }
+
+    #[test]
+    fn sched_samples_aggregate_per_stage() {
+        let r = Recorder::new();
+        r.emit(Event::SchedSample { stage: "talker", t: 0.1, queued: 3, running: 2, committed_tokens: 64 });
+        r.emit(Event::SchedSample { stage: "talker", t: 0.2, queued: 1, running: 4, committed_tokens: 96 });
+        r.emit(Event::SchedAdmitted { stage: "talker", req: 1, t: 0.2, wait_s: 0.05 });
+        let rep = r.report(1.0, None);
+        assert!((rep.sched_mean_queue_depth("talker") - 2.0).abs() < 1e-9);
+        assert!((rep.sched_mean_occupancy("talker") - 3.0).abs() < 1e-9);
+        assert!((rep.sched_mean_admit_wait("talker") - 0.05).abs() < 1e-9);
+        assert_eq!(rep.sched["talker"].admitted, 1);
+        // Unsampled stages report zeros, not panics.
+        assert_eq!(rep.sched_mean_queue_depth("vocoder"), 0.0);
     }
 
     #[test]

@@ -20,6 +20,7 @@ use crate::config::PipelineConfig;
 use crate::connector;
 use crate::engine::StageItem;
 use crate::metrics::{Event, Recorder, RunReport};
+use crate::scheduler::{AllocationPlan, StageAllocator};
 use crate::stage_graph::transfers::{ReqMeta, ReqTable, Registry, TransferCtx};
 use crate::stage_graph::StageGraph;
 use crate::trace::{Request, Workload};
@@ -81,6 +82,8 @@ pub struct StageSummary {
     pub ar: Option<crate::engine::ar::EngineStats>,
     pub diffusion: Option<crate::engine::diffusion::DiffusionStats>,
     pub vocoder: Option<crate::engine::vocoder::VocoderStats>,
+    /// Admission-queue counters from the stage's [`crate::scheduler::StageScheduler`].
+    pub sched: Option<crate::scheduler::SchedStats>,
     pub bytes_sent: u64,
 }
 
@@ -98,6 +101,7 @@ pub struct Orchestrator {
     registry: Registry,
     artifacts: Arc<Artifacts>,
     opts: RunOptions,
+    plan: AllocationPlan,
 }
 
 impl Orchestrator {
@@ -116,11 +120,22 @@ impl Orchestrator {
         graph
             .reserve_memory(&pool, &artifacts)
             .with_context(|| format!("placing pipeline `{}`", graph.config.name))?;
-        Ok(Self { graph, registry, artifacts, opts })
+        // Scheduling/allocation admission: resolve each stage's batching
+        // policy and device assignment, rejecting invalid combinations
+        // before any engine thread spawns.
+        let plan = StageAllocator::new(&graph.config)
+            .plan(Some(artifacts.as_ref()))
+            .with_context(|| format!("allocating pipeline `{}`", graph.config.name))?;
+        Ok(Self { graph, registry, artifacts, opts, plan })
     }
 
     pub fn graph(&self) -> &StageGraph {
         &self.graph
+    }
+
+    /// The resolved per-stage scheduling/placement plan.
+    pub fn plan(&self) -> &AllocationPlan {
+        &self.plan
     }
 
     /// Serve a whole workload to completion and report metrics.
@@ -185,6 +200,7 @@ impl Orchestrator {
             let spec = stage::StageSpec {
                 index: i,
                 cfg: self.graph.stage(i).clone(),
+                assignment: self.plan.assignment(i).clone(),
                 artifacts: self.artifacts.clone(),
                 rxs: std::mem::take(&mut stage_rxs[i]),
                 txs: std::mem::take(&mut stage_txs[i]),

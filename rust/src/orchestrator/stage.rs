@@ -1,6 +1,11 @@
 //! One stage's serving thread: engine construction, input routing
-//! (frontend requests + upstream items through transfers), the engine
-//! loop, and output forwarding.
+//! (frontend requests + upstream items through transfers), the
+//! scheduler-driven engine loop, and output forwarding.
+//!
+//! Inputs no longer drain straight into the engine: every submission goes
+//! through a [`StageScheduler`] whose [`crate::scheduler::BatchPolicy`]
+//! decides, at each token boundary, what joins the engine's batch
+//! (paper §3.3 per-stage request batching).
 
 use std::collections::HashMap;
 use std::sync::atomic::Ordering;
@@ -19,9 +24,15 @@ use crate::engine::vocoder::{VocoderEngine, VocoderKind};
 use crate::engine::{SamplingParams, StageItem};
 use crate::metrics::{Event, Recorder};
 use crate::runtime::{Artifacts, HostTensor, StageRuntime};
+use crate::scheduler::{EngineView, StageAssignment, StageScheduler};
 use crate::stage_graph::transfers::{EngineCmd, ReqTable, Registry, Transfer, TransferCtx};
 use crate::trace::Request;
 use crate::util::Prng;
+
+/// Engine-occupancy samples are recorded every this many loop iterations
+/// (plus whenever the scheduler admits something), keeping the recorder's
+/// lock cold on the hot path.
+const SAMPLE_EVERY: u64 = 32;
 
 pub struct StageSpec {
     pub index: usize,
@@ -36,6 +47,9 @@ pub struct StageSpec {
     pub recorder: Arc<Recorder>,
     pub clock: RunClock,
     pub stop: Arc<std::sync::atomic::AtomicBool>,
+    /// Resolved scheduling assignment (policy, budgets, devices) from the
+    /// orchestrator's [`crate::scheduler::AllocationPlan`].
+    pub assignment: StageAssignment,
     /// Entry stage only: frontend request channel.
     pub front_rx: Option<mpsc::Receiver<Request>>,
     /// Exit stage only: completed-item sink.
@@ -76,6 +90,34 @@ impl Engine {
             Engine::Encoder(e) => e.step(),
         }
     }
+
+    /// Occupancy snapshot for the scheduler's [`crate::scheduler::BatchPolicy`].
+    fn view(&self, max_batch: usize) -> EngineView {
+        match self {
+            Engine::Ar(e) => EngineView {
+                running: e.running() + e.queued(),
+                max_batch,
+                committed_tokens: e.committed_tokens(),
+                lane_steps: vec![],
+            },
+            Engine::Diffusion(e) => EngineView {
+                running: e.running() + e.queued(),
+                max_batch,
+                committed_tokens: 0,
+                lane_steps: e.lane_steps(),
+            },
+            Engine::Vocoder(e) => EngineView {
+                running: e.queued(),
+                max_batch,
+                ..Default::default()
+            },
+            Engine::Encoder(e) => EngineView {
+                running: e.queued(),
+                max_batch,
+                ..Default::default()
+            },
+        }
+    }
 }
 
 pub fn spawn(spec: StageSpec) -> Result<JoinHandle<Result<StageSummary>>> {
@@ -86,7 +128,6 @@ pub fn spawn(spec: StageSpec) -> Result<JoinHandle<Result<StageSummary>>> {
             let stage = spec.cfg.name.clone();
             let r = run(spec);
             if let Err(e) = &r {
-                log::error!("stage `{stage}` failed: {e:#}");
                 eprintln!("stage `{stage}` failed: {e:#}");
             }
             r
@@ -187,53 +228,97 @@ fn run(mut spec: StageSpec) -> Result<StageSummary> {
         inputs.push((rx, t));
     }
 
+    // The stage's admission queue: inputs land here and the configured
+    // batching policy decides what joins the engine at each boundary.
+    let mut sched =
+        StageScheduler::new(spec.assignment.make_policy(), spec.assignment.queue_depth);
+
     // Per-request output token counters (for StageDone events).
     let mut tokens_out: HashMap<u64, usize> = HashMap::new();
     let mut first_out: HashMap<u64, bool> = HashMap::new();
+    let mut tick: u64 = 0;
 
     loop {
         let mut worked = false;
+        tick += 1;
 
-        // 1) Frontend requests (entry stage only).
+        // 1) Frontend requests (entry stage only) — queued, not submitted.
         if let Some(front) = &spec.front_rx {
-            while let Ok(req) = front.try_recv() {
-                spec.recorder.emit(Event::StageAdmit {
-                    req: req.id,
-                    stage: stage_name,
-                    t: spec.clock.now(),
-                });
-                match &mut engine {
-                    Engine::Ar(e) => e.submit(entry_job(&spec, encoder.as_mut(), &req)?),
-                    Engine::Diffusion(e) => e.submit(diffusion_entry_job(e, &req)),
-                    Engine::Vocoder(e) => e.submit(crate::engine::vocoder::VocoderJob {
-                        req_id: req.id,
-                        chunk_idx: 0,
-                        tokens: req.prompt_tokens.clone(),
-                        final_chunk: true,
-                    }),
-                    Engine::Encoder(e) => e.submit(encode_entry_job(e, &req)),
+            while sched.has_room() {
+                let Ok(req) = front.try_recv() else { break };
+                let cmd = match &mut engine {
+                    Engine::Ar(_) => {
+                        EngineCmd::SubmitAr(entry_job(&spec, encoder.as_mut(), &req)?)
+                    }
+                    Engine::Diffusion(e) => {
+                        EngineCmd::SubmitDiffusion(diffusion_entry_job(e, &req))
+                    }
+                    Engine::Vocoder(_) => {
+                        EngineCmd::SubmitVocoder(crate::engine::vocoder::VocoderJob {
+                            req_id: req.id,
+                            chunk_idx: 0,
+                            tokens: req.prompt_tokens.clone(),
+                            final_chunk: true,
+                        })
+                    }
+                    Engine::Encoder(e) => EngineCmd::SubmitEncode(encode_entry_job(e, &req)),
+                };
+                for c in sched.enqueue(cmd, spec.clock.now()) {
+                    apply_cmd(&mut engine, c, stage_name, &spec.recorder, &spec.clock)?;
                 }
                 worked = true;
             }
         }
 
-        // 2) Upstream items through transfers.
+        // 2) Upstream items through transfers — submissions queue behind
+        // the policy; conditioning rows for in-flight requests pass
+        // through.  When the queue-depth cap is hit, items stay in the
+        // connector (backpressure on the producer stage).
         for (rx, transfer) in &mut inputs {
-            while let Some(item) = rx.try_recv()? {
+            while sched.has_room() {
+                let Some(item) = rx.try_recv()? else { break };
                 for cmd in transfer(&item)? {
-                    apply_cmd(
-                        &mut engine,
-                        cmd,
-                        stage_name,
-                        &spec.recorder,
-                        &spec.clock,
-                    )?;
+                    for c in sched.enqueue(cmd, spec.clock.now()) {
+                        apply_cmd(&mut engine, c, stage_name, &spec.recorder, &spec.clock)?;
+                    }
                 }
                 worked = true;
             }
         }
 
-        // 3) One engine iteration.
+        // 3) Policy admissions at the token boundary.
+        if !sched.is_empty() {
+            let view = engine.view(spec.assignment.max_batch);
+            let now = spec.clock.now();
+            let admissions = sched.ready_with(&view, now, |req, wait_s| {
+                spec.recorder.emit(Event::SchedAdmitted {
+                    stage: stage_name,
+                    req,
+                    t: now,
+                    wait_s,
+                });
+            });
+            if !admissions.is_empty() {
+                worked = true;
+                for c in admissions {
+                    apply_cmd(&mut engine, c, stage_name, &spec.recorder, &spec.clock)?;
+                }
+            }
+        }
+
+        // Occupancy sample (cheap, periodic).
+        if tick % SAMPLE_EVERY == 0 && (!engine.idle() || !sched.is_empty()) {
+            let view = engine.view(spec.assignment.max_batch);
+            spec.recorder.emit(Event::SchedSample {
+                stage: stage_name,
+                t: spec.clock.now(),
+                queued: sched.queue_len(),
+                running: view.running,
+                committed_tokens: view.committed_tokens,
+            });
+        }
+
+        // 4) One engine iteration.
         if !engine.idle() {
             let items = engine.step()?;
             worked = true;
@@ -273,11 +358,10 @@ fn run(mut spec: StageSpec) -> Result<StageSummary> {
                 // drains its last text chunks), so late items are dropped.
                 for tx in &mut spec.txs {
                     if let Err(e) = tx.send(item.clone()) {
-                        if spec.stop.load(Ordering::SeqCst) {
-                            log::debug!("stage `{stage_name}`: dropping post-shutdown item: {e}");
-                        } else {
+                        if !spec.stop.load(Ordering::SeqCst) {
                             return Err(e);
                         }
+                        // Post-shutdown: the consumer is gone, drop the item.
                     }
                 }
                 if let Some(sink) = &spec.sink {
@@ -287,7 +371,7 @@ fn run(mut spec: StageSpec) -> Result<StageSummary> {
         }
 
         if !worked {
-            if spec.stop.load(Ordering::SeqCst) && engine.idle() {
+            if spec.stop.load(Ordering::SeqCst) && engine.idle() && sched.is_empty() {
                 break;
             }
             std::thread::sleep(std::time::Duration::from_micros(200));
@@ -301,6 +385,7 @@ fn run(mut spec: StageSpec) -> Result<StageSummary> {
         Engine::Vocoder(e) => summary.vocoder = Some(e.stats.clone()),
         Engine::Encoder(_) => {}
     }
+    summary.sched = Some(sched.stats.clone());
     summary.bytes_sent = spec.txs.iter().map(|t| t.bytes_sent).sum();
     Ok(summary)
 }
@@ -338,6 +423,10 @@ fn apply_cmd(
                     t: clock.now(),
                 });
             }
+            e.submit(job);
+        }
+        (Engine::Encoder(e), EngineCmd::SubmitEncode(job)) => {
+            recorder.emit(Event::StageAdmit { req: job.req_id, stage: stage_name, t: clock.now() });
             e.submit(job);
         }
         (_, cmd) => bail!("stage `{stage_name}`: engine cannot handle {cmd:?}"),

@@ -1,0 +1,229 @@
+//! Stage → device allocation (paper §3.3 "flexible GPU allocation").
+//!
+//! [`StageAllocator`] turns the per-stage `devices` / `max_batch` /
+//! `sched` fields of a [`PipelineConfig`] into a validated
+//! [`AllocationPlan`]: one [`StageAssignment`] per stage with the batching
+//! policy resolved, plus a per-device load map.  The orchestrator builds
+//! the plan before spawning stage threads, so a mis-configured pipeline
+//! fails at construction time instead of mid-run — the same admission role
+//! the real system's allocator plays next to the memory reservation in
+//! [`crate::stage_graph::StageGraph::reserve_memory`].
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::config::{PipelineConfig, SchedPolicyKind, StageKind};
+use crate::device::DeviceId;
+use crate::runtime::Artifacts;
+
+/// One stage's resolved scheduling assignment.
+#[derive(Debug, Clone)]
+pub struct StageAssignment {
+    pub stage: String,
+    pub kind: StageKind,
+    /// Device placement (len > 1 = tensor parallel across the group).
+    pub devices: Vec<DeviceId>,
+    /// Resolved batching policy (never [`SchedPolicyKind::Auto`]).
+    pub policy: SchedPolicyKind,
+    pub max_batch: usize,
+    /// In-flight token budget for continuous batching (0 = unlimited).
+    pub max_batch_tokens: usize,
+    /// Admission-queue depth cap (0 = unbounded); beyond it the stage
+    /// thread stops pulling from its connectors (backpressure).
+    pub queue_depth: usize,
+    /// Cohort-alignment window for step-level batching.
+    pub step_window: usize,
+}
+
+impl StageAssignment {
+    /// Instantiate the resolved batching policy.
+    pub fn make_policy(&self) -> Box<dyn super::BatchPolicy> {
+        match self.policy {
+            SchedPolicyKind::Continuous => Box::new(super::ContinuousBatchingPolicy {
+                max_batch_tokens: self.max_batch_tokens,
+            }),
+            SchedPolicyKind::StepLevel => {
+                Box::new(super::StepBatchingPolicy { step_window: self.step_window })
+            }
+            SchedPolicyKind::Fifo => Box::new(super::FifoPolicy),
+            SchedPolicyKind::Auto => unreachable!("plan() resolves Auto"),
+        }
+    }
+}
+
+/// A validated allocation for a whole pipeline.
+#[derive(Debug, Clone)]
+pub struct AllocationPlan {
+    assignments: Vec<StageAssignment>,
+    /// Stages sharing each device (time-multiplexed on the simulated pool).
+    load: HashMap<DeviceId, Vec<String>>,
+}
+
+impl AllocationPlan {
+    /// Assignment for stage index `i` (stage order of the config).
+    pub fn assignment(&self, i: usize) -> &StageAssignment {
+        &self.assignments[i]
+    }
+
+    pub fn by_name(&self, stage: &str) -> Option<&StageAssignment> {
+        self.assignments.iter().find(|a| a.stage == stage)
+    }
+
+    pub fn assignments(&self) -> &[StageAssignment] {
+        &self.assignments
+    }
+
+    /// Names of the stages placed on `device`.
+    pub fn stages_on(&self, device: DeviceId) -> &[String] {
+        self.load.get(&device).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+}
+
+/// Builds [`AllocationPlan`]s from pipeline configs.
+pub struct StageAllocator<'a> {
+    config: &'a PipelineConfig,
+}
+
+impl<'a> StageAllocator<'a> {
+    pub fn new(config: &'a PipelineConfig) -> Self {
+        Self { config }
+    }
+
+    /// Validate and resolve the allocation.  `artifacts`, when given, adds
+    /// model-aware checks (compiled batch buckets exist for the stage's
+    /// engine family, so a mis-batched stage fails here instead of on its
+    /// engine thread).
+    pub fn plan(&self, artifacts: Option<&Artifacts>) -> Result<AllocationPlan> {
+        // Structural checks (non-empty device groups, placement bounds,
+        // name uniqueness, ...) live in one place.
+        self.config.validate()?;
+        let mut assignments = Vec::with_capacity(self.config.stages.len());
+        let mut load: HashMap<DeviceId, Vec<String>> = HashMap::new();
+        for s in &self.config.stages {
+            let mut seen = std::collections::HashSet::new();
+            for &d in &s.devices {
+                if !seen.insert(d) {
+                    bail!("stage `{}`: device {d} listed twice in its TP group", s.name);
+                }
+            }
+            let policy = s.sched.policy.resolve(s.kind);
+            match (policy, s.kind) {
+                (SchedPolicyKind::Continuous, StageKind::Ar) => {}
+                (SchedPolicyKind::Continuous, k) => bail!(
+                    "stage `{}`: continuous batching requires an AR stage, got `{}`",
+                    s.name,
+                    k.name()
+                ),
+                (SchedPolicyKind::StepLevel, StageKind::Dit) => {}
+                (SchedPolicyKind::StepLevel, k) => bail!(
+                    "stage `{}`: step-level batching requires a DiT stage, got `{}`",
+                    s.name,
+                    k.name()
+                ),
+                _ => {}
+            }
+            if s.sched.max_batch_tokens > 0 && s.kind != StageKind::Ar {
+                bail!(
+                    "stage `{}`: max_batch_tokens only applies to AR stages",
+                    s.name
+                );
+            }
+            if let Some(art) = artifacts {
+                // Fail-fast check: the stage's hot entry family must have
+                // compiled buckets, or its engine would die on its thread.
+                // (Vocoder/encoder entry families are model-specific and
+                // always compiled with their full bucket set.)
+                let family = match s.kind {
+                    StageKind::Ar => Some("decode"),
+                    StageKind::Dit => Some("step"),
+                    _ => None,
+                };
+                if let Some(fam) = family {
+                    let model = art.model(&s.model)?;
+                    if model.buckets(fam).is_empty() {
+                        bail!(
+                            "stage `{}`: model `{}` has no compiled `{fam}` buckets",
+                            s.name,
+                            s.model
+                        );
+                    }
+                }
+            }
+            let devices: Vec<DeviceId> = s.devices.iter().map(|&d| DeviceId(d)).collect();
+            for &d in &devices {
+                load.entry(d).or_default().push(s.name.clone());
+            }
+            assignments.push(StageAssignment {
+                stage: s.name.clone(),
+                kind: s.kind,
+                devices,
+                policy,
+                max_batch: s.max_batch,
+                max_batch_tokens: s.sched.max_batch_tokens,
+                queue_depth: s.sched.queue_depth,
+                step_window: s.sched.step_window,
+            });
+        }
+        Ok(AllocationPlan { assignments, load })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn plans_all_presets() {
+        for p in presets::all() {
+            let plan = StageAllocator::new(&p).plan(None).unwrap();
+            assert_eq!(plan.assignments().len(), p.stages.len());
+            for a in plan.assignments() {
+                assert_ne!(a.policy, SchedPolicyKind::Auto, "{}: unresolved policy", a.stage);
+            }
+        }
+    }
+
+    #[test]
+    fn auto_policy_resolves_by_kind() {
+        let plan = StageAllocator::new(&presets::qwen25_omni()).plan(None).unwrap();
+        assert_eq!(plan.by_name("thinker").unwrap().policy, SchedPolicyKind::Continuous);
+        assert_eq!(plan.by_name("talker").unwrap().policy, SchedPolicyKind::Continuous);
+        assert_eq!(plan.by_name("vocoder").unwrap().policy, SchedPolicyKind::StepLevel);
+    }
+
+    #[test]
+    fn rejects_duplicate_device_in_group() {
+        let mut p = presets::qwen3_omni();
+        p.stages[0].devices = vec![0, 0];
+        assert!(StageAllocator::new(&p).plan(None).is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_range_device() {
+        let mut p = presets::qwen3_omni();
+        p.stages[1].devices = vec![9];
+        assert!(StageAllocator::new(&p).plan(None).is_err());
+    }
+
+    #[test]
+    fn rejects_policy_kind_mismatch() {
+        let mut p = presets::qwen25_omni();
+        // Step-level batching on the (AR) thinker stage is invalid.
+        p.stages[0].sched.policy = SchedPolicyKind::StepLevel;
+        assert!(StageAllocator::new(&p).plan(None).is_err());
+        // Continuous batching on the (DiT) vocoder stage is invalid.
+        let mut p = presets::qwen25_omni();
+        p.stages[2].sched.policy = SchedPolicyKind::Continuous;
+        assert!(StageAllocator::new(&p).plan(None).is_err());
+    }
+
+    #[test]
+    fn device_load_map_tracks_sharing() {
+        let plan = StageAllocator::new(&presets::qwen25_omni()).plan(None).unwrap();
+        // Paper placement: thinker TP {0,1}, talker {1}, vocoder {0}.
+        assert_eq!(plan.stages_on(DeviceId(0)), ["thinker".to_string(), "vocoder".to_string()]);
+        assert_eq!(plan.stages_on(DeviceId(1)), ["thinker".to_string(), "talker".to_string()]);
+    }
+}

@@ -1,0 +1,303 @@
+//! Per-stage batching scheduler (paper §3.3: per-stage request batching +
+//! flexible GPU allocation).
+//!
+//! The orchestrator runs every stage on its own thread with its own engine
+//! ([`crate::orchestrator`]); this module is the layer between a stage's
+//! *inputs* (frontend requests and upstream items arriving through
+//! connectors) and its *engine*:
+//!
+//! ```text
+//!   connectors ──► transfers ──► StageScheduler ──► engine.step()
+//!                   (EngineCmd)   │ pending queue │
+//!                                 │ BatchPolicy   │──► metrics::Recorder
+//!                                 └───────────────┘    (queue depth,
+//!                                                       occupancy,
+//!                                                       admission waits)
+//! ```
+//!
+//! Structure:
+//! * [`policy`] — the [`BatchPolicy`] trait and the three built-in
+//!   policies: continuous batching (AR), step-level batching (diffusion),
+//!   FIFO (encoder/vocoder, and the static-batching baseline).
+//! * [`allocator`] — [`StageAllocator`]: validates per-stage
+//!   `devices`/`max_batch`/`sched` config into an [`AllocationPlan`]
+//!   before any thread spawns.
+//! * [`sim`] — a deterministic discrete-time model of an AR stage used to
+//!   evaluate policies without compiled artifacts (drives
+//!   `benches/sched_batching.rs` and the policy tests).
+//! * [`StageScheduler`] — the per-stage admission queue each stage thread
+//!   pulls batches from, in place of draining its connector straight into
+//!   the engine.
+//!
+//! Scheduling is work-conserving and order-preserving: policies decide
+//! *when* the front of the queue enters the engine, never reorder it.
+//! Every submission — including each streaming chunk of a request — is
+//! policy-gated uniformly, so competing requests are never starved by
+//! another request's follow-up chunks and step-level cohorts actually
+//! form; chunks are independent engine jobs, so gating them affects
+//! latency only, never liveness.  Conditioning rows (`Upstream`) are the
+//! one bypass: they buffer behind a still-queued head submission and
+//! otherwise flow straight to the engine.  When the `queue_depth` cap is
+//! reached the stage stops *pulling* from its connectors (bounding its
+//! own queue — connector channels stay unbounded and producers never
+//! block), which can delay rows still in the channel; that degrades
+//! conditioning freshness but never liveness — engines do not block on
+//! upstream rows (AR preprocessing uses whatever has arrived), so
+//! in-flight work always completes and drains the queue.
+
+pub mod allocator;
+pub mod policy;
+pub mod sim;
+
+use std::collections::VecDeque;
+
+use crate::stage_graph::transfers::EngineCmd;
+use crate::util::stats::Samples;
+
+pub use allocator::{AllocationPlan, StageAllocator, StageAssignment};
+pub use policy::{
+    BatchPolicy, ContinuousBatchingPolicy, EngineView, FifoPolicy, PendingJob, StepBatchingPolicy,
+};
+
+/// Aggregate scheduler counters for one stage (reported in
+/// [`crate::orchestrator::StageSummary`]).
+#[derive(Debug, Clone, Default)]
+pub struct SchedStats {
+    /// Resolved policy name ("continuous" / "step-level" / "fifo").
+    pub policy: String,
+    /// Submissions admitted into the engine through the queue (one per
+    /// request for AR stages, one per streaming chunk for chunked
+    /// stages).
+    pub admitted: u64,
+    /// Conditioning-row commands that bypassed the queue.
+    pub passthrough: u64,
+    /// High-water mark of the pending queue.
+    pub max_queue_depth: usize,
+    /// Seconds each admitted submission spent in the pending queue.
+    pub queue_wait: Samples,
+}
+
+/// One queued submission plus everything that must follow it into the
+/// engine (buffered conditioning rows).
+struct Pending {
+    job: PendingJob,
+    cmd: EngineCmd,
+    /// Upstream conditioning commands that arrived while this submission
+    /// was still queued; replayed right after it is admitted (the engine
+    /// drops rows for unknown request ids, so they must not run early).
+    upstream: Vec<EngineCmd>,
+    enqueued_at: f64,
+}
+
+/// The per-stage admission queue.  The stage thread feeds it every command
+/// its transfers produce and asks [`StageScheduler::ready`] between engine
+/// iterations which submissions the policy admits.
+pub struct StageScheduler {
+    policy: Box<dyn BatchPolicy>,
+    /// Queue-depth cap (0 = unbounded): when full, [`Self::has_room`]
+    /// turns false and the stage thread leaves items in the connector
+    /// channel.
+    queue_depth: usize,
+    pending: VecDeque<Pending>,
+    pub stats: SchedStats,
+}
+
+impl StageScheduler {
+    pub fn new(policy: Box<dyn BatchPolicy>, queue_depth: usize) -> Self {
+        let stats = SchedStats { policy: policy.name().to_string(), ..Default::default() };
+        Self { policy, queue_depth, pending: VecDeque::new(), stats }
+    }
+
+    /// Pending submissions (the stage's queue depth).
+    pub fn queue_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Whether the stage thread should keep pulling from its connectors.
+    pub fn has_room(&self) -> bool {
+        self.queue_depth == 0 || self.pending.len() < self.queue_depth
+    }
+
+    /// Offer a command.  Submissions (including every streaming chunk)
+    /// are queued for admission control; conditioning rows return
+    /// immediately when their target is not queued here (the engine
+    /// either has the sequence or safely ignores unknown ids).
+    pub fn enqueue(&mut self, cmd: EngineCmd, now: f64) -> Vec<EngineCmd> {
+        let (req_id, cost) = match &cmd {
+            EngineCmd::SubmitAr(j) => (j.req_id, j.prompt.len() + j.sampling.max_new_tokens),
+            EngineCmd::SubmitDiffusion(j) => (j.req_id, j.steps.max(1)),
+            EngineCmd::SubmitVocoder(j) => (j.req_id, j.tokens.len().max(1)),
+            EngineCmd::SubmitEncode(j) => (j.req_id, j.frames.max(1)),
+            EngineCmd::Upstream { req_id, .. } => {
+                // Conditioning rows: buffer behind a queued submission of
+                // the same request, otherwise flow straight to the engine.
+                // (Queued chunks of the request don't need the rows —
+                // only AR submissions consume them, and an AR request has
+                // exactly one submission.)
+                let req_id = *req_id;
+                if let Some(p) = self.pending.iter_mut().find(|p| p.job.req_id == req_id) {
+                    p.upstream.push(cmd);
+                    return vec![];
+                }
+                self.stats.passthrough += 1;
+                return vec![cmd];
+            }
+        };
+        self.pending.push_back(Pending {
+            job: PendingJob { req_id, cost_tokens: cost },
+            cmd,
+            upstream: vec![],
+            enqueued_at: now,
+        });
+        self.stats.max_queue_depth = self.stats.max_queue_depth.max(self.pending.len());
+        vec![]
+    }
+
+    /// Ask the policy which queued submissions to admit given the engine's
+    /// occupancy; returns them (with any buffered conditioning) in queue
+    /// order.
+    pub fn ready(&mut self, view: &EngineView, now: f64) -> Vec<EngineCmd> {
+        self.ready_with(view, now, |_, _| {})
+    }
+
+    /// [`ready`](Self::ready) with an observer called as `(req_id,
+    /// queue_wait_s)` for every admission — the orchestrator's hook for
+    /// emitting [`crate::metrics::Event::SchedAdmitted`].
+    pub fn ready_with(
+        &mut self,
+        view: &EngineView,
+        now: f64,
+        mut on_admit: impl FnMut(u64, f64),
+    ) -> Vec<EngineCmd> {
+        let mut out = Vec::new();
+        // Every policy admits at most `free_slots <= max_batch` jobs, so
+        // a full engine needs no policy call and the job snapshot never
+        // has to cover more than the head `max_batch` entries — keeping
+        // this O(max_batch), not O(queue), on the hot path.
+        if !self.pending.is_empty() && view.free_slots() > 0 {
+            let jobs: Vec<PendingJob> = self
+                .pending
+                .iter()
+                .take(view.max_batch.max(1))
+                .map(|p| p.job.clone())
+                .collect();
+            let n = self.policy.admit(&jobs, view).min(self.pending.len());
+            for _ in 0..n {
+                let p = self.pending.pop_front().unwrap();
+                self.stats.admitted += 1;
+                let wait = (now - p.enqueued_at).max(0.0);
+                self.stats.queue_wait.push(wait);
+                on_admit(p.job.req_id, wait);
+                out.push(p.cmd);
+                out.extend(p.upstream);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::ar::token_job;
+    use crate::engine::SamplingParams;
+
+    fn submit(req: u64, max_new: usize) -> EngineCmd {
+        EngineCmd::SubmitAr(token_job(
+            req,
+            &[1, 2],
+            SamplingParams { max_new_tokens: max_new, ..Default::default() },
+        ))
+    }
+
+    fn upstream(req: u64) -> EngineCmd {
+        EngineCmd::Upstream { req_id: req, rows: vec![0.5; 8], dim: 8, complete: false }
+    }
+
+    fn view(running: usize, max_batch: usize) -> EngineView {
+        EngineView { running, max_batch, ..Default::default() }
+    }
+
+    #[test]
+    fn upstream_is_buffered_until_admission() {
+        let mut s = StageScheduler::new(Box::new(FifoPolicy), 0);
+        assert!(s.enqueue(submit(1, 10), 0.0).is_empty());
+        // Rows for the queued request must NOT pass through early.
+        assert!(s.enqueue(upstream(1), 0.0).is_empty());
+        let cmds = s.ready(&view(0, 4), 0.5);
+        assert_eq!(cmds.len(), 2, "submission + buffered upstream");
+        assert!(matches!(cmds[0], EngineCmd::SubmitAr(_)));
+        assert!(matches!(cmds[1], EngineCmd::Upstream { .. }));
+        // Later rows for the now-admitted request flow straight through.
+        assert_eq!(s.enqueue(upstream(1), 1.0).len(), 1);
+    }
+
+    #[test]
+    fn fifo_holds_queue_while_engine_busy() {
+        let mut s = StageScheduler::new(Box::new(FifoPolicy), 0);
+        s.enqueue(submit(1, 10), 0.0);
+        s.enqueue(submit(2, 10), 0.0);
+        assert!(s.ready(&view(3, 4), 0.1).is_empty());
+        assert_eq!(s.ready(&view(0, 4), 0.2).len(), 2);
+        assert_eq!(s.stats.admitted, 2);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn queue_depth_backpressure() {
+        let mut s = StageScheduler::new(Box::new(FifoPolicy), 2);
+        assert!(s.has_room());
+        s.enqueue(submit(1, 1), 0.0);
+        s.enqueue(submit(2, 1), 0.0);
+        assert!(!s.has_room());
+        s.ready(&view(0, 4), 0.1);
+        assert!(s.has_room());
+    }
+
+    #[test]
+    fn streaming_chunks_are_policy_gated_in_order() {
+        let mut s = StageScheduler::new(Box::new(FifoPolicy), 0);
+        let chunk = |req, idx, fin| {
+            EngineCmd::SubmitVocoder(crate::engine::vocoder::VocoderJob {
+                req_id: req,
+                chunk_idx: idx,
+                tokens: vec![1, 2, 3],
+                final_chunk: fin,
+            })
+        };
+        // Chunks of request 1 interleave with request 2's head chunk;
+        // every chunk queues and admits in arrival order — request 1's
+        // follow-up chunks get no bypass that would starve request 2.
+        assert!(s.enqueue(chunk(1, 0, false), 0.0).is_empty());
+        assert!(s.enqueue(chunk(1, 1, false), 0.0).is_empty());
+        assert!(s.enqueue(chunk(2, 0, true), 0.0).is_empty());
+        assert!(s.ready(&view(1, 4), 0.1).is_empty(), "FIFO waits for drain");
+        let cmds = s.ready(&view(0, 4), 0.2);
+        assert_eq!(cmds.len(), 3, "all three admitted together, in order");
+        let ids: Vec<(u64, usize)> = cmds
+            .iter()
+            .map(|c| match c {
+                EngineCmd::SubmitVocoder(j) => (j.req_id, j.chunk_idx),
+                other => panic!("{other:?}"),
+            })
+            .collect();
+        assert_eq!(ids, vec![(1, 0), (1, 1), (2, 0)]);
+        assert_eq!(s.stats.admitted, 3, "each chunk consumes an admission");
+    }
+
+    #[test]
+    fn wait_times_recorded() {
+        let mut s = StageScheduler::new(
+            Box::new(ContinuousBatchingPolicy { max_batch_tokens: 0 }),
+            0,
+        );
+        s.enqueue(submit(1, 4), 1.0);
+        s.ready(&view(0, 2), 3.5);
+        assert_eq!(s.stats.queue_wait.len(), 1);
+        assert!((s.stats.queue_wait.mean() - 2.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,229 @@
+//! Per-stage batching policies (paper §3.3 "per-stage request batching").
+//!
+//! A [`BatchPolicy`] decides, between engine iterations, how many pending
+//! jobs to move from the stage's admission queue into its engine.  The
+//! decision point *is* the token boundary: engines are synchronous state
+//! machines advanced by `step()`, so everything admitted here joins the
+//! running batch at the next iteration, and finished sequences left the
+//! batch during the previous one.
+//!
+//! Three concrete policies cover the stage kinds the paper evaluates:
+//!
+//! * [`ContinuousBatchingPolicy`] — AR stages.  Sequences join whenever a
+//!   slot is free and the *max-batch-tokens* budget (the sum of token
+//!   commitments of everything in flight) permits; they evict at token
+//!   boundaries as they finish.  This is Orca-style continuous batching
+//!   with vLLM's token-budget admission control on top.
+//! * [`StepBatchingPolicy`] — diffusion stages.  Requests are grouped into
+//!   step-aligned cohorts: a new job may only join while the running
+//!   lanes are within `step_window` denoise steps of the start, so every
+//!   trunk call serves lanes at (near-)matching timesteps — which keeps
+//!   the batched `step.bN` executables full and the step-cache signal
+//!   coherent.
+//! * [`FifoPolicy`] — encoder / vocoder stages (and the static-batching
+//!   baseline for AR stages).  Strict arrival order, drain-then-refill:
+//!   a new batch is admitted only when the engine is empty.  For
+//!   single-call stages this degenerates to pass-through; for AR stages
+//!   it reproduces the classic convoy effect that continuous batching
+//!   eliminates (measured in `benches/sched_batching.rs`).
+
+
+/// What a pending job will cost the engine, as far as admission control is
+/// concerned.  Built by the scheduler from the submission command.
+#[derive(Debug, Clone)]
+pub struct PendingJob {
+    pub req_id: u64,
+    /// Token commitment: prompt + generation budget for AR jobs, denoise
+    /// steps for diffusion jobs, chunk frames for vocoder/encoder jobs.
+    pub cost_tokens: usize,
+}
+
+/// Engine occupancy snapshot taken between iterations; the only state a
+/// policy may base decisions on.
+#[derive(Debug, Clone, Default)]
+pub struct EngineView {
+    /// Sequences / lanes / jobs currently in the engine (running or in
+    /// its internal admission queue).
+    pub running: usize,
+    /// Batch capacity (`StageConfig::max_batch`).
+    pub max_batch: usize,
+    /// Sum of token commitments of everything in flight (AR stages).
+    pub committed_tokens: usize,
+    /// Per-lane current denoise step (diffusion stages; empty otherwise).
+    pub lane_steps: Vec<usize>,
+}
+
+impl EngineView {
+    pub fn free_slots(&self) -> usize {
+        self.max_batch.saturating_sub(self.running)
+    }
+}
+
+/// A per-stage batching policy.  `admit` returns how many jobs from the
+/// *front* of the pending queue to submit now — policies shape batches by
+/// timing, never by reordering, so per-stage FIFO fairness is preserved.
+pub trait BatchPolicy: Send {
+    fn name(&self) -> &'static str;
+
+    /// How many of `pending` (front first) to admit given `view`.
+    fn admit(&mut self, pending: &[PendingJob], view: &EngineView) -> usize;
+}
+
+/// Continuous batching: join whenever a slot is free and the token budget
+/// allows (paper §3.3; vLLM/Orca lineage).
+#[derive(Debug, Clone)]
+pub struct ContinuousBatchingPolicy {
+    /// In-flight token budget; 0 = unlimited (slot-bound only).
+    pub max_batch_tokens: usize,
+}
+
+impl BatchPolicy for ContinuousBatchingPolicy {
+    fn name(&self) -> &'static str {
+        "continuous"
+    }
+
+    fn admit(&mut self, pending: &[PendingJob], view: &EngineView) -> usize {
+        let mut committed = view.committed_tokens;
+        let mut n = 0;
+        for job in pending.iter().take(view.free_slots()) {
+            if self.max_batch_tokens > 0
+                && committed + job.cost_tokens > self.max_batch_tokens
+                && committed > 0
+            {
+                // Budget full — wait for evictions.  (A single oversized
+                // job is admitted into an empty engine rather than
+                // deadlocking the queue.)
+                break;
+            }
+            committed += job.cost_tokens;
+            n += 1;
+        }
+        n
+    }
+}
+
+/// Step-level batching for diffusion stages: group requests into cohorts
+/// whose denoise steps match (within `step_window`).
+#[derive(Debug, Clone)]
+pub struct StepBatchingPolicy {
+    /// A job may join while every running lane is at most this many steps
+    /// into its schedule; otherwise it waits for the cohort to drain.
+    pub step_window: usize,
+}
+
+impl BatchPolicy for StepBatchingPolicy {
+    fn name(&self) -> &'static str {
+        "step-level"
+    }
+
+    fn admit(&mut self, pending: &[PendingJob], view: &EngineView) -> usize {
+        // Cohort alignment requires EVERY running lane to still be near
+        // the start — gate on the deepest lane, not the youngest, or one
+        // fresh lane would hold the window open forever.
+        let aligned = match view.lane_steps.iter().max() {
+            None => true, // empty engine: start a fresh cohort
+            Some(&deepest) => deepest <= self.step_window,
+        };
+        if !aligned {
+            return 0;
+        }
+        pending.len().min(view.free_slots())
+    }
+}
+
+/// Strict FIFO with drain-then-refill batches (static batching).
+#[derive(Debug, Clone, Default)]
+pub struct FifoPolicy;
+
+impl BatchPolicy for FifoPolicy {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn admit(&mut self, pending: &[PendingJob], view: &EngineView) -> usize {
+        if view.running > 0 {
+            return 0;
+        }
+        pending.len().min(view.max_batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn jobs(costs: &[usize]) -> Vec<PendingJob> {
+        costs
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| PendingJob { req_id: i as u64, cost_tokens: c })
+            .collect()
+    }
+
+    #[test]
+    fn continuous_joins_into_free_slots() {
+        let mut p = ContinuousBatchingPolicy { max_batch_tokens: 0 };
+        let view = EngineView { running: 1, max_batch: 4, ..Default::default() };
+        assert_eq!(p.admit(&jobs(&[10, 10, 10, 10]), &view), 3);
+    }
+
+    #[test]
+    fn continuous_respects_token_budget() {
+        let mut p = ContinuousBatchingPolicy { max_batch_tokens: 100 };
+        let view = EngineView {
+            running: 1,
+            max_batch: 8,
+            committed_tokens: 60,
+            ..Default::default()
+        };
+        // 60 committed: a 30-token job fits, the following 30-token job
+        // would cross 100.
+        assert_eq!(p.admit(&jobs(&[30, 30]), &view), 1);
+    }
+
+    #[test]
+    fn continuous_never_starves_oversized_job() {
+        let mut p = ContinuousBatchingPolicy { max_batch_tokens: 100 };
+        let view = EngineView { running: 0, max_batch: 8, ..Default::default() };
+        assert_eq!(p.admit(&jobs(&[500]), &view), 1);
+    }
+
+    #[test]
+    fn step_policy_gates_on_cohort_alignment() {
+        let mut p = StepBatchingPolicy { step_window: 2 };
+        let empty = EngineView { running: 0, max_batch: 4, ..Default::default() };
+        assert_eq!(p.admit(&jobs(&[8, 8]), &empty), 2);
+        let young = EngineView {
+            running: 2,
+            max_batch: 4,
+            lane_steps: vec![1, 2],
+            ..Default::default()
+        };
+        assert_eq!(p.admit(&jobs(&[8]), &young), 1);
+        let old = EngineView {
+            running: 2,
+            max_batch: 4,
+            lane_steps: vec![5, 7],
+            ..Default::default()
+        };
+        assert_eq!(p.admit(&jobs(&[8]), &old), 0, "mid-flight cohort must not be joined");
+        // One young lane must NOT hold the window open while another lane
+        // is deep into denoising (gate is on the deepest lane).
+        let mixed = EngineView {
+            running: 2,
+            max_batch: 4,
+            lane_steps: vec![1, 9],
+            ..Default::default()
+        };
+        assert_eq!(p.admit(&jobs(&[8]), &mixed), 0);
+    }
+
+    #[test]
+    fn fifo_drains_before_refilling() {
+        let mut p = FifoPolicy;
+        let busy = EngineView { running: 1, max_batch: 4, ..Default::default() };
+        assert_eq!(p.admit(&jobs(&[1, 1]), &busy), 0);
+        let idle = EngineView { running: 0, max_batch: 4, ..Default::default() };
+        assert_eq!(p.admit(&jobs(&[1; 6]), &idle), 4);
+    }
+}

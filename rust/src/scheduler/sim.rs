@@ -1,0 +1,281 @@
+//! Deterministic discrete-time model of an AR stage, for evaluating
+//! [`BatchPolicy`] implementations without compiled artifacts.
+//!
+//! The real AR engine is a synchronous state machine: each iteration runs
+//! one bucketed executable over the active batch (a prefill chunk per
+//! prefilling sequence, one token per decoding sequence) and sequences
+//! join/evict at those boundaries.  This module reproduces exactly that
+//! timing skeleton with a two-parameter cost model — a fixed per-iteration
+//! dispatch cost plus a marginal per-token cost — so policy-level effects
+//! (convoy delays under static batching, slot refill under continuous
+//! batching, token-budget admission) appear with the right shape while
+//! runs stay reproducible to the bit.
+//!
+//! `benches/sched_batching.rs` drives this model over the bundled trace
+//! generators ([`crate::trace::datasets`]); the integration tests pin the
+//! headline property (continuous batching beats FIFO mean JCT on the AR
+//! traces) so it cannot silently regress.
+
+use super::policy::{BatchPolicy, EngineView, PendingJob};
+use crate::trace::Workload;
+use crate::util::stats::Samples;
+
+/// One request as the simulated stage sees it.
+#[derive(Debug, Clone)]
+pub struct SimRequest {
+    pub id: u64,
+    pub arrival_s: f64,
+    /// Prompt tokens to prefill (text + multimodal frames).
+    pub prefill_tokens: usize,
+    /// Tokens to generate after prefill.
+    pub decode_tokens: usize,
+}
+
+/// Map a trace workload onto simulated AR requests (prompt = text +
+/// encoder frames, generation = the text-stage budget).
+pub fn from_workload(wl: &Workload) -> Vec<SimRequest> {
+    wl.requests
+        .iter()
+        .map(|r| SimRequest {
+            id: r.id,
+            arrival_s: r.arrival_s,
+            prefill_tokens: r.total_input_tokens().max(1),
+            decode_tokens: r.max_text_tokens.max(1),
+        })
+        .collect()
+}
+
+/// Iteration cost model.  Defaults approximate the CPU-PJRT testbed's
+/// decode-step decomposition (dispatch-dominated, weak per-token slope —
+/// see `benches/perf_micro.rs`).
+#[derive(Debug, Clone)]
+pub struct SimCost {
+    /// Fixed cost per engine iteration (dispatch, KV marshaling).
+    pub base_s: f64,
+    /// Marginal cost per token processed in an iteration.
+    pub token_s: f64,
+    /// Prompt tokens consumed per prefilling sequence per iteration
+    /// (chunked prefill).
+    pub prefill_chunk: usize,
+}
+
+impl Default for SimCost {
+    fn default() -> Self {
+        Self {
+            base_s: 4e-3,
+            token_s: 0.25e-3,
+            prefill_chunk: crate::engine::ar::PREFILL_CHUNK,
+        }
+    }
+}
+
+/// Aggregate results of one simulated run.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub policy: String,
+    /// Per-request job completion times (arrival → last token).
+    pub jct: Samples,
+    pub iterations: u64,
+    pub makespan_s: f64,
+    /// Mean batch occupancy over iterations (batching effectiveness).
+    pub mean_batch: f64,
+}
+
+impl SimReport {
+    pub fn mean_jct(&self) -> f64 {
+        self.jct.mean()
+    }
+}
+
+struct Active {
+    arrival_s: f64,
+    prefill_left: usize,
+    decode_left: usize,
+    /// Constant token commitment (prompt + generation budget), matching
+    /// `ArEngine::committed_tokens` — the real engine's admission signal
+    /// does not decay as tokens are produced, only on eviction.
+    commitment: usize,
+}
+
+/// Serve `reqs` through a simulated AR stage under `policy`.
+pub fn simulate(
+    policy: &mut dyn BatchPolicy,
+    max_batch: usize,
+    cost: &SimCost,
+    reqs: &[SimRequest],
+) -> SimReport {
+    let mut arrivals: Vec<&SimRequest> = reqs.iter().collect();
+    arrivals.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
+    let mut next_arrival = 0usize;
+    let mut queue: Vec<&SimRequest> = Vec::new();
+    let mut active: Vec<Active> = Vec::new();
+
+    let mut t = 0.0f64;
+    let mut jct = Samples::new();
+    let mut iterations = 0u64;
+    let mut occupancy = 0u64;
+
+    loop {
+        // Arrivals up to the current time.
+        while next_arrival < arrivals.len() && arrivals[next_arrival].arrival_s <= t {
+            queue.push(arrivals[next_arrival]);
+            next_arrival += 1;
+        }
+        if active.is_empty() && queue.is_empty() {
+            match arrivals.get(next_arrival) {
+                // Idle until the next request arrives.
+                Some(r) => {
+                    t = r.arrival_s;
+                    continue;
+                }
+                None => break,
+            }
+        }
+
+        // Admission at the token boundary.
+        if !queue.is_empty() {
+            let view = EngineView {
+                running: active.len(),
+                max_batch,
+                committed_tokens: active.iter().map(|a| a.commitment).sum(),
+                lane_steps: vec![],
+            };
+            let jobs: Vec<PendingJob> = queue
+                .iter()
+                .map(|r| PendingJob {
+                    req_id: r.id,
+                    cost_tokens: r.prefill_tokens + r.decode_tokens,
+                })
+                .collect();
+            let mut n = policy.admit(&jobs, &view).min(queue.len());
+            if active.is_empty() && n == 0 {
+                // Safety valve: a policy must not stall an empty engine.
+                debug_assert!(false, "policy {} stalled an empty engine", policy.name());
+                n = 1;
+            }
+            for r in queue.drain(..n) {
+                active.push(Active {
+                    arrival_s: r.arrival_s,
+                    prefill_left: r.prefill_tokens,
+                    decode_left: r.decode_tokens,
+                    commitment: r.prefill_tokens + r.decode_tokens,
+                });
+            }
+        }
+        if active.is_empty() {
+            // Queue non-empty but policy is waiting (cannot happen with an
+            // empty engine thanks to the valve above).
+            continue;
+        }
+
+        // One engine iteration.
+        let mut tokens = 0usize;
+        for a in &active {
+            tokens += if a.prefill_left > 0 { a.prefill_left.min(cost.prefill_chunk) } else { 1 };
+        }
+        t += cost.base_s + cost.token_s * tokens as f64;
+        iterations += 1;
+        occupancy += active.len() as u64;
+
+        // Advance sequences; the iteration that finishes a prompt also
+        // samples the first token (matching the real prefill path).
+        for a in &mut active {
+            if a.prefill_left > 0 {
+                let consumed = a.prefill_left.min(cost.prefill_chunk);
+                a.prefill_left -= consumed;
+                if a.prefill_left == 0 {
+                    a.decode_left = a.decode_left.saturating_sub(1);
+                }
+            } else {
+                a.decode_left = a.decode_left.saturating_sub(1);
+            }
+        }
+        // Evict at the token boundary.
+        active.retain(|a| {
+            let done = a.prefill_left == 0 && a.decode_left == 0;
+            if done {
+                jct.push(t - a.arrival_s);
+            }
+            !done
+        });
+    }
+
+    SimReport {
+        policy: policy.name().to_string(),
+        jct,
+        iterations,
+        makespan_s: t,
+        mean_batch: if iterations > 0 { occupancy as f64 / iterations as f64 } else { 0.0 },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::policy::{ContinuousBatchingPolicy, FifoPolicy};
+    use crate::trace::datasets;
+
+    fn run(policy: &mut dyn BatchPolicy, wl: &Workload) -> SimReport {
+        simulate(policy, 4, &SimCost::default(), &from_workload(wl))
+    }
+
+    #[test]
+    fn all_requests_complete_under_every_policy() {
+        let wl = datasets::librispeech(7, 24, 0.0);
+        for policy in [
+            &mut FifoPolicy as &mut dyn BatchPolicy,
+            &mut ContinuousBatchingPolicy { max_batch_tokens: 0 },
+            &mut ContinuousBatchingPolicy { max_batch_tokens: 96 },
+        ] {
+            let rep = run(policy, &wl);
+            assert_eq!(rep.jct.len(), wl.len(), "policy {}", rep.policy);
+            assert!(rep.makespan_s > 0.0);
+        }
+    }
+
+    #[test]
+    fn continuous_beats_fifo_mean_jct_offline() {
+        let wl = datasets::librispeech(1, 32, 0.0);
+        let fifo = run(&mut FifoPolicy, &wl);
+        let cont = run(&mut ContinuousBatchingPolicy { max_batch_tokens: 0 }, &wl);
+        assert!(
+            cont.mean_jct() < fifo.mean_jct(),
+            "continuous {:.3}s !< fifo {:.3}s",
+            cont.mean_jct(),
+            fifo.mean_jct()
+        );
+    }
+
+    #[test]
+    fn continuous_beats_fifo_mean_jct_online() {
+        let wl = datasets::seedtts(3, 32, 4.0);
+        let fifo = run(&mut FifoPolicy, &wl);
+        let cont = run(&mut ContinuousBatchingPolicy { max_batch_tokens: 0 }, &wl);
+        assert!(
+            cont.mean_jct() < fifo.mean_jct(),
+            "continuous {:.3}s !< fifo {:.3}s",
+            cont.mean_jct(),
+            fifo.mean_jct()
+        );
+        // Continuous batching also keeps the batch fuller.
+        assert!(cont.mean_batch > fifo.mean_batch);
+    }
+
+    #[test]
+    fn token_budget_caps_occupancy() {
+        let wl = datasets::librispeech(5, 16, 0.0);
+        let open = run(&mut ContinuousBatchingPolicy { max_batch_tokens: 0 }, &wl);
+        let tight = run(&mut ContinuousBatchingPolicy { max_batch_tokens: 64 }, &wl);
+        assert!(tight.mean_batch <= open.mean_batch);
+        assert_eq!(tight.jct.len(), wl.len(), "budget must not starve requests");
+    }
+
+    #[test]
+    fn simulation_is_deterministic() {
+        let wl = datasets::ucf101(9, 12, 2.0);
+        let a = run(&mut ContinuousBatchingPolicy { max_batch_tokens: 0 }, &wl);
+        let b = run(&mut ContinuousBatchingPolicy { max_batch_tokens: 0 }, &wl);
+        assert_eq!(a.makespan_s, b.makespan_s);
+        assert_eq!(a.iterations, b.iterations);
+    }
+}

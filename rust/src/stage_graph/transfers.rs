@@ -13,6 +13,7 @@ use anyhow::Result;
 
 use crate::engine::ar::ArJob;
 use crate::engine::diffusion::DiffusionJob;
+use crate::engine::encoder::EncodeJob;
 use crate::engine::vocoder::VocoderJob;
 use crate::engine::{SamplingParams, StageItem};
 
@@ -52,6 +53,8 @@ pub enum EngineCmd {
     Upstream { req_id: u64, rows: Vec<f32>, dim: usize, complete: bool },
     SubmitDiffusion(DiffusionJob),
     SubmitVocoder(VocoderJob),
+    /// Multimodal encode job (standalone encoder stages, EPD mode).
+    SubmitEncode(EncodeJob),
 }
 
 /// A stateful transfer instance.

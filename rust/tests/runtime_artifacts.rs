@@ -111,17 +111,15 @@ fn diffusion_engine_denoises_and_caches() {
     .unwrap();
     let n = eng.n_tokens();
     let ctd = eng.cond_tokens_dim();
-    for i in 0..2 {
-        eng.submit(DiffusionJob {
-            req_id: i,
-            chunk_idx: 0,
-            cond: vec![],
-            cond_tokens: vec![0.1; n * ctd],
-            seed: i,
-            steps: 0,
-            final_chunk: true,
-        });
-    }
+    eng.submit_many((0..2).map(|i| DiffusionJob {
+        req_id: i,
+        chunk_idx: 0,
+        cond: vec![],
+        cond_tokens: vec![0.1; n * ctd],
+        seed: i,
+        steps: 0,
+        final_chunk: true,
+    }));
     let items = eng.run_to_completion().unwrap();
     assert_eq!(items.len(), 2);
     for it in &items {

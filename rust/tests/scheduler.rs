@@ -1,0 +1,263 @@
+//! Scheduler-subsystem integration tests: batching policies at token
+//! boundaries, the per-stage admission queue, the stage allocator, stage
+//! graph validation, and the policy-level JCT claim behind
+//! `benches/sched_batching.rs`.  None of these need compiled artifacts.
+
+use omni_serve::config::{presets, EdgeConfig, PipelineConfig, SchedPolicyKind, StageKind};
+use omni_serve::scheduler::policy::{
+    BatchPolicy, ContinuousBatchingPolicy, EngineView, FifoPolicy, PendingJob, StepBatchingPolicy,
+};
+use omni_serve::scheduler::sim::{from_workload, simulate, SimCost};
+use omni_serve::scheduler::StageAllocator;
+use omni_serve::stage_graph::transfers::Registry;
+use omni_serve::stage_graph::StageGraph;
+use omni_serve::trace::datasets;
+
+fn jobs(costs: &[usize]) -> Vec<PendingJob> {
+    costs
+        .iter()
+        .enumerate()
+        .map(|(i, &c)| PendingJob { req_id: i as u64, cost_tokens: c })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Continuous batching: join/evict at token boundaries, token budget.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn continuous_batching_joins_and_evicts_at_token_boundaries() {
+    // Walk the policy through an engine's life: each `admit` call happens
+    // at a token boundary; the view reflects the evictions of the
+    // previous iteration.
+    let mut p = ContinuousBatchingPolicy { max_batch_tokens: 0 };
+
+    // Boundary 0: empty engine, 3 pending, batch of 4 -> all join.
+    let v0 = EngineView { running: 0, max_batch: 4, ..Default::default() };
+    assert_eq!(p.admit(&jobs(&[20, 20, 20]), &v0), 3);
+
+    // Boundary 1: 3 running, one slot free -> a late arrival joins the
+    // running batch immediately (no drain barrier).
+    let v1 = EngineView { running: 3, max_batch: 4, committed_tokens: 60, ..Default::default() };
+    assert_eq!(p.admit(&jobs(&[20]), &v1), 1);
+
+    // Boundary 2: batch full -> nothing joins.
+    let v2 = EngineView { running: 4, max_batch: 4, committed_tokens: 80, ..Default::default() };
+    assert_eq!(p.admit(&jobs(&[20]), &v2), 0);
+
+    // Boundary 3: one sequence finished (evicted at the boundary) -> its
+    // slot refills at once.
+    let v3 = EngineView { running: 3, max_batch: 4, committed_tokens: 60, ..Default::default() };
+    assert_eq!(p.admit(&jobs(&[20]), &v3), 1);
+}
+
+#[test]
+fn continuous_batching_enforces_max_batch_tokens() {
+    let mut p = ContinuousBatchingPolicy { max_batch_tokens: 128 };
+    let view = EngineView { running: 2, max_batch: 8, committed_tokens: 100, ..Default::default() };
+    // 100 committed of 128: a 20-token job fits, a second does not.
+    assert_eq!(p.admit(&jobs(&[20, 20]), &view), 1);
+    // Budget pressure never deadlocks an empty engine.
+    let empty = EngineView { running: 0, max_batch: 8, ..Default::default() };
+    assert_eq!(p.admit(&jobs(&[4096]), &empty), 1);
+}
+
+// ---------------------------------------------------------------------------
+// Step-level batching: denoise-step cohort grouping.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn step_batching_groups_matching_denoise_steps() {
+    let mut p = StepBatchingPolicy { step_window: 2 };
+    // Empty engine: a fresh cohort starts.
+    let empty = EngineView { running: 0, max_batch: 4, ..Default::default() };
+    assert_eq!(p.admit(&jobs(&[10, 10]), &empty), 2);
+    // Lanes at steps {0, 1}: still within the window -> new jobs join the
+    // cohort (their step-0 trunks batch with the young lanes).
+    let young = EngineView {
+        running: 2,
+        max_batch: 4,
+        lane_steps: vec![0, 1],
+        ..Default::default()
+    };
+    assert_eq!(p.admit(&jobs(&[10]), &young), 1);
+    // Lanes deep into denoising: joining would misalign the cohort, so
+    // the job waits for the drain.
+    let deep = EngineView {
+        running: 2,
+        max_batch: 4,
+        lane_steps: vec![6, 8],
+        ..Default::default()
+    };
+    assert_eq!(p.admit(&jobs(&[10]), &deep), 0);
+    // The gate is the DEEPEST lane: one freshly started lane must not
+    // hold the join window open while another is far into its schedule.
+    let mixed = EngineView {
+        running: 2,
+        max_batch: 4,
+        lane_steps: vec![0, 7],
+        ..Default::default()
+    };
+    assert_eq!(p.admit(&jobs(&[10]), &mixed), 0);
+    // Slots still bound the cohort.
+    let full = EngineView {
+        running: 4,
+        max_batch: 4,
+        lane_steps: vec![0, 0, 1, 1],
+        ..Default::default()
+    };
+    assert_eq!(p.admit(&jobs(&[10]), &full), 0);
+}
+
+// ---------------------------------------------------------------------------
+// FIFO: strict order, drain-then-refill.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fifo_is_strictly_drain_then_refill() {
+    let mut p = FifoPolicy;
+    let busy = EngineView { running: 1, max_batch: 8, ..Default::default() };
+    assert_eq!(p.admit(&jobs(&[1, 1, 1]), &busy), 0);
+    let idle = EngineView { running: 0, max_batch: 8, ..Default::default() };
+    assert_eq!(p.admit(&jobs(&[1; 12]), &idle), 8, "refill caps at max_batch");
+}
+
+// ---------------------------------------------------------------------------
+// The headline claim: continuous batching beats FIFO mean JCT on the
+// bundled AR traces (acceptance criterion of the scheduler bench).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn continuous_batching_beats_fifo_on_bundled_ar_traces() {
+    for wl in [
+        datasets::librispeech(1, 48, 0.0),
+        datasets::seedtts(1, 48, 0.0),
+        datasets::librispeech(2, 48, 4.0),
+    ] {
+        let reqs = from_workload(&wl);
+        let fifo = simulate(&mut FifoPolicy, 4, &SimCost::default(), &reqs);
+        let cont = simulate(
+            &mut ContinuousBatchingPolicy { max_batch_tokens: 0 },
+            4,
+            &SimCost::default(),
+            &reqs,
+        );
+        assert_eq!(fifo.jct.len(), wl.len());
+        assert_eq!(cont.jct.len(), wl.len());
+        assert!(
+            cont.mean_jct() < fifo.mean_jct(),
+            "{}: continuous {:.3}s !< fifo {:.3}s",
+            wl.name,
+            cont.mean_jct(),
+            fifo.mean_jct()
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// StageAllocator validation.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn allocator_plans_presets_and_resolves_policies() {
+    let p = presets::qwen25_omni();
+    let plan = StageAllocator::new(&p).plan(None).unwrap();
+    assert_eq!(plan.by_name("thinker").unwrap().policy, SchedPolicyKind::Continuous);
+    assert_eq!(plan.by_name("vocoder").unwrap().policy, SchedPolicyKind::StepLevel);
+    let epd = presets::qwen3_omni_epd();
+    let plan = StageAllocator::new(&epd).plan(None).unwrap();
+    assert_eq!(plan.by_name("encoder").unwrap().policy, SchedPolicyKind::Fifo);
+}
+
+#[test]
+fn allocator_rejects_invalid_configs() {
+    // Duplicate device in a TP group.
+    let mut p = presets::qwen3_omni();
+    p.stages[0].devices = vec![1, 1];
+    assert!(StageAllocator::new(&p).plan(None).is_err());
+
+    // Continuous batching on a non-AR stage.
+    let mut p = presets::qwen25_omni();
+    p.stages[2].sched.policy = SchedPolicyKind::Continuous;
+    assert!(StageAllocator::new(&p).plan(None).is_err());
+
+    // Token budget on a non-AR stage.
+    let mut p = presets::qwen25_omni();
+    p.stages[2].sched.max_batch_tokens = 64;
+    assert!(StageAllocator::new(&p).plan(None).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// StageGraph::build validation (unknown transfer, cycle, multiple entries).
+// ---------------------------------------------------------------------------
+
+fn edge(from: &str, to: &str, transfer: &str) -> EdgeConfig {
+    EdgeConfig {
+        from: from.into(),
+        to: to.into(),
+        transfer: transfer.into(),
+        connector: omni_serve::config::ConnectorKind::Inline,
+    }
+}
+
+#[test]
+fn stage_graph_rejects_unknown_transfer() {
+    let mut p = presets::qwen3_omni();
+    p.edges[0].transfer = "does_not_exist".into();
+    let err = StageGraph::build(p, &Registry::builtin()).unwrap_err();
+    assert!(format!("{err:#}").contains("unknown transfer"), "{err:#}");
+}
+
+#[test]
+fn stage_graph_rejects_cycle() {
+    let mut p = presets::qwen3_omni();
+    p.edges.push(edge("vocoder", "thinker", "thinker2talker"));
+    let err = StageGraph::build(p, &Registry::builtin()).unwrap_err();
+    assert!(format!("{err:#}").contains("cycle"), "{err:#}");
+}
+
+#[test]
+fn stage_graph_rejects_multiple_entries() {
+    let mut p = presets::qwen3_omni();
+    p.edges.remove(0); // thinker->talker gone: thinker AND talker become entries
+    let err = StageGraph::build(p, &Registry::builtin()).unwrap_err();
+    assert!(format!("{err:#}").contains("exactly one entry"), "{err:#}");
+}
+
+#[test]
+fn stage_graph_accepts_custom_transfer_after_registration() {
+    use omni_serve::stage_graph::transfers::{Transfer, TransferCtx};
+    let mut reg = Registry::builtin();
+    reg.register(
+        "custom",
+        std::sync::Arc::new(|_ctx: TransferCtx| -> Transfer { Box::new(|_item| Ok(vec![])) }),
+    );
+    let mut p: PipelineConfig = presets::qwen3_omni();
+    p.edges[0].transfer = "custom".into();
+    assert!(StageGraph::build(p, &reg).is_ok());
+}
+
+#[test]
+fn sched_fields_survive_json_roundtrip() {
+    let mut p = presets::qwen25_omni();
+    p.stages[0].sched.policy = SchedPolicyKind::Continuous;
+    p.stages[0].sched.max_batch_tokens = 256;
+    p.stages[0].sched.queue_depth = 16;
+    let s = omni_serve::config::loader::to_json_string(&p);
+    let v = omni_serve::json::parse(&s).unwrap();
+    let q = omni_serve::config::loader::from_value(&v).unwrap();
+    assert_eq!(q.stages[0].sched.policy, SchedPolicyKind::Continuous);
+    assert_eq!(q.stages[0].sched.max_batch_tokens, 256);
+    assert_eq!(q.stages[0].sched.queue_depth, 16);
+}
+
+#[test]
+fn policies_validate_against_stage_kinds_in_graph_build() {
+    // StageGraph::build -> PipelineConfig::validate does structural checks;
+    // the allocator runs at orchestrator construction.  Both paths reject a
+    // StepLevel policy on an AR stage.
+    let mut p = presets::mimo_audio(1);
+    p.stages[0].sched.policy = SchedPolicyKind::StepLevel;
+    assert_eq!(p.stages[0].kind, StageKind::Ar);
+    assert!(StageAllocator::new(&p).plan(None).is_err());
+}

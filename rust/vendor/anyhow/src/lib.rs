@@ -1,0 +1,205 @@
+//! Offline shim for the [`anyhow`](https://docs.rs/anyhow) API surface this
+//! workspace uses: [`Error`], [`Result`], the [`Context`] extension trait,
+//! and the `anyhow!` / `bail!` / `ensure!` macros.
+//!
+//! The build environment has no crates.io access, so this crate reimplements
+//! the small subset we need on top of `std` only.  Semantics intentionally
+//! mirror the real crate:
+//!
+//! * `Display` prints the outermost message; `{:#}` (alternate) prints the
+//!   whole cause chain joined with `": "`; `Debug` prints an `anyhow`-style
+//!   multi-line report (so `fn main() -> anyhow::Result<()>` output is
+//!   readable).
+//! * Any `std::error::Error + Send + Sync + 'static` converts into [`Error`]
+//!   via `?`, capturing its `source()` chain.
+//! * [`Error`] deliberately does **not** implement `std::error::Error`, so
+//!   the blanket conversion cannot conflict with the reflexive `From`.
+
+use std::fmt;
+
+/// A dynamic error: an ordered cause chain, outermost message first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message (used by [`Context`]).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The cause chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The outermost message.
+    pub fn root_message(&self) -> &str {
+        self.chain.first().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.root_message())
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.root_message())?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, cause) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src: Option<&(dyn std::error::Error + 'static)> = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Self { chain }
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(...)` / `.with_context(...)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($msg:expr $(,)?) => {
+        $crate::Error::msg($msg)
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn display_and_alternate() {
+        let e: Error = Result::<(), _>::Err(io_err())
+            .context("loading manifest")
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "loading manifest");
+        assert_eq!(format!("{e:#}"), "loading manifest: missing file");
+    }
+
+    #[test]
+    fn debug_is_multiline_report() {
+        let e = Error::msg("inner").context("outer");
+        let d = format!("{e:?}");
+        assert!(d.contains("outer"));
+        assert!(d.contains("Caused by:"));
+        assert!(d.contains("0: inner"));
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: usize) -> Result<()> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 5 {
+                bail!("five is right out");
+            }
+            Ok(())
+        }
+        assert!(f(1).is_ok());
+        assert_eq!(format!("{}", f(5).unwrap_err()), "five is right out");
+        assert_eq!(format!("{}", f(11).unwrap_err()), "x too big: 11");
+        let v = 3;
+        assert_eq!(format!("{}", anyhow!("v = {v}")), "v = 3");
+        assert_eq!(format!("{}", anyhow!("v = {}", v)), "v = 3");
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u32> = None;
+        let e = none.context("empty").unwrap_err();
+        assert_eq!(format!("{e}"), "empty");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<String> {
+            let s = String::from_utf8(vec![0xFF])?;
+            Ok(s)
+        }
+        assert!(f().is_err());
+    }
+}
