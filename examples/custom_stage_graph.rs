@@ -4,6 +4,9 @@
 //! * compose a new two-stage graph (MiMo backbone -> CNN vocoder — a
 //!   combination no preset ships),
 //! * register a CUSTOM transfer function for the edge,
+//! * replicate the hot vocoder stage 2x with affinity routing (paper
+//!   §3.3 "flexible GPU allocation" — the edge fans out across the
+//!   replicas through `connector::router`),
 //! * serve requests through it.
 //!
 //! ```sh
@@ -12,7 +15,9 @@
 
 use std::sync::Arc;
 
-use omni_serve::config::{ConnectorKind, EdgeConfig, PipelineConfig, StageConfig, StageKind};
+use omni_serve::config::{
+    ConnectorKind, EdgeConfig, PipelineConfig, RoutingKind, StageConfig, StageKind,
+};
 use omni_serve::engine::vocoder::VocoderJob;
 use omni_serve::orchestrator::{Orchestrator, RunOptions};
 use omni_serve::runtime::Artifacts;
@@ -25,6 +30,10 @@ fn main() -> anyhow::Result<()> {
 
     // 1. Define the stage graph: MiMo AR backbone -> Qwen3 CNN vocoder,
     //    connected over the SHARED-MEMORY connector with a custom edge fn.
+    //    The vocoder runs TWO engine replicas: the edge's affinity
+    //    routing keeps every chunk of a request on one replica (our
+    //    transfer accumulates per-request state consumer-side), while
+    //    different requests synthesize on different replicas in parallel.
     let config = PipelineConfig {
         name: "custom-tts".into(),
         stages: vec![
@@ -33,6 +42,7 @@ fn main() -> anyhow::Result<()> {
                 .with_batch(4),
             StageConfig::new("wave", "voc_cnn3", StageKind::CnnVocoder)
                 .on_devices(&[1])
+                .with_replicas(2)
                 .with_batch(4),
         ],
         edges: vec![EdgeConfig {
@@ -40,6 +50,7 @@ fn main() -> anyhow::Result<()> {
             to: "wave".into(),
             transfer: "every_other_token".into(),
             connector: ConnectorKind::Shm,
+            routing: RoutingKind::Affinity,
         }],
         n_devices: 2,
         device_bytes: omni_serve::device::DEFAULT_DEVICE_BYTES,
@@ -113,5 +124,12 @@ fn main() -> anyhow::Result<()> {
         summary.report.stage_tokens("backbone"),
         summary.report.stage_tokens("wave"),
     );
+    // Per-replica view of the replicated vocoder: affinity routing split
+    // the requests across the two engines.
+    for s in summary.stage_replicas("wave") {
+        if let Some(v) = &s.vocoder {
+            println!("  wave replica {}: {} chunks over {} calls", s.replica, v.chunks_done, v.calls);
+        }
+    }
     Ok(())
 }

@@ -11,12 +11,19 @@
 //! token boundaries) under a calibrated dispatch+per-token cost model.
 //!
 //! Output: mean/p50/p99 JCT, makespan, and batch occupancy per policy and
-//! trace, plus the JCT reduction of continuous batching over FIFO, and a
-//! token-budget sweep showing the admission-control knob.
+//! trace, plus the JCT reduction of continuous batching over FIFO, a
+//! token-budget sweep showing the admission-control knob, and the stage-
+//! replication comparison (paper §3.3 flexible GPU allocation): the
+//! qwen3-omni-rep2 preset's 2-replica Talker vs the single-replica
+//! baseline under every routing policy, asserted to win on mean JCT.
 
 use omni_serve::bench_util::{self, Table};
+use omni_serve::config::presets;
 use omni_serve::scheduler::policy::{BatchPolicy, ContinuousBatchingPolicy, FifoPolicy};
-use omni_serve::scheduler::sim::{from_workload, simulate, SimCost, SimReport};
+use omni_serve::scheduler::sim::{
+    from_workload, simulate, simulate_replicated, SimCost, SimReport, SimRouting,
+};
+use omni_serve::scheduler::StageAllocator;
 use omni_serve::trace::Workload;
 use omni_serve::trace::datasets;
 use omni_serve::util::fmt;
@@ -90,6 +97,67 @@ fn main() {
         ]);
     }
     t.print();
+
+    // Stage replication (paper §3.3 flexible GPU allocation): the
+    // qwen3-omni-rep2 preset gives the hot Talker stage two engine
+    // replicas; the replicated AR-stage model shows the JCT win per
+    // routing policy on the same traces, no compiled artifacts needed.
+    let rep_preset = presets::qwen3_omni_replicated();
+    let plan = StageAllocator::new(&rep_preset).plan(None).unwrap();
+    let talker = plan.by_name("talker").unwrap();
+    assert_eq!(talker.replicas, 2, "preset gives the talker two replicas");
+    let talker_batch = talker.max_batch;
+    let mk_policies = |n: usize| -> Vec<Box<dyn BatchPolicy>> {
+        (0..n)
+            .map(|_| {
+                Box::new(ContinuousBatchingPolicy {
+                    max_batch_tokens: talker.max_batch_tokens,
+                }) as Box<dyn BatchPolicy>
+            })
+            .collect()
+    };
+    let mut t = Table::new(
+        "Talker replication (qwen3-omni vs qwen3-omni-rep2), AR-stage model",
+        &["trace", "replicas", "routing", "mean JCT", "p99", "makespan", "JCT reduction"],
+    );
+    let mut rep2_beats_rep1 = true;
+    for wl in [datasets::seedtts(1, n, 0.0), datasets::librispeech(2, n, 4.0)] {
+        let reqs = from_workload(&wl);
+        let mut one_p = mk_policies(1);
+        let one =
+            simulate_replicated(&mut one_p, talker_batch, &SimCost::default(), &reqs, SimRouting::Affinity);
+        let mut jct1 = one.jct.clone();
+        t.row(vec![
+            wl.name.clone(),
+            "1".into(),
+            "-".into(),
+            fmt::dur(one.mean_jct()),
+            fmt::dur(jct1.p99()),
+            fmt::dur(one.makespan_s),
+            "-".into(),
+        ]);
+        for routing in [SimRouting::Affinity, SimRouting::RoundRobin, SimRouting::LeastWork] {
+            let mut two_p = mk_policies(2);
+            let two =
+                simulate_replicated(&mut two_p, talker_batch, &SimCost::default(), &reqs, routing);
+            rep2_beats_rep1 &= two.mean_jct() < one.mean_jct();
+            let mut jct2 = two.jct.clone();
+            t.row(vec![
+                wl.name.clone(),
+                "2".into(),
+                routing.name().into(),
+                fmt::dur(two.mean_jct()),
+                fmt::dur(jct2.p99()),
+                fmt::dur(two.makespan_s),
+                bench_util::reduction_pct(one.mean_jct(), two.mean_jct()),
+            ]);
+        }
+    }
+    t.print();
+    assert!(
+        rep2_beats_rep1,
+        "talker replicas=2 must beat replicas=1 mean JCT on the bundled traces"
+    );
 
     // Headline check (also pinned by `tests/scheduler.rs`): continuous
     // batching must beat FIFO mean JCT on the bundled AR traces.

@@ -6,8 +6,8 @@ use std::path::Path;
 use anyhow::{Context, Result};
 
 use super::{
-    ConnectorKind, DiffusionParams, EdgeConfig, PipelineConfig, SchedParams, SchedPolicyKind,
-    StageConfig, StageKind,
+    ConnectorKind, DiffusionParams, EdgeConfig, PipelineConfig, RoutingKind, SchedParams,
+    SchedPolicyKind, StageConfig, StageKind,
 };
 use crate::jobj;
 use crate::json::{self, Value};
@@ -27,6 +27,9 @@ pub fn from_value(v: &Value) -> Result<PipelineConfig> {
         }
         if let Some(b) = sv.get("max_batch").as_usize() {
             s.max_batch = b;
+        }
+        if let Some(r) = sv.get("replicas").as_usize() {
+            s.replicas = r;
         }
         if let Some(f) = sv.get("kv_memory_frac").as_f64() {
             s.kv_memory_frac = f;
@@ -76,6 +79,7 @@ pub fn from_value(v: &Value) -> Result<PipelineConfig> {
                 connector: ConnectorKind::from_name(
                     ev.get("connector").as_str().unwrap_or("inline"),
                 )?,
+                routing: RoutingKind::from_name(ev.get("routing").as_str().unwrap_or("auto"))?,
             });
         }
     }
@@ -103,6 +107,7 @@ pub fn to_value(p: &PipelineConfig) -> Value {
                 "model" => s.model.clone(),
                 "kind" => s.kind.name(),
                 "devices" => s.devices.clone(),
+                "replicas" => s.replicas,
                 "max_batch" => s.max_batch,
                 "kv_memory_frac" => s.kv_memory_frac,
                 "chunked_prefill" => s.chunked_prefill,
@@ -131,6 +136,7 @@ pub fn to_value(p: &PipelineConfig) -> Value {
                 "to" => e.to.clone(),
                 "transfer" => e.transfer.clone(),
                 "connector" => e.connector.name(),
+                "routing" => e.routing.name(),
             }
         })
         .collect();
@@ -165,6 +171,7 @@ mod tests {
                 assert_eq!(a.model, b.model);
                 assert_eq!(a.kind, b.kind);
                 assert_eq!(a.devices, b.devices);
+                assert_eq!(a.replicas, b.replicas);
                 assert_eq!(a.max_batch, b.max_batch);
                 assert_eq!(a.multi_step, b.multi_step);
                 assert_eq!(a.diffusion.steps, b.diffusion.steps);
@@ -177,6 +184,7 @@ mod tests {
             for (a, b) in p.edges.iter().zip(&q.edges) {
                 assert_eq!(a.transfer, b.transfer);
                 assert_eq!(a.connector, b.connector);
+                assert_eq!(a.routing, b.routing);
             }
         }
     }
@@ -203,6 +211,35 @@ mod tests {
         // Unspecified fields keep their defaults.
         assert_eq!(s.queue_depth, 0);
         assert_eq!(s.step_window, crate::config::SchedParams::default().step_window);
+    }
+
+    #[test]
+    fn replicas_and_routing_parse_from_json() {
+        let v = json::parse(
+            r#"{"name": "x", "n_devices": 2, "stages": [
+                {"name": "a", "model": "thinker3", "kind": "ar", "devices": [0]},
+                {"name": "b", "model": "talker3", "kind": "ar", "devices": [1], "replicas": 2}
+            ], "edges": [
+                {"from": "a", "to": "b", "transfer": "thinker2talker", "routing": "affinity"}
+            ]}"#,
+        )
+        .unwrap();
+        let p = from_value(&v).unwrap();
+        assert_eq!(p.stages[0].replicas, 1, "replicas defaults to 1");
+        assert_eq!(p.stages[1].replicas, 2);
+        assert_eq!(p.edges[0].routing, RoutingKind::Affinity);
+        // Per-item routing into a replicated AR consumer is rejected at
+        // load time (validate() runs inside from_value).
+        let bad = json::parse(
+            r#"{"name": "x", "n_devices": 2, "stages": [
+                {"name": "a", "model": "thinker3", "kind": "ar", "devices": [0]},
+                {"name": "b", "model": "talker3", "kind": "ar", "devices": [1], "replicas": 2}
+            ], "edges": [
+                {"from": "a", "to": "b", "transfer": "thinker2talker", "routing": "round_robin"}
+            ]}"#,
+        )
+        .unwrap();
+        assert!(from_value(&bad).is_err());
     }
 
     #[test]

@@ -152,6 +152,70 @@ impl Default for DiffusionParams {
     }
 }
 
+/// How a replicated edge routes items across its consumer's engine
+/// replicas (paper §3.3 "flexible GPU allocation": hot stages get more
+/// replicas; the edge layer decides which replica serves which item).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutingKind {
+    /// Pick by consumer shape: replicated consumers get [`RoutingKind::Affinity`]
+    /// (always safe — transfers and AR engines keep per-request state),
+    /// single-replica consumers get the trivial [`RoutingKind::RoundRobin`].
+    /// The default.
+    Auto,
+    /// Per-item rotation.  Maximum spread, but splits a request's item
+    /// stream across replicas — only valid when every item is independent
+    /// (requests that arrive as one finished item).
+    RoundRobin,
+    /// Per-item pick of the replica with the smallest load signal
+    /// (connector in-flight count + the consumer's published
+    /// admission-queue depth, i.e. [`crate::scheduler::SchedStats`]
+    /// feedback).  Same independence caveat as round-robin.
+    LeastDepth,
+    /// Per-request stickiness: every item of a request lands on the same
+    /// replica (`req_id % replicas` — deterministic across producer
+    /// replicas and edges), so stateful AR replicas keep their
+    /// KV/sequence state and chunk-accumulating transfers see the whole
+    /// stream.  Required for replicated AR consumers.
+    Affinity,
+}
+
+impl RoutingKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            RoutingKind::Auto => "auto",
+            RoutingKind::RoundRobin => "round_robin",
+            RoutingKind::LeastDepth => "least_depth",
+            RoutingKind::Affinity => "affinity",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<Self> {
+        Ok(match s {
+            "auto" => RoutingKind::Auto,
+            "round_robin" | "round-robin" => RoutingKind::RoundRobin,
+            "least_depth" | "least-depth" => RoutingKind::LeastDepth,
+            "affinity" => RoutingKind::Affinity,
+            other => bail!("unknown routing kind `{other}`"),
+        })
+    }
+
+    /// Resolve [`RoutingKind::Auto`] for a consumer with `replicas`
+    /// engine replicas; explicit choices pass through.  Never returns
+    /// `Auto`.
+    pub fn resolve(self, replicas: usize) -> Self {
+        match self {
+            RoutingKind::Auto => {
+                if replicas > 1 {
+                    RoutingKind::Affinity
+                } else {
+                    RoutingKind::RoundRobin
+                }
+            }
+            explicit => explicit,
+        }
+    }
+}
+
 /// Per-stage configuration (paper Fig. 3(b)/(c)).
 #[derive(Debug, Clone)]
 pub struct StageConfig {
@@ -163,6 +227,13 @@ pub struct StageConfig {
     /// Device placement.  More than one device = tensor parallel
     /// (memory-sharded in the device model; see DESIGN.md §6).
     pub devices: Vec<usize>,
+    /// Engine replicas serving this stage (paper §3.3 "flexible GPU
+    /// allocation": hot stages get more replicas than cold ones).  Each
+    /// replica is its own engine thread with its own device group of the
+    /// same TP degree as `devices`; replica 0 uses `devices`, further
+    /// replicas are packed onto the least-loaded devices by the
+    /// allocator.  Default 1 (the pre-replication behaviour).
+    pub replicas: usize,
     /// Maximum scheduler batch (must be <= the largest compiled bucket).
     pub max_batch: usize,
     /// Fraction of the stage's device budget reserved for KV cache (AR).
@@ -189,6 +260,7 @@ impl StageConfig {
             model: model.into(),
             kind,
             devices: vec![0],
+            replicas: 1,
             max_batch: 4,
             kv_memory_frac: 0.5,
             chunked_prefill: true,
@@ -201,6 +273,11 @@ impl StageConfig {
 
     pub fn on_devices(mut self, devices: &[usize]) -> Self {
         self.devices = devices.to_vec();
+        self
+    }
+
+    pub fn with_replicas(mut self, r: usize) -> Self {
+        self.replicas = r;
         self
     }
 
@@ -279,6 +356,9 @@ pub struct EdgeConfig {
     /// [`crate::stage_graph::transfers`]).
     pub transfer: String,
     pub connector: ConnectorKind,
+    /// How items are routed across the consumer stage's replicas
+    /// (irrelevant when the consumer has a single replica).
+    pub routing: RoutingKind,
 }
 
 /// A full pipeline: stage graph + resources.
@@ -316,6 +396,9 @@ impl PipelineConfig {
             if s.max_batch == 0 {
                 bail!("stage `{}` max_batch must be >= 1", s.name);
             }
+            if s.replicas == 0 {
+                bail!("stage `{}` replicas must be >= 1", s.name);
+            }
             if s.multi_step == 0 {
                 bail!("stage `{}` multi_step must be >= 1", s.name);
             }
@@ -331,6 +414,24 @@ impl PipelineConfig {
             }
             if e.from == e.to {
                 bail!("self-edge on `{}`", e.from);
+            }
+            // Replicated AR consumers are stateful (KV / sequence state,
+            // streamed conditioning): every item of a request must land on
+            // the same replica, which only affinity routing guarantees.
+            let to = self.stage(&e.to).unwrap();
+            if to.replicas > 1
+                && to.kind == StageKind::Ar
+                && !matches!(e.routing, RoutingKind::Auto | RoutingKind::Affinity)
+            {
+                bail!(
+                    "edge {}->{}: AR consumer `{}` has {} replicas; stateful stages \
+                     require `affinity` routing (got `{}`)",
+                    e.from,
+                    e.to,
+                    e.to,
+                    to.replicas,
+                    e.routing.name()
+                );
             }
         }
         Ok(())
@@ -357,6 +458,7 @@ mod tests {
                 to: "b".into(),
                 transfer: "thinker2talker".into(),
                 connector: ConnectorKind::Inline,
+                routing: RoutingKind::Auto,
             }],
             n_devices: 2,
             device_bytes: 1 << 20,
@@ -418,6 +520,43 @@ mod tests {
         assert_eq!(s.sched.max_batch_tokens, 0);
         assert_eq!(s.sched.queue_depth, 0);
         assert!(s.sched.step_window > 0);
+    }
+
+    #[test]
+    fn routing_kind_roundtrip_and_resolution() {
+        for r in [RoutingKind::Auto, RoutingKind::RoundRobin,
+                  RoutingKind::LeastDepth, RoutingKind::Affinity] {
+            assert_eq!(RoutingKind::from_name(r.name()).unwrap(), r);
+        }
+        assert!(RoutingKind::from_name("nope").is_err());
+        // Auto resolves by consumer replication; explicit passes through.
+        assert_eq!(RoutingKind::Auto.resolve(1), RoutingKind::RoundRobin);
+        assert_eq!(RoutingKind::Auto.resolve(3), RoutingKind::Affinity);
+        assert_eq!(RoutingKind::LeastDepth.resolve(4), RoutingKind::LeastDepth);
+    }
+
+    #[test]
+    fn replicas_default_to_one_and_zero_is_rejected() {
+        let p = two_stage();
+        assert!(p.stages.iter().all(|s| s.replicas == 1));
+        p.validate().unwrap();
+        let mut p = two_stage();
+        p.stages[0].replicas = 0;
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn replicated_ar_consumer_requires_affinity_routing() {
+        // Replicated AR consumer + explicit per-item routing: rejected.
+        let mut p = two_stage();
+        p.stages[1].replicas = 2;
+        p.edges[0].routing = RoutingKind::RoundRobin;
+        assert!(p.validate().is_err());
+        // Affinity (explicit or via Auto) is accepted.
+        p.edges[0].routing = RoutingKind::Affinity;
+        p.validate().unwrap();
+        p.edges[0].routing = RoutingKind::Auto;
+        p.validate().unwrap();
     }
 
     #[test]

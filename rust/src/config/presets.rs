@@ -10,7 +10,9 @@
 //! streaming, and fused multi-step decode.  On real accelerators raise
 //! `max_batch` to the compiled bucket limit (8).
 
-use super::{ConnectorKind, DiffusionParams, EdgeConfig, PipelineConfig, StageConfig, StageKind};
+use super::{
+    ConnectorKind, DiffusionParams, EdgeConfig, PipelineConfig, RoutingKind, StageConfig, StageKind,
+};
 
 fn edge(from: &str, to: &str, transfer: &str) -> EdgeConfig {
     EdgeConfig {
@@ -18,6 +20,7 @@ fn edge(from: &str, to: &str, transfer: &str) -> EdgeConfig {
         to: to.into(),
         transfer: transfer.into(),
         connector: ConnectorKind::Inline,
+        routing: RoutingKind::Auto,
     }
 }
 
@@ -76,6 +79,22 @@ pub fn qwen3_omni() -> PipelineConfig {
         n_devices: 2,
         device_bytes: crate::device::DEFAULT_DEVICE_BYTES,
     }
+}
+
+/// Qwen3-Omni with the Talker stage replicated 2x (paper §3.3 "flexible
+/// GPU allocation": the Talker dominates end-to-end time on speech
+/// traces, so it gets two engine replicas; the Thinker→Talker edge uses
+/// affinity routing so each request's streamed conditioning and KV state
+/// stay on one replica).  The device budget is doubled so the extra
+/// replica's weights pass memory admission on the scaled testbed.
+pub fn qwen3_omni_replicated() -> PipelineConfig {
+    let mut p = qwen3_omni();
+    p.name = "qwen3-omni-sim-rep2".into();
+    let talker = p.stages.iter_mut().find(|s| s.name == "talker").unwrap();
+    talker.replicas = 2;
+    p.edges[0].routing = RoutingKind::Affinity;
+    p.device_bytes = 2 * crate::device::DEFAULT_DEVICE_BYTES;
+    p
 }
 
 /// Qwen3-Omni with EPD disaggregation (paper §3.4): the multimodal
@@ -165,6 +184,7 @@ pub fn all() -> Vec<PipelineConfig> {
     vec![
         qwen25_omni(),
         qwen3_omni(),
+        qwen3_omni_replicated(),
         qwen3_omni_epd(),
         bagel(false),
         bagel(true),
@@ -181,6 +201,7 @@ pub fn by_name(name: &str) -> Option<PipelineConfig> {
     match name {
         "qwen2.5-omni" | "qwen25-omni" => Some(qwen25_omni()),
         "qwen3-omni" => Some(qwen3_omni()),
+        "qwen3-omni-rep2" => Some(qwen3_omni_replicated()),
         "qwen3-omni-epd" => Some(qwen3_omni_epd()),
         "bagel-t2i" => Some(bagel(false)),
         "bagel-i2i" => Some(bagel(true)),
@@ -217,5 +238,14 @@ mod tests {
     fn by_name_resolves() {
         assert!(by_name("qwen3-omni").is_some());
         assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn replicated_preset_scales_the_talker() {
+        let p = qwen3_omni_replicated();
+        p.validate().unwrap();
+        assert_eq!(p.stage("talker").unwrap().replicas, 2);
+        assert_eq!(p.stage("thinker").unwrap().replicas, 1);
+        assert_eq!(p.edges[0].routing, RoutingKind::Affinity);
     }
 }

@@ -14,6 +14,7 @@
 //! switch transports per edge without touching stage code — the paper's
 //! "per-edge connector setting".
 
+pub mod router;
 pub mod shm;
 pub mod tcp;
 pub mod wire;
@@ -25,12 +26,45 @@ use anyhow::Result;
 use crate::config::ConnectorKind;
 use crate::engine::StageItem;
 
+/// Name of a written shm segment.  Unlinks on drop, so the segment can
+/// never leak no matter where its control message dies: resolved by the
+/// consumer (read, then dropped), stuck in the queue when the channel is
+/// torn down, or bounced back inside a failed send's `SendError`.
+struct ShmSegment(String);
+
+impl Drop for ShmSegment {
+    fn drop(&mut self) {
+        shm::unlink(&self.0);
+    }
+}
+
+/// Key of a value parked in the Mooncake store.  Unless the consumer
+/// resolves it (the normal get-and-remove path), dropping the guard
+/// issues a non-blocking `DEL` over a fresh connection — so a key
+/// destroyed anywhere (failed send's `SendError`, queued at channel
+/// teardown, receiver-drop drain) reclaims its stored value.
+struct TcpValue {
+    key: String,
+    store_addr: String,
+    resolved: bool,
+}
+
+impl Drop for TcpValue {
+    fn drop(&mut self) {
+        if !self.resolved {
+            if let Ok(mut c) = tcp::StoreClient::connect(&self.store_addr) {
+                let _ = c.del(&self.key);
+            }
+        }
+    }
+}
+
 /// Control-plane message: either the payload itself (inline) or a
 /// reference to where the payload was put.
 enum Ctrl {
     Inline(Box<StageItem>),
-    Shm { name: String, len: usize },
-    Tcp { key: String },
+    Shm { seg: ShmSegment, len: usize },
+    Tcp { val: TcpValue },
 }
 
 /// Sending half (owned by the producer stage thread).
@@ -38,6 +72,8 @@ pub struct ConnectorTx {
     kind: ConnectorKind,
     ctrl: mpsc::Sender<Ctrl>,
     tcp: Option<tcp::StoreClient>,
+    /// Store address for [`TcpValue`] reclaim guards (`Tcp` only).
+    store_addr: Option<String>,
     seq: u64,
     label: String,
     /// Bytes moved through the payload plane (metrics / Table 1).
@@ -50,20 +86,42 @@ pub struct ConnectorRx {
     tcp: Option<tcp::StoreClient>,
 }
 
+/// Outcome of a non-blocking receive.  `Closed` (producer hung up and the
+/// channel is drained) is distinct from `Empty` (nothing *yet*) so pollers
+/// can stop spinning on dead edges.
+#[derive(Debug)]
+pub enum TryRecv {
+    Item(StageItem),
+    Empty,
+    Closed,
+}
+
 /// Create a connected pair.  For `Tcp`, `store_addr` must point at a
 /// running [`tcp::MooncakeStore`].
 pub fn pair(kind: ConnectorKind, label: &str, store_addr: Option<&str>) -> Result<(ConnectorTx, ConnectorRx)> {
     let (tx, rx) = mpsc::channel();
-    let (tcp_tx, tcp_rx) = match kind {
+    let (tcp_tx, tcp_rx, addr) = match kind {
         ConnectorKind::Tcp => {
             let addr = store_addr
                 .ok_or_else(|| anyhow::anyhow!("tcp connector needs a store address"))?;
-            (Some(tcp::StoreClient::connect(addr)?), Some(tcp::StoreClient::connect(addr)?))
+            (
+                Some(tcp::StoreClient::connect(addr)?),
+                Some(tcp::StoreClient::connect(addr)?),
+                Some(addr.to_string()),
+            )
         }
-        _ => (None, None),
+        _ => (None, None, None),
     };
     Ok((
-        ConnectorTx { kind, ctrl: tx, tcp: tcp_tx, seq: 0, label: label.to_string(), bytes_sent: 0 },
+        ConnectorTx {
+            kind,
+            ctrl: tx,
+            tcp: tcp_tx,
+            store_addr: addr,
+            seq: 0,
+            label: label.to_string(),
+            bytes_sent: 0,
+        },
         ConnectorRx { ctrl: rx, tcp: tcp_rx },
     ))
 }
@@ -83,8 +141,10 @@ impl ConnectorTx {
                 let name = format!("/omni_{}_{}_{}", std::process::id(), self.label, self.seq);
                 self.seq += 1;
                 shm::write_segment(&name, &bytes)?;
+                // On failure the `SendError` carries the message back and
+                // drops it here, which unlinks the orphaned segment.
                 self.ctrl
-                    .send(Ctrl::Shm { name, len: bytes.len() })
+                    .send(Ctrl::Shm { seg: ShmSegment(name), len: bytes.len() })
                     .map_err(|_| anyhow::anyhow!("connector closed"))?;
             }
             ConnectorKind::Tcp => {
@@ -93,8 +153,15 @@ impl ConnectorTx {
                 let key = format!("{}:{}", self.label, self.seq);
                 self.seq += 1;
                 self.tcp.as_mut().unwrap().put(&key, &bytes)?;
+                let val = TcpValue {
+                    key,
+                    store_addr: self.store_addr.clone().expect("set for Tcp in pair()"),
+                    resolved: false,
+                };
+                // On failure the `SendError` carries the message back and
+                // drops it here; the guard DELs the parked value.
                 self.ctrl
-                    .send(Ctrl::Tcp { key })
+                    .send(Ctrl::Tcp { val })
                     .map_err(|_| anyhow::anyhow!("connector closed"))?;
             }
         }
@@ -103,12 +170,14 @@ impl ConnectorTx {
 }
 
 impl ConnectorRx {
-    /// Non-blocking receive.
-    pub fn try_recv(&mut self) -> Result<Option<StageItem>> {
+    /// Non-blocking receive.  [`TryRecv::Closed`] means the producer hung
+    /// up AND the channel is drained — callers must not keep polling a
+    /// closed edge expecting more data.
+    pub fn try_recv(&mut self) -> Result<TryRecv> {
         match self.ctrl.try_recv() {
-            Ok(ctrl) => Ok(Some(self.resolve(ctrl)?)),
-            Err(mpsc::TryRecvError::Empty) => Ok(None),
-            Err(mpsc::TryRecvError::Disconnected) => Ok(None),
+            Ok(ctrl) => Ok(TryRecv::Item(self.resolve(ctrl)?)),
+            Err(mpsc::TryRecvError::Empty) => Ok(TryRecv::Empty),
+            Err(mpsc::TryRecvError::Disconnected) => Ok(TryRecv::Closed),
         }
     }
 
@@ -123,14 +192,43 @@ impl ConnectorRx {
     fn resolve(&mut self, ctrl: Ctrl) -> Result<StageItem> {
         match ctrl {
             Ctrl::Inline(item) => Ok(*item),
-            Ctrl::Shm { name, len } => {
-                let bytes = shm::read_segment(&name, len)?;
-                shm::unlink(&name);
+            Ctrl::Shm { seg, len } => {
+                // `seg` drops (and unlinks) at the end of this arm —
+                // including on a read or decode error.
+                let bytes = shm::read_segment(&seg.0, len)?;
                 wire::decode(&bytes)
             }
-            Ctrl::Tcp { key } => {
-                let bytes = self.tcp.as_mut().unwrap().get(&key)?;
+            Ctrl::Tcp { mut val } => {
+                let bytes = self.tcp.as_mut().unwrap().get(&val.key)?;
+                // The blocking get removed the value; disarm the guard so
+                // its drop skips the redundant DEL round trip.  (On a get
+                // error the guard stays armed and DELs best-effort.)
+                val.resolved = true;
                 wire::decode(&bytes)
+            }
+        }
+    }
+}
+
+impl Drop for ConnectorRx {
+    /// Reclaim payloads the producer parked but nobody resolved
+    /// (abandoned run, early consumer exit): drain the control queue so
+    /// every pending message's guard fires *now* — [`ShmSegment`]
+    /// unlinks its segment, [`TcpValue`] DELs its stored value.  TCP
+    /// reclaims reuse this receiver's store connection (one DEL round
+    /// trip each, no per-value handshake); the guard's fresh-connection
+    /// fallback stays armed only if that client is somehow gone.  A
+    /// message that slips in after this drain is destroyed by the
+    /// channel itself, and its guard fires then — nothing leaks either
+    /// way; the drain only makes reclamation prompt.
+    fn drop(&mut self) {
+        while let Ok(ctrl) = self.ctrl.try_recv() {
+            if let Ctrl::Tcp { mut val } = ctrl {
+                if let Some(tcp) = self.tcp.as_mut() {
+                    if tcp.del(&val.key).is_ok() {
+                        val.resolved = true; // reclaimed; disarm the guard
+                    }
+                }
             }
         }
     }
@@ -154,7 +252,69 @@ mod tests {
         let got = rx.recv().unwrap().unwrap();
         assert_eq!(got.req_id, 7);
         assert_eq!(got.tensor("tokens").unwrap().as_i32().unwrap(), &[1, 2, 3]);
-        assert!(rx.try_recv().unwrap().is_none());
+        assert!(matches!(rx.try_recv().unwrap(), TryRecv::Empty));
+    }
+
+    #[test]
+    fn try_recv_distinguishes_empty_from_hangup() {
+        let (mut tx, mut rx) = pair(ConnectorKind::Inline, "tri", None).unwrap();
+        assert!(matches!(rx.try_recv().unwrap(), TryRecv::Empty), "live producer, no data");
+        tx.send(item(1)).unwrap();
+        drop(tx);
+        // Queued items still drain after the hangup...
+        assert!(matches!(rx.try_recv().unwrap(), TryRecv::Item(_)));
+        // ...and only THEN does the edge report closed.
+        assert!(matches!(rx.try_recv().unwrap(), TryRecv::Closed));
+        assert!(matches!(rx.try_recv().unwrap(), TryRecv::Closed));
+    }
+
+    #[test]
+    fn dropped_rx_reclaims_undelivered_shm_segments() {
+        let label = format!("leak{}", std::process::id());
+        let (mut tx, rx) = pair(ConnectorKind::Shm, &label, None).unwrap();
+        tx.send(item(1)).unwrap();
+        tx.send(item(2)).unwrap();
+        // The segments exist while undelivered...
+        let seg0 = format!("/omni_{}_{}_0", std::process::id(), label);
+        let seg1 = format!("/omni_{}_{}_1", std::process::id(), label);
+        assert!(shm::read_segment(&seg0, 1).is_ok());
+        assert!(shm::read_segment(&seg1, 1).is_ok());
+        // ...and are unlinked when the consumer drops without resolving.
+        drop(rx);
+        assert!(shm::read_segment(&seg0, 1).is_err(), "segment 0 leaked");
+        assert!(shm::read_segment(&seg1, 1).is_err(), "segment 1 leaked");
+    }
+
+    #[test]
+    fn failed_send_does_not_leak_shm_segment() {
+        let label = format!("sendfail{}", std::process::id());
+        let (mut tx, rx) = pair(ConnectorKind::Shm, &label, None).unwrap();
+        drop(rx);
+        assert!(tx.send(item(1)).is_err());
+        let seg = format!("/omni_{}_{}_0", std::process::id(), label);
+        assert!(shm::read_segment(&seg, 1).is_err(), "abandoned send leaked its segment");
+    }
+
+    #[test]
+    fn dropped_rx_reclaims_undelivered_tcp_values() {
+        let store = tcp::MooncakeStore::spawn("127.0.0.1:0").unwrap();
+        let addr = store.addr().to_string();
+        let (mut tx, rx) = pair(ConnectorKind::Tcp, "tleak", Some(&addr)).unwrap();
+        tx.send(item(1)).unwrap();
+        tx.send(item(2)).unwrap();
+        assert_eq!(store.len(), 2);
+        drop(rx);
+        assert_eq!(store.len(), 0, "undelivered TCP values leaked in the store");
+    }
+
+    #[test]
+    fn failed_tcp_send_does_not_leak_store_value() {
+        let store = tcp::MooncakeStore::spawn("127.0.0.1:0").unwrap();
+        let addr = store.addr().to_string();
+        let (mut tx, rx) = pair(ConnectorKind::Tcp, "tsendfail", Some(&addr)).unwrap();
+        drop(rx);
+        assert!(tx.send(item(1)).is_err());
+        assert_eq!(store.len(), 0, "abandoned TCP send leaked its value");
     }
 
     #[test]

@@ -1,0 +1,346 @@
+//! Routed connector layer: 1→N fan-out and N→1 fan-in over the
+//! point-to-point connectors in [`super`] (paper §3.3 "flexible GPU
+//! allocation").
+//!
+//! When a stage runs `replicas > 1` engine threads, every edge touching
+//! it becomes a *routed* edge: each producer replica owns a [`RouterTx`]
+//! that picks a consumer replica per item, and each consumer replica owns
+//! a [`RouterRx`] that merges the channels arriving from every producer
+//! replica.  An edge between an `m`-replica producer and an `n`-replica
+//! consumer is therefore `m × n` underlying connectors, all sharing the
+//! transport ([`ConnectorKind`]) configured for the edge.
+//!
+//! Routing policies ([`RoutingKind`]):
+//!
+//! * **round-robin** — per-item rotation; maximal spread, only correct
+//!   when items are independent (single-item requests).
+//! * **least-depth** — per-item pick of the replica with the smallest
+//!   load signal: connector in-flight count plus the consumer's
+//!   *published* admission-queue depth (the stage thread exports its
+//!   [`crate::scheduler::StageScheduler`] queue length through
+//!   [`RouterRx::publish_queue_depth`] — the `SchedStats` feedback loop).
+//! * **affinity** — per-request stickiness via `req_id % replicas`:
+//!   deterministic across producer replicas and across edges, so a
+//!   request's streamed chunks, conditioning rows, and KV/sequence state
+//!   all live on one replica.  Required for replicated AR consumers
+//!   (validated at config load).
+//!
+//! With one consumer replica every policy degenerates to pass-through,
+//! which keeps single-replica pipelines behaviour-identical to the
+//! pre-router point-to-point design.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::{ConnectorKind, RoutingKind};
+use crate::engine::StageItem;
+
+use super::{pair, ConnectorRx, ConnectorTx, TryRecv};
+
+/// Shared load signal for one consumer replica of one edge.
+///
+/// * `in_flight` — items sent into the replica's channels and not yet
+///   received (maintained by the router itself).
+/// * `queue_depth` — the consumer stage thread's pending admission-queue
+///   length, published each loop iteration (scheduler feedback).
+#[derive(Debug, Default)]
+pub struct ReplicaLoad {
+    in_flight: AtomicUsize,
+    queue_depth: AtomicUsize,
+}
+
+impl ReplicaLoad {
+    /// Combined depth the least-depth policy ranks replicas by.
+    fn score(&self) -> usize {
+        self.in_flight.load(Ordering::Relaxed) + self.queue_depth.load(Ordering::Relaxed)
+    }
+}
+
+enum RouteState {
+    RoundRobin { next: usize },
+    LeastDepth,
+    Affinity,
+}
+
+/// Fan-out sender owned by one producer replica: one [`ConnectorTx`] per
+/// consumer replica, with the routing policy choosing the target per
+/// item.
+pub struct RouterTx {
+    targets: Vec<ConnectorTx>,
+    loads: Vec<Arc<ReplicaLoad>>,
+    state: RouteState,
+}
+
+impl RouterTx {
+    /// Route `item` to one consumer replica.
+    pub fn send(&mut self, item: StageItem) -> Result<()> {
+        let n = self.targets.len();
+        let i = match &mut self.state {
+            RouteState::RoundRobin { next } => {
+                let i = *next % n;
+                *next = (*next + 1) % n;
+                i
+            }
+            RouteState::LeastDepth => (0..n)
+                .min_by_key(|&i| (self.loads[i].score(), i))
+                .expect("router has at least one target"),
+            RouteState::Affinity => (item.req_id % n as u64) as usize,
+        };
+        // Count before sending so a racing consumer can never observe a
+        // receive without the matching increment (underflow).
+        self.loads[i].in_flight.fetch_add(1, Ordering::Relaxed);
+        if let Err(e) = self.targets[i].send(item) {
+            let _ = self.loads[i].in_flight.fetch_update(
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+                |v| Some(v.saturating_sub(1)),
+            );
+            return Err(e);
+        }
+        Ok(())
+    }
+
+    /// Total bytes moved through this producer replica's payload planes.
+    pub fn bytes_sent(&self) -> u64 {
+        self.targets.iter().map(|t| t.bytes_sent).sum()
+    }
+
+    /// Number of consumer replicas this sender fans out to.
+    pub fn fanout(&self) -> usize {
+        self.targets.len()
+    }
+}
+
+struct Source {
+    rx: ConnectorRx,
+    open: bool,
+}
+
+/// Fan-in receiver owned by one consumer replica: merges the channels
+/// from every producer replica, polling them round-robin for fairness.
+pub struct RouterRx {
+    sources: Vec<Source>,
+    load: Arc<ReplicaLoad>,
+    next: usize,
+}
+
+impl RouterRx {
+    /// Non-blocking receive across all producer replicas.
+    /// [`TryRecv::Closed`] only once EVERY producer has hung up and all
+    /// channels are drained.
+    pub fn try_recv(&mut self) -> Result<TryRecv> {
+        let n = self.sources.len();
+        let mut any_open = false;
+        for k in 0..n {
+            let i = (self.next + k) % n;
+            if !self.sources[i].open {
+                continue;
+            }
+            match self.sources[i].rx.try_recv()? {
+                TryRecv::Item(item) => {
+                    self.next = (i + 1) % n;
+                    let _ = self.load.in_flight.fetch_update(
+                        Ordering::Relaxed,
+                        Ordering::Relaxed,
+                        |v| Some(v.saturating_sub(1)),
+                    );
+                    return Ok(TryRecv::Item(item));
+                }
+                TryRecv::Empty => any_open = true,
+                TryRecv::Closed => self.sources[i].open = false,
+            }
+        }
+        Ok(if any_open { TryRecv::Empty } else { TryRecv::Closed })
+    }
+
+    /// Publish this replica's pending admission-queue depth for the
+    /// producers' least-depth routing (scheduler feedback).
+    pub fn publish_queue_depth(&self, depth: usize) {
+        self.load.queue_depth.store(depth, Ordering::Relaxed);
+    }
+
+    /// Number of producer replicas feeding this receiver.
+    pub fn fanin(&self) -> usize {
+        self.sources.len()
+    }
+}
+
+/// Wire one routed edge: `n_from` producer replicas to `n_to` consumer
+/// replicas over `kind` transports.  Returns one [`RouterTx`] per
+/// producer replica and one [`RouterRx`] per consumer replica.
+/// `routing` may be [`RoutingKind::Auto`]; it resolves against `n_to`.
+pub fn wire(
+    kind: ConnectorKind,
+    routing: RoutingKind,
+    label: &str,
+    store_addr: Option<&str>,
+    n_from: usize,
+    n_to: usize,
+) -> Result<(Vec<RouterTx>, Vec<RouterRx>)> {
+    anyhow::ensure!(n_from >= 1 && n_to >= 1, "edge `{label}`: empty replica set");
+    let routing = routing.resolve(n_to);
+    let loads: Vec<Arc<ReplicaLoad>> =
+        (0..n_to).map(|_| Arc::new(ReplicaLoad::default())).collect();
+    let mut txs: Vec<Vec<ConnectorTx>> = (0..n_from).map(|_| Vec::with_capacity(n_to)).collect();
+    let mut rxs: Vec<Vec<ConnectorRx>> = (0..n_to).map(|_| Vec::with_capacity(n_from)).collect();
+    for (f, row) in txs.iter_mut().enumerate() {
+        for (t, col) in rxs.iter_mut().enumerate() {
+            // Unique label per underlying channel (shm segment names
+            // derive from it).
+            let (tx, rx) = pair(kind, &format!("{label}_f{f}t{t}"), store_addr)?;
+            row.push(tx);
+            col.push(rx);
+        }
+    }
+    let router_txs = txs
+        .into_iter()
+        .map(|targets| RouterTx {
+            targets,
+            loads: loads.clone(),
+            state: match routing {
+                RoutingKind::RoundRobin => RouteState::RoundRobin { next: 0 },
+                RoutingKind::LeastDepth => RouteState::LeastDepth,
+                RoutingKind::Affinity => RouteState::Affinity,
+                RoutingKind::Auto => unreachable!("resolve() never returns Auto"),
+            },
+        })
+        .collect();
+    let router_rxs = rxs
+        .into_iter()
+        .zip(loads)
+        .map(|(sources, load)| RouterRx {
+            sources: sources.into_iter().map(|rx| Source { rx, open: true }).collect(),
+            load,
+            next: 0,
+        })
+        .collect();
+    Ok((router_txs, router_rxs))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::HostTensor;
+
+    fn item(req: u64) -> StageItem {
+        StageItem::new(req).with("tokens", HostTensor::i32(vec![1], vec![req as i32]))
+    }
+
+    fn drain(rx: &mut RouterRx) -> Vec<u64> {
+        let mut out = vec![];
+        while let TryRecv::Item(it) = rx.try_recv().unwrap() {
+            out.push(it.req_id);
+        }
+        out
+    }
+
+    #[test]
+    fn round_robin_rotates_across_replicas_in_order() {
+        let (mut txs, mut rxs) =
+            wire(ConnectorKind::Inline, RoutingKind::RoundRobin, "rr", None, 1, 3).unwrap();
+        for req in 0..6 {
+            txs[0].send(item(req)).unwrap();
+        }
+        // Strict rotation: replica r gets items r, r+3.
+        assert_eq!(drain(&mut rxs[0]), vec![0, 3]);
+        assert_eq!(drain(&mut rxs[1]), vec![1, 4]);
+        assert_eq!(drain(&mut rxs[2]), vec![2, 5]);
+    }
+
+    #[test]
+    fn least_depth_picks_the_shallower_queue() {
+        let (mut txs, mut rxs) =
+            wire(ConnectorKind::Inline, RoutingKind::LeastDepth, "ld", None, 1, 2).unwrap();
+        // Equal load: ties break to replica 0; its in-flight count then
+        // steers the next item to replica 1.
+        txs[0].send(item(1)).unwrap();
+        txs[0].send(item(2)).unwrap();
+        assert_eq!(drain(&mut rxs[0]), vec![1]);
+        assert_eq!(drain(&mut rxs[1]), vec![2]);
+        // Scheduler feedback: replica 0 reports a deep admission queue, so
+        // new items avoid it even though its connector is drained.
+        rxs[0].publish_queue_depth(10);
+        txs[0].send(item(3)).unwrap();
+        txs[0].send(item(4)).unwrap();
+        assert_eq!(drain(&mut rxs[0]), Vec::<u64>::new());
+        assert_eq!(drain(&mut rxs[1]), vec![3, 4]);
+        // Feedback clears: replica 0 is eligible again.
+        rxs[0].publish_queue_depth(0);
+        txs[0].send(item(5)).unwrap();
+        assert_eq!(drain(&mut rxs[0]), vec![5]);
+    }
+
+    #[test]
+    fn affinity_keeps_every_chunk_of_a_request_on_one_replica() {
+        let (mut txs, mut rxs) =
+            wire(ConnectorKind::Inline, RoutingKind::Affinity, "aff", None, 1, 2).unwrap();
+        // Interleaved chunks of requests 7 and 8.
+        for req in [7u64, 8, 7, 8, 7] {
+            txs[0].send(item(req)).unwrap();
+        }
+        // 7 % 2 == 1, 8 % 2 == 0: each request's whole stream is sticky.
+        assert_eq!(drain(&mut rxs[0]), vec![8, 8]);
+        assert_eq!(drain(&mut rxs[1]), vec![7, 7, 7]);
+    }
+
+    #[test]
+    fn affinity_is_consistent_across_producer_replicas() {
+        // Two producer replicas route the same request id to the SAME
+        // consumer replica (modulo routing is stateless and global).
+        let (mut txs, mut rxs) =
+            wire(ConnectorKind::Inline, RoutingKind::Affinity, "aff2", None, 2, 2).unwrap();
+        txs[0].send(item(5)).unwrap();
+        txs[1].send(item(5)).unwrap();
+        assert_eq!(drain(&mut rxs[0]), Vec::<u64>::new());
+        assert_eq!(drain(&mut rxs[1]), vec![5, 5]);
+    }
+
+    #[test]
+    fn fan_in_merges_producers_and_closes_only_when_all_hang_up() {
+        let (mut txs, mut rxs) =
+            wire(ConnectorKind::Inline, RoutingKind::RoundRobin, "fi", None, 2, 1).unwrap();
+        txs[0].send(item(1)).unwrap();
+        txs[1].send(item(2)).unwrap();
+        let rx = &mut rxs[0];
+        assert_eq!(rx.fanin(), 2);
+        let mut got = drain(rx);
+        got.sort_unstable();
+        assert_eq!(got, vec![1, 2]);
+        // One producer hangs up: edge still open.
+        let tx1 = txs.pop().unwrap();
+        drop(tx1);
+        assert!(matches!(rx.try_recv().unwrap(), TryRecv::Empty));
+        txs[0].send(item(3)).unwrap();
+        assert!(matches!(rx.try_recv().unwrap(), TryRecv::Item(_)));
+        // Last producer hangs up: edge closed.
+        drop(txs);
+        assert!(matches!(rx.try_recv().unwrap(), TryRecv::Closed));
+    }
+
+    #[test]
+    fn single_replica_edge_degenerates_to_pass_through() {
+        // Auto routing + one consumer replica: every item flows 1:1, the
+        // pre-router behaviour.
+        let (mut txs, mut rxs) =
+            wire(ConnectorKind::Inline, RoutingKind::Auto, "pt", None, 1, 1).unwrap();
+        assert_eq!(txs[0].fanout(), 1);
+        for req in 0..5 {
+            txs[0].send(item(req)).unwrap();
+        }
+        assert_eq!(drain(&mut rxs[0]), vec![0, 1, 2, 3, 4]);
+        assert_eq!(txs[0].bytes_sent(), 5 * 4, "5 i32 payloads over the inline plane");
+    }
+
+    #[test]
+    fn routed_edge_works_over_shm_transport() {
+        let (mut txs, mut rxs) =
+            wire(ConnectorKind::Shm, RoutingKind::Affinity, "rshm", None, 1, 2).unwrap();
+        for req in [10u64, 11, 10] {
+            txs[0].send(item(req)).unwrap();
+        }
+        assert_eq!(drain(&mut rxs[0]), vec![10, 10]);
+        assert_eq!(drain(&mut rxs[1]), vec![11]);
+    }
+}

@@ -7,6 +7,8 @@
 //!   PUT: `b'P' | key_len u32 | key | val_len u64 | val`      -> `b'K'`
 //!   GET: `b'G' | key_len u32 | key`  -> `b'V' | val_len u64 | val`
 //!        (blocks server-side until the key exists, then removes it)
+//!   DEL: `b'D' | key_len u32 | key`  -> `b'K'`
+//!        (removes the key if present; never blocks — leak reclamation)
 //!
 //! One thread per connection; the store is an in-memory map + condvar.
 
@@ -102,6 +104,11 @@ fn serve_conn(mut stream: TcpStream, shared: Arc<Shared>) -> Result<()> {
                 stream.write_all(&(val.len() as u64).to_le_bytes())?;
                 stream.write_all(&val)?;
             }
+            b'D' => {
+                let key = read_key(&mut stream)?;
+                shared.map.lock().unwrap().remove(&key);
+                stream.write_all(b"K")?;
+            }
             other => bail!("mooncake: unknown op {other}"),
         }
     }
@@ -145,6 +152,20 @@ impl StoreClient {
         Ok(())
     }
 
+    /// Non-blocking remove-if-present (idempotent): reclaim a parked
+    /// value whose key will never be `get`-resolved.
+    pub fn del(&mut self, key: &str) -> Result<()> {
+        self.stream.write_all(b"D")?;
+        self.stream.write_all(&(key.len() as u32).to_le_bytes())?;
+        self.stream.write_all(key.as_bytes())?;
+        let mut ack = [0u8; 1];
+        self.stream.read_exact(&mut ack)?;
+        if ack[0] != b'K' {
+            bail!("mooncake: bad DEL ack");
+        }
+        Ok(())
+    }
+
     /// Blocking get-and-remove.
     pub fn get(&mut self, key: &str) -> Result<Vec<u8>> {
         self.stream.write_all(b"G")?;
@@ -175,6 +196,20 @@ mod tests {
         c.put("k1", b"hello").unwrap();
         assert_eq!(store.len(), 1);
         assert_eq!(c.get("k1").unwrap(), b"hello");
+        assert_eq!(store.len(), 0);
+    }
+
+    #[test]
+    fn del_removes_and_is_idempotent() {
+        let store = MooncakeStore::spawn("127.0.0.1:0").unwrap();
+        let mut c = StoreClient::connect(store.addr()).unwrap();
+        c.put("k", b"v").unwrap();
+        assert_eq!(store.len(), 1);
+        c.del("k").unwrap();
+        assert_eq!(store.len(), 0);
+        // Missing keys are a no-op, never a block.
+        c.del("k").unwrap();
+        c.del("never-put").unwrap();
         assert_eq!(store.len(), 0);
     }
 

@@ -15,7 +15,11 @@
 //! stage output; each stage pulls batches from a per-stage admission
 //! queue governed by a [`scheduler`] batching policy (continuous
 //! batching for AR stages, step-level batching for diffusion stages,
-//! FIFO for encoders/vocoders).
+//! FIFO for encoders/vocoders).  Hot stages scale out with
+//! `StageConfig::replicas`: the [`connector::router`] layer fans items
+//! across engine replicas (round-robin / least-depth / request-affinity)
+//! and the allocator packs each replica onto the least-loaded devices —
+//! the paper's "flexible GPU allocation".
 //!
 //! Model compute is AOT-lowered from JAX/Pallas (see `python/compile/`)
 //! into HLO-text artifacts executed through the PJRT CPU client

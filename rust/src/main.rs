@@ -105,10 +105,17 @@ fn real_main() -> Result<()> {
                 let summary = orch.run_workload(&workload, audio_stage)?;
                 print_report(&summary.report);
                 for s in &summary.stages {
+                    // Replicated stages report one line per engine
+                    // replica; unreplicated output is unchanged.
+                    let label = if s.replica == 0 {
+                        s.name.clone()
+                    } else {
+                        format!("{}#r{}", s.name, s.replica)
+                    };
                     if let Some(ar) = &s.ar {
                         println!(
                             "stage {:>10}: {} prefill tok, {} decode tok, {} calls, exec {} (marshal {})",
-                            s.name,
+                            label,
                             ar.prefill_tokens,
                             ar.decode_tokens,
                             ar.prefill_calls + ar.decode_calls + ar.scan_calls,
@@ -119,7 +126,7 @@ fn real_main() -> Result<()> {
                     if let Some(sc) = &s.sched {
                         println!(
                             "sched {:>10}: policy {} | admitted {} | passthrough {} | peak queue {} | mean wait {}",
-                            s.name,
+                            label,
                             sc.policy,
                             sc.admitted,
                             sc.passthrough,

@@ -24,12 +24,21 @@ pub enum Event {
     StageDone { req: u64, stage: &'static str, t: f64, tokens: usize },
     /// Request fully completed.
     Completed { req: u64, t: f64 },
-    /// Scheduler occupancy sample for a stage (paper §3.3 batching
-    /// observability): pending admission-queue depth, engine occupancy,
-    /// and the in-flight token commitment at one token boundary.
-    SchedSample { stage: &'static str, t: f64, queued: usize, running: usize, committed_tokens: usize },
-    /// A request cleared a stage's admission queue after `wait_s` seconds.
-    SchedAdmitted { stage: &'static str, req: u64, t: f64, wait_s: f64 },
+    /// Scheduler occupancy sample for one engine replica of a stage
+    /// (paper §3.3 batching observability): pending admission-queue
+    /// depth, engine occupancy, and the in-flight token commitment at one
+    /// token boundary.  `replica` is 0 for unreplicated stages.
+    SchedSample {
+        stage: &'static str,
+        replica: usize,
+        t: f64,
+        queued: usize,
+        running: usize,
+        committed_tokens: usize,
+    },
+    /// A request cleared a stage replica's admission queue after `wait_s`
+    /// seconds.
+    SchedAdmitted { stage: &'static str, replica: usize, req: u64, t: f64, wait_s: f64 },
 }
 
 #[derive(Debug, Default, Clone)]
@@ -64,11 +73,24 @@ pub struct SchedAgg {
     pub admitted: u64,
 }
 
-/// Thread-safe event sink.
+impl SchedAgg {
+    /// Fold another replica's aggregates into this one (per-stage
+    /// rollup across replicas).
+    pub fn merge(&mut self, other: &SchedAgg) {
+        self.queue_depth.extend(&other.queue_depth);
+        self.occupancy.extend(&other.occupancy);
+        self.committed_tokens.extend(&other.committed_tokens);
+        self.admit_wait.extend(&other.admit_wait);
+        self.admitted += other.admitted;
+    }
+}
+
+/// Thread-safe event sink.  Scheduler aggregates are keyed per (stage,
+/// replica); [`Recorder::report`] additionally merges them per stage.
 #[derive(Debug, Default)]
 pub struct Recorder {
     inner: Mutex<HashMap<u64, ReqRec>>,
-    sched: Mutex<HashMap<&'static str, SchedAgg>>,
+    sched: Mutex<HashMap<(&'static str, usize), SchedAgg>>,
 }
 
 impl Recorder {
@@ -78,17 +100,17 @@ impl Recorder {
 
     pub fn emit(&self, e: Event) {
         match &e {
-            Event::SchedSample { stage, queued, running, committed_tokens, .. } => {
+            Event::SchedSample { stage, replica, queued, running, committed_tokens, .. } => {
                 let mut s = self.sched.lock().unwrap();
-                let agg = s.entry(*stage).or_default();
+                let agg = s.entry((*stage, *replica)).or_default();
                 agg.queue_depth.push(*queued as f64);
                 agg.occupancy.push(*running as f64);
                 agg.committed_tokens.push(*committed_tokens as f64);
                 return;
             }
-            Event::SchedAdmitted { stage, wait_s, .. } => {
+            Event::SchedAdmitted { stage, replica, wait_s, .. } => {
                 let mut s = self.sched.lock().unwrap();
-                let agg = s.entry(*stage).or_default();
+                let agg = s.entry((*stage, *replica)).or_default();
                 agg.admit_wait.push(*wait_s);
                 agg.admitted += 1;
                 return;
@@ -162,15 +184,16 @@ impl Recorder {
             }
         }
 
-        let sched = self
-            .sched
-            .lock()
-            .unwrap()
-            .iter()
-            .map(|(k, v)| (k.to_string(), v.clone()))
-            .collect();
+        let by_replica = self.sched.lock().unwrap();
+        let mut sched: HashMap<String, SchedAgg> = HashMap::new();
+        let mut sched_replicas: HashMap<(String, usize), SchedAgg> = HashMap::new();
+        for (&(stage, replica), agg) in by_replica.iter() {
+            sched.entry(stage.to_string()).or_default().merge(agg);
+            sched_replicas.insert((stage.to_string(), replica), agg.clone());
+        }
+        drop(by_replica);
 
-        RunReport { wall_s, completed, jct, ttft, rtf, per_stage, sched }
+        RunReport { wall_s, completed, jct, ttft, rtf, per_stage, sched, sched_replicas }
     }
 }
 
@@ -191,9 +214,13 @@ pub struct RunReport {
     pub ttft: Samples,
     pub rtf: Samples,
     pub per_stage: HashMap<String, StageAgg>,
-    /// Per-stage scheduler aggregates (empty for stages that never
-    /// emitted scheduler samples, e.g. baseline runs).
+    /// Per-stage scheduler aggregates, merged across engine replicas
+    /// (empty for stages that never emitted scheduler samples, e.g.
+    /// baseline runs).
     pub sched: HashMap<String, SchedAgg>,
+    /// Scheduler aggregates per (stage, replica) — the unmerged view
+    /// behind `sched`, for replica-balance analysis.
+    pub sched_replicas: HashMap<(String, usize), SchedAgg>,
 }
 
 impl RunReport {
@@ -241,6 +268,18 @@ impl RunReport {
     pub fn sched_mean_admit_wait(&self, stage: &str) -> f64 {
         self.sched.get(stage).map(|a| a.admit_wait.mean()).unwrap_or(0.0)
     }
+
+    /// Scheduler aggregates for one engine replica of a stage, if it
+    /// emitted any samples.
+    pub fn sched_replica(&self, stage: &str, replica: usize) -> Option<&SchedAgg> {
+        self.sched_replicas.get(&(stage.to_string(), replica))
+    }
+
+    /// Number of engine replicas of `stage` that emitted scheduler
+    /// events.
+    pub fn sched_replica_count(&self, stage: &str) -> usize {
+        self.sched_replicas.keys().filter(|(s, _)| s == stage).count()
+    }
 }
 
 #[cfg(test)]
@@ -281,9 +320,9 @@ mod tests {
     #[test]
     fn sched_samples_aggregate_per_stage() {
         let r = Recorder::new();
-        r.emit(Event::SchedSample { stage: "talker", t: 0.1, queued: 3, running: 2, committed_tokens: 64 });
-        r.emit(Event::SchedSample { stage: "talker", t: 0.2, queued: 1, running: 4, committed_tokens: 96 });
-        r.emit(Event::SchedAdmitted { stage: "talker", req: 1, t: 0.2, wait_s: 0.05 });
+        r.emit(Event::SchedSample { stage: "talker", replica: 0, t: 0.1, queued: 3, running: 2, committed_tokens: 64 });
+        r.emit(Event::SchedSample { stage: "talker", replica: 0, t: 0.2, queued: 1, running: 4, committed_tokens: 96 });
+        r.emit(Event::SchedAdmitted { stage: "talker", replica: 0, req: 1, t: 0.2, wait_s: 0.05 });
         let rep = r.report(1.0, None);
         assert!((rep.sched_mean_queue_depth("talker") - 2.0).abs() < 1e-9);
         assert!((rep.sched_mean_occupancy("talker") - 3.0).abs() < 1e-9);
@@ -291,6 +330,25 @@ mod tests {
         assert_eq!(rep.sched["talker"].admitted, 1);
         // Unsampled stages report zeros, not panics.
         assert_eq!(rep.sched_mean_queue_depth("vocoder"), 0.0);
+    }
+
+    #[test]
+    fn sched_samples_split_and_merge_across_replicas() {
+        let r = Recorder::new();
+        r.emit(Event::SchedSample { stage: "talker", replica: 0, t: 0.1, queued: 4, running: 2, committed_tokens: 10 });
+        r.emit(Event::SchedSample { stage: "talker", replica: 1, t: 0.1, queued: 0, running: 1, committed_tokens: 5 });
+        r.emit(Event::SchedAdmitted { stage: "talker", replica: 0, req: 1, t: 0.2, wait_s: 0.1 });
+        r.emit(Event::SchedAdmitted { stage: "talker", replica: 1, req: 2, t: 0.2, wait_s: 0.3 });
+        let rep = r.report(1.0, None);
+        // Per-replica views stay distinct...
+        assert_eq!(rep.sched_replica_count("talker"), 2);
+        assert!((rep.sched_replica("talker", 0).unwrap().queue_depth.mean() - 4.0).abs() < 1e-9);
+        assert!((rep.sched_replica("talker", 1).unwrap().queue_depth.mean() - 0.0).abs() < 1e-9);
+        // ...while the stage-level view merges them.
+        assert!((rep.sched_mean_queue_depth("talker") - 2.0).abs() < 1e-9);
+        assert_eq!(rep.sched["talker"].admitted, 2);
+        assert!((rep.sched_mean_admit_wait("talker") - 0.2).abs() < 1e-9);
+        assert!(rep.sched_replica("talker", 2).is_none());
     }
 
     #[test]

@@ -1,12 +1,13 @@
-//! The orchestrator (paper §3.1/§3.3): launches one engine per stage,
-//! wires connectors along the stage-graph edges, routes requests, and
-//! tracks per-request lifecycle metrics.
+//! The orchestrator (paper §3.1/§3.3): launches `replicas` engines per
+//! stage, wires routed connectors along the stage-graph edges
+//! ([`crate::connector::router`]), routes requests, and tracks
+//! per-request lifecycle metrics.
 //!
-//! Threading model: engines own non-`Send` PJRT state, so each stage runs
-//! on its own thread, constructed in-thread.  Data crosses threads only
-//! as [`StageItem`]s through [`crate::connector`]s — the disaggregation
-//! boundary.  Transfers run consumer-side (the downstream thread turns
-//! upstream items into engine commands).
+//! Threading model: engines own non-`Send` PJRT state, so each engine
+//! replica runs on its own thread, constructed in-thread.  Data crosses
+//! threads only as [`StageItem`]s through [`crate::connector`]s — the
+//! disaggregation boundary.  Transfers run consumer-side (the downstream
+//! thread turns upstream items into engine commands).
 
 pub mod stage;
 
@@ -51,21 +52,41 @@ impl Default for RunOptions {
 /// Wall clock shared across stage threads (run-relative seconds).
 /// Resettable so engine construction/compilation is excluded from
 /// request timing.
+///
+/// Every stage thread reads this per event, so the hot path must not
+/// take a lock: the epoch is a fixed `Instant` plus an atomic
+/// nanosecond offset that [`RunClock::reset`] swaps — `now()` is one
+/// monotonic-clock read and one relaxed atomic load.
 #[derive(Debug, Clone)]
-pub struct RunClock(Arc<Mutex<Instant>>);
+pub struct RunClock(Arc<ClockInner>);
+
+#[derive(Debug)]
+struct ClockInner {
+    base: Instant,
+    /// Nanoseconds from `base` to the current epoch start.
+    offset_ns: std::sync::atomic::AtomicU64,
+}
 
 impl RunClock {
     pub fn new() -> Self {
-        Self(Arc::new(Mutex::new(Instant::now())))
+        Self(Arc::new(ClockInner {
+            base: Instant::now(),
+            offset_ns: std::sync::atomic::AtomicU64::new(0),
+        }))
     }
 
     pub fn now(&self) -> f64 {
-        self.0.lock().unwrap().elapsed().as_secs_f64()
+        let elapsed = self.0.base.elapsed().as_nanos() as u64;
+        let offset = self.0.offset_ns.load(Ordering::Relaxed);
+        // A read racing a concurrent reset() could see the new offset
+        // before its own clock sample — clamp instead of underflowing.
+        elapsed.saturating_sub(offset) as f64 / 1e9
     }
 
     /// Restart the clock (after all engines report ready).
     pub fn reset(&self) {
-        *self.0.lock().unwrap() = Instant::now();
+        let elapsed = self.0.base.elapsed().as_nanos() as u64;
+        self.0.offset_ns.store(elapsed, Ordering::Relaxed);
     }
 }
 
@@ -75,24 +96,99 @@ impl Default for RunClock {
     }
 }
 
-/// Per-stage summary returned after a run.
+/// Per-engine-replica summary returned after a run (one entry per
+/// replica; `replica` is 0 for unreplicated stages, making
+/// single-replica runs identical to the pre-replication output).
 #[derive(Debug, Default, Clone)]
 pub struct StageSummary {
     pub name: String,
+    /// Which engine replica of the stage this summary describes.
+    pub replica: usize,
     pub ar: Option<crate::engine::ar::EngineStats>,
     pub diffusion: Option<crate::engine::diffusion::DiffusionStats>,
     pub vocoder: Option<crate::engine::vocoder::VocoderStats>,
-    /// Admission-queue counters from the stage's [`crate::scheduler::StageScheduler`].
+    /// Admission-queue counters from the replica's [`crate::scheduler::StageScheduler`].
     pub sched: Option<crate::scheduler::SchedStats>,
     pub bytes_sent: u64,
+}
+
+impl StageSummary {
+    /// Fold another replica's summary into this one (stage-level rollup).
+    pub fn absorb(&mut self, other: &StageSummary) {
+        self.bytes_sent += other.bytes_sent;
+        match (&mut self.ar, &other.ar) {
+            (Some(a), Some(b)) => {
+                a.iterations += b.iterations;
+                a.prefill_tokens += b.prefill_tokens;
+                a.decode_tokens += b.decode_tokens;
+                a.prefill_calls += b.prefill_calls;
+                a.decode_calls += b.decode_calls;
+                a.scan_calls += b.scan_calls;
+                a.preemptions += b.preemptions;
+                a.exec_seconds += b.exec_seconds;
+                a.marshal_seconds += b.marshal_seconds;
+            }
+            (slot @ None, Some(b)) => *slot = Some(b.clone()),
+            _ => {}
+        }
+        match (&mut self.diffusion, &other.diffusion) {
+            (Some(a), Some(b)) => {
+                a.jobs_done += b.jobs_done;
+                a.steps_run += b.steps_run;
+                a.steps_skipped += b.steps_skipped;
+                a.calls += b.calls;
+                a.exec_seconds += b.exec_seconds;
+            }
+            (slot @ None, Some(b)) => *slot = Some(b.clone()),
+            _ => {}
+        }
+        match (&mut self.vocoder, &other.vocoder) {
+            (Some(a), Some(b)) => {
+                a.chunks_done += b.chunks_done;
+                a.calls += b.calls;
+                a.exec_seconds += b.exec_seconds;
+            }
+            (slot @ None, Some(b)) => *slot = Some(b.clone()),
+            _ => {}
+        }
+        match (&mut self.sched, &other.sched) {
+            (Some(a), Some(b)) => {
+                a.admitted += b.admitted;
+                a.passthrough += b.passthrough;
+                a.max_queue_depth = a.max_queue_depth.max(b.max_queue_depth);
+                a.queue_wait.extend(&b.queue_wait);
+            }
+            (slot @ None, Some(b)) => *slot = Some(b.clone()),
+            _ => {}
+        }
+    }
 }
 
 /// Everything a finished run reports.
 #[derive(Debug)]
 pub struct RunSummary {
     pub report: RunReport,
+    /// One entry per engine replica, in (stage, replica) order.
     pub stages: Vec<StageSummary>,
     pub wall_s: f64,
+}
+
+impl RunSummary {
+    /// All replica summaries of `stage`.
+    pub fn stage_replicas(&self, stage: &str) -> Vec<&StageSummary> {
+        self.stages.iter().filter(|s| s.name == stage).collect()
+    }
+
+    /// Merge the per-replica summaries of `stage` into one stage-level
+    /// rollup (counters summed, queue waits pooled).
+    pub fn stage_rollup(&self, stage: &str) -> Option<StageSummary> {
+        let mut it = self.stages.iter().filter(|s| s.name == stage);
+        let mut acc = it.next()?.clone();
+        for s in it {
+            acc.absorb(s);
+        }
+        Some(acc)
+    }
 }
 
 /// The disaggregated pipeline runner.
@@ -112,20 +208,21 @@ impl Orchestrator {
         opts: RunOptions,
     ) -> Result<Self> {
         let graph = StageGraph::build(config, &registry)?;
-        // Device-memory admission for the paper's testbed model.
+        // Scheduling/allocation admission: resolve each stage's batching
+        // policy and pack a device group per engine replica, rejecting
+        // invalid combinations before any engine thread spawns.
+        let plan = StageAllocator::new(&graph.config)
+            .plan(Some(artifacts.as_ref()))
+            .with_context(|| format!("allocating pipeline `{}`", graph.config.name))?;
+        // Device-memory admission for the paper's testbed model: every
+        // replica's weights must fit on its packed device group.
         let pool = crate::device::DevicePool::new(
             graph.config.n_devices,
             graph.config.device_bytes,
         );
         graph
-            .reserve_memory(&pool, &artifacts)
+            .reserve_memory(&pool, &artifacts, &plan)
             .with_context(|| format!("placing pipeline `{}`", graph.config.name))?;
-        // Scheduling/allocation admission: resolve each stage's batching
-        // policy and device assignment, rejecting invalid combinations
-        // before any engine thread spawns.
-        let plan = StageAllocator::new(&graph.config)
-            .plan(Some(artifacts.as_ref()))
-            .with_context(|| format!("allocating pipeline `{}`", graph.config.name))?;
         Ok(Self { graph, registry, artifacts, opts, plan })
     }
 
@@ -147,6 +244,7 @@ impl Orchestrator {
         let clock = RunClock::new();
         let reqs: ReqTable = Arc::new(Mutex::new(Default::default()));
         let stop = Arc::new(AtomicBool::new(false));
+        let failed = Arc::new(AtomicBool::new(false));
 
         // Spawn a Mooncake store if any edge wants TCP.
         let needs_tcp = self
@@ -170,54 +268,86 @@ impl Orchestrator {
             None
         };
 
-        // Wire connectors: for each edge, tx to producer, (rx, transfer) to
-        // consumer.
-        let mut stage_rxs: Vec<Vec<(connector::ConnectorRx, String)>> =
-            (0..n_stages).map(|_| vec![]).collect();
-        let mut stage_txs: Vec<Vec<connector::ConnectorTx>> =
-            (0..n_stages).map(|_| vec![]).collect();
+        // Wire routed edges: an edge between an m-replica producer and an
+        // n-replica consumer becomes m RouterTx / n RouterRx over m×n
+        // point-to-point connectors, with the edge's routing policy
+        // picking the consumer replica per item (connector::router).
+        let replicas: Vec<usize> =
+            (0..n_stages).map(|i| self.plan.assignment(i).replicas).collect();
+        let mut stage_rxs: Vec<Vec<Vec<(connector::router::RouterRx, String)>>> =
+            replicas.iter().map(|&r| (0..r).map(|_| vec![]).collect()).collect();
+        let mut stage_txs: Vec<Vec<Vec<connector::router::RouterTx>>> =
+            replicas.iter().map(|&r| (0..r).map(|_| vec![]).collect()).collect();
         for e in &self.graph.config.edges {
             let from = self.graph.stage_index(&e.from).unwrap();
             let to = self.graph.stage_index(&e.to).unwrap();
             let label = format!("{}2{}", e.from, e.to);
-            let (tx, rx) = connector::pair(e.connector, &label, store_addr.as_deref())?;
-            stage_txs[from].push(tx);
-            stage_rxs[to].push((rx, e.transfer.clone()));
+            let (txs, rxs) = connector::router::wire(
+                e.connector,
+                e.routing,
+                &label,
+                store_addr.as_deref(),
+                replicas[from],
+                replicas[to],
+            )?;
+            for (f, tx) in txs.into_iter().enumerate() {
+                stage_txs[from][f].push(tx);
+            }
+            for (t, rx) in rxs.into_iter().enumerate() {
+                stage_rxs[to][t].push((rx, e.transfer.clone()));
+            }
         }
 
-        // Entry channel + exit collector.
-        let (front_tx, front_rx) = mpsc::channel::<Request>();
+        // Entry channels (one per entry-stage replica; whole requests are
+        // round-robined across them by the feeder) + exit collector.
+        let entry = self.graph.entry;
+        let mut front_txs = Vec::with_capacity(replicas[entry]);
+        let mut front_rx_opts = Vec::with_capacity(replicas[entry]);
+        for _ in 0..replicas[entry] {
+            let (tx, rx) = mpsc::channel::<Request>();
+            front_txs.push(tx);
+            front_rx_opts.push(Some(rx));
+        }
         let (sink_tx, sink_rx) = mpsc::channel::<StageItem>();
 
-        // Spawn stage threads; they build engines (PJRT clients, compiled
-        // executables, weight upload) and then rendezvous on this barrier
-        // so compilation time is excluded from request metrics.
-        let ready = Arc::new(std::sync::Barrier::new(n_stages + 1));
+        // Spawn one thread per engine replica; they build engines (PJRT
+        // clients, compiled executables, weight upload) and then
+        // rendezvous on this barrier so compilation time is excluded from
+        // request metrics.
+        let total_replicas: usize = replicas.iter().sum();
+        let ready = Arc::new(std::sync::Barrier::new(total_replicas + 1));
         let inflight = Arc::new(AtomicUsize::new(0));
         let mut handles = Vec::new();
-        let mut front_rx_opt = Some(front_rx);
         for i in 0..n_stages {
-            let spec = stage::StageSpec {
-                index: i,
-                cfg: self.graph.stage(i).clone(),
-                assignment: self.plan.assignment(i).clone(),
-                artifacts: self.artifacts.clone(),
-                rxs: std::mem::take(&mut stage_rxs[i]),
-                txs: std::mem::take(&mut stage_txs[i]),
-                registry: self.registry.clone(),
-                reqs: reqs.clone(),
-                recorder: recorder.clone(),
-                clock: clock.clone(),
-                stop: stop.clone(),
-                front_rx: if i == self.graph.entry { front_rx_opt.take() } else { None },
-                sink: if self.graph.exits.contains(&i) { Some(sink_tx.clone()) } else { None },
-                streaming: self.opts.streaming,
-                lazy_compile: self.opts.lazy_compile,
-                device_bytes: self.graph.config.device_bytes,
-                downstream_hint: self.downstream_hint(i),
-                ready: ready.clone(),
-            };
-            handles.push(stage::spawn(spec)?);
+            for r in 0..replicas[i] {
+                let spec = stage::StageSpec {
+                    index: i,
+                    replica: r,
+                    cfg: self.graph.stage(i).clone(),
+                    assignment: self.plan.assignment(i).clone(),
+                    artifacts: self.artifacts.clone(),
+                    rxs: std::mem::take(&mut stage_rxs[i][r]),
+                    txs: std::mem::take(&mut stage_txs[i][r]),
+                    registry: self.registry.clone(),
+                    reqs: reqs.clone(),
+                    recorder: recorder.clone(),
+                    clock: clock.clone(),
+                    stop: stop.clone(),
+                    failed: failed.clone(),
+                    front_rx: if i == entry { front_rx_opts[r].take() } else { None },
+                    sink: if self.graph.exits.contains(&i) {
+                        Some(sink_tx.clone())
+                    } else {
+                        None
+                    },
+                    streaming: self.opts.streaming,
+                    lazy_compile: self.opts.lazy_compile,
+                    device_bytes: self.graph.config.device_bytes,
+                    downstream_hint: self.downstream_hint(i),
+                    ready: ready.clone(),
+                };
+                handles.push(stage::spawn(spec)?);
+            }
         }
         drop(sink_tx);
         ready.wait();
@@ -249,7 +379,11 @@ impl Orchestrator {
             let mut sorted = workload.requests.clone();
             sorted.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
             std::thread::spawn(move || {
-                for r in sorted {
+                // Replicated entry stages: whole requests round-robin
+                // across the replicas' channels (a request is a single
+                // message, so any spread policy is state-safe here).
+                let mut next = 0usize;
+                'feed: for r in sorted {
                     if realtime {
                         let wait = r.arrival_s - clock.now();
                         if wait > 0.0 {
@@ -257,25 +391,47 @@ impl Orchestrator {
                         }
                     }
                     recorder.emit(Event::Arrived { req: r.id, t: clock.now() });
-                    if front_tx.send(r).is_err() {
-                        break;
+                    // Try each replica's channel once, moving the request
+                    // every time: a failed send hands it back through
+                    // `SendError`, so a dead replica costs a retry, never
+                    // a clone.
+                    let n = front_txs.len();
+                    let mut req = Some(r);
+                    for k in 0..n {
+                        let i = (next + k) % n;
+                        match front_txs[i].send(req.take().expect("requeued on failure")) {
+                            Ok(()) => {
+                                next = (i + 1) % n;
+                                continue 'feed;
+                            }
+                            Err(mpsc::SendError(bounced)) => req = Some(bounced),
+                        }
                     }
+                    break; // every entry replica is gone
                 }
             })
         };
 
-        // Collect completions from exit stages.
+        // Collect completions from exit stages.  Poll with a timeout so a
+        // failed stage replica (its error surfaces at join below) breaks
+        // the loop instead of leaving the run waiting on completions that
+        // can never arrive.
         let mut remaining = n_requests;
         let mut done: std::collections::HashSet<u64> = Default::default();
         while remaining > 0 {
-            match sink_rx.recv() {
+            match sink_rx.recv_timeout(std::time::Duration::from_millis(50)) {
                 Ok(item) => {
                     if item.finished && done.insert(item.req_id) {
                         recorder.emit(Event::Completed { req: item.req_id, t: clock.now() });
                         remaining -= 1;
                     }
                 }
-                Err(_) => break,
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    if failed.load(Ordering::SeqCst) {
+                        break;
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
             }
         }
         feeder.join().ok();

@@ -16,7 +16,8 @@ use anyhow::{bail, Result};
 
 use super::{RunClock, StageSummary};
 use crate::config::{StageConfig, StageKind};
-use crate::connector::{ConnectorRx, ConnectorTx};
+use crate::connector::router::{RouterRx, RouterTx};
+use crate::connector::TryRecv;
 use crate::engine::ar::{ArEngine, ArEngineOptions, ArJob, Preprocess, PromptItem};
 use crate::engine::diffusion::{DiffusionEngine, DiffusionOptions};
 use crate::engine::encoder::{EncodeJob, EncoderEngine};
@@ -36,17 +37,25 @@ const SAMPLE_EVERY: u64 = 32;
 
 pub struct StageSpec {
     pub index: usize,
+    /// Which engine replica of the stage this thread serves (0-based;
+    /// always 0 for unreplicated stages).
+    pub replica: usize,
     pub cfg: StageConfig,
     pub artifacts: Arc<Artifacts>,
-    /// Incoming edges: connector receiver + transfer name.
-    pub rxs: Vec<(ConnectorRx, String)>,
-    /// Outgoing edges (items are cloned per edge).
-    pub txs: Vec<ConnectorTx>,
+    /// Incoming edges: fan-in router receiver + transfer name.
+    pub rxs: Vec<(RouterRx, String)>,
+    /// Outgoing edges (items are cloned per edge; each router picks the
+    /// consumer replica).
+    pub txs: Vec<RouterTx>,
     pub registry: Registry,
     pub reqs: ReqTable,
     pub recorder: Arc<Recorder>,
     pub clock: RunClock,
     pub stop: Arc<std::sync::atomic::AtomicBool>,
+    /// Set when any stage replica thread fails, so the orchestrator's
+    /// collector loop stops waiting for completions that will never
+    /// arrive (the failed thread's error surfaces at join time).
+    pub failed: Arc<std::sync::atomic::AtomicBool>,
     /// Resolved scheduling assignment (policy, budgets, devices) from the
     /// orchestrator's [`crate::scheduler::AllocationPlan`].
     pub assignment: StageAssignment,
@@ -122,13 +131,21 @@ impl Engine {
 
 pub fn spawn(spec: StageSpec) -> Result<JoinHandle<Result<StageSummary>>> {
     let name = spec.cfg.name.clone();
+    let thread_name = if spec.replica == 0 {
+        format!("stage-{name}")
+    } else {
+        format!("stage-{name}-r{}", spec.replica)
+    };
     std::thread::Builder::new()
-        .name(format!("stage-{name}"))
+        .name(thread_name)
         .spawn(move || {
             let stage = spec.cfg.name.clone();
+            let replica = spec.replica;
+            let failed = spec.failed.clone();
             let r = run(spec);
             if let Err(e) = &r {
-                eprintln!("stage `{stage}` failed: {e:#}");
+                eprintln!("stage `{stage}` (replica {replica}) failed: {e:#}");
+                failed.store(true, Ordering::SeqCst);
             }
             r
         })
@@ -217,7 +234,7 @@ fn run(mut spec: StageSpec) -> Result<StageSummary> {
     }
 
     // Instantiate incoming transfers with the request table.
-    let mut inputs: Vec<(ConnectorRx, Transfer)> = Vec::new();
+    let mut inputs: Vec<(RouterRx, Transfer)> = Vec::new();
     for (rx, tname) in spec.rxs.drain(..) {
         let ctx = TransferCtx {
             reqs: spec.reqs.clone(),
@@ -273,16 +290,32 @@ fn run(mut spec: StageSpec) -> Result<StageSummary> {
         // 2) Upstream items through transfers — submissions queue behind
         // the policy; conditioning rows for in-flight requests pass
         // through.  When the queue-depth cap is hit, items stay in the
-        // connector (backpressure on the producer stage).
+        // connector (backpressure on the producer stage).  A `Closed`
+        // edge (every producer replica hung up, channels drained) stops
+        // being a data source; the loop's stop flag still governs
+        // shutdown so in-flight work finishes first.
         for (rx, transfer) in &mut inputs {
             while sched.has_room() {
-                let Some(item) = rx.try_recv()? else { break };
+                let item = match rx.try_recv()? {
+                    TryRecv::Item(item) => item,
+                    TryRecv::Empty | TryRecv::Closed => break,
+                };
                 for cmd in transfer(&item)? {
                     for c in sched.enqueue(cmd, spec.clock.now()) {
                         apply_cmd(&mut engine, c, stage_name, &spec.recorder, &spec.clock)?;
                     }
                 }
                 worked = true;
+            }
+        }
+
+        // Publish this replica's admission-queue depth so upstream
+        // least-depth routers can steer items away from a backed-up
+        // replica (scheduler feedback through the router layer).
+        {
+            let depth = sched.queue_len();
+            for (rx, _) in &inputs {
+                rx.publish_queue_depth(depth);
             }
         }
 
@@ -293,6 +326,7 @@ fn run(mut spec: StageSpec) -> Result<StageSummary> {
             let admissions = sched.ready_with(&view, now, |req, wait_s| {
                 spec.recorder.emit(Event::SchedAdmitted {
                     stage: stage_name,
+                    replica: spec.replica,
                     req,
                     t: now,
                     wait_s,
@@ -311,6 +345,7 @@ fn run(mut spec: StageSpec) -> Result<StageSummary> {
             let view = engine.view(spec.assignment.max_batch);
             spec.recorder.emit(Event::SchedSample {
                 stage: stage_name,
+                replica: spec.replica,
                 t: spec.clock.now(),
                 queued: sched.queue_len(),
                 running: view.running,
@@ -378,7 +413,11 @@ fn run(mut spec: StageSpec) -> Result<StageSummary> {
         }
     }
 
-    let mut summary = StageSummary { name: spec.cfg.name.clone(), ..Default::default() };
+    let mut summary = StageSummary {
+        name: spec.cfg.name.clone(),
+        replica: spec.replica,
+        ..Default::default()
+    };
     match engine {
         Engine::Ar(e) => summary.ar = Some(e.stats.clone()),
         Engine::Diffusion(e) => summary.diffusion = Some(e.stats.clone()),
@@ -386,7 +425,7 @@ fn run(mut spec: StageSpec) -> Result<StageSummary> {
         Engine::Encoder(_) => {}
     }
     summary.sched = Some(sched.stats.clone());
-    summary.bytes_sent = spec.txs.iter().map(|t| t.bytes_sent).sum();
+    summary.bytes_sent = spec.txs.iter().map(|t| t.bytes_sent()).sum();
     Ok(summary)
 }
 

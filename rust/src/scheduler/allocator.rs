@@ -1,13 +1,22 @@
 //! Stage → device allocation (paper §3.3 "flexible GPU allocation").
 //!
-//! [`StageAllocator`] turns the per-stage `devices` / `max_batch` /
-//! `sched` fields of a [`PipelineConfig`] into a validated
+//! [`StageAllocator`] turns the per-stage `devices` / `replicas` /
+//! `max_batch` / `sched` fields of a [`PipelineConfig`] into a validated
 //! [`AllocationPlan`]: one [`StageAssignment`] per stage with the batching
-//! policy resolved, plus a per-device load map.  The orchestrator builds
-//! the plan before spawning stage threads, so a mis-configured pipeline
-//! fails at construction time instead of mid-run — the same admission role
-//! the real system's allocator plays next to the memory reservation in
+//! policy resolved and a device group packed for every engine replica,
+//! plus a per-device load map.  The orchestrator builds the plan before
+//! spawning stage threads, so a mis-configured pipeline fails at
+//! construction time instead of mid-run — the same admission role the
+//! real system's allocator plays next to the memory reservation in
 //! [`crate::stage_graph::StageGraph::reserve_memory`].
+//!
+//! Replica packing: replica 0 honors the configured `devices` placement
+//! verbatim.  Each further replica gets a group of the same TP degree on
+//! the currently least-loaded devices (load = replica-placements already
+//! made, seeded with every stage's configured placement), so hot-stage
+//! replicas spread across the pool instead of stacking on one
+//! accelerator.  Whether the packed placement *fits* is decided by the
+//! per-replica memory reservation, not here.
 
 use std::collections::HashMap;
 
@@ -22,8 +31,14 @@ use crate::runtime::Artifacts;
 pub struct StageAssignment {
     pub stage: String,
     pub kind: StageKind,
-    /// Device placement (len > 1 = tensor parallel across the group).
+    /// Replica 0's device placement (len > 1 = tensor parallel across the
+    /// group) — kept as the "primary" group for single-replica callers.
     pub devices: Vec<DeviceId>,
+    /// Engine replicas serving the stage (>= 1).
+    pub replicas: usize,
+    /// Device group per replica; `replica_devices[0] == devices`, every
+    /// group has the same TP degree.
+    pub replica_devices: Vec<Vec<DeviceId>>,
     /// Resolved batching policy (never [`SchedPolicyKind::Auto`]).
     pub policy: SchedPolicyKind,
     pub max_batch: usize,
@@ -96,10 +111,19 @@ impl<'a> StageAllocator<'a> {
     /// engine thread).
     pub fn plan(&self, artifacts: Option<&Artifacts>) -> Result<AllocationPlan> {
         // Structural checks (non-empty device groups, placement bounds,
-        // name uniqueness, ...) live in one place.
+        // name uniqueness, replica/routing sanity, ...) live in one place.
         self.config.validate()?;
         let mut assignments = Vec::with_capacity(self.config.stages.len());
         let mut load: HashMap<DeviceId, Vec<String>> = HashMap::new();
+        // Replica packing pressure: placements per device, seeded with
+        // every stage's configured (replica 0) group so extra replicas
+        // route around the whole pipeline's baseline placement.
+        let mut dev_load = vec![0usize; self.config.n_devices];
+        for s in &self.config.stages {
+            for &d in &s.devices {
+                dev_load[d] += 1;
+            }
+        }
         for s in &self.config.stages {
             let mut seen = std::collections::HashSet::new();
             for &d in &s.devices {
@@ -151,13 +175,32 @@ impl<'a> StageAllocator<'a> {
                 }
             }
             let devices: Vec<DeviceId> = s.devices.iter().map(|&d| DeviceId(d)).collect();
-            for &d in &devices {
-                load.entry(d).or_default().push(s.name.clone());
+            // Pack one device group per replica: replica 0 is the
+            // configured placement; each further replica takes the
+            // currently least-loaded devices at the same TP degree.
+            let mut replica_devices = Vec::with_capacity(s.replicas);
+            replica_devices.push(devices.clone());
+            for _ in 1..s.replicas {
+                let mut order: Vec<usize> = (0..self.config.n_devices).collect();
+                order.sort_by_key(|&d| (dev_load[d], d));
+                let group: Vec<DeviceId> =
+                    order.iter().take(devices.len()).map(|&d| DeviceId(d)).collect();
+                for g in &group {
+                    dev_load[g.0] += 1;
+                }
+                replica_devices.push(group);
+            }
+            for group in &replica_devices {
+                for &d in group {
+                    load.entry(d).or_default().push(s.name.clone());
+                }
             }
             assignments.push(StageAssignment {
                 stage: s.name.clone(),
                 kind: s.kind,
                 devices,
+                replicas: s.replicas,
+                replica_devices,
                 policy,
                 max_batch: s.max_batch,
                 max_batch_tokens: s.sched.max_batch_tokens,
@@ -217,6 +260,52 @@ mod tests {
         let mut p = presets::qwen25_omni();
         p.stages[2].sched.policy = SchedPolicyKind::Continuous;
         assert!(StageAllocator::new(&p).plan(None).is_err());
+    }
+
+    #[test]
+    fn single_replica_assignments_are_unchanged() {
+        let plan = StageAllocator::new(&presets::qwen3_omni()).plan(None).unwrap();
+        for a in plan.assignments() {
+            assert_eq!(a.replicas, 1);
+            assert_eq!(a.replica_devices.len(), 1);
+            assert_eq!(a.replica_devices[0], a.devices);
+        }
+    }
+
+    #[test]
+    fn replicas_pack_onto_least_loaded_devices() {
+        // qwen3-omni baseline load: dev0 {thinker.tp0, vocoder}, dev1
+        // {thinker.tp1, talker}.  A second talker replica must land on the
+        // less-loaded... both are at 2, so the tie breaks to device 0 —
+        // NOT stack on the talker's own device 1.
+        let mut p = presets::qwen3_omni();
+        p.stages.iter_mut().find(|s| s.name == "talker").unwrap().replicas = 2;
+        let plan = StageAllocator::new(&p).plan(None).unwrap();
+        let talker = plan.by_name("talker").unwrap();
+        assert_eq!(talker.replicas, 2);
+        assert_eq!(talker.replica_devices[0], vec![DeviceId(1)], "replica 0 honors config");
+        assert_eq!(talker.replica_devices[1], vec![DeviceId(0)], "replica 1 spreads");
+        // The load map sees both replicas.
+        assert!(plan.stages_on(DeviceId(0)).contains(&"talker".to_string()));
+        assert!(plan.stages_on(DeviceId(1)).contains(&"talker".to_string()));
+    }
+
+    #[test]
+    fn tp_replicas_keep_their_degree() {
+        // A TP-2 stage replicated 3x on a 4-device pool: every replica
+        // group has 2 distinct devices.
+        let mut p = presets::qwen3_omni();
+        p.n_devices = 4;
+        p.stages[0].replicas = 3; // thinker on {0,1}
+        let plan = StageAllocator::new(&p).plan(None).unwrap();
+        let thinker = plan.by_name("thinker").unwrap();
+        assert_eq!(thinker.replica_devices.len(), 3);
+        for group in &thinker.replica_devices {
+            assert_eq!(group.len(), 2);
+            assert_ne!(group[0], group[1]);
+        }
+        // First packed replica prefers the empty devices {2,3}.
+        assert_eq!(thinker.replica_devices[1], vec![DeviceId(2), DeviceId(3)]);
     }
 
     #[test]

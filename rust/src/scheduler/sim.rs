@@ -209,6 +209,90 @@ pub fn simulate(
     }
 }
 
+/// How the routed edge layer assigns requests to a replicated stage's
+/// engines in the sim (mirrors [`crate::config::RoutingKind`] at the
+/// request granularity — in the real pipeline per-request stickiness is
+/// what the affinity policy guarantees, and round-robin/least-depth
+/// route single-item requests identically).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimRouting {
+    /// Arrival-order rotation across replicas.
+    RoundRobin,
+    /// Greedy work balance: each request goes to the replica with the
+    /// least total token-work assigned so far (the sim's stand-in for
+    /// live queue-depth feedback).
+    LeastWork,
+    /// `req_id % replicas` — the router's affinity hash.
+    Affinity,
+}
+
+impl SimRouting {
+    pub fn name(self) -> &'static str {
+        match self {
+            SimRouting::RoundRobin => "round-robin",
+            SimRouting::LeastWork => "least-work",
+            SimRouting::Affinity => "affinity",
+        }
+    }
+}
+
+/// Serve `reqs` through a stage replicated across `policies.len()`
+/// engines (paper §3.3 flexible GPU allocation): the routing policy
+/// partitions requests across replicas at arrival, each replica runs the
+/// standard single-engine simulation on its share, and the reports merge.
+/// With one replica this is exactly [`simulate`].
+pub fn simulate_replicated(
+    policies: &mut [Box<dyn BatchPolicy>],
+    max_batch: usize,
+    cost: &SimCost,
+    reqs: &[SimRequest],
+    routing: SimRouting,
+) -> SimReport {
+    let n = policies.len();
+    assert!(n >= 1, "need at least one replica");
+    // Route at arrival, deterministically.
+    let mut order: Vec<&SimRequest> = reqs.iter().collect();
+    order.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s).then(a.id.cmp(&b.id)));
+    let mut parts: Vec<Vec<SimRequest>> = (0..n).map(|_| vec![]).collect();
+    let mut assigned_work = vec![0usize; n];
+    for (k, r) in order.iter().enumerate() {
+        let i = match routing {
+            SimRouting::RoundRobin => k % n,
+            SimRouting::Affinity => (r.id % n as u64) as usize,
+            SimRouting::LeastWork => (0..n)
+                .min_by_key(|&i| (assigned_work[i], i))
+                .expect("n >= 1"),
+        };
+        assigned_work[i] += r.prefill_tokens + r.decode_tokens;
+        parts[i].push((*r).clone());
+    }
+    // Each replica is an independent engine over its share.
+    let mut jct = Samples::new();
+    let mut iterations = 0u64;
+    let mut makespan = 0.0f64;
+    let mut occupancy = 0.0f64;
+    let mut base_policy = String::new();
+    for (policy, part) in policies.iter_mut().zip(&parts) {
+        let rep = simulate(policy.as_mut(), max_batch, cost, part);
+        jct.extend(&rep.jct);
+        occupancy += rep.mean_batch * rep.iterations as f64;
+        iterations += rep.iterations;
+        makespan = makespan.max(rep.makespan_s);
+        base_policy = rep.policy;
+    }
+    SimReport {
+        policy: if n == 1 {
+            base_policy
+        } else {
+            format!("{base_policy} x{n} ({})", routing.name())
+        },
+        jct,
+        iterations,
+        makespan_s: makespan,
+        mean_batch: if iterations > 0 { occupancy / iterations as f64 } else { 0.0 },
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -275,6 +359,83 @@ mod tests {
         let wl = datasets::ucf101(9, 12, 2.0);
         let a = run(&mut ContinuousBatchingPolicy { max_batch_tokens: 0 }, &wl);
         let b = run(&mut ContinuousBatchingPolicy { max_batch_tokens: 0 }, &wl);
+        assert_eq!(a.makespan_s, b.makespan_s);
+        assert_eq!(a.iterations, b.iterations);
+    }
+
+    fn continuous_replicas(n: usize) -> Vec<Box<dyn BatchPolicy>> {
+        (0..n)
+            .map(|_| Box::new(ContinuousBatchingPolicy { max_batch_tokens: 0 }) as Box<dyn BatchPolicy>)
+            .collect()
+    }
+
+    #[test]
+    fn replicated_stage_completes_everything_under_every_routing() {
+        let wl = datasets::seedtts(11, 24, 0.0);
+        let reqs = from_workload(&wl);
+        for routing in [SimRouting::RoundRobin, SimRouting::LeastWork, SimRouting::Affinity] {
+            let mut ps = continuous_replicas(2);
+            let rep = simulate_replicated(&mut ps, 4, &SimCost::default(), &reqs, routing);
+            assert_eq!(rep.jct.len(), wl.len(), "routing {routing:?}");
+            assert!(rep.makespan_s > 0.0);
+        }
+    }
+
+    #[test]
+    fn two_replicas_beat_one_on_mean_jct() {
+        // The acceptance claim behind `benches/sched_batching.rs`: adding
+        // a second engine replica to the hot stage cuts mean JCT on the
+        // same trace.
+        let wl = datasets::librispeech(13, 32, 0.0);
+        let reqs = from_workload(&wl);
+        let one = simulate(
+            &mut ContinuousBatchingPolicy { max_batch_tokens: 0 },
+            4,
+            &SimCost::default(),
+            &reqs,
+        );
+        for routing in [SimRouting::RoundRobin, SimRouting::LeastWork, SimRouting::Affinity] {
+            let mut ps = continuous_replicas(2);
+            let two = simulate_replicated(&mut ps, 4, &SimCost::default(), &reqs, routing);
+            assert_eq!(two.jct.len(), one.jct.len());
+            assert!(
+                two.mean_jct() < one.mean_jct(),
+                "{routing:?}: x2 {:.3}s !< x1 {:.3}s",
+                two.mean_jct(),
+                one.mean_jct()
+            );
+        }
+    }
+
+    #[test]
+    fn single_replica_routed_run_matches_the_plain_simulation() {
+        // replicas == 1 must be byte-for-byte the unrouted behaviour.
+        let wl = datasets::seedtts(5, 16, 4.0);
+        let reqs = from_workload(&wl);
+        let plain = simulate(
+            &mut ContinuousBatchingPolicy { max_batch_tokens: 0 },
+            4,
+            &SimCost::default(),
+            &reqs,
+        );
+        let mut ps = continuous_replicas(1);
+        let routed =
+            simulate_replicated(&mut ps, 4, &SimCost::default(), &reqs, SimRouting::Affinity);
+        assert_eq!(plain.policy, routed.policy);
+        assert_eq!(plain.iterations, routed.iterations);
+        assert_eq!(plain.makespan_s, routed.makespan_s);
+        assert_eq!(plain.jct.len(), routed.jct.len());
+        assert_eq!(plain.jct.mean(), routed.jct.mean());
+    }
+
+    #[test]
+    fn replicated_simulation_is_deterministic() {
+        let wl = datasets::ucf101(17, 18, 2.0);
+        let reqs = from_workload(&wl);
+        let mut a_ps = continuous_replicas(3);
+        let mut b_ps = continuous_replicas(3);
+        let a = simulate_replicated(&mut a_ps, 4, &SimCost::default(), &reqs, SimRouting::LeastWork);
+        let b = simulate_replicated(&mut b_ps, 4, &SimCost::default(), &reqs, SimRouting::LeastWork);
         assert_eq!(a.makespan_s, b.makespan_s);
         assert_eq!(a.iterations, b.iterations);
     }

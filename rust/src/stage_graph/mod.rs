@@ -38,6 +38,31 @@ impl StageGraph {
             if !registry.contains(&e.transfer) {
                 bail!("edge {}->{}: unknown transfer `{}`", e.from, e.to, e.transfer);
             }
+            // Per-item routing splits a request's item stream across the
+            // consumer's replicas.  That corrupts any transfer holding
+            // per-request state (chunk accumulators, conditioning
+            // streams — every built-in does), so it is only allowed for
+            // transfers registered stateless.  (config::validate already
+            // rejects the AR-consumer case without needing the registry.)
+            let to = config.stage(&e.to).unwrap();
+            if to.replicas > 1
+                && matches!(
+                    e.routing,
+                    crate::config::RoutingKind::RoundRobin | crate::config::RoutingKind::LeastDepth
+                )
+                && !registry.is_stateless(&e.transfer)
+            {
+                bail!(
+                    "edge {}->{}: transfer `{}` keeps per-request state but consumer \
+                     `{}` has {} replicas — use `affinity` routing (or register the \
+                     transfer with register_stateless)",
+                    e.from,
+                    e.to,
+                    e.transfer,
+                    e.to,
+                    to.replicas
+                );
+            }
         }
 
         // Kahn topo sort.
@@ -108,20 +133,27 @@ impl StageGraph {
         self.config.edges.iter().filter(|e| &e.from == name).collect()
     }
 
-    /// Device-memory admission: reserve weights for every stage on its
-    /// configured devices (TP splits across the group).
+    /// Device-memory admission: reserve weights for every engine replica
+    /// of every stage on the device groups the allocation plan packed
+    /// (TP splits across each group).  Replication multiplies the weight
+    /// footprint — each replica holds a full copy — so an over-replicated
+    /// pipeline fails here, at construction time.
     pub fn reserve_memory(
         &self,
         pool: &crate::device::DevicePool,
         artifacts: &crate::runtime::Artifacts,
+        plan: &crate::scheduler::AllocationPlan,
     ) -> Result<Vec<crate::device::Reservation>> {
         let mut all = Vec::new();
-        for s in &self.config.stages {
+        for (i, s) in self.config.stages.iter().enumerate() {
             let model = artifacts.model(&s.model)?;
-            let devices: Vec<crate::device::DeviceId> =
-                s.devices.iter().map(|&d| crate::device::DeviceId(d)).collect();
-            let rs = pool.reserve_tp(&devices, model.weight_bytes(), &s.name)?;
-            all.extend(rs);
+            let a = plan.assignment(i);
+            for (r, group) in a.replica_devices.iter().enumerate() {
+                let label =
+                    if r == 0 { s.name.clone() } else { format!("{}#r{r}", s.name) };
+                let rs = pool.reserve_tp(group, model.weight_bytes(), &label)?;
+                all.extend(rs);
+            }
         }
         Ok(all)
     }
@@ -163,6 +195,7 @@ mod tests {
             to: "thinker".into(),
             transfer: "thinker2talker".into(),
             connector: crate::config::ConnectorKind::Inline,
+            routing: crate::config::RoutingKind::Auto,
         });
         assert!(StageGraph::build(p, &reg()).is_err());
     }
@@ -172,6 +205,53 @@ mod tests {
         let mut p = presets::qwen3_omni();
         p.edges[0].transfer = "nope".into();
         assert!(StageGraph::build(p, &reg()).is_err());
+    }
+
+    #[test]
+    fn rejects_per_item_routing_into_replicated_ar_stage() {
+        // Stateful (AR) consumers with replicas need affinity routing so
+        // KV/sequence state stays on one replica; graph build rejects
+        // explicit per-item policies.
+        let mut p = presets::qwen3_omni();
+        p.stages.iter_mut().find(|s| s.name == "talker").unwrap().replicas = 2;
+        p.edges[0].routing = crate::config::RoutingKind::LeastDepth;
+        assert!(StageGraph::build(p.clone(), &reg()).is_err());
+        p.edges[0].routing = crate::config::RoutingKind::Affinity;
+        assert!(StageGraph::build(p, &reg()).is_ok());
+    }
+
+    #[test]
+    fn rejects_per_item_routing_through_stateful_transfers() {
+        // Not just AR: talker2vocoder accumulates a request's codec
+        // tokens consumer-side, so a replicated VOCODER behind per-item
+        // routing would scramble chunk boundaries.  The registry knows
+        // every built-in is stateful; graph build rejects the combo.
+        let mut p = presets::qwen3_omni();
+        p.stages.iter_mut().find(|s| s.name == "vocoder").unwrap().replicas = 2;
+        p.edges[1].routing = crate::config::RoutingKind::RoundRobin;
+        let err = StageGraph::build(p.clone(), &reg()).unwrap_err();
+        assert!(format!("{err:#}").contains("per-request state"), "{err:#}");
+        // Affinity (or Auto, which resolves to it) is accepted.
+        p.edges[1].routing = crate::config::RoutingKind::Auto;
+        assert!(StageGraph::build(p, &reg()).is_ok());
+    }
+
+    #[test]
+    fn stateless_transfers_allow_per_item_routing() {
+        use transfers::{Transfer, TransferCtx};
+        let mut r = reg();
+        r.register_stateless(
+            "item_independent",
+            std::sync::Arc::new(|_ctx: TransferCtx| -> Transfer { Box::new(|_item| Ok(vec![])) }),
+        );
+        assert!(r.is_stateless("item_independent"));
+        assert!(!r.is_stateless("talker2vocoder"));
+        assert!(!r.is_stateless("no_such_transfer"));
+        let mut p = presets::qwen3_omni();
+        p.stages.iter_mut().find(|s| s.name == "vocoder").unwrap().replicas = 2;
+        p.edges[1].transfer = "item_independent".into();
+        p.edges[1].routing = crate::config::RoutingKind::LeastDepth;
+        assert!(StageGraph::build(p, &r).is_ok());
     }
 
     #[test]
@@ -189,14 +269,38 @@ mod tests {
         }
         let artifacts = crate::runtime::Artifacts::load(&art_dir).unwrap();
         let g = StageGraph::build(presets::qwen3_omni(), &reg()).unwrap();
+        let plan =
+            crate::scheduler::StageAllocator::new(&g.config).plan(None).unwrap();
         let pool = crate::device::DevicePool::testbed();
-        let rs = g.reserve_memory(&pool, &artifacts).unwrap();
+        let rs = g.reserve_memory(&pool, &artifacts, &plan).unwrap();
         assert!(!rs.is_empty());
         // Thinker TP2: both devices charged.
         assert!(pool.used(crate::device::DeviceId(0)) > 0);
         assert!(pool.used(crate::device::DeviceId(1)) > 0);
         // A pool that is far too small must reject the pipeline.
         let tiny = crate::device::DevicePool::new(2, 1024);
-        assert!(g.reserve_memory(&tiny, &artifacts).is_err());
+        assert!(g.reserve_memory(&tiny, &artifacts, &plan).is_err());
+    }
+
+    #[test]
+    fn replicas_multiply_the_weight_footprint() {
+        let art_dir = crate::runtime::Artifacts::default_dir();
+        if !art_dir.join("manifest.json").exists() {
+            return;
+        }
+        let artifacts = crate::runtime::Artifacts::load(&art_dir).unwrap();
+        let reserved_total = |cfg: crate::config::PipelineConfig| {
+            let g = StageGraph::build(cfg, &reg()).unwrap();
+            let plan =
+                crate::scheduler::StageAllocator::new(&g.config).plan(None).unwrap();
+            // Oversized pool so admission itself cannot fail here.
+            let pool = crate::device::DevicePool::new(2, usize::MAX / 4);
+            let rs = g.reserve_memory(&pool, &artifacts, &plan).unwrap();
+            rs.iter().map(|r| r.bytes).sum::<usize>()
+        };
+        let base = reserved_total(presets::qwen3_omni());
+        let rep = reserved_total(presets::qwen3_omni_replicated());
+        let talker_bytes = artifacts.model("talker3").unwrap().weight_bytes();
+        assert_eq!(rep, base + talker_bytes, "second talker replica = one more weight copy");
     }
 }

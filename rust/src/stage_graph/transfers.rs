@@ -63,10 +63,20 @@ pub type Transfer = Box<dyn FnMut(&StageItem) -> Result<Vec<EngineCmd>> + Send>;
 /// Factory: instantiate a transfer for one edge.
 pub type TransferFactory = Arc<dyn Fn(TransferCtx) -> Transfer + Send + Sync>;
 
+struct RegistryEntry {
+    factory: TransferFactory,
+    /// Whether an instance keeps NO per-request state across items, so
+    /// items of one request may be split across consumer replicas (the
+    /// router's per-item routing policies).  Every built-in accumulates
+    /// per-request state, so they all register stateful; custom
+    /// transfers opt in via [`Registry::register_stateless`].
+    stateless: bool,
+}
+
 /// Named transfer registry.
 #[derive(Clone)]
 pub struct Registry {
-    map: HashMap<String, TransferFactory>,
+    map: HashMap<String, Arc<RegistryEntry>>,
 }
 
 impl Registry {
@@ -74,7 +84,10 @@ impl Registry {
         Self { map: HashMap::new() }
     }
 
-    /// The built-in transfers used by the model-zoo presets.
+    /// The built-in transfers used by the model-zoo presets.  All of
+    /// them accumulate per-request state consumer-side (chunk buffers,
+    /// conditioning streams, first-item submits), so all are stateful:
+    /// replicated consumers behind them require affinity routing.
     pub fn builtin() -> Self {
         let mut r = Self::empty();
         r.register("thinker2talker", Arc::new(thinker2talker));
@@ -85,20 +98,41 @@ impl Registry {
         r
     }
 
+    /// Register a transfer that keeps per-request state (the safe
+    /// default): per-item routing into a replicated consumer is rejected
+    /// at graph build for edges using it.
     pub fn register(&mut self, name: &str, f: TransferFactory) {
-        self.map.insert(name.to_string(), f);
+        self.map.insert(
+            name.to_string(),
+            Arc::new(RegistryEntry { factory: f, stateless: false }),
+        );
+    }
+
+    /// Register a transfer that treats every item independently, making
+    /// per-item routing (`round_robin` / `least_depth`) into a
+    /// replicated consumer safe for its edges.
+    pub fn register_stateless(&mut self, name: &str, f: TransferFactory) {
+        self.map.insert(
+            name.to_string(),
+            Arc::new(RegistryEntry { factory: f, stateless: true }),
+        );
     }
 
     pub fn contains(&self, name: &str) -> bool {
         self.map.contains_key(name)
     }
 
+    /// Whether `name` is registered as stateless (unknown names are NOT).
+    pub fn is_stateless(&self, name: &str) -> bool {
+        self.map.get(name).map(|e| e.stateless).unwrap_or(false)
+    }
+
     pub fn instantiate(&self, name: &str, ctx: TransferCtx) -> Result<Transfer> {
-        let f = self
+        let e = self
             .map
             .get(name)
             .ok_or_else(|| anyhow::anyhow!("unknown transfer `{name}`"))?;
-        Ok(f(ctx))
+        Ok((e.factory)(ctx))
     }
 }
 

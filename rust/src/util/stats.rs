@@ -20,6 +20,13 @@ impl Samples {
         self.sorted = false;
     }
 
+    /// Merge another collection's samples into this one (replica
+    /// rollups; order is not meaningful for any statistic here).
+    pub fn extend(&mut self, other: &Samples) {
+        self.xs.extend_from_slice(&other.xs);
+        self.sorted = false;
+    }
+
     pub fn len(&self) -> usize {
         self.xs.len()
     }

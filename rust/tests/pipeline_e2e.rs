@@ -98,6 +98,47 @@ fn mimo_pipeline_all_connector_kinds() {
 }
 
 #[test]
+fn replicated_talker_pipeline_matches_single_replica_output() {
+    // qwen3-omni-rep2 runs the Talker as TWO engine replicas behind the
+    // routed connector layer (affinity on the thinker→talker edge, fan-in
+    // on talker→vocoder).  Replication must change WHEN work runs, never
+    // WHAT is produced: token volumes match the single-replica pipeline.
+    let Some(art) = artifacts() else { return };
+    let wl = datasets::librispeech(9, 4, 0.0);
+    let run = |cfg: omni_serve::config::PipelineConfig| {
+        let orch = Orchestrator::new(
+            cfg,
+            Arc::clone(&art),
+            Registry::builtin(),
+            RunOptions::default(),
+        )
+        .unwrap();
+        orch.run_workload(&wl, Some("talker")).unwrap()
+    };
+    let base = run(presets::qwen3_omni());
+    let rep = run(presets::qwen3_omni_replicated());
+    assert_eq!(rep.report.completed, 4);
+    assert_eq!(
+        base.report.stage_tokens("thinker"),
+        rep.report.stage_tokens("thinker")
+    );
+    assert_eq!(
+        base.report.stage_tokens("talker"),
+        rep.report.stage_tokens("talker")
+    );
+    // Both talker replicas produced a summary; the rollup covers the
+    // whole stage's admissions.
+    assert_eq!(rep.stage_replicas("talker").len(), 2);
+    let rollup = rep.stage_rollup("talker").unwrap();
+    let per_replica: u64 = rep
+        .stage_replicas("talker")
+        .iter()
+        .map(|s| s.sched.as_ref().map(|sc| sc.admitted).unwrap_or(0))
+        .sum();
+    assert_eq!(rollup.sched.unwrap().admitted, per_replica);
+}
+
+#[test]
 fn bagel_pipeline_generates_images() {
     let Some(art) = artifacts() else { return };
     let wl = datasets::vbench(4, 2, 0.0, 8, false);

@@ -197,6 +197,7 @@ fn edge(from: &str, to: &str, transfer: &str) -> EdgeConfig {
         to: to.into(),
         transfer: transfer.into(),
         connector: omni_serve::config::ConnectorKind::Inline,
+        routing: omni_serve::config::RoutingKind::Auto,
     }
 }
 
@@ -235,6 +236,88 @@ fn stage_graph_accepts_custom_transfer_after_registration() {
     let mut p: PipelineConfig = presets::qwen3_omni();
     p.edges[0].transfer = "custom".into();
     assert!(StageGraph::build(p, &reg).is_ok());
+}
+
+// ---------------------------------------------------------------------------
+// Stage replication: allocator packing, routing validation, and the
+// replicated sim model end-to-end (paper §3.3 flexible GPU allocation).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn allocator_packs_replicas_and_keeps_single_replica_plans_identical() {
+    let base = StageAllocator::new(&presets::qwen3_omni()).plan(None).unwrap();
+    for a in base.assignments() {
+        assert_eq!(a.replicas, 1);
+        assert_eq!(a.replica_devices, vec![a.devices.clone()]);
+    }
+    let rep = StageAllocator::new(&presets::qwen3_omni_replicated()).plan(None).unwrap();
+    let talker = rep.by_name("talker").unwrap();
+    assert_eq!(talker.replicas, 2);
+    assert_eq!(talker.replica_devices.len(), 2);
+    // Replica 0 keeps the configured placement; replica 1 is packed onto
+    // another device rather than stacked.
+    assert_eq!(talker.replica_devices[0], talker.devices);
+    assert_ne!(talker.replica_devices[1], talker.replica_devices[0]);
+}
+
+#[test]
+fn replicated_ar_stage_demands_affinity_routing_at_graph_build() {
+    let mut p = presets::qwen3_omni_replicated();
+    p.edges[0].routing = omni_serve::config::RoutingKind::RoundRobin;
+    let err = StageGraph::build(p, &Registry::builtin()).unwrap_err();
+    assert!(format!("{err:#}").contains("affinity"), "{err:#}");
+}
+
+#[test]
+fn replicated_sim_reproduces_the_flexible_allocation_win() {
+    use omni_serve::scheduler::sim::{simulate_replicated, SimRouting};
+    // End-to-end on the sim model: the bundled preset's talker stage at
+    // replicas=2 (qwen3-omni-rep2) beats replicas=1 (qwen3-omni) on mean
+    // JCT over a bundled trace — the bench's acceptance property.
+    let plan = StageAllocator::new(&presets::qwen3_omni_replicated()).plan(None).unwrap();
+    let talker = plan.by_name("talker").unwrap();
+    let wl = datasets::seedtts(21, 32, 0.0);
+    let reqs = from_workload(&wl);
+    let mk = |n: usize| -> Vec<Box<dyn BatchPolicy>> {
+        (0..n)
+            .map(|_| {
+                Box::new(ContinuousBatchingPolicy { max_batch_tokens: talker.max_batch_tokens })
+                    as Box<dyn BatchPolicy>
+            })
+            .collect()
+    };
+    let one = simulate_replicated(
+        &mut mk(1),
+        talker.max_batch,
+        &SimCost::default(),
+        &reqs,
+        SimRouting::Affinity,
+    );
+    let two = simulate_replicated(
+        &mut mk(talker.replicas),
+        talker.max_batch,
+        &SimCost::default(),
+        &reqs,
+        SimRouting::Affinity,
+    );
+    assert_eq!(one.jct.len(), wl.len());
+    assert_eq!(two.jct.len(), wl.len());
+    assert!(
+        two.mean_jct() < one.mean_jct(),
+        "replicas=2 {:.3}s !< replicas=1 {:.3}s",
+        two.mean_jct(),
+        one.mean_jct()
+    );
+}
+
+#[test]
+fn replication_fields_survive_json_roundtrip() {
+    let p = presets::qwen3_omni_replicated();
+    let s = omni_serve::config::loader::to_json_string(&p);
+    let v = omni_serve::json::parse(&s).unwrap();
+    let q = omni_serve::config::loader::from_value(&v).unwrap();
+    assert_eq!(q.stage("talker").unwrap().replicas, 2);
+    assert_eq!(q.edges[0].routing, omni_serve::config::RoutingKind::Affinity);
 }
 
 #[test]
