@@ -54,6 +54,7 @@ fn main() -> anyhow::Result<()> {
         }],
         n_devices: 2,
         device_bytes: omni_serve::device::DEFAULT_DEVICE_BYTES,
+        autoscaler: None,
     };
 
     // 2. Register the custom transfer: keep every other token (a toy

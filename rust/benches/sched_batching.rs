@@ -12,16 +12,21 @@
 //!
 //! Output: mean/p50/p99 JCT, makespan, and batch occupancy per policy and
 //! trace, plus the JCT reduction of continuous batching over FIFO, a
-//! token-budget sweep showing the admission-control knob, and the stage-
+//! token-budget sweep showing the admission-control knob, the stage-
 //! replication comparison (paper §3.3 flexible GPU allocation): the
 //! qwen3-omni-rep2 preset's 2-replica Talker vs the single-replica
-//! baseline under every routing policy, asserted to win on mean JCT.
+//! baseline under every routing policy, asserted to win on mean JCT —
+//! and the elastic-autoscaler section: on the bursty mixed-modality
+//! trace the autoscaled two-stage run is asserted to beat EVERY static
+//! replica split with the same GPU budget on mean JCT, with at least one
+//! scale-up and one scale-down recorded.
 
 use omni_serve::bench_util::{self, Table};
 use omni_serve::config::presets;
 use omni_serve::scheduler::policy::{BatchPolicy, ContinuousBatchingPolicy, FifoPolicy};
 use omni_serve::scheduler::sim::{
-    from_workload, simulate, simulate_replicated, SimCost, SimReport, SimRouting,
+    elastic_comparison, from_workload, simulate, simulate_replicated, SimCost, SimReport,
+    SimRouting,
 };
 use omni_serve::scheduler::StageAllocator;
 use omni_serve::trace::Workload;
@@ -158,6 +163,61 @@ fn main() {
         rep2_beats_rep1,
         "talker replicas=2 must beat replicas=1 mean JCT on the bundled traces"
     );
+
+    // Elastic autoscaling (paper §3: flexible GPU allocation under LIVE
+    // traffic): on a bursty mixed-modality trace whose bottleneck stage
+    // flips mid-run (analysis burst = Thinker-bound, speech burst =
+    // Talker-bound), the autoscaled run must beat EVERY static replica
+    // split of the same GPU budget on mean JCT — no fixed split is right
+    // for both phases.  Asserted; also pinned by `tests/serving.rs`.
+    let budget = 4usize;
+    let wl = datasets::bursty_mixed(1, n.max(32), 2.0);
+    let mut t = Table::new(
+        "Elastic autoscaling vs static replica splits (two-stage AR model, bursty trace)",
+        &["allocation", "mean JCT", "p99", "makespan", "gpu-seconds", "scale events", "JCT reduction"],
+    );
+    let (static_reports, auto) = elastic_comparison(&wl, budget);
+    let best_static =
+        static_reports.iter().map(|r| r.mean_jct()).fold(f64::INFINITY, f64::min);
+    for rep in &static_reports {
+        let mut jct = rep.jct.clone();
+        t.row(vec![
+            rep.policy.clone(),
+            fmt::dur(rep.mean_jct()),
+            fmt::dur(jct.p99()),
+            fmt::dur(rep.makespan_s),
+            format!("{:.2}", rep.replica_seconds),
+            "-".into(),
+            "-".into(),
+        ]);
+    }
+    {
+        let mut jct = auto.jct.clone();
+        t.row(vec![
+            auto.policy.clone(),
+            fmt::dur(auto.mean_jct()),
+            fmt::dur(jct.p99()),
+            fmt::dur(auto.makespan_s),
+            format!("{:.2}", auto.replica_seconds),
+            format!("{} up / {} down", auto.scale_ups, auto.scale_downs),
+            bench_util::reduction_pct(best_static, auto.mean_jct()),
+        ]);
+    }
+    t.print();
+    for rep in &static_reports {
+        assert!(
+            auto.mean_jct() < rep.mean_jct(),
+            "autoscaled {:.3}s !< {} {:.3}s on {}",
+            auto.mean_jct(),
+            rep.policy,
+            rep.mean_jct(),
+            wl.name
+        );
+        assert_eq!(rep.jct.len(), wl.len());
+    }
+    assert_eq!(auto.jct.len(), wl.len());
+    assert!(auto.scale_ups >= 1 && auto.scale_downs >= 1, "bursty trace must trigger both directions");
+    assert!(auto.max_slots <= budget, "autoscaler exceeded its GPU budget");
 
     // Headline check (also pinned by `tests/scheduler.rs`): continuous
     // batching must beat FIFO mean JCT on the bundled AR traces.

@@ -14,8 +14,16 @@ pub struct Args {
 }
 
 /// Flags that never take a value (`--flag value` ambiguity resolution).
-pub const BOOL_FLAGS: &[&str] =
-    &["verbose", "baseline", "no-streaming", "lazy-compile", "list", "help", "quiet"];
+pub const BOOL_FLAGS: &[&str] = &[
+    "verbose",
+    "baseline",
+    "no-streaming",
+    "lazy-compile",
+    "list",
+    "help",
+    "quiet",
+    "autoscale",
+];
 
 impl Args {
     /// Parse from an iterator of argument strings (sans argv[0]).
@@ -107,6 +115,17 @@ mod tests {
         assert_eq!(a.flag_f64("rate", 0.0).unwrap(), 2.5);
         assert_eq!(a.flag_usize("missing", 7).unwrap(), 7);
         assert!(parse("run --n abc").flag_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn autoscale_is_a_bool_flag() {
+        // `--autoscale` must not swallow a following positional/value.
+        let a = parse("serve --autoscale --gpu-budget 4");
+        assert!(a.flag_bool("autoscale"));
+        assert_eq!(a.flag_usize("gpu-budget", 0).unwrap(), 4);
+        let b = parse("serve --autoscale 8090");
+        assert!(b.flag_bool("autoscale"));
+        assert_eq!(b.positional, vec!["8090"]);
     }
 
     #[test]

@@ -6,8 +6,8 @@ use std::path::Path;
 use anyhow::{Context, Result};
 
 use super::{
-    ConnectorKind, DiffusionParams, EdgeConfig, PipelineConfig, RoutingKind, SchedParams,
-    SchedPolicyKind, StageConfig, StageKind,
+    AutoscalerConfig, ConnectorKind, DiffusionParams, EdgeConfig, PipelineConfig, RoutingKind,
+    SchedParams, SchedPolicyKind, StageConfig, StageKind,
 };
 use crate::jobj;
 use crate::json::{self, Value};
@@ -83,6 +83,24 @@ pub fn from_value(v: &Value) -> Result<PipelineConfig> {
             });
         }
     }
+    let av = v.get("autoscaler");
+    let autoscaler = if av.is_null() {
+        None
+    } else {
+        // A typo like `"autoscaler": true` must not silently enable the
+        // control plane with defaults the user never chose.
+        anyhow::ensure!(av.as_obj().is_some(), "`autoscaler` must be an object");
+        let d = AutoscalerConfig::default();
+        Some(AutoscalerConfig {
+            min_replicas: av.get("min_replicas").as_usize().unwrap_or(d.min_replicas),
+            max_replicas: av.get("max_replicas").as_usize().unwrap_or(d.max_replicas),
+            gpu_budget: av.get("gpu_budget").as_usize().unwrap_or(d.gpu_budget),
+            scale_up_queue: av.get("scale_up_queue").as_f64().unwrap_or(d.scale_up_queue),
+            scale_down_queue: av.get("scale_down_queue").as_f64().unwrap_or(d.scale_down_queue),
+            interval_s: av.get("interval_s").as_f64().unwrap_or(d.interval_s),
+            cooldown_s: av.get("cooldown_s").as_f64().unwrap_or(d.cooldown_s),
+        })
+    };
     let cfg = PipelineConfig {
         name: v.req_str("name")?.to_string(),
         stages,
@@ -92,6 +110,7 @@ pub fn from_value(v: &Value) -> Result<PipelineConfig> {
             .get("device_bytes")
             .as_usize()
             .unwrap_or(crate::device::DEFAULT_DEVICE_BYTES),
+        autoscaler,
     };
     cfg.validate()?;
     Ok(cfg)
@@ -140,13 +159,30 @@ pub fn to_value(p: &PipelineConfig) -> Value {
             }
         })
         .collect();
-    jobj! {
+    let mut out = jobj! {
         "name" => p.name.clone(),
         "stages" => Value::Arr(stages),
         "edges" => Value::Arr(edges),
         "n_devices" => p.n_devices,
         "device_bytes" => p.device_bytes,
+    };
+    if let Some(a) = &p.autoscaler {
+        if let Value::Obj(m) = &mut out {
+            m.insert(
+                "autoscaler".to_string(),
+                jobj! {
+                    "min_replicas" => a.min_replicas,
+                    "max_replicas" => a.max_replicas,
+                    "gpu_budget" => a.gpu_budget,
+                    "scale_up_queue" => a.scale_up_queue,
+                    "scale_down_queue" => a.scale_down_queue,
+                    "interval_s" => a.interval_s,
+                    "cooldown_s" => a.cooldown_s,
+                },
+            );
+        }
     }
+    out
 }
 
 pub fn to_json_string(p: &PipelineConfig) -> String {
@@ -240,6 +276,48 @@ mod tests {
         )
         .unwrap();
         assert!(from_value(&bad).is_err());
+    }
+
+    #[test]
+    fn autoscaler_block_roundtrips_and_defaults() {
+        let mut p = presets::qwen3_omni_replicated();
+        p.autoscaler = Some(AutoscalerConfig {
+            max_replicas: 3,
+            gpu_budget: 4,
+            ..Default::default()
+        });
+        let s = to_json_string(&p);
+        let q = from_value(&json::parse(&s).unwrap()).unwrap();
+        assert_eq!(q.autoscaler, p.autoscaler);
+        // Partial block: unspecified fields take the defaults.
+        let v = json::parse(
+            r#"{"name": "x", "n_devices": 1, "stages": [
+                {"name": "a", "model": "mimo", "kind": "ar", "devices": [0]}
+            ], "autoscaler": {"gpu_budget": 2}}"#,
+        )
+        .unwrap();
+        let q = from_value(&v).unwrap();
+        let a = q.autoscaler.unwrap();
+        assert_eq!(a.gpu_budget, 2);
+        assert_eq!(a.min_replicas, AutoscalerConfig::default().min_replicas);
+        // No block at all: None (static replication).
+        assert!(presets::qwen3_omni().autoscaler.is_none());
+        // Invalid block rejected at load time.
+        let bad = json::parse(
+            r#"{"name": "x", "n_devices": 1, "stages": [
+                {"name": "a", "model": "mimo", "kind": "ar", "devices": [0]}
+            ], "autoscaler": {"min_replicas": 0}}"#,
+        )
+        .unwrap();
+        assert!(from_value(&bad).is_err());
+        // A non-object value is a config mistake, not "all defaults".
+        let typo = json::parse(
+            r#"{"name": "x", "n_devices": 1, "stages": [
+                {"name": "a", "model": "mimo", "kind": "ar", "devices": [0]}
+            ], "autoscaler": true}"#,
+        )
+        .unwrap();
+        assert!(from_value(&typo).is_err());
     }
 
     #[test]

@@ -347,6 +347,67 @@ impl ConnectorKind {
     }
 }
 
+/// Elastic autoscaler settings (paper §3 "flexible GPU allocation" under
+/// live traffic — see [`crate::serving`]).  The autoscaler samples every
+/// stage replica's published scheduler load and moves replicas toward the
+/// bottleneck stage within a global GPU budget.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AutoscalerConfig {
+    /// Per-stage replica floor (never drain below this).
+    pub min_replicas: usize,
+    /// Per-stage replica ceiling.
+    pub max_replicas: usize,
+    /// Global budget in device *slots* (Σ over replicas of their TP
+    /// degree).  0 = no slot cap; device-memory admission still applies.
+    pub gpu_budget: usize,
+    /// Scale a stage up when its mean pending-queue depth per live
+    /// replica reaches this.
+    pub scale_up_queue: f64,
+    /// Scale a stage down when its mean pending-queue depth per live
+    /// replica is below this AND a replica sits idle.
+    pub scale_down_queue: f64,
+    /// Control-loop sampling interval.
+    pub interval_s: f64,
+    /// Minimum seconds between two scale decisions for the same stage.
+    pub cooldown_s: f64,
+}
+
+impl Default for AutoscalerConfig {
+    fn default() -> Self {
+        Self {
+            min_replicas: 1,
+            max_replicas: 4,
+            gpu_budget: 0,
+            scale_up_queue: 2.0,
+            scale_down_queue: 0.25,
+            interval_s: 0.05,
+            cooldown_s: 0.25,
+        }
+    }
+}
+
+impl AutoscalerConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.min_replicas == 0 {
+            bail!("autoscaler min_replicas must be >= 1");
+        }
+        if self.max_replicas < self.min_replicas {
+            bail!(
+                "autoscaler max_replicas ({}) < min_replicas ({})",
+                self.max_replicas,
+                self.min_replicas
+            );
+        }
+        if self.interval_s <= 0.0 {
+            bail!("autoscaler interval_s must be > 0");
+        }
+        if self.scale_down_queue > self.scale_up_queue {
+            bail!("autoscaler scale_down_queue must not exceed scale_up_queue");
+        }
+        Ok(())
+    }
+}
+
 /// An edge of the stage graph: a named transfer function plus transport.
 #[derive(Debug, Clone)]
 pub struct EdgeConfig {
@@ -370,6 +431,9 @@ pub struct PipelineConfig {
     /// Simulated accelerator pool.
     pub n_devices: usize,
     pub device_bytes: usize,
+    /// Elastic autoscaler settings; `None` = static replica counts (the
+    /// pre-serving-runtime behaviour, and the default for every preset).
+    pub autoscaler: Option<AutoscalerConfig>,
 }
 
 impl PipelineConfig {
@@ -405,6 +469,9 @@ impl PipelineConfig {
             if !(0.0..=1.0).contains(&s.kv_memory_frac) {
                 bail!("stage `{}` kv_memory_frac out of [0,1]", s.name);
             }
+        }
+        if let Some(a) = &self.autoscaler {
+            a.validate()?;
         }
         for e in &self.edges {
             for end in [&e.from, &e.to] {
@@ -462,6 +529,7 @@ mod tests {
             }],
             n_devices: 2,
             device_bytes: 1 << 20,
+            autoscaler: None,
         }
     }
 
@@ -557,6 +625,26 @@ mod tests {
         p.validate().unwrap();
         p.edges[0].routing = RoutingKind::Auto;
         p.validate().unwrap();
+    }
+
+    #[test]
+    fn autoscaler_config_validates() {
+        let mut p = two_stage();
+        p.autoscaler = Some(AutoscalerConfig::default());
+        p.validate().unwrap();
+        p.autoscaler = Some(AutoscalerConfig { min_replicas: 0, ..Default::default() });
+        assert!(p.validate().is_err());
+        p.autoscaler =
+            Some(AutoscalerConfig { min_replicas: 3, max_replicas: 2, ..Default::default() });
+        assert!(p.validate().is_err());
+        p.autoscaler = Some(AutoscalerConfig { interval_s: 0.0, ..Default::default() });
+        assert!(p.validate().is_err());
+        p.autoscaler = Some(AutoscalerConfig {
+            scale_up_queue: 1.0,
+            scale_down_queue: 2.0,
+            ..Default::default()
+        });
+        assert!(p.validate().is_err());
     }
 
     #[test]

@@ -51,6 +51,7 @@ pub fn qwen25_omni() -> PipelineConfig {
         ],
         n_devices: 2,
         device_bytes: crate::device::DEFAULT_DEVICE_BYTES,
+        autoscaler: None,
     }
 }
 
@@ -78,6 +79,7 @@ pub fn qwen3_omni() -> PipelineConfig {
         ],
         n_devices: 2,
         device_bytes: crate::device::DEFAULT_DEVICE_BYTES,
+        autoscaler: None,
     }
 }
 
@@ -137,6 +139,7 @@ pub fn bagel(i2i: bool) -> PipelineConfig {
         edges: vec![edge("understand", "generate", "hidden2cond")],
         n_devices: 1,
         device_bytes: crate::device::DEFAULT_DEVICE_BYTES,
+        autoscaler: None,
     }
 }
 
@@ -157,6 +160,7 @@ pub fn mimo_audio(multi_step: usize) -> PipelineConfig {
         edges: vec![edge("backbone", "patch_dec", "tokens2patches")],
         n_devices: 1,
         device_bytes: crate::device::DEFAULT_DEVICE_BYTES,
+        autoscaler: None,
     }
 }
 
@@ -176,6 +180,7 @@ pub fn dit_single(model: &str, steps: usize, stepcache: f32) -> PipelineConfig {
         edges: vec![],
         n_devices: 1,
         device_bytes: crate::device::DEFAULT_DEVICE_BYTES,
+        autoscaler: None,
     }
 }
 

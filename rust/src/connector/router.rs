@@ -1,6 +1,7 @@
 //! Routed connector layer: 1→N fan-out and N→1 fan-in over the
 //! point-to-point connectors in [`super`] (paper §3.3 "flexible GPU
-//! allocation").
+//! allocation"), with **runtime-mutable endpoints** for the elastic
+//! autoscaler ([`crate::serving`]).
 //!
 //! When a stage runs `replicas > 1` engine threads, every edge touching
 //! it becomes a *routed* edge: each producer replica owns a [`RouterTx`]
@@ -19,18 +20,40 @@
 //!   *published* admission-queue depth (the stage thread exports its
 //!   [`crate::scheduler::StageScheduler`] queue length through
 //!   [`RouterRx::publish_queue_depth`] — the `SchedStats` feedback loop).
-//! * **affinity** — per-request stickiness via `req_id % replicas`:
-//!   deterministic across producer replicas and across edges, so a
+//! * **affinity** — per-request stickiness: the first item of a request
+//!   picks `req_id % live_replicas` and the assignment is recorded in a
+//!   sticky table shared by every producer replica of the edge, so a
 //!   request's streamed chunks, conditioning rows, and KV/sequence state
-//!   all live on one replica.  Required for replicated AR consumers
-//!   (validated at config load).
+//!   all live on one replica even while the replica set changes.  The
+//!   entry is dropped when the request's `finished` item passes, which is
+//!   also what lets a draining replica quiesce.  Required for replicated
+//!   AR consumers (validated at config load).
 //!
 //! With one consumer replica every policy degenerates to pass-through,
 //! which keeps single-replica pipelines behaviour-identical to the
 //! pre-router point-to-point design.
+//!
+//! # Dynamic endpoints ([`EdgeCtl`])
+//!
+//! The autoscaler scales a stage by mutating its edges at runtime through
+//! the edge's [`EdgeCtl`] handle:
+//!
+//! * [`EdgeCtl::add_consumer`] / [`EdgeCtl::add_producer`] — wire a new
+//!   replica into the edge (new point-to-point channels to/from every
+//!   existing peer replica).
+//! * [`EdgeCtl::drain_consumer`] — stop routing *new* requests to a
+//!   replica; items of requests already assigned to it (affinity) keep
+//!   flowing so in-flight state is never stranded.
+//! * [`EdgeCtl::consumer_quiesced`] — true once nothing is in flight to
+//!   the replica, its published admission queue is empty, and no sticky
+//!   request is still assigned to it (drain-before-retire).
+//! * [`EdgeCtl::remove_consumer`] / [`EdgeCtl::remove_producer`] — detach
+//!   the replica's channels (a removed consumer's senders drop, so its
+//!   receiver drains and reports closed).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
@@ -58,6 +81,29 @@ impl ReplicaLoad {
     }
 }
 
+/// Sticky request→endpoint assignments, shared by every producer replica
+/// of one affinity-routed edge.
+type StickyMap = Mutex<HashMap<u64, u64>>;
+
+/// One consumer-replica endpoint as a producer replica sees it.
+struct Endpoint {
+    /// Edge-unique consumer id (never reused across the edge's life).
+    uid: u64,
+    tx: ConnectorTx,
+    load: Arc<ReplicaLoad>,
+    /// Shared with the [`EdgeCtl`]: set when the consumer is draining.
+    draining: Arc<AtomicBool>,
+}
+
+/// The mutable interior of a [`RouterTx`], shared with the edge's
+/// [`EdgeCtl`] so endpoints can be added/removed at runtime.
+struct TxShared {
+    eps: Vec<Endpoint>,
+    /// Payload bytes of endpoints that were retired (their per-connector
+    /// counters would otherwise vanish with them).
+    retired_bytes: u64,
+}
+
 enum RouteState {
     RoundRobin { next: usize },
     LeastDepth,
@@ -68,31 +114,102 @@ enum RouteState {
 /// consumer replica, with the routing policy choosing the target per
 /// item.
 pub struct RouterTx {
-    targets: Vec<ConnectorTx>,
-    loads: Vec<Arc<ReplicaLoad>>,
+    shared: Arc<Mutex<TxShared>>,
     state: RouteState,
+    sticky: Arc<StickyMap>,
+}
+
+/// Index of the `k`-th non-draining endpoint (`k < n_live`); with no
+/// live endpoint (transient during a forced teardown) the full set is
+/// used so nothing is lost.  Allocation-free — this runs per item.
+fn nth_routable(eps: &[Endpoint], n_live: usize, k: usize) -> usize {
+    if n_live == 0 {
+        return k % eps.len();
+    }
+    let mut seen = 0usize;
+    for (i, e) in eps.iter().enumerate() {
+        if !e.draining.load(Ordering::Relaxed) {
+            if seen == k {
+                return i;
+            }
+            seen += 1;
+        }
+    }
+    unreachable!("k out of range of live endpoints")
 }
 
 impl RouterTx {
     /// Route `item` to one consumer replica.
     pub fn send(&mut self, item: StageItem) -> Result<()> {
-        let n = self.targets.len();
+        let mut guard = self.shared.lock().unwrap();
+        let sh = &mut *guard;
+        anyhow::ensure!(!sh.eps.is_empty(), "router edge has no consumer endpoints");
+        // New work only routes to non-draining endpoints.
+        let n_live =
+            sh.eps.iter().filter(|e| !e.draining.load(Ordering::Relaxed)).count();
+        let spread = if n_live == 0 { sh.eps.len() } else { n_live };
+        let mut finished_sticky: Option<u64> = None;
         let i = match &mut self.state {
             RouteState::RoundRobin { next } => {
-                let i = *next % n;
-                *next = (*next + 1) % n;
+                let k = *next % spread;
+                *next = (k + 1) % spread;
+                nth_routable(&sh.eps, n_live, k)
+            }
+            RouteState::LeastDepth => {
+                let mut best: Option<usize> = None;
+                for (i, e) in sh.eps.iter().enumerate() {
+                    if n_live > 0 && e.draining.load(Ordering::Relaxed) {
+                        continue;
+                    }
+                    let better = match best {
+                        None => true,
+                        Some(b) => {
+                            (e.load.score(), e.uid)
+                                < (sh.eps[b].load.score(), sh.eps[b].uid)
+                        }
+                    };
+                    if better {
+                        best = Some(i);
+                    }
+                }
+                best.expect("router has at least one endpoint")
+            }
+            RouteState::Affinity => {
+                let req = item.req_id;
+                let mut sticky = self.sticky.lock().unwrap();
+                let assigned = sticky.get(&req).and_then(|&uid| {
+                    sh.eps.iter().position(|e| e.uid == uid)
+                });
+                let i = match assigned {
+                    Some(i) => i,
+                    None => {
+                        // First item of the request (or its endpoint was
+                        // force-removed): assign among live endpoints.
+                        let i =
+                            nth_routable(&sh.eps, n_live, (req % spread as u64) as usize);
+                        sticky.insert(req, sh.eps[i].uid);
+                        i
+                    }
+                };
+                if item.finished {
+                    // Last item of the request on this edge: clear the
+                    // assignment AFTER the in-flight count is up (below),
+                    // so a drain check can never observe "no sticky
+                    // request, nothing in flight" mid-send.
+                    finished_sticky = Some(req);
+                }
                 i
             }
-            RouteState::LeastDepth => (0..n)
-                .min_by_key(|&i| (self.loads[i].score(), i))
-                .expect("router has at least one target"),
-            RouteState::Affinity => (item.req_id % n as u64) as usize,
         };
         // Count before sending so a racing consumer can never observe a
-        // receive without the matching increment (underflow).
-        self.loads[i].in_flight.fetch_add(1, Ordering::Relaxed);
-        if let Err(e) = self.targets[i].send(item) {
-            let _ = self.loads[i].in_flight.fetch_update(
+        // receive without the matching increment (underflow) — and before
+        // the sticky entry clears, so quiescence is never observed early.
+        sh.eps[i].load.in_flight.fetch_add(1, Ordering::Relaxed);
+        if let Some(req) = finished_sticky {
+            self.sticky.lock().unwrap().remove(&req);
+        }
+        if let Err(e) = sh.eps[i].tx.send(item) {
+            let _ = sh.eps[i].load.in_flight.fetch_update(
                 Ordering::Relaxed,
                 Ordering::Relaxed,
                 |v| Some(v.saturating_sub(1)),
@@ -102,26 +219,29 @@ impl RouterTx {
         Ok(())
     }
 
-    /// Total bytes moved through this producer replica's payload planes.
+    /// Total bytes moved through this producer replica's payload planes
+    /// (including through endpoints retired since).
     pub fn bytes_sent(&self) -> u64 {
-        self.targets.iter().map(|t| t.bytes_sent).sum()
+        let sh = self.shared.lock().unwrap();
+        sh.retired_bytes + sh.eps.iter().map(|e| e.tx.bytes_sent).sum::<u64>()
     }
 
-    /// Number of consumer replicas this sender fans out to.
+    /// Number of consumer replicas this sender currently fans out to.
     pub fn fanout(&self) -> usize {
-        self.targets.len()
+        self.shared.lock().unwrap().eps.len()
     }
 }
 
 struct Source {
     rx: ConnectorRx,
-    open: bool,
 }
 
 /// Fan-in receiver owned by one consumer replica: merges the channels
 /// from every producer replica, polling them round-robin for fairness.
+/// The source list is shared with the edge's [`EdgeCtl`] so producers
+/// added at runtime reach existing consumers.
 pub struct RouterRx {
-    sources: Vec<Source>,
+    sources: Arc<Mutex<Vec<Source>>>,
     load: Arc<ReplicaLoad>,
     next: usize,
 }
@@ -129,16 +249,19 @@ pub struct RouterRx {
 impl RouterRx {
     /// Non-blocking receive across all producer replicas.
     /// [`TryRecv::Closed`] only once EVERY producer has hung up and all
-    /// channels are drained.
+    /// channels are drained (closed sources are pruned from the set, so
+    /// a retired producer stops being polled).
     pub fn try_recv(&mut self) -> Result<TryRecv> {
-        let n = self.sources.len();
-        let mut any_open = false;
+        let mut sources = self.sources.lock().unwrap();
+        let n = sources.len();
+        if n == 0 {
+            return Ok(TryRecv::Closed);
+        }
+        let mut closed: Vec<usize> = vec![];
+        let mut got: Option<StageItem> = None;
         for k in 0..n {
             let i = (self.next + k) % n;
-            if !self.sources[i].open {
-                continue;
-            }
-            match self.sources[i].rx.try_recv()? {
+            match sources[i].rx.try_recv()? {
                 TryRecv::Item(item) => {
                     self.next = (i + 1) % n;
                     let _ = self.load.in_flight.fetch_update(
@@ -146,30 +269,237 @@ impl RouterRx {
                         Ordering::Relaxed,
                         |v| Some(v.saturating_sub(1)),
                     );
-                    return Ok(TryRecv::Item(item));
+                    got = Some(item);
+                    break;
                 }
-                TryRecv::Empty => any_open = true,
-                TryRecv::Closed => self.sources[i].open = false,
+                TryRecv::Empty => {}
+                TryRecv::Closed => closed.push(i),
             }
         }
-        Ok(if any_open { TryRecv::Empty } else { TryRecv::Closed })
+        if !closed.is_empty() {
+            closed.sort_unstable_by(|a, b| b.cmp(a));
+            for i in closed {
+                sources.remove(i);
+            }
+            self.next = 0; // indices shifted; restart the fairness scan
+        }
+        Ok(match got {
+            Some(item) => TryRecv::Item(item),
+            None if sources.is_empty() => TryRecv::Closed,
+            None => TryRecv::Empty,
+        })
     }
 
     /// Publish this replica's pending admission-queue depth for the
-    /// producers' least-depth routing (scheduler feedback).
+    /// producers' least-depth routing (scheduler feedback) and the
+    /// autoscaler's drain check.
     pub fn publish_queue_depth(&self, depth: usize) {
         self.load.queue_depth.store(depth, Ordering::Relaxed);
     }
 
-    /// Number of producer replicas feeding this receiver.
+    /// Number of producer replicas currently feeding this receiver.
     pub fn fanin(&self) -> usize {
-        self.sources.len()
+        self.sources.lock().unwrap().len()
     }
 }
 
-/// Wire one routed edge: `n_from` producer replicas to `n_to` consumer
-/// replicas over `kind` transports.  Returns one [`RouterTx`] per
-/// producer replica and one [`RouterRx`] per consumer replica.
+struct ProducerEntry {
+    uid: u64,
+    shared: Arc<Mutex<TxShared>>,
+}
+
+struct ConsumerEntry {
+    uid: u64,
+    sources: Arc<Mutex<Vec<Source>>>,
+    load: Arc<ReplicaLoad>,
+    draining: Arc<AtomicBool>,
+}
+
+#[derive(Default)]
+struct EdgeState {
+    producers: Vec<ProducerEntry>,
+    consumers: Vec<ConsumerEntry>,
+}
+
+/// Control handle for one routed edge: owns the endpoint topology and
+/// mutates it at runtime (the autoscaler's lever on the data plane).
+pub struct EdgeCtl {
+    kind: ConnectorKind,
+    /// Resolved routing policy (never [`RoutingKind::Auto`]).
+    routing: RoutingKind,
+    label: String,
+    store_addr: Option<String>,
+    sticky: Arc<StickyMap>,
+    state: Mutex<EdgeState>,
+    next_uid: AtomicU64,
+}
+
+impl EdgeCtl {
+    /// Create an empty edge.  `routing` must already be resolved — pass
+    /// [`RoutingKind::Affinity`] for elastic edges (always safe; identical
+    /// to pass-through at one replica) or `routing.resolve(n_to)` for
+    /// statically wired ones.
+    pub fn new(
+        kind: ConnectorKind,
+        routing: RoutingKind,
+        label: &str,
+        store_addr: Option<&str>,
+    ) -> Self {
+        debug_assert!(routing != RoutingKind::Auto, "edge `{label}`: unresolved routing");
+        Self {
+            kind,
+            routing,
+            label: label.to_string(),
+            store_addr: store_addr.map(|s| s.to_string()),
+            sticky: Arc::new(Mutex::new(HashMap::new())),
+            state: Mutex::new(EdgeState::default()),
+            next_uid: AtomicU64::new(0),
+        }
+    }
+
+    fn route_state(&self) -> RouteState {
+        match self.routing {
+            RoutingKind::RoundRobin => RouteState::RoundRobin { next: 0 },
+            RoutingKind::LeastDepth => RouteState::LeastDepth,
+            RoutingKind::Affinity => RouteState::Affinity,
+            RoutingKind::Auto => unreachable!("EdgeCtl::new rejects Auto"),
+        }
+    }
+
+    /// Wire a new consumer replica into the edge: one fresh channel from
+    /// every existing producer replica.  Returns the replica's receiver
+    /// and its edge-unique id.
+    pub fn add_consumer(&self) -> Result<(RouterRx, u64)> {
+        let mut st = self.state.lock().unwrap();
+        let uid = self.next_uid.fetch_add(1, Ordering::Relaxed);
+        let load = Arc::new(ReplicaLoad::default());
+        let draining = Arc::new(AtomicBool::new(false));
+        let sources: Arc<Mutex<Vec<Source>>> = Arc::new(Mutex::new(Vec::new()));
+        for p in &st.producers {
+            let (tx, rx) = pair(
+                self.kind,
+                &format!("{}_p{}c{}", self.label, p.uid, uid),
+                self.store_addr.as_deref(),
+            )?;
+            p.shared.lock().unwrap().eps.push(Endpoint {
+                uid,
+                tx,
+                load: load.clone(),
+                draining: draining.clone(),
+            });
+            sources.lock().unwrap().push(Source { rx });
+        }
+        st.consumers.push(ConsumerEntry {
+            uid,
+            sources: sources.clone(),
+            load: load.clone(),
+            draining,
+        });
+        Ok((RouterRx { sources, load, next: 0 }, uid))
+    }
+
+    /// Wire a new producer replica into the edge: one fresh channel to
+    /// every existing consumer replica.  Returns the replica's sender and
+    /// its edge-unique id.
+    pub fn add_producer(&self) -> Result<(RouterTx, u64)> {
+        let mut st = self.state.lock().unwrap();
+        let uid = self.next_uid.fetch_add(1, Ordering::Relaxed);
+        let shared = Arc::new(Mutex::new(TxShared { eps: Vec::new(), retired_bytes: 0 }));
+        for c in &st.consumers {
+            let (tx, rx) = pair(
+                self.kind,
+                &format!("{}_p{}c{}", self.label, uid, c.uid),
+                self.store_addr.as_deref(),
+            )?;
+            shared.lock().unwrap().eps.push(Endpoint {
+                uid: c.uid,
+                tx,
+                load: c.load.clone(),
+                draining: c.draining.clone(),
+            });
+            c.sources.lock().unwrap().push(Source { rx });
+        }
+        st.producers.push(ProducerEntry { uid, shared: shared.clone() });
+        Ok((
+            RouterTx { shared, state: self.route_state(), sticky: self.sticky.clone() },
+            uid,
+        ))
+    }
+
+    /// Stop routing new requests to consumer `uid` (drain-before-retire
+    /// step 1).  Items of requests already assigned to it keep flowing.
+    pub fn drain_consumer(&self, uid: u64) {
+        let st = self.state.lock().unwrap();
+        if let Some(c) = st.consumers.iter().find(|c| c.uid == uid) {
+            c.draining.store(true, Ordering::Relaxed);
+        }
+    }
+
+    /// Whether a draining consumer has fully quiesced on this edge:
+    /// no sticky request is still assigned to it, nothing is in flight
+    /// in its channels, and its published admission queue is empty.
+    ///
+    /// Order matters: the sticky table is checked FIRST (under its
+    /// lock).  A producer finishing a request bumps the endpoint's
+    /// in-flight count *before* clearing the sticky entry, so once this
+    /// lock observes the entry gone, the matching in-flight increment is
+    /// visible too — the final item can never slip past both checks.
+    pub fn consumer_quiesced(&self, uid: u64) -> bool {
+        let st = self.state.lock().unwrap();
+        let Some(c) = st.consumers.iter().find(|c| c.uid == uid) else { return true };
+        if self.sticky.lock().unwrap().values().any(|&v| v == uid) {
+            return false;
+        }
+        c.load.in_flight.load(Ordering::Relaxed) == 0
+            && c.load.queue_depth.load(Ordering::Relaxed) == 0
+    }
+
+    /// Detach consumer `uid` from every producer (drain-before-retire
+    /// step 2).  Dropping the senders closes the replica's channels, so
+    /// its receiver drains whatever is left and then reports closed.
+    pub fn remove_consumer(&self, uid: u64) {
+        let mut st = self.state.lock().unwrap();
+        for p in &st.producers {
+            let mut sh = p.shared.lock().unwrap();
+            let mut kept = Vec::with_capacity(sh.eps.len());
+            for ep in sh.eps.drain(..) {
+                if ep.uid == uid {
+                    sh.retired_bytes += ep.tx.bytes_sent;
+                } else {
+                    kept.push(ep);
+                }
+            }
+            sh.eps = kept;
+        }
+        st.consumers.retain(|c| c.uid != uid);
+    }
+
+    /// Forget producer `uid`.  The producer's own [`RouterTx`] drop (on
+    /// thread exit) is what actually closes its channels; consumers prune
+    /// the closed sources on their next poll.
+    pub fn remove_producer(&self, uid: u64) {
+        let mut st = self.state.lock().unwrap();
+        st.producers.retain(|p| p.uid != uid);
+    }
+
+    /// Live (non-draining) consumer replica count.
+    pub fn live_consumers(&self) -> usize {
+        let st = self.state.lock().unwrap();
+        st.consumers.iter().filter(|c| !c.draining.load(Ordering::Relaxed)).count()
+    }
+
+    pub fn n_consumers(&self) -> usize {
+        self.state.lock().unwrap().consumers.len()
+    }
+
+    pub fn n_producers(&self) -> usize {
+        self.state.lock().unwrap().producers.len()
+    }
+}
+
+/// Wire one routed edge statically: `n_from` producer replicas to `n_to`
+/// consumer replicas over `kind` transports.  Returns one [`RouterTx`]
+/// per producer replica and one [`RouterRx`] per consumer replica.
 /// `routing` may be [`RoutingKind::Auto`]; it resolves against `n_to`.
 pub fn wire(
     kind: ConnectorKind,
@@ -180,43 +510,16 @@ pub fn wire(
     n_to: usize,
 ) -> Result<(Vec<RouterTx>, Vec<RouterRx>)> {
     anyhow::ensure!(n_from >= 1 && n_to >= 1, "edge `{label}`: empty replica set");
-    let routing = routing.resolve(n_to);
-    let loads: Vec<Arc<ReplicaLoad>> =
-        (0..n_to).map(|_| Arc::new(ReplicaLoad::default())).collect();
-    let mut txs: Vec<Vec<ConnectorTx>> = (0..n_from).map(|_| Vec::with_capacity(n_to)).collect();
-    let mut rxs: Vec<Vec<ConnectorRx>> = (0..n_to).map(|_| Vec::with_capacity(n_from)).collect();
-    for (f, row) in txs.iter_mut().enumerate() {
-        for (t, col) in rxs.iter_mut().enumerate() {
-            // Unique label per underlying channel (shm segment names
-            // derive from it).
-            let (tx, rx) = pair(kind, &format!("{label}_f{f}t{t}"), store_addr)?;
-            row.push(tx);
-            col.push(rx);
-        }
+    let ctl = EdgeCtl::new(kind, routing.resolve(n_to), label, store_addr);
+    let mut rxs = Vec::with_capacity(n_to);
+    for _ in 0..n_to {
+        rxs.push(ctl.add_consumer()?.0);
     }
-    let router_txs = txs
-        .into_iter()
-        .map(|targets| RouterTx {
-            targets,
-            loads: loads.clone(),
-            state: match routing {
-                RoutingKind::RoundRobin => RouteState::RoundRobin { next: 0 },
-                RoutingKind::LeastDepth => RouteState::LeastDepth,
-                RoutingKind::Affinity => RouteState::Affinity,
-                RoutingKind::Auto => unreachable!("resolve() never returns Auto"),
-            },
-        })
-        .collect();
-    let router_rxs = rxs
-        .into_iter()
-        .zip(loads)
-        .map(|(sources, load)| RouterRx {
-            sources: sources.into_iter().map(|rx| Source { rx, open: true }).collect(),
-            load,
-            next: 0,
-        })
-        .collect();
-    Ok((router_txs, router_rxs))
+    let mut txs = Vec::with_capacity(n_from);
+    for _ in 0..n_from {
+        txs.push(ctl.add_producer()?.0);
+    }
+    Ok((txs, rxs))
 }
 
 #[cfg(test)]
@@ -288,7 +591,7 @@ mod tests {
     #[test]
     fn affinity_is_consistent_across_producer_replicas() {
         // Two producer replicas route the same request id to the SAME
-        // consumer replica (modulo routing is stateless and global).
+        // consumer replica (the sticky table is shared per edge).
         let (mut txs, mut rxs) =
             wire(ConnectorKind::Inline, RoutingKind::Affinity, "aff2", None, 2, 2).unwrap();
         txs[0].send(item(5)).unwrap();
@@ -342,5 +645,111 @@ mod tests {
         }
         assert_eq!(drain(&mut rxs[0]), vec![10, 10]);
         assert_eq!(drain(&mut rxs[1]), vec![11]);
+    }
+
+    // -----------------------------------------------------------------
+    // Dynamic endpoints (the autoscaler's data-plane surface).
+    // -----------------------------------------------------------------
+
+    #[test]
+    fn added_consumer_starts_receiving_new_requests() {
+        let ctl = EdgeCtl::new(ConnectorKind::Inline, RoutingKind::Affinity, "dynadd", None);
+        let (mut rx0, _u0) = ctl.add_consumer().unwrap();
+        let (mut tx, _p) = ctl.add_producer().unwrap();
+        // One consumer: everything lands on it.
+        tx.send(item(3)).unwrap();
+        assert_eq!(drain(&mut rx0), vec![3]);
+        // Scale up: a second consumer joins; new even requests map to one
+        // of the two live endpoints deterministically.
+        let (mut rx1, _u1) = ctl.add_consumer().unwrap();
+        assert_eq!(tx.fanout(), 2);
+        tx.send(item(10)).unwrap(); // 10 % 2 == 0 -> first endpoint
+        tx.send(item(11)).unwrap(); // 11 % 2 == 1 -> second endpoint
+        assert_eq!(drain(&mut rx0), vec![10]);
+        assert_eq!(drain(&mut rx1), vec![11]);
+    }
+
+    #[test]
+    fn added_producer_reaches_existing_consumers() {
+        let ctl = EdgeCtl::new(ConnectorKind::Inline, RoutingKind::Affinity, "dynprod", None);
+        let (mut rx, _u) = ctl.add_consumer().unwrap();
+        let (mut tx0, _p0) = ctl.add_producer().unwrap();
+        tx0.send(item(1)).unwrap();
+        let (mut tx1, _p1) = ctl.add_producer().unwrap();
+        tx1.send(item(2)).unwrap();
+        assert_eq!(rx.fanin(), 2);
+        let mut got = drain(&mut rx);
+        got.sort_unstable();
+        assert_eq!(got, vec![1, 2]);
+    }
+
+    #[test]
+    fn drain_before_retire_with_requests_in_flight() {
+        // The satellite scenario: an endpoint is removed while requests
+        // are in flight.  Request 1 is sticky on the draining replica and
+        // must keep flowing there until its finished item; new requests
+        // must avoid the draining replica; only then does it quiesce and
+        // get removed.
+        let ctl = EdgeCtl::new(ConnectorKind::Inline, RoutingKind::Affinity, "dyndrain", None);
+        let (mut rx0, u0) = ctl.add_consumer().unwrap();
+        let (mut rx1, _u1) = ctl.add_consumer().unwrap();
+        let (mut tx, _p) = ctl.add_producer().unwrap();
+
+        // Request 2 (2 % 2 == 0) starts streaming onto consumer 0.
+        tx.send(item(2)).unwrap();
+        assert_eq!(drain(&mut rx0), vec![2]);
+        ctl.drain_consumer(u0);
+        assert!(!ctl.consumer_quiesced(u0), "sticky request 2 still assigned");
+
+        // New request 4 would also hash to consumer 0, but it is
+        // draining: the request is assigned to the remaining live one.
+        tx.send(item(4)).unwrap();
+        assert_eq!(drain(&mut rx1), vec![4]);
+        assert_eq!(drain(&mut rx0), Vec::<u64>::new());
+
+        // Request 2's follow-up chunks still reach the draining replica.
+        tx.send(item(2)).unwrap();
+        tx.send(item(2).finished()).unwrap();
+        assert_eq!(drain(&mut rx0), vec![2, 2]);
+
+        // Finished item passed + channels drained: quiesced.
+        assert!(ctl.consumer_quiesced(u0));
+        ctl.remove_consumer(u0);
+        assert_eq!(tx.fanout(), 1);
+        // The removed consumer's channels are closed.
+        assert!(matches!(rx0.try_recv().unwrap(), TryRecv::Closed));
+        // Everything (old and new) now routes to the survivor.
+        tx.send(item(6)).unwrap();
+        assert_eq!(drain(&mut rx1), vec![6]);
+    }
+
+    #[test]
+    fn quiesce_waits_for_in_flight_and_published_queue() {
+        let ctl = EdgeCtl::new(ConnectorKind::Inline, RoutingKind::RoundRobin, "dynq", None);
+        let (mut rx, u) = ctl.add_consumer().unwrap();
+        let (mut tx, _p) = ctl.add_producer().unwrap();
+        tx.send(item(1).finished()).unwrap();
+        ctl.drain_consumer(u);
+        assert!(!ctl.consumer_quiesced(u), "item still in flight");
+        assert_eq!(drain(&mut rx), vec![1]);
+        rx.publish_queue_depth(1);
+        assert!(!ctl.consumer_quiesced(u), "admission queue still holds the item");
+        rx.publish_queue_depth(0);
+        assert!(ctl.consumer_quiesced(u));
+    }
+
+    #[test]
+    fn retired_endpoint_bytes_stay_in_the_accounting() {
+        let ctl = EdgeCtl::new(ConnectorKind::Inline, RoutingKind::Affinity, "dynbytes", None);
+        let (mut rx0, u0) = ctl.add_consumer().unwrap();
+        let (mut tx, _p) = ctl.add_producer().unwrap();
+        tx.send(item(0).finished()).unwrap(); // 4 bytes
+        assert_eq!(drain(&mut rx0), vec![0]);
+        let (_rx1, _u1) = ctl.add_consumer().unwrap();
+        ctl.drain_consumer(u0);
+        assert!(ctl.consumer_quiesced(u0));
+        ctl.remove_consumer(u0);
+        tx.send(item(1).finished()).unwrap(); // 4 more bytes to the survivor
+        assert_eq!(tx.bytes_sent(), 8, "retired endpoint's bytes are not lost");
     }
 }

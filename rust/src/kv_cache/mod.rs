@@ -53,6 +53,9 @@ pub struct BlockManager {
     prefix_index: HashMap<u64, BlockId>,
     /// cache hits since creation (metrics).
     pub prefix_hits: u64,
+    /// Copy-on-write tail copies triggered by appends to forked tables
+    /// (metrics; each one stands for a device-side block copy).
+    pub cow_copies: u64,
 }
 
 impl BlockManager {
@@ -64,6 +67,7 @@ impl BlockManager {
             free: (0..n_blocks as BlockId).rev().collect(),
             prefix_index: HashMap::new(),
             prefix_hits: 0,
+            cow_copies: 0,
         }
     }
 
@@ -154,14 +158,32 @@ impl BlockManager {
 
     /// Extend a table by one generated token, allocating a block at the
     /// boundary.  Returns true if a new block was allocated.
+    ///
+    /// Copy-on-write: when the partial tail block is shared (the table
+    /// was [`fork`](Self::fork)ed, or is a fork's sibling), the append
+    /// must not mutate the shared copy — the tail moves to a private
+    /// block first (counted in [`Self::cow_copies`]; each one stands for
+    /// a device-side block copy).
     pub fn append_token(&mut self, table: &mut BlockTable) -> Result<bool> {
-        let need_new = table.len % self.block_size == 0;
-        if need_new {
+        if table.len % self.block_size == 0 {
             let bid = self.pop_free()?;
             table.blocks.push(bid);
+            table.len += 1;
+            return Ok(true);
+        }
+        let tail = *table.blocks.last().expect("partial tail implies a block");
+        if self.blocks[tail as usize].refcount > 1 {
+            // On exhaustion the error propagates with the table intact
+            // (len unchanged, tail still shared) — callers can preempt.
+            let fresh = self.pop_free()?;
+            self.blocks[tail as usize].refcount -= 1;
+            self.cow_copies += 1;
+            *table.blocks.last_mut().expect("checked above") = fresh;
+            table.len += 1;
+            return Ok(true);
         }
         table.len += 1;
-        Ok(need_new)
+        Ok(false)
     }
 
     /// Copy-on-write fork (e.g. beam/parallel sampling): shares all
@@ -290,6 +312,139 @@ mod tests {
         m.check_invariants().unwrap();
         m.release(&b);
         assert_eq!(m.free_blocks(), 4);
+    }
+
+    #[test]
+    fn cow_append_diverges_forked_tail_without_touching_the_sibling() {
+        let mut m = BlockManager::new(8, 4);
+        let mut a = m.allocate_prompt(&[1, 2, 3, 4, 5, 6]).unwrap(); // [full, partial]
+        let mut b = m.fork(&a);
+        assert_eq!(a.blocks, b.blocks);
+        // First append into the shared partial tail: fork A must move to
+        // a private block; B's view is untouched.
+        assert!(m.append_token(&mut a).unwrap(), "CoW counts as an allocation");
+        assert_eq!(m.cow_copies, 1);
+        assert_eq!(a.blocks[0], b.blocks[0], "full prefix block still shared");
+        assert_ne!(a.blocks[1], b.blocks[1], "partial tail diverged");
+        assert_eq!(b.len, 6, "sibling untouched");
+        // B's tail is now exclusively owned: its append is in place.
+        assert!(!m.append_token(&mut b).unwrap());
+        assert_eq!(m.cow_copies, 1);
+        // Further appends on A stay in place until the block boundary.
+        assert!(!m.append_token(&mut a).unwrap());
+        m.release(&a);
+        m.release(&b);
+        assert_eq!(m.free_blocks(), 8);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn cow_append_exhaustion_fails_cleanly() {
+        let mut m = BlockManager::new(2, 4);
+        let mut a = m.allocate_prompt(&[1, 2, 3, 4, 5]).unwrap(); // both blocks
+        let mut b = m.fork(&a);
+        // No free block for the CoW copy: the append fails and the table
+        // is left intact (still shared, same length) so the caller can
+        // preempt instead of corrupting the sibling.
+        let err = m.append_token(&mut a);
+        assert!(err.is_err());
+        assert_eq!(a.len, 5);
+        assert_eq!(a.blocks, b.blocks);
+        assert_eq!(m.cow_copies, 0);
+        m.release(&a);
+        // With the fork released, the sibling appends in place again.
+        assert!(!m.append_token(&mut b).unwrap());
+        m.release(&b);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn released_prefix_blocks_are_evicted_from_the_cache() {
+        let mut m = BlockManager::new(4, 4);
+        let prompt = [1u32, 2, 3, 4];
+        let a = m.allocate_prompt(&prompt).unwrap();
+        m.release(&a);
+        // The freed block must not be resurrected through the prefix
+        // cache: the same content allocates fresh, with no hit recorded.
+        let b = m.allocate_prompt(&prompt).unwrap();
+        assert_eq!(m.prefix_hits, 0, "freed prefix entry must not hit");
+        m.release(&b);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn reused_block_sheds_its_stale_prefix_entry() {
+        let mut m = BlockManager::new(1, 4); // one block: reuse is forced
+        let a = m.allocate_prompt(&[1, 2, 3, 4]).unwrap();
+        let a_block = a.blocks[0];
+        m.release(&a);
+        // Different content reuses the same physical block...
+        let b = m.allocate_prompt(&[9, 9, 9, 9]).unwrap();
+        assert_eq!(b.blocks[0], a_block);
+        m.release(&b);
+        // ...and the original content must now MISS (no aliasing with
+        // block contents that were overwritten).
+        let c = m.allocate_prompt(&[1, 2, 3, 4]).unwrap();
+        assert_eq!(m.prefix_hits, 0);
+        m.release(&c);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn live_prefix_block_still_shares_while_forks_exist() {
+        // Fork + prefix sharing interact: the full block of a live prompt
+        // is shared by hash, while fork shares the whole table.
+        let mut m = BlockManager::new(8, 4);
+        let a = m.allocate_prompt(&[7, 7, 7, 7, 1]).unwrap();
+        let f = m.fork(&a);
+        let b = m.allocate_prompt(&[7, 7, 7, 7, 2]).unwrap();
+        assert_eq!(m.prefix_hits, 1, "full block shared by content hash");
+        assert_eq!(a.blocks[0], b.blocks[0]);
+        assert_ne!(a.blocks[1], b.blocks[1], "tails are private per prompt");
+        m.release(&a);
+        m.release(&f);
+        m.release(&b);
+        assert_eq!(m.free_blocks(), 8);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn prop_forked_appends_preserve_invariants() {
+        quick("kv_cow_invariants", |rng: &mut Prng| {
+            let mut m = BlockManager::new(rng.range(6, 24), rng.range(2, 6));
+            let mut live: Vec<BlockTable> = vec![];
+            for _ in 0..rng.range(1, 50) {
+                match rng.range(0, 3) {
+                    0 => {
+                        let n = rng.range(1, 20);
+                        let toks: Vec<u32> = (0..n).map(|_| rng.below(6) as u32).collect();
+                        if let Ok(t) = m.allocate_prompt(&toks) {
+                            live.push(t);
+                        }
+                    }
+                    1 if !live.is_empty() => {
+                        let i = rng.range(0, live.len() - 1);
+                        let f = m.fork(&live[i]);
+                        live.push(f);
+                    }
+                    2 if !live.is_empty() => {
+                        let i = rng.range(0, live.len() - 1);
+                        let t = live.swap_remove(i);
+                        m.release(&t);
+                    }
+                    _ => {
+                        if let Some(t) = live.last_mut() {
+                            let _ = m.append_token(t);
+                        }
+                    }
+                }
+                m.check_invariants().unwrap();
+            }
+            for t in live.drain(..) {
+                m.release(&t);
+            }
+            assert_eq!(m.free_blocks(), m.n_blocks());
+        });
     }
 
     #[test]

@@ -19,7 +19,11 @@
 //! `StageConfig::replicas`: the [`connector::router`] layer fans items
 //! across engine replicas (round-robin / least-depth / request-affinity)
 //! and the allocator packs each replica onto the least-loaded devices —
-//! the paper's "flexible GPU allocation".
+//! the paper's "flexible GPU allocation".  Under live traffic the
+//! [`serving`] runtime keeps the stage graph up across requests
+//! ([`serving::ServingSession`]) and an elastic autoscaler moves
+//! replicas toward whichever stage is the bottleneck at runtime, within
+//! a global GPU budget.
 //!
 //! Model compute is AOT-lowered from JAX/Pallas (see `python/compile/`)
 //! into HLO-text artifacts executed through the PJRT CPU client
@@ -48,6 +52,7 @@ pub mod orchestrator;
 pub mod runtime;
 pub mod scheduler;
 pub mod server;
+pub mod serving;
 pub mod stage_graph;
 pub mod tokenizer;
 pub mod trace;

@@ -1,4 +1,4 @@
-//! omni-serve launcher: `serve`, `run`, `graph`, `baseline`.
+//! omni-serve launcher: `serve`, `run`, `bench`, `graph`, `baseline`.
 
 use std::sync::Arc;
 
@@ -15,15 +15,18 @@ const USAGE: &str = "\
 omni-serve — fully disaggregated serving for any-to-any multimodal models
 
 USAGE:
-  omni-serve serve --pipeline <name> [--addr 127.0.0.1:8090] [--config file.json]
-  omni-serve run   --pipeline <name> --dataset <librispeech|food101|ucf101|seedtts|vbench>
+  omni-serve serve --pipeline <name> [--addr 127.0.0.1:8090] [--port 8090]
+                   [--autoscale] [--gpu-budget N] [--config file.json]
+  omni-serve run   --pipeline <name> --dataset <librispeech|food101|ucf101|seedtts|vbench|bursty>
                    [--n 8] [--rate 0] [--seed 1] [--no-streaming] [--baseline]
+  omni-serve bench [--trace bursty|librispeech|seedtts] [--n 48] [--budget 4]
+                   (artifact-free: autoscaled vs static replica splits on the AR-stage model)
   omni-serve graph [--pipeline <name>] [--list]
   omni-serve help
 
-Pipelines: qwen2.5-omni, qwen3-omni, qwen3-omni-epd, bagel-t2i, bagel-i2i,
-           mimo-audio, mimo-audio-compiled, qwen-image, qwen-image-edit,
-           wan22-t2v, wan22-i2v
+Pipelines: qwen2.5-omni, qwen3-omni, qwen3-omni-rep2, qwen3-omni-epd, bagel-t2i,
+           bagel-i2i, mimo-audio, mimo-audio-compiled, qwen-image,
+           qwen-image-edit, wan22-t2v, wan22-i2v
 ";
 
 fn main() {
@@ -47,8 +50,33 @@ fn real_main() -> Result<()> {
         "serve" => {
             let config = pipeline_from(&args)?;
             let artifacts = Arc::new(Artifacts::load(&Artifacts::default_dir())?);
-            let addr = args.flag("addr").unwrap_or("127.0.0.1:8090");
-            let server = omni_serve::server::Server::bind(addr, config, artifacts)?;
+            // `--port` overrides the port of `--addr` (default host kept).
+            let addr = args.flag("addr").unwrap_or("127.0.0.1:8090").to_string();
+            let addr = match args.flag("port") {
+                Some(p) => {
+                    let host = addr.rsplit_once(':').map(|(h, _)| h).unwrap_or("127.0.0.1");
+                    format!("{host}:{p}")
+                }
+                None => addr,
+            };
+            // `--autoscale` turns the elastic control plane on (defaults
+            // from the config's `autoscaler` block or AutoscalerConfig);
+            // `--gpu-budget` caps total device slots across all replicas.
+            let autoscaler = if args.flag_bool("autoscale") || args.flag("gpu-budget").is_some() {
+                let mut a = config.autoscaler.clone().unwrap_or_default();
+                if args.flag("gpu-budget").is_some() {
+                    a.gpu_budget = args.flag_usize("gpu-budget", a.gpu_budget)?;
+                }
+                Some(a)
+            } else {
+                None
+            };
+            let server = omni_serve::server::Server::bind(
+                &addr,
+                config,
+                artifacts,
+                omni_serve::server::ServeOptions { autoscaler },
+            )?;
             server.serve()
         }
         "run" => {
@@ -64,6 +92,7 @@ fn real_main() -> Result<()> {
                 "ucf101" => datasets::ucf101(seed, n, rate),
                 "seedtts" => datasets::seedtts(seed, n, rate),
                 "vbench" => datasets::vbench(seed, n, rate, 20, false),
+                "bursty" => datasets::bursty_mixed(seed, n, 2.0),
                 other => bail!("unknown dataset `{other}`"),
             };
             let audio_stage: Option<&'static str> = if config.stage("talker").is_some() {
@@ -136,6 +165,43 @@ fn real_main() -> Result<()> {
                     }
                 }
             }
+            Ok(())
+        }
+        "bench" => {
+            // Artifact-free elastic-allocation comparison on the
+            // two-stage AR model (same harness as the asserted suite in
+            // benches/sched_batching.rs and tests/serving.rs).
+            let n = args.flag_usize("n", 48)?;
+            let seed = args.flag_usize("seed", 1)? as u64;
+            let budget = args.flag_usize("budget", 4)?;
+            let trace = args.flag("trace").unwrap_or("bursty");
+            let wl = match trace {
+                "bursty" => datasets::bursty_mixed(seed, n, 2.0),
+                "librispeech" => datasets::librispeech(seed, n, 4.0),
+                "seedtts" => datasets::seedtts(seed, n, 4.0),
+                other => bail!("unknown trace `{other}` (bursty|librispeech|seedtts)"),
+            };
+            let (statics, auto) = omni_serve::scheduler::sim::elastic_comparison(&wl, budget);
+            println!("trace={} n={} budget={budget}", wl.name, wl.len());
+            for rep in &statics {
+                println!(
+                    "  {:<22} mean JCT {:>9} makespan {:>9} gpu-s {:>8.2}",
+                    rep.policy,
+                    fmt::dur(rep.mean_jct()),
+                    fmt::dur(rep.makespan_s),
+                    rep.replica_seconds,
+                );
+            }
+            println!(
+                "  {:<22} mean JCT {:>9} makespan {:>9} gpu-s {:>8.2} ({} ups, {} downs, peak {} slots)",
+                auto.policy,
+                fmt::dur(auto.mean_jct()),
+                fmt::dur(auto.makespan_s),
+                auto.replica_seconds,
+                auto.scale_ups,
+                auto.scale_downs,
+                auto.max_slots,
+            );
             Ok(())
         }
         "graph" => {

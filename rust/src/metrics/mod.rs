@@ -39,6 +39,26 @@ pub enum Event {
     /// A request cleared a stage replica's admission queue after `wait_s`
     /// seconds.
     SchedAdmitted { stage: &'static str, replica: usize, req: u64, t: f64, wait_s: f64 },
+    /// The elastic autoscaler changed a stage's replica count (paper §3
+    /// "flexible GPU allocation" under live traffic): `from` live
+    /// replicas became `to`.  Scale-downs are recorded at drain start.
+    Scale { stage: String, t: f64, from: usize, to: usize },
+}
+
+/// One autoscaler decision, as kept by the [`Recorder`] (the replica
+/// count timeline of a stage is the sequence of its scale events).
+#[derive(Debug, Clone)]
+pub struct ScaleEvent {
+    pub stage: String,
+    pub t: f64,
+    pub from: usize,
+    pub to: usize,
+}
+
+impl ScaleEvent {
+    pub fn is_up(&self) -> bool {
+        self.to > self.from
+    }
 }
 
 #[derive(Debug, Default, Clone)]
@@ -91,6 +111,7 @@ impl SchedAgg {
 pub struct Recorder {
     inner: Mutex<HashMap<u64, ReqRec>>,
     sched: Mutex<HashMap<(&'static str, usize), SchedAgg>>,
+    scale: Mutex<Vec<ScaleEvent>>,
 }
 
 impl Recorder {
@@ -113,6 +134,15 @@ impl Recorder {
                 let agg = s.entry((*stage, *replica)).or_default();
                 agg.admit_wait.push(*wait_s);
                 agg.admitted += 1;
+                return;
+            }
+            Event::Scale { stage, t, from, to } => {
+                self.scale.lock().unwrap().push(ScaleEvent {
+                    stage: stage.clone(),
+                    t: *t,
+                    from: *from,
+                    to: *to,
+                });
                 return;
             }
             _ => {}
@@ -140,7 +170,9 @@ impl Recorder {
                 m.entry(req).or_default().completed = Some(t);
             }
             // Handled (with an early return) above.
-            Event::SchedSample { .. } | Event::SchedAdmitted { .. } => unreachable!(),
+            Event::SchedSample { .. } | Event::SchedAdmitted { .. } | Event::Scale { .. } => {
+                unreachable!()
+            }
         }
     }
 
@@ -192,8 +224,20 @@ impl Recorder {
             sched_replicas.insert((stage.to_string(), replica), agg.clone());
         }
         drop(by_replica);
+        let mut scale_events = self.scale.lock().unwrap().clone();
+        scale_events.sort_by(|a, b| a.t.total_cmp(&b.t));
 
-        RunReport { wall_s, completed, jct, ttft, rtf, per_stage, sched, sched_replicas }
+        RunReport {
+            wall_s,
+            completed,
+            jct,
+            ttft,
+            rtf,
+            per_stage,
+            sched,
+            sched_replicas,
+            scale_events,
+        }
     }
 }
 
@@ -221,6 +265,8 @@ pub struct RunReport {
     /// Scheduler aggregates per (stage, replica) — the unmerged view
     /// behind `sched`, for replica-balance analysis.
     pub sched_replicas: HashMap<(String, usize), SchedAgg>,
+    /// Autoscaler decisions in time order (empty for static runs).
+    pub scale_events: Vec<ScaleEvent>,
 }
 
 impl RunReport {
@@ -279,6 +325,37 @@ impl RunReport {
     /// events.
     pub fn sched_replica_count(&self, stage: &str) -> usize {
         self.sched_replicas.keys().filter(|(s, _)| s == stage).count()
+    }
+
+    /// Scale-up events recorded for `stage` (all stages when `None`).
+    pub fn scale_ups(&self, stage: Option<&str>) -> usize {
+        self.scale_events
+            .iter()
+            .filter(|e| e.is_up() && stage.map_or(true, |s| e.stage == s))
+            .count()
+    }
+
+    /// Scale-down events recorded for `stage` (all stages when `None`).
+    pub fn scale_downs(&self, stage: Option<&str>) -> usize {
+        self.scale_events
+            .iter()
+            .filter(|e| !e.is_up() && stage.map_or(true, |s| e.stage == s))
+            .count()
+    }
+
+    /// Replica-count timeline of `stage`: `(t, live_replicas)` starting
+    /// from the stage's first recorded event.
+    pub fn replica_timeline(&self, stage: &str) -> Vec<(f64, usize)> {
+        let mut out = Vec::new();
+        for e in &self.scale_events {
+            if e.stage == stage {
+                if out.is_empty() {
+                    out.push((0.0, e.from));
+                }
+                out.push((e.t, e.to));
+            }
+        }
+        out
     }
 }
 
@@ -349,6 +426,23 @@ mod tests {
         assert_eq!(rep.sched["talker"].admitted, 2);
         assert!((rep.sched_mean_admit_wait("talker") - 0.2).abs() < 1e-9);
         assert!(rep.sched_replica("talker", 2).is_none());
+    }
+
+    #[test]
+    fn scale_events_recorded_and_classified() {
+        let r = Recorder::new();
+        r.emit(Event::Scale { stage: "talker".into(), t: 0.5, from: 1, to: 2 });
+        r.emit(Event::Scale { stage: "talker".into(), t: 2.0, from: 2, to: 1 });
+        r.emit(Event::Scale { stage: "thinker".into(), t: 1.0, from: 1, to: 2 });
+        let rep = r.report(3.0, None);
+        assert_eq!(rep.scale_events.len(), 3);
+        assert_eq!(rep.scale_ups(None), 2);
+        assert_eq!(rep.scale_downs(None), 1);
+        assert_eq!(rep.scale_ups(Some("talker")), 1);
+        assert_eq!(rep.scale_downs(Some("thinker")), 0);
+        // Events come back time-sorted regardless of emission order.
+        assert!(rep.scale_events.windows(2).all(|w| w[0].t <= w[1].t));
+        assert_eq!(rep.replica_timeline("talker"), vec![(0.0, 1), (0.5, 2), (2.0, 1)]);
     }
 
     #[test]

@@ -11,20 +11,18 @@
 
 pub mod stage;
 
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
 use crate::config::PipelineConfig;
-use crate::connector;
-use crate::engine::StageItem;
-use crate::metrics::{Event, Recorder, RunReport};
+use crate::metrics::RunReport;
 use crate::scheduler::{AllocationPlan, StageAllocator};
-use crate::stage_graph::transfers::{ReqMeta, ReqTable, Registry, TransferCtx};
+use crate::stage_graph::transfers::{Registry, TransferCtx};
 use crate::stage_graph::StageGraph;
-use crate::trace::{Request, Workload};
+use crate::trace::Workload;
 use crate::runtime::Artifacts;
 
 /// Run-wide options.
@@ -193,11 +191,11 @@ impl RunSummary {
 
 /// The disaggregated pipeline runner.
 pub struct Orchestrator {
-    graph: StageGraph,
-    registry: Registry,
-    artifacts: Arc<Artifacts>,
-    opts: RunOptions,
-    plan: AllocationPlan,
+    pub(crate) graph: StageGraph,
+    pub(crate) registry: Registry,
+    pub(crate) artifacts: Arc<Artifacts>,
+    pub(crate) opts: RunOptions,
+    pub(crate) plan: AllocationPlan,
 }
 
 impl Orchestrator {
@@ -235,242 +233,76 @@ impl Orchestrator {
         &self.plan
     }
 
-    /// Serve a whole workload to completion and report metrics.
+    /// Serve a whole workload to completion and report metrics — a thin
+    /// open-loop wrapper over the persistent serving runtime: it starts a
+    /// [`crate::serving::ServingSession`], submits the trace by
+    /// `arrival_s` (honoring [`RunOptions::realtime_arrivals`]), waits
+    /// for every completion, and shuts the session down.
     /// `audio_stage` names the stage whose generated tokens measure audio
     /// duration for RTF (e.g. "talker"), if any.
     pub fn run_workload(&self, workload: &Workload, audio_stage: Option<&'static str>) -> Result<RunSummary> {
-        let n_stages = self.graph.n_stages();
-        let recorder = Arc::new(Recorder::new());
-        let clock = RunClock::new();
-        let reqs: ReqTable = Arc::new(Mutex::new(Default::default()));
-        let stop = Arc::new(AtomicBool::new(false));
-        let failed = Arc::new(AtomicBool::new(false));
-
-        // Spawn a Mooncake store if any edge wants TCP.
-        let needs_tcp = self
-            .graph
-            .config
-            .edges
-            .iter()
-            .any(|e| e.connector == crate::config::ConnectorKind::Tcp);
-        let _store;
-        let store_addr: Option<String> = if needs_tcp {
-            match &self.opts.store_addr {
-                Some(a) => Some(a.clone()),
-                None => {
-                    let s = connector::tcp::MooncakeStore::spawn("127.0.0.1:0")?;
-                    let a = s.addr().to_string();
-                    _store = s;
-                    Some(a)
+        let session =
+            crate::serving::ServingSession::start(self, crate::serving::SessionOptions::default())?;
+        let realtime = self.opts.realtime_arrivals;
+        let mut sorted = workload.requests.clone();
+        sorted.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+        let mut handles = Vec::with_capacity(sorted.len());
+        for r in sorted {
+            if realtime {
+                let wait = r.arrival_s - session.now();
+                if wait > 0.0 {
+                    std::thread::sleep(std::time::Duration::from_secs_f64(wait));
                 }
             }
-        } else {
-            None
-        };
-
-        // Wire routed edges: an edge between an m-replica producer and an
-        // n-replica consumer becomes m RouterTx / n RouterRx over m×n
-        // point-to-point connectors, with the edge's routing policy
-        // picking the consumer replica per item (connector::router).
-        let replicas: Vec<usize> =
-            (0..n_stages).map(|i| self.plan.assignment(i).replicas).collect();
-        let mut stage_rxs: Vec<Vec<Vec<(connector::router::RouterRx, String)>>> =
-            replicas.iter().map(|&r| (0..r).map(|_| vec![]).collect()).collect();
-        let mut stage_txs: Vec<Vec<Vec<connector::router::RouterTx>>> =
-            replicas.iter().map(|&r| (0..r).map(|_| vec![]).collect()).collect();
-        for e in &self.graph.config.edges {
-            let from = self.graph.stage_index(&e.from).unwrap();
-            let to = self.graph.stage_index(&e.to).unwrap();
-            let label = format!("{}2{}", e.from, e.to);
-            let (txs, rxs) = connector::router::wire(
-                e.connector,
-                e.routing,
-                &label,
-                store_addr.as_deref(),
-                replicas[from],
-                replicas[to],
-            )?;
-            for (f, tx) in txs.into_iter().enumerate() {
-                stage_txs[from][f].push(tx);
-            }
-            for (t, rx) in rxs.into_iter().enumerate() {
-                stage_rxs[to][t].push((rx, e.transfer.clone()));
+            match session.submit(r) {
+                Ok(h) => handles.push(h),
+                Err(_) => break, // every entry replica is gone
             }
         }
-
-        // Entry channels (one per entry-stage replica; whole requests are
-        // round-robined across them by the feeder) + exit collector.
-        let entry = self.graph.entry;
-        let mut front_txs = Vec::with_capacity(replicas[entry]);
-        let mut front_rx_opts = Vec::with_capacity(replicas[entry]);
-        for _ in 0..replicas[entry] {
-            let (tx, rx) = mpsc::channel::<Request>();
-            front_txs.push(tx);
-            front_rx_opts.push(Some(rx));
-        }
-        let (sink_tx, sink_rx) = mpsc::channel::<StageItem>();
-
-        // Spawn one thread per engine replica; they build engines (PJRT
-        // clients, compiled executables, weight upload) and then
-        // rendezvous on this barrier so compilation time is excluded from
-        // request metrics.
-        let total_replicas: usize = replicas.iter().sum();
-        let ready = Arc::new(std::sync::Barrier::new(total_replicas + 1));
-        let inflight = Arc::new(AtomicUsize::new(0));
-        let mut handles = Vec::new();
-        for i in 0..n_stages {
-            for r in 0..replicas[i] {
-                let spec = stage::StageSpec {
-                    index: i,
-                    replica: r,
-                    cfg: self.graph.stage(i).clone(),
-                    assignment: self.plan.assignment(i).clone(),
-                    artifacts: self.artifacts.clone(),
-                    rxs: std::mem::take(&mut stage_rxs[i][r]),
-                    txs: std::mem::take(&mut stage_txs[i][r]),
-                    registry: self.registry.clone(),
-                    reqs: reqs.clone(),
-                    recorder: recorder.clone(),
-                    clock: clock.clone(),
-                    stop: stop.clone(),
-                    failed: failed.clone(),
-                    front_rx: if i == entry { front_rx_opts[r].take() } else { None },
-                    sink: if self.graph.exits.contains(&i) {
-                        Some(sink_tx.clone())
-                    } else {
-                        None
-                    },
-                    streaming: self.opts.streaming,
-                    lazy_compile: self.opts.lazy_compile,
-                    device_bytes: self.graph.config.device_bytes,
-                    downstream_hint: self.downstream_hint(i),
-                    ready: ready.clone(),
-                };
-                handles.push(stage::spawn(spec)?);
-            }
-        }
-        drop(sink_tx);
-        ready.wait();
-        clock.reset();
-
-        // Feed requests.
-        let n_requests = workload.requests.len();
-        inflight.store(n_requests, Ordering::SeqCst);
-        {
-            let mut table = reqs.lock().unwrap();
-            for r in &workload.requests {
-                table.insert(
-                    r.id,
-                    ReqMeta {
-                        seed: r.seed,
-                        max_audio_tokens: r.max_audio_tokens,
-                        diffusion_steps: r.diffusion_steps,
-                        ignore_eos: r.ignore_eos,
-                        prompt_tokens: r.prompt_tokens.clone(),
-                        max_text_tokens: r.max_text_tokens,
-                    },
-                );
-            }
-        }
-        let feeder = {
-            let clock = clock.clone();
-            let recorder = recorder.clone();
-            let realtime = self.opts.realtime_arrivals;
-            let mut sorted = workload.requests.clone();
-            sorted.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
-            std::thread::spawn(move || {
-                // Replicated entry stages: whole requests round-robin
-                // across the replicas' channels (a request is a single
-                // message, so any spread policy is state-safe here).
-                let mut next = 0usize;
-                'feed: for r in sorted {
-                    if realtime {
-                        let wait = r.arrival_s - clock.now();
-                        if wait > 0.0 {
-                            std::thread::sleep(std::time::Duration::from_secs_f64(wait));
+        // Wait for completions.  A failed stage replica breaks the wait
+        // (its error surfaces when shutdown joins the thread) instead of
+        // leaving the run waiting on completions that can never arrive.
+        'wait: for h in &handles {
+            loop {
+                match h.wait_timeout(std::time::Duration::from_millis(50)) {
+                    crate::serving::WaitResult::Done(_) => break,
+                    crate::serving::WaitResult::Timeout => {
+                        if session.failed() {
+                            break 'wait;
                         }
                     }
-                    recorder.emit(Event::Arrived { req: r.id, t: clock.now() });
-                    // Try each replica's channel once, moving the request
-                    // every time: a failed send hands it back through
-                    // `SendError`, so a dead replica costs a retry, never
-                    // a clone.
-                    let n = front_txs.len();
-                    let mut req = Some(r);
-                    for k in 0..n {
-                        let i = (next + k) % n;
-                        match front_txs[i].send(req.take().expect("requeued on failure")) {
-                            Ok(()) => {
-                                next = (i + 1) % n;
-                                continue 'feed;
-                            }
-                            Err(mpsc::SendError(bounced)) => req = Some(bounced),
-                        }
-                    }
-                    break; // every entry replica is gone
+                    crate::serving::WaitResult::Closed => break 'wait,
                 }
-            })
-        };
-
-        // Collect completions from exit stages.  Poll with a timeout so a
-        // failed stage replica (its error surfaces at join below) breaks
-        // the loop instead of leaving the run waiting on completions that
-        // can never arrive.
-        let mut remaining = n_requests;
-        let mut done: std::collections::HashSet<u64> = Default::default();
-        while remaining > 0 {
-            match sink_rx.recv_timeout(std::time::Duration::from_millis(50)) {
-                Ok(item) => {
-                    if item.finished && done.insert(item.req_id) {
-                        recorder.emit(Event::Completed { req: item.req_id, t: clock.now() });
-                        remaining -= 1;
-                    }
-                }
-                Err(mpsc::RecvTimeoutError::Timeout) => {
-                    if failed.load(Ordering::SeqCst) {
-                        break;
-                    }
-                }
-                Err(mpsc::RecvTimeoutError::Disconnected) => break,
             }
         }
-        feeder.join().ok();
-        stop.store(true, Ordering::SeqCst);
-
-        let mut stages = Vec::new();
-        for h in handles {
-            match h.join() {
-                Ok(Ok(summary)) => stages.push(summary),
-                Ok(Err(e)) => return Err(e),
-                Err(_) => anyhow::bail!("stage thread panicked"),
-            }
-        }
-        let wall = clock.now();
-        let report = recorder.report(wall, audio_stage);
-        Ok(RunSummary { report, stages, wall_s: wall })
+        session.shutdown(audio_stage)
     }
+}
 
-    /// Chunking/conditioning hints a consumer stage's transfers need
-    /// (derived from ITS model manifest, passed to incoming transfers).
-    fn downstream_hint(&self, i: usize) -> TransferCtx {
-        let s = self.graph.stage(i);
-        let (chunk, ctd) = match self.artifacts.model(&s.model) {
-            Ok(m) => match m.kind.as_str() {
-                "dit" => (
-                    m.cfg_usize("n_tokens").unwrap_or(64),
-                    m.cfg_usize("cond_tokens_dim").unwrap_or(0),
-                ),
-                "cnn_vocoder" => (m.cfg_usize("t_frames").unwrap_or(64), 0),
-                "patch_codec" => (m.cfg_usize("t_max").unwrap_or(64), 0),
-                _ => (0, 0),
-            },
-            Err(_) => (0, 0),
-        };
-        TransferCtx {
-            reqs: Arc::new(Mutex::new(Default::default())), // replaced in stage
-            chunk_frames: chunk,
-            cond_tokens_dim: ctd,
-        }
+/// Chunking/conditioning hints a consumer stage's transfers need
+/// (derived from its model manifest, passed to incoming transfers).
+pub(crate) fn downstream_hint(
+    graph: &StageGraph,
+    artifacts: &Artifacts,
+    i: usize,
+) -> TransferCtx {
+    let s = graph.stage(i);
+    let (chunk, ctd) = match artifacts.model(&s.model) {
+        Ok(m) => match m.kind.as_str() {
+            "dit" => (
+                m.cfg_usize("n_tokens").unwrap_or(64),
+                m.cfg_usize("cond_tokens_dim").unwrap_or(0),
+            ),
+            "cnn_vocoder" => (m.cfg_usize("t_frames").unwrap_or(64), 0),
+            "patch_codec" => (m.cfg_usize("t_max").unwrap_or(64), 0),
+            _ => (0, 0),
+        },
+        Err(_) => (0, 0),
+    };
+    TransferCtx {
+        reqs: Arc::new(Mutex::new(Default::default())), // replaced in stage
+        chunk_frames: chunk,
+        cond_tokens_dim: ctd,
     }
 }
 

@@ -52,6 +52,14 @@ pub struct StageSpec {
     pub recorder: Arc<Recorder>,
     pub clock: RunClock,
     pub stop: Arc<std::sync::atomic::AtomicBool>,
+    /// Per-replica retire signal (elastic scale-down): once set — after
+    /// the control plane has drained this replica's incoming edges — the
+    /// thread exits as soon as its engine and admission queue are empty,
+    /// leaving the rest of the pipeline running.
+    pub retire: Arc<std::sync::atomic::AtomicBool>,
+    /// Live load published for the autoscaler (admission-queue depth +
+    /// engine busyness), updated every loop iteration.
+    pub slot: Arc<crate::serving::ReplicaSlot>,
     /// Set when any stage replica thread fails, so the orchestrator's
     /// collector loop stops waiting for completions that will never
     /// arrive (the failed thread's error surfaces at join time).
@@ -254,6 +262,9 @@ fn run(mut spec: StageSpec) -> Result<StageSummary> {
     let mut tokens_out: HashMap<u64, usize> = HashMap::new();
     let mut first_out: HashMap<u64, bool> = HashMap::new();
     let mut tick: u64 = 0;
+    // Bounded-backoff idle waiting: spin briefly for burst reaction, then
+    // escalate sleeps instead of spinning on empty connectors.
+    let mut backoff = crate::util::Backoff::new();
 
     loop {
         let mut worked = false;
@@ -311,12 +322,14 @@ fn run(mut spec: StageSpec) -> Result<StageSummary> {
 
         // Publish this replica's admission-queue depth so upstream
         // least-depth routers can steer items away from a backed-up
-        // replica (scheduler feedback through the router layer).
+        // replica (scheduler feedback through the router layer), and its
+        // load slot so the autoscaler sees queue pressure and idleness.
         {
             let depth = sched.queue_len();
             for (rx, _) in &inputs {
                 rx.publish_queue_depth(depth);
             }
+            spec.slot.publish(depth, !engine.idle());
         }
 
         // 3) Policy admissions at the token boundary.
@@ -406,12 +419,22 @@ fn run(mut spec: StageSpec) -> Result<StageSummary> {
         }
 
         if !worked {
-            if spec.stop.load(Ordering::SeqCst) && engine.idle() && sched.is_empty() {
+            // Exit on run shutdown, or on a per-replica retire signal
+            // (elastic scale-down: the control plane has already drained
+            // this replica's edges, so an empty engine + queue is final).
+            if (spec.stop.load(Ordering::SeqCst) || spec.retire.load(Ordering::SeqCst))
+                && engine.idle()
+                && sched.is_empty()
+            {
                 break;
             }
-            std::thread::sleep(std::time::Duration::from_micros(200));
+            backoff.idle_wait();
+        } else {
+            backoff.reset();
         }
     }
+    // Final load publication: a retired/stopped replica holds no work.
+    spec.slot.publish(0, false);
 
     let mut summary = StageSummary {
         name: spec.cfg.name.clone(),

@@ -114,6 +114,14 @@ pub struct Artifacts {
 }
 
 impl Artifacts {
+    /// An artifact-less placeholder for frontends that can come up before
+    /// any compiled model exists (e.g. the serving smoke tests): binding,
+    /// `ping`/`config`/`stats` all work; engine construction against it
+    /// fails with a clear "unknown model" error.
+    pub fn empty() -> Self {
+        Self { dir: PathBuf::new(), models: HashMap::new() }
+    }
+
     pub fn load(dir: &Path) -> Result<Self> {
         let manifest_path = dir.join("manifest.json");
         let v = json::from_file(&manifest_path)?;

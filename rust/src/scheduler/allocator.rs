@@ -75,10 +75,54 @@ pub struct AllocationPlan {
     load: HashMap<DeviceId, Vec<String>>,
 }
 
+/// Pick a device group of `tp` members on the currently least-loaded
+/// devices (`load[d]` = replica placements already made on device `d`).
+/// Shared by [`StageAllocator::plan`]'s replica packing and the serving
+/// runtime's incremental scale-up path, so static and elastic placements
+/// follow the same policy.  Does NOT mutate `load` — callers commit the
+/// group with [`commit_group`] once admission (memory) succeeds.
+pub fn pack_group(load: &[usize], tp: usize) -> Vec<DeviceId> {
+    let mut order: Vec<usize> = (0..load.len()).collect();
+    order.sort_by_key(|&d| (load[d], d));
+    order.iter().take(tp).map(|&d| DeviceId(d)).collect()
+}
+
+/// Record a packed group in the load map (scale-up commit).
+pub fn commit_group(load: &mut [usize], group: &[DeviceId]) {
+    for g in group {
+        load[g.0] += 1;
+    }
+}
+
+/// Remove a group from the load map (replica retired).
+pub fn release_group(load: &mut [usize], group: &[DeviceId]) {
+    for g in group {
+        load[g.0] = load[g.0].saturating_sub(1);
+    }
+}
+
 impl AllocationPlan {
     /// Assignment for stage index `i` (stage order of the config).
     pub fn assignment(&self, i: usize) -> &StageAssignment {
         &self.assignments[i]
+    }
+
+    /// Per-device replica-placement counts implied by this plan (the
+    /// seed state for incremental re-packing at runtime).
+    pub fn device_load(&self, n_devices: usize) -> Vec<usize> {
+        let mut load = vec![0usize; n_devices];
+        for a in &self.assignments {
+            for group in &a.replica_devices {
+                commit_group(&mut load, group);
+            }
+        }
+        load
+    }
+
+    /// Total device slots this plan occupies (Σ replicas × TP degree) —
+    /// what the autoscaler's GPU budget counts.
+    pub fn device_slots(&self) -> usize {
+        self.assignments.iter().map(|a| a.replicas * a.devices.len()).sum()
     }
 
     pub fn by_name(&self, stage: &str) -> Option<&StageAssignment> {
@@ -181,13 +225,8 @@ impl<'a> StageAllocator<'a> {
             let mut replica_devices = Vec::with_capacity(s.replicas);
             replica_devices.push(devices.clone());
             for _ in 1..s.replicas {
-                let mut order: Vec<usize> = (0..self.config.n_devices).collect();
-                order.sort_by_key(|&d| (dev_load[d], d));
-                let group: Vec<DeviceId> =
-                    order.iter().take(devices.len()).map(|&d| DeviceId(d)).collect();
-                for g in &group {
-                    dev_load[g.0] += 1;
-                }
+                let group = pack_group(&dev_load, devices.len());
+                commit_group(&mut dev_load, &group);
                 replica_devices.push(group);
             }
             for group in &replica_devices {
@@ -306,6 +345,28 @@ mod tests {
         }
         // First packed replica prefers the empty devices {2,3}.
         assert_eq!(thinker.replica_devices[1], vec![DeviceId(2), DeviceId(3)]);
+    }
+
+    #[test]
+    fn pack_release_roundtrip_keeps_load_consistent() {
+        // The elastic scale-up/down path: pack on least-loaded devices,
+        // commit, then release back to the pre-pack state.
+        let mut load = vec![2usize, 0, 1, 0];
+        let g = pack_group(&load, 2);
+        assert_eq!(g, vec![DeviceId(1), DeviceId(3)], "least-loaded first, index tie-break");
+        commit_group(&mut load, &g);
+        assert_eq!(load, vec![2, 1, 1, 1]);
+        release_group(&mut load, &g);
+        assert_eq!(load, vec![2, 0, 1, 0]);
+    }
+
+    #[test]
+    fn plan_device_load_matches_replica_placements() {
+        let plan = StageAllocator::new(&presets::qwen3_omni_replicated()).plan(None).unwrap();
+        // thinker TP {0,1}, talker {1} + packed replica, vocoder {0}.
+        let load = plan.device_load(2);
+        assert_eq!(load.iter().sum::<usize>(), plan.device_slots());
+        assert_eq!(plan.device_slots(), 5, "tp2 thinker + 2x talker + vocoder");
     }
 
     #[test]

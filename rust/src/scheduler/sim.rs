@@ -293,6 +293,420 @@ pub fn simulate_replicated(
     }
 }
 
+// ---------------------------------------------------------------------
+// Elastic multi-stage model (paper §3 "flexible GPU allocation" under
+// live traffic): a pipeline of AR-like stages whose replica counts can
+// change mid-run, driven by the same control law as the real
+// [`crate::serving`] autoscaler.  Used to evaluate autoscaled vs static
+// replica splits without compiled artifacts (`benches/sched_batching.rs`
+// and `tests/serving.rs`).
+// ---------------------------------------------------------------------
+
+use crate::config::AutoscalerConfig;
+use std::collections::VecDeque;
+
+/// Work one request does at one stage of the elastic pipeline model.
+#[derive(Debug, Clone, Copy)]
+pub struct StageWork {
+    pub prefill: usize,
+    pub decode: usize,
+}
+
+/// One request flowing through the elastic pipeline (stage `i` consumes
+/// `work[i]`; the request enters stage `i+1` when stage `i` finishes it).
+#[derive(Debug, Clone)]
+pub struct ElasticRequest {
+    pub id: u64,
+    pub arrival_s: f64,
+    pub work: Vec<StageWork>,
+}
+
+/// One stage of the elastic pipeline model.
+#[derive(Debug, Clone, Copy)]
+pub struct ElasticStage {
+    pub name: &'static str,
+    pub max_batch: usize,
+}
+
+/// Map an AR trace onto the two-stage Thinker→Talker elastic model:
+/// stage 0 prefills the full input and decodes the text budget, stage 1
+/// decodes the audio budget (the paper's hot Talker stage).
+pub fn two_stage_from_workload(wl: &Workload) -> Vec<ElasticRequest> {
+    wl.requests
+        .iter()
+        .map(|r| ElasticRequest {
+            id: r.id,
+            arrival_s: r.arrival_s,
+            work: vec![
+                StageWork {
+                    prefill: r.total_input_tokens().max(1),
+                    decode: r.max_text_tokens.max(1),
+                },
+                StageWork { prefill: 0, decode: r.max_audio_tokens.max(1) },
+            ],
+        })
+        .collect()
+}
+
+/// How replicas are allocated over the run.
+#[derive(Debug, Clone)]
+pub enum ElasticAllocation {
+    /// Fixed replica count per stage for the whole run (one entry per
+    /// stage; their sum is the GPU budget the split spends).
+    Static(Vec<usize>),
+    /// Elastic: start every stage at `min_replicas` and let the control
+    /// law move replicas toward the bottleneck within `gpu_budget`.
+    Auto(AutoscalerConfig),
+}
+
+/// Results of one elastic run.
+#[derive(Debug, Clone)]
+pub struct ElasticReport {
+    pub policy: String,
+    pub jct: Samples,
+    pub makespan_s: f64,
+    pub scale_ups: usize,
+    pub scale_downs: usize,
+    /// Peak Σ replicas across stages (budget compliance).
+    pub max_slots: usize,
+    /// ∫ Σ replicas dt — GPU-time actually held over the run.
+    pub replica_seconds: f64,
+    /// Live replica count per stage at each scale event `(t, counts)`.
+    pub timeline: Vec<(f64, Vec<usize>)>,
+}
+
+impl ElasticReport {
+    pub fn mean_jct(&self) -> f64 {
+        self.jct.mean()
+    }
+}
+
+struct Lane {
+    req: usize,
+    prefill_left: usize,
+    decode_left: usize,
+}
+
+struct Rep {
+    active: Vec<Lane>,
+    busy: bool,
+    busy_until: f64,
+    draining: bool,
+}
+
+impl Rep {
+    fn idle() -> Self {
+        Self { active: Vec::new(), busy: false, busy_until: 0.0, draining: false }
+    }
+}
+
+struct StageSim {
+    queue: VecDeque<(usize, StageWork)>,
+    reps: Vec<Rep>,
+    last_scale: f64,
+}
+
+/// Serve `reqs` through the elastic pipeline.  Admission is plain
+/// slot-filling continuous batching (identical for static and autoscaled
+/// runs, so the comparison isolates the *allocation* policy); iteration
+/// timing follows [`SimCost`] exactly like [`simulate`].
+pub fn simulate_elastic(
+    stages: &[ElasticStage],
+    cost: &SimCost,
+    reqs: &[ElasticRequest],
+    alloc: &ElasticAllocation,
+) -> ElasticReport {
+    let n_stages = stages.len();
+    assert!(n_stages >= 1, "need at least one stage");
+    for r in reqs {
+        assert_eq!(r.work.len(), n_stages, "request work must cover every stage");
+    }
+    let auto = match alloc {
+        ElasticAllocation::Auto(a) => Some(a.clone()),
+        ElasticAllocation::Static(_) => None,
+    };
+    let mut sims: Vec<StageSim> = match alloc {
+        ElasticAllocation::Static(counts) => {
+            assert_eq!(counts.len(), n_stages);
+            counts
+                .iter()
+                .map(|&c| StageSim {
+                    queue: VecDeque::new(),
+                    reps: (0..c.max(1)).map(|_| Rep::idle()).collect(),
+                    last_scale: f64::NEG_INFINITY,
+                })
+                .collect()
+        }
+        ElasticAllocation::Auto(a) => (0..n_stages)
+            .map(|_| StageSim {
+                queue: VecDeque::new(),
+                reps: (0..a.min_replicas).map(|_| Rep::idle()).collect(),
+                last_scale: f64::NEG_INFINITY,
+            })
+            .collect(),
+    };
+
+    let mut order: Vec<usize> = (0..reqs.len()).collect();
+    order.sort_by(|&a, &b| {
+        reqs[a].arrival_s.total_cmp(&reqs[b].arrival_s).then(reqs[a].id.cmp(&reqs[b].id))
+    });
+    let mut next_arrival = 0usize;
+    let mut next_tick = 0.0f64;
+    let mut now = 0.0f64;
+    let mut jct = Samples::new();
+    let mut scale_ups = 0usize;
+    let mut scale_downs = 0usize;
+    let mut replica_seconds = 0.0f64;
+    let mut timeline: Vec<(f64, Vec<usize>)> = Vec::new();
+    let live_counts = |sims: &[StageSim]| -> Vec<usize> {
+        sims.iter().map(|s| s.reps.iter().filter(|r| !r.draining).count()).collect()
+    };
+    let mut max_slots = sims.iter().map(|s| s.reps.len()).sum::<usize>();
+
+    loop {
+        // (a) Arrivals due now enter the first stage's queue.
+        while next_arrival < order.len() && reqs[order[next_arrival]].arrival_s <= now {
+            let ri = order[next_arrival];
+            next_arrival += 1;
+            sims[0].queue.push_back((ri, reqs[ri].work[0]));
+        }
+
+        // (b) Finish iterations due now: advance lanes, complete requests
+        // (into the next stage's queue, or the JCT sample at the exit).
+        for si in 0..n_stages {
+            let mut forward: Vec<usize> = Vec::new();
+            {
+                let sim = &mut sims[si];
+                for rep in sim.reps.iter_mut() {
+                    if !(rep.busy && rep.busy_until <= now) {
+                        continue;
+                    }
+                    rep.busy = false;
+                    for l in rep.active.iter_mut() {
+                        if l.prefill_left > 0 {
+                            let c = l.prefill_left.min(cost.prefill_chunk);
+                            l.prefill_left -= c;
+                            if l.prefill_left == 0 {
+                                l.decode_left = l.decode_left.saturating_sub(1);
+                            }
+                        } else {
+                            l.decode_left = l.decode_left.saturating_sub(1);
+                        }
+                    }
+                    rep.active.retain(|l| {
+                        let done = l.prefill_left == 0 && l.decode_left == 0;
+                        if done {
+                            forward.push(l.req);
+                        }
+                        !done
+                    });
+                }
+            }
+            for ri in forward {
+                if si + 1 < n_stages {
+                    sims[si + 1].queue.push_back((ri, reqs[ri].work[si + 1]));
+                } else {
+                    jct.push(now - reqs[ri].arrival_s);
+                }
+            }
+        }
+
+        // (c) Autoscaler control ticks due now: scale-downs free budget
+        // first, then scale-ups claim it — one replica per stage per
+        // tick, mirroring the serving-runtime control law.
+        if let Some(a) = &auto {
+            while next_tick <= now {
+                // Scale down: a stage whose per-replica pending queue is
+                // under the threshold and that has a fully idle replica
+                // releases it (it retires in step (d) because it is idle).
+                for si in 0..n_stages {
+                    let live = sims[si].reps.iter().filter(|r| !r.draining).count();
+                    let pressure = sims[si].queue.len() as f64 / live.max(1) as f64;
+                    if now - sims[si].last_scale < a.cooldown_s
+                        || live <= a.min_replicas
+                        || pressure >= a.scale_down_queue
+                    {
+                        continue;
+                    }
+                    let idle = sims[si]
+                        .reps
+                        .iter()
+                        .position(|r| !r.draining && !r.busy && r.active.is_empty());
+                    if let Some(k) = idle {
+                        sims[si].reps[k].draining = true;
+                        sims[si].last_scale = now;
+                        scale_downs += 1;
+                        timeline.push((now, live_counts(&sims)));
+                    }
+                }
+                // Slots still held: every replica that is not a
+                // draining-idle one about to vanish in step (d).
+                let mut slots = sims
+                    .iter()
+                    .flat_map(|s| s.reps.iter())
+                    .filter(|r| !r.draining || r.busy || !r.active.is_empty())
+                    .count();
+                for si in 0..n_stages {
+                    let live = sims[si].reps.iter().filter(|r| !r.draining).count();
+                    let pressure = sims[si].queue.len() as f64 / live.max(1) as f64;
+                    if now - sims[si].last_scale < a.cooldown_s
+                        || live >= a.max_replicas
+                        || pressure < a.scale_up_queue
+                        || (a.gpu_budget > 0 && slots + 1 > a.gpu_budget)
+                    {
+                        continue;
+                    }
+                    sims[si].reps.push(Rep::idle());
+                    sims[si].last_scale = now;
+                    slots += 1;
+                    scale_ups += 1;
+                    timeline.push((now, live_counts(&sims)));
+                }
+                next_tick += a.interval_s;
+            }
+        }
+
+        // (d)+(e) Retire drained replicas; dispatch idle replicas.
+        for si in 0..n_stages {
+            let sim = &mut sims[si];
+            let max_batch = stages[si].max_batch.max(1);
+            let queue = &mut sim.queue;
+            let reps = &mut sim.reps;
+            let mut k = 0;
+            while k < reps.len() {
+                if reps[k].busy {
+                    k += 1;
+                    continue;
+                }
+                if !reps[k].draining {
+                    while reps[k].active.len() < max_batch {
+                        let Some((ri, w)) = queue.pop_front() else { break };
+                        reps[k].active.push(Lane {
+                            req: ri,
+                            prefill_left: w.prefill,
+                            decode_left: w.decode.max(1),
+                        });
+                    }
+                }
+                if reps[k].active.is_empty() {
+                    if reps[k].draining {
+                        reps.remove(k);
+                        continue; // do not advance k: next rep shifted in
+                    }
+                    k += 1;
+                    continue;
+                }
+                let mut tokens = 0usize;
+                for l in &reps[k].active {
+                    tokens +=
+                        if l.prefill_left > 0 { l.prefill_left.min(cost.prefill_chunk) } else { 1 };
+                }
+                reps[k].busy = true;
+                reps[k].busy_until = now + cost.base_s + cost.token_s * tokens as f64;
+                k += 1;
+            }
+        }
+        max_slots = max_slots.max(sims.iter().map(|s| s.reps.len()).sum());
+
+        // (f) Advance to the next event, or stop when nothing is left.
+        let work_pending = next_arrival < order.len()
+            || sims.iter().any(|s| {
+                !s.queue.is_empty() || s.reps.iter().any(|r| r.busy || !r.active.is_empty())
+            });
+        if !work_pending {
+            break;
+        }
+        let mut t_next = f64::INFINITY;
+        if next_arrival < order.len() {
+            t_next = t_next.min(reqs[order[next_arrival]].arrival_s);
+        }
+        for s in &sims {
+            for r in &s.reps {
+                if r.busy {
+                    t_next = t_next.min(r.busy_until);
+                }
+            }
+        }
+        if auto.is_some() {
+            t_next = t_next.min(next_tick);
+        }
+        // Every event at `now` was consumed above, so t_next > now; the
+        // epsilon guards against a pathological zero-cost configuration.
+        let t_next = if t_next > now { t_next } else { now + 1e-9 };
+        let slots: usize = sims.iter().map(|s| s.reps.len()).sum();
+        replica_seconds += slots as f64 * (t_next - now);
+        now = t_next;
+    }
+
+    ElasticReport {
+        policy: match alloc {
+            ElasticAllocation::Static(c) => format!(
+                "static {}",
+                c.iter().map(|n| n.to_string()).collect::<Vec<_>>().join("+")
+            ),
+            ElasticAllocation::Auto(a) => format!("autoscaled (budget {})", a.gpu_budget),
+        },
+        jct,
+        makespan_s: now,
+        scale_ups,
+        scale_downs,
+        max_slots,
+        replica_seconds,
+        timeline,
+    }
+}
+
+/// The autoscaler parameters the elastic-model benchmarks use: a budget
+/// of `budget` single-device replicas shared by all stages, aggressive
+/// thresholds, and a control interval well under the trace's burst
+/// length.  (The real serving runtime defaults are in
+/// [`AutoscalerConfig::default`]; these are tuned for the compressed
+/// time scale of [`SimCost::default`].)
+pub fn bench_autoscaler(budget: usize) -> AutoscalerConfig {
+    AutoscalerConfig {
+        min_replicas: 1,
+        max_replicas: budget.saturating_sub(1).max(1),
+        gpu_budget: budget,
+        scale_up_queue: 1.0,
+        scale_down_queue: 0.25,
+        interval_s: 0.02,
+        cooldown_s: 0.05,
+    }
+}
+
+/// The canonical autoscaled-vs-static comparison (the acceptance
+/// property of the elastic control plane): map `wl` onto the two-stage
+/// Thinker→Talker model, run every static split `(a, budget - a)` of
+/// the GPU budget, and the autoscaled allocation under
+/// [`bench_autoscaler`].  Shared by `omni-serve bench`,
+/// `benches/sched_batching.rs`, and `tests/serving.rs` so the harness
+/// cannot drift between them.  Returns `(static_reports, autoscaled)`.
+pub fn elastic_comparison(wl: &Workload, budget: usize) -> (Vec<ElasticReport>, ElasticReport) {
+    let reqs = two_stage_from_workload(wl);
+    let stages = [
+        ElasticStage { name: "thinker", max_batch: 4 },
+        ElasticStage { name: "talker", max_batch: 4 },
+    ];
+    let cost = SimCost::default();
+    let statics = (1..budget)
+        .map(|a| {
+            simulate_elastic(
+                &stages,
+                &cost,
+                &reqs,
+                &ElasticAllocation::Static(vec![a, budget - a]),
+            )
+        })
+        .collect();
+    let auto = simulate_elastic(
+        &stages,
+        &cost,
+        &reqs,
+        &ElasticAllocation::Auto(bench_autoscaler(budget)),
+    );
+    (statics, auto)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -438,5 +852,95 @@ mod tests {
         let b = simulate_replicated(&mut b_ps, 4, &SimCost::default(), &reqs, SimRouting::LeastWork);
         assert_eq!(a.makespan_s, b.makespan_s);
         assert_eq!(a.iterations, b.iterations);
+    }
+
+    // -----------------------------------------------------------------
+    // Elastic model.
+    // -----------------------------------------------------------------
+
+    const TWO_STAGES: [ElasticStage; 2] = [
+        ElasticStage { name: "thinker", max_batch: 4 },
+        ElasticStage { name: "talker", max_batch: 4 },
+    ];
+
+    #[test]
+    fn elastic_single_stage_static_matches_the_plain_simulation() {
+        // One static replica of one stage must reproduce `simulate` with
+        // slot-bound continuous batching exactly (same timing skeleton).
+        let wl = datasets::librispeech(5, 24, 3.0);
+        let plain_reqs = from_workload(&wl);
+        let plain = simulate(
+            &mut ContinuousBatchingPolicy { max_batch_tokens: 0 },
+            4,
+            &SimCost::default(),
+            &plain_reqs,
+        );
+        let ereqs: Vec<ElasticRequest> = plain_reqs
+            .iter()
+            .map(|r| ElasticRequest {
+                id: r.id,
+                arrival_s: r.arrival_s,
+                work: vec![StageWork { prefill: r.prefill_tokens, decode: r.decode_tokens }],
+            })
+            .collect();
+        let elastic = simulate_elastic(
+            &[ElasticStage { name: "ar", max_batch: 4 }],
+            &SimCost::default(),
+            &ereqs,
+            &ElasticAllocation::Static(vec![1]),
+        );
+        assert_eq!(elastic.jct.len(), plain.jct.len());
+        assert!((elastic.makespan_s - plain.makespan_s).abs() < 1e-9);
+        assert!((elastic.mean_jct() - plain.mean_jct()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn elastic_completes_everything_static_and_autoscaled() {
+        let wl = datasets::bursty_mixed(11, 24, 1.5);
+        let reqs = two_stage_from_workload(&wl);
+        for alloc in [
+            ElasticAllocation::Static(vec![2, 2]),
+            ElasticAllocation::Auto(bench_autoscaler(4)),
+        ] {
+            let rep = simulate_elastic(&TWO_STAGES, &SimCost::default(), &reqs, &alloc);
+            assert_eq!(rep.jct.len(), wl.len(), "{}", rep.policy);
+            assert!(rep.makespan_s > 0.0);
+        }
+    }
+
+    #[test]
+    fn autoscaler_stays_within_budget_and_scales_both_ways() {
+        let wl = datasets::bursty_mixed(3, 32, 2.0);
+        let reqs = two_stage_from_workload(&wl);
+        let auto = bench_autoscaler(4);
+        let rep = simulate_elastic(
+            &TWO_STAGES,
+            &SimCost::default(),
+            &reqs,
+            &ElasticAllocation::Auto(auto.clone()),
+        );
+        assert!(rep.max_slots <= auto.gpu_budget, "peak {} > budget", rep.max_slots);
+        assert!(rep.scale_ups >= 1, "no scale-up on a bursty trace");
+        assert!(rep.scale_downs >= 1, "no scale-down on a bursty trace");
+        // Elasticity buys the JCT win while holding FEWER GPU-seconds
+        // than the always-on static budget.
+        assert!(rep.replica_seconds < auto.gpu_budget as f64 * rep.makespan_s);
+        // The timeline never shows a stage below the floor.
+        for (_, counts) in &rep.timeline {
+            assert!(counts.iter().all(|&c| c >= auto.min_replicas));
+        }
+    }
+
+    #[test]
+    fn elastic_simulation_is_deterministic() {
+        let wl = datasets::bursty_mixed(9, 28, 2.0);
+        let reqs = two_stage_from_workload(&wl);
+        let alloc = ElasticAllocation::Auto(bench_autoscaler(4));
+        let a = simulate_elastic(&TWO_STAGES, &SimCost::default(), &reqs, &alloc);
+        let b = simulate_elastic(&TWO_STAGES, &SimCost::default(), &reqs, &alloc);
+        assert_eq!(a.makespan_s, b.makespan_s);
+        assert_eq!(a.scale_ups, b.scale_ups);
+        assert_eq!(a.scale_downs, b.scale_downs);
+        assert_eq!(a.jct.mean(), b.jct.mean());
     }
 }

@@ -5,63 +5,100 @@
 //! request:  {"op": "generate", "prompt": "...", "modality": "video",
 //!            "mm_frames": 64, "max_text_tokens": 32,
 //!            "max_audio_tokens": 96}
-//! response: {"req_id": N, "text": "...", "audio_tokens": M,
-//!            "jct_s": 1.23}
-//! request:  {"op": "ping"} -> {"ok": true}
+//! response: {"req_id": N, "jct_s": 1.23, "completed": true}
+//! request:  {"op": "ping"}   -> {"ok": true}
+//! request:  {"op": "stats"}  -> {"live": true, "inflight": N,
+//!            "stages": [{"stage": "talker", "replicas": 2,
+//!                        "draining": 0, "queued": 3, "busy": 1}, ...]}
+//! request:  {"op": "shutdown"} -> drains + stops the shared session
 //!
-//! The server accepts connections on a listener thread and serves each
-//! connection by running the request through a fresh single-request
-//! workload on the shared orchestrator configuration.  (Per-connection
-//! pipelines keep the demo server simple; the bench harness exercises
-//! the long-lived orchestrator path.)
+//! All connections share ONE persistent [`ServingSession`]: the stage
+//! graph is spawned on the first `generate` and stays up, and [`Server::serve`]
+//! handles each connection on its own thread, so concurrent requests
+//! from different connections batch together inside the per-stage
+//! schedulers — and, when the pipeline config carries an `autoscaler`
+//! block (or `--autoscale` is passed), stage replicas scale with load
+//! while the server runs.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use anyhow::Result;
 
-use crate::config::PipelineConfig;
+use crate::config::{AutoscalerConfig, PipelineConfig};
 use crate::jobj;
 use crate::json::{self, Value};
 use crate::orchestrator::{Orchestrator, RunOptions};
 use crate::runtime::Artifacts;
+use crate::scheduler::StageAllocator;
+use crate::serving::{ServingSession, SessionOptions, WaitResult};
 use crate::stage_graph::transfers::Registry;
 use crate::tokenizer::Tokenizer;
-use crate::trace::{Modality, Request, Workload};
+use crate::trace::{Modality, Request};
+
+/// Server-level options (CLI surface of `omni-serve serve`).
+#[derive(Debug, Clone, Default)]
+pub struct ServeOptions {
+    /// Elastic autoscaling for the shared session; `None` falls back to
+    /// the pipeline config's `autoscaler` block (static if absent too).
+    pub autoscaler: Option<AutoscalerConfig>,
+}
 
 pub struct Server {
     listener: TcpListener,
     config: PipelineConfig,
     artifacts: Arc<Artifacts>,
+    opts: ServeOptions,
+    /// The shared long-lived session, created on first `generate`.
+    session: Mutex<Option<Arc<ServingSession>>>,
 }
 
 static NEXT_REQ: AtomicU64 = AtomicU64::new(1);
 
 impl Server {
-    pub fn bind(addr: &str, config: PipelineConfig, artifacts: Arc<Artifacts>) -> Result<Self> {
-        Ok(Self { listener: TcpListener::bind(addr)?, config, artifacts })
+    pub fn bind(
+        addr: &str,
+        config: PipelineConfig,
+        artifacts: Arc<Artifacts>,
+        opts: ServeOptions,
+    ) -> Result<Self> {
+        Ok(Self {
+            listener: TcpListener::bind(addr)?,
+            config,
+            artifacts,
+            opts,
+            session: Mutex::new(None),
+        })
     }
 
     pub fn addr(&self) -> String {
         self.listener.local_addr().map(|a| a.to_string()).unwrap_or_default()
     }
 
-    /// Serve forever (blocking).  Each connection handled in turn — the
-    /// underlying pipeline batches *within* a connection's workload.
+    /// Serve forever (blocking).  Each connection gets its own handler
+    /// thread; all of them submit into the one shared session, so
+    /// concurrent requests from different connections batch together
+    /// inside the per-stage schedulers.
     pub fn serve(&self) -> Result<()> {
         eprintln!("omni-serve listening on {}", self.addr());
-        for conn in self.listener.incoming() {
-            let Ok(stream) = conn else { continue };
-            if let Err(e) = self.handle(stream) {
-                eprintln!("connection error: {e}");
+        std::thread::scope(|scope| {
+            for conn in self.listener.incoming() {
+                let Ok(stream) = conn else { continue };
+                scope.spawn(move || {
+                    if let Err(e) = self.handle(stream) {
+                        eprintln!("connection error: {e}");
+                    }
+                });
             }
-        }
+        });
         Ok(())
     }
 
-    /// Serve exactly `n` connections, then return (tests).
+    /// Serve exactly `n` connections sequentially, then return (tests;
+    /// deterministic teardown).
     pub fn serve_n(&self, n: usize) -> Result<()> {
         for conn in self.listener.incoming().take(n) {
             self.handle(conn?)?;
@@ -69,8 +106,40 @@ impl Server {
         Ok(())
     }
 
+    /// The shared session, started lazily on first use.
+    fn session(&self) -> Result<Arc<ServingSession>> {
+        let mut guard = self.session.lock().unwrap();
+        if let Some(s) = guard.as_ref() {
+            return Ok(s.clone());
+        }
+        let orch = Orchestrator::new(
+            self.config.clone(),
+            self.artifacts.clone(),
+            Registry::builtin(),
+            RunOptions::default(),
+        )?;
+        let autoscaler = self
+            .opts
+            .autoscaler
+            .clone()
+            .or_else(|| self.config.autoscaler.clone());
+        let session =
+            Arc::new(ServingSession::start(&orch, SessionOptions { autoscaler })?);
+        *guard = Some(session.clone());
+        Ok(session)
+    }
+
+    fn audio_stage(&self) -> Option<&'static str> {
+        if self.config.stage("talker").is_some() {
+            Some("talker")
+        } else if self.config.stage("backbone").is_some() {
+            Some("backbone")
+        } else {
+            None
+        }
+    }
+
     fn handle(&self, stream: TcpStream) -> Result<()> {
-        let peer = stream.peer_addr().ok();
         let mut writer = stream.try_clone()?;
         let reader = BufReader::new(stream);
         for line in reader.lines() {
@@ -85,7 +154,6 @@ impl Server {
             writer.write_all(json::to_string(&resp).as_bytes())?;
             writer.write_all(b"\n")?;
         }
-        let _ = peer;
         Ok(())
     }
 
@@ -94,9 +162,54 @@ impl Server {
         match v.get("op").as_str().unwrap_or("generate") {
             "ping" => Ok(jobj! { "ok" => true }),
             "config" => Ok(crate::config::loader::to_value(&self.config)),
+            "stats" => self.stats(),
             "generate" => self.generate(&v),
+            "shutdown" => self.shutdown(),
             other => anyhow::bail!("unknown op `{other}`"),
         }
+    }
+
+    /// Live per-stage replica counts and queue depths from the running
+    /// session; before the first `generate` this reports the static plan
+    /// with `"live": false`.
+    fn stats(&self) -> Result<Value> {
+        let session = self.session.lock().unwrap().as_ref().cloned();
+        if let Some(s) = session {
+            let stages: Vec<Value> = s
+                .stage_stats()
+                .iter()
+                .map(|st| {
+                    jobj! {
+                        "stage" => st.stage.clone(),
+                        "replicas" => st.replicas,
+                        "draining" => st.draining,
+                        "queued" => st.queued,
+                        "busy" => st.busy,
+                    }
+                })
+                .collect();
+            return Ok(jobj! {
+                "live" => true,
+                "inflight" => s.inflight(),
+                "stages" => Value::Arr(stages),
+            });
+        }
+        // No session yet: the resolved allocation plan's replica counts.
+        let plan = StageAllocator::new(&self.config).plan(None)?;
+        let stages: Vec<Value> = plan
+            .assignments()
+            .iter()
+            .map(|a| {
+                jobj! {
+                    "stage" => a.stage.clone(),
+                    "replicas" => a.replicas,
+                    "draining" => 0usize,
+                    "queued" => 0usize,
+                    "busy" => 0usize,
+                }
+            })
+            .collect();
+        Ok(jobj! { "live" => false, "inflight" => 0usize, "stages" => Value::Arr(stages) })
     }
 
     fn generate(&self, v: &Value) -> Result<Value> {
@@ -121,22 +234,40 @@ impl Server {
             diffusion_steps: v.get("diffusion_steps").as_usize().unwrap_or(0),
             ignore_eos: v.get("ignore_eos").as_bool().unwrap_or(true),
         };
-        let workload = Workload { name: "server".into(), requests: vec![req] };
-        let orch = Orchestrator::new(
-            self.config.clone(),
-            self.artifacts.clone(),
-            Registry::builtin(),
-            RunOptions::default(),
-        )?;
-        let audio_stage = if self.config.stage("talker").is_some() { Some("talker") } else { None };
-        let summary = orch.run_workload(&workload, audio_stage)?;
-        Ok(jobj! {
-            "req_id" => id as usize,
-            "jct_s" => summary.report.mean_jct(),
-            "ttft_s" => summary.report.mean_ttft(),
-            "rtf" => if summary.report.rtf.is_empty() { -1.0 } else { summary.report.mean_rtf() },
-            "completed" => summary.report.completed,
-        })
+        let session = self.session()?;
+        let handle = session.submit(req)?;
+        loop {
+            match handle.wait_timeout(Duration::from_millis(100)) {
+                WaitResult::Done(c) => {
+                    return Ok(jobj! {
+                        "req_id" => id as usize,
+                        "jct_s" => c.completed_t - handle.submitted_t(),
+                        "completed" => true,
+                    });
+                }
+                WaitResult::Timeout => {
+                    anyhow::ensure!(!session.failed(), "pipeline failed serving request {id}");
+                }
+                WaitResult::Closed => anyhow::bail!("serving session closed"),
+            }
+        }
+    }
+
+    /// Drain and stop the shared session (no-op when none was started).
+    fn shutdown(&self) -> Result<Value> {
+        let session = self.session.lock().unwrap().take();
+        match session {
+            Some(s) => {
+                s.drain(Duration::from_secs(30));
+                let summary = s.shutdown(self.audio_stage())?;
+                Ok(jobj! {
+                    "ok" => true,
+                    "completed" => summary.report.completed,
+                    "mean_jct_s" => summary.report.mean_jct(),
+                })
+            }
+            None => Ok(jobj! { "ok" => true, "completed" => 0usize }),
+        }
     }
 }
 
@@ -155,6 +286,7 @@ mod tests {
             "127.0.0.1:0",
             crate::config::presets::mimo_audio(1),
             artifacts,
+            ServeOptions::default(),
         )
         .unwrap();
         let addr = server.addr();

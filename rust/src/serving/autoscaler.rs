@@ -1,0 +1,223 @@
+//! The elastic autoscaler control loop (paper §3 "flexible GPU
+//! allocation" under live traffic).
+//!
+//! Every `interval_s` the loop samples the scheduler load each engine
+//! replica publishes ([`super::ReplicaSlot`]: pending admission-queue
+//! depth + engine busyness) and makes at most one decision per stage:
+//!
+//! * **scale up** — mean queue depth per live replica ≥ `scale_up_queue`:
+//!   pack a device group on the least-loaded devices
+//!   ([`pack_group`]), pass memory admission on the session's
+//!   [`crate::device::DevicePool`], wire the replica into every routed
+//!   edge, and spawn its engine thread.  Gated by the per-stage
+//!   `max_replicas` cap and the global `gpu_budget` in device slots.
+//! * **scale down** — mean queue depth < `scale_down_queue` and an idle
+//!   replica exists: *drain before retire*.  The victim's incoming edges
+//!   stop routing new requests to it
+//!   ([`crate::connector::router::EdgeCtl::drain_consumer`]); once
+//!   nothing is in flight, no sticky request is assigned, and its engine
+//!   and queue are empty, the replica thread is told to exit, joined,
+//!   unwired, and its devices released.
+//!
+//! Decisions are recorded as [`Event::Scale`] so the run report carries
+//! the scale-event log and replica-count timeline.
+
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::config::{AutoscalerConfig, RoutingKind};
+use crate::metrics::Event;
+use crate::scheduler::allocator::{commit_group, pack_group, release_group};
+
+use super::{spawn_replica, SessionInner};
+
+/// Control-loop entry point (runs on the session's autoscaler thread
+/// until the session stops or fails).
+pub(crate) fn run(inner: &Arc<SessionInner>, cfg: &AutoscalerConfig) {
+    loop {
+        std::thread::sleep(Duration::from_secs_f64(cfg.interval_s));
+        if inner.stop.load(Ordering::SeqCst) || inner.failed.load(Ordering::SeqCst) {
+            return;
+        }
+        if let Err(e) = tick(inner, cfg) {
+            eprintln!("autoscaler tick failed: {e:#}");
+        }
+    }
+}
+
+/// Whether a stage's incoming edges allow adding replicas: per-item
+/// routing into a stateful transfer would scramble per-request state, so
+/// such stages stay at their configured replica count.
+fn scalable(inner: &SessionInner, stage_name: &str) -> bool {
+    for (ei, e) in inner.graph.config.edges.iter().enumerate() {
+        if e.to != stage_name {
+            continue;
+        }
+        let per_item = matches!(
+            inner.edge_routing[ei],
+            RoutingKind::RoundRobin | RoutingKind::LeastDepth
+        );
+        if per_item && !inner.registry.is_stateless(&e.transfer) {
+            return false;
+        }
+    }
+    true
+}
+
+pub(crate) fn tick(inner: &Arc<SessionInner>, cfg: &AutoscalerConfig) -> Result<()> {
+    let now = inner.clock.now();
+    let mut stages = inner.stages.lock().unwrap();
+
+    // ---- 1. Progress draining replicas (drain → retire → reap). ----
+    for st in stages.iter_mut() {
+        for r in st.replicas.iter() {
+            if r.draining && !r.retire.load(Ordering::SeqCst) {
+                let quiesced = r
+                    .in_edges
+                    .iter()
+                    .all(|&(ei, uid)| inner.edges[ei].consumer_quiesced(uid))
+                    && r.slot.queued() == 0
+                    && !r.slot.busy();
+                if quiesced {
+                    // The replica thread exits once its engine drains.
+                    r.retire.store(true, Ordering::SeqCst);
+                }
+            }
+        }
+        let mut k = 0;
+        while k < st.replicas.len() {
+            if !(st.replicas[k].draining && st.replicas[k].join.is_finished()) {
+                k += 1;
+                continue;
+            }
+            let r = st.replicas.remove(k);
+            for &(ei, uid) in &r.in_edges {
+                inner.edges[ei].remove_consumer(uid);
+            }
+            for &(ei, uid) in &r.out_edges {
+                inner.edges[ei].remove_producer(uid);
+            }
+            for res in &r.reservations {
+                inner.pool.release(res);
+            }
+            release_group(&mut inner.dev_load.lock().unwrap(), &r.devices);
+            match r.join.join() {
+                Ok(Ok(summary)) => inner.retired.lock().unwrap().push(summary),
+                Ok(Err(e)) => inner.record_error(e),
+                Err(_) => inner.record_error(anyhow::anyhow!("stage thread panicked")),
+            }
+        }
+    }
+
+    // ---- 2. Scale decisions (at most one per stage per tick). ----
+    // Device slots currently held by every replica, live or draining —
+    // a draining replica's devices free only when it is reaped.
+    let mut slots_used: usize = stages
+        .iter()
+        .map(|st| st.replicas.iter().map(|r| r.devices.len()).sum::<usize>())
+        .sum();
+
+    for si in 0..stages.len() {
+        let stage_name = inner.graph.stage(si).name.clone();
+        let st = &mut stages[si];
+        if now - st.last_scale_t < cfg.cooldown_s {
+            continue;
+        }
+        let live: Vec<usize> = (0..st.replicas.len())
+            .filter(|&k| !st.replicas[k].draining)
+            .collect();
+        let n_live = live.len();
+        if n_live == 0 {
+            continue;
+        }
+        let queued: usize = live.iter().map(|&k| st.replicas[k].slot.queued()).sum();
+        let pressure = queued as f64 / n_live as f64;
+
+        // Scale down: drain the newest fully idle replica.
+        if n_live > cfg.min_replicas && pressure < cfg.scale_down_queue {
+            let victim = live
+                .iter()
+                .rev()
+                .find(|&&k| {
+                    !st.replicas[k].slot.busy() && st.replicas[k].slot.queued() == 0
+                })
+                .copied();
+            if let Some(k) = victim {
+                // Entry replicas: unregister the front sender first so no
+                // new request lands in its channel while it drains.
+                if let Some(fuid) = st.replicas[k].front_uid {
+                    inner.front.lock().unwrap().0.retain(|f| f.uid != fuid);
+                }
+                for &(ei, uid) in &st.replicas[k].in_edges {
+                    inner.edges[ei].drain_consumer(uid);
+                }
+                st.replicas[k].draining = true;
+                st.last_scale_t = now;
+                inner.recorder.emit(Event::Scale {
+                    stage: stage_name.clone(),
+                    t: now,
+                    from: n_live,
+                    to: n_live - 1,
+                });
+                continue;
+            }
+        }
+
+        // Scale up: pack, admit, wire, spawn.
+        if n_live < cfg.max_replicas
+            && pressure >= cfg.scale_up_queue
+            && scalable(inner, &stage_name)
+        {
+            let tp = inner.plan.assignment(si).devices.len().max(1);
+            if cfg.gpu_budget > 0 && slots_used + tp > cfg.gpu_budget {
+                continue;
+            }
+            let group = {
+                let load = inner.dev_load.lock().unwrap();
+                pack_group(&load, tp)
+            };
+            let model = inner.artifacts.model(&inner.graph.stage(si).model)?;
+            let ord = st.next_ord;
+            let label = format!("{stage_name}#r{ord}");
+            let Ok(reservations) =
+                inner.pool.reserve_tp(&group, model.weight_bytes(), &label)
+            else {
+                // Device memory is the second admission gate; try again
+                // once a drain frees capacity.
+                continue;
+            };
+            commit_group(&mut inner.dev_load.lock().unwrap(), &group);
+            let reservation_copy = reservations.clone();
+            // Size-1 barrier: the replica thread's readiness rendezvous
+            // returns immediately, so the control loop never holds the
+            // stages lock across engine construction (stats/shutdown stay
+            // responsive); the cooldown covers the build latency.
+            let ready = Arc::new(Barrier::new(1));
+            match spawn_replica(inner, si, ord, group.clone(), reservations, &ready) {
+                Ok(h) => {
+                    st.next_ord += 1;
+                    st.replicas.push(h);
+                    st.last_scale_t = now;
+                    slots_used += tp;
+                    inner.recorder.emit(Event::Scale {
+                        stage: stage_name,
+                        t: now,
+                        from: n_live,
+                        to: n_live + 1,
+                    });
+                }
+                Err(e) => {
+                    for res in &reservation_copy {
+                        inner.pool.release(res);
+                    }
+                    release_group(&mut inner.dev_load.lock().unwrap(), &group);
+                    eprintln!("autoscaler: spawning `{label}` failed: {e:#}");
+                }
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,715 @@
+//! Persistent online serving runtime (paper §3: the system is a
+//! *serving* system — continuous request arrivals, per-stage batching,
+//! and flexible GPU allocation that follows the bottleneck).
+//!
+//! A [`ServingSession`] spawns the stage graph **once** and stays up:
+//!
+//! ```text
+//!             submit() ──► entry replicas ──► ... stage graph ... ──► exit replicas
+//!                │   ▲                                                     │
+//!   CompletionHandle │ front senders                                  sink channel
+//!                │   │                                                     │
+//!                ▼   │                                                     ▼
+//!              caller└──────────────── collector thread ◄──────────────────┘
+//!
+//!              autoscaler thread ──► EdgeCtl add/drain/remove ──► replica spawn/retire
+//!                     ▲                                                  │
+//!                     └──────── ReplicaSlot load publications ◄──────────┘
+//! ```
+//!
+//! * Requests are submitted continuously through [`ServingSession::submit`];
+//!   each returns a [`CompletionHandle`] resolved by the collector thread
+//!   when the request's final item leaves an exit stage.
+//! * The optional [`autoscaler`] control loop samples every replica's
+//!   published scheduler load and scales stage replicas up/down at
+//!   runtime — wiring new replicas into the routed edges
+//!   ([`crate::connector::router::EdgeCtl`]), packing their devices
+//!   incrementally ([`crate::scheduler::allocator::pack_group`]), and
+//!   retiring drained replicas without dropping in-flight requests.
+//! * [`ServingSession::shutdown`] stops the control loop, joins every
+//!   replica thread (in-flight work finishes first), and reports the
+//!   whole session as a [`RunSummary`].
+//!
+//! The one-shot [`crate::orchestrator::Orchestrator::run_workload`] is a
+//! thin wrapper over this runtime, and the TCP frontend
+//! ([`crate::server`]) shares one session across connections.
+
+pub mod autoscaler;
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Barrier, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::config::{AutoscalerConfig, ConnectorKind, PipelineConfig, RoutingKind};
+use crate::connector::router::EdgeCtl;
+use crate::connector::tcp::MooncakeStore;
+use crate::device::{DeviceId, DevicePool, Reservation};
+use crate::engine::StageItem;
+use crate::metrics::{Event, Recorder};
+use crate::orchestrator::{self, stage, Orchestrator, RunClock, RunOptions, RunSummary, StageSummary};
+use crate::runtime::Artifacts;
+use crate::scheduler::AllocationPlan;
+use crate::stage_graph::transfers::{Registry, ReqMeta, ReqTable};
+use crate::stage_graph::StageGraph;
+use crate::trace::Request;
+
+/// Live load one engine replica publishes every stage-loop iteration,
+/// read by the autoscaler (and the drain-before-retire check).
+#[derive(Debug, Default)]
+pub struct ReplicaSlot {
+    queued: AtomicUsize,
+    busy: AtomicBool,
+}
+
+impl ReplicaSlot {
+    pub fn publish(&self, queued: usize, busy: bool) {
+        self.queued.store(queued, Ordering::Relaxed);
+        self.busy.store(busy, Ordering::Relaxed);
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queued.load(Ordering::Relaxed)
+    }
+
+    pub fn busy(&self) -> bool {
+        self.busy.load(Ordering::Relaxed)
+    }
+}
+
+/// Session start options.
+#[derive(Debug, Clone, Default)]
+pub struct SessionOptions {
+    /// Elastic autoscaling; `None` keeps replica counts frozen at the
+    /// allocation plan (the pre-serving-runtime behaviour).
+    pub autoscaler: Option<AutoscalerConfig>,
+}
+
+impl SessionOptions {
+    /// Honor the pipeline config's `autoscaler` block, if present.
+    pub fn from_config(config: &PipelineConfig) -> Self {
+        Self { autoscaler: config.autoscaler.clone() }
+    }
+}
+
+/// Delivered when a request's final item leaves an exit stage.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub req_id: u64,
+    /// Run-relative completion time (seconds on the session clock).
+    pub completed_t: f64,
+}
+
+/// Outcome of [`CompletionHandle::wait_timeout`].
+#[derive(Debug)]
+pub enum WaitResult {
+    Done(Completion),
+    Timeout,
+    /// The session's collector is gone (session shut down or failed);
+    /// this completion can no longer arrive.
+    Closed,
+}
+
+/// Per-request completion channel returned by [`ServingSession::submit`].
+pub struct CompletionHandle {
+    req_id: u64,
+    submitted_t: f64,
+    rx: mpsc::Receiver<Completion>,
+}
+
+impl CompletionHandle {
+    pub fn req_id(&self) -> u64 {
+        self.req_id
+    }
+
+    /// Submission time on the session clock (JCT = completed_t - this).
+    pub fn submitted_t(&self) -> f64 {
+        self.submitted_t
+    }
+
+    pub fn wait_timeout(&self, d: Duration) -> WaitResult {
+        match self.rx.recv_timeout(d) {
+            Ok(c) => WaitResult::Done(c),
+            Err(mpsc::RecvTimeoutError::Timeout) => WaitResult::Timeout,
+            Err(mpsc::RecvTimeoutError::Disconnected) => WaitResult::Closed,
+        }
+    }
+}
+
+/// One live (or draining) engine replica of a stage.
+pub(crate) struct ReplicaHandle {
+    pub(crate) uid: u64,
+    /// Display replica number (monotonic per stage, never reused).
+    pub(crate) ord: usize,
+    pub(crate) join: JoinHandle<Result<StageSummary>>,
+    pub(crate) retire: Arc<AtomicBool>,
+    pub(crate) slot: Arc<ReplicaSlot>,
+    pub(crate) devices: Vec<DeviceId>,
+    pub(crate) reservations: Vec<Reservation>,
+    /// `(edge index, consumer uid)` for each incoming routed edge.
+    pub(crate) in_edges: Vec<(usize, u64)>,
+    /// `(edge index, producer uid)` for each outgoing routed edge.
+    pub(crate) out_edges: Vec<(usize, u64)>,
+    /// Entry replicas only: uid of the front sender registered for it.
+    pub(crate) front_uid: Option<u64>,
+    pub(crate) draining: bool,
+}
+
+pub(crate) struct StageState {
+    pub(crate) replicas: Vec<ReplicaHandle>,
+    pub(crate) next_ord: usize,
+    pub(crate) last_scale_t: f64,
+}
+
+pub(crate) struct FrontTx {
+    pub(crate) uid: u64,
+    pub(crate) tx: mpsc::Sender<Request>,
+}
+
+/// Shared interior of a session (stage threads, the collector, the
+/// autoscaler, and API callers all hold it through an `Arc`).
+pub(crate) struct SessionInner {
+    pub(crate) graph: StageGraph,
+    pub(crate) plan: AllocationPlan,
+    pub(crate) artifacts: Arc<Artifacts>,
+    pub(crate) registry: Registry,
+    pub(crate) opts: RunOptions,
+    pub(crate) clock: RunClock,
+    pub(crate) recorder: Arc<Recorder>,
+    pub(crate) reqs: ReqTable,
+    pub(crate) stop: Arc<AtomicBool>,
+    pub(crate) failed: Arc<AtomicBool>,
+    pub(crate) inflight: AtomicUsize,
+    /// One control handle per config edge (same order as
+    /// `graph.config.edges`).
+    pub(crate) edges: Vec<Arc<EdgeCtl>>,
+    /// Resolved routing per config edge (parallel to `edges`).
+    pub(crate) edge_routing: Vec<RoutingKind>,
+    pub(crate) stages: Mutex<Vec<StageState>>,
+    /// Entry-stage request senders + rotation cursor.
+    pub(crate) front: Mutex<(Vec<FrontTx>, usize)>,
+    pub(crate) completions: Mutex<HashMap<u64, mpsc::Sender<Completion>>>,
+    /// Kept for cloning into dynamically spawned exit replicas; dropped
+    /// at shutdown so the collector sees the channel close.
+    pub(crate) sink_tx: Mutex<Option<mpsc::Sender<StageItem>>>,
+    pub(crate) pool: DevicePool,
+    pub(crate) dev_load: Mutex<Vec<usize>>,
+    pub(crate) next_uid: AtomicU64,
+    /// Summaries of replicas retired mid-run.
+    pub(crate) retired: Mutex<Vec<StageSummary>>,
+    /// First error surfaced by a replica joined mid-run (reported at
+    /// shutdown, like errors from replicas joined there).
+    pub(crate) first_error: Mutex<Option<anyhow::Error>>,
+    pub(crate) store_addr: Option<String>,
+    _store: Option<MooncakeStore>,
+}
+
+impl SessionInner {
+    pub(crate) fn record_error(&self, e: anyhow::Error) {
+        let mut slot = self.first_error.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(e);
+        }
+    }
+}
+
+/// Live per-stage snapshot for the `stats` server op.
+#[derive(Debug, Clone)]
+pub struct StageLiveStats {
+    pub stage: String,
+    /// Live (non-draining) engine replicas.
+    pub replicas: usize,
+    pub draining: usize,
+    /// Σ published admission-queue depths across live replicas.
+    pub queued: usize,
+    /// Live replicas whose engine is mid-work.
+    pub busy: usize,
+}
+
+/// A persistent serving runtime over one pipeline.
+pub struct ServingSession {
+    inner: Arc<SessionInner>,
+    collector: Mutex<Option<JoinHandle<()>>>,
+    autoscaler: Mutex<Option<JoinHandle<()>>>,
+    shut: Mutex<bool>,
+}
+
+impl ServingSession {
+    /// Spawn the stage graph and stay up.  Blocks until every initial
+    /// engine replica is constructed (compilation excluded from request
+    /// timing by the clock reset), then starts the collector and — when
+    /// configured — the autoscaler control loop.
+    pub fn start(orch: &Orchestrator, opts: SessionOptions) -> Result<ServingSession> {
+        let graph = orch.graph.clone();
+        let plan = orch.plan.clone();
+        let run_opts = orch.opts.clone();
+
+        // Spawn a Mooncake store if any edge wants TCP.
+        let needs_tcp =
+            graph.config.edges.iter().any(|e| e.connector == ConnectorKind::Tcp);
+        let mut store = None;
+        let store_addr: Option<String> = if needs_tcp {
+            match &run_opts.store_addr {
+                Some(a) => Some(a.clone()),
+                None => {
+                    let s = MooncakeStore::spawn("127.0.0.1:0")?;
+                    let a = s.addr().to_string();
+                    store = Some(s);
+                    Some(a)
+                }
+            }
+        } else {
+            None
+        };
+
+        // One mutable-endpoint EdgeCtl per config edge.  Auto routing
+        // resolves to affinity: identical to pass-through at one replica,
+        // and the only stateful-safe policy once the autoscaler (or a
+        // `replicas` setting) replicates the consumer.
+        let mut edges = Vec::with_capacity(graph.config.edges.len());
+        let mut edge_routing = Vec::with_capacity(graph.config.edges.len());
+        for e in &graph.config.edges {
+            let routing = match e.routing {
+                RoutingKind::Auto => RoutingKind::Affinity,
+                explicit => explicit,
+            };
+            edges.push(Arc::new(EdgeCtl::new(
+                e.connector,
+                routing,
+                &format!("{}2{}", e.from, e.to),
+                store_addr.as_deref(),
+            )));
+            edge_routing.push(routing);
+        }
+
+        let (sink_tx, sink_rx) = mpsc::channel::<StageItem>();
+        let pool = DevicePool::new(graph.config.n_devices, graph.config.device_bytes);
+        let dev_load = plan.device_load(graph.config.n_devices);
+        let inner = Arc::new(SessionInner {
+            graph,
+            plan,
+            artifacts: orch.artifacts.clone(),
+            registry: orch.registry.clone(),
+            opts: run_opts,
+            clock: RunClock::new(),
+            recorder: Arc::new(Recorder::new()),
+            reqs: Arc::new(Mutex::new(Default::default())),
+            stop: Arc::new(AtomicBool::new(false)),
+            failed: Arc::new(AtomicBool::new(false)),
+            inflight: AtomicUsize::new(0),
+            edges,
+            edge_routing,
+            stages: Mutex::new(Vec::new()),
+            front: Mutex::new((Vec::new(), 0)),
+            completions: Mutex::new(HashMap::new()),
+            sink_tx: Mutex::new(Some(sink_tx)),
+            pool,
+            dev_load: Mutex::new(dev_load),
+            next_uid: AtomicU64::new(0),
+            retired: Mutex::new(Vec::new()),
+            first_error: Mutex::new(None),
+            store_addr,
+            _store: store,
+        });
+
+        // Reserve weight memory for every initial replica BEFORE any
+        // thread spawns, so an over-replicated pipeline fails cleanly
+        // instead of stranding threads on the readiness barrier.
+        type Placement = (Vec<DeviceId>, Vec<Reservation>);
+        let n_stages = inner.graph.n_stages();
+        let mut placements: Vec<Vec<Placement>> = Vec::new();
+        for i in 0..n_stages {
+            let a = inner.plan.assignment(i);
+            let s = inner.graph.stage(i);
+            let model = inner.artifacts.model(&s.model)?;
+            let mut per_stage = Vec::with_capacity(a.replicas);
+            for (r, group) in a.replica_devices.iter().enumerate() {
+                let label =
+                    if r == 0 { s.name.clone() } else { format!("{}#r{r}", s.name) };
+                let rs = inner
+                    .pool
+                    .reserve_tp(group, model.weight_bytes(), &label)
+                    .with_context(|| format!("placing pipeline `{}`", inner.graph.config.name))?;
+                per_stage.push((group.clone(), rs));
+            }
+            placements.push(per_stage);
+        }
+
+        // Spawn all initial replicas against one shared barrier so their
+        // engine builds overlap; rendezvous, then zero the clock.
+        let total: usize = placements.iter().map(|p| p.len()).sum();
+        let ready = Arc::new(Barrier::new(total + 1));
+        {
+            let mut states = Vec::with_capacity(n_stages);
+            for (i, per_stage) in placements.into_iter().enumerate() {
+                let mut st = StageState { replicas: Vec::new(), next_ord: 0, last_scale_t: 0.0 };
+                for (group, reservations) in per_stage {
+                    let h = spawn_replica(&inner, i, st.next_ord, group, reservations, &ready)?;
+                    st.next_ord += 1;
+                    st.replicas.push(h);
+                }
+                states.push(st);
+            }
+            *inner.stages.lock().unwrap() = states;
+        }
+        ready.wait();
+        inner.clock.reset();
+
+        // Collector: resolves per-request completion channels and emits
+        // the Completed lifecycle event.  The completions map doubles as
+        // the dedup set AND the memory bound of the long-lived session:
+        // claiming a request's entry is what makes it complete (exactly
+        // once), and its metadata is evicted right there — a session
+        // serving requests for days holds state only for what is in
+        // flight.  (Post-completion straggler items — e.g. a Thinker
+        // still draining its final chunks after the exit stage hit its
+        // audio budget — find no entry and are dropped, matching the
+        // one-shot runner's behaviour.)
+        let collector = {
+            let inner = inner.clone();
+            std::thread::Builder::new().name("serving-collector".into()).spawn(move || {
+                loop {
+                    match sink_rx.recv_timeout(Duration::from_millis(50)) {
+                        Ok(item) => {
+                            if !item.finished {
+                                continue;
+                            }
+                            let tx = inner.completions.lock().unwrap().remove(&item.req_id);
+                            let Some(tx) = tx else { continue };
+                            let t = inner.clock.now();
+                            inner.recorder.emit(Event::Completed { req: item.req_id, t });
+                            inner.reqs.lock().unwrap().remove(&item.req_id);
+                            let _ = inner.inflight.fetch_update(
+                                Ordering::SeqCst,
+                                Ordering::SeqCst,
+                                |v| Some(v.saturating_sub(1)),
+                            );
+                            let _ = tx.send(Completion {
+                                req_id: item.req_id,
+                                completed_t: t,
+                            });
+                        }
+                        Err(mpsc::RecvTimeoutError::Timeout) => {}
+                        // Every sink sender is gone (all exit replicas
+                        // joined and the session dropped its clone).
+                        Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                    }
+                }
+            })?
+        };
+
+        let auto_handle = match opts.autoscaler {
+            Some(cfg) => {
+                cfg.validate()?;
+                let inner = inner.clone();
+                Some(
+                    std::thread::Builder::new()
+                        .name("serving-autoscaler".into())
+                        .spawn(move || autoscaler::run(&inner, &cfg))?,
+                )
+            }
+            None => None,
+        };
+
+        Ok(ServingSession {
+            inner,
+            collector: Mutex::new(Some(collector)),
+            autoscaler: Mutex::new(auto_handle),
+            shut: Mutex::new(false),
+        })
+    }
+
+    /// Run-relative seconds on the session clock.
+    pub fn now(&self) -> f64 {
+        self.inner.clock.now()
+    }
+
+    /// Whether any stage replica has failed (the error surfaces at
+    /// [`Self::shutdown`]).
+    pub fn failed(&self) -> bool {
+        self.inner.failed.load(Ordering::SeqCst)
+    }
+
+    /// Requests submitted and not yet completed.
+    pub fn inflight(&self) -> usize {
+        self.inner.inflight.load(Ordering::SeqCst)
+    }
+
+    /// Submit one request.  Registers its metadata, emits the `Arrived`
+    /// event, and injects it into an entry-stage replica (rotating across
+    /// live replicas; a dead replica costs a retry, never a clone).
+    pub fn submit(&self, req: Request) -> Result<CompletionHandle> {
+        anyhow::ensure!(
+            !self.inner.stop.load(Ordering::SeqCst),
+            "serving session is shutting down"
+        );
+        let id = req.id;
+        let now = self.inner.clock.now();
+        self.inner.reqs.lock().unwrap().insert(
+            id,
+            ReqMeta {
+                seed: req.seed,
+                max_audio_tokens: req.max_audio_tokens,
+                diffusion_steps: req.diffusion_steps,
+                ignore_eos: req.ignore_eos,
+                prompt_tokens: req.prompt_tokens.clone(),
+                max_text_tokens: req.max_text_tokens,
+            },
+        );
+        let (ctx, crx) = mpsc::channel();
+        self.inner.completions.lock().unwrap().insert(id, ctx);
+        self.inner.inflight.fetch_add(1, Ordering::SeqCst);
+        self.inner.recorder.emit(Event::Arrived { req: id, t: now });
+
+        let mut front = self.inner.front.lock().unwrap();
+        let (txs, next) = &mut *front;
+        let mut pending = Some(req);
+        while !txs.is_empty() {
+            let i = *next % txs.len();
+            match txs[i].tx.send(pending.take().expect("requeued on failure")) {
+                Ok(()) => {
+                    *next = (i + 1) % txs.len();
+                    return Ok(CompletionHandle { req_id: id, submitted_t: now, rx: crx });
+                }
+                Err(mpsc::SendError(bounced)) => {
+                    // Dead entry replica: prune its sender and retry.
+                    pending = Some(bounced);
+                    txs.remove(i);
+                }
+            }
+        }
+        // No live entry replica: roll the registration back.
+        drop(front);
+        self.inner.reqs.lock().unwrap().remove(&id);
+        self.inner.completions.lock().unwrap().remove(&id);
+        let _ = self.inner.inflight.fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| {
+            Some(v.saturating_sub(1))
+        });
+        anyhow::bail!("no live entry-stage replica to accept request {id}")
+    }
+
+    /// Block until every submitted request completed, the session failed,
+    /// or `timeout` elapsed.  Returns true when fully drained.
+    pub fn drain(&self, timeout: Duration) -> bool {
+        let t0 = std::time::Instant::now();
+        loop {
+            if self.inflight() == 0 {
+                return true;
+            }
+            if self.failed() || t0.elapsed() >= timeout {
+                return self.inflight() == 0;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    /// Live per-stage replica counts and queue depths (the `stats` op).
+    pub fn stage_stats(&self) -> Vec<StageLiveStats> {
+        let stages = self.inner.stages.lock().unwrap();
+        stages
+            .iter()
+            .enumerate()
+            .map(|(i, st)| {
+                let mut out = StageLiveStats {
+                    stage: self.inner.graph.stage(i).name.clone(),
+                    replicas: 0,
+                    draining: 0,
+                    queued: 0,
+                    busy: 0,
+                };
+                for r in &st.replicas {
+                    if r.draining {
+                        out.draining += 1;
+                        continue;
+                    }
+                    out.replicas += 1;
+                    out.queued += r.slot.queued();
+                    if r.slot.busy() {
+                        out.busy += 1;
+                    }
+                }
+                out
+            })
+            .collect()
+    }
+
+    /// Live replica count of one stage.
+    pub fn replica_count(&self, stage: &str) -> usize {
+        self.stage_stats()
+            .iter()
+            .find(|s| s.stage == stage)
+            .map(|s| s.replicas)
+            .unwrap_or(0)
+    }
+
+    /// Stop the control loop, let in-flight work finish, join every
+    /// replica thread, and report the whole session.  Call
+    /// [`Self::drain`] first when completions must all be in the report.
+    pub fn shutdown(&self, audio_stage: Option<&str>) -> Result<RunSummary> {
+        {
+            let mut shut = self.shut.lock().unwrap();
+            anyhow::ensure!(!*shut, "serving session already shut down");
+            *shut = true;
+        }
+        // Autoscaler first, so no replica spawns during teardown.
+        self.inner.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.autoscaler.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        // Close the frontend; entry replicas drain their channels.
+        self.inner.front.lock().unwrap().0.clear();
+
+        // Join every replica (live and draining).  Stage threads exit
+        // once their engine and admission queue are empty, so in-flight
+        // work finishes first.
+        let states: Vec<StageState> =
+            std::mem::take(&mut *self.inner.stages.lock().unwrap());
+        let mut summaries: Vec<StageSummary> =
+            std::mem::take(&mut *self.inner.retired.lock().unwrap());
+        let mut first_err: Option<anyhow::Error> =
+            self.inner.first_error.lock().unwrap().take();
+        for st in states {
+            for r in st.replicas {
+                r.retire.store(true, Ordering::SeqCst);
+                match r.join.join() {
+                    Ok(Ok(summary)) => summaries.push(summary),
+                    Ok(Err(e)) => {
+                        if first_err.is_none() {
+                            first_err = Some(e);
+                        }
+                    }
+                    Err(_) => {
+                        if first_err.is_none() {
+                            first_err = Some(anyhow::anyhow!("stage thread panicked"));
+                        }
+                    }
+                }
+                for res in &r.reservations {
+                    self.inner.pool.release(res);
+                }
+            }
+        }
+        // Drop the session's sink sender: with all replicas joined the
+        // channel closes and the collector exits after draining it.
+        *self.inner.sink_tx.lock().unwrap() = None;
+        if let Some(h) = self.collector.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        // (stage index, ord) order, matching the pre-serving summaries.
+        summaries.sort_by_key(|s| {
+            (self.inner.graph.stage_index(&s.name).unwrap_or(usize::MAX), s.replica)
+        });
+        let wall = self.inner.clock.now();
+        let report = self.inner.recorder.report(wall, audio_stage);
+        Ok(RunSummary { report, stages: summaries, wall_s: wall })
+    }
+}
+
+impl Drop for ServingSession {
+    fn drop(&mut self) {
+        // A session dropped without shutdown still signals its threads to
+        // exit (they are not joined here — never panic in drop).
+        self.inner.stop.store(true, Ordering::SeqCst);
+        self.inner.front.lock().unwrap().0.clear();
+        *self.inner.sink_tx.lock().unwrap() = None;
+    }
+}
+
+/// Spawn one engine replica of stage `stage_idx`: wire it into every
+/// routed edge touching the stage, register its front sender (entry
+/// stages), and start its thread.  `ready` is the construction barrier:
+/// the session start passes one sized for all initial replicas + itself;
+/// dynamic scale-ups pass a size-1 barrier (no rendezvous — the replica
+/// simply starts serving when its engine is built).
+pub(crate) fn spawn_replica(
+    inner: &Arc<SessionInner>,
+    stage_idx: usize,
+    ord: usize,
+    devices: Vec<DeviceId>,
+    reservations: Vec<Reservation>,
+    ready: &Arc<Barrier>,
+) -> Result<ReplicaHandle> {
+    let graph = &inner.graph;
+    let cfg = graph.stage(stage_idx).clone();
+    let uid = inner.next_uid.fetch_add(1, Ordering::Relaxed);
+
+    let mut rxs = Vec::new();
+    let mut in_edges = Vec::new();
+    let mut txs = Vec::new();
+    let mut out_edges = Vec::new();
+    for (ei, e) in graph.config.edges.iter().enumerate() {
+        if e.to == cfg.name {
+            let (rx, cuid) = inner.edges[ei].add_consumer()?;
+            rxs.push((rx, e.transfer.clone()));
+            in_edges.push((ei, cuid));
+        }
+        if e.from == cfg.name {
+            let (tx, puid) = inner.edges[ei].add_producer()?;
+            txs.push(tx);
+            out_edges.push((ei, puid));
+        }
+    }
+
+    let (front_tx, front_rx) = if stage_idx == graph.entry {
+        let (t, r) = mpsc::channel::<Request>();
+        (Some(t), Some(r))
+    } else {
+        (None, None)
+    };
+    let sink = if graph.exits.contains(&stage_idx) {
+        inner.sink_tx.lock().unwrap().clone()
+    } else {
+        None
+    };
+
+    let retire = Arc::new(AtomicBool::new(false));
+    let slot = Arc::new(ReplicaSlot::default());
+    let spec = stage::StageSpec {
+        index: stage_idx,
+        replica: ord,
+        cfg,
+        assignment: inner.plan.assignment(stage_idx).clone(),
+        artifacts: inner.artifacts.clone(),
+        rxs,
+        txs,
+        registry: inner.registry.clone(),
+        reqs: inner.reqs.clone(),
+        recorder: inner.recorder.clone(),
+        clock: inner.clock.clone(),
+        stop: inner.stop.clone(),
+        retire: retire.clone(),
+        slot: slot.clone(),
+        failed: inner.failed.clone(),
+        front_rx,
+        sink,
+        streaming: inner.opts.streaming,
+        lazy_compile: inner.opts.lazy_compile,
+        device_bytes: inner.graph.config.device_bytes,
+        downstream_hint: orchestrator::downstream_hint(graph, &inner.artifacts, stage_idx),
+        ready: ready.clone(),
+    };
+    let join = stage::spawn(spec)?;
+    let front_uid = front_tx.map(|t| {
+        inner.front.lock().unwrap().0.push(FrontTx { uid, tx: t });
+        uid
+    });
+    Ok(ReplicaHandle {
+        uid,
+        ord,
+        join,
+        retire,
+        slot,
+        devices,
+        reservations,
+        in_edges,
+        out_edges,
+        front_uid,
+        draining: false,
+    })
+}

@@ -118,6 +118,34 @@ pub fn seedtts(seed: u64, n: usize, rate: f64) -> Workload {
     Workload { name: "seedtts-sim".into(), requests }
 }
 
+/// Bursty mixed-modality trace for the elastic-autoscaler evaluation
+/// (paper §3: under live traffic the bottleneck stage *changes*; static
+/// replica splits are wrong for half the trace).  Two bursts `gap_s`
+/// apart: the first is analysis-heavy (video input, long Thinker
+/// prefill+decode, almost no Talker work), the second is speech-heavy
+/// (tiny Thinker work, long Talker audio generation).  Arrivals inside a
+/// burst jitter within ~0.3 s.
+pub fn bursty_mixed(seed: u64, n: usize, gap_s: f64) -> Workload {
+    let mut rng = Prng::new(seed ^ 0xB0257);
+    let first = n / 2;
+    let requests = (0..n)
+        .map(|i| {
+            let analysis = i < first;
+            let base = if analysis { 0.0 } else { gap_s };
+            let at = base + rng.f64() * 0.3;
+            if analysis {
+                // Thinker-bound: mm-token dominated input, audio out
+                // pinned near the 8-token floor.
+                mk(&mut rng, i as u64, at, Modality::Video, 24.0, 100.0, 44.0, 0.05)
+            } else {
+                // Talker-bound: short prompt, long audio stream.
+                mk(&mut rng, i as u64, at, Modality::Text, 10.0, 0.0, 6.0, 24.0)
+            }
+        })
+        .collect();
+    Workload { name: "bursty-mixed-sim".into(), requests }
+}
+
 /// VBench sim: text (or image) prompts for DiT image/video generation.
 pub fn vbench(seed: u64, n: usize, rate: f64, steps: usize, image_cond: bool) -> Workload {
     let mut rng = Prng::new(seed ^ 0xBE9C);
@@ -184,6 +212,24 @@ mod tests {
     }
 
     #[test]
+    fn bursty_trace_has_two_phases_with_opposite_bottlenecks() {
+        let w = bursty_mixed(7, 40, 2.0);
+        assert_eq!(w.len(), 40);
+        let (a, b) = w.requests.split_at(20);
+        // Phase 1 arrivals cluster near 0, phase 2 near the gap.
+        assert!(a.iter().all(|r| r.arrival_s < 0.5));
+        assert!(b.iter().all(|r| (2.0..2.5).contains(&r.arrival_s)));
+        // Phase 1 is Thinker-bound: big inputs, near-floor audio budgets.
+        let a_in: f64 = a.iter().map(|r| r.total_input_tokens() as f64).sum::<f64>() / 20.0;
+        let b_in: f64 = b.iter().map(|r| r.total_input_tokens() as f64).sum::<f64>() / 20.0;
+        assert!(a_in > 4.0 * b_in, "analysis input {a_in} vs speech input {b_in}");
+        // Phase 2 is Talker-bound: audio budgets dwarf phase 1's.
+        let a_audio: f64 = a.iter().map(|r| r.max_audio_tokens as f64).sum::<f64>() / 20.0;
+        let b_audio: f64 = b.iter().map(|r| r.max_audio_tokens as f64).sum::<f64>() / 20.0;
+        assert!(b_audio > 8.0 * a_audio, "speech audio {b_audio} vs analysis audio {a_audio}");
+    }
+
+    #[test]
     fn prop_limits_respected() {
         quick("trace_limits", |rng| {
             let seed = rng.next_u64();
@@ -194,6 +240,7 @@ mod tests {
                 ucf101(seed, n, 0.0),
                 seedtts(seed, n, 0.0),
                 vbench(seed, n, 0.0, 20, false),
+                bursty_mixed(seed, n, 2.0),
             ] {
                 for r in &w.requests {
                     assert!(r.total_input_tokens() <= 210, "{}", r.total_input_tokens());

@@ -1,0 +1,96 @@
+//! Bounded-backoff idle sleeping for poll loops.
+//!
+//! Stage threads and other pollers drive non-blocking receivers
+//! ([`crate::connector::ConnectorRx::try_recv`] and the routed
+//! [`crate::connector::router::RouterRx`]) in a loop.  Sleeping a fixed
+//! interval on every empty poll either burns CPU (interval too short) or
+//! adds latency to the first item after an idle spell (too long).
+//! [`Backoff`] escalates instead: a few busy spins for sub-microsecond
+//! reaction to bursts, then sleeps that double from [`Backoff::MIN_SLEEP`]
+//! up to a hard cap, reset to zero the moment any work appears.
+
+use std::time::Duration;
+
+/// Escalating idle-wait state for one poll loop.
+#[derive(Debug, Default)]
+pub struct Backoff {
+    /// Consecutive idle iterations since the last piece of work.
+    idle: u32,
+}
+
+impl Backoff {
+    /// Idle iterations served by a spin hint before sleeping starts.
+    const SPINS: u32 = 4;
+    /// First sleep after the spin phase.
+    const MIN_SLEEP: Duration = Duration::from_micros(50);
+    /// Ceiling on the per-iteration sleep (bounds worst-case added
+    /// latency for the first item after an idle spell).
+    const MAX_SLEEP: Duration = Duration::from_millis(2);
+
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a productive iteration: the next idle wait restarts from
+    /// the spin phase.
+    pub fn reset(&mut self) {
+        self.idle = 0;
+    }
+
+    /// Record an idle iteration and wait the escalated amount.
+    pub fn idle_wait(&mut self) {
+        let d = self.next_wait();
+        match d {
+            None => std::hint::spin_loop(),
+            Some(d) => std::thread::sleep(d),
+        }
+    }
+
+    /// The wait the *next* idle iteration will use (`None` = spin hint).
+    /// Split from [`Self::idle_wait`] so tests can observe the schedule
+    /// without actually sleeping.
+    pub fn next_wait(&mut self) -> Option<Duration> {
+        let idle = self.idle;
+        self.idle = self.idle.saturating_add(1);
+        if idle < Self::SPINS {
+            return None;
+        }
+        let exp = (idle - Self::SPINS).min(16);
+        let d = Self::MIN_SLEEP.saturating_mul(1u32 << exp);
+        Some(d.min(Self::MAX_SLEEP))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escalates_from_spins_to_capped_sleeps() {
+        let mut b = Backoff::new();
+        // Spin phase.
+        for _ in 0..4 {
+            assert_eq!(b.next_wait(), None);
+        }
+        // Doubling sleeps from MIN_SLEEP...
+        assert_eq!(b.next_wait(), Some(Duration::from_micros(50)));
+        assert_eq!(b.next_wait(), Some(Duration::from_micros(100)));
+        assert_eq!(b.next_wait(), Some(Duration::from_micros(200)));
+        // ...bounded by MAX_SLEEP no matter how long the idle spell.
+        for _ in 0..40 {
+            let d = b.next_wait().unwrap();
+            assert!(d <= Duration::from_millis(2));
+        }
+        assert_eq!(b.next_wait(), Some(Duration::from_millis(2)));
+    }
+
+    #[test]
+    fn reset_restarts_the_schedule() {
+        let mut b = Backoff::new();
+        for _ in 0..10 {
+            let _ = b.next_wait();
+        }
+        b.reset();
+        assert_eq!(b.next_wait(), None, "work resets to the spin phase");
+    }
+}

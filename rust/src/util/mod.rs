@@ -2,11 +2,13 @@
 //! mini property-testing driver (the offline registry has no `proptest`,
 //! so we ship our own — see [`propcheck`]).
 
+pub mod backoff;
 pub mod fmt;
 pub mod propcheck;
 pub mod prng;
 pub mod stats;
 pub mod timer;
 
+pub use backoff::Backoff;
 pub use prng::Prng;
 pub use timer::Stopwatch;

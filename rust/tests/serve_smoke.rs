@@ -1,0 +1,93 @@
+//! CI loopback smoke test: start `omni-serve`'s TCP frontend, drive one
+//! connection through `ping` + `generate` + `stats` + `shutdown`, and
+//! assert a clean teardown.
+//!
+//! Runs WITHOUT compiled artifacts (the CI containers have no JAX): the
+//! server binds and answers `ping`/`stats`/`config` from the static
+//! plan, and `generate` returns a structured `error` object instead of
+//! killing the connection.  When artifacts exist the same script also
+//! asserts the full `generate` → completion path through the shared
+//! ServingSession.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use omni_serve::config::presets;
+use omni_serve::json;
+use omni_serve::runtime::Artifacts;
+use omni_serve::server::{ServeOptions, Server};
+
+fn send(c: &mut TcpStream, reader: &mut BufReader<TcpStream>, req: &str) -> json::Value {
+    c.write_all(req.as_bytes()).unwrap();
+    c.write_all(b"\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    json::parse(&line).unwrap_or_else(|e| panic!("bad response `{line}`: {e}"))
+}
+
+#[test]
+fn loopback_ping_generate_stats_shutdown() {
+    let dir = Artifacts::default_dir();
+    let have_artifacts = dir.join("manifest.json").exists();
+    let artifacts = if have_artifacts {
+        Arc::new(Artifacts::load(&dir).unwrap())
+    } else {
+        Arc::new(Artifacts::empty())
+    };
+    let server = Server::bind(
+        "127.0.0.1:0",
+        presets::mimo_audio(1),
+        artifacts,
+        ServeOptions::default(),
+    )
+    .unwrap();
+    let addr = server.addr();
+    let h = std::thread::spawn(move || server.serve_n(1));
+
+    let mut c = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(c.try_clone().unwrap());
+
+    // 1. ping
+    let v = send(&mut c, &mut reader, r#"{"op": "ping"}"#);
+    assert_eq!(v.get("ok").as_bool(), Some(true));
+
+    // 2. stats before any generate: static plan, not live.
+    let v = send(&mut c, &mut reader, r#"{"op": "stats"}"#);
+    assert_eq!(v.get("live").as_bool(), Some(false));
+    let stages = v.get("stages").as_arr().unwrap();
+    assert_eq!(stages.len(), 2, "mimo pipeline has backbone + patch_dec");
+    assert_eq!(stages[0].get("replicas").as_usize(), Some(1));
+
+    // 3. generate
+    let v = send(
+        &mut c,
+        &mut reader,
+        r#"{"op": "generate", "prompt": "hi", "max_text_tokens": 4, "max_audio_tokens": 8}"#,
+    );
+    if have_artifacts {
+        assert_eq!(v.get("completed").as_bool(), Some(true), "{v:?}");
+        assert!(v.get("jct_s").as_f64().unwrap() >= 0.0);
+        // 3b. stats now reports the LIVE session.
+        let v = send(&mut c, &mut reader, r#"{"op": "stats"}"#);
+        assert_eq!(v.get("live").as_bool(), Some(true));
+        let stages = v.get("stages").as_arr().unwrap();
+        assert!(stages.iter().all(|s| s.get("replicas").as_usize() == Some(1)));
+        assert_eq!(v.get("inflight").as_usize(), Some(0));
+    } else {
+        // No compiled models: a structured error, not a dropped line.
+        let err = v.get("error").as_str().unwrap_or_default().to_string();
+        assert!(!err.is_empty(), "expected structured error, got {v:?}");
+    }
+
+    // 4. clean shutdown of the shared session (no-op without one).
+    let v = send(&mut c, &mut reader, r#"{"op": "shutdown"}"#);
+    assert_eq!(v.get("ok").as_bool(), Some(true));
+    if have_artifacts {
+        assert_eq!(v.get("completed").as_usize(), Some(1));
+    }
+
+    drop(c);
+    drop(reader);
+    h.join().unwrap().unwrap();
+}

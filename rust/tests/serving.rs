@@ -1,0 +1,132 @@
+//! Serving-runtime integration tests: the elastic-autoscaler acceptance
+//! property on the deterministic AR-stage model (no artifacts needed),
+//! and — when compiled artifacts exist — the persistent ServingSession
+//! over the real pipeline.
+
+use std::time::Duration;
+
+use omni_serve::config::presets;
+use omni_serve::orchestrator::{Orchestrator, RunOptions};
+use omni_serve::scheduler::sim::elastic_comparison;
+use omni_serve::serving::{ServingSession, SessionOptions, WaitResult};
+use omni_serve::stage_graph::transfers::Registry;
+use omni_serve::trace::datasets;
+
+// -------------------------------------------------------------------------
+// The acceptance criterion: on the bursty mixed-modality trace, the
+// autoscaled run beats EVERY static replica split with the same total
+// GPU budget on mean JCT, and records both scale directions.
+// -------------------------------------------------------------------------
+
+#[test]
+fn autoscaled_beats_every_static_split_on_the_bursty_trace() {
+    let budget = 4usize;
+    let wl = datasets::bursty_mixed(1, 48, 2.0);
+    let (statics, auto) = elastic_comparison(&wl, budget);
+    assert_eq!(auto.jct.len(), wl.len(), "autoscaled run must complete everything");
+    assert!(auto.scale_ups >= 1, "expected at least one scale-up");
+    assert!(auto.scale_downs >= 1, "expected at least one scale-down");
+    assert!(auto.max_slots <= budget, "budget violated: peak {} slots", auto.max_slots);
+    assert_eq!(statics.len(), budget - 1, "every split of the budget is covered");
+    for rep in &statics {
+        assert_eq!(rep.jct.len(), wl.len());
+        assert!(
+            auto.mean_jct() < rep.mean_jct(),
+            "autoscaled {:.3}s !< {} {:.3}s",
+            auto.mean_jct(),
+            rep.policy,
+            rep.mean_jct()
+        );
+    }
+}
+
+#[test]
+fn autoscaling_holds_fewer_gpu_seconds_than_the_full_static_budget() {
+    // Elasticity is not just faster — between bursts it returns slots,
+    // so its ∫replicas·dt stays under budget × makespan.
+    let wl = datasets::bursty_mixed(5, 40, 2.5);
+    let (_, auto) = elastic_comparison(&wl, 4);
+    assert!(auto.replica_seconds < 4.0 * auto.makespan_s);
+    // The timeline starts from the min allocation and never dips below it.
+    for (_, counts) in &auto.timeline {
+        assert_eq!(counts.len(), 2);
+        assert!(counts.iter().all(|&c| c >= 1));
+    }
+}
+
+// -------------------------------------------------------------------------
+// Real-runtime session tests (need compiled artifacts; skipped in CI
+// containers without JAX).
+// -------------------------------------------------------------------------
+
+fn artifacts() -> Option<std::sync::Arc<omni_serve::runtime::Artifacts>> {
+    let dir = omni_serve::runtime::Artifacts::default_dir();
+    if !dir.join("manifest.json").exists() {
+        return None;
+    }
+    Some(std::sync::Arc::new(omni_serve::runtime::Artifacts::load(&dir).unwrap()))
+}
+
+#[test]
+fn serving_session_submits_continuously_and_drains() {
+    let Some(artifacts) = artifacts() else { return };
+    let orch = Orchestrator::new(
+        presets::mimo_audio(1),
+        artifacts,
+        Registry::builtin(),
+        RunOptions::default(),
+    )
+    .unwrap();
+    let session = ServingSession::start(&orch, SessionOptions::default()).unwrap();
+    // Two waves of requests through ONE spawned pipeline.
+    let wl = datasets::seedtts(3, 4, 0.0);
+    let mut handles = Vec::new();
+    for r in wl.requests.iter().take(2).cloned() {
+        handles.push(session.submit(r).unwrap());
+    }
+    for h in &handles {
+        loop {
+            match h.wait_timeout(Duration::from_millis(200)) {
+                WaitResult::Done(c) => {
+                    assert!(c.completed_t >= h.submitted_t());
+                    break;
+                }
+                WaitResult::Timeout => assert!(!session.failed(), "pipeline failed"),
+                WaitResult::Closed => panic!("collector gone"),
+            }
+        }
+    }
+    assert_eq!(session.inflight(), 0);
+    // Second wave on the same session.
+    let h = session.submit(wl.requests[2].clone()).unwrap();
+    loop {
+        match h.wait_timeout(Duration::from_millis(200)) {
+            WaitResult::Done(_) => break,
+            WaitResult::Timeout => assert!(!session.failed()),
+            WaitResult::Closed => panic!("collector gone"),
+        }
+    }
+    assert!(session.drain(Duration::from_secs(5)));
+    let summary = session.shutdown(Some("backbone")).unwrap();
+    assert_eq!(summary.report.completed, 3);
+    assert!(summary.report.mean_jct() > 0.0);
+}
+
+#[test]
+fn run_workload_wrapper_matches_the_one_shot_contract() {
+    // The one-shot API is now a wrapper over ServingSession; it must
+    // still complete a whole trace and report per-stage summaries.
+    let Some(artifacts) = artifacts() else { return };
+    let orch = Orchestrator::new(
+        presets::mimo_audio(1),
+        artifacts,
+        Registry::builtin(),
+        RunOptions::default(),
+    )
+    .unwrap();
+    let wl = datasets::seedtts(7, 3, 0.0);
+    let s = orch.run_workload(&wl, Some("backbone")).unwrap();
+    assert_eq!(s.report.completed, wl.len());
+    assert!(s.stages.iter().any(|st| st.name == "backbone"));
+    assert!(s.stages.iter().any(|st| st.name == "patch_dec"));
+}
