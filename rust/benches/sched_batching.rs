@@ -25,8 +25,8 @@ use omni_serve::bench_util::{self, Table};
 use omni_serve::config::presets;
 use omni_serve::scheduler::policy::{BatchPolicy, ContinuousBatchingPolicy, FifoPolicy};
 use omni_serve::scheduler::sim::{
-    elastic_comparison, from_workload, simulate, simulate_replicated, SimCost, SimReport,
-    SimRouting,
+    elastic_comparison, from_workload, simulate, simulate_disagg, simulate_replicated, SimCost,
+    SimReport, SimRouting,
 };
 use omni_serve::scheduler::StageAllocator;
 use omni_serve::trace::Workload;
@@ -218,6 +218,78 @@ fn main() {
     assert_eq!(auto.jct.len(), wl.len());
     assert!(auto.scale_ups >= 1 && auto.scale_downs >= 1, "bursty trace must trigger both directions");
     assert!(auto.max_slots <= budget, "autoscaler exceeded its GPU budget");
+
+    // Prefill/decode disaggregation (paper §3.4 + the kv_transfer
+    // subsystem): on the prefill-heavy mixed trace, phase-tuned split
+    // pools must beat the fused AR pool on mean JCT AND mean TTFT at
+    // the same GPU budget, and the autoscaled split must keep the JCT
+    // win within budget while scaling each pool independently.
+    // Asserted; also pinned by `tests/disagg.rs` and the
+    // `omni-serve bench --trace prefill-heavy` CI smoke.
+    let budget = 4usize;
+    let wl = datasets::prefill_heavy(1, n.max(64), 56.0);
+    let c = simulate_disagg(&wl, budget);
+    let mut t = Table::new(
+        "Prefill/decode disaggregation vs fused AR pool (prefill-heavy trace, equal budget)",
+        &["pool layout", "allocation", "mean JCT", "p99", "mean TTFT", "makespan", "JCT reduction"],
+    );
+    for (label, rep) in [
+        ("fused (b4)", &c.fused),
+        ("fused (b8)", &c.fused_wide),
+        ("prefill+decode", &c.split_static),
+        ("prefill+decode", &c.split_auto),
+    ] {
+        let mut jct = rep.jct.clone();
+        t.row(vec![
+            label.into(),
+            rep.policy.clone(),
+            fmt::dur(rep.mean_jct()),
+            fmt::dur(jct.p99()),
+            fmt::dur(rep.mean_ttft()),
+            fmt::dur(rep.makespan_s),
+            bench_util::reduction_pct(c.fused_best_jct(), rep.mean_jct()),
+        ]);
+    }
+    t.print();
+    for rep in [&c.fused, &c.fused_wide, &c.split_static, &c.split_auto] {
+        assert_eq!(rep.jct.len(), wl.len(), "{}: incomplete run", rep.policy);
+    }
+    // The split must beat fused at EITHER batch cap — the win certifies
+    // disaggregation itself, not batch-cap tuning.
+    assert!(
+        c.split_static.mean_jct() < c.fused_best_jct(),
+        "disaggregated pools must beat the best fused pool on mean JCT ({:.3}s !< {:.3}s)",
+        c.split_static.mean_jct(),
+        c.fused_best_jct()
+    );
+    assert!(
+        c.split_static.mean_ttft() < c.fused_best_ttft(),
+        "disaggregated pools must beat the best fused pool on mean TTFT ({:.3}s !< {:.3}s)",
+        c.split_static.mean_ttft(),
+        c.fused_best_ttft()
+    );
+    assert!(
+        c.split_auto.mean_jct() < c.fused_best_jct(),
+        "autoscaled split must keep the JCT win ({:.3}s !< {:.3}s)",
+        c.split_auto.mean_jct(),
+        c.fused_best_jct()
+    );
+    assert!(c.split_auto.max_slots <= budget, "autoscaled split exceeded its GPU budget");
+    assert!(
+        c.split_auto.stage_scale_ups.iter().all(|&u| u >= 1),
+        "each pool must record at least one scale event: {:?}",
+        c.split_auto.stage_scale_ups
+    );
+    println!(
+        "\nP/D split vs best fused on {}: mean JCT {} -> {}, mean TTFT {} -> {} (prefill pool {} ups, decode pool {} ups)",
+        wl.name,
+        fmt::dur(c.fused_best_jct()),
+        fmt::dur(c.split_static.mean_jct()),
+        fmt::dur(c.fused_best_ttft()),
+        fmt::dur(c.split_static.mean_ttft()),
+        c.split_auto.stage_scale_ups[0],
+        c.split_auto.stage_scale_ups[1],
+    );
 
     // Headline check (also pinned by `tests/scheduler.rs`): continuous
     // batching must beat FIFO mean JCT on the bundled AR traces.

@@ -90,6 +90,7 @@ pub fn run_monolithic(
                             kv_block_size: 16,
                             lazy_compile: opts.lazy_compile,
                             emit_hiddens: true,
+                            role: crate::config::StageRole::Fused,
                         },
                     )?,
                 ));

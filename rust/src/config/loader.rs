@@ -7,7 +7,7 @@ use anyhow::{Context, Result};
 
 use super::{
     AutoscalerConfig, ConnectorKind, DiffusionParams, EdgeConfig, PipelineConfig, RoutingKind,
-    SchedParams, SchedPolicyKind, StageConfig, StageKind,
+    SchedParams, SchedPolicyKind, StageConfig, StageKind, StageRole,
 };
 use crate::jobj;
 use crate::json::{self, Value};
@@ -22,6 +22,9 @@ pub fn from_value(v: &Value) -> Result<PipelineConfig> {
     for sv in v.req_arr("stages")? {
         let kind = StageKind::from_name(sv.req_str("kind")?)?;
         let mut s = StageConfig::new(sv.req_str("name")?, sv.req_str("model")?, kind);
+        if let Some(r) = sv.get("role").as_str() {
+            s.role = StageRole::from_name(r)?;
+        }
         if let Some(devs) = sv.get("devices").as_arr() {
             s.devices = devs.iter().filter_map(|d| d.as_usize()).collect();
         }
@@ -125,6 +128,7 @@ pub fn to_value(p: &PipelineConfig) -> Value {
                 "name" => s.name.clone(),
                 "model" => s.model.clone(),
                 "kind" => s.kind.name(),
+                "role" => s.role.name(),
                 "devices" => s.devices.clone(),
                 "replicas" => s.replicas,
                 "max_batch" => s.max_batch,
@@ -206,6 +210,7 @@ mod tests {
                 assert_eq!(a.name, b.name);
                 assert_eq!(a.model, b.model);
                 assert_eq!(a.kind, b.kind);
+                assert_eq!(a.role, b.role);
                 assert_eq!(a.devices, b.devices);
                 assert_eq!(a.replicas, b.replicas);
                 assert_eq!(a.max_batch, b.max_batch);
@@ -318,6 +323,33 @@ mod tests {
         )
         .unwrap();
         assert!(from_value(&typo).is_err());
+    }
+
+    #[test]
+    fn role_parses_and_defaults_from_json() {
+        let v = json::parse(
+            r#"{"name": "x", "n_devices": 2, "stages": [
+                {"name": "p", "model": "thinker3", "kind": "ar", "devices": [0], "role": "prefill"},
+                {"name": "d", "model": "thinker3", "kind": "ar", "devices": [1], "role": "decode"},
+                {"name": "t", "model": "talker3", "kind": "ar", "devices": [1]}
+            ], "edges": [
+                {"from": "p", "to": "d", "transfer": "kv2decode"},
+                {"from": "d", "to": "t", "transfer": "thinker2talker"}
+            ]}"#,
+        )
+        .unwrap();
+        let p = from_value(&v).unwrap();
+        assert_eq!(p.stages[0].role, crate::config::StageRole::Prefill);
+        assert_eq!(p.stages[1].role, crate::config::StageRole::Decode);
+        assert_eq!(p.stages[2].role, crate::config::StageRole::Fused, "role defaults to fused");
+        // Unknown role rejected.
+        let bad = json::parse(
+            r#"{"name": "x", "n_devices": 1, "stages": [
+                {"name": "a", "model": "mimo", "kind": "ar", "devices": [0], "role": "both"}
+            ]}"#,
+        )
+        .unwrap();
+        assert!(from_value(&bad).is_err());
     }
 
     #[test]

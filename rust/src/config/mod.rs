@@ -48,6 +48,38 @@ impl StageKind {
     }
 }
 
+/// Which phase of autoregressive serving an AR stage runs (paper §3.4 —
+/// prefill/decode disaggregation).  A `Prefill` stage runs chunked
+/// prefill, samples the first token, and exports the sequence's KV state
+/// as a [`crate::kv_transfer::KvHandoff`] downstream; a `Decode` stage
+/// imports handoffs and continuous-batches decode steps.  `Fused` (the
+/// default) is the classic both-phases-in-one-engine behaviour.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageRole {
+    Fused,
+    Prefill,
+    Decode,
+}
+
+impl StageRole {
+    pub fn name(self) -> &'static str {
+        match self {
+            StageRole::Fused => "fused",
+            StageRole::Prefill => "prefill",
+            StageRole::Decode => "decode",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<Self> {
+        Ok(match s {
+            "fused" => StageRole::Fused,
+            "prefill" => StageRole::Prefill,
+            "decode" => StageRole::Decode,
+            other => bail!("unknown stage role `{other}`"),
+        })
+    }
+}
+
 /// Which batching policy schedules a stage's admission queue
 /// (see [`crate::scheduler::policy`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -224,6 +256,11 @@ pub struct StageConfig {
     /// Manifest model served by this stage ("thinker3", "voc_cnn3", ...).
     pub model: String,
     pub kind: StageKind,
+    /// Serving phase for AR stages (paper §3.4 P/D disaggregation):
+    /// [`StageRole::Fused`] (default) runs prefill + decode in one
+    /// engine; `Prefill`/`Decode` split them into independently scaled
+    /// pools connected by a KV-transfer edge.
+    pub role: StageRole,
     /// Device placement.  More than one device = tensor parallel
     /// (memory-sharded in the device model; see DESIGN.md §6).
     pub devices: Vec<usize>,
@@ -259,6 +296,7 @@ impl StageConfig {
             name: name.into(),
             model: model.into(),
             kind,
+            role: StageRole::Fused,
             devices: vec![0],
             replicas: 1,
             max_batch: 4,
@@ -273,6 +311,11 @@ impl StageConfig {
 
     pub fn on_devices(mut self, devices: &[usize]) -> Self {
         self.devices = devices.to_vec();
+        self
+    }
+
+    pub fn with_role(mut self, r: StageRole) -> Self {
+        self.role = r;
         self
     }
 
@@ -469,6 +512,14 @@ impl PipelineConfig {
             if !(0.0..=1.0).contains(&s.kv_memory_frac) {
                 bail!("stage `{}` kv_memory_frac out of [0,1]", s.name);
             }
+            if s.role != StageRole::Fused && s.kind != StageKind::Ar {
+                bail!(
+                    "stage `{}`: role `{}` requires an AR stage, got `{}`",
+                    s.name,
+                    s.role.name(),
+                    s.kind.name()
+                );
+            }
         }
         if let Some(a) = &self.autoscaler {
             a.validate()?;
@@ -645,6 +696,29 @@ mod tests {
             ..Default::default()
         });
         assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn role_roundtrip_and_defaults() {
+        for r in [StageRole::Fused, StageRole::Prefill, StageRole::Decode] {
+            assert_eq!(StageRole::from_name(r.name()).unwrap(), r);
+        }
+        assert!(StageRole::from_name("nope").is_err());
+        let s = StageConfig::new("a", "thinker25", StageKind::Ar);
+        assert_eq!(s.role, StageRole::Fused, "role defaults to fused");
+    }
+
+    #[test]
+    fn non_ar_stage_roles_rejected() {
+        let mut p = two_stage();
+        p.stages[0].kind = StageKind::Encoder;
+        p.stages[0].role = StageRole::Prefill;
+        assert!(p.validate().is_err());
+        // AR stages accept the split roles.
+        let mut p = two_stage();
+        p.stages[0].role = StageRole::Prefill;
+        p.stages[1].role = StageRole::Decode;
+        p.validate().unwrap();
     }
 
     #[test]

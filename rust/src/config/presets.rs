@@ -11,7 +11,8 @@
 //! `max_batch` to the compiled bucket limit (8).
 
 use super::{
-    ConnectorKind, DiffusionParams, EdgeConfig, PipelineConfig, RoutingKind, StageConfig, StageKind,
+    ConnectorKind, DiffusionParams, EdgeConfig, PipelineConfig, RoutingKind, SchedParams,
+    StageConfig, StageKind, StageRole,
 };
 
 fn edge(from: &str, to: &str, transfer: &str) -> EdgeConfig {
@@ -99,20 +100,45 @@ pub fn qwen3_omni_replicated() -> PipelineConfig {
     p
 }
 
-/// Qwen3-Omni with EPD disaggregation (paper §3.4): the multimodal
-/// encoder runs as its OWN stage on device 0 instead of fused into the
-/// Thinker, exercising the encoder->prefill edge of the unified
-/// connector.
+/// Qwen3-Omni with full E/P/D disaggregation (paper §3.4): the
+/// multimodal encoder, the Thinker's prefill phase, and the Thinker's
+/// decode phase each run as their OWN stage, so the compute-bound
+/// prefill pool and the latency-critical decode pool scale
+/// independently.  Prefill streams each finished sequence's KV state
+/// downstream as a [`crate::kv_transfer::KvHandoff`] over the
+/// `kv2decode` edge; the decode stage imports it (deduplicating
+/// already-resident prefix blocks) and continuous-batches decode steps.
+/// The decode stage's `queue_depth` bounds its admission queue, so a
+/// backed-up decode pool backpressures handoffs into the connector
+/// instead of hoarding them.  The device budget is doubled because the
+/// Thinker weights are resident in both pools.
 pub fn qwen3_omni_epd() -> PipelineConfig {
     let mut p = qwen3_omni();
     p.name = "qwen3-omni-sim-epd".into();
-    p.stages.insert(
-        0,
+    p.stages.retain(|s| s.name != "thinker");
+    let mut stages = vec![
         StageConfig::new("encoder", "enc3", StageKind::Encoder)
             .on_devices(&[0])
             .with_batch(4),
-    );
-    p.edges.insert(0, edge("encoder", "thinker", "embeds2prompt"));
+        StageConfig::new("prefill", "thinker3", StageKind::Ar)
+            .with_role(StageRole::Prefill)
+            .on_devices(&[0, 1])
+            .with_batch(2),
+        StageConfig::new("decode", "thinker3", StageKind::Ar)
+            .with_role(StageRole::Decode)
+            .on_devices(&[0, 1])
+            .with_batch(2)
+            .with_sched(SchedParams { queue_depth: 8, ..Default::default() }),
+    ];
+    stages.append(&mut p.stages); // talker, vocoder keep their config
+    p.stages = stages;
+    p.edges = vec![
+        edge("encoder", "prefill", "embeds2prompt"),
+        edge("prefill", "decode", "kv2decode"),
+        edge("decode", "talker", "thinker2talker"),
+        edge("talker", "vocoder", "talker2vocoder"),
+    ];
+    p.device_bytes = 2 * crate::device::DEFAULT_DEVICE_BYTES;
     p
 }
 
@@ -243,6 +269,23 @@ mod tests {
     fn by_name_resolves() {
         assert!(by_name("qwen3-omni").is_some());
         assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn epd_preset_splits_prefill_and_decode() {
+        let p = qwen3_omni_epd();
+        p.validate().unwrap();
+        assert_eq!(p.stage("prefill").unwrap().role, StageRole::Prefill);
+        assert_eq!(p.stage("decode").unwrap().role, StageRole::Decode);
+        assert_eq!(p.stage("prefill").unwrap().model, p.stage("decode").unwrap().model);
+        assert!(p.stage("thinker").is_none(), "the fused thinker is gone");
+        // The KV-transfer edge connects the pools.
+        assert!(p
+            .edges
+            .iter()
+            .any(|e| e.from == "prefill" && e.to == "decode" && e.transfer == "kv2decode"));
+        // Decode admission is bounded (handoff backpressure to prefill).
+        assert!(p.stage("decode").unwrap().sched.queue_depth > 0);
     }
 
     #[test]

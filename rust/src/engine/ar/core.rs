@@ -7,8 +7,10 @@ use anyhow::{bail, Context, Result};
 use super::sampler;
 use super::sequence::{FinishReason, PromptItem, SeqPhase, Sequence};
 use super::{PREFILL_CHUNK, SCAN_STEPS};
+use crate::config::StageRole;
 use crate::engine::{SamplingParams, StageItem};
 use crate::kv_cache::BlockManager;
+use crate::kv_transfer::KvHandoff;
 use crate::runtime::{Artifacts, HostTensor, StageRuntime};
 use crate::tokenizer::BOS_ID;
 
@@ -44,6 +46,11 @@ pub struct ArEngineOptions {
     /// Emit hidden-state rows alongside tokens (needed when a downstream
     /// stage consumes them; costs an extra d_model floats per token).
     pub emit_hiddens: bool,
+    /// Serving phase (paper §3.4 P/D disaggregation): `Prefill` engines
+    /// export a [`KvHandoff`] instead of decoding; `Decode` engines
+    /// import handoffs via [`ArEngine::submit_handoff`].  `Fused` is the
+    /// classic behaviour.
+    pub role: StageRole,
 }
 
 impl Default for ArEngineOptions {
@@ -58,6 +65,7 @@ impl Default for ArEngineOptions {
             kv_block_size: 16,
             lazy_compile: false,
             emit_hiddens: true,
+            role: StageRole::Fused,
         }
     }
 }
@@ -87,6 +95,13 @@ pub struct EngineStats {
     pub exec_seconds: f64,
     /// Seconds spent assembling/scattering batch KV (marshaling).
     pub marshal_seconds: f64,
+    /// KV handoffs exported (prefill role) / imported (decode role).
+    pub kv_exports: u64,
+    pub kv_imports: u64,
+    /// Bytes of encoded handoff frames produced by this engine.
+    pub kv_export_bytes: u64,
+    /// Prefix blocks an import reused instead of allocating (hash dedup).
+    pub kv_reused_blocks: u64,
 }
 
 /// The engine.  Owns a thread-local PJRT runtime; not `Send` — run it on
@@ -157,20 +172,26 @@ impl ArEngine {
         Ok(eng)
     }
 
-    /// Compile the entries the configured policy will use.
+    /// Compile the entries the configured policy will use.  Split-role
+    /// engines compile only their phase's family — a prefill pool never
+    /// dispatches decode/scan executables and vice versa.
     fn precompile(&mut self) -> Result<()> {
         let mut entries = vec![];
-        for b in self.rt.model().buckets("decode") {
-            if b <= self.opts.max_batch.next_power_of_two() {
-                entries.push(format!("decode.b{b}"));
+        if self.opts.role != StageRole::Prefill {
+            for b in self.rt.model().buckets("decode") {
+                if b <= self.opts.max_batch.next_power_of_two() {
+                    entries.push(format!("decode.b{b}"));
+                }
             }
         }
-        for b in self.rt.model().buckets("prefill") {
-            if b <= self.opts.max_batch.next_power_of_two() {
-                entries.push(format!("prefill.b{b}.c{PREFILL_CHUNK}"));
+        if self.opts.role != StageRole::Decode {
+            for b in self.rt.model().buckets("prefill") {
+                if b <= self.opts.max_batch.next_power_of_two() {
+                    entries.push(format!("prefill.b{b}.c{PREFILL_CHUNK}"));
+                }
             }
         }
-        if self.opts.multi_step > 1 {
+        if self.opts.multi_step > 1 && self.opts.role != StageRole::Prefill {
             for b in self.rt.model().buckets("scan") {
                 if b <= self.opts.max_batch.next_power_of_two() {
                     entries.push(format!("scan.b{b}.k{SCAN_STEPS}"));
@@ -208,6 +229,60 @@ impl ArEngine {
         for job in jobs {
             self.submit(job);
         }
+    }
+
+    /// Submit a prefill engine's exported KV state (decode role; also
+    /// accepted by fused engines, e.g. for tests).  Validates the
+    /// handoff's geometry against this engine's model up front so a
+    /// mis-wired pipeline fails with a clear error instead of corrupting
+    /// a slot; the actual block import happens at admission.
+    pub fn submit_handoff(&mut self, h: KvHandoff) -> Result<()> {
+        // A prefill-role engine compiles no decode/scan executables
+        // (precompile skips them), so importing a sequence it could
+        // never step is rejected up front.
+        if self.opts.role == StageRole::Prefill {
+            bail!(
+                "kv handoff req {}: prefill-role engine `{}` cannot serve decode",
+                h.req_id,
+                self.model_name()
+            );
+        }
+        h.check()?;
+        if h.n_layers != self.n_layers || h.n_heads != self.n_heads || h.d_head != self.d_head {
+            bail!(
+                "kv handoff req {}: geometry [{}x{}x{}] does not match engine `{}` [{}x{}x{}]",
+                h.req_id,
+                h.n_layers,
+                h.n_heads,
+                h.d_head,
+                self.model_name(),
+                self.n_layers,
+                self.n_heads,
+                self.d_head
+            );
+        }
+        // Only a payload that cannot physically fit the slot store is an
+        // error.  A boundary-length sequence (len + 1 == max_seq) is
+        // admitted and finishes immediately with `CacheCap` at import —
+        // exactly how the fused engine completes the same request.
+        if h.len >= self.max_seq {
+            bail!(
+                "kv handoff req {}: {} resident tokens exceed engine max_seq {}",
+                h.req_id,
+                h.len,
+                self.max_seq
+            );
+        }
+        if self.opts.emit_hiddens && !h.hidden.is_empty() && h.hidden.len() != self.d_model {
+            bail!(
+                "kv handoff req {}: hidden row has {} floats, engine d_model is {}",
+                h.req_id,
+                h.hidden.len(),
+                self.d_model
+            );
+        }
+        self.waiting.push_back(Sequence::from_handoff(Box::new(h)));
+        Ok(())
     }
 
     /// Feed upstream hidden rows for a request's conditioning stream
@@ -262,7 +337,7 @@ impl ArEngine {
         self.stats.iterations += 1;
         let mut out = Vec::new();
 
-        self.admit();
+        self.admit(&mut out);
 
         // 1) prefill phase (one chunk per prefilling sequence).
         let prefilling: Vec<usize> = self
@@ -334,14 +409,30 @@ impl ArEngine {
         Ok(all)
     }
 
-    fn admit(&mut self) {
+    fn admit(&mut self, out: &mut Vec<StageItem>) {
         while let Some(front) = self.waiting.front() {
             let Some(slot) = self.slots.iter().position(|s| s.is_none()) else { break };
+            // Decode admission for imported sequences is gated on the KV
+            // import fitting the memory budget, exactly like a prompt.
             let worst_case = front.prompt_len() + front.sampling.max_new_tokens + 1;
             if !self.blocks.can_allocate(worst_case.min(self.max_seq)) {
                 break;
             }
             let mut seq = self.waiting.pop_front().unwrap();
+            if seq.needs_import {
+                match self.import_handoff(slot, seq) {
+                    Ok(sid) => {
+                        // EOS/caps already satisfied at the first token
+                        // finish here (the request never decodes).
+                        self.post_token_checks(sid, out);
+                    }
+                    Err(seq) => {
+                        self.waiting.push_front(seq);
+                        break;
+                    }
+                }
+                continue;
+            }
             let hash_tokens = prompt_hash_tokens(&seq);
             match self.blocks.allocate_prompt(&hash_tokens) {
                 Ok(table) => {
@@ -360,6 +451,105 @@ impl ArEngine {
                 }
             }
         }
+    }
+
+    /// Import an exported sequence into `slot`: block accounting through
+    /// [`BlockManager::import_seq`] (resident prefix blocks dedup by
+    /// hash), then the KV payload scattered into the slot store.  Gives
+    /// the sequence back on pool exhaustion so the caller can requeue.
+    fn import_handoff(&mut self, slot: usize, mut seq: Sequence) -> std::result::Result<usize, Sequence> {
+        let h = seq.handoff.take().expect("needs_import implies a handoff");
+        let (mut table, reused) = match self.blocks.import_seq(&h.blocks) {
+            Ok(r) => r,
+            Err(_) => {
+                seq.handoff = Some(h);
+                return Err(seq);
+            }
+        };
+        // Account the already-sampled first token's cache row (the fused
+        // engine does this at the end of prefill).
+        if self.blocks.append_token(&mut table).is_err() {
+            self.blocks.release(&table);
+            seq.handoff = Some(h);
+            return Err(seq);
+        }
+        self.stats.kv_imports += 1;
+        self.stats.kv_reused_blocks += reused as u64;
+        // Scatter the resident KV rows into the slot store: handoff
+        // layout [L, 2, H, len, dh] -> slot layout [L, 2, H, S, dh].
+        self.flush_batch_kv();
+        self.slot_kv[slot].iter_mut().for_each(|x| *x = 0.0);
+        let (chunk, s_max, dh) = (self.kv_chunk(), self.max_seq, self.d_head);
+        let lk = self.n_layers * 2;
+        let len = h.len;
+        for li in 0..lk {
+            for hd in 0..self.n_heads {
+                let src_off = (li * self.n_heads + hd) * len * dh;
+                let dst_off = li * chunk + hd * s_max * dh;
+                self.slot_kv[slot][dst_off..dst_off + len * dh]
+                    .copy_from_slice(&h.kv[src_off..src_off + len * dh]);
+            }
+        }
+        seq.handoff = Some(h);
+        seq.needs_import = false;
+        seq.block_table = table;
+        seq.phase = SeqPhase::Decode;
+        seq.admitted_iter = self.iter;
+        if self.opts.emit_hiddens && seq.hiddens.len() != self.d_model {
+            // Exporter did not carry a hidden row; keep the stream shaped.
+            seq.hiddens = vec![0.0; self.d_model];
+        }
+        if !self.opts.emit_hiddens {
+            seq.hiddens.clear();
+        }
+        self.slots[slot] = Some(seq);
+        Ok(slot)
+    }
+
+    /// Prefill role: package the finished sequence's KV state as a
+    /// [`KvHandoff`] item and free its slot + blocks.  The first decode
+    /// token (and its hidden row) rides along for observability and so
+    /// the decode stage continues from it.
+    fn export_handoff(&mut self, sid: usize) -> Result<StageItem> {
+        // The just-finished prefill call's KV lives in the batch cache.
+        self.flush_batch_kv();
+        let seq = self.slots[sid].take().expect("exporting a live slot");
+        let len = seq.prompt_len();
+        let (chunk, s_max, dh) = (self.kv_chunk(), self.max_seq, self.d_head);
+        let lk = self.n_layers * 2;
+        let mut kv = Vec::with_capacity(lk * self.n_heads * len * dh);
+        for li in 0..lk {
+            for hd in 0..self.n_heads {
+                let off = li * chunk + hd * s_max * dh;
+                kv.extend_from_slice(&self.slot_kv[sid][off..off + len * dh]);
+            }
+        }
+        let blocks = self.blocks.export_seq(&seq.block_table);
+        self.blocks.release(&seq.block_table);
+        let first = *seq.generated.first().expect("prefill sampled the first token");
+        let hidden = if self.opts.emit_hiddens { seq.hiddens.clone() } else { vec![] };
+        let h = KvHandoff {
+            req_id: seq.id,
+            len,
+            first_token: first,
+            hidden: hidden.clone(),
+            sampling: seq.sampling.clone(),
+            prng_state: seq.prng.state(),
+            n_layers: self.n_layers,
+            n_heads: self.n_heads,
+            d_head: self.d_head,
+            blocks,
+            kv,
+        };
+        let tensor = h.to_tensor();
+        self.stats.kv_exports += 1;
+        self.stats.kv_export_bytes += tensor.byte_len() as u64;
+        let mut item = StageItem::new(h.req_id)
+            .with("tokens", HostTensor::i32(vec![1], vec![first as i32]));
+        if self.opts.emit_hiddens {
+            item = item.with("hiddens", HostTensor::f32(vec![1, self.d_model], hidden));
+        }
+        Ok(item.with(crate::kv_transfer::KV_TENSOR, tensor).finished())
     }
 
     // ------------------------------------------------------------------
@@ -436,6 +626,13 @@ impl ArEngine {
                     let h = &hidden
                         [(bi * c + last_row) * self.d_model..(bi * c + last_row + 1) * self.d_model];
                     seq.hiddens.extend_from_slice(h);
+                }
+                if self.opts.role == StageRole::Prefill {
+                    // P/D split: the sequence's work here is done — export
+                    // its KV state downstream instead of decoding.
+                    let item = self.export_handoff(sid)?;
+                    out.push(item);
+                    continue;
                 }
                 seq.phase = SeqPhase::Decode;
                 // Account the generated token's cache row.
@@ -684,11 +881,9 @@ impl ArEngine {
             Some(v) => {
                 let mut seq = self.slots[v].take().unwrap();
                 self.blocks.release(&seq.block_table);
-                seq.block_table = Default::default();
-                seq.phase = SeqPhase::Waiting;
-                seq.generated.clear();
-                seq.hiddens.clear();
-                seq.streamed = 0;
+                // Prompt sequences re-prefill; imported sequences rewind
+                // to their handoff and re-import at the next admission.
+                seq.reset_for_requeue();
                 self.waiting.push_front(seq);
                 // Retry the failed growth for the original slot.
                 if let Some(seq) = self.slots[for_sid].as_mut() {

@@ -61,6 +61,16 @@ pub struct Sequence {
     pub prng: Prng,
     /// Engine-iteration timestamp of admission (for fairness metrics).
     pub admitted_iter: u64,
+    /// Decode-role engines: the KV handoff this sequence was built from.
+    /// Kept after import so recompute-preemption can re-import instead of
+    /// re-prefilling a prompt this engine never had.
+    pub handoff: Option<Box<crate::kv_transfer::KvHandoff>>,
+    /// Whether [`Self::handoff`] still needs importing (set at submit and
+    /// again on preemption).
+    pub needs_import: bool,
+    /// Prompt tokens resident in the imported cache (handoff sequences
+    /// carry no prompt items of their own).
+    imported_len: usize,
 }
 
 impl Sequence {
@@ -82,11 +92,53 @@ impl Sequence {
             finish_reason: None,
             prng: Prng::new(seed),
             admitted_iter: 0,
+            handoff: None,
+            needs_import: false,
+            imported_len: 0,
+        }
+    }
+
+    /// A sequence picking up where a prefill engine left off: the first
+    /// token is already sampled, the sampler PRNG resumes mid-stream, and
+    /// the KV state imports at admission (see `ArEngine::submit_handoff`).
+    pub fn from_handoff(h: Box<crate::kv_transfer::KvHandoff>) -> Self {
+        let mut s = Self::new(h.req_id, vec![], vec![], 0, h.sampling.clone());
+        s.generated = vec![h.first_token];
+        s.hiddens = h.hidden.clone();
+        s.prng = Prng::from_state(h.prng_state);
+        s.imported_len = h.len;
+        s.needs_import = true;
+        s.handoff = Some(h);
+        s
+    }
+
+    /// Reset for re-admission after a recompute preemption: prompt-built
+    /// sequences re-prefill from scratch; handoff-built sequences rewind
+    /// to the handoff state and re-import.
+    pub fn reset_for_requeue(&mut self) {
+        self.block_table = BlockTable::default();
+        self.phase = SeqPhase::Waiting;
+        self.streamed = 0;
+        match &self.handoff {
+            Some(h) => {
+                self.generated = vec![h.first_token];
+                self.hiddens = h.hidden.clone();
+                self.prng = Prng::from_state(h.prng_state);
+                self.needs_import = true;
+            }
+            None => {
+                self.generated.clear();
+                self.hiddens.clear();
+            }
         }
     }
 
     pub fn prompt_len(&self) -> usize {
-        self.prompt.len()
+        if self.prompt.is_empty() && self.imported_len > 0 {
+            self.imported_len
+        } else {
+            self.prompt.len()
+        }
     }
 
     /// Total tokens in cache once fully prefetched + generated.

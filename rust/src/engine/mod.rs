@@ -61,7 +61,7 @@ impl StageItem {
 }
 
 /// Sampling parameters for AR stages.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct SamplingParams {
     pub max_new_tokens: usize,
     /// 0.0 = greedy.

@@ -43,6 +43,25 @@ pub struct BlockTable {
     pub len: usize,
 }
 
+/// Serializable accounting state of one sequence's block table — the
+/// block-level half of a [`crate::kv_transfer::KvHandoff`].  Carries the
+/// prefix chain hash of every *full* block so an importing pool can
+/// deduplicate against blocks it already holds (hash-based prefix
+/// sharing across the prefill/decode boundary) instead of allocating
+/// fresh ones.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct KvSeqExport {
+    /// Exporter's block size (hashes only transfer between pools with
+    /// the same geometry).
+    pub block_size: u32,
+    /// Tokens resident in the exported cache.
+    pub len: u64,
+    /// One entry per full block: the prefix chain hash when the block is
+    /// shareable (`None` for blocks grown past the prompt by decode
+    /// appends, which never carry a hash).
+    pub full_hashes: Vec<Option<u64>>,
+}
+
 /// The paged allocator for one stage's KV pool.
 #[derive(Debug)]
 pub struct BlockManager {
@@ -212,6 +231,85 @@ impl BlockManager {
                 self.free.push(bid);
             }
         }
+    }
+
+    /// Export a sequence's block accounting for a KV handoff
+    /// (prefill/decode disaggregation, paper §3.4): the full blocks'
+    /// prefix hashes travel with the payload so the importing pool can
+    /// reuse already-resident prefix blocks.  Does not mutate the pool —
+    /// the caller releases the table when the handoff is sent.
+    pub fn export_seq(&self, table: &BlockTable) -> KvSeqExport {
+        let full = table.len / self.block_size;
+        KvSeqExport {
+            block_size: self.block_size as u32,
+            len: table.len as u64,
+            full_hashes: table
+                .blocks
+                .iter()
+                .take(full)
+                .map(|&bid| self.blocks[bid as usize].hash)
+                .collect(),
+        }
+    }
+
+    /// Import an exported sequence into this pool, reusing hash-matched
+    /// resident prefix blocks (each reuse counts as a [`Self::prefix_hits`]
+    /// and is returned in the reuse count — those blocks' contents are
+    /// already device-resident and need no re-send).  Freshly allocated
+    /// full blocks register their hash so *later* imports of the same
+    /// prefix dedup against them.  On pool exhaustion the partial import
+    /// is rolled back and the error propagates (the caller re-queues).
+    pub fn import_seq(&mut self, ex: &KvSeqExport) -> Result<(BlockTable, usize)> {
+        let len = ex.len as usize;
+        let full = len / self.block_size;
+        // Hash chains are per-geometry: a different block size means no
+        // dedup, but the import still lands (fresh blocks throughout).
+        let same_geometry = ex.block_size as usize == self.block_size;
+        if same_geometry && ex.full_hashes.len() != full {
+            bail!(
+                "kv import: {} full-block hashes but {len} tokens need {full} full blocks",
+                ex.full_hashes.len()
+            );
+        }
+        let mut table = BlockTable::default();
+        let mut reused = 0usize;
+        for i in 0..full {
+            let h = if same_geometry { ex.full_hashes[i] } else { None };
+            if let Some(h) = h {
+                if let Some(&bid) = self.prefix_index.get(&h) {
+                    self.blocks[bid as usize].refcount += 1;
+                    self.prefix_hits += 1;
+                    reused += 1;
+                    table.blocks.push(bid);
+                    continue;
+                }
+            }
+            match self.pop_free() {
+                Ok(bid) => {
+                    if let Some(h) = h {
+                        self.blocks[bid as usize].hash = Some(h);
+                        self.prefix_index.insert(h, bid);
+                    }
+                    table.blocks.push(bid);
+                }
+                Err(e) => {
+                    self.release(&table);
+                    return Err(e);
+                }
+            }
+        }
+        // Tail partial block (never shared), exactly like allocate_prompt.
+        if len % self.block_size != 0 {
+            match self.pop_free() {
+                Ok(bid) => table.blocks.push(bid),
+                Err(e) => {
+                    self.release(&table);
+                    return Err(e);
+                }
+            }
+        }
+        table.len = len;
+        Ok((table, reused))
     }
 
     /// Invariant check (used by property tests): every block is either
@@ -406,6 +504,162 @@ mod tests {
         m.release(&b);
         assert_eq!(m.free_blocks(), 8);
         m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn export_import_roundtrip_dedups_resident_prefix_blocks() {
+        let mut src = BlockManager::new(16, 4);
+        let prompt = [1u32, 2, 3, 4, 5, 6, 7, 8, 9]; // 2 full blocks + tail
+        let t = src.allocate_prompt(&prompt).unwrap();
+        let ex = src.export_seq(&t);
+        assert_eq!(ex.len, 9);
+        assert_eq!(ex.full_hashes.len(), 2);
+        assert!(ex.full_hashes.iter().all(|h| h.is_some()));
+        src.release(&t);
+
+        // First import into a fresh pool: no resident prefixes, all blocks
+        // allocated fresh (3 of them), hashes registered.
+        let mut dst = BlockManager::new(16, 4);
+        let (a, reused_a) = dst.import_seq(&ex).unwrap();
+        assert_eq!(reused_a, 0);
+        assert_eq!(a.blocks.len(), 3);
+        assert_eq!(dst.free_blocks(), 13);
+        // Second import of the same prefix: the full blocks dedup against
+        // the now-resident copies — only the tail allocates.
+        let (b, reused_b) = dst.import_seq(&ex).unwrap();
+        assert_eq!(reused_b, 2, "full prefix blocks must be reused, not re-sent");
+        assert_eq!(dst.free_blocks(), 12, "only the tail block is new");
+        assert_eq!(a.blocks[..2], b.blocks[..2]);
+        assert_ne!(a.blocks[2], b.blocks[2], "tails stay private");
+        assert_eq!(dst.prefix_hits, 2);
+        dst.release(&a);
+        dst.release(&b);
+        assert_eq!(dst.free_blocks(), 16);
+        dst.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn import_dedups_against_a_live_local_prompt() {
+        // The importing pool already serves a sequence with the same
+        // prompt prefix (allocated locally): the import shares its full
+        // blocks through the same hash index.
+        let mut src = BlockManager::new(8, 4);
+        let prompt = [7u32, 8, 9, 10, 11];
+        let t0 = src.allocate_prompt(&prompt).unwrap();
+        let t = src.export_seq(&t0);
+        let mut dst = BlockManager::new(8, 4);
+        let local = dst.allocate_prompt(&prompt).unwrap();
+        let (imported, reused) = dst.import_seq(&t).unwrap();
+        assert_eq!(reused, 1);
+        assert_eq!(local.blocks[0], imported.blocks[0]);
+        dst.release(&local);
+        dst.release(&imported);
+        dst.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn import_exhaustion_rolls_back_cleanly() {
+        let mut src = BlockManager::new(8, 4);
+        let t = src.allocate_prompt(&(0..20).collect::<Vec<u32>>()).unwrap(); // 5 blocks
+        let ex = src.export_seq(&t);
+        let mut dst = BlockManager::new(2, 4);
+        assert!(dst.import_seq(&ex).is_err());
+        assert_eq!(dst.free_blocks(), 2, "partial import must roll back");
+        dst.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn import_across_block_geometries_lands_without_dedup() {
+        let mut src = BlockManager::new(8, 4);
+        let t = src.allocate_prompt(&[1, 2, 3, 4, 5, 6, 7, 8]).unwrap();
+        let ex = src.export_seq(&t);
+        let mut dst = BlockManager::new(8, 2); // different block size
+        let (a, reused) = dst.import_seq(&ex).unwrap();
+        assert_eq!(reused, 0);
+        assert_eq!(a.blocks.len(), 4, "8 tokens at block size 2... re-blocked");
+        let (b, reused_b) = dst.import_seq(&ex).unwrap();
+        assert_eq!(reused_b, 0, "foreign-geometry hashes must never alias");
+        dst.release(&a);
+        dst.release(&b);
+        dst.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn export_of_decode_grown_table_has_unhashed_tail_blocks() {
+        let mut m = BlockManager::new(8, 2);
+        let mut t = m.allocate_prompt(&[1, 2]).unwrap(); // 1 full (hashed) block
+        m.append_token(&mut t).unwrap(); // new block at the boundary
+        m.append_token(&mut t).unwrap(); // fills it — but decode-grown: no hash
+        let ex = m.export_seq(&t);
+        assert_eq!(ex.full_hashes.len(), 2);
+        assert!(ex.full_hashes[0].is_some());
+        assert!(ex.full_hashes[1].is_none(), "decode-grown block carries no hash");
+        // Import still works; the unhashed block just never dedups.
+        let (i1, r1) = m.import_seq(&ex).unwrap();
+        assert_eq!(r1, 1, "only the prompt's hashed block is shared");
+        m.release(&t);
+        m.release(&i1);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn prop_export_import_interleavings_preserve_invariants() {
+        // Satellite property: random allocate/append/fork/release/export/
+        // import interleavings never violate refcount/CoW/free-list
+        // invariants, and everything released returns the pool to full.
+        quick("kv_export_import_invariants", |rng: &mut Prng| {
+            let mut m = BlockManager::new(rng.range(6, 28), rng.range(2, 6));
+            let mut live: Vec<BlockTable> = vec![];
+            let mut exports: Vec<KvSeqExport> = vec![];
+            for _ in 0..rng.range(1, 60) {
+                match rng.range(0, 5) {
+                    0 => {
+                        let n = rng.range(1, 20);
+                        let toks: Vec<u32> = (0..n).map(|_| rng.below(6) as u32).collect();
+                        if let Ok(t) = m.allocate_prompt(&toks) {
+                            live.push(t);
+                        }
+                    }
+                    1 if !live.is_empty() => {
+                        let i = rng.range(0, live.len() - 1);
+                        let f = m.fork(&live[i]);
+                        live.push(f);
+                    }
+                    2 if !live.is_empty() => {
+                        let i = rng.range(0, live.len() - 1);
+                        let t = live.swap_remove(i);
+                        m.release(&t);
+                    }
+                    3 if !live.is_empty() => {
+                        // Export a live table (sometimes releasing the
+                        // original right away, like a prefill handoff).
+                        let i = rng.range(0, live.len() - 1);
+                        exports.push(m.export_seq(&live[i]));
+                        if rng.bool(0.5) {
+                            let t = live.swap_remove(i);
+                            m.release(&t);
+                        }
+                    }
+                    4 if !exports.is_empty() => {
+                        let i = rng.range(0, exports.len() - 1);
+                        if let Ok((t, _)) = m.import_seq(&exports[i]) {
+                            live.push(t);
+                        }
+                    }
+                    _ => {
+                        if let Some(t) = live.last_mut() {
+                            let _ = m.append_token(t);
+                        }
+                    }
+                }
+                m.check_invariants().unwrap();
+            }
+            for t in live.drain(..) {
+                m.release(&t);
+            }
+            assert_eq!(m.free_blocks(), m.n_blocks(), "leak after full release");
+            m.check_invariants().unwrap();
+        });
     }
 
     #[test]

@@ -1,0 +1,194 @@
+//! KV-transfer subsystem (paper §3.4 — prefill/decode disaggregation).
+//!
+//! A prefill-role AR engine runs chunked prefill, samples the request's
+//! first token, and then — instead of decoding in place — serializes the
+//! sequence's whole KV-cache state into a [`KvHandoff`]:
+//!
+//! * the **resident KV rows** for every cached prompt position
+//!   (`[L, 2, H, len, dh]` row-major, the payload);
+//! * the **block-table accounting** ([`KvSeqExport`]): per-full-block
+//!   prefix chain hashes, so the importing pool reuses already-resident
+//!   prefix blocks (hash-based prefix sharing across the stage boundary)
+//!   instead of allocating fresh ones;
+//! * the **continuation state** a decode engine needs to pick the
+//!   sequence up exactly where prefill left it: the first sampled token,
+//!   its hidden row, the sampling parameters, and the sampler PRNG
+//!   position — greedy *and* stochastic decoding reproduce the fused
+//!   engine bit-for-bit.
+//!
+//! The handoff crosses the stage graph inside a normal
+//! [`crate::engine::StageItem`] under the [`KV_TENSOR`] key, framed by
+//! the dedicated wire format in [`crate::connector::wire`] (checksummed;
+//! malformed frames error instead of panicking), so every connector kind
+//! (inline / shm / tcp) transports it unchanged.  The `kv2decode`
+//! transfer on the prefill→decode edge unpacks it into an
+//! `EngineCmd::SubmitKv` for the decode engine.
+
+use anyhow::{bail, Result};
+
+use crate::connector::wire;
+use crate::engine::SamplingParams;
+use crate::kv_cache::KvSeqExport;
+use crate::runtime::HostTensor;
+
+/// `StageItem` tensor key under which an encoded handoff frame travels.
+pub const KV_TENSOR: &str = "kv_handoff";
+
+/// A sequence's complete KV-cache state in transit between a prefill
+/// engine and a decode engine.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KvHandoff {
+    pub req_id: u64,
+    /// Prompt tokens resident in the exported cache (positions `0..len`).
+    pub len: usize,
+    /// First decode token, sampled by the prefill engine from the last
+    /// prompt position's logits.
+    pub first_token: u32,
+    /// Hidden row of the first token (`[d_model]`; empty when the
+    /// exporting stage does not emit hiddens).
+    pub hidden: Vec<f32>,
+    pub sampling: SamplingParams,
+    /// Sampler PRNG state *after* the first sample, so stochastic decode
+    /// continues the exact stream the fused engine would have used.
+    pub prng_state: u64,
+    /// KV geometry (must match the importing engine's model).
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    /// Block-table accounting with prefix hashes (importer-side dedup).
+    pub blocks: KvSeqExport,
+    /// Resident KV rows, `[n_layers, 2, n_heads, len, d_head]` row-major.
+    pub kv: Vec<f32>,
+}
+
+impl KvHandoff {
+    /// Expected payload length for the declared geometry.
+    pub fn expected_kv_floats(&self) -> usize {
+        self.n_layers * 2 * self.n_heads * self.len * self.d_head
+    }
+
+    /// Structural validation (shared by the engine import path and the
+    /// wire decoder): geometry, payload size, and block accounting must
+    /// agree.
+    pub fn check(&self) -> Result<()> {
+        if self.kv.len() != self.expected_kv_floats() {
+            bail!(
+                "kv handoff req {}: payload {} floats, geometry [{}x2x{}x{}x{}] needs {}",
+                self.req_id,
+                self.kv.len(),
+                self.n_layers,
+                self.n_heads,
+                self.len,
+                self.d_head,
+                self.expected_kv_floats()
+            );
+        }
+        if self.blocks.len as usize != self.len {
+            bail!(
+                "kv handoff req {}: block accounting covers {} tokens, payload {}",
+                self.req_id,
+                self.blocks.len,
+                self.len
+            );
+        }
+        Ok(())
+    }
+
+    /// Pack the wire frame into a `StageItem`-transportable i32 tensor:
+    /// element 0 is the frame byte length, the rest the frame bytes in
+    /// little-endian 4-byte groups (zero-padded).
+    pub fn to_tensor(&self) -> HostTensor {
+        let bytes = wire::encode_kv(self);
+        let words = bytes.len().div_ceil(4);
+        let mut data = Vec::with_capacity(1 + words);
+        data.push(bytes.len() as i32);
+        for chunk in bytes.chunks(4) {
+            let mut w = [0u8; 4];
+            w[..chunk.len()].copy_from_slice(chunk);
+            data.push(i32::from_le_bytes(w));
+        }
+        HostTensor::i32(vec![1 + words], data)
+    }
+
+    /// Unpack a tensor produced by [`Self::to_tensor`].
+    pub fn from_tensor(t: &HostTensor) -> Result<Self> {
+        let data = t.as_i32()?;
+        let Some((&len_word, words)) = data.split_first() else {
+            bail!("kv handoff tensor is empty");
+        };
+        let byte_len = len_word as usize;
+        if len_word < 0 || byte_len > words.len() * 4 {
+            bail!("kv handoff tensor: declared {byte_len} bytes, carries {}", words.len() * 4);
+        }
+        let mut bytes = Vec::with_capacity(words.len() * 4);
+        for w in words {
+            bytes.extend_from_slice(&w.to_le_bytes());
+        }
+        bytes.truncate(byte_len);
+        wire::decode_kv(&bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn sample_handoff() -> KvHandoff {
+        let (n_layers, n_heads, d_head, len) = (2usize, 3usize, 4usize, 5usize);
+        let kv: Vec<f32> =
+            (0..n_layers * 2 * n_heads * len * d_head).map(|i| i as f32 * 0.25 - 3.0).collect();
+        KvHandoff {
+            req_id: 42,
+            len,
+            first_token: 77,
+            hidden: vec![0.5, -1.5, 2.0],
+            sampling: SamplingParams {
+                max_new_tokens: 12,
+                temperature: 0.7,
+                top_k: 5,
+                ignore_eos: true,
+                seed: 9,
+            },
+            prng_state: 0xDEAD_BEEF_CAFE_F00D,
+            n_layers,
+            n_heads,
+            d_head,
+            blocks: KvSeqExport {
+                block_size: 2,
+                len: len as u64,
+                full_hashes: vec![Some(0xABCD), None],
+            },
+            kv,
+        }
+    }
+
+    #[test]
+    fn tensor_roundtrip() {
+        let h = sample_handoff();
+        h.check().unwrap();
+        let t = h.to_tensor();
+        let got = KvHandoff::from_tensor(&t).unwrap();
+        assert_eq!(got, h);
+    }
+
+    #[test]
+    fn tensor_rejects_garbage() {
+        assert!(KvHandoff::from_tensor(&HostTensor::i32(vec![0], vec![])).is_err());
+        // Declared length beyond the carried words.
+        assert!(KvHandoff::from_tensor(&HostTensor::i32(vec![2], vec![100, 0])).is_err());
+        // Wrong dtype.
+        assert!(KvHandoff::from_tensor(&HostTensor::f32(vec![2], vec![0.0, 1.0])).is_err());
+        // Well-formed carrier, corrupt frame inside.
+        assert!(KvHandoff::from_tensor(&HostTensor::i32(vec![3], vec![8, 0, 0])).is_err());
+    }
+
+    #[test]
+    fn check_catches_mismatched_geometry() {
+        let mut h = sample_handoff();
+        h.kv.pop();
+        assert!(h.check().is_err());
+        let mut h = sample_handoff();
+        h.blocks.len = 99;
+        assert!(h.check().is_err());
+    }
+}

@@ -47,6 +47,7 @@ pub mod device;
 pub mod engine;
 pub mod json;
 pub mod kv_cache;
+pub mod kv_transfer;
 pub mod metrics;
 pub mod orchestrator;
 pub mod runtime;

@@ -17,10 +17,13 @@ omni-serve — fully disaggregated serving for any-to-any multimodal models
 USAGE:
   omni-serve serve --pipeline <name> [--addr 127.0.0.1:8090] [--port 8090]
                    [--autoscale] [--gpu-budget N] [--config file.json]
-  omni-serve run   --pipeline <name> --dataset <librispeech|food101|ucf101|seedtts|vbench|bursty>
+  omni-serve run   --pipeline <name> --dataset <librispeech|food101|ucf101|seedtts|vbench|bursty|prefill-heavy>
                    [--n 8] [--rate 0] [--seed 1] [--no-streaming] [--baseline]
-  omni-serve bench [--trace bursty|librispeech|seedtts] [--n 48] [--budget 4]
-                   (artifact-free: autoscaled vs static replica splits on the AR-stage model)
+  omni-serve bench [--trace bursty|librispeech|seedtts|prefill-heavy] [--n 48] [--budget 4]
+                   (artifact-free: autoscaled vs static replica splits on the AR-stage
+                    model; `prefill-heavy` runs the P/D-disaggregation comparison —
+                    fused vs split prefill/decode pools — and exits non-zero unless
+                    the split wins, which is what the CI smoke step checks)
   omni-serve graph [--pipeline <name>] [--list]
   omni-serve help
 
@@ -93,6 +96,9 @@ fn real_main() -> Result<()> {
                 "seedtts" => datasets::seedtts(seed, n, rate),
                 "vbench" => datasets::vbench(seed, n, rate, 20, false),
                 "bursty" => datasets::bursty_mixed(seed, n, 2.0),
+                "prefill-heavy" => {
+                    datasets::prefill_heavy(seed, n, if rate > 0.0 { rate } else { 56.0 })
+                }
                 other => bail!("unknown dataset `{other}`"),
             };
             let audio_stage: Option<&'static str> = if config.stage("talker").is_some() {
@@ -168,18 +174,75 @@ fn real_main() -> Result<()> {
             Ok(())
         }
         "bench" => {
-            // Artifact-free elastic-allocation comparison on the
-            // two-stage AR model (same harness as the asserted suite in
-            // benches/sched_batching.rs and tests/serving.rs).
+            // Artifact-free comparisons: the elastic-allocation harness
+            // on the two-stage AR model, and — for `--trace
+            // prefill-heavy` — the P/D-disaggregation harness (fused vs
+            // split pools at equal GPU budget; same code as the asserted
+            // suites in benches/sched_batching.rs and tests/disagg.rs).
             let n = args.flag_usize("n", 48)?;
             let seed = args.flag_usize("seed", 1)? as u64;
             let budget = args.flag_usize("budget", 4)?;
             let trace = args.flag("trace").unwrap_or("bursty");
+            if trace == "prefill-heavy" {
+                let n = args.flag_usize("n", 64)?;
+                let wl = datasets::prefill_heavy(seed, n, 56.0);
+                let c = omni_serve::scheduler::sim::simulate_disagg(&wl, budget);
+                println!("trace={} n={} budget={budget}", wl.name, wl.len());
+                for (label, rep) in [
+                    ("fused-b4", &c.fused),
+                    ("fused-b8", &c.fused_wide),
+                    ("split", &c.split_static),
+                    ("split-auto", &c.split_auto),
+                ] {
+                    let mut jct = rep.jct.clone();
+                    println!(
+                        "  {:<10} {:<22} mean JCT {:>9} p99 {:>9} mean TTFT {:>9} makespan {:>9}",
+                        label,
+                        rep.policy,
+                        fmt::dur(rep.mean_jct()),
+                        fmt::dur(jct.p99()),
+                        fmt::dur(rep.mean_ttft()),
+                        fmt::dur(rep.makespan_s),
+                    );
+                }
+                println!(
+                    "  split_auto scale events: prefill {} up / {} down, decode {} up / {} down (peak {} slots)",
+                    c.split_auto.stage_scale_ups[0],
+                    c.split_auto.stage_scale_downs[0],
+                    c.split_auto.stage_scale_ups[1],
+                    c.split_auto.stage_scale_downs[1],
+                    c.split_auto.max_slots,
+                );
+                // CI smoke contract: the disaggregated pools must beat
+                // the fused pool at EITHER batch cap, or this command
+                // exits non-zero.
+                anyhow::ensure!(
+                    c.split_static.mean_jct() < c.fused_best_jct()
+                        && c.split_static.mean_ttft() < c.fused_best_ttft(),
+                    "disaggregated pools did not beat the best fused pool (JCT {} vs {}, TTFT {} vs {})",
+                    fmt::dur(c.split_static.mean_jct()),
+                    fmt::dur(c.fused_best_jct()),
+                    fmt::dur(c.split_static.mean_ttft()),
+                    fmt::dur(c.fused_best_ttft()),
+                );
+                anyhow::ensure!(
+                    c.split_auto.mean_jct() < c.fused_best_jct()
+                        && c.split_auto.max_slots <= budget,
+                    "autoscaled split regressed (JCT {} vs fused {}, peak {} slots, budget {budget})",
+                    fmt::dur(c.split_auto.mean_jct()),
+                    fmt::dur(c.fused_best_jct()),
+                    c.split_auto.max_slots,
+                );
+                println!("disagg < fused confirmed at budget {budget}");
+                return Ok(());
+            }
             let wl = match trace {
                 "bursty" => datasets::bursty_mixed(seed, n, 2.0),
                 "librispeech" => datasets::librispeech(seed, n, 4.0),
                 "seedtts" => datasets::seedtts(seed, n, 4.0),
-                other => bail!("unknown trace `{other}` (bursty|librispeech|seedtts)"),
+                other => {
+                    bail!("unknown trace `{other}` (bursty|librispeech|seedtts|prefill-heavy)")
+                }
             };
             let (statics, auto) = omni_serve::scheduler::sim::elastic_comparison(&wl, budget);
             println!("trace={} n={} budget={budget}", wl.name, wl.len());
@@ -226,24 +289,37 @@ fn real_main() -> Result<()> {
 fn print_report(r: &omni_serve::metrics::RunReport) {
     let mut jct = r.jct.clone();
     println!(
-        "completed={} wall={} | JCT mean={} p50={} p99={} | TTFT mean={} | RTF mean={:.3}",
+        "completed={} wall={} | JCT mean={} p50={} p99={} | TTFT mean={} | first-token mean={} | RTF mean={:.3}",
         r.completed,
         fmt::dur(r.wall_s),
         fmt::dur(r.mean_jct()),
         fmt::dur(jct.p50()),
         fmt::dur(jct.p99()),
         fmt::dur(r.mean_ttft()),
+        fmt::dur(r.mean_first_token()),
         if r.rtf.is_empty() { f64::NAN } else { r.mean_rtf() },
     );
     let mut stages: Vec<&String> = r.per_stage.keys().collect();
     stages.sort();
     for s in stages {
+        // Per-stage queue-wait p50/p95 makes prefill/decode splits
+        // observable: a backed-up decode pool shows up here first.
+        let waits = if r.sched.contains_key(s.as_str()) {
+            format!(
+                " | queue-wait p50 {} p95 {}",
+                fmt::dur(r.sched_wait_percentile(s, 50.0)),
+                fmt::dur(r.sched_wait_percentile(s, 95.0)),
+            )
+        } else {
+            String::new()
+        };
         println!(
-            "  stage {:>10}: mean residence {} | {} tokens | TPS {:.1}",
+            "  stage {:>10}: mean residence {} | {} tokens | TPS {:.1}{}",
             s,
             fmt::dur(r.stage_mean_time(s)),
             r.stage_tokens(s),
             r.stage_tps(s),
+            waits,
         );
     }
 }

@@ -20,6 +20,11 @@ pub enum Event {
     StageAdmit { req: u64, stage: &'static str, t: f64 },
     /// A stage produced its first output item for this request.
     StageFirstOutput { req: u64, stage: &'static str, t: f64 },
+    /// The request's first decode TOKEN exists somewhere in the pipeline
+    /// (stage loops emit this on the first token-bearing item only, so
+    /// encoder/vocoder feature items never count).  The earliest
+    /// emission wins; feeds [`RunReport::first_token`].
+    FirstToken { req: u64, t: f64 },
     /// A stage finished this request, having produced `tokens` items.
     StageDone { req: u64, stage: &'static str, t: f64, tokens: usize },
     /// Request fully completed.
@@ -73,6 +78,8 @@ struct StageRec {
 struct ReqRec {
     arrived: Option<f64>,
     completed: Option<f64>,
+    /// Earliest [`Event::FirstToken`] timestamp.
+    first_token: Option<f64>,
     stages: HashMap<&'static str, StageRec>,
 }
 
@@ -161,6 +168,10 @@ impl Recorder {
                     s.first = Some(t);
                 }
             }
+            Event::FirstToken { req, t } => {
+                let r = m.entry(req).or_default();
+                r.first_token = Some(r.first_token.map_or(t, |x| x.min(t)));
+            }
             Event::StageDone { req, stage, t, tokens } => {
                 let s = m.entry(req).or_default().stages.entry(stage).or_default();
                 s.done = Some(t);
@@ -182,6 +193,7 @@ impl Recorder {
         let m = self.inner.lock().unwrap();
         let mut jct = Samples::new();
         let mut ttft = Samples::new();
+        let mut first_token = Samples::new();
         let mut rtf = Samples::new();
         let mut per_stage: HashMap<String, StageAgg> = HashMap::new();
         let mut completed = 0usize;
@@ -198,6 +210,14 @@ impl Recorder {
                 .fold(None::<f64>, |acc, t| Some(acc.map_or(t, |x| x.max(t))))
             {
                 ttft.push(first - a);
+            }
+            // First decode token (the earliest FirstToken event — stage
+            // loops emit it only for token-bearing items, so an encoder
+            // stage's feature items never count).  Kept separate from
+            // JCT and from the pipeline-exit TTFT above; this is the
+            // latency the P/D split protects.
+            if let Some(first) = rec.first_token {
+                first_token.push(first - a);
             }
             for (name, s) in &rec.stages {
                 let agg = per_stage.entry(name.to_string()).or_default();
@@ -232,6 +252,7 @@ impl Recorder {
             completed,
             jct,
             ttft,
+            first_token,
             rtf,
             per_stage,
             sched,
@@ -256,6 +277,11 @@ pub struct RunReport {
     pub completed: usize,
     pub jct: Samples,
     pub ttft: Samples,
+    /// Time to the FIRST decode token (earliest [`Event::FirstToken`],
+    /// emitted per request on the first token-bearing stage item) —
+    /// distinct from [`Self::ttft`], which measures the pipeline's last
+    /// stage.  This is the metric prefill/decode splits move.
+    pub first_token: Samples,
     pub rtf: Samples,
     pub per_stage: HashMap<String, StageAgg>,
     /// Per-stage scheduler aggregates, merged across engine replicas
@@ -280,6 +306,21 @@ impl RunReport {
 
     pub fn mean_ttft(&self) -> f64 {
         self.ttft.mean()
+    }
+
+    /// Mean time to the first decode token (see [`Self::first_token`]).
+    pub fn mean_first_token(&self) -> f64 {
+        self.first_token.mean()
+    }
+
+    /// Percentile of the seconds requests waited in `stage`'s admission
+    /// queue (p in `[0, 100]`) — the per-stage queue-wait view the run
+    /// summary prints as p50/p95.
+    pub fn sched_wait_percentile(&self, stage: &str, p: f64) -> f64 {
+        self.sched
+            .get(stage)
+            .map(|a| a.admit_wait.clone().percentile(p))
+            .unwrap_or(0.0)
     }
 
     /// Aggregate tokens-per-second for a stage over the whole run
@@ -383,6 +424,50 @@ mod tests {
         assert!((rep.stage_mean_time("thinker") - 1.0).abs() < 1e-9);
         // TTFT = last stage's first output = 0.5
         assert!((rep.mean_ttft() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn first_token_follows_the_dedicated_event_not_feature_items() {
+        // An EPD-shaped pipeline: the encoder's feature item is a stage
+        // first-output but NOT a token, so only the prefill stage's
+        // FirstToken event counts; TTFT still follows the exit stage.
+        let r = Recorder::new();
+        r.emit(Event::Arrived { req: 1, t: 0.0 });
+        r.emit(Event::StageFirstOutput { req: 1, stage: "encoder", t: 0.02 });
+        r.emit(Event::StageAdmit { req: 1, stage: "prefill", t: 0.05 });
+        r.emit(Event::StageFirstOutput { req: 1, stage: "prefill", t: 0.1 });
+        r.emit(Event::FirstToken { req: 1, t: 0.1 });
+        r.emit(Event::StageDone { req: 1, stage: "prefill", t: 0.1, tokens: 1 });
+        r.emit(Event::StageAdmit { req: 1, stage: "decode", t: 0.12 });
+        r.emit(Event::StageFirstOutput { req: 1, stage: "decode", t: 0.4 });
+        // The decode stage re-emits the first token later; earliest wins.
+        r.emit(Event::FirstToken { req: 1, t: 0.4 });
+        r.emit(Event::StageDone { req: 1, stage: "decode", t: 0.9, tokens: 20 });
+        r.emit(Event::Completed { req: 1, t: 0.9 });
+        let rep = r.report(1.0, None);
+        assert!((rep.mean_first_token() - 0.1).abs() < 1e-9);
+        assert!((rep.mean_ttft() - 0.4).abs() < 1e-9);
+        assert!((rep.mean_jct() - 0.9).abs() < 1e-9);
+        // A run without FirstToken events (e.g. baseline) reports empty.
+        assert_eq!(rep.first_token.len(), 1);
+    }
+
+    #[test]
+    fn sched_wait_percentiles_per_stage() {
+        let r = Recorder::new();
+        for (i, w) in [0.1, 0.2, 0.3, 0.4, 1.0].iter().enumerate() {
+            r.emit(Event::SchedAdmitted {
+                stage: "decode",
+                replica: 0,
+                req: i as u64,
+                t: 1.0,
+                wait_s: *w,
+            });
+        }
+        let rep = r.report(1.0, None);
+        assert!((rep.sched_wait_percentile("decode", 50.0) - 0.3).abs() < 1e-9);
+        assert!((rep.sched_wait_percentile("decode", 100.0) - 1.0).abs() < 1e-9);
+        assert_eq!(rep.sched_wait_percentile("nope", 50.0), 0.0);
     }
 
     #[test]

@@ -125,6 +125,10 @@ impl StageSummary {
                 a.preemptions += b.preemptions;
                 a.exec_seconds += b.exec_seconds;
                 a.marshal_seconds += b.marshal_seconds;
+                a.kv_exports += b.kv_exports;
+                a.kv_imports += b.kv_imports;
+                a.kv_export_bytes += b.kv_export_bytes;
+                a.kv_reused_blocks += b.kv_reused_blocks;
             }
             (slot @ None, Some(b)) => *slot = Some(b.clone()),
             _ => {}

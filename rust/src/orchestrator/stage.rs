@@ -188,6 +188,7 @@ fn build_engine(spec: &StageSpec) -> Result<Engine> {
                 kv_block_size: block_size,
                 lazy_compile: spec.lazy_compile,
                 emit_hiddens: true,
+                role: c.role,
             };
             Engine::Ar(Box::new(ArEngine::new(&spec.artifacts, &c.model, opts)?))
         }
@@ -241,8 +242,12 @@ fn run(mut spec: StageSpec) -> Result<StageSummary> {
         }
     }
 
-    // Instantiate incoming transfers with the request table.
-    let mut inputs: Vec<(RouterRx, Transfer)> = Vec::new();
+    // Instantiate incoming transfers with the request table.  The bool
+    // tracks edge closure: once an edge reports `TryRecv::Closed` (every
+    // producer replica hung up, channels drained) it is never polled
+    // again, and when EVERY input has closed the loop drains the engine
+    // and exits instead of spinning on dead edges.
+    let mut inputs: Vec<(RouterRx, Transfer, bool)> = Vec::new();
     for (rx, tname) in spec.rxs.drain(..) {
         let ctx = TransferCtx {
             reqs: spec.reqs.clone(),
@@ -250,7 +255,7 @@ fn run(mut spec: StageSpec) -> Result<StageSummary> {
             cond_tokens_dim: spec.downstream_hint.cond_tokens_dim,
         };
         let t = spec.registry.instantiate(&tname, ctx)?;
-        inputs.push((rx, t));
+        inputs.push((rx, t, false));
     }
 
     // The stage's admission queue: inputs land here and the configured
@@ -261,6 +266,9 @@ fn run(mut spec: StageSpec) -> Result<StageSummary> {
     // Per-request output token counters (for StageDone events).
     let mut tokens_out: HashMap<u64, usize> = HashMap::new();
     let mut first_out: HashMap<u64, bool> = HashMap::new();
+    // Requests whose first TOKEN-bearing item this replica has emitted
+    // (feeds Event::FirstToken; encoder/vocoder feature items never do).
+    let mut first_tok: HashMap<u64, bool> = HashMap::new();
     let mut tick: u64 = 0;
     // Bounded-backoff idle waiting: spin briefly for burst reaction, then
     // escalate sleeps instead of spinning on empty connectors.
@@ -305,11 +313,18 @@ fn run(mut spec: StageSpec) -> Result<StageSummary> {
         // edge (every producer replica hung up, channels drained) stops
         // being a data source; the loop's stop flag still governs
         // shutdown so in-flight work finishes first.
-        for (rx, transfer) in &mut inputs {
+        for (rx, transfer, closed) in &mut inputs {
+            if *closed {
+                continue;
+            }
             while sched.has_room() {
                 let item = match rx.try_recv()? {
                     TryRecv::Item(item) => item,
-                    TryRecv::Empty | TryRecv::Closed => break,
+                    TryRecv::Empty => break,
+                    TryRecv::Closed => {
+                        *closed = true;
+                        break;
+                    }
                 };
                 for cmd in transfer(&item)? {
                     for c in sched.enqueue(cmd, spec.clock.now()) {
@@ -326,7 +341,7 @@ fn run(mut spec: StageSpec) -> Result<StageSummary> {
         // load slot so the autoscaler sees queue pressure and idleness.
         {
             let depth = sched.queue_len();
-            for (rx, _) in &inputs {
+            for (rx, _, _) in &inputs {
                 rx.publish_queue_depth(depth);
             }
             spec.slot.publish(depth, !engine.idle());
@@ -380,6 +395,12 @@ fn run(mut spec: StageSpec) -> Result<StageSummary> {
                         t: spec.clock.now(),
                     });
                 }
+                if !first_tok.contains_key(&rid)
+                    && item.tensor("tokens").map(|t| !t.is_empty()).unwrap_or(false)
+                {
+                    first_tok.insert(rid, true);
+                    spec.recorder.emit(Event::FirstToken { req: rid, t: spec.clock.now() });
+                }
                 let produced = item
                     .tensor("tokens")
                     .map(|t| t.len())
@@ -398,6 +419,7 @@ fn run(mut spec: StageSpec) -> Result<StageSummary> {
                         tokens: tokens_out.remove(&rid).unwrap_or(0),
                     });
                     first_out.remove(&rid);
+                    first_tok.remove(&rid);
                 }
                 // Forward a copy along every outgoing edge.  A closed
                 // connector after shutdown is benign: the run completes
@@ -407,7 +429,19 @@ fn run(mut spec: StageSpec) -> Result<StageSummary> {
                 for tx in &mut spec.txs {
                     if let Err(e) = tx.send(item.clone()) {
                         if !spec.stop.load(Ordering::SeqCst) {
-                            return Err(e);
+                            // A downstream edge died mid-run.  Surface a
+                            // clean error naming the stranded state (e.g.
+                            // a prefill pool whose decode pool is gone
+                            // still holds un-exported KV sequences)
+                            // instead of hanging on a dead edge.
+                            let live = engine.view(spec.assignment.max_batch).running
+                                + sched.queue_len();
+                            return Err(e.context(format!(
+                                "stage `{stage_name}` (replica {}): downstream edge \
+                                 closed mid-run with {live} sequence(s) still holding \
+                                 KV/stream state",
+                                spec.replica
+                            )));
                         }
                         // Post-shutdown: the consumer is gone, drop the item.
                     }
@@ -419,13 +453,23 @@ fn run(mut spec: StageSpec) -> Result<StageSummary> {
         }
 
         if !worked {
-            // Exit on run shutdown, or on a per-replica retire signal
+            // Exit on run shutdown, on a per-replica retire signal
             // (elastic scale-down: the control plane has already drained
-            // this replica's edges, so an empty engine + queue is final).
-            if (spec.stop.load(Ordering::SeqCst) || spec.retire.load(Ordering::SeqCst))
-                && engine.idle()
-                && sched.is_empty()
-            {
+            // this replica's edges, so an empty engine + queue is final),
+            // or once every incoming edge has closed — drain-and-flush:
+            // in-flight work finished above, remaining outputs were
+            // forwarded, and nothing new can ever arrive, so spinning
+            // would hang the stage forever.
+            let inputs_closed = spec.front_rx.is_none()
+                && !inputs.is_empty()
+                && inputs.iter().all(|(_, _, closed)| *closed);
+            if should_exit(
+                spec.stop.load(Ordering::SeqCst),
+                spec.retire.load(Ordering::SeqCst),
+                inputs_closed,
+                engine.idle(),
+                sched.is_empty(),
+            ) {
                 break;
             }
             backoff.idle_wait();
@@ -452,6 +496,21 @@ fn run(mut spec: StageSpec) -> Result<StageSummary> {
     Ok(summary)
 }
 
+/// When the stage loop may stop serving (pure; see the loop's exit arm).
+/// `inputs_closed` alone is enough once the engine has drained: every
+/// producer replica of every incoming edge hung up, so no item can ever
+/// arrive again — without this arm a stage whose upstream died would spin
+/// on dead edges forever instead of exiting cleanly.
+fn should_exit(
+    stop: bool,
+    retire: bool,
+    inputs_closed: bool,
+    engine_idle: bool,
+    queue_empty: bool,
+) -> bool {
+    (stop || retire || inputs_closed) && engine_idle && queue_empty
+}
+
 fn apply_cmd(
     engine: &mut Engine,
     cmd: EngineCmd,
@@ -466,6 +525,10 @@ fn apply_cmd(
         }
         (Engine::Ar(e), EngineCmd::Upstream { req_id, rows, dim, complete }) => {
             e.push_upstream(req_id, &rows, dim.max(1), complete);
+        }
+        (Engine::Ar(e), EngineCmd::SubmitKv(h)) => {
+            recorder.emit(Event::StageAdmit { req: h.req_id, stage: stage_name, t: clock.now() });
+            e.submit_handoff(*h)?;
         }
         (Engine::Diffusion(e), EngineCmd::SubmitDiffusion(job)) => {
             if job.chunk_idx == 0 {
@@ -494,6 +557,27 @@ fn apply_cmd(
         (_, cmd) => bail!("stage `{stage_name}`: engine cannot handle {cmd:?}"),
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::should_exit;
+
+    #[test]
+    fn closed_inputs_drain_then_exit() {
+        // A stage whose every incoming edge closed exits once drained...
+        assert!(should_exit(false, false, true, true, true));
+        // ...but never while the engine or the admission queue still hold
+        // work (drain-and-flush: in-flight sequences finish first).
+        assert!(!should_exit(false, false, true, false, true));
+        assert!(!should_exit(false, false, true, true, false));
+        // Live inputs and no stop/retire: keep serving.
+        assert!(!should_exit(false, false, false, true, true));
+        // Stop/retire still exit exactly as before.
+        assert!(should_exit(true, false, false, true, true));
+        assert!(should_exit(false, true, false, true, true));
+        assert!(!should_exit(true, false, false, false, true));
+    }
 }
 
 /// Entry job for a standalone encoder stage (EPD disaggregation):

@@ -129,6 +129,9 @@ impl StageScheduler {
     pub fn enqueue(&mut self, cmd: EngineCmd, now: f64) -> Vec<EngineCmd> {
         let (req_id, cost) = match &cmd {
             EngineCmd::SubmitAr(j) => (j.req_id, j.prompt.len() + j.sampling.max_new_tokens),
+            // An imported sequence commits its resident prompt plus its
+            // remaining generation budget, like a fresh AR submission.
+            EngineCmd::SubmitKv(h) => (h.req_id, h.len + h.sampling.max_new_tokens),
             EngineCmd::SubmitDiffusion(j) => (j.req_id, j.steps.max(1)),
             EngineCmd::SubmitVocoder(j) => (j.req_id, j.tokens.len().max(1)),
             EngineCmd::SubmitEncode(j) => (j.req_id, j.frames.max(1)),

@@ -12,7 +12,7 @@ pub mod transfers;
 
 use anyhow::{bail, Result};
 
-use crate::config::{EdgeConfig, PipelineConfig, StageConfig};
+use crate::config::{EdgeConfig, PipelineConfig, StageConfig, StageRole};
 
 /// A validated stage graph: topology checked, transfers resolvable.
 #[derive(Debug, Clone)]
@@ -62,6 +62,87 @@ impl StageGraph {
                     e.to,
                     to.replicas
                 );
+            }
+        }
+
+        // Prefill/decode disaggregation (paper §3.4): a Prefill stage's
+        // KV handoffs are only meaningful to a Decode stage serving the
+        // SAME model (the KV geometry and weights must match), and a
+        // Decode stage gets all of its sequence state from handoffs, so
+        // every edge across the split is checked here — a mis-wired EPD
+        // graph fails at build time, not with a runtime import error.
+        for s in &config.stages {
+            match s.role {
+                StageRole::Prefill => {
+                    let outs: Vec<&EdgeConfig> =
+                        config.edges.iter().filter(|e| e.from == s.name).collect();
+                    if outs.is_empty() {
+                        bail!(
+                            "prefill stage `{}` has no outgoing edge — its KV handoffs \
+                             need a decode stage to import them",
+                            s.name
+                        );
+                    }
+                    for e in &outs {
+                        let to = config.stage(&e.to).unwrap();
+                        if to.role != StageRole::Decode {
+                            bail!(
+                                "edge {}->{}: a prefill stage must feed a decode stage \
+                                 (got role `{}`)",
+                                e.from,
+                                e.to,
+                                to.role.name()
+                            );
+                        }
+                        if to.model != s.model {
+                            bail!(
+                                "edge {}->{}: prefill serves `{}` but decode serves `{}` — \
+                                 KV handoffs only transfer between engines of the same model",
+                                e.from,
+                                e.to,
+                                s.model,
+                                to.model
+                            );
+                        }
+                    }
+                }
+                StageRole::Decode => {
+                    let ins: Vec<&EdgeConfig> =
+                        config.edges.iter().filter(|e| e.to == s.name).collect();
+                    if ins.is_empty() {
+                        bail!(
+                            "decode stage `{}` has no incoming edge — it can only serve \
+                             sequences imported from a prefill stage",
+                            s.name
+                        );
+                    }
+                    for e in &ins {
+                        let from = config.stage(&e.from).unwrap();
+                        if from.role != StageRole::Prefill {
+                            bail!(
+                                "edge {}->{}: a decode stage only accepts KV handoffs \
+                                 from a prefill stage (got role `{}`)",
+                                e.from,
+                                e.to,
+                                from.role.name()
+                            );
+                        }
+                        // The transfer itself must speak KV handoffs; a
+                        // decode pool behind e.g. `thinker2talker` would
+                        // never receive a sequence to serve.
+                        if !registry.is_kv(&e.transfer) {
+                            bail!(
+                                "edge {}->{}: decode stages require a KV-handoff \
+                                 transfer (`kv2decode`, or one registered with \
+                                 register_kv), got `{}`",
+                                e.from,
+                                e.to,
+                                e.transfer
+                            );
+                        }
+                    }
+                }
+                StageRole::Fused => {}
             }
         }
 
@@ -252,6 +333,86 @@ mod tests {
         p.edges[1].transfer = "item_independent".into();
         p.edges[1].routing = crate::config::RoutingKind::LeastDepth;
         assert!(StageGraph::build(p, &r).is_ok());
+    }
+
+    #[test]
+    fn epd_preset_builds_with_prefill_feeding_decode() {
+        let g = StageGraph::build(presets::qwen3_omni_epd(), &reg()).unwrap();
+        assert_eq!(g.entry, g.stage_index("encoder").unwrap());
+        let pos = |n: &str| g.topo.iter().position(|&i| g.stage(i).name == n).unwrap();
+        assert!(pos("prefill") < pos("decode"));
+        assert!(pos("decode") < pos("talker"));
+    }
+
+    #[test]
+    fn rejects_prefill_not_feeding_a_decode_stage() {
+        // Re-point the prefill stage's edge at the talker: rejected.
+        let mut p = presets::qwen3_omni_epd();
+        p.edges.retain(|e| e.from != "prefill");
+        p.edges.push(crate::config::EdgeConfig {
+            from: "prefill".into(),
+            to: "talker".into(),
+            transfer: "thinker2talker".into(),
+            connector: crate::config::ConnectorKind::Inline,
+            routing: crate::config::RoutingKind::Auto,
+        });
+        // The decode stage now dangles too; drop it so only the
+        // prefill-side violation is under test.
+        p.stages.retain(|s| s.name != "decode");
+        p.edges.retain(|e| e.from != "decode" && e.to != "decode");
+        let err = StageGraph::build(p, &reg()).unwrap_err();
+        assert!(format!("{err:#}").contains("must feed a decode stage"), "{err:#}");
+    }
+
+    #[test]
+    fn rejects_prefill_decode_model_mismatch() {
+        let mut p = presets::qwen3_omni_epd();
+        p.stages.iter_mut().find(|s| s.name == "decode").unwrap().model = "talker3".into();
+        let err = StageGraph::build(p, &reg()).unwrap_err();
+        assert!(format!("{err:#}").contains("same model"), "{err:#}");
+    }
+
+    #[test]
+    fn rejects_decode_fed_by_a_fused_stage() {
+        let mut p = presets::qwen3_omni_epd();
+        p.stages.iter_mut().find(|s| s.name == "prefill").unwrap().role =
+            crate::config::StageRole::Fused;
+        let err = StageGraph::build(p, &reg()).unwrap_err();
+        assert!(format!("{err:#}").contains("only accepts KV handoffs"), "{err:#}");
+    }
+
+    #[test]
+    fn rejects_non_kv_transfer_into_a_decode_stage() {
+        // Roles line up but the transfer cannot carry KV handoffs: the
+        // decode pool would never receive a sequence, so build rejects.
+        let mut p = presets::qwen3_omni_epd();
+        p.edges.iter_mut().find(|e| e.to == "decode").unwrap().transfer =
+            "thinker2talker".into();
+        let err = StageGraph::build(p, &reg()).unwrap_err();
+        assert!(format!("{err:#}").contains("KV-handoff transfer"), "{err:#}");
+        // A custom transfer registered with register_kv is accepted.
+        let mut r = reg();
+        r.register_kv(
+            "my_kv",
+            std::sync::Arc::new(|_ctx: transfers::TransferCtx| -> transfers::Transfer {
+                Box::new(|_item| Ok(vec![]))
+            }),
+        );
+        assert!(r.is_kv("my_kv"));
+        assert!(!r.is_kv("thinker2talker"));
+        let mut p = presets::qwen3_omni_epd();
+        p.edges.iter_mut().find(|e| e.to == "decode").unwrap().transfer = "my_kv".into();
+        assert!(StageGraph::build(p, &r).is_ok());
+    }
+
+    #[test]
+    fn rejects_dangling_prefill_stage() {
+        let mut p = presets::qwen3_omni_epd();
+        p.stages.retain(|s| s.name != "decode");
+        p.edges.retain(|e| e.to != "decode" && e.from != "decode");
+        // prefill now has no outgoing edge at all.
+        let err = StageGraph::build(p, &reg()).unwrap_err();
+        assert!(format!("{err:#}").contains("no outgoing edge"), "{err:#}");
     }
 
     #[test]

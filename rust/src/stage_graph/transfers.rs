@@ -55,6 +55,9 @@ pub enum EngineCmd {
     SubmitVocoder(VocoderJob),
     /// Multimodal encode job (standalone encoder stages, EPD mode).
     SubmitEncode(EncodeJob),
+    /// A prefill stage's exported KV state for a decode stage to import
+    /// (P/D disaggregation, see [`crate::kv_transfer`]).
+    SubmitKv(Box<crate::kv_transfer::KvHandoff>),
 }
 
 /// A stateful transfer instance.
@@ -71,6 +74,13 @@ struct RegistryEntry {
     /// per-request state, so they all register stateful; custom
     /// transfers opt in via [`Registry::register_stateless`].
     stateless: bool,
+    /// Whether the transfer produces [`EngineCmd::SubmitKv`] from
+    /// KV-handoff items — required on every edge into a
+    /// [`crate::config::StageRole::Decode`] stage (enforced at graph
+    /// build: a decode pool fed by a non-KV transfer would never see a
+    /// sequence).  `kv2decode` registers with it; custom wrappers opt in
+    /// via [`Registry::register_kv`].
+    kv: bool,
 }
 
 /// Named transfer registry.
@@ -95,6 +105,7 @@ impl Registry {
         r.register("talker2vocoder", Arc::new(talker2vocoder));
         r.register("hidden2cond", Arc::new(hidden2cond));
         r.register("tokens2patches", Arc::new(tokens2patches));
+        r.register_kv("kv2decode", Arc::new(kv2decode));
         r
     }
 
@@ -104,7 +115,7 @@ impl Registry {
     pub fn register(&mut self, name: &str, f: TransferFactory) {
         self.map.insert(
             name.to_string(),
-            Arc::new(RegistryEntry { factory: f, stateless: false }),
+            Arc::new(RegistryEntry { factory: f, stateless: false, kv: false }),
         );
     }
 
@@ -114,7 +125,16 @@ impl Registry {
     pub fn register_stateless(&mut self, name: &str, f: TransferFactory) {
         self.map.insert(
             name.to_string(),
-            Arc::new(RegistryEntry { factory: f, stateless: true }),
+            Arc::new(RegistryEntry { factory: f, stateless: true, kv: false }),
+        );
+    }
+
+    /// Register a KV-handoff transfer (emits [`EngineCmd::SubmitKv`]),
+    /// valid on prefill→decode edges.  Stateful, like every built-in.
+    pub fn register_kv(&mut self, name: &str, f: TransferFactory) {
+        self.map.insert(
+            name.to_string(),
+            Arc::new(RegistryEntry { factory: f, stateless: false, kv: true }),
         );
     }
 
@@ -125,6 +145,12 @@ impl Registry {
     /// Whether `name` is registered as stateless (unknown names are NOT).
     pub fn is_stateless(&self, name: &str) -> bool {
         self.map.get(name).map(|e| e.stateless).unwrap_or(false)
+    }
+
+    /// Whether `name` is registered as a KV-handoff transfer (unknown
+    /// names are NOT).
+    pub fn is_kv(&self, name: &str) -> bool {
+        self.map.get(name).map(|e| e.kv).unwrap_or(false)
     }
 
     pub fn instantiate(&self, name: &str, ctx: TransferCtx) -> Result<Transfer> {
@@ -182,6 +208,23 @@ fn embeds2prompt(ctx: TransferCtx) -> Transfer {
             },
         }));
         Ok(cmds)
+    })
+}
+
+/// Prefill -> Decode (P/D disaggregation, paper §3.4): unpack the
+/// [`crate::kv_transfer::KvHandoff`] frame the prefill engine attached
+/// to its finished item and submit it for import.  A malformed frame is
+/// an error (the stage thread surfaces it), never a panic.
+fn kv2decode(_ctx: TransferCtx) -> Transfer {
+    Box::new(move |item: &StageItem| {
+        let Some(t) = item.tensor(crate::kv_transfer::KV_TENSOR) else {
+            // Streamed non-final items (no handoff yet) carry nothing for
+            // the decode engine.
+            return Ok(vec![]);
+        };
+        let h = crate::kv_transfer::KvHandoff::from_tensor(t)
+            .map_err(|e| e.context(format!("kv2decode: request {}", item.req_id)))?;
+        Ok(vec![EngineCmd::SubmitKv(Box::new(h))])
     })
 }
 
@@ -439,6 +482,45 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn kv2decode_unpacks_handoffs_and_rejects_corruption() {
+        let mut t = Registry::builtin().instantiate("kv2decode", ctx(0, 0)).unwrap();
+        // Items without a handoff tensor (streamed partials) produce nothing.
+        assert!(t(&item_tokens(1, &[5], 4, false)).unwrap().is_empty());
+        // A finished prefill item with a valid frame becomes a SubmitKv.
+        let h = crate::kv_transfer::KvHandoff {
+            req_id: 1,
+            len: 2,
+            first_token: 9,
+            hidden: vec![],
+            sampling: crate::engine::SamplingParams::default(),
+            prng_state: 7,
+            n_layers: 1,
+            n_heads: 1,
+            d_head: 2,
+            blocks: crate::kv_cache::KvSeqExport {
+                block_size: 2,
+                len: 2,
+                full_hashes: vec![Some(3)],
+            },
+            kv: vec![0.5; 8], // 1 layer x 2 x 1 head x 2 tokens x 2 dh
+        };
+        let item = StageItem::new(1)
+            .with(crate::kv_transfer::KV_TENSOR, h.to_tensor())
+            .finished();
+        let cmds = t(&item).unwrap();
+        assert_eq!(cmds.len(), 1);
+        assert!(matches!(&cmds[0], EngineCmd::SubmitKv(got) if **got == h));
+        // A corrupt frame errors (no panic).
+        let mut tensor = h.to_tensor();
+        if let Ok(d) = tensor.as_i32_mut() {
+            let last = d.len() - 1;
+            d[last] ^= 0x5A5A;
+        }
+        let bad = StageItem::new(1).with(crate::kv_transfer::KV_TENSOR, tensor).finished();
+        assert!(t(&bad).is_err());
     }
 
     #[test]

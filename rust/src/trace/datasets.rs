@@ -146,6 +146,33 @@ pub fn bursty_mixed(seed: u64, n: usize, gap_s: f64) -> Workload {
     Workload { name: "bursty-mixed-sim".into(), requests }
 }
 
+/// Prefill-heavy mixed trace for the P/D-disaggregation evaluation
+/// (paper §3.4): a dense online stream alternating analysis requests —
+/// long multimodal prompts with near-floor answers, so the compute-bound
+/// prefill phase dominates their work — with chat turns whose long
+/// decodes are latency-bound.  In a fused engine the two phases fight:
+/// every mixed iteration pays both phase dispatches, chat decodes convoy
+/// behind prefill chunks, and long-decode requests pin batch slots that
+/// arriving prompts then queue behind.  Split prefill/decode pools
+/// suffer none of that, which is exactly what
+/// `scheduler::sim::simulate_disagg` measures on this trace.
+pub fn prefill_heavy(seed: u64, n: usize, rate: f64) -> Workload {
+    let mut rng = Prng::new(seed ^ 0x9EF111);
+    let at = arrivals(&mut rng, n, rate);
+    let requests = (0..n)
+        .map(|i| {
+            if i % 2 == 0 {
+                // Chat turn: tiny prompt, long decode.
+                mk(&mut rng, i as u64, at[i], Modality::Text, 8.0, 0.0, 70.0, 0.0)
+            } else {
+                // Analysis: mm-token-dominated prompt, near-floor decode.
+                mk(&mut rng, i as u64, at[i], Modality::Video, 20.0, 120.0, 8.0, 0.0)
+            }
+        })
+        .collect();
+    Workload { name: "prefill-heavy-sim".into(), requests }
+}
+
 /// VBench sim: text (or image) prompts for DiT image/video generation.
 pub fn vbench(seed: u64, n: usize, rate: f64, steps: usize, image_cond: bool) -> Workload {
     let mut rng = Prng::new(seed ^ 0xBE9C);
@@ -230,6 +257,25 @@ mod tests {
     }
 
     #[test]
+    fn prefill_heavy_trace_alternates_phase_pressure() {
+        let w = prefill_heavy(1, 40, 56.0);
+        assert_eq!(w.len(), 40);
+        let (chat, analysis): (Vec<_>, Vec<_>) =
+            w.requests.iter().partition(|r| r.mm_frames == 0);
+        assert_eq!(chat.len(), 20);
+        // Chat turns are decode-bound, analysis requests prefill-bound.
+        let c_in: f64 = chat.iter().map(|r| r.total_input_tokens() as f64).sum::<f64>() / 20.0;
+        let a_in: f64 =
+            analysis.iter().map(|r| r.total_input_tokens() as f64).sum::<f64>() / 20.0;
+        assert!(a_in > 6.0 * c_in, "analysis input {a_in} vs chat input {c_in}");
+        let c_out: f64 = chat.iter().map(|r| r.max_text_tokens as f64).sum::<f64>() / 20.0;
+        let a_out: f64 = analysis.iter().map(|r| r.max_text_tokens as f64).sum::<f64>() / 20.0;
+        assert!(c_out > 4.0 * a_out, "chat decode {c_out} vs analysis decode {a_out}");
+        // Online by construction (the P/D comparison needs live pressure).
+        assert!(w.requests.last().unwrap().arrival_s > 0.0);
+    }
+
+    #[test]
     fn prop_limits_respected() {
         quick("trace_limits", |rng| {
             let seed = rng.next_u64();
@@ -241,6 +287,7 @@ mod tests {
                 seedtts(seed, n, 0.0),
                 vbench(seed, n, 0.0, 20, false),
                 bursty_mixed(seed, n, 2.0),
+                prefill_heavy(seed, n, 56.0),
             ] {
                 for r in &w.requests {
                     assert!(r.total_input_tokens() <= 210, "{}", r.total_input_tokens());

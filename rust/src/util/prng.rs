@@ -22,6 +22,19 @@ impl Prng {
         Prng::new(self.next_u64() ^ tag.wrapping_mul(0xBF58476D1CE4E5B9))
     }
 
+    /// Raw generator state, for carrying a sampler's position across a
+    /// serialization boundary (e.g. a KV handoff between prefill and
+    /// decode engines).  Restore with [`Prng::from_state`].
+    pub fn state(&self) -> u64 {
+        self.state
+    }
+
+    /// Resume a stream captured with [`Prng::state`] — NOT the same as
+    /// `new(state)` (which re-seeds).
+    pub fn from_state(state: u64) -> Self {
+        Self { state }
+    }
+
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
         let mut z = self.state;

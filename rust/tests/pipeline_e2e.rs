@@ -232,9 +232,11 @@ fn custom_registry_transfer_is_used() {
 }
 
 #[test]
-fn epd_disaggregated_encoder_matches_fused() {
-    // EPD mode (standalone encoder stage, paper §3.4) must produce the
-    // same thinker/talker token volumes as the fused-encoder pipeline.
+fn epd_disaggregated_pipeline_matches_fused() {
+    // Full E/P/D mode (standalone encoder + prefill/decode split, paper
+    // §3.4) must produce the same token volumes as the fused pipeline:
+    // the decode stage re-emits every thinker token (the first one comes
+    // through the KV handoff), and the talker stream is untouched.
     let Some(art) = artifacts() else { return };
     let wl = datasets::ucf101(6, 2, 0.0);
     let run = |cfg: omni_serve::config::PipelineConfig| {
@@ -245,11 +247,22 @@ fn epd_disaggregated_encoder_matches_fused() {
             RunOptions::default(),
         )
         .unwrap();
-        orch.run_workload(&wl, Some("talker")).unwrap().report
+        orch.run_workload(&wl, Some("talker")).unwrap()
     };
-    let fused = run(presets::qwen3_omni());
-    let epd = run(presets::qwen3_omni_epd());
+    let fused = run(presets::qwen3_omni()).report;
+    let epd_summary = run(presets::qwen3_omni_epd());
+    let epd = &epd_summary.report;
     assert_eq!(epd.completed, 2);
-    assert_eq!(fused.stage_tokens("thinker"), epd.stage_tokens("thinker"));
+    assert_eq!(fused.stage_tokens("thinker"), epd.stage_tokens("decode"));
     assert_eq!(fused.stage_tokens("talker"), epd.stage_tokens("talker"));
+    // The prefill stage emitted exactly one (first) token per request,
+    // and the KV-transfer counters saw one handoff per request.
+    assert_eq!(epd.stage_tokens("prefill"), 2);
+    let prefill = epd_summary.stage_rollup("prefill").unwrap().ar.unwrap();
+    let decode = epd_summary.stage_rollup("decode").unwrap().ar.unwrap();
+    assert_eq!(prefill.kv_exports, 2);
+    assert_eq!(decode.kv_imports, 2);
+    assert!(prefill.kv_export_bytes > 0);
+    assert_eq!(decode.prefill_calls, 0, "the decode pool never prefills");
+    assert_eq!(prefill.decode_calls, 0, "the prefill pool never decodes");
 }
