@@ -1,8 +1,9 @@
 //! End-to-end validation driver (DESIGN.md deliverable (b)): loads the
 //! Qwen3-Omni-sim any-to-any pipeline, serves a batched multimodal
-//! workload through the fully disaggregated backend AND the monolithic
-//! baseline, and reports latency/throughput for both.  This is the run
-//! recorded in EXPERIMENTS.md §End-to-end.
+//! workload through the fully disaggregated backend — via the typed
+//! streaming API ([`OmniRequest`] → [`ResponseStream`] deltas) — AND the
+//! monolithic baseline, and reports latency/throughput for both.  This
+//! is the run recorded in EXPERIMENTS.md §End-to-end.
 //!
 //! ```sh
 //! cargo run --release --offline --example omni_serving -- [n_requests]
@@ -14,13 +15,22 @@ use omni_serve::baseline::{run_monolithic, BaselineOptions};
 use omni_serve::config::presets;
 use omni_serve::orchestrator::{Orchestrator, RunOptions};
 use omni_serve::runtime::Artifacts;
+use omni_serve::serving::{OmniRequest, OutputDelta, ServingSession, SessionOptions};
 use omni_serve::stage_graph::transfers::Registry;
 use omni_serve::trace::datasets;
 use omni_serve::util::fmt;
 
 fn main() -> anyhow::Result<()> {
     let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(12);
-    let artifacts = Arc::new(Artifacts::load(&Artifacts::default_dir())?);
+    let dir = Artifacts::default_dir();
+    if !dir.join("manifest.json").exists() {
+        println!(
+            "omni_serving: no compiled artifacts at {} — run `make artifacts` first (skipping)",
+            dir.display()
+        );
+        return Ok(());
+    }
+    let artifacts = Arc::new(Artifacts::load(&dir)?);
     let workload = datasets::ucf101(42, n, 0.0);
     println!(
         "workload: {} x {} (avg input {:.1} tok, text out {:.1}, audio out {:.1})",
@@ -31,16 +41,47 @@ fn main() -> anyhow::Result<()> {
         workload.avg_audio_out()
     );
 
-    // --- disaggregated (vLLM-Omni-style) ---
+    // --- disaggregated (vLLM-Omni-style), through the streaming API ---
     let orch = Orchestrator::new(
         presets::qwen3_omni(),
         artifacts.clone(),
         Registry::builtin(),
         RunOptions::default(),
     )?;
-    let ours = orch.run_workload(&workload, Some("talker"))?;
-    println!("\n-- omni-serve (disaggregated, streaming, continuous batching) --");
+    let session = ServingSession::start(&orch, SessionOptions::default())?;
+    let mut streams = Vec::with_capacity(workload.len());
+    for r in workload.requests.iter().cloned() {
+        streams.push(session.submit_request(OmniRequest::from(r).streaming(true))?);
+    }
+    // Consume every stream: requests run concurrently inside the stage
+    // graph; the deltas prove each one produced audio mid-flight.
+    let (mut total_deltas, mut first_audio) = (0usize, Vec::with_capacity(streams.len()));
+    for rs in &mut streams {
+        let mut first: Option<f64> = None;
+        loop {
+            match rs.recv() {
+                Some(OutputDelta::AudioChunk { t, .. }) => {
+                    total_deltas += 1;
+                    first.get_or_insert(t);
+                }
+                Some(OutputDelta::Done { .. }) => break,
+                Some(_) => {}
+                None => anyhow::bail!("stream closed before Done"),
+            }
+        }
+        if let Some(t) = first {
+            first_audio.push(t - rs.submitted_t());
+        }
+    }
+    let ours = session.shutdown(Some("talker"))?;
+    println!("\n-- omni-serve (disaggregated, streaming API, continuous batching) --");
     print_summary(&ours.report, ours.wall_s);
+    println!(
+        "   streaming: {} audio deltas across {} requests, mean time-to-first-audio {}",
+        total_deltas,
+        streams.len(),
+        fmt::dur(first_audio.iter().sum::<f64>() / first_audio.len().max(1) as f64),
+    );
     for s in &ours.stages {
         if let Some(ar) = &s.ar {
             println!(
@@ -91,12 +132,22 @@ fn main() -> anyhow::Result<()> {
 }
 
 fn print_summary(r: &omni_serve::metrics::RunReport, wall: f64) {
+    let tpot = if r.tpot.is_empty() {
+        String::new()
+    } else {
+        format!(
+            " TPOT p50={} p95={}",
+            fmt::dur(r.tpot_percentile(50.0)),
+            fmt::dur(r.tpot_percentile(95.0)),
+        )
+    };
     println!(
-        "   completed={} wall={} JCT mean={} TTFT mean={} RTF mean={:.3}",
+        "   completed={} wall={} JCT mean={} TTFT mean={}{} RTF mean={:.3}",
         r.completed,
         fmt::dur(wall),
         fmt::dur(r.mean_jct()),
         fmt::dur(r.mean_ttft()),
+        tpot,
         r.mean_rtf()
     );
     for s in ["thinker", "talker", "vocoder"] {

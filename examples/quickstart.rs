@@ -16,8 +16,18 @@ use omni_serve::tokenizer::Tokenizer;
 use omni_serve::trace::{Modality, Request, Workload};
 
 fn main() -> anyhow::Result<()> {
-    // 1. Load the AOT artifacts produced by `make artifacts`.
-    let artifacts = Arc::new(Artifacts::load(&Artifacts::default_dir())?);
+    // 1. Load the AOT artifacts produced by `make artifacts`.  Exit
+    // cleanly when they are absent (CI containers have no JAX) so this
+    // example can be *run*, not just built, everywhere.
+    let dir = Artifacts::default_dir();
+    if !dir.join("manifest.json").exists() {
+        println!(
+            "quickstart: no compiled artifacts at {} — run `make artifacts` first (skipping)",
+            dir.display()
+        );
+        return Ok(());
+    }
+    let artifacts = Arc::new(Artifacts::load(&dir)?);
 
     // 2. Pick a pipeline preset (stage graph + placement + batching).
     let config = presets::qwen25_omni();

@@ -1,8 +1,11 @@
-//! Streaming stage output (paper §3.3): the Vocoder starts synthesizing
-//! as soon as the Talker has produced its first codec chunk, instead of
-//! waiting for the full sequence.  This example serves the same spoken
-//! request with streaming ON and OFF and compares TTFT, then writes the
-//! streamed waveform to a WAV file.
+//! Streaming-first serving API (paper §3.3 streaming stage output, now
+//! surfaced to the CLIENT): submit a spoken request with streaming on,
+//! receive typed `OutputDelta`s mid-flight — the first `AudioChunk`
+//! arrives while the Talker is still generating, long before the
+//! request's `Done` — then write the streamed waveform to a WAV file.
+//! A second request demonstrates end-to-end cancellation: after the
+//! first chunk it is cancelled, resolving with `Done { cancelled }`
+//! while every queued/in-flight piece of it is dropped stage-side.
 //!
 //! ```sh
 //! cargo run --release --offline --example streaming_tts
@@ -14,62 +17,106 @@ use omni_serve::audio;
 use omni_serve::config::presets;
 use omni_serve::orchestrator::{Orchestrator, RunOptions};
 use omni_serve::runtime::Artifacts;
+use omni_serve::serving::{OmniRequest, OutputDelta, ServingSession, SessionOptions};
 use omni_serve::stage_graph::transfers::Registry;
 use omni_serve::tokenizer::Tokenizer;
-use omni_serve::trace::{Modality, Request, Workload};
+use omni_serve::trace::{Modality, Request};
 
-fn request() -> Request {
+fn request(id: u64, max_audio_tokens: usize) -> Request {
     let tok = Tokenizer::new(4096);
     Request {
-        id: 1,
+        id,
         arrival_s: 0.0,
         modality: Modality::Text,
         prompt_tokens: tok.encode("read this sentence aloud with enthusiasm"),
         mm_frames: 0,
-        seed: 123,
+        seed: 123 + id,
         max_text_tokens: 24,
-        max_audio_tokens: 128,
+        max_audio_tokens,
         diffusion_steps: 0,
         ignore_eos: true,
     }
 }
 
 fn main() -> anyhow::Result<()> {
-    let artifacts = Arc::new(Artifacts::load(&Artifacts::default_dir())?);
-
-    let mut results = vec![];
-    for streaming in [true, false] {
-        let orch = Orchestrator::new(
-            presets::qwen3_omni(),
-            artifacts.clone(),
-            Registry::builtin(),
-            RunOptions { streaming, ..Default::default() },
-        )?;
-        let workload = Workload { name: "tts".into(), requests: vec![request()] };
-        let summary = orch.run_workload(&workload, Some("talker"))?;
+    let dir = Artifacts::default_dir();
+    if !dir.join("manifest.json").exists() {
         println!(
-            "streaming={streaming:5}  TTFT {:.3}s  JCT {:.3}s",
-            summary.report.mean_ttft(),
-            summary.report.mean_jct()
+            "streaming_tts: no compiled artifacts at {} — run `make artifacts` first (skipping)",
+            dir.display()
         );
-        results.push(summary.report.mean_ttft());
+        return Ok(());
     }
+    let artifacts = Arc::new(Artifacts::load(&dir)?);
+    let orch = Orchestrator::new(
+        presets::qwen3_omni(),
+        artifacts,
+        Registry::builtin(),
+        RunOptions::default(),
+    )?;
+    let session = ServingSession::start(&orch, SessionOptions::default())?;
+
+    // ---- 1. Streaming TTS: audio chunks arrive mid-flight. ----------
+    let mut rs = session.submit_request(OmniRequest::from(request(1, 128)).streaming(true))?;
+    let mut wave: Vec<f32> = Vec::new();
+    let mut first_audio_t: Option<f64> = None;
+    let done_t;
+    loop {
+        match rs.recv() {
+            Some(OutputDelta::AudioChunk { wave: chunk, t }) => {
+                if first_audio_t.is_none() {
+                    first_audio_t = Some(t);
+                    println!("first AudioChunk after {t:.3}s ({} samples)", chunk.len());
+                }
+                wave.extend_from_slice(&chunk);
+            }
+            Some(OutputDelta::StageDone { stage, t }) => {
+                println!("  stage `{stage}` done at {t:.3}s");
+            }
+            Some(OutputDelta::Done { t, jct_s, cancelled, usage }) => {
+                assert!(!cancelled);
+                println!(
+                    "Done at {t:.3}s (JCT {jct_s:.3}s): {} deltas, {} audio samples",
+                    usage.deltas, usage.audio_samples
+                );
+                done_t = t;
+                break;
+            }
+            Some(_) => {}
+            None => anyhow::bail!("stream closed before Done"),
+        }
+    }
+    let ttfa = first_audio_t.expect("a TTS request must stream audio");
+    // The acceptance property: streaming delivered audio strictly
+    // before the request completed.
+    assert!(ttfa < done_t, "first AudioChunk ({ttfa:.3}s) must precede Done ({done_t:.3}s)");
     println!(
-        "streaming cut TTFT by {:.1}% (vocoder overlaps the talker)",
-        (1.0 - results[0] / results[1]) * 100.0
+        "time-to-first-audio {ttfa:.3}s vs JCT {done_t:.3}s — the client hears audio {:.1}% early",
+        (1.0 - ttfa / done_t) * 100.0
     );
 
-    // Synthesize a waveform to listen to (sim weights -> sim audio).
-    let n_tokens = 128usize;
-    let samples: Vec<f32> = (0..audio::codec_tokens_to_samples(n_tokens))
-        .map(|i| (i as f32 * 0.05).sin() * 0.25)
-        .collect();
+    // The streamed chunks ARE the waveform: write what we heard.
     let path = std::path::Path::new("/tmp/omni_serve_tts.wav");
-    audio::write_wav(path, &samples)?;
-    println!(
-        "wrote {:.1}s of audio to {}",
-        audio::codec_tokens_to_seconds(n_tokens),
-        path.display()
-    );
+    audio::write_wav(path, &wave)?;
+    println!("wrote {:.2}s of streamed audio to {}", audio::samples_to_seconds(wave.len()), path.display());
+
+    // ---- 2. Cancellation: stop a long request after the first chunk. --
+    let mut rs = session.submit_request(OmniRequest::from(request(2, 512)).streaming(true))?;
+    loop {
+        match rs.recv() {
+            Some(OutputDelta::AudioChunk { .. }) => {
+                rs.cancel();
+            }
+            Some(OutputDelta::Done { cancelled, jct_s, .. }) => {
+                assert!(cancelled, "the long request must resolve as cancelled");
+                println!("cancelled the 512-token request after {jct_s:.3}s — KV freed, queues drained");
+                break;
+            }
+            Some(_) => {}
+            None => anyhow::bail!("stream closed before Done"),
+        }
+    }
+
+    session.shutdown(Some("talker"))?;
     Ok(())
 }

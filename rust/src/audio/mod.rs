@@ -22,6 +22,12 @@ pub fn codec_tokens_to_samples(n: usize) -> usize {
     n * (SAMPLE_RATE / CODEC_FRAME_HZ) as usize
 }
 
+/// Seconds of audio represented by `n` waveform samples (the duration a
+/// client can compute from streamed `AudioChunk` deltas).
+pub fn samples_to_seconds(n: usize) -> f64 {
+    n as f64 / SAMPLE_RATE as f64
+}
+
 /// Real-time factor: processing seconds per generated-audio second.
 /// Returns `f64::INFINITY` when no audio was produced.
 pub fn rtf(processing_s: f64, audio_tokens: usize) -> f64 {

@@ -482,6 +482,15 @@ impl EdgeCtl {
         st.producers.retain(|p| p.uid != uid);
     }
 
+    /// Drop any sticky assignment for `req_id` (end-to-end cancellation:
+    /// a cancelled request's `finished` item never flows through the
+    /// edge, so without this its affinity entry would live forever —
+    /// leaking per-request state and pinning a draining replica, which
+    /// could then never quiesce).
+    pub fn purge_request(&self, req_id: u64) {
+        self.sticky.lock().unwrap().remove(&req_id);
+    }
+
     /// Live (non-draining) consumer replica count.
     pub fn live_consumers(&self) -> usize {
         let st = self.state.lock().unwrap();
@@ -736,6 +745,28 @@ mod tests {
         assert!(!ctl.consumer_quiesced(u), "admission queue still holds the item");
         rx.publish_queue_depth(0);
         assert!(ctl.consumer_quiesced(u));
+    }
+
+    #[test]
+    fn purge_request_unpins_a_draining_replica() {
+        // A request is sticky on a draining replica and then cancelled:
+        // its finished item never flows, so only purge_request lets the
+        // replica quiesce.
+        let ctl = EdgeCtl::new(ConnectorKind::Inline, RoutingKind::Affinity, "dyncancel", None);
+        let (mut rx0, u0) = ctl.add_consumer().unwrap();
+        let (_rx1, _u1) = ctl.add_consumer().unwrap();
+        let (mut tx, _p) = ctl.add_producer().unwrap();
+        tx.send(item(2)).unwrap(); // 2 % 2 == 0 -> consumer 0
+        assert_eq!(drain(&mut rx0), vec![2]);
+        ctl.drain_consumer(u0);
+        assert!(!ctl.consumer_quiesced(u0), "sticky request 2 still assigned");
+        ctl.purge_request(2);
+        assert!(ctl.consumer_quiesced(u0), "cancellation must unpin the replica");
+        // A later item of the purged request re-assigns among LIVE
+        // replicas (it is dropped consumer-side by the tombstone check;
+        // the router only guarantees it avoids the draining one).
+        tx.send(item(2)).unwrap();
+        assert_eq!(drain(&mut rx0), Vec::<u64>::new());
     }
 
     #[test]

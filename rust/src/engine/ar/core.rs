@@ -102,6 +102,8 @@ pub struct EngineStats {
     pub kv_export_bytes: u64,
     /// Prefix blocks an import reused instead of allocating (hash dedup).
     pub kv_reused_blocks: u64,
+    /// Requests aborted mid-flight by [`ArEngine::cancel`].
+    pub cancelled: u64,
 }
 
 /// The engine.  Owns a thread-local PJRT runtime; not `Send` — run it on
@@ -301,6 +303,48 @@ impl ArEngine {
                 return;
             }
         }
+    }
+
+    /// Abort a request wherever it lives: waiting (including imported
+    /// handoffs not yet admitted), prefilling, or decoding.  Its KV
+    /// blocks are released exactly as on completion, so
+    /// [`BlockManager`] invariants hold and the freed blocks are
+    /// immediately reusable.  No further items are emitted for the
+    /// request.  Returns whether anything was dropped.
+    pub fn cancel(&mut self, req_id: u64) -> bool {
+        let mut found = false;
+        let mut i = 0;
+        while i < self.waiting.len() {
+            if self.waiting[i].id == req_id {
+                let seq = self.waiting.remove(i).expect("index in range");
+                // Waiting sequences hold no blocks (requeues release
+                // before rewinding); releasing the empty table is a
+                // no-op that keeps this robust if that ever changes.
+                self.blocks.release(&seq.block_table);
+                found = true;
+            } else {
+                i += 1;
+            }
+        }
+        for sid in 0..self.slots.len() {
+            if self.slots[sid].as_ref().map(|s| s.id == req_id).unwrap_or(false) {
+                let seq = self.slots[sid].take().expect("checked above");
+                self.blocks.release(&seq.block_table);
+                // The batch KV cache may still name this slot; that is
+                // fine — membership changes flush it before the slot is
+                // reused (same as normal completion).
+                found = true;
+            }
+        }
+        if found {
+            self.stats.cancelled += 1;
+        }
+        found
+    }
+
+    /// The engine's paged KV accounting (cancellation/invariant tests).
+    pub fn block_manager(&self) -> &BlockManager {
+        &self.blocks
     }
 
     /// Anything left to do?

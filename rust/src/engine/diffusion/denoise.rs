@@ -139,6 +139,16 @@ impl DiffusionEngine {
         self.queue.is_empty() && self.lanes.is_empty()
     }
 
+    /// Abort a request: queued chunks are dropped and in-flight lanes
+    /// stop denoising (their remaining steps are never run).  Returns
+    /// whether anything was dropped.
+    pub fn cancel(&mut self, req_id: u64) -> bool {
+        let before = self.queue.len() + self.lanes.len();
+        self.queue.retain(|j| j.req_id != req_id);
+        self.lanes.retain(|l| l.job.req_id != req_id);
+        before != self.queue.len() + self.lanes.len()
+    }
+
     pub fn queued(&self) -> usize {
         self.queue.len()
     }

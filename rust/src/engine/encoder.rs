@@ -90,6 +90,13 @@ impl EncoderEngine {
         self.queue.len()
     }
 
+    /// Abort a request: its queued encode jobs are dropped.
+    pub fn cancel(&mut self, req_id: u64) -> bool {
+        let before = self.queue.len();
+        self.queue.retain(|j| j.req_id != req_id);
+        before != self.queue.len()
+    }
+
     /// Encode one batch of queued jobs; emits one finished item per job
     /// carrying `embeds [frames, d_out]`.
     pub fn step(&mut self) -> Result<Vec<StageItem>> {

@@ -116,6 +116,14 @@ impl VocoderEngine {
         self.queue.len()
     }
 
+    /// Abort a request: its queued chunks are dropped (a single-forward
+    /// engine holds no other per-request state).
+    pub fn cancel(&mut self, req_id: u64) -> bool {
+        let before = self.queue.len();
+        self.queue.retain(|j| j.req_id != req_id);
+        before != self.queue.len()
+    }
+
     /// Process one batch of queued chunks.
     pub fn step(&mut self) -> Result<Vec<StageItem>> {
         if self.queue.is_empty() {

@@ -23,7 +23,12 @@
 //! [`serving`] runtime keeps the stage graph up across requests
 //! ([`serving::ServingSession`]) and an elastic autoscaler moves
 //! replicas toward whichever stage is the bottleneck at runtime, within
-//! a global GPU budget.
+//! a global GPU budget.  The client surface is streaming-first: typed
+//! [`serving::OmniRequest`]s (priority, deadline, streaming on/off)
+//! return a [`serving::ResponseStream`] of mid-flight
+//! [`serving::OutputDelta`]s — text tokens, audio chunks, image frames,
+//! stage markers — with end-to-end cancellation that drops queued work
+//! and frees in-flight KV at every stage.
 //!
 //! Model compute is AOT-lowered from JAX/Pallas (see `python/compile/`)
 //! into HLO-text artifacts executed through the PJRT CPU client

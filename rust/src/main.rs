@@ -19,6 +19,9 @@ USAGE:
                    [--autoscale] [--gpu-budget N] [--config file.json]
   omni-serve run   --pipeline <name> --dataset <librispeech|food101|ucf101|seedtts|vbench|bursty|prefill-heavy>
                    [--n 8] [--rate 0] [--seed 1] [--no-streaming] [--baseline]
+                   [--deadline S]   (cancel each request end-to-end S seconds
+                                     after submission; the summary reports
+                                     cancelled counts + freed KV)
   omni-serve bench [--trace bursty|librispeech|seedtts|prefill-heavy] [--n 48] [--budget 4]
                    (artifact-free: autoscaled vs static replica splits on the AR-stage
                     model; `prefill-heavy` runs the P/D-disaggregation comparison —
@@ -130,11 +133,13 @@ fn real_main() -> Result<()> {
                 )?;
                 print_report(&report);
             } else {
+                let deadline = args.flag_f64("deadline", 0.0)?;
                 let opts = RunOptions {
                     streaming: !args.flag_bool("no-streaming"),
                     lazy_compile: args.flag_bool("lazy-compile"),
                     realtime_arrivals: rate > 0.0,
                     store_addr: None,
+                    deadline_s: (deadline > 0.0).then_some(deadline),
                 };
                 let orch = Orchestrator::new(config, artifacts, Registry::builtin(), opts)?;
                 let summary = orch.run_workload(&workload, audio_stage)?;
@@ -288,15 +293,33 @@ fn real_main() -> Result<()> {
 
 fn print_report(r: &omni_serve::metrics::RunReport) {
     let mut jct = r.jct.clone();
+    let cancelled = if r.cancelled > 0 {
+        format!(" cancelled={}", r.cancelled)
+    } else {
+        String::new()
+    };
+    // TPOT is the client-boundary inter-delta latency (empty for runs
+    // whose requests streamed at most one delta).
+    let tpot = if r.tpot.is_empty() {
+        String::new()
+    } else {
+        format!(
+            " | TPOT p50={} p95={}",
+            fmt::dur(r.tpot_percentile(50.0)),
+            fmt::dur(r.tpot_percentile(95.0)),
+        )
+    };
     println!(
-        "completed={} wall={} | JCT mean={} p50={} p99={} | TTFT mean={} | first-token mean={} | RTF mean={:.3}",
+        "completed={}{} wall={} | JCT mean={} p50={} p99={} | TTFT mean={} | first-token mean={}{} | RTF mean={:.3}",
         r.completed,
+        cancelled,
         fmt::dur(r.wall_s),
         fmt::dur(r.mean_jct()),
         fmt::dur(jct.p50()),
         fmt::dur(jct.p99()),
         fmt::dur(r.mean_ttft()),
         fmt::dur(r.mean_first_token()),
+        tpot,
         if r.rtf.is_empty() { f64::NAN } else { r.mean_rtf() },
     );
     let mut stages: Vec<&String> = r.per_stage.keys().collect();

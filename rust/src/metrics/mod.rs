@@ -27,8 +27,18 @@ pub enum Event {
     FirstToken { req: u64, t: f64 },
     /// A stage finished this request, having produced `tokens` items.
     StageDone { req: u64, stage: &'static str, t: f64, tokens: usize },
+    /// A typed output delta crossed the client boundary (emitted by the
+    /// serving collector the moment an exit-stage item is typed into a
+    /// [`crate::serving::OutputDelta`]).  Consecutive deltas of one
+    /// request measure TPOT — time per output token/chunk as the CLIENT
+    /// observes it, not as the recorder's internal stage events do.
+    Delta { req: u64, t: f64 },
     /// Request fully completed.
     Completed { req: u64, t: f64 },
+    /// Request cancelled (client call, server op, or deadline expiry).
+    /// Terminal like `Completed`; such requests count in
+    /// [`RunReport::cancelled`], never in [`RunReport::completed`].
+    Cancelled { req: u64, t: f64 },
     /// Scheduler occupancy sample for one engine replica of a stage
     /// (paper §3.3 batching observability): pending admission-queue
     /// depth, engine occupancy, and the in-flight token commitment at one
@@ -78,8 +88,13 @@ struct StageRec {
 struct ReqRec {
     arrived: Option<f64>,
     completed: Option<f64>,
+    cancelled: Option<f64>,
     /// Earliest [`Event::FirstToken`] timestamp.
     first_token: Option<f64>,
+    /// Timestamp of the last client-boundary delta ([`Event::Delta`]).
+    last_delta: Option<f64>,
+    /// Inter-delta gaps (client-boundary TPOT samples).
+    delta_gaps: Samples,
     stages: HashMap<&'static str, StageRec>,
 }
 
@@ -177,8 +192,18 @@ impl Recorder {
                 s.done = Some(t);
                 s.tokens = tokens;
             }
+            Event::Delta { req, t } => {
+                let r = m.entry(req).or_default();
+                if let Some(prev) = r.last_delta {
+                    r.delta_gaps.push((t - prev).max(0.0));
+                }
+                r.last_delta = Some(t);
+            }
             Event::Completed { req, t } => {
                 m.entry(req).or_default().completed = Some(t);
+            }
+            Event::Cancelled { req, t } => {
+                m.entry(req).or_default().cancelled = Some(t);
             }
             // Handled (with an early return) above.
             Event::SchedSample { .. } | Event::SchedAdmitted { .. } | Event::Scale { .. } => {
@@ -194,11 +219,20 @@ impl Recorder {
         let mut jct = Samples::new();
         let mut ttft = Samples::new();
         let mut first_token = Samples::new();
+        let mut tpot = Samples::new();
         let mut rtf = Samples::new();
         let mut per_stage: HashMap<String, StageAgg> = HashMap::new();
         let mut completed = 0usize;
+        let mut cancelled = 0usize;
 
         for rec in m.values() {
+            // TPOT and the cancelled count include requests that never
+            // completed — a cancelled stream's deltas were still
+            // observed at the client boundary.
+            tpot.extend(&rec.delta_gaps);
+            if rec.cancelled.is_some() {
+                cancelled += 1;
+            }
             let (Some(a), Some(c)) = (rec.arrived, rec.completed) else { continue };
             completed += 1;
             jct.push(c - a);
@@ -250,9 +284,11 @@ impl Recorder {
         RunReport {
             wall_s,
             completed,
+            cancelled,
             jct,
             ttft,
             first_token,
+            tpot,
             rtf,
             per_stage,
             sched,
@@ -275,6 +311,9 @@ pub struct StageAgg {
 pub struct RunReport {
     pub wall_s: f64,
     pub completed: usize,
+    /// Requests that resolved by cancellation (client/server/deadline);
+    /// disjoint from [`Self::completed`].
+    pub cancelled: usize,
     pub jct: Samples,
     pub ttft: Samples,
     /// Time to the FIRST decode token (earliest [`Event::FirstToken`],
@@ -282,6 +321,11 @@ pub struct RunReport {
     /// distinct from [`Self::ttft`], which measures the pipeline's last
     /// stage.  This is the metric prefill/decode splits move.
     pub first_token: Samples,
+    /// Client-boundary inter-delta latency (TPOT): the gaps between
+    /// consecutive [`Event::Delta`]s of each request, pooled.  Measures
+    /// what a streaming client actually experiences between chunks, not
+    /// the recorder-internal stage cadence.
+    pub tpot: Samples,
     pub rtf: Samples,
     pub per_stage: HashMap<String, StageAgg>,
     /// Per-stage scheduler aggregates, merged across engine replicas
@@ -311,6 +355,17 @@ impl RunReport {
     /// Mean time to the first decode token (see [`Self::first_token`]).
     pub fn mean_first_token(&self) -> f64 {
         self.first_token.mean()
+    }
+
+    /// Mean client-boundary inter-delta latency (see [`Self::tpot`]).
+    pub fn mean_tpot(&self) -> f64 {
+        self.tpot.mean()
+    }
+
+    /// Percentile of the client-boundary inter-delta latency
+    /// (p in `[0, 100]`) — the TPOT p50/p95 the run summary prints.
+    pub fn tpot_percentile(&self, p: f64) -> f64 {
+        self.tpot.clone().percentile(p)
     }
 
     /// Percentile of the seconds requests waited in `stage`'s admission
@@ -468,6 +523,41 @@ mod tests {
         assert!((rep.sched_wait_percentile("decode", 50.0) - 0.3).abs() < 1e-9);
         assert!((rep.sched_wait_percentile("decode", 100.0) - 1.0).abs() < 1e-9);
         assert_eq!(rep.sched_wait_percentile("nope", 50.0), 0.0);
+    }
+
+    #[test]
+    fn delta_gaps_aggregate_into_tpot() {
+        let r = Recorder::new();
+        r.emit(Event::Arrived { req: 1, t: 0.0 });
+        for t in [0.1, 0.2, 0.4, 0.8] {
+            r.emit(Event::Delta { req: 1, t });
+        }
+        r.emit(Event::Completed { req: 1, t: 0.8 });
+        // A second request's gaps pool into the same TPOT distribution
+        // even though it was cancelled before completing.
+        r.emit(Event::Arrived { req: 2, t: 0.0 });
+        r.emit(Event::Delta { req: 2, t: 0.5 });
+        r.emit(Event::Delta { req: 2, t: 1.5 });
+        r.emit(Event::Cancelled { req: 2, t: 2.0 });
+        let rep = r.report(2.0, None);
+        // Gaps: req 1 -> 0.1, 0.2, 0.4; req 2 -> 1.0.  First deltas
+        // contribute no gap (that's TTFT's job).
+        assert_eq!(rep.tpot.len(), 4);
+        assert!((rep.mean_tpot() - 0.425).abs() < 1e-9);
+        assert!((rep.tpot_percentile(100.0) - 1.0).abs() < 1e-9);
+        assert_eq!(rep.completed, 1);
+        assert_eq!(rep.cancelled, 1);
+    }
+
+    #[test]
+    fn cancelled_requests_never_count_as_completed() {
+        let r = Recorder::new();
+        r.emit(Event::Arrived { req: 1, t: 0.0 });
+        r.emit(Event::Cancelled { req: 1, t: 0.5 });
+        let rep = r.report(1.0, None);
+        assert_eq!(rep.completed, 0);
+        assert_eq!(rep.cancelled, 1);
+        assert_eq!(rep.jct.len(), 0, "cancelled requests report no JCT");
     }
 
     #[test]

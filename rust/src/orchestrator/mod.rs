@@ -39,11 +39,22 @@ pub struct RunOptions {
     /// External Mooncake store address (spawned automatically if any
     /// edge uses the TCP connector and this is None).
     pub store_addr: Option<String>,
+    /// Per-request deadline for [`Orchestrator::run_workload`]: every
+    /// submitted request is cancelled end-to-end this many seconds
+    /// after submission (`omni-serve run --deadline`).  `None` = no
+    /// deadline (the default).
+    pub deadline_s: Option<f64>,
 }
 
 impl Default for RunOptions {
     fn default() -> Self {
-        Self { streaming: true, lazy_compile: false, realtime_arrivals: false, store_addr: None }
+        Self {
+            streaming: true,
+            lazy_compile: false,
+            realtime_arrivals: false,
+            store_addr: None,
+            deadline_s: None,
+        }
     }
 }
 
@@ -129,6 +140,7 @@ impl StageSummary {
                 a.kv_imports += b.kv_imports;
                 a.kv_export_bytes += b.kv_export_bytes;
                 a.kv_reused_blocks += b.kv_reused_blocks;
+                a.cancelled += b.cancelled;
             }
             (slot @ None, Some(b)) => *slot = Some(b.clone()),
             _ => {}
@@ -157,6 +169,7 @@ impl StageSummary {
             (Some(a), Some(b)) => {
                 a.admitted += b.admitted;
                 a.passthrough += b.passthrough;
+                a.cancelled += b.cancelled;
                 a.max_queue_depth = a.max_queue_depth.max(b.max_queue_depth);
                 a.queue_wait.extend(&b.queue_wait);
             }
@@ -258,17 +271,25 @@ impl Orchestrator {
                     std::thread::sleep(std::time::Duration::from_secs_f64(wait));
                 }
             }
-            match session.submit(r) {
-                Ok(h) => handles.push(h),
+            // Open-loop submission through the typed request path (the
+            // deprecated CompletionHandle shim preserves the old
+            // submit-and-block contract over the ResponseStream).
+            let mut oreq = crate::serving::OmniRequest::from(r);
+            if let Some(d) = self.opts.deadline_s {
+                oreq = oreq.deadline_s(d);
+            }
+            match session.submit_request(oreq) {
+                Ok(rs) => handles.push(crate::serving::CompletionHandle::from_stream(rs)),
                 Err(_) => break, // every entry replica is gone
             }
         }
-        // Wait for completions.  A failed stage replica breaks the wait
-        // (its error surfaces when shutdown joins the thread) instead of
-        // leaving the run waiting on completions that can never arrive.
+        // Wait for completions.  The collector closes every stream when
+        // the session fails, so `Closed` breaks the wait (the failed
+        // replica's error surfaces when shutdown joins its thread); the
+        // timeout arm is belt-and-suspenders, not a polling interval.
         'wait: for h in &handles {
             loop {
-                match h.wait_timeout(std::time::Duration::from_millis(50)) {
+                match h.wait_timeout(std::time::Duration::from_secs(60)) {
                     crate::serving::WaitResult::Done(_) => break,
                     crate::serving::WaitResult::Timeout => {
                         if session.failed() {

@@ -35,6 +35,11 @@ use crate::util::Prng;
 /// lock cold on the hot path.
 const SAMPLE_EVERY: u64 = 32;
 
+/// Session hook invoked as `(req_id, stage, t)` when a stage finishes
+/// producing for a request — feeds `OutputDelta::StageDone` markers
+/// into the request's [`crate::serving::ResponseStream`].
+pub type StageDoneHook = Arc<dyn Fn(u64, &'static str, f64) + Send + Sync>;
+
 pub struct StageSpec {
     pub index: usize,
     /// Which engine replica of the stage this thread serves (0-based;
@@ -71,6 +76,13 @@ pub struct StageSpec {
     pub front_rx: Option<mpsc::Receiver<Request>>,
     /// Exit stage only: completed-item sink.
     pub sink: Option<mpsc::Sender<StageItem>>,
+    /// Cancelled-request tombstones (end-to-end cancellation): items of
+    /// tombstoned requests are dropped at every pull, and on each
+    /// generation change the loop sweeps its admission queue and engine.
+    pub cancels: Arc<crate::serving::Tombstones>,
+    /// Stage-finished notification for the streaming API (None in
+    /// engine-level tests).
+    pub on_stage_done: Option<StageDoneHook>,
     pub streaming: bool,
     pub lazy_compile: bool,
     /// Per-device memory budget (KV sizing).
@@ -105,6 +117,18 @@ impl Engine {
             Engine::Diffusion(e) => e.step(),
             Engine::Vocoder(e) => e.step(),
             Engine::Encoder(e) => e.step(),
+        }
+    }
+
+    /// Abort one request: drop it from the engine's queues/slots and
+    /// release any KV blocks it holds.  Returns whether anything was
+    /// dropped.
+    fn cancel(&mut self, req_id: u64) -> bool {
+        match self {
+            Engine::Ar(e) => e.cancel(req_id),
+            Engine::Diffusion(e) => e.cancel(req_id),
+            Engine::Vocoder(e) => e.cancel(req_id),
+            Engine::Encoder(e) => e.cancel(req_id),
         }
     }
 
@@ -270,6 +294,8 @@ fn run(mut spec: StageSpec) -> Result<StageSummary> {
     // (feeds Event::FirstToken; encoder/vocoder feature items never do).
     let mut first_tok: HashMap<u64, bool> = HashMap::new();
     let mut tick: u64 = 0;
+    // Tombstone sweep generation already processed (see the sweep arm).
+    let mut cancel_gen: u64 = 0;
     // Bounded-backoff idle waiting: spin briefly for burst reaction, then
     // escalate sleeps instead of spinning on empty connectors.
     let mut backoff = crate::util::Backoff::new();
@@ -282,6 +308,12 @@ fn run(mut spec: StageSpec) -> Result<StageSummary> {
         if let Some(front) = &spec.front_rx {
             while sched.has_room() {
                 let Ok(req) = front.try_recv() else { break };
+                if spec.cancels.contains(req.id) {
+                    // Cancelled between submit and pull: never enters.
+                    worked = true;
+                    continue;
+                }
+                let prio = req_priority(&spec.reqs, req.id);
                 let cmd = match &mut engine {
                     Engine::Ar(_) => {
                         EngineCmd::SubmitAr(entry_job(&spec, encoder.as_mut(), &req)?)
@@ -299,7 +331,7 @@ fn run(mut spec: StageSpec) -> Result<StageSummary> {
                     }
                     Engine::Encoder(e) => EngineCmd::SubmitEncode(encode_entry_job(e, &req)),
                 };
-                for c in sched.enqueue(cmd, spec.clock.now()) {
+                for c in sched.enqueue_prio(cmd, spec.clock.now(), prio) {
                     apply_cmd(&mut engine, c, stage_name, &spec.recorder, &spec.clock)?;
                 }
                 worked = true;
@@ -326,12 +358,56 @@ fn run(mut spec: StageSpec) -> Result<StageSummary> {
                         break;
                     }
                 };
+                if spec.cancels.contains(item.req_id) {
+                    // Tombstoned mid-flight: the item dies at the edge —
+                    // its transfer never runs, so a cancelled request's
+                    // KV handoff is never imported and its chunks build
+                    // no downstream state.
+                    worked = true;
+                    continue;
+                }
+                let prio = req_priority(&spec.reqs, item.req_id);
                 for cmd in transfer(&item)? {
-                    for c in sched.enqueue(cmd, spec.clock.now()) {
+                    for c in sched.enqueue_prio(cmd, spec.clock.now(), prio) {
                         apply_cmd(&mut engine, c, stage_name, &spec.recorder, &spec.clock)?;
                     }
                 }
                 worked = true;
+            }
+        }
+
+        // 2b) Cancellation sweep: when the tombstone generation moved,
+        // drop queued submissions from the admission queue and abort
+        // in-flight engine work (AR sequences release their KV blocks).
+        // One sweep per mark — with no cancellations this is a single
+        // atomic load per iteration.
+        let g = spec.cancels.generation();
+        if g != cancel_gen {
+            cancel_gen = g;
+            for rid in spec.cancels.snapshot() {
+                let dropped = sched.cancel(rid);
+                let aborted = engine.cancel(rid);
+                if dropped > 0 || aborted {
+                    worked = true;
+                }
+                // Evict per-request state unconditionally: a cancel
+                // landing between chunks (nothing queued or in-flight
+                // here) would otherwise leak entries forever — the
+                // finished item that normally evicts them never arrives
+                // for a cancelled request.  Stateful edge transfers
+                // (chunk buffers, conditioning accumulators) get a
+                // synthetic finished item for the same reason; their
+                // resulting commands are DISCARDED, so nothing of the
+                // cancelled request enters the engine.
+                let tomb = StageItem::new(rid).finished();
+                for (_, transfer, closed) in &mut inputs {
+                    if !*closed {
+                        let _ = transfer(&tomb);
+                    }
+                }
+                tokens_out.remove(&rid);
+                first_out.remove(&rid);
+                first_tok.remove(&rid);
             }
         }
 
@@ -412,12 +488,18 @@ fn run(mut spec: StageSpec) -> Result<StageSummary> {
                     .unwrap_or(0);
                 *tokens_out.entry(rid).or_default() += produced;
                 if item.finished {
+                    let now = spec.clock.now();
                     spec.recorder.emit(Event::StageDone {
                         req: rid,
                         stage: stage_name,
-                        t: spec.clock.now(),
+                        t: now,
                         tokens: tokens_out.remove(&rid).unwrap_or(0),
                     });
+                    // Streaming API: interior stages mark their finish
+                    // on the request's delta stream too.
+                    if let Some(hook) = &spec.on_stage_done {
+                        hook(rid, stage_name, now);
+                    }
                     first_out.remove(&rid);
                     first_tok.remove(&rid);
                 }
@@ -509,6 +591,16 @@ fn should_exit(
     queue_empty: bool,
 ) -> bool {
     (stop || retire || inputs_closed) && engine_idle && queue_empty
+}
+
+/// Resolve a request's admission priority from the shared metadata
+/// table (unknown requests — e.g. engine-level tests — rank normal).
+fn req_priority(reqs: &ReqTable, req_id: u64) -> u8 {
+    reqs.lock()
+        .unwrap()
+        .get(&req_id)
+        .map(|m| m.priority)
+        .unwrap_or(crate::scheduler::PRIORITY_NORMAL)
 }
 
 fn apply_cmd(

@@ -59,6 +59,11 @@ pub use policy::{
     BatchPolicy, ContinuousBatchingPolicy, EngineView, FifoPolicy, PendingJob, StepBatchingPolicy,
 };
 
+/// Default admission priority (the rank of
+/// [`crate::serving::Priority::Normal`]).  Raw `u8` here so the
+/// scheduler layer stays independent of the serving API types.
+pub const PRIORITY_NORMAL: u8 = 1;
+
 /// Aggregate scheduler counters for one stage (reported in
 /// [`crate::orchestrator::StageSummary`]).
 #[derive(Debug, Clone, Default)]
@@ -71,6 +76,8 @@ pub struct SchedStats {
     pub admitted: u64,
     /// Conditioning-row commands that bypassed the queue.
     pub passthrough: u64,
+    /// Queued submissions dropped by [`StageScheduler::cancel`].
+    pub cancelled: u64,
     /// High-water mark of the pending queue.
     pub max_queue_depth: usize,
     /// Seconds each admitted submission spent in the pending queue.
@@ -82,6 +89,9 @@ pub struct SchedStats {
 struct Pending {
     job: PendingJob,
     cmd: EngineCmd,
+    /// Admission priority class (higher enqueues ahead; FIFO within a
+    /// class).
+    prio: u8,
     /// Upstream conditioning commands that arrived while this submission
     /// was still queued; replayed right after it is admitted (the engine
     /// drops rows for unknown request ids, so they must not run early).
@@ -122,11 +132,24 @@ impl StageScheduler {
         self.queue_depth == 0 || self.pending.len() < self.queue_depth
     }
 
+    /// Offer a command at normal priority (see [`Self::enqueue_prio`]).
+    pub fn enqueue(&mut self, cmd: EngineCmd, now: f64) -> Vec<EngineCmd> {
+        self.enqueue_prio(cmd, now, PRIORITY_NORMAL)
+    }
+
     /// Offer a command.  Submissions (including every streaming chunk)
     /// are queued for admission control; conditioning rows return
     /// immediately when their target is not queued here (the engine
     /// either has the sequence or safely ignores unknown ids).
-    pub fn enqueue(&mut self, cmd: EngineCmd, now: f64) -> Vec<EngineCmd> {
+    ///
+    /// `prio` orders the pending queue at insertion time: a submission
+    /// enqueues behind everything of its class or higher and ahead of
+    /// strictly lower classes (request-lifecycle priorities,
+    /// [`crate::serving::Priority`]).  Policies still only decide *when*
+    /// the head enters the engine — they never reorder, so within one
+    /// priority class scheduling stays work-conserving FIFO and nothing
+    /// already admitted is displaced.
+    pub fn enqueue_prio(&mut self, cmd: EngineCmd, now: f64, prio: u8) -> Vec<EngineCmd> {
         let (req_id, cost) = match &cmd {
             EngineCmd::SubmitAr(j) => (j.req_id, j.prompt.len() + j.sampling.max_new_tokens),
             // An imported sequence commits its resident prompt plus its
@@ -150,14 +173,36 @@ impl StageScheduler {
                 return vec![cmd];
             }
         };
-        self.pending.push_back(Pending {
-            job: PendingJob { req_id, cost_tokens: cost },
-            cmd,
-            upstream: vec![],
-            enqueued_at: now,
-        });
+        // Insert behind the last entry of >= priority (stable FIFO
+        // within a class; O(queue) worst case, O(1) for all-normal).
+        let pos = self
+            .pending
+            .iter()
+            .rposition(|p| p.prio >= prio)
+            .map_or(0, |i| i + 1);
+        self.pending.insert(
+            pos,
+            Pending {
+                job: PendingJob { req_id, cost_tokens: cost },
+                cmd,
+                prio,
+                upstream: vec![],
+                enqueued_at: now,
+            },
+        );
         self.stats.max_queue_depth = self.stats.max_queue_depth.max(self.pending.len());
         vec![]
+    }
+
+    /// Drop every pending submission of `req_id` (end-to-end
+    /// cancellation; buffered conditioning rows die with them).
+    /// Returns the number of submissions dropped.
+    pub fn cancel(&mut self, req_id: u64) -> usize {
+        let before = self.pending.len();
+        self.pending.retain(|p| p.job.req_id != req_id);
+        let dropped = before - self.pending.len();
+        self.stats.cancelled += dropped as u64;
+        dropped
     }
 
     /// Ask the policy which queued submissions to admit given the engine's
@@ -290,6 +335,54 @@ mod tests {
             .collect();
         assert_eq!(ids, vec![(1, 0), (1, 1), (2, 0)]);
         assert_eq!(s.stats.admitted, 3, "each chunk consumes an admission");
+    }
+
+    #[test]
+    fn priority_orders_the_pending_queue_stably() {
+        let mut s = StageScheduler::new(Box::new(FifoPolicy), 0);
+        s.enqueue_prio(submit(1, 1), 0.0, 1); // normal
+        s.enqueue_prio(submit(2, 1), 0.0, 0); // low
+        s.enqueue_prio(submit(3, 1), 0.0, 2); // high jumps both
+        s.enqueue_prio(submit(4, 1), 0.0, 2); // high, FIFO behind 3
+        s.enqueue_prio(submit(5, 1), 0.0, 1); // normal, behind 1, ahead of low
+        let cmds = s.ready(&view(0, 8), 0.1);
+        let ids: Vec<u64> = cmds
+            .iter()
+            .map(|c| match c {
+                EngineCmd::SubmitAr(j) => j.req_id,
+                other => panic!("{other:?}"),
+            })
+            .collect();
+        assert_eq!(ids, vec![3, 4, 1, 5, 2]);
+    }
+
+    #[test]
+    fn upstream_buffers_behind_a_priority_inserted_submission() {
+        let mut s = StageScheduler::new(Box::new(FifoPolicy), 0);
+        s.enqueue_prio(submit(1, 1), 0.0, 1);
+        s.enqueue_prio(submit(2, 1), 0.0, 2); // inserted ahead of 1
+        assert!(s.enqueue(upstream(1), 0.0).is_empty(), "rows buffer on req 1");
+        let cmds = s.ready(&view(0, 8), 0.1);
+        assert_eq!(cmds.len(), 3);
+        assert!(matches!(&cmds[0], EngineCmd::SubmitAr(j) if j.req_id == 2));
+        assert!(matches!(&cmds[1], EngineCmd::SubmitAr(j) if j.req_id == 1));
+        assert!(matches!(&cmds[2], EngineCmd::Upstream { req_id: 1, .. }));
+    }
+
+    #[test]
+    fn cancel_drops_every_pending_submission_of_the_request() {
+        let mut s = StageScheduler::new(Box::new(FifoPolicy), 2);
+        s.enqueue(submit(1, 1), 0.0);
+        s.enqueue(submit(2, 1), 0.0);
+        assert!(!s.has_room(), "queue-depth cap reached");
+        assert_eq!(s.cancel(1), 1);
+        assert_eq!(s.cancel(1), 0, "idempotent");
+        assert!(s.has_room(), "cancellation frees queue room");
+        assert_eq!(s.stats.cancelled, 1);
+        let cmds = s.ready(&view(0, 4), 0.1);
+        assert_eq!(cmds.len(), 1, "only the surviving request admits");
+        assert!(matches!(&cmds[0], EngineCmd::SubmitAr(j) if j.req_id == 2));
+        assert!(s.is_empty(), "queue drains after cancel + admit");
     }
 
     #[test]

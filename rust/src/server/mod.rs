@@ -1,24 +1,41 @@
-//! TCP JSON-lines serving frontend (`omni-serve serve`).
+//! TCP JSON-lines serving frontend (`omni-serve serve`), protocol v2.
 //!
-//! Protocol: one JSON object per line.
+//! One JSON object per line, each answered by one or more frames:
 //!
-//! request:  {"op": "generate", "prompt": "...", "modality": "video",
-//!            "mm_frames": 64, "max_text_tokens": 32,
-//!            "max_audio_tokens": 96}
-//! response: {"req_id": N, "jct_s": 1.23, "completed": true}
-//! request:  {"op": "ping"}   -> {"ok": true}
-//! request:  {"op": "stats"}  -> {"live": true, "inflight": N,
-//!            "stages": [{"stage": "talker", "replicas": 2,
-//!                        "draining": 0, "queued": 3, "busy": 1}, ...]}
-//! request:  {"op": "shutdown"} -> drains + stops the shared session
+//! ```text
+//! # v1 one-shot (unchanged shape, now a blocking wait — no polling):
+//! -> {"op": "generate", "prompt": "...", "modality": "video",
+//!     "mm_frames": 64, "max_text_tokens": 32, "max_audio_tokens": 96}
+//! <- {"req_id": N, "jct_s": 1.23, "completed": true}
+//!
+//! # v2 streaming: one delta frame per typed chunk, then a terminal done.
+//! -> {"op": "generate", "stream": true, "prompt": "...",
+//!     "max_audio_tokens": 96, "deadline_s": 5.0, "priority": "high"}
+//! <- {"event": "accepted", "req_id": N}
+//! <- {"event": "delta", "req_id": N, "kind": "audio", "samples": 256, "t": 0.41}
+//! <- {"event": "delta", "req_id": N, "kind": "stage_done", "stage": "talker", "t": 0.9}
+//! <- {"event": "done", "req_id": N, "jct_s": 1.1, "cancelled": false, ...}
+//!
+//! # lifecycle control (usually from a second connection, since a
+//! # streaming generate occupies its own):
+//! -> {"op": "cancel", "req_id": N}   <- {"ok": true, "req_id": N, "cancelled": true}
+//!
+//! -> {"op": "ping"}     <- {"ok": true}
+//! -> {"op": "stats"}    <- {"live": true, "inflight": N, "stages": [...]}
+//! -> {"op": "shutdown"} <- drains + stops the shared session
+//! ```
+//!
+//! Malformed JSON, unknown ops, and per-op failures all get a structured
+//! `{"error": "..."}` frame on the same connection — a bad line never
+//! kills the connection or vanishes silently.
 //!
 //! All connections share ONE persistent [`ServingSession`]: the stage
-//! graph is spawned on the first `generate` and stays up, and [`Server::serve`]
-//! handles each connection on its own thread, so concurrent requests
-//! from different connections batch together inside the per-stage
-//! schedulers — and, when the pipeline config carries an `autoscaler`
-//! block (or `--autoscale` is passed), stage replicas scale with load
-//! while the server runs.
+//! graph is spawned on the first `generate` and stays up, and
+//! [`Server::serve`] handles each connection on its own thread, so
+//! concurrent requests from different connections batch together inside
+//! the per-stage schedulers — and, when the pipeline config carries an
+//! `autoscaler` block (or `--autoscale` is passed), stage replicas scale
+//! with load while the server runs.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -34,7 +51,7 @@ use crate::json::{self, Value};
 use crate::orchestrator::{Orchestrator, RunOptions};
 use crate::runtime::Artifacts;
 use crate::scheduler::StageAllocator;
-use crate::serving::{ServingSession, SessionOptions, WaitResult};
+use crate::serving::{OmniRequest, OutputDelta, Priority, ServingSession, SessionOptions};
 use crate::stage_graph::transfers::Registry;
 use crate::tokenizer::Tokenizer;
 use crate::trace::{Modality, Request};
@@ -57,6 +74,12 @@ pub struct Server {
 }
 
 static NEXT_REQ: AtomicU64 = AtomicU64::new(1);
+
+fn write_frame(w: &mut TcpStream, v: &Value) -> Result<()> {
+    w.write_all(json::to_string(v).as_bytes())?;
+    w.write_all(b"\n")?;
+    Ok(())
+}
 
 impl Server {
     pub fn bind(
@@ -106,6 +129,28 @@ impl Server {
         Ok(())
     }
 
+    /// Serve exactly `n` connections, each on its own handler thread
+    /// (unlike [`Self::serve_n`] they run concurrently — required for
+    /// cancelling a streaming generate from a second connection), then
+    /// return once all are closed.
+    pub fn serve_concurrent(&self, n: usize) -> Result<()> {
+        std::thread::scope(|scope| {
+            let mut joins = Vec::with_capacity(n);
+            for conn in self.listener.incoming().take(n) {
+                let Ok(stream) = conn else { continue };
+                joins.push(scope.spawn(move || {
+                    if let Err(e) = self.handle(stream) {
+                        eprintln!("connection error: {e}");
+                    }
+                }));
+            }
+            for j in joins {
+                let _ = j.join();
+            }
+        });
+        Ok(())
+    }
+
     /// The shared session, started lazily on first use.
     fn session(&self) -> Result<Arc<ServingSession>> {
         let mut guard = self.session.lock().unwrap();
@@ -143,30 +188,39 @@ impl Server {
         let mut writer = stream.try_clone()?;
         let reader = BufReader::new(stream);
         for line in reader.lines() {
-            let line = line?;
+            // A read error means the peer is gone (or sent non-UTF-8
+            // garbage a JSON protocol cannot recover from): close this
+            // connection without taking the server down.
+            let Ok(line) = line else { break };
             if line.trim().is_empty() {
                 continue;
             }
-            let resp = match self.dispatch(&line) {
-                Ok(v) => v,
-                Err(e) => jobj! { "error" => e.to_string() },
-            };
-            writer.write_all(json::to_string(&resp).as_bytes())?;
-            writer.write_all(b"\n")?;
+            match json::parse(&line) {
+                Ok(v) => self.dispatch(&v, &mut writer)?,
+                Err(e) => write_frame(
+                    &mut writer,
+                    &jobj! { "error" => format!("bad request JSON: {e}") },
+                )?,
+            }
         }
         Ok(())
     }
 
-    fn dispatch(&self, line: &str) -> Result<Value> {
-        let v = json::parse(line).map_err(|e| anyhow::anyhow!("bad request JSON: {e}"))?;
-        match v.get("op").as_str().unwrap_or("generate") {
+    /// Route one parsed request line.  Every op failure is answered with
+    /// a structured `{"error": ...}` frame; only transport failures
+    /// (the peer vanished mid-write) propagate.
+    fn dispatch(&self, v: &Value, w: &mut TcpStream) -> Result<()> {
+        let reply = match v.get("op").as_str().unwrap_or("generate") {
             "ping" => Ok(jobj! { "ok" => true }),
             "config" => Ok(crate::config::loader::to_value(&self.config)),
             "stats" => self.stats(),
-            "generate" => self.generate(&v),
+            "cancel" => self.cancel(v),
             "shutdown" => self.shutdown(),
-            other => anyhow::bail!("unknown op `{other}`"),
-        }
+            // Writes its own frame(s) — one-shot or a delta stream.
+            "generate" => return self.generate(v, w),
+            other => Err(anyhow::anyhow!("unknown op `{other}`")),
+        };
+        write_frame(w, &reply.unwrap_or_else(|e| jobj! { "error" => e.to_string() }))
     }
 
     /// Live per-stage replica counts and queue depths from the running
@@ -212,9 +266,18 @@ impl Server {
         Ok(jobj! { "live" => false, "inflight" => 0usize, "stages" => Value::Arr(stages) })
     }
 
-    fn generate(&self, v: &Value) -> Result<Value> {
+    /// Cancel an in-flight request by id (no-op before the session
+    /// exists; `cancelled: false` when the request already resolved).
+    fn cancel(&self, v: &Value) -> Result<Value> {
+        let id = v.req_usize("req_id")? as u64;
+        let session = self.session.lock().unwrap().as_ref().cloned();
+        let hit = session.map(|s| s.cancel(id)).unwrap_or(false);
+        Ok(jobj! { "ok" => true, "req_id" => id as usize, "cancelled" => hit })
+    }
+
+    /// Build the typed request from a `generate` line.
+    fn parse_request(&self, v: &Value, id: u64) -> OmniRequest {
         let tokenizer = Tokenizer::new(4096);
-        let id = NEXT_REQ.fetch_add(1, Ordering::SeqCst);
         let prompt = v.get("prompt").as_str().unwrap_or("hello world");
         let modality = match v.get("modality").as_str().unwrap_or("text") {
             "audio" => Modality::Audio,
@@ -234,21 +297,114 @@ impl Server {
             diffusion_steps: v.get("diffusion_steps").as_usize().unwrap_or(0),
             ignore_eos: v.get("ignore_eos").as_bool().unwrap_or(true),
         };
+        let mut oreq = OmniRequest::from(req)
+            .streaming(v.get("stream").as_bool().unwrap_or(false))
+            .priority(match v.get("priority").as_str().unwrap_or("normal") {
+                "low" => Priority::Low,
+                "high" => Priority::High,
+                _ => Priority::Normal,
+            });
+        if let Some(d) = v.get("deadline_s").as_f64() {
+            oreq = oreq.deadline_s(d);
+        }
+        oreq
+    }
+
+    fn generate(&self, v: &Value, w: &mut TcpStream) -> Result<()> {
+        match self.generate_inner(v, w) {
+            Ok(()) => Ok(()),
+            // Setup/stream failures become a terminal error frame on the
+            // still-open connection (whether or not deltas already went
+            // out, `{"error"}` is a valid terminal event).
+            Err(e) => write_frame(w, &jobj! { "error" => e.to_string() }),
+        }
+    }
+
+    fn generate_inner(&self, v: &Value, w: &mut TcpStream) -> Result<()> {
+        let id = NEXT_REQ.fetch_add(1, Ordering::SeqCst);
+        let oreq = self.parse_request(v, id);
+        let streaming = oreq.is_streaming();
         let session = self.session()?;
-        let handle = session.submit(req)?;
+        let mut rs = session.submit_request(oreq)?;
+
+        if !streaming {
+            // v1 one-shot path: BLOCK on the stream — the collector
+            // closes it on session failure/shutdown, so there is no
+            // wait_timeout polling loop (and none of its up-to-100 ms
+            // artificial tail latency) anymore.  A completed request
+            // keeps the exact PR-4 response shape; a cancelled one
+            // (deadline, or a cross-connection `cancel` op) must not
+            // claim completion.
+            loop {
+                match rs.recv() {
+                    Some(OutputDelta::Done { t, cancelled, .. }) => {
+                        let frame = if cancelled {
+                            jobj! {
+                                "req_id" => id as usize,
+                                "jct_s" => t - rs.submitted_t(),
+                                "completed" => false,
+                                "cancelled" => true,
+                            }
+                        } else {
+                            jobj! {
+                                "req_id" => id as usize,
+                                "jct_s" => t - rs.submitted_t(),
+                                "completed" => true,
+                            }
+                        };
+                        return write_frame(w, &frame);
+                    }
+                    Some(_) => {}
+                    None => anyhow::bail!("pipeline failed serving request {id}"),
+                }
+            }
+        }
+
+        // v2 streaming path: accepted header (carries the req_id a
+        // second connection needs for `cancel`), then delta frames.
+        // Any write failure means the client is gone — cancel so the
+        // pipeline stops generating into the void.
+        if let Err(e) = write_frame(w, &jobj! { "event" => "accepted", "req_id" => id as usize }) {
+            rs.cancel();
+            return Err(e);
+        }
         loop {
-            match handle.wait_timeout(Duration::from_millis(100)) {
-                WaitResult::Done(c) => {
-                    return Ok(jobj! {
-                        "req_id" => id as usize,
-                        "jct_s" => c.completed_t - handle.submitted_t(),
-                        "completed" => true,
+            let delta = match rs.recv() {
+                Some(d) => d,
+                None => anyhow::bail!("pipeline failed serving request {id}"),
+            };
+            let frame = match &delta {
+                OutputDelta::TextDelta { tokens, t } => jobj! {
+                    "event" => "delta", "req_id" => id as usize,
+                    "kind" => "text", "tokens" => tokens.len(), "t" => *t,
+                },
+                OutputDelta::AudioChunk { wave, t } => jobj! {
+                    "event" => "delta", "req_id" => id as usize,
+                    "kind" => "audio", "samples" => wave.len(), "t" => *t,
+                },
+                OutputDelta::ImageFrame { tokens, t } => jobj! {
+                    "event" => "delta", "req_id" => id as usize,
+                    "kind" => "image", "tokens" => *tokens, "t" => *t,
+                },
+                OutputDelta::StageDone { stage, t } => jobj! {
+                    "event" => "delta", "req_id" => id as usize,
+                    "kind" => "stage_done", "stage" => *stage, "t" => *t,
+                },
+                OutputDelta::Done { jct_s, cancelled, usage, .. } => {
+                    return write_frame(w, &jobj! {
+                        "event" => "done", "req_id" => id as usize,
+                        "jct_s" => *jct_s, "cancelled" => *cancelled,
+                        "deltas" => usage.deltas,
+                        "text_tokens" => usage.text_tokens,
+                        "audio_samples" => usage.audio_samples,
                     });
                 }
-                WaitResult::Timeout => {
-                    anyhow::ensure!(!session.failed(), "pipeline failed serving request {id}");
-                }
-                WaitResult::Closed => anyhow::bail!("serving session closed"),
+            };
+            if let Err(e) = write_frame(w, &frame) {
+                // The client hung up mid-stream: release the pipeline's
+                // resources instead of generating into the void.
+                rs.cancel();
+                return Err(e);
             }
         }
     }
@@ -263,6 +419,7 @@ impl Server {
                 Ok(jobj! {
                     "ok" => true,
                     "completed" => summary.report.completed,
+                    "cancelled" => summary.report.cancelled,
                     "mean_jct_s" => summary.report.mean_jct(),
                 })
             }

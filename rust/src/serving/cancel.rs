@@ -1,0 +1,146 @@
+//! End-to-end request cancellation (the tombstone set).
+//!
+//! Cancelling a request ([`crate::serving::ResponseStream::cancel`], a
+//! deadline expiry, or the server's `cancel` op) marks a per-request
+//! *tombstone* here.  Every stage thread consults the set:
+//!
+//! * items pulled from the frontend or a routed edge for a tombstoned
+//!   request are dropped before their transfer runs (the router leg of
+//!   the propagation — queued work never reaches an engine);
+//! * on every generation change the stage sweeps its admission queue
+//!   ([`crate::scheduler::StageScheduler::cancel`]) and its engine
+//!   (`cancel(req_id)` on each engine type), releasing KV blocks of
+//!   in-flight AR sequences;
+//! * exported-but-unimported prefill handoffs are covered by the item
+//!   drop: the prefill pool released its blocks at export, and the
+//!   decode pool never imports a tombstoned handoff.
+//!
+//! The hot path is kept cheap: with no cancellations ever (the common
+//! case) every check is one relaxed atomic load.  Stage threads rescan
+//! only when the *generation* counter moved, so a tombstone costs one
+//! sweep per stage, not one per loop iteration.  Entries are purged
+//! after a TTL by the session collector — late items of a long-dead
+//! request are already filtered out of the stream map by then.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::RwLock;
+
+/// How long a tombstone stays visible to stage threads before the
+/// collector purges it.  Far longer than any item can sit in a
+/// connector channel of a live pipeline.
+pub const TOMBSTONE_TTL_S: f64 = 120.0;
+
+/// The shared set of cancelled request ids (see module docs).
+#[derive(Debug, Default)]
+pub struct Tombstones {
+    /// Bumped on every [`Self::mark`]; stage threads sweep their local
+    /// state only when this moves.
+    gen: AtomicU64,
+    /// Live entry count — the fast-path empty check.
+    count: AtomicUsize,
+    map: RwLock<HashMap<u64, f64>>,
+}
+
+impl Tombstones {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// One relaxed load; true iff no request is currently tombstoned.
+    pub fn is_empty(&self) -> bool {
+        self.count.load(Ordering::Relaxed) == 0
+    }
+
+    /// Current sweep generation (moves on every [`Self::mark`]).
+    pub fn generation(&self) -> u64 {
+        self.gen.load(Ordering::Acquire)
+    }
+
+    /// Tombstone `req` at session time `t`.
+    pub fn mark(&self, req: u64, t: f64) {
+        {
+            let mut m = self.map.write().unwrap();
+            if m.insert(req, t).is_none() {
+                self.count.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        // After the entry is visible, so a sweep triggered by this bump
+        // always sees it.
+        self.gen.fetch_add(1, Ordering::Release);
+    }
+
+    pub fn contains(&self, req: u64) -> bool {
+        !self.is_empty() && self.map.read().unwrap().contains_key(&req)
+    }
+
+    /// All live tombstoned request ids (a sweep's worklist).
+    pub fn snapshot(&self) -> Vec<u64> {
+        if self.is_empty() {
+            return vec![];
+        }
+        self.map.read().unwrap().keys().copied().collect()
+    }
+
+    /// Drop entries older than `ttl_s`.  Does NOT bump the generation —
+    /// a purge removes work, it never creates any.
+    pub fn purge_older(&self, now: f64, ttl_s: f64) {
+        if self.is_empty() {
+            return;
+        }
+        let mut m = self.map.write().unwrap();
+        let before = m.len();
+        m.retain(|_, &mut t| now - t < ttl_s);
+        let removed = before - m.len();
+        if removed > 0 {
+            self.count.fetch_sub(removed, Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_fast_path() {
+        let t = Tombstones::new();
+        assert!(t.is_empty());
+        assert!(!t.contains(7));
+        assert!(t.snapshot().is_empty());
+        assert_eq!(t.generation(), 0);
+    }
+
+    #[test]
+    fn mark_bumps_generation_and_is_visible() {
+        let t = Tombstones::new();
+        t.mark(7, 1.0);
+        assert!(!t.is_empty());
+        assert!(t.contains(7));
+        assert!(!t.contains(8));
+        assert_eq!(t.generation(), 1);
+        // Re-marking the same request still moves the generation (a
+        // sweep must run even if the entry already existed)...
+        t.mark(7, 2.0);
+        assert_eq!(t.generation(), 2);
+        // ...but the count stays correct.
+        t.mark(8, 2.0);
+        let mut s = t.snapshot();
+        s.sort_unstable();
+        assert_eq!(s, vec![7, 8]);
+    }
+
+    #[test]
+    fn purge_respects_ttl_and_keeps_generation() {
+        let t = Tombstones::new();
+        t.mark(1, 0.0);
+        t.mark(2, 50.0);
+        let gen = t.generation();
+        t.purge_older(100.0, 60.0); // entry 1 is 100s old, entry 2 is 50s
+        assert!(!t.contains(1));
+        assert!(t.contains(2));
+        assert_eq!(t.generation(), gen, "purge must not trigger sweeps");
+        t.purge_older(1000.0, 60.0);
+        assert!(t.is_empty());
+    }
+}

@@ -5,21 +5,33 @@
 //! A [`ServingSession`] spawns the stage graph **once** and stays up:
 //!
 //! ```text
-//!             submit() ──► entry replicas ──► ... stage graph ... ──► exit replicas
+//!      submit_request() ──► entry replicas ──► ... stage graph ... ──► exit replicas
 //!                │   ▲                                                     │
-//!   CompletionHandle │ front senders                                  sink channel
+//!     ResponseStream │ front senders                                  sink channel
 //!                │   │                                                     │
 //!                ▼   │                                                     ▼
 //!              caller└──────────────── collector thread ◄──────────────────┘
+//!                         (typed OutputDeltas per exit item,
+//!                          deadline expiry, stream teardown)
 //!
 //!              autoscaler thread ──► EdgeCtl add/drain/remove ──► replica spawn/retire
 //!                     ▲                                                  │
 //!                     └──────── ReplicaSlot load publications ◄──────────┘
 //! ```
 //!
-//! * Requests are submitted continuously through [`ServingSession::submit`];
-//!   each returns a [`CompletionHandle`] resolved by the collector thread
-//!   when the request's final item leaves an exit stage.
+//! * Requests are typed [`OmniRequest`]s submitted continuously through
+//!   [`ServingSession::submit_request`]; each returns a
+//!   [`ResponseStream`] that yields [`OutputDelta`]s mid-flight — the
+//!   collector thread taps every item leaving an exit stage (text
+//!   tokens, waveform chunks, image frames) instead of waiting for the
+//!   final one — and always ends with `Done`.
+//! * Requests are cancellable end-to-end ([`ResponseStream::cancel`],
+//!   deadline expiry, [`ServingSession::cancel`]): a per-request
+//!   tombstone ([`Tombstones`]) propagates through the router and every
+//!   stage scheduler/engine (see [`cancel`]).
+//! * The pre-streaming submit-and-block API survives as a shim:
+//!   [`ServingSession::submit`] returns a deprecated [`CompletionHandle`]
+//!   wrapping the stream.
 //! * The optional [`autoscaler`] control loop samples every replica's
 //!   published scheduler load and scales stage replicas up/down at
 //!   runtime — wiring new replicas into the routed edges
@@ -35,6 +47,15 @@
 //! ([`crate::server`]) shares one session across connections.
 
 pub mod autoscaler;
+pub mod cancel;
+pub mod request;
+pub mod stream;
+
+pub use cancel::Tombstones;
+pub use request::{OmniRequest, Priority};
+pub use stream::{
+    Completion, CompletionHandle, OutputDelta, ResponseStream, StreamRecv, Usage, WaitResult,
+};
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -95,50 +116,6 @@ impl SessionOptions {
     }
 }
 
-/// Delivered when a request's final item leaves an exit stage.
-#[derive(Debug, Clone)]
-pub struct Completion {
-    pub req_id: u64,
-    /// Run-relative completion time (seconds on the session clock).
-    pub completed_t: f64,
-}
-
-/// Outcome of [`CompletionHandle::wait_timeout`].
-#[derive(Debug)]
-pub enum WaitResult {
-    Done(Completion),
-    Timeout,
-    /// The session's collector is gone (session shut down or failed);
-    /// this completion can no longer arrive.
-    Closed,
-}
-
-/// Per-request completion channel returned by [`ServingSession::submit`].
-pub struct CompletionHandle {
-    req_id: u64,
-    submitted_t: f64,
-    rx: mpsc::Receiver<Completion>,
-}
-
-impl CompletionHandle {
-    pub fn req_id(&self) -> u64 {
-        self.req_id
-    }
-
-    /// Submission time on the session clock (JCT = completed_t - this).
-    pub fn submitted_t(&self) -> f64 {
-        self.submitted_t
-    }
-
-    pub fn wait_timeout(&self, d: Duration) -> WaitResult {
-        match self.rx.recv_timeout(d) {
-            Ok(c) => WaitResult::Done(c),
-            Err(mpsc::RecvTimeoutError::Timeout) => WaitResult::Timeout,
-            Err(mpsc::RecvTimeoutError::Disconnected) => WaitResult::Closed,
-        }
-    }
-}
-
 /// One live (or draining) engine replica of a stage.
 pub(crate) struct ReplicaHandle {
     pub(crate) uid: u64,
@@ -169,6 +146,20 @@ pub(crate) struct FrontTx {
     pub(crate) tx: mpsc::Sender<Request>,
 }
 
+/// Collector-side state of one in-flight request's delta stream.
+pub(crate) struct ReqStream {
+    pub(crate) tx: mpsc::Sender<OutputDelta>,
+    /// Deliver mid-flight deltas (off = only the terminal `Done`; the
+    /// payload is never materialized, keeping submit-and-block callers
+    /// as cheap as before the streaming API existed).
+    pub(crate) stream: bool,
+    /// Request asked for audio output (types the DiT vocoder's
+    /// latent+wave items; see [`stream::classify_item`]).
+    pub(crate) audio: bool,
+    pub(crate) submitted_t: f64,
+    pub(crate) usage: Usage,
+}
+
 /// Shared interior of a session (stage threads, the collector, the
 /// autoscaler, and API callers all hold it through an `Arc`).
 pub(crate) struct SessionInner {
@@ -191,7 +182,16 @@ pub(crate) struct SessionInner {
     pub(crate) stages: Mutex<Vec<StageState>>,
     /// Entry-stage request senders + rotation cursor.
     pub(crate) front: Mutex<(Vec<FrontTx>, usize)>,
-    pub(crate) completions: Mutex<HashMap<u64, mpsc::Sender<Completion>>>,
+    /// Per-request delta streams.  Doubles as the dedup set AND the
+    /// memory bound of a long-lived session: claiming a request's entry
+    /// is what resolves it (exactly once), and its metadata is evicted
+    /// right there — a session serving requests for days holds state
+    /// only for what is in flight.
+    pub(crate) streams: Mutex<HashMap<u64, ReqStream>>,
+    /// Cancelled-request tombstones swept by every stage thread.
+    pub(crate) cancels: Arc<Tombstones>,
+    /// `(expiry_t, req_id)` deadlines enforced by the collector tick.
+    pub(crate) deadlines: Mutex<Vec<(f64, u64)>>,
     /// Kept for cloning into dynamically spawned exit replicas; dropped
     /// at shutdown so the collector sees the channel close.
     pub(crate) sink_tx: Mutex<Option<mpsc::Sender<StageItem>>>,
@@ -213,6 +213,143 @@ impl SessionInner {
         if slot.is_none() {
             *slot = Some(e);
         }
+    }
+
+    fn dec_inflight(&self) {
+        let _ = self
+            .inflight
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| Some(v.saturating_sub(1)));
+    }
+
+    /// Cancel one in-flight request end-to-end.  Returns false when the
+    /// request already resolved (completed or cancelled earlier).
+    pub(crate) fn cancel_request(&self, req_id: u64) -> bool {
+        // Claiming the stream entry is the exactly-once gate, same as
+        // completion.
+        let Some(st) = self.streams.lock().unwrap().remove(&req_id) else { return false };
+        let t = self.clock.now();
+        // Tombstone FIRST: anything of this request still flowing is
+        // dropped at the next stage-thread sweep/pull.
+        self.cancels.mark(req_id, t);
+        self.reqs.lock().unwrap().remove(&req_id);
+        self.deadlines.lock().unwrap().retain(|&(_, r)| r != req_id);
+        // The affinity entry would otherwise outlive the request (its
+        // finished item never flows), pinning draining replicas forever.
+        for e in &self.edges {
+            e.purge_request(req_id);
+        }
+        self.recorder.emit(Event::Cancelled { req: req_id, t });
+        self.dec_inflight();
+        let _ = st.tx.send(OutputDelta::Done {
+            t,
+            jct_s: t - st.submitted_t,
+            cancelled: true,
+            usage: st.usage,
+        });
+        true
+    }
+
+    /// Stage-loop hook: a stage finished producing for a request —
+    /// forward a `StageDone` marker to its (streaming) delta channel.
+    pub(crate) fn stage_done_delta(&self, req: u64, stage: &'static str, t: f64) {
+        let streams = self.streams.lock().unwrap();
+        if let Some(st) = streams.get(&req) {
+            if st.stream {
+                let _ = st.tx.send(OutputDelta::StageDone { stage, t });
+            }
+        }
+    }
+
+    /// Collector: type one exit-stage item into deltas, stream them, and
+    /// resolve the request on its final item.  (Post-completion
+    /// straggler items — e.g. a Thinker still draining its final chunks
+    /// after the exit stage hit its audio budget — find no entry and are
+    /// dropped, matching the one-shot runner's behaviour.)
+    fn collect_item(&self, item: StageItem) {
+        if self.cancels.contains(item.req_id) {
+            return; // late item of a cancelled request
+        }
+        let t = self.clock.now();
+        let mut streams = self.streams.lock().unwrap();
+        let Some(st) = streams.get_mut(&item.req_id) else { return };
+        // Accounting (usage counters + the client-boundary Event::Delta
+        // feeding TPOT) works from sizes only; the payload tensors are
+        // copied into a typed delta ONLY for streaming requests, so the
+        // submit-and-block path never materializes a waveform.
+        let payload = stream::classify_item(&item, st.audio);
+        if payload != stream::Payload::None {
+            st.usage.absorb(&payload);
+            self.recorder.emit(Event::Delta { req: item.req_id, t });
+            if st.stream {
+                if let Some(d) = stream::delta_for_payload(payload, &item, t) {
+                    let _ = st.tx.send(d);
+                }
+            }
+        }
+        if item.finished {
+            let st = streams.remove(&item.req_id).expect("entry held above");
+            drop(streams);
+            self.recorder.emit(Event::Completed { req: item.req_id, t });
+            self.reqs.lock().unwrap().remove(&item.req_id);
+            self.deadlines.lock().unwrap().retain(|&(_, r)| r != item.req_id);
+            self.dec_inflight();
+            let _ = st.tx.send(OutputDelta::Done {
+                t,
+                jct_s: t - st.submitted_t,
+                cancelled: false,
+                usage: st.usage,
+            });
+        }
+    }
+
+    /// Collector housekeeping, run between sink receives: deadline
+    /// expiry, failure teardown, tombstone GC.
+    fn collector_tick(&self) {
+        let now = self.clock.now();
+        // Pop expired entries unconditionally: a deadline whose request
+        // already resolved (cancel_request returns false) must still
+        // leave the list, or it would be re-collected on every tick.
+        let expired: Vec<u64> = {
+            let mut d = self.deadlines.lock().unwrap();
+            let mut ex = Vec::new();
+            d.retain(|&(t, r)| {
+                if now >= t {
+                    ex.push(r);
+                    false
+                } else {
+                    true
+                }
+            });
+            ex
+        };
+        for r in expired {
+            self.cancel_request(r);
+        }
+        // A failed pipeline can never deliver more deltas: close every
+        // live stream so blocked callers wake with `Closed` instead of
+        // polling the failure flag, and retire the requests' bookkeeping
+        // (they will never resolve, so they must not count as in-flight
+        // or keep metadata/deadlines alive).
+        if self.failed.load(Ordering::SeqCst) {
+            let dead: Vec<u64> = {
+                let mut s = self.streams.lock().unwrap();
+                let ids = s.keys().copied().collect();
+                s.clear();
+                ids
+            };
+            if !dead.is_empty() {
+                let mut reqs = self.reqs.lock().unwrap();
+                for id in &dead {
+                    reqs.remove(id);
+                }
+                drop(reqs);
+                self.deadlines.lock().unwrap().clear();
+                for _ in &dead {
+                    self.dec_inflight();
+                }
+            }
+        }
+        self.cancels.purge_older(now, cancel::TOMBSTONE_TTL_S);
     }
 }
 
@@ -304,7 +441,9 @@ impl ServingSession {
             edge_routing,
             stages: Mutex::new(Vec::new()),
             front: Mutex::new((Vec::new(), 0)),
-            completions: Mutex::new(HashMap::new()),
+            streams: Mutex::new(HashMap::new()),
+            cancels: Arc::new(Tombstones::new()),
+            deadlines: Mutex::new(Vec::new()),
             sink_tx: Mutex::new(Some(sink_tx)),
             pool,
             dev_load: Mutex::new(dev_load),
@@ -358,46 +497,26 @@ impl ServingSession {
         ready.wait();
         inner.clock.reset();
 
-        // Collector: resolves per-request completion channels and emits
-        // the Completed lifecycle event.  The completions map doubles as
-        // the dedup set AND the memory bound of the long-lived session:
-        // claiming a request's entry is what makes it complete (exactly
-        // once), and its metadata is evicted right there — a session
-        // serving requests for days holds state only for what is in
-        // flight.  (Post-completion straggler items — e.g. a Thinker
-        // still draining its final chunks after the exit stage hit its
-        // audio budget — find no entry and are dropped, matching the
-        // one-shot runner's behaviour.)
+        // Collector: types every exit-stage item into OutputDeltas,
+        // resolves streams, enforces deadlines, and tears streams down
+        // on failure/shutdown (see SessionInner::collect_item/
+        // collector_tick).
         let collector = {
             let inner = inner.clone();
             std::thread::Builder::new().name("serving-collector".into()).spawn(move || {
                 loop {
                     match sink_rx.recv_timeout(Duration::from_millis(50)) {
-                        Ok(item) => {
-                            if !item.finished {
-                                continue;
-                            }
-                            let tx = inner.completions.lock().unwrap().remove(&item.req_id);
-                            let Some(tx) = tx else { continue };
-                            let t = inner.clock.now();
-                            inner.recorder.emit(Event::Completed { req: item.req_id, t });
-                            inner.reqs.lock().unwrap().remove(&item.req_id);
-                            let _ = inner.inflight.fetch_update(
-                                Ordering::SeqCst,
-                                Ordering::SeqCst,
-                                |v| Some(v.saturating_sub(1)),
-                            );
-                            let _ = tx.send(Completion {
-                                req_id: item.req_id,
-                                completed_t: t,
-                            });
-                        }
+                        Ok(item) => inner.collect_item(item),
                         Err(mpsc::RecvTimeoutError::Timeout) => {}
                         // Every sink sender is gone (all exit replicas
                         // joined and the session dropped its clone).
                         Err(mpsc::RecvTimeoutError::Disconnected) => break,
                     }
+                    inner.collector_tick();
                 }
+                // Session over: close every remaining stream so blocked
+                // clients see `Closed` instead of hanging.
+                inner.streams.lock().unwrap().clear();
             })?
         };
 
@@ -433,19 +552,30 @@ impl ServingSession {
         self.inner.failed.load(Ordering::SeqCst)
     }
 
-    /// Requests submitted and not yet completed.
+    /// Requests submitted and not yet resolved (completed or cancelled).
     pub fn inflight(&self) -> usize {
         self.inner.inflight.load(Ordering::SeqCst)
     }
 
-    /// Submit one request.  Registers its metadata, emits the `Arrived`
-    /// event, and injects it into an entry-stage replica (rotating across
-    /// live replicas; a dead replica costs a retry, never a clone).
+    /// DEPRECATED submit-and-block path: wraps [`Self::submit_request`]
+    /// with streaming off and returns the [`CompletionHandle`] shim.
     pub fn submit(&self, req: Request) -> Result<CompletionHandle> {
+        Ok(CompletionHandle::from_stream(self.submit_request(OmniRequest::from(req))?))
+    }
+
+    /// Submit one typed request.  Registers its metadata (priority
+    /// included), arms its deadline, emits the `Arrived` event, and
+    /// injects it into an entry-stage replica (rotating across live
+    /// replicas; a dead replica costs a retry, never a clone).  The
+    /// returned [`ResponseStream`] yields typed deltas mid-flight when
+    /// [`OmniRequest::streaming`] is on, and always ends with `Done`.
+    pub fn submit_request(&self, oreq: OmniRequest) -> Result<ResponseStream> {
         anyhow::ensure!(
             !self.inner.stop.load(Ordering::SeqCst),
             "serving session is shutting down"
         );
+        oreq.validate()?;
+        let (req, stream_on, priority, deadline_s) = oreq.into_parts();
         let id = req.id;
         let now = self.inner.clock.now();
         self.inner.reqs.lock().unwrap().insert(
@@ -457,10 +587,23 @@ impl ServingSession {
                 ignore_eos: req.ignore_eos,
                 prompt_tokens: req.prompt_tokens.clone(),
                 max_text_tokens: req.max_text_tokens,
+                priority: priority.rank(),
             },
         );
-        let (ctx, crx) = mpsc::channel();
-        self.inner.completions.lock().unwrap().insert(id, ctx);
+        let (tx, rx) = mpsc::channel();
+        self.inner.streams.lock().unwrap().insert(
+            id,
+            ReqStream {
+                tx,
+                stream: stream_on,
+                audio: req.max_audio_tokens > 0,
+                submitted_t: now,
+                usage: Usage::default(),
+            },
+        );
+        if let Some(d) = deadline_s {
+            self.inner.deadlines.lock().unwrap().push((now + d, id));
+        }
         self.inner.inflight.fetch_add(1, Ordering::SeqCst);
         self.inner.recorder.emit(Event::Arrived { req: id, t: now });
 
@@ -472,7 +615,7 @@ impl ServingSession {
             match txs[i].tx.send(pending.take().expect("requeued on failure")) {
                 Ok(()) => {
                     *next = (i + 1) % txs.len();
-                    return Ok(CompletionHandle { req_id: id, submitted_t: now, rx: crx });
+                    return Ok(ResponseStream::new(id, now, rx, self.inner.clone()));
                 }
                 Err(mpsc::SendError(bounced)) => {
                     // Dead entry replica: prune its sender and retry.
@@ -484,14 +627,20 @@ impl ServingSession {
         // No live entry replica: roll the registration back.
         drop(front);
         self.inner.reqs.lock().unwrap().remove(&id);
-        self.inner.completions.lock().unwrap().remove(&id);
-        let _ = self.inner.inflight.fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| {
-            Some(v.saturating_sub(1))
-        });
+        self.inner.streams.lock().unwrap().remove(&id);
+        self.inner.deadlines.lock().unwrap().retain(|&(_, r)| r != id);
+        self.inner.dec_inflight();
         anyhow::bail!("no live entry-stage replica to accept request {id}")
     }
 
-    /// Block until every submitted request completed, the session failed,
+    /// Cancel an in-flight request by id (the server's `cancel` op; API
+    /// callers usually go through [`ResponseStream::cancel`]).  Returns
+    /// false when the request already resolved.
+    pub fn cancel(&self, req_id: u64) -> bool {
+        self.inner.cancel_request(req_id)
+    }
+
+    /// Block until every submitted request resolved, the session failed,
     /// or `timeout` elapsed.  Returns true when fully drained.
     pub fn drain(&self, timeout: Duration) -> bool {
         let t0 = std::time::Instant::now();
@@ -593,7 +742,8 @@ impl ServingSession {
             }
         }
         // Drop the session's sink sender: with all replicas joined the
-        // channel closes and the collector exits after draining it.
+        // channel closes and the collector exits after draining it
+        // (closing any stream still open).
         *self.inner.sink_tx.lock().unwrap() = None;
         if let Some(h) = self.collector.lock().unwrap().take() {
             let _ = h.join();
@@ -670,6 +820,12 @@ pub(crate) fn spawn_replica(
 
     let retire = Arc::new(AtomicBool::new(false));
     let slot = Arc::new(ReplicaSlot::default());
+    // Stage-done deltas flow through a hook so the stage loop stays
+    // decoupled from the session internals.
+    let on_stage_done: stage::StageDoneHook = {
+        let inner = inner.clone();
+        Arc::new(move |req, stage_name, t| inner.stage_done_delta(req, stage_name, t))
+    };
     let spec = stage::StageSpec {
         index: stage_idx,
         replica: ord,
@@ -688,6 +844,8 @@ pub(crate) fn spawn_replica(
         failed: inner.failed.clone(),
         front_rx,
         sink,
+        cancels: inner.cancels.clone(),
+        on_stage_done: Some(on_stage_done),
         streaming: inner.opts.streaming,
         lazy_compile: inner.opts.lazy_compile,
         device_bytes: inner.graph.config.device_bytes,

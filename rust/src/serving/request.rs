@@ -1,0 +1,231 @@
+//! The typed client-facing request: a builder over [`crate::trace::Request`]
+//! that adds the serving-API surface the raw trace record never had —
+//! streaming on/off, scheduling priority, and an optional deadline.
+//!
+//! ```no_run
+//! use omni_serve::serving::{OmniRequest, Priority};
+//! use omni_serve::trace::Modality;
+//!
+//! let req = OmniRequest::text(1, vec![1, 17, 23])
+//!     .modality(Modality::Audio)
+//!     .mm_frames(48)
+//!     .max_text_tokens(24)
+//!     .max_audio_tokens(96)
+//!     .streaming(true)
+//!     .priority(Priority::High)
+//!     .deadline_s(5.0);
+//! ```
+//!
+//! [`crate::serving::ServingSession::submit_request`] consumes one and
+//! returns a [`crate::serving::ResponseStream`].
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::trace::{Modality, Request};
+
+/// Admission priority.  Higher-priority submissions are enqueued ahead
+/// of lower-priority ones at every stage's admission queue
+/// ([`crate::scheduler::StageScheduler`]); ordering within a class stays
+/// FIFO, and nothing already admitted to an engine is ever displaced.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    Low,
+    #[default]
+    Normal,
+    High,
+}
+
+impl Priority {
+    /// Numeric rank carried through [`crate::stage_graph::transfers::ReqMeta`]
+    /// into the per-stage schedulers (higher = sooner).
+    pub fn rank(self) -> u8 {
+        match self {
+            Priority::Low => 0,
+            Priority::Normal => 1,
+            Priority::High => 2,
+        }
+    }
+}
+
+/// A typed serving request (see module docs).
+#[derive(Debug, Clone)]
+pub struct OmniRequest {
+    req: Request,
+    stream: bool,
+    priority: Priority,
+    deadline_s: Option<f64>,
+}
+
+impl From<Request> for OmniRequest {
+    /// Wrap a raw trace request with the defaults of the pre-streaming
+    /// API: no mid-flight deltas, normal priority, no deadline.
+    fn from(req: Request) -> Self {
+        Self { req, stream: false, priority: Priority::Normal, deadline_s: None }
+    }
+}
+
+impl OmniRequest {
+    /// A text request with the workload-substrate defaults (everything
+    /// overridable through the builder methods).
+    pub fn text(id: u64, prompt_tokens: Vec<u32>) -> Self {
+        Self::from(Request {
+            id,
+            arrival_s: 0.0,
+            modality: Modality::Text,
+            prompt_tokens,
+            mm_frames: 0,
+            seed: id,
+            max_text_tokens: 24,
+            max_audio_tokens: 0,
+            diffusion_steps: 0,
+            ignore_eos: true,
+        })
+    }
+
+    pub fn modality(mut self, m: Modality) -> Self {
+        self.req.modality = m;
+        self
+    }
+
+    pub fn mm_frames(mut self, frames: usize) -> Self {
+        self.req.mm_frames = frames;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.req.seed = seed;
+        self
+    }
+
+    pub fn max_text_tokens(mut self, n: usize) -> Self {
+        self.req.max_text_tokens = n;
+        self
+    }
+
+    pub fn max_audio_tokens(mut self, n: usize) -> Self {
+        self.req.max_audio_tokens = n;
+        self
+    }
+
+    pub fn diffusion_steps(mut self, n: usize) -> Self {
+        self.req.diffusion_steps = n;
+        self
+    }
+
+    pub fn ignore_eos(mut self, on: bool) -> Self {
+        self.req.ignore_eos = on;
+        self
+    }
+
+    /// Deliver typed [`crate::serving::OutputDelta`]s mid-flight (off =
+    /// the stream carries only the terminal `Done`).
+    pub fn streaming(mut self, on: bool) -> Self {
+        self.stream = on;
+        self
+    }
+
+    pub fn priority(mut self, p: Priority) -> Self {
+        self.priority = p;
+        self
+    }
+
+    /// Cancel the request automatically `s` seconds after submission
+    /// (it resolves with `Done { cancelled: true }`).
+    pub fn deadline_s(mut self, s: f64) -> Self {
+        self.deadline_s = Some(s);
+        self
+    }
+
+    pub fn deadline(self, d: Duration) -> Self {
+        self.deadline_s(d.as_secs_f64())
+    }
+
+    pub fn id(&self) -> u64 {
+        self.req.id
+    }
+
+    /// The underlying trace request.
+    pub fn request(&self) -> &Request {
+        &self.req
+    }
+
+    pub fn is_streaming(&self) -> bool {
+        self.stream
+    }
+
+    pub(crate) fn validate(&self) -> Result<()> {
+        if let Some(d) = self.deadline_s {
+            anyhow::ensure!(
+                d.is_finite() && d > 0.0,
+                "request {}: deadline must be a positive number of seconds, got {d}",
+                self.req.id
+            );
+        }
+        Ok(())
+    }
+
+    pub(crate) fn into_parts(self) -> (Request, bool, Priority, Option<f64>) {
+        (self.req, self.stream, self.priority, self.deadline_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_round_trip() {
+        let r = OmniRequest::text(9, vec![1, 2, 3])
+            .modality(Modality::Video)
+            .mm_frames(64)
+            .seed(7)
+            .max_text_tokens(32)
+            .max_audio_tokens(96)
+            .diffusion_steps(4)
+            .ignore_eos(false)
+            .streaming(true)
+            .priority(Priority::High)
+            .deadline_s(2.5);
+        assert!(r.validate().is_ok());
+        assert!(r.is_streaming());
+        let (req, stream, prio, deadline) = r.into_parts();
+        assert_eq!(req.id, 9);
+        assert_eq!(req.modality, Modality::Video);
+        assert_eq!(req.mm_frames, 64);
+        assert_eq!(req.seed, 7);
+        assert_eq!(req.max_text_tokens, 32);
+        assert_eq!(req.max_audio_tokens, 96);
+        assert_eq!(req.diffusion_steps, 4);
+        assert!(!req.ignore_eos);
+        assert!(stream);
+        assert_eq!(prio, Priority::High);
+        assert_eq!(deadline, Some(2.5));
+    }
+
+    #[test]
+    fn from_request_keeps_batch_defaults() {
+        let r = OmniRequest::text(1, vec![5]);
+        let o = OmniRequest::from(r.request().clone());
+        assert!(!o.is_streaming());
+        assert_eq!(o.priority, Priority::Normal);
+        assert!(o.deadline_s.is_none());
+    }
+
+    #[test]
+    fn bad_deadline_rejected() {
+        for d in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            let r = OmniRequest::text(1, vec![]).deadline_s(d);
+            assert!(r.validate().is_err(), "deadline {d} must be rejected");
+        }
+        assert!(OmniRequest::text(1, vec![]).deadline(Duration::from_millis(10)).validate().is_ok());
+    }
+
+    #[test]
+    fn priority_ranks_are_ordered() {
+        assert!(Priority::High.rank() > Priority::Normal.rank());
+        assert!(Priority::Normal.rank() > Priority::Low.rank());
+        assert_eq!(Priority::default(), Priority::Normal);
+    }
+}

@@ -1,0 +1,351 @@
+//! The streaming response surface: typed [`OutputDelta`]s delivered
+//! mid-flight over a per-request channel, plus the deprecated
+//! [`CompletionHandle`] shim that preserves the old submit-and-block
+//! contract on top of it.
+//!
+//! Deltas are produced by the session collector, which taps EVERY item
+//! leaving an exit stage (not just the final one) and types it by
+//! payload: codec waveforms become [`OutputDelta::AudioChunk`], DiT
+//! latents [`OutputDelta::ImageFrame`], token batches
+//! [`OutputDelta::TextDelta`].  Interior stages contribute
+//! [`OutputDelta::StageDone`] markers through the stage-loop hook, and
+//! the terminal [`OutputDelta::Done`] carries usage counters, the JCT,
+//! and whether the request was cancelled.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::SessionInner;
+use crate::engine::StageItem;
+
+/// Aggregate output counters for one request, carried in
+/// [`OutputDelta::Done`].
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Usage {
+    /// Payload deltas emitted (text/audio/image; excludes stage markers).
+    pub deltas: usize,
+    pub text_tokens: usize,
+    pub audio_samples: usize,
+    pub image_frames: usize,
+}
+
+impl Usage {
+    pub(crate) fn absorb(&mut self, p: &Payload) {
+        match p {
+            Payload::Text(n) => {
+                self.deltas += 1;
+                self.text_tokens += n;
+            }
+            Payload::Audio(n) => {
+                self.deltas += 1;
+                self.audio_samples += n;
+            }
+            Payload::Image(_) => {
+                self.deltas += 1;
+                self.image_frames += 1;
+            }
+            Payload::None => {}
+        }
+    }
+}
+
+/// One typed mid-flight event on a [`ResponseStream`].  All timestamps
+/// are run-relative seconds on the session clock.
+#[derive(Debug, Clone)]
+pub enum OutputDelta {
+    /// A batch of generated text/codec tokens from an exit AR stage.
+    TextDelta { tokens: Vec<u32>, t: f64 },
+    /// A synthesized waveform chunk (vocoder / patch-decoder output).
+    AudioChunk { wave: Vec<f32>, t: f64 },
+    /// A denoised visual frame; `tokens` is the latent token count.
+    ImageFrame { tokens: usize, t: f64 },
+    /// A (possibly interior) stage finished producing for this request.
+    StageDone { stage: &'static str, t: f64 },
+    /// Terminal event: the request completed (`cancelled: false`) or was
+    /// cancelled/deadline-expired (`cancelled: true`).  Always the last
+    /// delta on the stream.
+    Done { t: f64, jct_s: f64, cancelled: bool, usage: Usage },
+}
+
+/// Outcome of [`ResponseStream::next_timeout`].
+#[derive(Debug)]
+pub enum StreamRecv {
+    Delta(OutputDelta),
+    Timeout,
+    /// The stream can never yield again: the session shut down, failed,
+    /// or the terminal `Done` was already consumed.
+    Closed,
+}
+
+/// Per-request delta stream returned by
+/// [`super::ServingSession::submit_request`].  Dropping it does NOT
+/// cancel the request (use [`Self::cancel`]); unread deltas of a
+/// non-streaming request are never materialized, so an unconsumed
+/// stream costs nothing.
+pub struct ResponseStream {
+    req_id: u64,
+    submitted_t: f64,
+    rx: mpsc::Receiver<OutputDelta>,
+    inner: Arc<SessionInner>,
+    /// `(completed_t, cancelled)` once the terminal `Done` was seen.
+    done: Option<(f64, bool)>,
+}
+
+impl ResponseStream {
+    pub(crate) fn new(
+        req_id: u64,
+        submitted_t: f64,
+        rx: mpsc::Receiver<OutputDelta>,
+        inner: Arc<SessionInner>,
+    ) -> Self {
+        Self { req_id, submitted_t, rx, inner, done: None }
+    }
+
+    pub fn req_id(&self) -> u64 {
+        self.req_id
+    }
+
+    /// Submission time on the session clock (JCT = Done.t - this).
+    pub fn submitted_t(&self) -> f64 {
+        self.submitted_t
+    }
+
+    /// Whether the terminal `Done` has been received.
+    pub fn is_done(&self) -> bool {
+        self.done.is_some()
+    }
+
+    fn note(&mut self, d: &OutputDelta) {
+        if let OutputDelta::Done { t, cancelled, .. } = d {
+            self.done = Some((*t, *cancelled));
+        }
+    }
+
+    /// Blocking receive with a timeout.
+    pub fn next_timeout(&mut self, d: Duration) -> StreamRecv {
+        match self.rx.recv_timeout(d) {
+            Ok(delta) => {
+                self.note(&delta);
+                StreamRecv::Delta(delta)
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => StreamRecv::Timeout,
+            Err(mpsc::RecvTimeoutError::Disconnected) => StreamRecv::Closed,
+        }
+    }
+
+    /// Fully blocking receive; `None` once the stream is closed.  The
+    /// collector closes every live stream when the session fails or
+    /// shuts down, so this never hangs on a dead pipeline.
+    pub fn recv(&mut self) -> Option<OutputDelta> {
+        match self.rx.recv() {
+            Ok(delta) => {
+                self.note(&delta);
+                Some(delta)
+            }
+            Err(_) => None,
+        }
+    }
+
+    /// Cancel the request end-to-end: queued work is dropped at every
+    /// stage, in-flight AR sequences are aborted with their KV blocks
+    /// released, and the stream resolves with `Done { cancelled: true }`.
+    /// Returns false when the request already resolved.
+    pub fn cancel(&self) -> bool {
+        self.inner.cancel_request(self.req_id)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The deprecated submit-and-block shim.
+// ---------------------------------------------------------------------------
+
+/// Delivered when a request completes (the old API's terminal event).
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub req_id: u64,
+    /// Run-relative completion time (seconds on the session clock).
+    pub completed_t: f64,
+}
+
+/// Outcome of [`CompletionHandle::wait_timeout`].
+#[derive(Debug)]
+pub enum WaitResult {
+    Done(Completion),
+    Timeout,
+    /// The session's collector is gone (session shut down or failed);
+    /// this completion can no longer arrive.
+    Closed,
+}
+
+/// DEPRECATED: the pre-streaming per-request handle, kept as a thin
+/// shim over [`ResponseStream`] so submit-and-block callers
+/// ([`crate::orchestrator::Orchestrator::run_workload`], the bench
+/// paths, existing tests) migrate mechanically.  New code should use
+/// [`super::ServingSession::submit_request`] and consume the stream.
+pub struct CompletionHandle {
+    stream: ResponseStream,
+}
+
+impl CompletionHandle {
+    /// Wrap a stream (the migration path for callers that still want
+    /// submit-and-block semantics over the streaming API).
+    pub fn from_stream(stream: ResponseStream) -> Self {
+        Self { stream }
+    }
+
+    pub fn req_id(&self) -> u64 {
+        self.stream.req_id
+    }
+
+    /// Submission time on the session clock (JCT = completed_t - this).
+    pub fn submitted_t(&self) -> f64 {
+        self.stream.submitted_t
+    }
+
+    /// Block until the request resolves (mid-flight deltas are
+    /// discarded).  A cancelled request reports `Done` too — its
+    /// completion time is the cancellation time.
+    pub fn wait_timeout(&self, d: Duration) -> WaitResult {
+        let deadline = Instant::now() + d;
+        loop {
+            let left = deadline.saturating_duration_since(Instant::now());
+            match self.stream.rx.recv_timeout(left) {
+                Ok(OutputDelta::Done { t, .. }) => {
+                    return WaitResult::Done(Completion {
+                        req_id: self.stream.req_id,
+                        completed_t: t,
+                    });
+                }
+                Ok(_) => continue,
+                Err(mpsc::RecvTimeoutError::Timeout) => return WaitResult::Timeout,
+                Err(mpsc::RecvTimeoutError::Disconnected) => return WaitResult::Closed,
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Delta taxonomy: exit-stage items -> typed deltas.
+// ---------------------------------------------------------------------------
+
+/// Payload classification of one exit item — sizes only, no tensor
+/// copies.  The collector accounts EVERY request (usage counters,
+/// `Event::Delta` TPOT timestamps) from this, and materializes the
+/// actual delta only for streaming requests, so non-streaming
+/// submit-and-block traffic never copies a waveform.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Payload {
+    /// `n` generated tokens.
+    Text(usize),
+    /// `n` waveform samples.
+    Audio(usize),
+    /// `n` latent tokens.
+    Image(usize),
+    None,
+}
+
+/// Classify an exit-stage item's payload.  `audio` is the request-level
+/// hint (it asked for audio output), which disambiguates the DiT
+/// vocoder's latent+wave items from a visual pipeline's final latents.
+pub(crate) fn classify_item(item: &StageItem, audio: bool) -> Payload {
+    if audio {
+        if let Some(w) = item.tensor("wave") {
+            return if w.is_empty() { Payload::None } else { Payload::Audio(w.len()) };
+        }
+    } else if let Some(l) = item.tensor("latent") {
+        return Payload::Image(l.shape.first().copied().unwrap_or(0));
+    }
+    match item.tensor("tokens") {
+        Some(t) if !t.is_empty() => Payload::Text(t.len()),
+        _ => Payload::None,
+    }
+}
+
+/// Materialize the typed delta for an already-classified exit item (the
+/// tensor copy only happens here, and only for streaming requests).
+pub(crate) fn delta_for_payload(payload: Payload, item: &StageItem, t: f64) -> Option<OutputDelta> {
+    match payload {
+        Payload::Audio(_) => item
+            .tensor("wave")
+            .and_then(|w| w.as_f32().ok())
+            .map(|w| OutputDelta::AudioChunk { wave: w.to_vec(), t }),
+        Payload::Image(tokens) => Some(OutputDelta::ImageFrame { tokens, t }),
+        Payload::Text(_) => item
+            .tensor("tokens")
+            .and_then(|tk| tk.as_i32().ok())
+            .map(|tk| OutputDelta::TextDelta {
+                tokens: tk.iter().map(|&x| x as u32).collect(),
+                t,
+            }),
+        Payload::None => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::HostTensor;
+
+    /// classify + materialize in one step (what the collector does for
+    /// streaming requests).
+    fn type_item(item: &StageItem, audio: bool, t: f64) -> Option<OutputDelta> {
+        delta_for_payload(classify_item(item, audio), item, t)
+    }
+
+    #[test]
+    fn vocoder_items_become_audio_chunks() {
+        let item = StageItem::new(1)
+            .with("wave", HostTensor::f32(vec![4], vec![0.1, 0.2, 0.3, 0.4]))
+            .with("n_frames", HostTensor::i32(vec![1], vec![2]));
+        let d = type_item(&item, true, 1.0).unwrap();
+        assert!(matches!(&d, OutputDelta::AudioChunk { wave, t } if wave.len() == 4 && *t == 1.0));
+    }
+
+    #[test]
+    fn dit_latents_type_by_request_modality() {
+        // The DiT vocoder emits latent+wave; an audio request reads the
+        // wave, a visual request reads the latent frame.
+        let item = StageItem::new(1)
+            .with("latent", HostTensor::f32(vec![8, 2], vec![0.0; 16]))
+            .with("wave", HostTensor::f32(vec![16], vec![0.0; 16]));
+        let audio = type_item(&item, true, 0.5).unwrap();
+        assert!(matches!(&audio, OutputDelta::AudioChunk { .. }));
+        let visual = type_item(&item, false, 0.5).unwrap();
+        assert!(matches!(&visual, OutputDelta::ImageFrame { tokens: 8, .. }));
+    }
+
+    #[test]
+    fn token_items_become_text_deltas_and_empty_items_nothing() {
+        let item = StageItem::new(1).with("tokens", HostTensor::i32(vec![3], vec![5, 6, 7]));
+        let d = type_item(&item, false, 0.1).unwrap();
+        assert!(matches!(&d, OutputDelta::TextDelta { tokens, .. } if tokens == &vec![5, 6, 7]));
+        // Zero-length token tensors (degenerate flushes) emit nothing.
+        let empty = StageItem::new(1).with("tokens", HostTensor::i32(vec![0], vec![]));
+        assert!(type_item(&empty, false, 0.1).is_none());
+        assert!(type_item(&StageItem::new(1), true, 0.1).is_none());
+    }
+
+    #[test]
+    fn classification_matches_materialization_and_feeds_usage() {
+        // classify_item (the copy-free accounting path) must agree with
+        // delta_for_payload (the streaming path) on every payload type.
+        let audio_item = StageItem::new(1).with("wave", HostTensor::f32(vec![5], vec![0.0; 5]));
+        assert_eq!(classify_item(&audio_item, true), Payload::Audio(5));
+        let text_item = StageItem::new(1).with("tokens", HostTensor::i32(vec![2], vec![1, 2]));
+        assert_eq!(classify_item(&text_item, false), Payload::Text(2));
+        let img_item = StageItem::new(1).with("latent", HostTensor::f32(vec![8, 2], vec![0.0; 16]));
+        assert_eq!(classify_item(&img_item, false), Payload::Image(8));
+        assert_eq!(classify_item(&StageItem::new(1), true), Payload::None);
+
+        let mut u = Usage::default();
+        u.absorb(&Payload::Text(2));
+        u.absorb(&Payload::Audio(5));
+        u.absorb(&Payload::Image(8));
+        u.absorb(&Payload::None);
+        assert_eq!(u.deltas, 3);
+        assert_eq!(u.text_tokens, 2);
+        assert_eq!(u.audio_samples, 5);
+        assert_eq!(u.image_frames, 1);
+    }
+}

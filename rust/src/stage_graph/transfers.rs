@@ -29,6 +29,10 @@ pub struct ReqMeta {
     /// the Thinker submission downstream of a standalone encoder stage).
     pub prompt_tokens: Vec<u32>,
     pub max_text_tokens: usize,
+    /// Admission priority rank ([`crate::serving::Priority::rank`]),
+    /// consulted by stage loops when enqueuing into the per-stage
+    /// scheduler.
+    pub priority: u8,
 }
 
 /// Shared request-metadata table (the paper's "predefined dictionary for
@@ -409,7 +413,8 @@ mod tests {
         reqs.lock().unwrap().insert(
             1,
             ReqMeta { seed: 7, max_audio_tokens: 40, diffusion_steps: 6, ignore_eos: true,
-                      prompt_tokens: vec![1, 5], max_text_tokens: 12 },
+                      prompt_tokens: vec![1, 5], max_text_tokens: 12,
+                      priority: crate::scheduler::PRIORITY_NORMAL },
         );
         TransferCtx { reqs, chunk_frames: chunk, cond_tokens_dim: ctd }
     }

@@ -1,0 +1,279 @@
+//! End-to-end cancellation acceptance tests (ISSUE 5).
+//!
+//! Engine level (needs compiled artifacts; skipped in CI containers
+//! without JAX): requests cancelled at randomized points — queued,
+//! mid-prefill, mid-decode, and around a prefill→decode KV handoff —
+//! must always leave `BlockManager::check_invariants` green, release
+//! every KV block, and emit no further items.  Session level: cancelled
+//! requests resolve with `Done { cancelled: true }`, per-stage queues
+//! drain, and the pipeline keeps serving afterwards.
+
+use std::time::Duration;
+
+use omni_serve::config::{presets, StageRole};
+use omni_serve::engine::ar::{token_job, ArEngine, ArEngineOptions};
+use omni_serve::engine::SamplingParams;
+use omni_serve::kv_transfer::{KvHandoff, KV_TENSOR};
+use omni_serve::orchestrator::{Orchestrator, RunOptions};
+use omni_serve::runtime::Artifacts;
+use omni_serve::serving::{
+    OmniRequest, OutputDelta, ServingSession, SessionOptions, StreamRecv,
+};
+use omni_serve::stage_graph::transfers::Registry;
+use omni_serve::tokenizer::BOS_ID;
+use omni_serve::trace::datasets;
+use omni_serve::util::Prng;
+
+fn artifacts() -> Option<Artifacts> {
+    let dir = Artifacts::default_dir();
+    if dir.join("manifest.json").exists() {
+        Some(Artifacts::load(&dir).unwrap())
+    } else {
+        eprintln!("skipping: run `make artifacts`");
+        None
+    }
+}
+
+fn sampling(n: usize, seed: u64) -> SamplingParams {
+    SamplingParams { max_new_tokens: n, temperature: 0.0, top_k: 0, ignore_eos: true, seed }
+}
+
+// -------------------------------------------------------------------------
+// Engine level: randomized cancel points against the real AR engine.
+// -------------------------------------------------------------------------
+
+#[test]
+fn cancel_at_randomized_points_preserves_kv_invariants() {
+    let Some(art) = artifacts() else { return };
+    let mut rng = Prng::new(0xCA9CE1);
+    for trial in 0..6u64 {
+        let mut eng = ArEngine::new(
+            &art,
+            "mimo",
+            ArEngineOptions { max_batch: 2, stream_chunk: 4, ..Default::default() },
+        )
+        .unwrap();
+        let n_blocks = eng.block_manager().n_blocks();
+        let n_reqs = rng.range(3, 5) as u64;
+        for rid in 0..n_reqs {
+            let len = rng.range(2, 40);
+            let mut prompt = vec![BOS_ID];
+            prompt.extend((0..len).map(|i| (i % 50 + 3) as u32));
+            eng.submit(token_job(rid, &prompt, sampling(rng.range(4, 16), trial ^ rid)));
+        }
+        // Cancel each victim after a random number of engine steps: 0 =
+        // still queued, small = mid-prefill (long prompts span several
+        // chunks at max_batch 2), larger = mid-decode.
+        let mut cancel_at: Vec<(u64, usize)> = Vec::new();
+        for rid in 0..n_reqs {
+            if rng.bool(0.7) {
+                cancel_at.push((rid, rng.range(0, 12)));
+            }
+        }
+        let mut cancelled: Vec<u64> = vec![];
+        let mut steps = 0usize;
+        loop {
+            for &(rid, at) in &cancel_at {
+                if at == steps {
+                    eng.cancel(rid);
+                    cancelled.push(rid);
+                    eng.block_manager().check_invariants().unwrap();
+                }
+            }
+            cancel_at.retain(|&(rid, _)| !cancelled.contains(&rid));
+            if eng.idle() {
+                break;
+            }
+            let items = eng.step().unwrap();
+            steps += 1;
+            for it in &items {
+                assert!(
+                    !cancelled.contains(&it.req_id),
+                    "trial {trial}: cancelled request {} emitted an item after abort",
+                    it.req_id
+                );
+            }
+            eng.block_manager().check_invariants().unwrap();
+            assert!(steps < 10_000, "trial {trial}: engine failed to drain");
+        }
+        // Every sequence — completed or cancelled — returned its blocks.
+        assert_eq!(
+            eng.block_manager().free_blocks(),
+            n_blocks,
+            "trial {trial}: KV blocks leaked (cancelled: {cancelled:?})"
+        );
+        eng.block_manager().check_invariants().unwrap();
+    }
+}
+
+#[test]
+fn cancel_around_a_kv_handoff_preserves_invariants() {
+    let Some(art) = artifacts() else { return };
+    let prompt: Vec<u32> = {
+        let mut p = vec![BOS_ID];
+        p.extend((0..21).map(|i| (i * 3 % 40 + 2) as u32));
+        p
+    };
+    // Prefill-role engine: export releases the exporter's blocks.
+    let mut pre = ArEngine::new(
+        &art,
+        "mimo",
+        ArEngineOptions { max_batch: 2, stream_chunk: 0, role: StageRole::Prefill, ..Default::default() },
+    )
+    .unwrap();
+    let pre_blocks = pre.block_manager().n_blocks();
+    pre.submit(token_job(7, &prompt, sampling(12, 3)));
+    let items = pre.run_to_completion().unwrap();
+    assert_eq!(pre.block_manager().free_blocks(), pre_blocks, "export must free the prefill pool");
+    let h = KvHandoff::from_tensor(items[0].tensor(KV_TENSOR).unwrap()).unwrap();
+
+    let mk_decode = || {
+        ArEngine::new(
+            &art,
+            "mimo",
+            ArEngineOptions { max_batch: 2, stream_chunk: 0, role: StageRole::Decode, ..Default::default() },
+        )
+        .unwrap()
+    };
+    // (a) Cancelled while the exported handoff waits, pre-import: the
+    // waiting sequence holds no blocks yet.
+    let mut dec = mk_decode();
+    let dec_blocks = dec.block_manager().n_blocks();
+    dec.submit_handoff(h.clone()).unwrap();
+    assert!(dec.cancel(7), "queued handoff must be cancellable");
+    assert!(dec.idle());
+    assert_eq!(dec.block_manager().free_blocks(), dec_blocks);
+    dec.block_manager().check_invariants().unwrap();
+
+    // (b) Cancelled mid-decode, post-import: the imported blocks (and
+    // the appended decode rows) are all released.
+    let mut dec = mk_decode();
+    dec.submit_handoff(h.clone()).unwrap();
+    for _ in 0..3 {
+        dec.step().unwrap();
+    }
+    assert!(dec.stats.kv_imports >= 1, "import must have happened before the cancel");
+    assert!(dec.cancel(7));
+    assert!(dec.idle());
+    assert_eq!(dec.block_manager().free_blocks(), dec_blocks);
+    dec.block_manager().check_invariants().unwrap();
+
+    // (c) The engine still serves the same handoff cleanly afterwards.
+    dec.submit_handoff(h).unwrap();
+    let items = dec.run_to_completion().unwrap();
+    assert!(items.iter().any(|i| i.finished && i.req_id == 7));
+    assert_eq!(dec.block_manager().free_blocks(), dec_blocks);
+    dec.block_manager().check_invariants().unwrap();
+}
+
+// -------------------------------------------------------------------------
+// Session level: streams resolve with Done{cancelled}, queues drain,
+// the pipeline stays healthy.
+// -------------------------------------------------------------------------
+
+fn session() -> Option<ServingSession> {
+    let art = artifacts()?;
+    let orch = Orchestrator::new(
+        presets::mimo_audio(1),
+        std::sync::Arc::new(art),
+        Registry::builtin(),
+        RunOptions::default(),
+    )
+    .unwrap();
+    Some(ServingSession::start(&orch, SessionOptions::default()).unwrap())
+}
+
+fn pump(rs: &mut omni_serve::serving::ResponseStream) -> OutputDelta {
+    loop {
+        match rs.next_timeout(Duration::from_secs(30)) {
+            StreamRecv::Delta(d) => return d,
+            StreamRecv::Timeout => panic!("stream starved"),
+            StreamRecv::Closed => panic!("stream closed early"),
+        }
+    }
+}
+
+#[test]
+fn cancelled_requests_resolve_and_queues_drain() {
+    let Some(session) = session() else { return };
+    let wl = datasets::seedtts(11, 4, 0.0);
+
+    // Victim A: cancelled while (most likely) still queued/prefilling.
+    let mut a = session
+        .submit_request(OmniRequest::from(wl.requests[0].clone()).streaming(true))
+        .unwrap();
+    assert!(a.cancel(), "first cancel claims the request");
+    assert!(!a.cancel(), "second cancel is a no-op");
+
+    // Victim B: cancelled mid-flight, after its first delta arrived.
+    // (MiMo generates audio straight from the backbone, whose budget is
+    // max_text_tokens — long enough to still be running when we cancel.)
+    let mut big = wl.requests[1].clone();
+    big.max_text_tokens = 512;
+    big.max_audio_tokens = 512;
+    let mut b = session.submit_request(OmniRequest::from(big).streaming(true)).unwrap();
+    loop {
+        match pump(&mut b) {
+            OutputDelta::Done { .. } => panic!("victim completed before the cancel"),
+            OutputDelta::StageDone { .. } => continue,
+            _ => break, // first payload delta: request is mid-flight
+        }
+    }
+    assert!(b.cancel());
+
+    // Victim C: a deadline does the cancelling.
+    let mut slow = wl.requests[2].clone();
+    slow.max_text_tokens = 512;
+    slow.max_audio_tokens = 512;
+    let mut c = session
+        .submit_request(OmniRequest::from(slow).streaming(true).deadline_s(0.01))
+        .unwrap();
+
+    // All three resolve with Done{cancelled: true}.
+    for (label, rs) in [("a", &mut a), ("b", &mut b), ("c", &mut c)] {
+        loop {
+            match pump(rs) {
+                OutputDelta::Done { cancelled, .. } => {
+                    assert!(cancelled, "victim {label} must resolve as cancelled");
+                    break;
+                }
+                _ => continue,
+            }
+        }
+    }
+
+    // The session fully drains (inflight hits zero without the victims
+    // completing) and per-stage queues empty out.
+    assert!(session.drain(Duration::from_secs(20)), "session failed to drain after cancels");
+    let t0 = std::time::Instant::now();
+    loop {
+        let stats = session.stage_stats();
+        if stats.iter().all(|s| s.queued == 0) {
+            break;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(20), "stage queues never drained: {stats:?}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // The pipeline still completes fresh work after the cancels.
+    let mut d = session
+        .submit_request(OmniRequest::from(wl.requests[3].clone()).streaming(true))
+        .unwrap();
+    let mut audio_chunks = 0usize;
+    loop {
+        match pump(&mut d) {
+            OutputDelta::AudioChunk { .. } => audio_chunks += 1,
+            OutputDelta::Done { cancelled, usage, .. } => {
+                assert!(!cancelled);
+                assert!(usage.audio_samples > 0, "completed TTS produced no audio");
+                break;
+            }
+            _ => {}
+        }
+    }
+    assert!(audio_chunks >= 1, "streaming request must deliver audio mid-flight");
+
+    let summary = session.shutdown(Some("backbone")).unwrap();
+    assert_eq!(summary.report.completed, 1, "only the healthy request completed");
+    assert_eq!(summary.report.cancelled, 3, "all three victims recorded as cancelled");
+}

@@ -52,6 +52,25 @@ fn loopback_ping_generate_stats_shutdown() {
     let v = send(&mut c, &mut reader, r#"{"op": "ping"}"#);
     assert_eq!(v.get("ok").as_bool(), Some(true));
 
+    // 1b. malformed / unknown-op lines get a structured error frame on
+    // the SAME still-alive connection — never a silent drop or a kill.
+    let v = send(&mut c, &mut reader, r#"{"op": "generate", BROKEN"#);
+    assert!(
+        v.get("error").as_str().unwrap_or_default().contains("bad request JSON"),
+        "{v:?}"
+    );
+    let v = send(&mut c, &mut reader, r#"{"op": "transmogrify"}"#);
+    assert!(
+        v.get("error").as_str().unwrap_or_default().contains("unknown op"),
+        "{v:?}"
+    );
+    let v = send(&mut c, &mut reader, r#"{"op": "cancel"}"#);
+    assert!(!v.get("error").is_null(), "cancel without req_id errors: {v:?}");
+    // Cancel before any session exists: structured no-op, not an error.
+    let v = send(&mut c, &mut reader, r#"{"op": "cancel", "req_id": 999}"#);
+    assert_eq!(v.get("ok").as_bool(), Some(true));
+    assert_eq!(v.get("cancelled").as_bool(), Some(false));
+
     // 2. stats before any generate: static plan, not live.
     let v = send(&mut c, &mut reader, r#"{"op": "stats"}"#);
     assert_eq!(v.get("live").as_bool(), Some(false));
@@ -89,5 +108,79 @@ fn loopback_ping_generate_stats_shutdown() {
 
     drop(c);
     drop(reader);
+    h.join().unwrap().unwrap();
+}
+
+/// Protocol v2 over real TCP: a streaming `generate` on one connection
+/// (accepted header + delta frames), cancelled from a SECOND connection,
+/// resolves with `{"event": "done", "cancelled": true}`.  Needs
+/// artifacts (skipped otherwise, like the session tests).
+#[test]
+fn streaming_generate_with_cross_connection_cancel() {
+    let dir = Artifacts::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let artifacts = Arc::new(Artifacts::load(&dir).unwrap());
+    let server = Server::bind(
+        "127.0.0.1:0",
+        presets::mimo_audio(1),
+        artifacts,
+        ServeOptions::default(),
+    )
+    .unwrap();
+    let addr = server.addr();
+    let h = std::thread::spawn(move || server.serve_concurrent(2));
+
+    // Connection A: long streaming request (MiMo's generation budget is
+    // max_text_tokens — 512 keeps it running while we cancel).
+    let mut a = TcpStream::connect(&addr).unwrap();
+    let mut ra = BufReader::new(a.try_clone().unwrap());
+    let accepted = send(
+        &mut a,
+        &mut ra,
+        r#"{"op": "generate", "stream": true, "prompt": "say something long",
+            "max_text_tokens": 512, "max_audio_tokens": 512}"#
+            .replace('\n', " ")
+            .as_str(),
+    );
+    assert_eq!(accepted.get("event").as_str(), Some("accepted"), "{accepted:?}");
+    let req_id = accepted.get("req_id").as_usize().unwrap();
+
+    // First delta frame proves mid-flight streaming (audio chunks from
+    // the patch decoder arrive before the request is anywhere near done).
+    let mut line = String::new();
+    ra.read_line(&mut line).unwrap();
+    let first = json::parse(&line).unwrap();
+    assert_eq!(first.get("event").as_str(), Some("delta"), "{first:?}");
+
+    // Connection B: cancel A's request.
+    let mut b = TcpStream::connect(&addr).unwrap();
+    let mut rb = BufReader::new(b.try_clone().unwrap());
+    let v = send(&mut b, &mut rb, &format!(r#"{{"op": "cancel", "req_id": {req_id}}}"#));
+    assert_eq!(v.get("ok").as_bool(), Some(true));
+    assert_eq!(v.get("cancelled").as_bool(), Some(true), "{v:?}");
+
+    // A's stream terminates with done{cancelled: true}.
+    loop {
+        let mut line = String::new();
+        ra.read_line(&mut line).unwrap();
+        let v = json::parse(&line).unwrap_or_else(|e| panic!("bad frame `{line}`: {e}"));
+        match v.get("event").as_str() {
+            Some("delta") => continue,
+            Some("done") => {
+                assert_eq!(v.get("req_id").as_usize(), Some(req_id));
+                assert_eq!(v.get("cancelled").as_bool(), Some(true), "{v:?}");
+                break;
+            }
+            other => panic!("unexpected frame {other:?}: {v:?}"),
+        }
+    }
+
+    // Clean teardown through B, then close both connections.
+    let v = send(&mut b, &mut rb, r#"{"op": "shutdown"}"#);
+    assert_eq!(v.get("ok").as_bool(), Some(true));
+    drop((a, ra, b, rb));
     h.join().unwrap().unwrap();
 }

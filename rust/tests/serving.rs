@@ -8,7 +8,9 @@ use std::time::Duration;
 use omni_serve::config::presets;
 use omni_serve::orchestrator::{Orchestrator, RunOptions};
 use omni_serve::scheduler::sim::elastic_comparison;
-use omni_serve::serving::{ServingSession, SessionOptions, WaitResult};
+use omni_serve::serving::{
+    OmniRequest, OutputDelta, ServingSession, SessionOptions, StreamRecv, WaitResult,
+};
 use omni_serve::stage_graph::transfers::Registry;
 use omni_serve::trace::datasets;
 
@@ -110,6 +112,70 @@ fn serving_session_submits_continuously_and_drains() {
     let summary = session.shutdown(Some("backbone")).unwrap();
     assert_eq!(summary.report.completed, 3);
     assert!(summary.report.mean_jct() > 0.0);
+}
+
+#[test]
+fn streaming_request_delivers_typed_deltas_before_done() {
+    let Some(artifacts) = artifacts() else { return };
+    let orch = Orchestrator::new(
+        presets::mimo_audio(1),
+        artifacts,
+        Registry::builtin(),
+        RunOptions::default(),
+    )
+    .unwrap();
+    let session = ServingSession::start(&orch, SessionOptions::default()).unwrap();
+    let wl = datasets::seedtts(5, 2, 0.0);
+    let mut rs = session
+        .submit_request(OmniRequest::from(wl.requests[0].clone()).streaming(true))
+        .unwrap();
+    let mut audio_before_done = 0usize;
+    let mut stage_dones = 0usize;
+    let (mut done_t, mut first_audio_t) = (f64::MAX, f64::MAX);
+    loop {
+        match rs.next_timeout(Duration::from_secs(30)) {
+            StreamRecv::Delta(OutputDelta::AudioChunk { wave, t }) => {
+                assert!(!wave.is_empty());
+                audio_before_done += 1;
+                first_audio_t = first_audio_t.min(t);
+            }
+            StreamRecv::Delta(OutputDelta::StageDone { .. }) => stage_dones += 1,
+            StreamRecv::Delta(OutputDelta::Done { t, jct_s, cancelled, usage }) => {
+                assert!(!cancelled);
+                assert!(jct_s > 0.0);
+                assert_eq!(usage.deltas, audio_before_done);
+                assert!(usage.audio_samples > 0);
+                done_t = t;
+                break;
+            }
+            StreamRecv::Delta(_) => {}
+            StreamRecv::Timeout => panic!("stream starved"),
+            StreamRecv::Closed => panic!("stream closed before Done"),
+        }
+    }
+    assert!(rs.is_done());
+    assert!(audio_before_done >= 1, "no mid-flight audio delta arrived");
+    assert!(first_audio_t < done_t, "first AudioChunk must precede Done");
+    assert!(stage_dones >= 1, "backbone's StageDone marker must stream");
+    // Non-streaming requests still resolve through the shim unchanged,
+    // and the report now carries client-boundary TPOT samples.
+    let h = session.submit(wl.requests[1].clone()).unwrap();
+    loop {
+        match h.wait_timeout(Duration::from_millis(500)) {
+            WaitResult::Done(c) => {
+                assert!(c.completed_t >= h.submitted_t());
+                break;
+            }
+            WaitResult::Timeout => assert!(!session.failed()),
+            WaitResult::Closed => panic!("collector gone"),
+        }
+    }
+    let summary = session.shutdown(Some("backbone")).unwrap();
+    assert_eq!(summary.report.completed, 2);
+    assert_eq!(summary.report.cancelled, 0);
+    if audio_before_done >= 2 {
+        assert!(!summary.report.tpot.is_empty(), "inter-delta gaps must be recorded");
+    }
 }
 
 #[test]
