@@ -147,7 +147,7 @@ pub fn run_monolithic(
     // t=0, so serial processing makes later requests' JCT include the
     // time spent on earlier ones.
     for req in &workload.requests {
-        recorder.emit(Event::Arrived { req: req.id, t: 0.0 });
+        recorder.emit(Event::Arrived { req: req.id, t: 0.0, deadline: None });
     }
 
     // Strictly serial: one request at a time through all stages.

@@ -23,6 +23,7 @@ pub const BOOL_FLAGS: &[&str] = &[
     "help",
     "quiet",
     "autoscale",
+    "admission",
 ];
 
 impl Args {
@@ -126,6 +127,14 @@ mod tests {
         let b = parse("serve --autoscale 8090");
         assert!(b.flag_bool("autoscale"));
         assert_eq!(b.positional, vec!["8090"]);
+    }
+
+    #[test]
+    fn admission_is_a_bool_flag_with_numeric_companions() {
+        let a = parse("serve --admission --slack 1.5 --shed-horizon 2.0");
+        assert!(a.flag_bool("admission"));
+        assert_eq!(a.flag_f64("slack", 1.0).unwrap(), 1.5);
+        assert_eq!(a.flag_f64("shed-horizon", 4.0).unwrap(), 2.0);
     }
 
     #[test]

@@ -6,8 +6,8 @@ use std::path::Path;
 use anyhow::{Context, Result};
 
 use super::{
-    AutoscalerConfig, ConnectorKind, DiffusionParams, EdgeConfig, PipelineConfig, RoutingKind,
-    SchedParams, SchedPolicyKind, StageConfig, StageKind, StageRole,
+    AdmissionConfig, AutoscalerConfig, ConnectorKind, DiffusionParams, EdgeConfig, PipelineConfig,
+    RoutingKind, SchedParams, SchedPolicyKind, StageConfig, StageKind, StageRole,
 };
 use crate::jobj;
 use crate::json::{self, Value};
@@ -104,6 +104,37 @@ pub fn from_value(v: &Value) -> Result<PipelineConfig> {
             cooldown_s: av.get("cooldown_s").as_f64().unwrap_or(d.cooldown_s),
         })
     };
+    let adv = v.get("admission");
+    let admission = if adv.is_null() {
+        None
+    } else {
+        // Same guard as the autoscaler: `"admission": true` is a typo,
+        // not "enable with defaults".
+        anyhow::ensure!(adv.as_obj().is_some(), "`admission` must be an object");
+        let d = AdmissionConfig::default();
+        let mut tenant_weights = Vec::new();
+        let tw = adv.get("tenant_weights");
+        if !tw.is_null() {
+            let obj = tw
+                .as_obj()
+                .ok_or_else(|| anyhow::anyhow!("`tenant_weights` must be an object"))?;
+            for (name, wv) in obj {
+                let w = wv.as_f64().ok_or_else(|| {
+                    anyhow::anyhow!("tenant `{name}` weight must be a number")
+                })?;
+                tenant_weights.push((name.clone(), w));
+            }
+            // BTreeMap iteration is sorted, but keep it explicit: tenant
+            // ids are assigned by position (see serving::admission).
+            tenant_weights.sort_by(|a, b| a.0.cmp(&b.0));
+        }
+        Some(AdmissionConfig {
+            slack: adv.get("slack").as_f64().unwrap_or(d.slack),
+            shed_horizon_s: adv.get("shed_horizon_s").as_f64().unwrap_or(d.shed_horizon_s),
+            retry_after_s: adv.get("retry_after_s").as_f64().unwrap_or(d.retry_after_s),
+            tenant_weights,
+        })
+    };
     let cfg = PipelineConfig {
         name: v.req_str("name")?.to_string(),
         stages,
@@ -114,6 +145,7 @@ pub fn from_value(v: &Value) -> Result<PipelineConfig> {
             .as_usize()
             .unwrap_or(crate::device::DEFAULT_DEVICE_BYTES),
         autoscaler,
+        admission,
     };
     cfg.validate()?;
     Ok(cfg)
@@ -182,6 +214,23 @@ pub fn to_value(p: &PipelineConfig) -> Value {
                     "scale_down_queue" => a.scale_down_queue,
                     "interval_s" => a.interval_s,
                     "cooldown_s" => a.cooldown_s,
+                },
+            );
+        }
+    }
+    if let Some(a) = &p.admission {
+        if let Value::Obj(m) = &mut out {
+            let mut weights = std::collections::BTreeMap::new();
+            for (name, w) in &a.tenant_weights {
+                weights.insert(name.clone(), Value::Num(*w));
+            }
+            m.insert(
+                "admission".to_string(),
+                jobj! {
+                    "slack" => a.slack,
+                    "shed_horizon_s" => a.shed_horizon_s,
+                    "retry_after_s" => a.retry_after_s,
+                    "tenant_weights" => Value::Obj(weights),
                 },
             );
         }
@@ -320,6 +369,50 @@ mod tests {
             r#"{"name": "x", "n_devices": 1, "stages": [
                 {"name": "a", "model": "mimo", "kind": "ar", "devices": [0]}
             ], "autoscaler": true}"#,
+        )
+        .unwrap();
+        assert!(from_value(&typo).is_err());
+    }
+
+    #[test]
+    fn admission_block_roundtrips_and_defaults() {
+        let mut p = presets::qwen3_omni();
+        p.admission = Some(AdmissionConfig {
+            slack: 1.5,
+            shed_horizon_s: 8.0,
+            retry_after_s: 1.0,
+            tenant_weights: vec![("acme".to_string(), 4.0), ("zed".to_string(), 1.0)],
+        });
+        let s = to_json_string(&p);
+        let q = from_value(&json::parse(&s).unwrap()).unwrap();
+        assert_eq!(q.admission, p.admission);
+        // Partial block: unspecified fields take the defaults.
+        let v = json::parse(
+            r#"{"name": "x", "n_devices": 1, "stages": [
+                {"name": "a", "model": "mimo", "kind": "ar", "devices": [0]}
+            ], "admission": {"slack": 2.0}}"#,
+        )
+        .unwrap();
+        let q = from_value(&v).unwrap();
+        let a = q.admission.unwrap();
+        assert_eq!(a.slack, 2.0);
+        assert_eq!(a.shed_horizon_s, AdmissionConfig::default().shed_horizon_s);
+        assert!(a.tenant_weights.is_empty());
+        // No block at all: None (admit everything).
+        assert!(presets::qwen3_omni().admission.is_none());
+        // Invalid block rejected at load time.
+        let bad = json::parse(
+            r#"{"name": "x", "n_devices": 1, "stages": [
+                {"name": "a", "model": "mimo", "kind": "ar", "devices": [0]}
+            ], "admission": {"slack": 0.0}}"#,
+        )
+        .unwrap();
+        assert!(from_value(&bad).is_err());
+        // A non-object value is a config mistake, not "all defaults".
+        let typo = json::parse(
+            r#"{"name": "x", "n_devices": 1, "stages": [
+                {"name": "a", "model": "mimo", "kind": "ar", "devices": [0]}
+            ], "admission": true}"#,
         )
         .unwrap();
         assert!(from_value(&typo).is_err());

@@ -451,6 +451,74 @@ impl AutoscalerConfig {
     }
 }
 
+/// SLO-aware overload control at the serving boundary (see
+/// [`crate::serving::admission`]): per-request cost estimation at submit
+/// time, early rejection of requests whose deadline is unmeetable, and
+/// emergency shedding of queued (never in-flight) work when the
+/// projected backlog exceeds the horizon.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdmissionConfig {
+    /// Safety factor on the projected completion time before comparing
+    /// against the deadline: reject when `projection * slack` exceeds
+    /// it.  > 1.0 rejects earlier (conservative), < 1.0 admits
+    /// optimistically.
+    pub slack: f64,
+    /// Projected-backlog horizon in seconds: when the queued (not yet
+    /// started) work ahead of the entry stage projects past this, the
+    /// collector sheds queued requests oldest-deadline-first until the
+    /// projection fits again.
+    pub shed_horizon_s: f64,
+    /// `retry_after` hint carried in the structured `Rejected` event.
+    pub retry_after_s: f64,
+    /// Per-tenant weighted-fair-queueing weights, applied within each
+    /// priority class of every stage's admission queue.  Tenants not
+    /// listed (and requests with no tenant) weigh 1.0.
+    pub tenant_weights: Vec<(String, f64)>,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        Self {
+            slack: 1.0,
+            shed_horizon_s: 4.0,
+            retry_after_s: 0.5,
+            tenant_weights: Vec::new(),
+        }
+    }
+}
+
+impl AdmissionConfig {
+    pub fn validate(&self) -> Result<()> {
+        if !(self.slack.is_finite() && self.slack > 0.0) {
+            bail!("admission slack must be a positive number, got {}", self.slack);
+        }
+        if !(self.shed_horizon_s.is_finite() && self.shed_horizon_s > 0.0) {
+            bail!("admission shed_horizon_s must be > 0, got {}", self.shed_horizon_s);
+        }
+        if !(self.retry_after_s.is_finite() && self.retry_after_s >= 0.0) {
+            bail!("admission retry_after_s must be >= 0, got {}", self.retry_after_s);
+        }
+        for (name, w) in &self.tenant_weights {
+            if name.is_empty() {
+                bail!("admission tenant_weights entries need a non-empty tenant name");
+            }
+            if !(w.is_finite() && *w > 0.0) {
+                bail!("admission tenant `{name}` weight must be > 0, got {w}");
+            }
+        }
+        Ok(())
+    }
+
+    /// Weight of a tenant (1.0 when unlisted / anonymous).
+    pub fn tenant_weight(&self, tenant: &str) -> f64 {
+        self.tenant_weights
+            .iter()
+            .find(|(n, _)| n == tenant)
+            .map(|(_, w)| *w)
+            .unwrap_or(1.0)
+    }
+}
+
 /// An edge of the stage graph: a named transfer function plus transport.
 #[derive(Debug, Clone)]
 pub struct EdgeConfig {
@@ -477,6 +545,9 @@ pub struct PipelineConfig {
     /// Elastic autoscaler settings; `None` = static replica counts (the
     /// pre-serving-runtime behaviour, and the default for every preset).
     pub autoscaler: Option<AutoscalerConfig>,
+    /// SLO-aware admission control + shedding; `None` = queue everything
+    /// (deadlines still cancel late, but nothing is rejected early).
+    pub admission: Option<AdmissionConfig>,
 }
 
 impl PipelineConfig {
@@ -522,6 +593,9 @@ impl PipelineConfig {
             }
         }
         if let Some(a) = &self.autoscaler {
+            a.validate()?;
+        }
+        if let Some(a) = &self.admission {
             a.validate()?;
         }
         for e in &self.edges {
@@ -581,6 +655,7 @@ mod tests {
             n_devices: 2,
             device_bytes: 1 << 20,
             autoscaler: None,
+            admission: None,
         }
     }
 
@@ -696,6 +771,35 @@ mod tests {
             ..Default::default()
         });
         assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn admission_config_validates() {
+        let mut p = two_stage();
+        p.admission = Some(AdmissionConfig::default());
+        p.validate().unwrap();
+        p.admission = Some(AdmissionConfig { slack: 0.0, ..Default::default() });
+        assert!(p.validate().is_err());
+        p.admission = Some(AdmissionConfig { shed_horizon_s: -1.0, ..Default::default() });
+        assert!(p.validate().is_err());
+        p.admission = Some(AdmissionConfig { retry_after_s: f64::NAN, ..Default::default() });
+        assert!(p.validate().is_err());
+        p.admission = Some(AdmissionConfig {
+            tenant_weights: vec![("".into(), 1.0)],
+            ..Default::default()
+        });
+        assert!(p.validate().is_err());
+        p.admission = Some(AdmissionConfig {
+            tenant_weights: vec![("acme".into(), 0.0)],
+            ..Default::default()
+        });
+        assert!(p.validate().is_err());
+        let a = AdmissionConfig {
+            tenant_weights: vec![("acme".into(), 4.0)],
+            ..Default::default()
+        };
+        assert_eq!(a.tenant_weight("acme"), 4.0);
+        assert_eq!(a.tenant_weight("unlisted"), 1.0);
     }
 
     #[test]

@@ -53,6 +53,7 @@ pub fn qwen25_omni() -> PipelineConfig {
         n_devices: 2,
         device_bytes: crate::device::DEFAULT_DEVICE_BYTES,
         autoscaler: None,
+        admission: None,
     }
 }
 
@@ -81,6 +82,7 @@ pub fn qwen3_omni() -> PipelineConfig {
         n_devices: 2,
         device_bytes: crate::device::DEFAULT_DEVICE_BYTES,
         autoscaler: None,
+        admission: None,
     }
 }
 
@@ -166,6 +168,7 @@ pub fn bagel(i2i: bool) -> PipelineConfig {
         n_devices: 1,
         device_bytes: crate::device::DEFAULT_DEVICE_BYTES,
         autoscaler: None,
+        admission: None,
     }
 }
 
@@ -187,6 +190,7 @@ pub fn mimo_audio(multi_step: usize) -> PipelineConfig {
         n_devices: 1,
         device_bytes: crate::device::DEFAULT_DEVICE_BYTES,
         autoscaler: None,
+        admission: None,
     }
 }
 
@@ -207,6 +211,7 @@ pub fn dit_single(model: &str, steps: usize, stepcache: f32) -> PipelineConfig {
         n_devices: 1,
         device_bytes: crate::device::DEFAULT_DEVICE_BYTES,
         autoscaler: None,
+        admission: None,
     }
 }
 

@@ -17,16 +17,25 @@ omni-serve — fully disaggregated serving for any-to-any multimodal models
 USAGE:
   omni-serve serve --pipeline <name> [--addr 127.0.0.1:8090] [--port 8090]
                    [--autoscale] [--gpu-budget N] [--config file.json]
+                   [--admission] [--slack X] [--shed-horizon S] [--retry-after S]
+                   (--admission turns SLO-aware overload control on: requests
+                    whose deadline is unmeetable get a structured rejection at
+                    submit time, and queued work is shed earliest-deadline-first
+                    when the backlog projects past the horizon)
   omni-serve run   --pipeline <name> --dataset <librispeech|food101|ucf101|seedtts|vbench|bursty|prefill-heavy>
                    [--n 8] [--rate 0] [--seed 1] [--no-streaming] [--baseline]
                    [--deadline S]   (cancel each request end-to-end S seconds
                                      after submission; the summary reports
                                      cancelled counts + freed KV)
-  omni-serve bench [--trace bursty|librispeech|seedtts|prefill-heavy] [--n 48] [--budget 4]
+  omni-serve bench [--trace bursty|librispeech|seedtts|prefill-heavy|overload-storm]
+                   [--n 48] [--budget 4] [--seeds 32]
                    (artifact-free: autoscaled vs static replica splits on the AR-stage
                     model; `prefill-heavy` runs the P/D-disaggregation comparison —
                     fused vs split prefill/decode pools — and exits non-zero unless
-                    the split wins, which is what the CI smoke step checks)
+                    the split wins; `overload-storm` runs admission+shedding vs
+                    FIFO-with-deadlines at 2x/3x/5x offered load and exits non-zero
+                    unless admission wins on goodput for every seed — both are CI
+                    smoke gates)
   omni-serve graph [--pipeline <name>] [--list]
   omni-serve help
 
@@ -77,11 +86,26 @@ fn real_main() -> Result<()> {
             } else {
                 None
             };
+            // `--admission` (or any of its knobs) turns SLO-aware
+            // overload control on, defaulting from the config's
+            // `admission` block; knob flags override individually.
+            let knobs =
+                ["slack", "shed-horizon", "retry-after"].iter().any(|k| args.flag(k).is_some());
+            let admission = if args.flag_bool("admission") || knobs {
+                let mut a = config.admission.clone().unwrap_or_default();
+                a.slack = args.flag_f64("slack", a.slack)?;
+                a.shed_horizon_s = args.flag_f64("shed-horizon", a.shed_horizon_s)?;
+                a.retry_after_s = args.flag_f64("retry-after", a.retry_after_s)?;
+                a.validate()?;
+                Some(a)
+            } else {
+                None
+            };
             let server = omni_serve::server::Server::bind(
                 &addr,
                 config,
                 artifacts,
-                omni_serve::server::ServeOptions { autoscaler },
+                omni_serve::server::ServeOptions { autoscaler, admission },
             )?;
             server.serve()
         }
@@ -188,6 +212,41 @@ fn real_main() -> Result<()> {
             let seed = args.flag_usize("seed", 1)? as u64;
             let budget = args.flag_usize("budget", 4)?;
             let trace = args.flag("trace").unwrap_or("bursty");
+            if trace == "overload-storm" {
+                // CI smoke contract: SLO-aware admission + shedding must
+                // beat FIFO-with-deadlines on goodput at EVERY overload
+                // multiple for EVERY seed, or this command exits non-zero.
+                let lanes = budget.max(1);
+                let seeds = args.flag_usize("seeds", 32)? as u64;
+                println!(
+                    "trace=overload-storm-sim lanes={lanes} seeds={seeds} \
+                     (admission+shedding vs FIFO-with-deadlines)"
+                );
+                for mult in [2.0, 3.0, 5.0] {
+                    let mut worst = f64::INFINITY;
+                    let mut sum = 0.0;
+                    for s in 1..=seeds {
+                        let c = omni_serve::scheduler::sim::overload_comparison(s, lanes, mult);
+                        let m = c.margin();
+                        sum += m;
+                        worst = worst.min(m);
+                        anyhow::ensure!(
+                            m > 0.0,
+                            "admission lost to FIFO at {mult}x load, seed {s}: \
+                             goodput {:.3} vs {:.3}",
+                            c.admission.goodput(),
+                            c.fifo.goodput(),
+                        );
+                    }
+                    println!(
+                        "  {mult:.0}x offered load: goodput margin mean {:+.3} worst {:+.3}",
+                        sum / seeds as f64,
+                        worst,
+                    );
+                }
+                println!("admission > fifo goodput confirmed at 2x/3x/5x over {seeds} seeds");
+                return Ok(());
+            }
             if trace == "prefill-heavy" {
                 let n = args.flag_usize("n", 64)?;
                 let wl = datasets::prefill_heavy(seed, n, 56.0);
@@ -246,7 +305,10 @@ fn real_main() -> Result<()> {
                 "librispeech" => datasets::librispeech(seed, n, 4.0),
                 "seedtts" => datasets::seedtts(seed, n, 4.0),
                 other => {
-                    bail!("unknown trace `{other}` (bursty|librispeech|seedtts|prefill-heavy)")
+                    bail!(
+                        "unknown trace `{other}` \
+                         (bursty|librispeech|seedtts|prefill-heavy|overload-storm)"
+                    )
                 }
             };
             let (statics, auto) = omni_serve::scheduler::sim::elastic_comparison(&wl, budget);
@@ -298,6 +360,19 @@ fn print_report(r: &omni_serve::metrics::RunReport) {
     } else {
         String::new()
     };
+    // Goodput only means something once requests carry deadlines or the
+    // admission controller rejected/shed some of the offered load.
+    let goodput = if r.rejected > 0 || r.offered > r.completed + r.cancelled {
+        format!(
+            " rejected={} goodput={:.3} ({}/{} in-SLO)",
+            r.rejected,
+            r.goodput(),
+            r.in_slo,
+            r.offered,
+        )
+    } else {
+        String::new()
+    };
     // TPOT is the client-boundary inter-delta latency (empty for runs
     // whose requests streamed at most one delta).
     let tpot = if r.tpot.is_empty() {
@@ -310,9 +385,10 @@ fn print_report(r: &omni_serve::metrics::RunReport) {
         )
     };
     println!(
-        "completed={}{} wall={} | JCT mean={} p50={} p99={} | TTFT mean={} | first-token mean={}{} | RTF mean={:.3}",
+        "completed={}{}{} wall={} | JCT mean={} p50={} p99={} | TTFT mean={} | first-token mean={}{} | RTF mean={:.3}",
         r.completed,
         cancelled,
+        goodput,
         fmt::dur(r.wall_s),
         fmt::dur(r.mean_jct()),
         fmt::dur(jct.p50()),

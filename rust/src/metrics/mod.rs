@@ -14,8 +14,10 @@ use crate::util::stats::Samples;
 /// Lifecycle events for one request flowing through the stage graph.
 #[derive(Debug, Clone)]
 pub enum Event {
-    /// Request entered the system (run-relative seconds).
-    Arrived { req: u64, t: f64 },
+    /// Request entered the system (run-relative seconds).  `deadline` is
+    /// the request's absolute SLO deadline, if it declared one — the
+    /// goodput accounting in [`RunReport`] judges completions against it.
+    Arrived { req: u64, t: f64, deadline: Option<f64> },
     /// Request was admitted to a stage's engine.
     StageAdmit { req: u64, stage: &'static str, t: f64 },
     /// A stage produced its first output item for this request.
@@ -39,6 +41,10 @@ pub enum Event {
     /// Terminal like `Completed`; such requests count in
     /// [`RunReport::cancelled`], never in [`RunReport::completed`].
     Cancelled { req: u64, t: f64 },
+    /// Request rejected by the admission controller (at submit time) or
+    /// shed from a queue before starting.  Terminal like `Completed` and
+    /// `Cancelled`; counts in [`RunReport::rejected`] only.
+    Rejected { req: u64, t: f64 },
     /// Scheduler occupancy sample for one engine replica of a stage
     /// (paper §3.3 batching observability): pending admission-queue
     /// depth, engine occupancy, and the in-flight token commitment at one
@@ -87,8 +93,11 @@ struct StageRec {
 #[derive(Debug, Default, Clone)]
 struct ReqRec {
     arrived: Option<f64>,
+    /// Absolute SLO deadline declared at arrival, if any.
+    deadline: Option<f64>,
     completed: Option<f64>,
     cancelled: Option<f64>,
+    rejected: Option<f64>,
     /// Earliest [`Event::FirstToken`] timestamp.
     first_token: Option<f64>,
     /// Timestamp of the last client-boundary delta ([`Event::Delta`]).
@@ -171,8 +180,10 @@ impl Recorder {
         }
         let mut m = self.inner.lock().unwrap();
         match e {
-            Event::Arrived { req, t } => {
-                m.entry(req).or_default().arrived = Some(t);
+            Event::Arrived { req, t, deadline } => {
+                let r = m.entry(req).or_default();
+                r.arrived = Some(t);
+                r.deadline = deadline;
             }
             Event::StageAdmit { req, stage, t } => {
                 m.entry(req).or_default().stages.entry(stage).or_default().admit = Some(t);
@@ -205,11 +216,26 @@ impl Recorder {
             Event::Cancelled { req, t } => {
                 m.entry(req).or_default().cancelled = Some(t);
             }
+            Event::Rejected { req, t } => {
+                m.entry(req).or_default().rejected = Some(t);
+            }
             // Handled (with an early return) above.
             Event::SchedSample { .. } | Event::SchedAdmitted { .. } | Event::Scale { .. } => {
                 unreachable!()
             }
         }
+    }
+
+    /// Whether any stage has admitted this request to an engine — the
+    /// "in-flight" predicate the shedder consults: a started request is
+    /// never sheddable, only cancellable.
+    pub fn started(&self, req: u64) -> bool {
+        self.inner
+            .lock()
+            .unwrap()
+            .get(&req)
+            .map(|r| r.stages.values().any(|s| s.admit.is_some()))
+            .unwrap_or(false)
     }
 
     /// Aggregate into a [`RunReport`].  `audio_stage` names the stage whose
@@ -224,17 +250,31 @@ impl Recorder {
         let mut per_stage: HashMap<String, StageAgg> = HashMap::new();
         let mut completed = 0usize;
         let mut cancelled = 0usize;
+        let mut rejected = 0usize;
+        let mut offered = 0usize;
+        let mut in_slo = 0usize;
 
         for rec in m.values() {
             // TPOT and the cancelled count include requests that never
             // completed — a cancelled stream's deltas were still
             // observed at the client boundary.
             tpot.extend(&rec.delta_gaps);
+            if rec.arrived.is_some() {
+                offered += 1;
+            }
             if rec.cancelled.is_some() {
                 cancelled += 1;
             }
+            if rec.rejected.is_some() {
+                rejected += 1;
+            }
             let (Some(a), Some(c)) = (rec.arrived, rec.completed) else { continue };
             completed += 1;
+            // Goodput numerator: completed within the declared SLO (a
+            // request without one completes "within SLO" trivially).
+            if rec.deadline.map_or(true, |d| c <= d) {
+                in_slo += 1;
+            }
             jct.push(c - a);
             // TTFT: first output of the LAST stage that produced anything.
             if let Some(first) = rec
@@ -285,6 +325,9 @@ impl Recorder {
             wall_s,
             completed,
             cancelled,
+            rejected,
+            offered,
+            in_slo,
             jct,
             ttft,
             first_token,
@@ -314,6 +357,15 @@ pub struct RunReport {
     /// Requests that resolved by cancellation (client/server/deadline);
     /// disjoint from [`Self::completed`].
     pub cancelled: usize,
+    /// Requests rejected at admission or shed before starting; disjoint
+    /// from both [`Self::completed`] and [`Self::cancelled`].
+    pub rejected: usize,
+    /// Every request that arrived (completed, cancelled, rejected, or
+    /// still in flight) — the goodput denominator.
+    pub offered: usize,
+    /// Completions within the declared SLO deadline (all completions for
+    /// deadline-less requests) — the goodput numerator.
+    pub in_slo: usize,
     pub jct: Samples,
     pub ttft: Samples,
     /// Time to the FIRST decode token (earliest [`Event::FirstToken`],
@@ -342,6 +394,16 @@ pub struct RunReport {
 impl RunReport {
     pub fn mean_jct(&self) -> f64 {
         self.jct.mean()
+    }
+
+    /// Goodput: the fraction of offered requests that completed within
+    /// their SLO.  The headline overload metric — rejecting or shedding
+    /// work only pays when it raises this.
+    pub fn goodput(&self) -> f64 {
+        if self.offered == 0 {
+            return 0.0;
+        }
+        self.in_slo as f64 / self.offered as f64
     }
 
     pub fn mean_rtf(&self) -> f64 {
@@ -462,7 +524,7 @@ mod tests {
     #[test]
     fn basic_lifecycle() {
         let r = Recorder::new();
-        r.emit(Event::Arrived { req: 1, t: 0.0 });
+        r.emit(Event::Arrived { req: 1, t: 0.0, deadline: None });
         r.emit(Event::StageAdmit { req: 1, stage: "thinker", t: 0.1 });
         r.emit(Event::StageFirstOutput { req: 1, stage: "thinker", t: 0.2 });
         r.emit(Event::StageDone { req: 1, stage: "thinker", t: 1.1, tokens: 10 });
@@ -487,7 +549,7 @@ mod tests {
         // first-output but NOT a token, so only the prefill stage's
         // FirstToken event counts; TTFT still follows the exit stage.
         let r = Recorder::new();
-        r.emit(Event::Arrived { req: 1, t: 0.0 });
+        r.emit(Event::Arrived { req: 1, t: 0.0, deadline: None });
         r.emit(Event::StageFirstOutput { req: 1, stage: "encoder", t: 0.02 });
         r.emit(Event::StageAdmit { req: 1, stage: "prefill", t: 0.05 });
         r.emit(Event::StageFirstOutput { req: 1, stage: "prefill", t: 0.1 });
@@ -528,14 +590,14 @@ mod tests {
     #[test]
     fn delta_gaps_aggregate_into_tpot() {
         let r = Recorder::new();
-        r.emit(Event::Arrived { req: 1, t: 0.0 });
+        r.emit(Event::Arrived { req: 1, t: 0.0, deadline: None });
         for t in [0.1, 0.2, 0.4, 0.8] {
             r.emit(Event::Delta { req: 1, t });
         }
         r.emit(Event::Completed { req: 1, t: 0.8 });
         // A second request's gaps pool into the same TPOT distribution
         // even though it was cancelled before completing.
-        r.emit(Event::Arrived { req: 2, t: 0.0 });
+        r.emit(Event::Arrived { req: 2, t: 0.0, deadline: None });
         r.emit(Event::Delta { req: 2, t: 0.5 });
         r.emit(Event::Delta { req: 2, t: 1.5 });
         r.emit(Event::Cancelled { req: 2, t: 2.0 });
@@ -552,7 +614,7 @@ mod tests {
     #[test]
     fn cancelled_requests_never_count_as_completed() {
         let r = Recorder::new();
-        r.emit(Event::Arrived { req: 1, t: 0.0 });
+        r.emit(Event::Arrived { req: 1, t: 0.0, deadline: None });
         r.emit(Event::Cancelled { req: 1, t: 0.5 });
         let rep = r.report(1.0, None);
         assert_eq!(rep.completed, 0);
@@ -563,10 +625,63 @@ mod tests {
     #[test]
     fn incomplete_requests_excluded() {
         let r = Recorder::new();
-        r.emit(Event::Arrived { req: 1, t: 0.0 });
+        r.emit(Event::Arrived { req: 1, t: 0.0, deadline: None });
         let rep = r.report(1.0, None);
         assert_eq!(rep.completed, 0);
         assert_eq!(rep.jct.len(), 0);
+        // ...but an arrived request still counts as offered.
+        assert_eq!(rep.offered, 1);
+        assert_eq!(rep.goodput(), 0.0);
+    }
+
+    #[test]
+    fn goodput_judges_completions_against_the_declared_deadline() {
+        let r = Recorder::new();
+        // In SLO: completes at 0.8 against a deadline of 1.0.
+        r.emit(Event::Arrived { req: 1, t: 0.0, deadline: Some(1.0) });
+        r.emit(Event::Completed { req: 1, t: 0.8 });
+        // Out of SLO: completes, but late.
+        r.emit(Event::Arrived { req: 2, t: 0.0, deadline: Some(1.0) });
+        r.emit(Event::Completed { req: 2, t: 1.5 });
+        // No deadline: any completion is in SLO.
+        r.emit(Event::Arrived { req: 3, t: 0.0, deadline: None });
+        r.emit(Event::Completed { req: 3, t: 9.0 });
+        // Cancelled by its deadline: offered, not in SLO.
+        r.emit(Event::Arrived { req: 4, t: 0.0, deadline: Some(0.5) });
+        r.emit(Event::Cancelled { req: 4, t: 0.5 });
+        let rep = r.report(9.0, None);
+        assert_eq!(rep.offered, 4);
+        assert_eq!(rep.completed, 3);
+        assert_eq!(rep.in_slo, 2);
+        assert!((rep.goodput() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejected_requests_count_only_as_rejected() {
+        let r = Recorder::new();
+        // Rejected at submit time (the admission controller records the
+        // arrival first, so the request stays in the offered count).
+        r.emit(Event::Arrived { req: 1, t: 0.0, deadline: Some(1.0) });
+        r.emit(Event::Rejected { req: 1, t: 0.0 });
+        // A second request completes in SLO.
+        r.emit(Event::Arrived { req: 2, t: 0.0, deadline: Some(1.0) });
+        r.emit(Event::Completed { req: 2, t: 0.3 });
+        let rep = r.report(1.0, None);
+        assert_eq!(rep.rejected, 1);
+        assert_eq!(rep.cancelled, 0, "rejection is not cancellation");
+        assert_eq!(rep.completed, 1);
+        assert_eq!(rep.offered, 2);
+        assert!((rep.goodput() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn started_tracks_stage_admission() {
+        let r = Recorder::new();
+        r.emit(Event::Arrived { req: 1, t: 0.0, deadline: None });
+        assert!(!r.started(1), "arrival alone is not in-flight");
+        assert!(!r.started(99), "unknown requests are not in-flight");
+        r.emit(Event::StageAdmit { req: 1, stage: "thinker", t: 0.1 });
+        assert!(r.started(1), "stage admission makes a request in-flight");
     }
 
     #[test]
@@ -623,7 +738,7 @@ mod tests {
     #[test]
     fn first_output_not_overwritten() {
         let r = Recorder::new();
-        r.emit(Event::Arrived { req: 1, t: 0.0 });
+        r.emit(Event::Arrived { req: 1, t: 0.0, deadline: None });
         r.emit(Event::StageAdmit { req: 1, stage: "s", t: 0.0 });
         r.emit(Event::StageFirstOutput { req: 1, stage: "s", t: 0.25 });
         r.emit(Event::StageFirstOutput { req: 1, stage: "s", t: 0.9 });

@@ -291,6 +291,9 @@ impl Orchestrator {
             loop {
                 match h.wait_timeout(std::time::Duration::from_secs(60)) {
                     crate::serving::WaitResult::Done(_) => break,
+                    // run_workload sessions have no admission controller,
+                    // but a rejection is terminal all the same.
+                    crate::serving::WaitResult::Rejected { .. } => break,
                     crate::serving::WaitResult::Timeout => {
                         if session.failed() {
                             break 'wait;

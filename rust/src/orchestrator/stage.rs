@@ -87,6 +87,9 @@ pub struct StageSpec {
     pub lazy_compile: bool,
     /// Per-device memory budget (KV sizing).
     pub device_bytes: usize,
+    /// Per-tenant WFQ weights for the stage's admission queue, indexed
+    /// by interned tenant id (empty = every tenant weighs 1.0).
+    pub tenant_weights: Vec<f64>,
     /// Transfer context template for incoming edges (chunk sizes etc.).
     pub downstream_hint: TransferCtx,
     /// Rendezvous after engine construction (compilation excluded from
@@ -286,6 +289,7 @@ fn run(mut spec: StageSpec) -> Result<StageSummary> {
     // batching policy decides what joins the engine at each boundary.
     let mut sched =
         StageScheduler::new(spec.assignment.make_policy(), spec.assignment.queue_depth);
+    sched.set_tenant_weights(spec.tenant_weights.clone());
 
     // Per-request output token counters (for StageDone events).
     let mut tokens_out: HashMap<u64, usize> = HashMap::new();
@@ -313,7 +317,7 @@ fn run(mut spec: StageSpec) -> Result<StageSummary> {
                     worked = true;
                     continue;
                 }
-                let prio = req_priority(&spec.reqs, req.id);
+                let (prio, tenant) = req_sched_keys(&spec.reqs, req.id);
                 let cmd = match &mut engine {
                     Engine::Ar(_) => {
                         EngineCmd::SubmitAr(entry_job(&spec, encoder.as_mut(), &req)?)
@@ -331,7 +335,7 @@ fn run(mut spec: StageSpec) -> Result<StageSummary> {
                     }
                     Engine::Encoder(e) => EngineCmd::SubmitEncode(encode_entry_job(e, &req)),
                 };
-                for c in sched.enqueue_prio(cmd, spec.clock.now(), prio) {
+                for c in sched.enqueue_wfq(cmd, spec.clock.now(), prio, tenant) {
                     apply_cmd(&mut engine, c, stage_name, &spec.recorder, &spec.clock)?;
                 }
                 worked = true;
@@ -366,9 +370,9 @@ fn run(mut spec: StageSpec) -> Result<StageSummary> {
                     worked = true;
                     continue;
                 }
-                let prio = req_priority(&spec.reqs, item.req_id);
+                let (prio, tenant) = req_sched_keys(&spec.reqs, item.req_id);
                 for cmd in transfer(&item)? {
-                    for c in sched.enqueue_prio(cmd, spec.clock.now(), prio) {
+                    for c in sched.enqueue_wfq(cmd, spec.clock.now(), prio, tenant) {
                         apply_cmd(&mut engine, c, stage_name, &spec.recorder, &spec.clock)?;
                     }
                 }
@@ -593,14 +597,15 @@ fn should_exit(
     (stop || retire || inputs_closed) && engine_idle && queue_empty
 }
 
-/// Resolve a request's admission priority from the shared metadata
-/// table (unknown requests — e.g. engine-level tests — rank normal).
-fn req_priority(reqs: &ReqTable, req_id: u64) -> u8 {
+/// Resolve a request's admission priority and WFQ tenant id from the
+/// shared metadata table (unknown requests — e.g. engine-level tests —
+/// rank normal under the anonymous tenant).
+fn req_sched_keys(reqs: &ReqTable, req_id: u64) -> (u8, u32) {
     reqs.lock()
         .unwrap()
         .get(&req_id)
-        .map(|m| m.priority)
-        .unwrap_or(crate::scheduler::PRIORITY_NORMAL)
+        .map(|m| (m.priority, m.tenant))
+        .unwrap_or((crate::scheduler::PRIORITY_NORMAL, 0))
 }
 
 fn apply_cmd(

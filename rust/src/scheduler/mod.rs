@@ -89,9 +89,14 @@ pub struct SchedStats {
 struct Pending {
     job: PendingJob,
     cmd: EngineCmd,
-    /// Admission priority class (higher enqueues ahead; FIFO within a
-    /// class).
+    /// Admission priority class (higher enqueues ahead; weighted fair
+    /// order within a class).
     prio: u8,
+    /// Weighted-fair-queueing virtual finish tag (see
+    /// [`StageScheduler::enqueue_wfq`]): within one priority class the
+    /// queue is ordered by ascending tag, which degenerates to FIFO when
+    /// every submission comes from one tenant.
+    vft: f64,
     /// Upstream conditioning commands that arrived while this submission
     /// was still queued; replayed right after it is admitted (the engine
     /// drops rows for unknown request ids, so they must not run early).
@@ -109,13 +114,44 @@ pub struct StageScheduler {
     /// channel.
     queue_depth: usize,
     pending: VecDeque<Pending>,
+    /// Per-tenant WFQ weights, indexed by interned tenant id (see
+    /// [`crate::serving::admission`]); out-of-range tenants weigh 1.0.
+    tenant_weights: Vec<f64>,
+    /// Self-clocked fair-queueing virtual time: the finish tag of the
+    /// last submission admitted into the engine.
+    virtual_clock: f64,
+    /// Last assigned finish tag per tenant id.
+    tenant_finish: std::collections::HashMap<u32, f64>,
     pub stats: SchedStats,
 }
 
 impl StageScheduler {
     pub fn new(policy: Box<dyn BatchPolicy>, queue_depth: usize) -> Self {
         let stats = SchedStats { policy: policy.name().to_string(), ..Default::default() };
-        Self { policy, queue_depth, pending: VecDeque::new(), stats }
+        Self {
+            policy,
+            queue_depth,
+            pending: VecDeque::new(),
+            tenant_weights: Vec::new(),
+            virtual_clock: 0.0,
+            tenant_finish: std::collections::HashMap::new(),
+            stats,
+        }
+    }
+
+    /// Install the per-tenant WFQ weights (index = interned tenant id;
+    /// tenants beyond the vector weigh 1.0).  Typically called once at
+    /// stage spawn from the session's admission config.
+    pub fn set_tenant_weights(&mut self, weights: Vec<f64>) {
+        self.tenant_weights = weights;
+    }
+
+    fn tenant_weight(&self, tenant: u32) -> f64 {
+        self.tenant_weights
+            .get(tenant as usize)
+            .copied()
+            .filter(|w| w.is_finite() && *w > 0.0)
+            .unwrap_or(1.0)
     }
 
     /// Pending submissions (the stage's queue depth).
@@ -137,6 +173,14 @@ impl StageScheduler {
         self.enqueue_prio(cmd, now, PRIORITY_NORMAL)
     }
 
+    /// Offer a command on behalf of the anonymous tenant (see
+    /// [`Self::enqueue_wfq`]).  With a single tenant the fair-queueing
+    /// tags are monotonic in arrival order, so this is exactly the
+    /// pre-WFQ behaviour: FIFO within each priority class.
+    pub fn enqueue_prio(&mut self, cmd: EngineCmd, now: f64, prio: u8) -> Vec<EngineCmd> {
+        self.enqueue_wfq(cmd, now, prio, 0)
+    }
+
     /// Offer a command.  Submissions (including every streaming chunk)
     /// are queued for admission control; conditioning rows return
     /// immediately when their target is not queued here (the engine
@@ -145,11 +189,15 @@ impl StageScheduler {
     /// `prio` orders the pending queue at insertion time: a submission
     /// enqueues behind everything of its class or higher and ahead of
     /// strictly lower classes (request-lifecycle priorities,
-    /// [`crate::serving::Priority`]).  Policies still only decide *when*
-    /// the head enters the engine — they never reorder, so within one
-    /// priority class scheduling stays work-conserving FIFO and nothing
-    /// already admitted is displaced.
-    pub fn enqueue_prio(&mut self, cmd: EngineCmd, now: f64, prio: u8) -> Vec<EngineCmd> {
+    /// [`crate::serving::Priority`]).  Within one class, `tenant` drives
+    /// self-clocked weighted fair queueing: each submission gets a
+    /// virtual finish tag `max(v, finish[tenant]) + cost / weight` and
+    /// the class is kept in ascending-tag order, so a tenant flooding
+    /// the queue advances its own tags far ahead and cannot starve a
+    /// lighter (or heavier-weighted) tenant.  Policies still only decide
+    /// *when* the head enters the engine — they never reorder, and
+    /// nothing already admitted is displaced.
+    pub fn enqueue_wfq(&mut self, cmd: EngineCmd, now: f64, prio: u8, tenant: u32) -> Vec<EngineCmd> {
         let (req_id, cost) = match &cmd {
             EngineCmd::SubmitAr(j) => (j.req_id, j.prompt.len() + j.sampling.max_new_tokens),
             // An imported sequence commits its resident prompt plus its
@@ -173,12 +221,20 @@ impl StageScheduler {
                 return vec![cmd];
             }
         };
-        // Insert behind the last entry of >= priority (stable FIFO
-        // within a class; O(queue) worst case, O(1) for all-normal).
+        // Tag the submission (SCFQ: start from the later of the virtual
+        // clock and the tenant's own last finish, advance by weighted
+        // cost) and insert behind the last entry of higher priority or
+        // of equal priority with an earlier-or-equal tag.  One tenant:
+        // tags are monotonic, so this degenerates to stable FIFO within
+        // a class (O(queue) worst case, O(1) for all-normal).
+        let vft = self.virtual_clock.max(
+            self.tenant_finish.get(&tenant).copied().unwrap_or(0.0),
+        ) + cost as f64 / self.tenant_weight(tenant);
+        self.tenant_finish.insert(tenant, vft);
         let pos = self
             .pending
             .iter()
-            .rposition(|p| p.prio >= prio)
+            .rposition(|p| p.prio > prio || (p.prio == prio && p.vft <= vft))
             .map_or(0, |i| i + 1);
         self.pending.insert(
             pos,
@@ -186,6 +242,7 @@ impl StageScheduler {
                 job: PendingJob { req_id, cost_tokens: cost },
                 cmd,
                 prio,
+                vft,
                 upstream: vec![],
                 enqueued_at: now,
             },
@@ -236,6 +293,8 @@ impl StageScheduler {
             let n = self.policy.admit(&jobs, view).min(self.pending.len());
             for _ in 0..n {
                 let p = self.pending.pop_front().unwrap();
+                // SCFQ virtual time follows the service order.
+                self.virtual_clock = self.virtual_clock.max(p.vft);
                 self.stats.admitted += 1;
                 let wait = (now - p.enqueued_at).max(0.0);
                 self.stats.queue_wait.push(wait);
@@ -383,6 +442,64 @@ mod tests {
         assert_eq!(cmds.len(), 1, "only the surviving request admits");
         assert!(matches!(&cmds[0], EngineCmd::SubmitAr(j) if j.req_id == 2));
         assert!(s.is_empty(), "queue drains after cancel + admit");
+    }
+
+    #[test]
+    fn wfq_keeps_a_flooding_tenant_from_starving_a_weighted_one() {
+        let mut s = StageScheduler::new(Box::new(FifoPolicy), 0);
+        // Tenant 1 weighs 4x tenant 2 (index = tenant id; 0 = anonymous).
+        s.set_tenant_weights(vec![1.0, 4.0, 1.0]);
+        // The hot tenant floods the queue FIRST...
+        for i in 0..8u64 {
+            s.enqueue_wfq(submit(200 + i, 1), 0.0, 1, 2);
+        }
+        // ...then the weighted tenant shows up.
+        for i in 0..8u64 {
+            s.enqueue_wfq(submit(100 + i, 1), 0.0, 1, 1);
+        }
+        let cmds = s.ready(&view(0, 16), 0.1);
+        let ids: Vec<u64> = cmds
+            .iter()
+            .map(|c| match c {
+                EngineCmd::SubmitAr(j) => j.req_id,
+                other => panic!("{other:?}"),
+            })
+            .collect();
+        assert_eq!(ids.len(), 16, "everything still admits — WFQ reorders, never drops");
+        assert!(ids[0] >= 100 && ids[0] < 200, "weighted tenant jumps the flood: {ids:?}");
+        let heavy_in_first_8 = ids[..8].iter().filter(|&&id| id < 200).count();
+        assert!(
+            heavy_in_first_8 >= 6,
+            "4x-weighted tenant should hold ~4/5 of the early slots, got {heavy_in_first_8} in {ids:?}"
+        );
+        // Within each tenant, arrival order is preserved.
+        let t1: Vec<u64> = ids.iter().copied().filter(|&id| id < 200).collect();
+        let t2: Vec<u64> = ids.iter().copied().filter(|&id| id >= 200).collect();
+        assert_eq!(t1, (100..108).collect::<Vec<u64>>());
+        assert_eq!(t2, (200..208).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn wfq_priority_classes_still_dominate_tenancy() {
+        let mut s = StageScheduler::new(Box::new(FifoPolicy), 0);
+        s.set_tenant_weights(vec![1.0, 8.0]);
+        s.enqueue_wfq(submit(1, 1), 0.0, 1, 1); // normal, heavy tenant
+        s.enqueue_wfq(submit(2, 1), 0.0, 2, 0); // high, anonymous
+        let cmds = s.ready(&view(0, 4), 0.1);
+        assert!(matches!(&cmds[0], EngineCmd::SubmitAr(j) if j.req_id == 2));
+        assert!(matches!(&cmds[1], EngineCmd::SubmitAr(j) if j.req_id == 1));
+    }
+
+    #[test]
+    fn wfq_single_tenant_stays_fifo_across_unequal_costs() {
+        let mut s = StageScheduler::new(Box::new(FifoPolicy), 0);
+        // A cheap job enqueued after an expensive one must NOT jump it
+        // when both belong to the same tenant.
+        s.enqueue_wfq(submit(1, 100), 0.0, 1, 0);
+        s.enqueue_wfq(submit(2, 1), 0.0, 1, 0);
+        let cmds = s.ready(&view(0, 4), 0.1);
+        assert!(matches!(&cmds[0], EngineCmd::SubmitAr(j) if j.req_id == 1));
+        assert!(matches!(&cmds[1], EngineCmd::SubmitAr(j) if j.req_id == 2));
     }
 
     #[test]

@@ -45,7 +45,7 @@ use std::time::Duration;
 
 use anyhow::Result;
 
-use crate::config::{AutoscalerConfig, PipelineConfig};
+use crate::config::{AdmissionConfig, AutoscalerConfig, PipelineConfig};
 use crate::jobj;
 use crate::json::{self, Value};
 use crate::orchestrator::{Orchestrator, RunOptions};
@@ -62,6 +62,9 @@ pub struct ServeOptions {
     /// Elastic autoscaling for the shared session; `None` falls back to
     /// the pipeline config's `autoscaler` block (static if absent too).
     pub autoscaler: Option<AutoscalerConfig>,
+    /// SLO-aware admission control; `None` falls back to the pipeline
+    /// config's `admission` block (admit-everything if absent too).
+    pub admission: Option<AdmissionConfig>,
 }
 
 pub struct Server {
@@ -168,8 +171,13 @@ impl Server {
             .autoscaler
             .clone()
             .or_else(|| self.config.autoscaler.clone());
+        let admission = self
+            .opts
+            .admission
+            .clone()
+            .or_else(|| self.config.admission.clone());
         let session =
-            Arc::new(ServingSession::start(&orch, SessionOptions { autoscaler })?);
+            Arc::new(ServingSession::start(&orch, SessionOptions { autoscaler, admission })?);
         *guard = Some(session.clone());
         Ok(session)
     }
@@ -242,9 +250,16 @@ impl Server {
                     }
                 })
                 .collect();
+            let rep = s.live_report();
+            let shed = s.admission_stats().map(|a| a.shed as usize).unwrap_or(0);
             return Ok(jobj! {
                 "live" => true,
                 "inflight" => s.inflight(),
+                "offered" => rep.offered,
+                "in_slo" => rep.in_slo,
+                "rejected" => rep.rejected,
+                "shed" => shed,
+                "goodput" => rep.goodput(),
                 "stages" => Value::Arr(stages),
             });
         }
@@ -263,7 +278,16 @@ impl Server {
                 }
             })
             .collect();
-        Ok(jobj! { "live" => false, "inflight" => 0usize, "stages" => Value::Arr(stages) })
+        Ok(jobj! {
+            "live" => false,
+            "inflight" => 0usize,
+            "offered" => 0usize,
+            "in_slo" => 0usize,
+            "rejected" => 0usize,
+            "shed" => 0usize,
+            "goodput" => 0.0,
+            "stages" => Value::Arr(stages),
+        })
     }
 
     /// Cancel an in-flight request by id (no-op before the session
@@ -306,6 +330,9 @@ impl Server {
             });
         if let Some(d) = v.get("deadline_s").as_f64() {
             oreq = oreq.deadline_s(d);
+        }
+        if let Some(t) = v.get("tenant").as_str() {
+            oreq = oreq.tenant(t);
         }
         oreq
     }
@@ -354,6 +381,16 @@ impl Server {
                         };
                         return write_frame(w, &frame);
                     }
+                    // Admission refusal / overload shed: a structured
+                    // terminal frame, never a bare connection drop.
+                    Some(OutputDelta::Rejected { reason, retry_after_s, .. }) => {
+                        return write_frame(w, &jobj! {
+                            "error" => "rejected",
+                            "req_id" => id as usize,
+                            "reason" => reason,
+                            "retry_after_s" => retry_after_s,
+                        });
+                    }
                     Some(_) => {}
                     None => anyhow::bail!("pipeline failed serving request {id}"),
                 }
@@ -399,6 +436,16 @@ impl Server {
                         "audio_samples" => usage.audio_samples,
                     });
                 }
+                // Terminal: shed mid-queue (or refused at submit) — the
+                // stream ends with a structured rejection, never a drop.
+                OutputDelta::Rejected { reason, retry_after_s, .. } => {
+                    return write_frame(w, &jobj! {
+                        "error" => "rejected", "event" => "rejected",
+                        "req_id" => id as usize,
+                        "reason" => reason.clone(),
+                        "retry_after_s" => *retry_after_s,
+                    });
+                }
             };
             if let Err(e) = write_frame(w, &frame) {
                 // The client hung up mid-stream: release the pipeline's
@@ -420,6 +467,8 @@ impl Server {
                     "ok" => true,
                     "completed" => summary.report.completed,
                     "cancelled" => summary.report.cancelled,
+                    "rejected" => summary.report.rejected,
+                    "goodput" => summary.report.goodput(),
                     "mean_jct_s" => summary.report.mean_jct(),
                 })
             }

@@ -1,0 +1,410 @@
+//! SLO-aware admission control at the serving boundary (overload
+//! control for the disaggregated pipeline).
+//!
+//! A [`ServingSession`](crate::serving::ServingSession) configured with an
+//! [`AdmissionConfig`] consults an [`AdmissionController`] at submit time:
+//!
+//! * **Cost estimation** — every request is priced in abstract work units
+//!   (prefill tokens, decode/audio budget, diffusion steps) converted to
+//!   seconds through a rate the controller *learns online*: each
+//!   completion's JCT recalibrates an EWMA of seconds-per-unit, so queue
+//!   wait and engine speed both fold into the projection without any
+//!   per-engine modelling.
+//! * **Early rejection** — the projected completion time
+//!   `(backlog / lanes + cost) * slack` is compared against the request's
+//!   deadline; an unmeetable SLO is refused *before* the request touches
+//!   a stage, with a structured
+//!   [`OutputDelta::Rejected`](crate::serving::OutputDelta) carrying the
+//!   reason and a `retry_after` hint instead of a connection drop.
+//! * **Emergency shedding** — when the committed backlog projects past
+//!   [`AdmissionConfig::shed_horizon_s`], queued requests are dropped
+//!   earliest-deadline-first (the work most certainly doomed) until the
+//!   projection fits.  Work a stage has already started is **never**
+//!   shed — the controller only ever gives up on requests that have not
+//!   consumed engine time.
+//! * **Tenant interning** — tenant names from
+//!   [`OmniRequest::tenant`](crate::serving::OmniRequest::tenant) map to
+//!   dense ids (0 = anonymous) whose weights feed the per-stage
+//!   weighted-fair queues ([`crate::scheduler::StageScheduler::enqueue_wfq`]).
+//!
+//! The controller is a self-contained state machine (submit → decide →
+//! start/resolve/shed) so its invariants — never shed started work, no
+//! admitted request silently dropped — are directly property-testable
+//! without spinning up a pipeline (`tests/admission.rs`).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::config::AdmissionConfig;
+use crate::trace::Request;
+
+/// Starting seconds-per-work-unit before any completion has calibrated
+/// the EWMA (one unit ≈ one decode iteration of the toy engines).
+const DEFAULT_S_PER_UNIT: f64 = 2e-3;
+
+/// EWMA retention: `rate = KEEP * rate + (1 - KEEP) * observed`.
+const EWMA_KEEP: f64 = 0.8;
+
+/// The submit-time verdict.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Decision {
+    Admit,
+    /// The deadline is unmeetable under the current backlog; the request
+    /// must not enter the pipeline.
+    Reject { reason: String, retry_after_s: f64 },
+}
+
+/// Live overload-control counters (surfaced through the server's
+/// `stats` op next to the per-stage queue depths).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct AdmissionStats {
+    pub admitted: u64,
+    pub rejected: u64,
+    pub shed: u64,
+    /// Estimated seconds of not-yet-started work currently queued.
+    pub backlog_s: f64,
+}
+
+struct Entry {
+    cost_s: f64,
+    units: f64,
+    /// Absolute session-clock deadline (None = no SLO; shed last).
+    deadline_t: Option<f64>,
+    /// A stage admitted it into an engine: immune to shedding.
+    started: bool,
+}
+
+struct Ledger {
+    queued: HashMap<u64, Entry>,
+    s_per_unit: f64,
+    admitted: u64,
+    rejected: u64,
+    shed: u64,
+}
+
+impl Ledger {
+    fn backlog_s(&self) -> f64 {
+        self.queued.values().filter(|e| !e.started).map(|e| e.cost_s).sum()
+    }
+}
+
+/// See the module docs.  One per [`crate::serving::ServingSession`];
+/// internally synchronized (submitters, the collector, and the stats op
+/// all consult it).
+pub struct AdmissionController {
+    cfg: AdmissionConfig,
+    /// Name-sorted tenant names; interned id = index + 1 (0 = anonymous).
+    names: Vec<String>,
+    /// Weight per interned id (index 0 = the anonymous tenant at 1.0).
+    weights: Vec<f64>,
+    state: Mutex<Ledger>,
+}
+
+impl AdmissionController {
+    pub fn new(cfg: AdmissionConfig) -> Result<Self> {
+        cfg.validate()?;
+        let mut named: Vec<(String, f64)> = cfg.tenant_weights.clone();
+        named.sort_by(|a, b| a.0.cmp(&b.0));
+        let mut names = Vec::with_capacity(named.len());
+        let mut weights = Vec::with_capacity(named.len() + 1);
+        weights.push(1.0);
+        for (n, w) in named {
+            names.push(n);
+            weights.push(w);
+        }
+        Ok(Self {
+            cfg,
+            names,
+            weights,
+            state: Mutex::new(Ledger {
+                queued: HashMap::new(),
+                s_per_unit: DEFAULT_S_PER_UNIT,
+                admitted: 0,
+                rejected: 0,
+                shed: 0,
+            }),
+        })
+    }
+
+    /// Intern a tenant name: configured tenants get a stable dense id
+    /// (name-sorted order + 1); unknown and anonymous tenants share
+    /// id 0 at weight 1.0.
+    pub fn tenant_id(&self, name: Option<&str>) -> u32 {
+        match name {
+            Some(n) => self
+                .names
+                .binary_search_by(|t| t.as_str().cmp(n))
+                .map(|i| (i + 1) as u32)
+                .unwrap_or(0),
+            None => 0,
+        }
+    }
+
+    /// WFQ weights indexed by interned tenant id, for
+    /// [`crate::scheduler::StageScheduler::set_tenant_weights`].
+    pub fn tenant_weights(&self) -> Vec<f64> {
+        self.weights.clone()
+    }
+
+    pub fn retry_after_s(&self) -> f64 {
+        self.cfg.retry_after_s
+    }
+
+    pub fn shed_horizon_s(&self) -> f64 {
+        self.cfg.shed_horizon_s
+    }
+
+    /// Abstract work units of one request: its decode-side iteration
+    /// budget (text + audio tokens + diffusion steps) plus discounted
+    /// prefill work (prompt tokens batch; multimodal frames encode).
+    fn cost_units(req: &Request) -> f64 {
+        let decode = (req.max_text_tokens + req.max_audio_tokens + req.diffusion_steps).max(1);
+        decode as f64
+            + req.prompt_tokens.len() as f64 / 16.0
+            + req.mm_frames as f64 / 4.0
+    }
+
+    /// Current cost estimate in seconds (units × the learned rate).
+    pub fn estimate_cost_s(&self, req: &Request) -> f64 {
+        Self::cost_units(req) * self.state.lock().unwrap().s_per_unit
+    }
+
+    /// Submit-time verdict for one request.  `lanes` is the number of
+    /// live entry-stage replicas (parallel service lanes the backlog
+    /// drains through).  An admitted request is entered into the ledger
+    /// and MUST later be retired through [`Self::resolve`] (completion,
+    /// cancellation, or rollback) or [`Self::shed`].
+    pub fn decide(
+        &self,
+        req: &Request,
+        deadline_s: Option<f64>,
+        now: f64,
+        lanes: usize,
+    ) -> Decision {
+        let units = Self::cost_units(req);
+        let mut led = self.state.lock().unwrap();
+        let cost_s = units * led.s_per_unit;
+        if let Some(d) = deadline_s {
+            let nl = lanes.max(1) as f64;
+            let backlog = led.backlog_s();
+            let projected = (backlog / nl + cost_s) * self.cfg.slack;
+            if projected > d {
+                led.rejected += 1;
+                return Decision::Reject {
+                    reason: format!(
+                        "projected completion {projected:.3}s exceeds deadline {d:.3}s \
+                         (backlog {backlog:.3}s over {} lane(s), est cost {cost_s:.3}s)",
+                        lanes.max(1)
+                    ),
+                    retry_after_s: self.cfg.retry_after_s,
+                };
+            }
+        }
+        led.admitted += 1;
+        led.queued.insert(
+            req.id,
+            Entry { cost_s, units, deadline_t: deadline_s.map(|d| now + d), started: false },
+        );
+        Decision::Admit
+    }
+
+    /// Retire one admitted request from the ledger (completion, cancel,
+    /// or submit rollback).  A completion's `jct_s` recalibrates the
+    /// seconds-per-unit EWMA, folding live queue wait and engine speed
+    /// into future projections.  Idempotent: unknown ids are ignored
+    /// (e.g. already shed).
+    pub fn resolve(&self, req_id: u64, jct_s: Option<f64>) {
+        let mut led = self.state.lock().unwrap();
+        let Some(e) = led.queued.remove(&req_id) else { return };
+        if let Some(jct) = jct_s {
+            if jct.is_finite() && jct > 0.0 && e.units > 0.0 {
+                let obs = (jct / e.units).clamp(1e-6, 1.0);
+                led.s_per_unit = EWMA_KEEP * led.s_per_unit + (1.0 - EWMA_KEEP) * obs;
+            }
+        }
+    }
+
+    /// Emergency shedding sweep.  `is_started` reports whether any stage
+    /// has admitted the request into an engine; such requests are
+    /// **never** returned.  While the not-yet-started backlog projects
+    /// past the horizon, queued requests are dropped
+    /// earliest-deadline-first (deadline-less requests last; ties by id
+    /// for determinism) and their ids returned for the caller to resolve
+    /// their streams with a `Rejected` terminal event.
+    pub fn shed(&self, lanes: usize, is_started: impl Fn(u64) -> bool) -> Vec<u64> {
+        let mut led = self.state.lock().unwrap();
+        // Absorb "a stage started it" facts lazily: started work is
+        // immune from here on, whatever the backlog does.
+        let unstarted: Vec<u64> =
+            led.queued.iter().filter(|(_, e)| !e.started).map(|(&id, _)| id).collect();
+        for id in unstarted {
+            if is_started(id) {
+                if let Some(e) = led.queued.get_mut(&id) {
+                    e.started = true;
+                }
+            }
+        }
+        let nl = lanes.max(1) as f64;
+        let mut out = Vec::new();
+        while led.backlog_s() / nl > self.cfg.shed_horizon_s {
+            let victim = led
+                .queued
+                .iter()
+                .filter(|(_, e)| !e.started)
+                .map(|(&id, e)| (e.deadline_t.unwrap_or(f64::INFINITY), id))
+                .min_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)))
+                .map(|(_, id)| id);
+            let Some(id) = victim else { break };
+            led.queued.remove(&id);
+            led.shed += 1;
+            out.push(id);
+        }
+        out
+    }
+
+    /// Whether the ledger still tracks this request (admitted, not yet
+    /// resolved or shed).
+    pub fn tracks(&self, req_id: u64) -> bool {
+        self.state.lock().unwrap().queued.contains_key(&req_id)
+    }
+
+    pub fn stats(&self) -> AdmissionStats {
+        let led = self.state.lock().unwrap();
+        AdmissionStats {
+            admitted: led.admitted,
+            rejected: led.rejected,
+            shed: led.shed,
+            backlog_s: led.backlog_s(),
+        }
+    }
+
+    #[cfg(test)]
+    fn set_rate(&self, s_per_unit: f64) {
+        self.state.lock().unwrap().s_per_unit = s_per_unit;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::Modality;
+
+    fn cfg() -> AdmissionConfig {
+        AdmissionConfig {
+            tenant_weights: vec![("zeta".into(), 2.0), ("acme".into(), 4.0)],
+            ..Default::default()
+        }
+    }
+
+    fn req(id: u64, max_text: usize) -> Request {
+        Request {
+            id,
+            arrival_s: 0.0,
+            modality: Modality::Text,
+            prompt_tokens: vec![1, 2, 3, 4],
+            mm_frames: 0,
+            seed: id,
+            max_text_tokens: max_text,
+            max_audio_tokens: 0,
+            diffusion_steps: 0,
+            ignore_eos: true,
+        }
+    }
+
+    #[test]
+    fn tenants_intern_in_sorted_order_with_anonymous_zero() {
+        let c = AdmissionController::new(cfg()).unwrap();
+        assert_eq!(c.tenant_id(None), 0);
+        assert_eq!(c.tenant_id(Some("acme")), 1, "name-sorted: acme < zeta");
+        assert_eq!(c.tenant_id(Some("zeta")), 2);
+        assert_eq!(c.tenant_id(Some("unlisted")), 0, "unknown tenants ride the anonymous lane");
+        assert_eq!(c.tenant_weights(), vec![1.0, 4.0, 2.0]);
+    }
+
+    #[test]
+    fn rejects_when_backlog_projects_past_the_deadline() {
+        let c = AdmissionController::new(cfg()).unwrap();
+        c.set_rate(0.01); // 100 units/s, deterministic
+        // An empty ledger admits a feasible deadline...
+        assert_eq!(c.decide(&req(1, 100), Some(10.0), 0.0, 1), Decision::Admit);
+        // ...and each admit commits ~1s of backlog; after ten of them a
+        // 1s deadline is hopeless on one lane.
+        for id in 2..=10 {
+            assert_eq!(c.decide(&req(id, 100), Some(100.0), 0.0, 1), Decision::Admit);
+        }
+        match c.decide(&req(11, 100), Some(1.0), 0.0, 1) {
+            Decision::Reject { reason, retry_after_s } => {
+                assert!(reason.contains("deadline"), "structured reason: {reason}");
+                assert_eq!(retry_after_s, AdmissionConfig::default().retry_after_s);
+            }
+            Decision::Admit => panic!("a 1s deadline behind ~10s of backlog must be rejected"),
+        }
+        // More lanes drain the same backlog faster: a 2s deadline (room
+        // for the request's own ~1s cost) fits once the queued work
+        // spreads over 16 entry replicas, though it was hopeless on 1.
+        assert_eq!(c.decide(&req(12, 100), Some(2.0), 0.0, 16), Decision::Admit);
+        // No deadline = nothing to miss: always admitted.
+        assert_eq!(c.decide(&req(13, 100), None, 0.0, 1), Decision::Admit);
+        let st = c.stats();
+        assert_eq!((st.admitted, st.rejected), (12, 1));
+    }
+
+    #[test]
+    fn completions_recalibrate_the_cost_rate() {
+        let c = AdmissionController::new(cfg()).unwrap();
+        c.set_rate(0.01);
+        let before = c.estimate_cost_s(&req(1, 100));
+        assert_eq!(c.decide(&req(1, 100), None, 0.0, 1), Decision::Admit);
+        // The request took far longer per unit than estimated (heavy
+        // queueing): the learned rate, and so future projections, rise.
+        c.resolve(1, Some(50.0));
+        assert!(!c.tracks(1));
+        assert!(c.estimate_cost_s(&req(2, 100)) > before);
+        // Resolving an unknown id is a no-op.
+        c.resolve(99, Some(1.0));
+    }
+
+    #[test]
+    fn shed_drops_earliest_deadline_first_and_never_started_work() {
+        let c = AdmissionController::new(AdmissionConfig {
+            shed_horizon_s: 0.5,
+            ..Default::default()
+        })
+        .unwrap();
+        c.set_rate(0.01);
+        // Four 1s-cost requests on one lane: backlog 4s >> 0.5s horizon.
+        assert_eq!(c.decide(&req(1, 100), Some(2.0), 0.0, 1), Decision::Admit);
+        assert_eq!(c.decide(&req(2, 100), Some(50.0), 0.0, 1), Decision::Admit);
+        assert_eq!(c.decide(&req(3, 100), Some(80.0), 0.0, 1), Decision::Admit);
+        assert_eq!(c.decide(&req(4, 100), None, 0.0, 1), Decision::Admit);
+        // Request 1 has the earliest deadline but a stage started it:
+        // immune.  Shedding then eats 2 (earliest deadline), 3, and
+        // finally the deadline-less 4 until only started work remains.
+        let shed = c.shed(1, |id| id == 1);
+        assert_eq!(shed, vec![2, 3, 4]);
+        assert!(c.tracks(1), "started work survives any backlog");
+        assert!(!c.tracks(2) && !c.tracks(3) && !c.tracks(4));
+        assert_eq!(c.stats().shed, 3);
+        // Idempotent: nothing sheddable is left.
+        assert!(c.shed(1, |_| true).is_empty());
+    }
+
+    #[test]
+    fn shed_stops_once_the_backlog_fits_the_horizon() {
+        let c = AdmissionController::new(AdmissionConfig {
+            shed_horizon_s: 2.5,
+            ..Default::default()
+        })
+        .unwrap();
+        c.set_rate(0.01);
+        for id in 1..=4 {
+            assert_eq!(c.decide(&req(id, 100), Some(10.0 * id as f64), 0.0, 1), Decision::Admit);
+        }
+        // 4s of backlog over a 2.5s horizon: exactly two victims (the
+        // two earliest deadlines) bring it to 2s.
+        assert_eq!(c.shed(1, |_| false), vec![1, 2]);
+        assert!(c.stats().backlog_s < 2.5 + 1e-9);
+    }
+}

@@ -46,11 +46,13 @@
 //! thin wrapper over this runtime, and the TCP frontend
 //! ([`crate::server`]) shares one session across connections.
 
+pub mod admission;
 pub mod autoscaler;
 pub mod cancel;
 pub mod request;
 pub mod stream;
 
+pub use admission::{AdmissionController, AdmissionStats};
 pub use cancel::Tombstones;
 pub use request::{OmniRequest, Priority};
 pub use stream::{
@@ -65,7 +67,7 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use crate::config::{AutoscalerConfig, ConnectorKind, PipelineConfig, RoutingKind};
+use crate::config::{AdmissionConfig, AutoscalerConfig, ConnectorKind, PipelineConfig, RoutingKind};
 use crate::connector::router::EdgeCtl;
 use crate::connector::tcp::MooncakeStore;
 use crate::device::{DeviceId, DevicePool, Reservation};
@@ -107,12 +109,16 @@ pub struct SessionOptions {
     /// Elastic autoscaling; `None` keeps replica counts frozen at the
     /// allocation plan (the pre-serving-runtime behaviour).
     pub autoscaler: Option<AutoscalerConfig>,
+    /// SLO-aware admission control + shedding (see [`admission`]);
+    /// `None` admits everything (deadlines still cancel late).
+    pub admission: Option<AdmissionConfig>,
 }
 
 impl SessionOptions {
-    /// Honor the pipeline config's `autoscaler` block, if present.
+    /// Honor the pipeline config's `autoscaler`/`admission` blocks, if
+    /// present.
     pub fn from_config(config: &PipelineConfig) -> Self {
-        Self { autoscaler: config.autoscaler.clone() }
+        Self { autoscaler: config.autoscaler.clone(), admission: config.admission.clone() }
     }
 }
 
@@ -190,6 +196,9 @@ pub(crate) struct SessionInner {
     pub(crate) streams: Mutex<HashMap<u64, ReqStream>>,
     /// Cancelled-request tombstones swept by every stage thread.
     pub(crate) cancels: Arc<Tombstones>,
+    /// SLO-aware overload control (submit-time rejection + the
+    /// collector's shed sweep); `None` admits everything.
+    pub(crate) admission: Option<AdmissionController>,
     /// `(expiry_t, req_id)` deadlines enforced by the collector tick.
     pub(crate) deadlines: Mutex<Vec<(f64, u64)>>,
     /// Kept for cloning into dynamically spawned exit replicas; dropped
@@ -238,6 +247,9 @@ impl SessionInner {
         for e in &self.edges {
             e.purge_request(req_id);
         }
+        if let Some(a) = &self.admission {
+            a.resolve(req_id, None);
+        }
         self.recorder.emit(Event::Cancelled { req: req_id, t });
         self.dec_inflight();
         let _ = st.tx.send(OutputDelta::Done {
@@ -246,6 +258,29 @@ impl SessionInner {
             cancelled: true,
             usage: st.usage,
         });
+        true
+    }
+
+    /// Shed one *queued* request (the collector's overload sweep).
+    /// Claims the stream entry through the same exactly-once gate as
+    /// cancellation and completion, so a request shed concurrently with
+    /// a deadline expiry or client cancel still resolves with exactly
+    /// one terminal event — here a structured `Rejected`, never `Done`.
+    pub(crate) fn shed_request(&self, req_id: u64, reason: String, retry_after_s: f64) -> bool {
+        let Some(st) = self.streams.lock().unwrap().remove(&req_id) else { return false };
+        let t = self.clock.now();
+        // Tombstone FIRST: the request may sit in the front channel or a
+        // stage's admission queue — it dies at the next pull/sweep and
+        // never reaches an engine.
+        self.cancels.mark(req_id, t);
+        self.reqs.lock().unwrap().remove(&req_id);
+        self.deadlines.lock().unwrap().retain(|&(_, r)| r != req_id);
+        for e in &self.edges {
+            e.purge_request(req_id);
+        }
+        self.recorder.emit(Event::Rejected { req: req_id, t });
+        self.dec_inflight();
+        let _ = st.tx.send(OutputDelta::Rejected { t, reason, retry_after_s });
         true
     }
 
@@ -289,6 +324,10 @@ impl SessionInner {
         if item.finished {
             let st = streams.remove(&item.req_id).expect("entry held above");
             drop(streams);
+            if let Some(a) = &self.admission {
+                // The observed JCT recalibrates the cost projections.
+                a.resolve(item.req_id, Some(t - st.submitted_t));
+            }
             self.recorder.emit(Event::Completed { req: item.req_id, t });
             self.reqs.lock().unwrap().remove(&item.req_id);
             self.deadlines.lock().unwrap().retain(|&(_, r)| r != item.req_id);
@@ -324,6 +363,28 @@ impl SessionInner {
         };
         for r in expired {
             self.cancel_request(r);
+        }
+        // Emergency shedding: while the not-yet-started backlog projects
+        // past the horizon, drop queued requests earliest-deadline-first.
+        // In-flight work is immune twice over: the controller skips
+        // entries a stage reported started, and a race lost to a
+        // just-now admission is caught by the re-check before the claim.
+        if let Some(ctrl) = &self.admission {
+            let lanes = self.front.lock().unwrap().0.len().max(1);
+            let horizon = ctrl.shed_horizon_s();
+            for id in ctrl.shed(lanes, |r| self.recorder.started(r)) {
+                if self.recorder.started(id) {
+                    continue; // admitted between snapshot and claim
+                }
+                self.shed_request(
+                    id,
+                    format!(
+                        "shed under overload: projected backlog exceeds the \
+                         {horizon:.3}s horizon"
+                    ),
+                    ctrl.retry_after_s(),
+                );
+            }
         }
         // A failed pipeline can never deliver more deltas: close every
         // live stream so blocked callers wake with `Closed` instead of
@@ -422,6 +483,11 @@ impl ServingSession {
             edge_routing.push(routing);
         }
 
+        let admission = match &opts.admission {
+            Some(cfg) => Some(AdmissionController::new(cfg.clone())?),
+            None => None,
+        };
+
         let (sink_tx, sink_rx) = mpsc::channel::<StageItem>();
         let pool = DevicePool::new(graph.config.n_devices, graph.config.device_bytes);
         let dev_load = plan.device_load(graph.config.n_devices);
@@ -443,6 +509,7 @@ impl ServingSession {
             front: Mutex::new((Vec::new(), 0)),
             streams: Mutex::new(HashMap::new()),
             cancels: Arc::new(Tombstones::new()),
+            admission,
             deadlines: Mutex::new(Vec::new()),
             sink_tx: Mutex::new(Some(sink_tx)),
             pool,
@@ -575,9 +642,29 @@ impl ServingSession {
             "serving session is shutting down"
         );
         oreq.validate()?;
-        let (req, stream_on, priority, deadline_s) = oreq.into_parts();
+        let (req, stream_on, priority, deadline_s, tenant) = oreq.into_parts();
         let id = req.id;
         let now = self.inner.clock.now();
+        let mut tenant_id = 0u32;
+        if let Some(ctrl) = &self.inner.admission {
+            tenant_id = ctrl.tenant_id(tenant.as_deref());
+            let lanes = self.inner.front.lock().unwrap().0.len().max(1);
+            if let admission::Decision::Reject { reason, retry_after_s } =
+                ctrl.decide(&req, deadline_s, now, lanes)
+            {
+                // Early structured rejection: the request never touches
+                // a stage.  It still counts as offered (Arrived) so
+                // goodput sees the refused load, and the returned stream
+                // carries exactly one terminal event — `Rejected`.
+                self.inner
+                    .recorder
+                    .emit(Event::Arrived { req: id, t: now, deadline: deadline_s.map(|d| now + d) });
+                self.inner.recorder.emit(Event::Rejected { req: id, t: now });
+                let (tx, rx) = mpsc::channel();
+                let _ = tx.send(OutputDelta::Rejected { t: now, reason, retry_after_s });
+                return Ok(ResponseStream::new(id, now, rx, self.inner.clone()));
+            }
+        }
         self.inner.reqs.lock().unwrap().insert(
             id,
             ReqMeta {
@@ -588,6 +675,7 @@ impl ServingSession {
                 prompt_tokens: req.prompt_tokens.clone(),
                 max_text_tokens: req.max_text_tokens,
                 priority: priority.rank(),
+                tenant: tenant_id,
             },
         );
         let (tx, rx) = mpsc::channel();
@@ -605,7 +693,9 @@ impl ServingSession {
             self.inner.deadlines.lock().unwrap().push((now + d, id));
         }
         self.inner.inflight.fetch_add(1, Ordering::SeqCst);
-        self.inner.recorder.emit(Event::Arrived { req: id, t: now });
+        self.inner
+            .recorder
+            .emit(Event::Arrived { req: id, t: now, deadline: deadline_s.map(|d| now + d) });
 
         let mut front = self.inner.front.lock().unwrap();
         let (txs, next) = &mut *front;
@@ -629,6 +719,9 @@ impl ServingSession {
         self.inner.reqs.lock().unwrap().remove(&id);
         self.inner.streams.lock().unwrap().remove(&id);
         self.inner.deadlines.lock().unwrap().retain(|&(_, r)| r != id);
+        if let Some(a) = &self.inner.admission {
+            a.resolve(id, None);
+        }
         self.inner.dec_inflight();
         anyhow::bail!("no live entry-stage replica to accept request {id}")
     }
@@ -683,6 +776,18 @@ impl ServingSession {
                 out
             })
             .collect()
+    }
+
+    /// Live overload-control counters (`None` when the session runs
+    /// without an admission controller).
+    pub fn admission_stats(&self) -> Option<AdmissionStats> {
+        self.inner.admission.as_ref().map(|a| a.stats())
+    }
+
+    /// Live run metrics (goodput, JCT/TTFT/TPOT so far) without shutting
+    /// the session down — the server's `stats` op reads goodput here.
+    pub fn live_report(&self) -> crate::metrics::RunReport {
+        self.inner.recorder.report(self.inner.clock.now(), None)
     }
 
     /// Live replica count of one stage.
@@ -845,6 +950,11 @@ pub(crate) fn spawn_replica(
         front_rx,
         sink,
         cancels: inner.cancels.clone(),
+        tenant_weights: inner
+            .admission
+            .as_ref()
+            .map(|a| a.tenant_weights())
+            .unwrap_or_default(),
         on_stage_done: Some(on_stage_done),
         streaming: inner.opts.streaming,
         lazy_compile: inner.opts.lazy_compile,

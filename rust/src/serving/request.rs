@@ -56,13 +56,15 @@ pub struct OmniRequest {
     stream: bool,
     priority: Priority,
     deadline_s: Option<f64>,
+    tenant: Option<String>,
 }
 
 impl From<Request> for OmniRequest {
     /// Wrap a raw trace request with the defaults of the pre-streaming
-    /// API: no mid-flight deltas, normal priority, no deadline.
+    /// API: no mid-flight deltas, normal priority, no deadline, the
+    /// anonymous tenant.
     fn from(req: Request) -> Self {
-        Self { req, stream: false, priority: Priority::Normal, deadline_s: None }
+        Self { req, stream: false, priority: Priority::Normal, deadline_s: None, tenant: None }
     }
 }
 
@@ -142,6 +144,18 @@ impl OmniRequest {
         self.deadline_s(d.as_secs_f64())
     }
 
+    /// Attribute the request to a named tenant for weighted fair
+    /// queueing (see [`crate::config::AdmissionConfig::tenant_weights`]).
+    /// Unset = the anonymous tenant at weight 1.0.
+    pub fn tenant(mut self, name: impl Into<String>) -> Self {
+        self.tenant = Some(name.into());
+        self
+    }
+
+    pub fn tenant_name(&self) -> Option<&str> {
+        self.tenant.as_deref()
+    }
+
     pub fn id(&self) -> u64 {
         self.req.id
     }
@@ -166,8 +180,8 @@ impl OmniRequest {
         Ok(())
     }
 
-    pub(crate) fn into_parts(self) -> (Request, bool, Priority, Option<f64>) {
-        (self.req, self.stream, self.priority, self.deadline_s)
+    pub(crate) fn into_parts(self) -> (Request, bool, Priority, Option<f64>, Option<String>) {
+        (self.req, self.stream, self.priority, self.deadline_s, self.tenant)
     }
 }
 
@@ -187,10 +201,12 @@ mod tests {
             .ignore_eos(false)
             .streaming(true)
             .priority(Priority::High)
-            .deadline_s(2.5);
+            .deadline_s(2.5)
+            .tenant("acme");
         assert!(r.validate().is_ok());
         assert!(r.is_streaming());
-        let (req, stream, prio, deadline) = r.into_parts();
+        assert_eq!(r.tenant_name(), Some("acme"));
+        let (req, stream, prio, deadline, tenant) = r.into_parts();
         assert_eq!(req.id, 9);
         assert_eq!(req.modality, Modality::Video);
         assert_eq!(req.mm_frames, 64);
@@ -202,6 +218,7 @@ mod tests {
         assert!(stream);
         assert_eq!(prio, Priority::High);
         assert_eq!(deadline, Some(2.5));
+        assert_eq!(tenant.as_deref(), Some("acme"));
     }
 
     #[test]

@@ -66,6 +66,12 @@ pub enum OutputDelta {
     /// cancelled/deadline-expired (`cancelled: true`).  Always the last
     /// delta on the stream.
     Done { t: f64, jct_s: f64, cancelled: bool, usage: Usage },
+    /// Terminal event: the admission controller refused the request at
+    /// submit time, or the shedder dropped it from a queue before any
+    /// stage started it.  Mutually exclusive with `Done` — a stream
+    /// carries exactly one terminal event.  `retry_after_s` is the
+    /// controller's backoff hint.
+    Rejected { t: f64, reason: String, retry_after_s: f64 },
 }
 
 /// Outcome of [`ResponseStream::next_timeout`].
@@ -90,6 +96,8 @@ pub struct ResponseStream {
     inner: Arc<SessionInner>,
     /// `(completed_t, cancelled)` once the terminal `Done` was seen.
     done: Option<(f64, bool)>,
+    /// Rejection time once the terminal `Rejected` was seen.
+    rejected_t: Option<f64>,
 }
 
 impl ResponseStream {
@@ -99,7 +107,7 @@ impl ResponseStream {
         rx: mpsc::Receiver<OutputDelta>,
         inner: Arc<SessionInner>,
     ) -> Self {
-        Self { req_id, submitted_t, rx, inner, done: None }
+        Self { req_id, submitted_t, rx, inner, done: None, rejected_t: None }
     }
 
     pub fn req_id(&self) -> u64 {
@@ -111,14 +119,21 @@ impl ResponseStream {
         self.submitted_t
     }
 
-    /// Whether the terminal `Done` has been received.
+    /// Whether a terminal event (`Done` or `Rejected`) has been received.
     pub fn is_done(&self) -> bool {
-        self.done.is_some()
+        self.done.is_some() || self.rejected_t.is_some()
+    }
+
+    /// Whether the stream's terminal event was a `Rejected`.
+    pub fn is_rejected(&self) -> bool {
+        self.rejected_t.is_some()
     }
 
     fn note(&mut self, d: &OutputDelta) {
-        if let OutputDelta::Done { t, cancelled, .. } = d {
-            self.done = Some((*t, *cancelled));
+        match d {
+            OutputDelta::Done { t, cancelled, .. } => self.done = Some((*t, *cancelled)),
+            OutputDelta::Rejected { t, .. } => self.rejected_t = Some(*t),
+            _ => {}
         }
     }
 
@@ -172,6 +187,8 @@ pub struct Completion {
 #[derive(Debug)]
 pub enum WaitResult {
     Done(Completion),
+    /// The admission controller refused the request; it never ran.
+    Rejected { req_id: u64, t: f64 },
     Timeout,
     /// The session's collector is gone (session shut down or failed);
     /// this completion can no longer arrive.
@@ -216,6 +233,9 @@ impl CompletionHandle {
                         req_id: self.stream.req_id,
                         completed_t: t,
                     });
+                }
+                Ok(OutputDelta::Rejected { t, .. }) => {
+                    return WaitResult::Rejected { req_id: self.stream.req_id, t };
                 }
                 Ok(_) => continue,
                 Err(mpsc::RecvTimeoutError::Timeout) => return WaitResult::Timeout,

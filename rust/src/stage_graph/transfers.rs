@@ -33,6 +33,9 @@ pub struct ReqMeta {
     /// consulted by stage loops when enqueuing into the per-stage
     /// scheduler.
     pub priority: u8,
+    /// Interned tenant id for weighted fair queueing (0 = anonymous; see
+    /// [`crate::serving::admission::AdmissionController::tenant_id`]).
+    pub tenant: u32,
 }
 
 /// Shared request-metadata table (the paper's "predefined dictionary for
@@ -414,7 +417,7 @@ mod tests {
             1,
             ReqMeta { seed: 7, max_audio_tokens: 40, diffusion_steps: 6, ignore_eos: true,
                       prompt_tokens: vec![1, 5], max_text_tokens: 12,
-                      priority: crate::scheduler::PRIORITY_NORMAL },
+                      priority: crate::scheduler::PRIORITY_NORMAL, tenant: 0 },
         );
         TransferCtx { reqs, chunk_frames: chunk, cond_tokens_dim: ctd }
     }

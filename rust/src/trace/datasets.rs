@@ -173,6 +173,32 @@ pub fn prefill_heavy(seed: u64, n: usize, rate: f64) -> Workload {
     Workload { name: "prefill-heavy-sim".into(), requests }
 }
 
+/// Overload storm for the admission-control evaluation (ISSUE 6): a
+/// sustained Poisson stream at `rate` req/s mixing short chat turns with
+/// heavy multimodal analysis requests.  The cost variance is the point —
+/// under 2–5x overload a FIFO queue lets doomed heavy requests convoy
+/// cheap ones past their deadlines and burns service time on work that
+/// is cancelled mid-flight, which is exactly the behavior
+/// `scheduler::sim::simulate_admission` quantifies.  Per-request SLOs
+/// are derived deterministically from `Request::seed` by the sim (the
+/// trace schema itself carries no deadline).
+pub fn overload_storm(seed: u64, n: usize, rate: f64) -> Workload {
+    let mut rng = Prng::new(seed ^ 0x57012);
+    let at = arrivals(&mut rng, n, rate);
+    let requests = (0..n)
+        .map(|i| {
+            if i % 4 == 3 {
+                // Heavy analysis: mm-dominated prompt, long spoken answer.
+                mk(&mut rng, i as u64, at[i], Modality::Video, 22.0, 110.0, 40.0, 3.6)
+            } else {
+                // Chat turn: small prompt, short answer.
+                mk(&mut rng, i as u64, at[i], Modality::Text, 10.0, 0.0, 12.0, 1.0)
+            }
+        })
+        .collect();
+    Workload { name: "overload-storm-sim".into(), requests }
+}
+
 /// VBench sim: text (or image) prompts for DiT image/video generation.
 pub fn vbench(seed: u64, n: usize, rate: f64, steps: usize, image_cond: bool) -> Workload {
     let mut rng = Prng::new(seed ^ 0xBE9C);
@@ -276,6 +302,21 @@ mod tests {
     }
 
     #[test]
+    fn overload_storm_mixes_cost_classes() {
+        let w = overload_storm(1, 40, 80.0);
+        assert_eq!(w.len(), 40);
+        let (heavy, chat): (Vec<_>, Vec<_>) = w.requests.iter().partition(|r| r.mm_frames > 0);
+        assert_eq!(heavy.len(), 10, "every 4th request is heavy analysis");
+        let h_in: f64 =
+            heavy.iter().map(|r| r.total_input_tokens() as f64).sum::<f64>() / heavy.len() as f64;
+        let c_in: f64 =
+            chat.iter().map(|r| r.total_input_tokens() as f64).sum::<f64>() / chat.len() as f64;
+        assert!(h_in > 5.0 * c_in, "heavy input {h_in} vs chat input {c_in}");
+        // Online by construction: admission control is a live-traffic policy.
+        assert!(w.requests.last().unwrap().arrival_s > 0.0);
+    }
+
+    #[test]
     fn prop_limits_respected() {
         quick("trace_limits", |rng| {
             let seed = rng.next_u64();
@@ -288,6 +329,7 @@ mod tests {
                 vbench(seed, n, 0.0, 20, false),
                 bursty_mixed(seed, n, 2.0),
                 prefill_heavy(seed, n, 56.0),
+                overload_storm(seed, n, 80.0),
             ] {
                 for r in &w.requests {
                     assert!(r.total_input_tokens() <= 210, "{}", r.total_input_tokens());

@@ -1,0 +1,364 @@
+//! Overload-control acceptance tests (ISSUE 6).
+//!
+//! Property tests (artifact-free): the [`AdmissionController`] state
+//! machine under randomized submit/reject/shed/cancel/complete
+//! interleavings — shedding never touches started work, no admitted
+//! request is silently dropped, the ledger's counters stay conserved —
+//! and the WFQ scheduler's tenant shares stay within their weight
+//! bounds under random floods.  Live-session tests (need compiled
+//! artifacts; skipped in CI containers without JAX, like the other
+//! session suites): the deadline-cancel vs shed race resolves every
+//! stream with exactly one terminal event at randomized shed points.
+
+use std::collections::BTreeSet;
+use std::time::Duration;
+
+use omni_serve::config::{presets, AdmissionConfig};
+use omni_serve::engine::ar::token_job;
+use omni_serve::engine::SamplingParams;
+use omni_serve::orchestrator::{Orchestrator, RunOptions};
+use omni_serve::scheduler::{EngineView, FifoPolicy, StageScheduler};
+use omni_serve::serving::admission::Decision;
+use omni_serve::serving::{
+    AdmissionController, OmniRequest, OutputDelta, ServingSession, SessionOptions, StreamRecv,
+};
+use omni_serve::stage_graph::transfers::{EngineCmd, Registry};
+use omni_serve::trace::{datasets, Modality, Request};
+use omni_serve::util::{propcheck, Prng};
+
+fn req(id: u64, max_text: usize) -> Request {
+    Request {
+        id,
+        arrival_s: 0.0,
+        modality: Modality::Text,
+        prompt_tokens: vec![1, 2, 3, 4],
+        mm_frames: 0,
+        seed: id,
+        max_text_tokens: max_text,
+        max_audio_tokens: 0,
+        diffusion_steps: 0,
+        ignore_eos: true,
+    }
+}
+
+/// Deterministic pick from an ordered set (HashSet iteration order would
+/// break seed replay).
+fn pick(rng: &mut Prng, set: &BTreeSet<u64>) -> Option<u64> {
+    if set.is_empty() {
+        return None;
+    }
+    let i = rng.below(set.len() as u64) as usize;
+    set.iter().nth(i).copied()
+}
+
+// ---------------------------------------------------------------------------
+// Satellite: the admission state machine under randomized interleavings.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn admission_ledger_survives_randomized_interleavings() {
+    propcheck::check("admission_interleavings", 192, |rng| {
+        let horizon = 0.1 + rng.f64() * 2.0;
+        let ctrl = AdmissionController::new(AdmissionConfig {
+            shed_horizon_s: horizon,
+            tenant_weights: vec![("acme".into(), 4.0), ("zeta".into(), 2.0)],
+            ..Default::default()
+        })
+        .unwrap();
+        let mut live: BTreeSet<u64> = BTreeSet::new();
+        let mut started: BTreeSet<u64> = BTreeSet::new();
+        let mut retired: BTreeSet<u64> = BTreeSet::new();
+        let (mut admitted, mut rejected, mut shed_total) = (0u64, 0u64, 0u64);
+        let mut next_id = 0u64;
+        for _ in 0..rng.range(20, 120) {
+            match rng.below(100) {
+                // Submit: a fresh request with a random cost, maybe a
+                // deadline, over a random lane count.
+                0..=44 => {
+                    next_id += 1;
+                    let id = next_id;
+                    let r = req(id, rng.range(1, 400));
+                    let deadline = rng.bool(0.7).then(|| 0.05 + rng.f64() * 4.0);
+                    match ctrl.decide(&r, deadline, 0.0, rng.range(1, 4)) {
+                        Decision::Admit => {
+                            admitted += 1;
+                            assert!(ctrl.tracks(id), "admitted request must be tracked");
+                            live.insert(id);
+                        }
+                        Decision::Reject { reason, retry_after_s } => {
+                            rejected += 1;
+                            assert!(deadline.is_some(), "deadline-less submits always admit");
+                            assert!(!ctrl.tracks(id), "rejects must not enter the ledger");
+                            assert!(!reason.is_empty());
+                            assert!(retry_after_s > 0.0);
+                        }
+                    }
+                }
+                // A stage starts some queued request (the controller only
+                // learns this lazily, through the shed sweep's closure).
+                45..=59 => {
+                    if let Some(id) = pick(rng, &live) {
+                        started.insert(id);
+                    }
+                }
+                // Completion or cancellation retires a live request; a
+                // second resolve of anything retired must be a no-op.
+                60..=79 => {
+                    if let Some(id) = pick(rng, &live) {
+                        ctrl.resolve(id, rng.bool(0.6).then(|| rng.f64() * 10.0));
+                        assert!(!ctrl.tracks(id));
+                        live.remove(&id);
+                        retired.insert(id);
+                    }
+                    if let Some(id) = pick(rng, &retired) {
+                        ctrl.resolve(id, Some(1.0));
+                        assert!(!ctrl.tracks(id));
+                    }
+                }
+                // Emergency shed sweep.
+                _ => {
+                    let lanes = rng.range(1, 4);
+                    let victims = ctrl.shed(lanes, |id| started.contains(&id));
+                    for id in &victims {
+                        assert!(!started.contains(id), "shed must never touch started work");
+                        assert!(live.remove(id), "shed victim {id} was not live");
+                        assert!(!ctrl.tracks(*id));
+                        retired.insert(*id);
+                    }
+                    shed_total += victims.len() as u64;
+                    let st = ctrl.stats();
+                    assert!(
+                        st.backlog_s / lanes as f64 <= horizon + 1e-9,
+                        "post-shed unstarted backlog {:.3}s over {lanes} lane(s) still \
+                         exceeds the {horizon:.3}s horizon",
+                        st.backlog_s
+                    );
+                }
+            }
+            // Conservation after every step: counters match the model and
+            // every admitted request is live or retired, never lost.
+            let st = ctrl.stats();
+            assert_eq!(st.admitted, admitted);
+            assert_eq!(st.rejected, rejected);
+            assert_eq!(st.shed, shed_total);
+            assert_eq!(
+                st.admitted,
+                live.len() as u64 + retired.len() as u64,
+                "an admitted request went missing without resolve or shed"
+            );
+            assert!(st.backlog_s >= 0.0);
+        }
+        // Drain: resolving the survivors empties the ledger completely.
+        for id in std::mem::take(&mut live) {
+            ctrl.resolve(id, None);
+        }
+        assert_eq!(ctrl.stats().backlog_s, 0.0);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Satellite: WFQ tenant shares stay within weight bounds.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn wfq_shares_stay_within_weight_bounds_under_random_floods() {
+    propcheck::check("wfq_tenant_shares", 128, |rng| {
+        let pool = [1.0, 2.0, 4.0, 8.0];
+        let n_tenants = rng.range(2, 4);
+        let weights: Vec<f64> = (0..n_tenants).map(|_| *rng.choose(&pool)).collect();
+        let k = rng.range(4, 12); // equal-cost jobs per tenant
+        let mut s = StageScheduler::new(Box::new(FifoPolicy), 0);
+        s.set_tenant_weights(weights.clone());
+        // Random interleaved arrival order, all before any service: id
+        // encodes (tenant, per-tenant sequence number).
+        let mut arrivals: Vec<u32> = Vec::with_capacity(n_tenants * k);
+        for t in 0..n_tenants as u32 {
+            for _ in 0..k {
+                arrivals.push(t);
+            }
+        }
+        rng.shuffle(&mut arrivals);
+        let mut seq = vec![0u64; n_tenants];
+        for &t in &arrivals {
+            let id = t as u64 * 1000 + seq[t as usize];
+            seq[t as usize] += 1;
+            let cmd = EngineCmd::SubmitAr(token_job(
+                id,
+                &[1, 2],
+                SamplingParams { max_new_tokens: 1, ..Default::default() },
+            ));
+            s.enqueue_wfq(cmd, 0.0, 1, t);
+        }
+        let total = n_tenants * k;
+        let view = EngineView { running: 0, max_batch: total, ..Default::default() };
+        let order: Vec<u64> = s
+            .ready(&view, 0.1)
+            .iter()
+            .map(|c| match c {
+                EngineCmd::SubmitAr(j) => j.req_id,
+                other => panic!("{other:?}"),
+            })
+            .collect();
+        assert_eq!(order.len(), total, "WFQ reorders, never drops");
+        // Per-tenant arrival order is preserved exactly.
+        for t in 0..n_tenants as u64 {
+            let mine: Vec<u64> = order.iter().copied().filter(|id| id / 1000 == t).collect();
+            assert_eq!(mine, (0..k as u64).map(|j| t * 1000 + j).collect::<Vec<u64>>());
+        }
+        // SCFQ fairness: in every service prefix, any two tenants that
+        // both still have queued work have received normalized service
+        // (jobs / weight) within a couple of weighted quanta of each
+        // other — a flood cannot run ahead of its share.
+        let mut served = vec![0usize; n_tenants];
+        for id in &order {
+            served[(id / 1000) as usize] += 1;
+            for a in 0..n_tenants {
+                for b in (a + 1)..n_tenants {
+                    if served[a] < k && served[b] < k {
+                        let diff =
+                            served[a] as f64 / weights[a] - served[b] as f64 / weights[b];
+                        assert!(
+                            diff.abs() <= 2.0 * (1.0 / weights[a] + 1.0 / weights[b]) + 1e-9,
+                            "tenant {a} (w {}) at {} vs tenant {b} (w {}) at {}: \
+                             normalized-service gap {diff:.3} in {order:?}",
+                            weights[a],
+                            served[a],
+                            weights[b],
+                            served[b]
+                        );
+                    }
+                }
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Regression (bugfix satellite): the deadline-cancel vs shed race must
+// resolve every stream with EXACTLY one terminal event, at randomized
+// shed points, with clean ledger/tombstone bookkeeping afterwards.
+// Needs compiled artifacts; skipped otherwise.
+// ---------------------------------------------------------------------------
+
+fn artifacts() -> Option<std::sync::Arc<omni_serve::runtime::Artifacts>> {
+    let dir = omni_serve::runtime::Artifacts::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts`");
+        return None;
+    }
+    Some(std::sync::Arc::new(omni_serve::runtime::Artifacts::load(&dir).unwrap()))
+}
+
+#[test]
+fn shed_and_deadline_cancel_race_yields_exactly_one_terminal_event() {
+    let Some(artifacts) = artifacts() else { return };
+    let mut rng = Prng::new(0x51ED);
+    for trial in 0..4u64 {
+        let orch = Orchestrator::new(
+            presets::mimo_audio(1),
+            artifacts.clone(),
+            Registry::builtin(),
+            RunOptions::default(),
+        )
+        .unwrap();
+        let session = ServingSession::start(
+            &orch,
+            SessionOptions {
+                admission: Some(AdmissionConfig {
+                    // A near-zero horizon makes the shedder fire on almost
+                    // any backlog, while the tight deadlines below race it
+                    // (and explicit client cancels) to the same victims.
+                    shed_horizon_s: 0.02,
+                    ..Default::default()
+                }),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let wl = datasets::seedtts(trial ^ 0x9E37, 8, 0.0);
+        let mut streams = Vec::new();
+        for r in &wl.requests {
+            let mut r = r.clone();
+            r.max_text_tokens = 96 + rng.range(0, 64);
+            r.max_audio_tokens = 128;
+            let mut oreq = OmniRequest::from(r).streaming(true);
+            if rng.bool(0.7) {
+                oreq = oreq.deadline_s(0.005 + rng.f64() * 0.1);
+            }
+            let mut rs = session.submit_request(oreq).unwrap();
+            if rng.bool(0.2) {
+                let _ = rs.cancel();
+            }
+            streams.push(rs);
+        }
+        let (mut completed, mut cancelled, mut rejected) = (0usize, 0usize, 0usize);
+        for rs in &mut streams {
+            let mut terminals = 0usize;
+            loop {
+                match rs.next_timeout(Duration::from_secs(30)) {
+                    StreamRecv::Delta(OutputDelta::Done { cancelled: c, .. }) => {
+                        terminals += 1;
+                        if c {
+                            cancelled += 1;
+                        } else {
+                            completed += 1;
+                        }
+                    }
+                    StreamRecv::Delta(OutputDelta::Rejected { reason, retry_after_s, .. }) => {
+                        terminals += 1;
+                        rejected += 1;
+                        assert!(!reason.is_empty(), "rejection must carry a reason");
+                        assert!(retry_after_s > 0.0);
+                    }
+                    StreamRecv::Delta(_) => continue,
+                    StreamRecv::Timeout => panic!("trial {trial}: stream starved"),
+                    StreamRecv::Closed => break,
+                }
+            }
+            assert_eq!(
+                terminals, 1,
+                "trial {trial}: a stream saw {terminals} terminal events (want exactly 1)"
+            );
+        }
+        assert_eq!(
+            completed + cancelled + rejected,
+            wl.len(),
+            "trial {trial}: every request reaches exactly one outcome"
+        );
+
+        // Bookkeeping after the storm: the session drains, stage queues
+        // empty, and the recorder agrees with the per-stream outcomes.
+        assert!(session.drain(Duration::from_secs(30)), "trial {trial}: session failed to drain");
+        assert_eq!(session.inflight(), 0);
+        let t0 = std::time::Instant::now();
+        loop {
+            let stats = session.stage_stats();
+            if stats.iter().all(|s| s.queued == 0) {
+                break;
+            }
+            assert!(
+                t0.elapsed() < Duration::from_secs(20),
+                "trial {trial}: stage queues never drained: {stats:?}"
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        let rep = session.live_report();
+        assert_eq!(rep.offered, wl.len(), "every submit is offered load");
+        assert_eq!(rep.completed, completed);
+        assert_eq!(rep.cancelled, cancelled);
+        assert_eq!(rep.rejected, rejected);
+        let adm = session.admission_stats().unwrap();
+        // The ledger may count a shed whose stream claim lost the race
+        // (the request resolved through cancel/complete instead), so the
+        // counters bound — rather than equal — the recorder's view.
+        assert!(
+            rejected as u64 <= adm.rejected + adm.shed,
+            "trial {trial}: {rejected} rejected streams but the ledger saw only \
+             {} rejects + {} sheds",
+            adm.rejected,
+            adm.shed
+        );
+        assert_eq!(adm.backlog_s, 0.0, "trial {trial}: drained session left ledger backlog");
+        session.shutdown(Some("backbone")).unwrap();
+    }
+}

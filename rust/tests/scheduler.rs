@@ -155,6 +155,66 @@ fn continuous_batching_beats_fifo_on_bundled_ar_traces() {
 }
 
 // ---------------------------------------------------------------------------
+// Overload control: SLO-aware admission + shedding beats
+// FIFO-with-deadlines on goodput at every overload multiple,
+// deterministically across 32 seeds — the acceptance property behind
+// `omni-serve bench --trace overload-storm` (both call
+// `overload_comparison`, so the gate and this test cannot drift).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn admission_beats_fifo_goodput_across_32_seeds_of_overload_storm() {
+    use omni_serve::scheduler::sim::overload_comparison;
+    let lanes = 4;
+    for mult in [2.0, 3.0, 5.0] {
+        let mut worst = f64::INFINITY;
+        let mut sum = 0.0;
+        for seed in 1..=32u64 {
+            let c = overload_comparison(seed, lanes, mult);
+            for rep in [&c.fifo, &c.admission] {
+                // Nothing is ever silently dropped: every offered request
+                // lands in exactly one outcome bucket.
+                assert_eq!(rep.offered, 96);
+                assert_eq!(
+                    rep.rejected + rep.shed + rep.expired + rep.in_slo + rep.missed,
+                    rep.offered,
+                    "{} seed {seed} at {mult}x: outcome buckets do not partition",
+                    rep.policy
+                );
+            }
+            assert_eq!(c.fifo.rejected + c.fifo.shed, 0, "FIFO never refuses work");
+            let m = c.margin();
+            assert!(
+                m > 0.0,
+                "seed {seed} at {mult}x load: admission goodput {:.3} !> fifo {:.3}",
+                c.admission.goodput(),
+                c.fifo.goodput()
+            );
+            sum += m;
+            worst = worst.min(m);
+        }
+        println!(
+            "overload-storm {mult:.0}x over 32 seeds: goodput margin mean {:+.3} worst {:+.3}",
+            sum / 32.0,
+            worst
+        );
+        assert!(worst > 0.0, "margin must hold for every seed, worst was {worst:+.3}");
+    }
+    // Determinism: the same seed replays to the identical comparison.
+    let a = overload_comparison(7, lanes, 3.0);
+    let b = overload_comparison(7, lanes, 3.0);
+    assert_eq!(a.margin(), b.margin());
+    assert_eq!(
+        (a.fifo.in_slo, a.fifo.expired, a.fifo.missed),
+        (b.fifo.in_slo, b.fifo.expired, b.fifo.missed)
+    );
+    assert_eq!(
+        (a.admission.in_slo, a.admission.rejected, a.admission.shed),
+        (b.admission.in_slo, b.admission.rejected, b.admission.shed)
+    );
+}
+
+// ---------------------------------------------------------------------------
 // StageAllocator validation.
 // ---------------------------------------------------------------------------
 

@@ -13,7 +13,7 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::sync::Arc;
 
-use omni_serve::config::presets;
+use omni_serve::config::{presets, AdmissionConfig};
 use omni_serve::json;
 use omni_serve::runtime::Artifacts;
 use omni_serve::server::{ServeOptions, Server};
@@ -71,12 +71,16 @@ fn loopback_ping_generate_stats_shutdown() {
     assert_eq!(v.get("ok").as_bool(), Some(true));
     assert_eq!(v.get("cancelled").as_bool(), Some(false));
 
-    // 2. stats before any generate: static plan, not live.
+    // 2. stats before any generate: static plan, not live; the goodput
+    // accounting keys are present (zeroed) even without a session.
     let v = send(&mut c, &mut reader, r#"{"op": "stats"}"#);
     assert_eq!(v.get("live").as_bool(), Some(false));
     let stages = v.get("stages").as_arr().unwrap();
     assert_eq!(stages.len(), 2, "mimo pipeline has backbone + patch_dec");
     assert_eq!(stages[0].get("replicas").as_usize(), Some(1));
+    assert_eq!(v.get("offered").as_usize(), Some(0));
+    assert_eq!(v.get("rejected").as_usize(), Some(0));
+    assert_eq!(v.get("goodput").as_f64(), Some(0.0));
 
     // 3. generate
     let v = send(
@@ -182,5 +186,101 @@ fn streaming_generate_with_cross_connection_cancel() {
     let v = send(&mut b, &mut rb, r#"{"op": "shutdown"}"#);
     assert_eq!(v.get("ok").as_bool(), Some(true));
     drop((a, ra, b, rb));
+    h.join().unwrap().unwrap();
+}
+
+/// Overload over real TCP (ISSUE 6): an admission-enabled server answers
+/// a flood of unmeetable-deadline `generate`s with structured
+/// `{"error": "rejected"}` frames on the still-alive connection — one-shot
+/// AND streaming — then serves an admitted request to a clean `done`, and
+/// `stats`/`shutdown` report the goodput accounting.  Needs artifacts
+/// (skipped otherwise, like the other live-session suites).
+#[test]
+fn overload_rejections_are_structured_frames_and_stats_report_goodput() {
+    let dir = Artifacts::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let artifacts = Arc::new(Artifacts::load(&dir).unwrap());
+    let server = Server::bind(
+        "127.0.0.1:0",
+        presets::mimo_audio(1),
+        artifacts,
+        ServeOptions { admission: Some(AdmissionConfig::default()), ..Default::default() },
+    )
+    .unwrap();
+    let addr = server.addr();
+    let h = std::thread::spawn(move || server.serve_n(1));
+
+    let mut c = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(c.try_clone().unwrap());
+
+    // 1. Flood: four one-shot requests whose 50 ms deadline can never
+    // cover their own multi-second estimated cost.  Each gets an
+    // immediate structured rejection and the connection stays usable.
+    for _ in 0..4 {
+        let v = send(
+            &mut c,
+            &mut reader,
+            r#"{"op": "generate", "prompt": "storm", "deadline_s": 0.05,
+                "max_text_tokens": 512, "max_audio_tokens": 512}"#
+                .replace('\n', " ")
+                .as_str(),
+        );
+        assert_eq!(v.get("error").as_str(), Some("rejected"), "{v:?}");
+        assert!(v.get("req_id").as_usize().is_some());
+        let reason = v.get("reason").as_str().unwrap_or_default();
+        assert!(reason.contains("deadline"), "reason should name the deadline: {v:?}");
+        assert!(v.get("retry_after_s").as_f64().unwrap() > 0.0);
+    }
+
+    // 2. A streaming flood victim: the accepted header goes out first,
+    // then the stream terminates with the structured rejected frame —
+    // never a bare connection drop.
+    let v = send(
+        &mut c,
+        &mut reader,
+        r#"{"op": "generate", "stream": true, "prompt": "storm", "deadline_s": 0.05,
+            "max_text_tokens": 512, "max_audio_tokens": 512}"#
+            .replace('\n', " ")
+            .as_str(),
+    );
+    assert_eq!(v.get("event").as_str(), Some("accepted"), "{v:?}");
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let v = json::parse(&line).unwrap_or_else(|e| panic!("bad frame `{line}`: {e}"));
+    assert_eq!(v.get("error").as_str(), Some("rejected"), "{v:?}");
+    assert_eq!(v.get("event").as_str(), Some("rejected"), "{v:?}");
+    assert!(!v.get("reason").is_null());
+
+    // 3. An admitted request (no deadline: nothing to miss) still runs
+    // to a clean completion on the same connection.
+    let v = send(
+        &mut c,
+        &mut reader,
+        r#"{"op": "generate", "prompt": "hi", "max_text_tokens": 4, "max_audio_tokens": 8}"#,
+    );
+    assert_eq!(v.get("completed").as_bool(), Some(true), "{v:?}");
+
+    // 4. stats: the live session's goodput accounting — 6 offered, 5
+    // rejected, the deadline-less completion in-SLO.
+    let v = send(&mut c, &mut reader, r#"{"op": "stats"}"#);
+    assert_eq!(v.get("live").as_bool(), Some(true));
+    assert_eq!(v.get("offered").as_usize(), Some(6));
+    assert_eq!(v.get("rejected").as_usize(), Some(5));
+    assert_eq!(v.get("in_slo").as_usize(), Some(1));
+    assert_eq!(v.get("shed").as_usize(), Some(0), "nothing queued long enough to shed");
+    let goodput = v.get("goodput").as_f64().unwrap();
+    assert!((goodput - 1.0 / 6.0).abs() < 1e-9, "goodput 1 in-SLO / 6 offered, got {goodput}");
+
+    // 5. shutdown reports the same accounting.
+    let v = send(&mut c, &mut reader, r#"{"op": "shutdown"}"#);
+    assert_eq!(v.get("ok").as_bool(), Some(true));
+    assert_eq!(v.get("completed").as_usize(), Some(1));
+    assert_eq!(v.get("rejected").as_usize(), Some(5));
+    assert!(v.get("goodput").as_f64().unwrap() > 0.0);
+
+    drop((c, reader));
     h.join().unwrap().unwrap();
 }

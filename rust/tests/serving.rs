@@ -93,6 +93,7 @@ fn serving_session_submits_continuously_and_drains() {
                     assert!(c.completed_t >= h.submitted_t());
                     break;
                 }
+                WaitResult::Rejected { .. } => panic!("no admission controller configured"),
                 WaitResult::Timeout => assert!(!session.failed(), "pipeline failed"),
                 WaitResult::Closed => panic!("collector gone"),
             }
@@ -104,6 +105,7 @@ fn serving_session_submits_continuously_and_drains() {
     loop {
         match h.wait_timeout(Duration::from_millis(200)) {
             WaitResult::Done(_) => break,
+            WaitResult::Rejected { .. } => panic!("no admission controller configured"),
             WaitResult::Timeout => assert!(!session.failed()),
             WaitResult::Closed => panic!("collector gone"),
         }
@@ -166,6 +168,7 @@ fn streaming_request_delivers_typed_deltas_before_done() {
                 assert!(c.completed_t >= h.submitted_t());
                 break;
             }
+            WaitResult::Rejected { .. } => panic!("no admission controller configured"),
             WaitResult::Timeout => assert!(!session.failed()),
             WaitResult::Closed => panic!("collector gone"),
         }
