@@ -24,6 +24,7 @@ pub const BOOL_FLAGS: &[&str] = &[
     "quiet",
     "autoscale",
     "admission",
+    "no-prefix-cache",
 ];
 
 impl Args {
@@ -135,6 +136,15 @@ mod tests {
         assert!(a.flag_bool("admission"));
         assert_eq!(a.flag_f64("slack", 1.0).unwrap(), 1.5);
         assert_eq!(a.flag_f64("shed-horizon", 4.0).unwrap(), 2.0);
+    }
+
+    #[test]
+    fn no_prefix_cache_is_a_bool_flag() {
+        // `--no-prefix-cache` must not swallow the eviction name after it.
+        let a = parse("serve --no-prefix-cache --eviction hit_aware --encoder-cache 0");
+        assert!(a.flag_bool("no-prefix-cache"));
+        assert_eq!(a.flag("eviction"), Some("hit_aware"));
+        assert_eq!(a.flag_usize("encoder-cache", 256).unwrap(), 0);
     }
 
     #[test]

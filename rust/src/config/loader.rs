@@ -6,9 +6,10 @@ use std::path::Path;
 use anyhow::{Context, Result};
 
 use super::{
-    AdmissionConfig, AutoscalerConfig, ConnectorKind, DiffusionParams, EdgeConfig, PipelineConfig,
-    RoutingKind, SchedParams, SchedPolicyKind, StageConfig, StageKind, StageRole,
+    AdmissionConfig, AutoscalerConfig, CacheConfig, ConnectorKind, DiffusionParams, EdgeConfig,
+    PipelineConfig, RoutingKind, SchedParams, SchedPolicyKind, StageConfig, StageKind, StageRole,
 };
+use crate::kv_cache::EvictionPolicy;
 use crate::jobj;
 use crate::json::{self, Value};
 
@@ -135,6 +136,26 @@ pub fn from_value(v: &Value) -> Result<PipelineConfig> {
             tenant_weights,
         })
     };
+    let cv = v.get("cache");
+    let cache = if cv.is_null() {
+        None
+    } else {
+        // Same guard as the autoscaler: `"cache": true` is a typo, not
+        // "enable with defaults".
+        anyhow::ensure!(cv.as_obj().is_some(), "`cache` must be an object");
+        let d = CacheConfig::default();
+        Some(CacheConfig {
+            prefix_cache: cv.get("prefix_cache").as_bool().unwrap_or(d.prefix_cache),
+            eviction: match cv.get("eviction").as_str() {
+                Some(name) => EvictionPolicy::from_name(name)?,
+                None => d.eviction,
+            },
+            encoder_cache_capacity: cv
+                .get("encoder_cache_capacity")
+                .as_usize()
+                .unwrap_or(d.encoder_cache_capacity),
+        })
+    };
     let cfg = PipelineConfig {
         name: v.req_str("name")?.to_string(),
         stages,
@@ -146,6 +167,7 @@ pub fn from_value(v: &Value) -> Result<PipelineConfig> {
             .unwrap_or(crate::device::DEFAULT_DEVICE_BYTES),
         autoscaler,
         admission,
+        cache,
     };
     cfg.validate()?;
     Ok(cfg)
@@ -231,6 +253,18 @@ pub fn to_value(p: &PipelineConfig) -> Value {
                     "shed_horizon_s" => a.shed_horizon_s,
                     "retry_after_s" => a.retry_after_s,
                     "tenant_weights" => Value::Obj(weights),
+                },
+            );
+        }
+    }
+    if let Some(c) = &p.cache {
+        if let Value::Obj(m) = &mut out {
+            m.insert(
+                "cache".to_string(),
+                jobj! {
+                    "prefix_cache" => c.prefix_cache,
+                    "eviction" => c.eviction.name(),
+                    "encoder_cache_capacity" => c.encoder_cache_capacity,
                 },
             );
         }
@@ -413,6 +447,53 @@ mod tests {
             r#"{"name": "x", "n_devices": 1, "stages": [
                 {"name": "a", "model": "mimo", "kind": "ar", "devices": [0]}
             ], "admission": true}"#,
+        )
+        .unwrap();
+        assert!(from_value(&typo).is_err());
+    }
+
+    #[test]
+    fn cache_block_roundtrips_and_defaults() {
+        let mut p = presets::qwen3_omni();
+        p.cache = Some(CacheConfig {
+            prefix_cache: true,
+            eviction: EvictionPolicy::HitAware,
+            encoder_cache_capacity: 64,
+        });
+        let s = to_json_string(&p);
+        let q = from_value(&json::parse(&s).unwrap()).unwrap();
+        assert_eq!(q.cache, p.cache);
+        // Partial block: unspecified fields take the defaults; the
+        // eviction name accepts the hyphenated spelling.
+        let v = json::parse(
+            r#"{"name": "x", "n_devices": 1, "stages": [
+                {"name": "a", "model": "mimo", "kind": "ar", "devices": [0]}
+            ], "cache": {"eviction": "hit-aware"}}"#,
+        )
+        .unwrap();
+        let q = from_value(&v).unwrap();
+        let c = q.cache.unwrap();
+        assert_eq!(c.eviction, EvictionPolicy::HitAware);
+        assert!(c.prefix_cache);
+        assert_eq!(
+            c.encoder_cache_capacity,
+            CacheConfig::default().encoder_cache_capacity
+        );
+        // No block at all: None (engine defaults, caches on).
+        assert!(presets::qwen3_omni().cache.is_none());
+        // Unknown eviction policy rejected at load time.
+        let bad = json::parse(
+            r#"{"name": "x", "n_devices": 1, "stages": [
+                {"name": "a", "model": "mimo", "kind": "ar", "devices": [0]}
+            ], "cache": {"eviction": "mru"}}"#,
+        )
+        .unwrap();
+        assert!(from_value(&bad).is_err());
+        // A non-object value is a config mistake, not "all defaults".
+        let typo = json::parse(
+            r#"{"name": "x", "n_devices": 1, "stages": [
+                {"name": "a", "model": "mimo", "kind": "ar", "devices": [0]}
+            ], "cache": false}"#,
         )
         .unwrap();
         assert!(from_value(&typo).is_err());

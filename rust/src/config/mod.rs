@@ -10,6 +10,8 @@ pub mod presets;
 
 use anyhow::{bail, Result};
 
+use crate::kv_cache::EvictionPolicy;
+
 /// What kind of engine serves a stage.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum StageKind {
@@ -209,6 +211,13 @@ pub enum RoutingKind {
     /// KV/sequence state and chunk-accumulating transfers see the whole
     /// stream.  Required for replicated AR consumers.
     Affinity,
+    /// Affinity stickiness with a cache-directed first pick (ISSUE 7):
+    /// a request's first item routes to the replica whose advertised
+    /// prefix-cache cover includes the request's prompt signature — the
+    /// replica that can skip the prefill — falling back to the smallest
+    /// load signal when no replica covers it.  Later items follow the
+    /// sticky map, so stateful AR consumers stay safe.
+    CacheAware,
 }
 
 impl RoutingKind {
@@ -218,6 +227,7 @@ impl RoutingKind {
             RoutingKind::RoundRobin => "round_robin",
             RoutingKind::LeastDepth => "least_depth",
             RoutingKind::Affinity => "affinity",
+            RoutingKind::CacheAware => "cache_aware",
         }
     }
 
@@ -227,6 +237,7 @@ impl RoutingKind {
             "round_robin" | "round-robin" => RoutingKind::RoundRobin,
             "least_depth" | "least-depth" => RoutingKind::LeastDepth,
             "affinity" => RoutingKind::Affinity,
+            "cache_aware" | "cache-aware" => RoutingKind::CacheAware,
             other => bail!("unknown routing kind `{other}`"),
         })
     }
@@ -519,6 +530,41 @@ impl AdmissionConfig {
     }
 }
 
+/// Cross-request caching knobs (ISSUE 7): the global KV prefix cache in
+/// every AR stage's [`crate::kv_cache::BlockManager`] and the
+/// content-addressed encoder-output cache.  `None` on the pipeline means
+/// the defaults below (both caches ON) — set an explicit config to turn
+/// them off or tune eviction.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CacheConfig {
+    /// Keep released hashed KV blocks resident so later requests sharing
+    /// the prompt prefix skip prefill.  Off restores release-means-free.
+    pub prefix_cache: bool,
+    /// Which refcount-0 cached block to reclaim under memory pressure.
+    pub eviction: EvictionPolicy,
+    /// Encoder-output cache bound in entries; 0 disables it.
+    pub encoder_cache_capacity: usize,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        Self {
+            prefix_cache: true,
+            eviction: EvictionPolicy::Lru,
+            encoder_cache_capacity: crate::engine::encoder::DEFAULT_CACHE_CAPACITY,
+        }
+    }
+}
+
+impl CacheConfig {
+    pub fn validate(&self) -> Result<()> {
+        // Every combination is currently meaningful (a disabled prefix
+        // cache simply ignores the eviction policy); validation exists so
+        // future knobs have a home and loaders fail uniformly.
+        Ok(())
+    }
+}
+
 /// An edge of the stage graph: a named transfer function plus transport.
 #[derive(Debug, Clone)]
 pub struct EdgeConfig {
@@ -548,6 +594,9 @@ pub struct PipelineConfig {
     /// SLO-aware admission control + shedding; `None` = queue everything
     /// (deadlines still cancel late, but nothing is rejected early).
     pub admission: Option<AdmissionConfig>,
+    /// Cross-request prefix / encoder caching; `None` = defaults (both
+    /// caches on, LRU eviction).
+    pub cache: Option<CacheConfig>,
 }
 
 impl PipelineConfig {
@@ -598,6 +647,9 @@ impl PipelineConfig {
         if let Some(a) = &self.admission {
             a.validate()?;
         }
+        if let Some(c) = &self.cache {
+            c.validate()?;
+        }
         for e in &self.edges {
             for end in [&e.from, &e.to] {
                 if !self.stages.iter().any(|s| &s.name == end) {
@@ -613,11 +665,14 @@ impl PipelineConfig {
             let to = self.stage(&e.to).unwrap();
             if to.replicas > 1
                 && to.kind == StageKind::Ar
-                && !matches!(e.routing, RoutingKind::Auto | RoutingKind::Affinity)
+                && !matches!(
+                    e.routing,
+                    RoutingKind::Auto | RoutingKind::Affinity | RoutingKind::CacheAware
+                )
             {
                 bail!(
                     "edge {}->{}: AR consumer `{}` has {} replicas; stateful stages \
-                     require `affinity` routing (got `{}`)",
+                     require `affinity` (or `cache_aware`) routing (got `{}`)",
                     e.from,
                     e.to,
                     e.to,
@@ -656,6 +711,7 @@ mod tests {
             device_bytes: 1 << 20,
             autoscaler: None,
             admission: None,
+            cache: None,
         }
     }
 
@@ -719,9 +775,14 @@ mod tests {
     #[test]
     fn routing_kind_roundtrip_and_resolution() {
         for r in [RoutingKind::Auto, RoutingKind::RoundRobin,
-                  RoutingKind::LeastDepth, RoutingKind::Affinity] {
+                  RoutingKind::LeastDepth, RoutingKind::Affinity,
+                  RoutingKind::CacheAware] {
             assert_eq!(RoutingKind::from_name(r.name()).unwrap(), r);
         }
+        assert_eq!(
+            RoutingKind::from_name("cache-aware").unwrap(),
+            RoutingKind::CacheAware
+        );
         assert!(RoutingKind::from_name("nope").is_err());
         // Auto resolves by consumer replication; explicit passes through.
         assert_eq!(RoutingKind::Auto.resolve(1), RoutingKind::RoundRobin);
@@ -750,6 +811,27 @@ mod tests {
         p.edges[0].routing = RoutingKind::Affinity;
         p.validate().unwrap();
         p.edges[0].routing = RoutingKind::Auto;
+        p.validate().unwrap();
+        // Cache-aware keeps affinity-grade stickiness, so it is allowed.
+        p.edges[0].routing = RoutingKind::CacheAware;
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn cache_config_defaults_and_validation() {
+        let c = CacheConfig::default();
+        assert!(c.prefix_cache);
+        assert_eq!(c.eviction, EvictionPolicy::Lru);
+        assert_eq!(
+            c.encoder_cache_capacity,
+            crate::engine::encoder::DEFAULT_CACHE_CAPACITY
+        );
+        let mut p = two_stage();
+        p.cache = Some(CacheConfig {
+            prefix_cache: false,
+            eviction: EvictionPolicy::HitAware,
+            encoder_cache_capacity: 0,
+        });
         p.validate().unwrap();
     }
 

@@ -54,6 +54,7 @@ pub fn qwen25_omni() -> PipelineConfig {
         device_bytes: crate::device::DEFAULT_DEVICE_BYTES,
         autoscaler: None,
         admission: None,
+        cache: None,
     }
 }
 
@@ -83,21 +84,24 @@ pub fn qwen3_omni() -> PipelineConfig {
         device_bytes: crate::device::DEFAULT_DEVICE_BYTES,
         autoscaler: None,
         admission: None,
+        cache: None,
     }
 }
 
 /// Qwen3-Omni with the Talker stage replicated 2x (paper §3.3 "flexible
 /// GPU allocation": the Talker dominates end-to-end time on speech
 /// traces, so it gets two engine replicas; the Thinker→Talker edge uses
-/// affinity routing so each request's streamed conditioning and KV state
-/// stay on one replica).  The device budget is doubled so the extra
-/// replica's weights pass memory admission on the scaled testbed.
+/// cache-aware routing — affinity-grade stickiness so each request's
+/// streamed conditioning and KV state stay on one replica, with the
+/// first pick steered to the replica whose prefix cache already covers
+/// the prompt).  The device budget is doubled so the extra replica's
+/// weights pass memory admission on the scaled testbed.
 pub fn qwen3_omni_replicated() -> PipelineConfig {
     let mut p = qwen3_omni();
     p.name = "qwen3-omni-sim-rep2".into();
     let talker = p.stages.iter_mut().find(|s| s.name == "talker").unwrap();
     talker.replicas = 2;
-    p.edges[0].routing = RoutingKind::Affinity;
+    p.edges[0].routing = RoutingKind::CacheAware;
     p.device_bytes = 2 * crate::device::DEFAULT_DEVICE_BYTES;
     p
 }
@@ -169,6 +173,7 @@ pub fn bagel(i2i: bool) -> PipelineConfig {
         device_bytes: crate::device::DEFAULT_DEVICE_BYTES,
         autoscaler: None,
         admission: None,
+        cache: None,
     }
 }
 
@@ -191,6 +196,7 @@ pub fn mimo_audio(multi_step: usize) -> PipelineConfig {
         device_bytes: crate::device::DEFAULT_DEVICE_BYTES,
         autoscaler: None,
         admission: None,
+        cache: None,
     }
 }
 
@@ -212,6 +218,7 @@ pub fn dit_single(model: &str, steps: usize, stepcache: f32) -> PipelineConfig {
         device_bytes: crate::device::DEFAULT_DEVICE_BYTES,
         autoscaler: None,
         admission: None,
+        cache: None,
     }
 }
 
@@ -299,6 +306,6 @@ mod tests {
         p.validate().unwrap();
         assert_eq!(p.stage("talker").unwrap().replicas, 2);
         assert_eq!(p.stage("thinker").unwrap().replicas, 1);
-        assert_eq!(p.edges[0].routing, RoutingKind::Affinity);
+        assert_eq!(p.edges[0].routing, RoutingKind::CacheAware);
     }
 }

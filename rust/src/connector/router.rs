@@ -28,6 +28,15 @@
 //!   entry is dropped when the request's `finished` item passes, which is
 //!   also what lets a draining replica quiesce.  Required for replicated
 //!   AR consumers (validated at config load).
+//! * **cache-aware** — affinity stickiness with a cache-directed first
+//!   pick (the global prefix cache, ISSUE 7): each consumer replica
+//!   advertises the prompt signatures its KV prefix cache covers
+//!   ([`RouterRx::publish_prefix_cover`]), producers hint a request's
+//!   signature before its first item ([`RouterTx::hint_prompt_signature`]),
+//!   and the first pick prefers the least-loaded *covering* replica — the
+//!   one that can skip the prefill — falling back to least-depth when no
+//!   replica covers the prompt (or no hint was given).  Every later item
+//!   follows the sticky table exactly like affinity.
 //!
 //! With one consumer replica every policy degenerates to pass-through,
 //! which keeps single-replica pipelines behaviour-identical to the
@@ -51,7 +60,7 @@
 //!   the replica's channels (a removed consumer's senders drop, so its
 //!   receiver drains and reports closed).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -72,6 +81,9 @@ use super::{pair, ConnectorRx, ConnectorTx, TryRecv};
 pub struct ReplicaLoad {
     in_flight: AtomicUsize,
     queue_depth: AtomicUsize,
+    /// Prompt signatures the replica's prefix cache covers, published by
+    /// the consumer stage thread (cache-aware routing).
+    cover: Mutex<HashSet<u64>>,
 }
 
 impl ReplicaLoad {
@@ -79,11 +91,20 @@ impl ReplicaLoad {
     fn score(&self) -> usize {
         self.in_flight.load(Ordering::Relaxed) + self.queue_depth.load(Ordering::Relaxed)
     }
+
+    fn covers(&self, sig: u64) -> bool {
+        self.cover.lock().unwrap().contains(&sig)
+    }
 }
 
 /// Sticky request→endpoint assignments, shared by every producer replica
 /// of one affinity-routed edge.
 type StickyMap = Mutex<HashMap<u64, u64>>;
+
+/// Pending request→prompt-signature hints for cache-aware first picks,
+/// shared by every producer replica of the edge and consumed when the
+/// request's first item is routed.
+type HintMap = Mutex<HashMap<u64, u64>>;
 
 /// One consumer-replica endpoint as a producer replica sees it.
 struct Endpoint {
@@ -108,6 +129,7 @@ enum RouteState {
     RoundRobin { next: usize },
     LeastDepth,
     Affinity,
+    CacheAware,
 }
 
 /// Fan-out sender owned by one producer replica: one [`ConnectorTx`] per
@@ -117,6 +139,7 @@ pub struct RouterTx {
     shared: Arc<Mutex<TxShared>>,
     state: RouteState,
     sticky: Arc<StickyMap>,
+    hints: Arc<HintMap>,
 }
 
 /// Index of the `k`-th non-draining endpoint (`k < n_live`); with no
@@ -136,6 +159,31 @@ fn nth_routable(eps: &[Endpoint], n_live: usize, k: usize) -> usize {
         }
     }
     unreachable!("k out of range of live endpoints")
+}
+
+/// Cache-aware first pick: least-loaded live endpoint whose advertised
+/// prefix cover contains `sig`; least-loaded live endpoint otherwise
+/// (the least-depth fallback).  Draining endpoints are only used when
+/// nothing else is live (transient teardown, like `nth_routable`).
+fn pick_cache_aware(eps: &[Endpoint], n_live: usize, sig: Option<u64>) -> usize {
+    let live = |e: &Endpoint| n_live == 0 || !e.draining.load(Ordering::Relaxed);
+    if let Some(sig) = sig {
+        let covering = eps
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| live(e) && e.load.covers(sig))
+            .min_by_key(|(_, e)| (e.load.score(), e.uid))
+            .map(|(i, _)| i);
+        if let Some(i) = covering {
+            return i;
+        }
+    }
+    eps.iter()
+        .enumerate()
+        .filter(|(_, e)| live(e))
+        .min_by_key(|(_, e)| (e.load.score(), e.uid))
+        .map(|(i, _)| i)
+        .expect("router has at least one endpoint")
 }
 
 impl RouterTx {
@@ -200,6 +248,28 @@ impl RouterTx {
                 }
                 i
             }
+            RouteState::CacheAware => {
+                let req = item.req_id;
+                let mut sticky = self.sticky.lock().unwrap();
+                let assigned = sticky.get(&req).and_then(|&uid| {
+                    sh.eps.iter().position(|e| e.uid == uid)
+                });
+                let i = match assigned {
+                    Some(i) => i,
+                    None => {
+                        // First item: steer to the replica whose prefix
+                        // cache covers the hinted prompt signature.
+                        let sig = self.hints.lock().unwrap().remove(&req);
+                        let i = pick_cache_aware(&sh.eps, n_live, sig);
+                        sticky.insert(req, sh.eps[i].uid);
+                        i
+                    }
+                };
+                if item.finished {
+                    finished_sticky = Some(req);
+                }
+                i
+            }
         };
         // Count before sending so a racing consumer can never observe a
         // receive without the matching increment (underflow) — and before
@@ -229,6 +299,16 @@ impl RouterTx {
     /// Number of consumer replicas this sender currently fans out to.
     pub fn fanout(&self) -> usize {
         self.shared.lock().unwrap().eps.len()
+    }
+
+    /// Record the prompt signature of a request *before* its first item
+    /// is sent, so a cache-aware first pick can match it against the
+    /// consumers' advertised prefix covers.  No-op for other policies
+    /// (the hint is simply never consumed... and cleared on purge).
+    pub fn hint_prompt_signature(&self, req_id: u64, sig: u64) {
+        if matches!(self.state, RouteState::CacheAware) {
+            self.hints.lock().unwrap().insert(req_id, sig);
+        }
     }
 }
 
@@ -297,6 +377,15 @@ impl RouterRx {
         self.load.queue_depth.store(depth, Ordering::Relaxed);
     }
 
+    /// Publish the prompt signatures this replica's prefix cache covers
+    /// (replaces the previous advertisement).  Producers' cache-aware
+    /// first picks match hinted signatures against this set.
+    pub fn publish_prefix_cover(&self, cover: &[u64]) {
+        let mut c = self.load.cover.lock().unwrap();
+        c.clear();
+        c.extend(cover.iter().copied());
+    }
+
     /// Number of producer replicas currently feeding this receiver.
     pub fn fanin(&self) -> usize {
         self.sources.lock().unwrap().len()
@@ -330,6 +419,7 @@ pub struct EdgeCtl {
     label: String,
     store_addr: Option<String>,
     sticky: Arc<StickyMap>,
+    hints: Arc<HintMap>,
     state: Mutex<EdgeState>,
     next_uid: AtomicU64,
 }
@@ -352,6 +442,7 @@ impl EdgeCtl {
             label: label.to_string(),
             store_addr: store_addr.map(|s| s.to_string()),
             sticky: Arc::new(Mutex::new(HashMap::new())),
+            hints: Arc::new(Mutex::new(HashMap::new())),
             state: Mutex::new(EdgeState::default()),
             next_uid: AtomicU64::new(0),
         }
@@ -362,6 +453,7 @@ impl EdgeCtl {
             RoutingKind::RoundRobin => RouteState::RoundRobin { next: 0 },
             RoutingKind::LeastDepth => RouteState::LeastDepth,
             RoutingKind::Affinity => RouteState::Affinity,
+            RoutingKind::CacheAware => RouteState::CacheAware,
             RoutingKind::Auto => unreachable!("EdgeCtl::new rejects Auto"),
         }
     }
@@ -421,7 +513,12 @@ impl EdgeCtl {
         }
         st.producers.push(ProducerEntry { uid, shared: shared.clone() });
         Ok((
-            RouterTx { shared, state: self.route_state(), sticky: self.sticky.clone() },
+            RouterTx {
+                shared,
+                state: self.route_state(),
+                sticky: self.sticky.clone(),
+                hints: self.hints.clone(),
+            },
             uid,
         ))
     }
@@ -489,6 +586,9 @@ impl EdgeCtl {
     /// could then never quiesce).
     pub fn purge_request(&self, req_id: u64) {
         self.sticky.lock().unwrap().remove(&req_id);
+        // A request cancelled before its first item routed would
+        // otherwise leak its cache-aware hint.
+        self.hints.lock().unwrap().remove(&req_id);
     }
 
     /// Live (non-draining) consumer replica count.
@@ -607,6 +707,51 @@ mod tests {
         txs[1].send(item(5)).unwrap();
         assert_eq!(drain(&mut rxs[0]), Vec::<u64>::new());
         assert_eq!(drain(&mut rxs[1]), vec![5, 5]);
+    }
+
+    #[test]
+    fn cache_aware_first_pick_follows_the_advertised_cover() {
+        let (mut txs, mut rxs) =
+            wire(ConnectorKind::Inline, RoutingKind::CacheAware, "ca", None, 1, 2).unwrap();
+        // Replica 1 advertises coverage of signature 0xFEED; the hinted
+        // request lands there despite replica 0 winning every tiebreak.
+        rxs[1].publish_prefix_cover(&[0xFEED]);
+        txs[0].hint_prompt_signature(42, 0xFEED);
+        txs[0].send(item(42)).unwrap();
+        txs[0].send(item(42)).unwrap(); // sticky follow-up chunk
+        assert_eq!(drain(&mut rxs[0]), Vec::<u64>::new());
+        assert_eq!(drain(&mut rxs[1]), vec![42, 42]);
+        // A hinted but uncovered signature falls back to least depth
+        // (equal load: lowest uid wins).
+        txs[0].hint_prompt_signature(43, 0xBEEF);
+        txs[0].send(item(43).finished()).unwrap();
+        assert_eq!(drain(&mut rxs[0]), vec![43]);
+        // Unhinted requests also fall back to least depth.
+        rxs[0].publish_queue_depth(5);
+        txs[0].send(item(44)).unwrap();
+        assert_eq!(drain(&mut rxs[1]), vec![44]);
+        rxs[0].publish_queue_depth(0);
+        // A re-published cover replaces the old advertisement.
+        rxs[1].publish_prefix_cover(&[]);
+        txs[0].hint_prompt_signature(45, 0xFEED);
+        txs[0].send(item(45)).unwrap();
+        assert_eq!(drain(&mut rxs[0]), vec![45]);
+    }
+
+    #[test]
+    fn cache_aware_ignores_the_cover_of_a_draining_replica() {
+        let ctl = EdgeCtl::new(ConnectorKind::Inline, RoutingKind::CacheAware, "cadrain", None);
+        let (mut rx0, _u0) = ctl.add_consumer().unwrap();
+        let (mut rx1, u1) = ctl.add_consumer().unwrap();
+        let (mut tx, _p) = ctl.add_producer().unwrap();
+        rx1.publish_prefix_cover(&[7]);
+        ctl.drain_consumer(u1);
+        // The covering replica is draining: a new request must not pin
+        // itself to it, cached prefix or not.
+        tx.hint_prompt_signature(9, 7);
+        tx.send(item(9)).unwrap();
+        assert_eq!(drain(&mut rx1), Vec::<u64>::new());
+        assert_eq!(drain(&mut rx0), vec![9]);
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! The AR engine core: scheduler + model runner, advanced by `step()`.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 
 use anyhow::{bail, Context, Result};
 
@@ -9,7 +9,7 @@ use super::sequence::{FinishReason, PromptItem, SeqPhase, Sequence};
 use super::{PREFILL_CHUNK, SCAN_STEPS};
 use crate::config::StageRole;
 use crate::engine::{SamplingParams, StageItem};
-use crate::kv_cache::BlockManager;
+use crate::kv_cache::{BlockManager, BlockTable, EvictionPolicy};
 use crate::kv_transfer::KvHandoff;
 use crate::runtime::{Artifacts, HostTensor, StageRuntime};
 use crate::tokenizer::BOS_ID;
@@ -51,6 +51,12 @@ pub struct ArEngineOptions {
     /// import handoffs via [`ArEngine::submit_handoff`].  `Fused` is the
     /// classic behaviour.
     pub role: StageRole,
+    /// Cross-request prefix cache (ISSUE 7): released hashed blocks stay
+    /// resident, and a new prompt's leading matched blocks skip prefill
+    /// via the engine's host-side KV stash.
+    pub prefix_cache: bool,
+    /// Which refcount-0 cached block to reclaim under memory pressure.
+    pub eviction: EvictionPolicy,
 }
 
 impl Default for ArEngineOptions {
@@ -66,6 +72,8 @@ impl Default for ArEngineOptions {
             lazy_compile: false,
             emit_hiddens: true,
             role: StageRole::Fused,
+            prefix_cache: true,
+            eviction: EvictionPolicy::Lru,
         }
     }
 }
@@ -104,6 +112,11 @@ pub struct EngineStats {
     pub kv_reused_blocks: u64,
     /// Requests aborted mid-flight by [`ArEngine::cancel`].
     pub cancelled: u64,
+    /// Prompt tokens whose prefill was skipped because their KV was
+    /// restored from the cross-request prefix cache.
+    pub prefix_tokens_skipped: u64,
+    /// Requests admitted with at least one prefix-cache block restored.
+    pub prefix_restored_seqs: u64,
 }
 
 /// The engine.  Owns a thread-local PJRT runtime; not `Send` — run it on
@@ -131,6 +144,16 @@ pub struct ArEngine {
     /// entirely — see EXPERIMENTS.md §Perf.
     batch_kv: Option<(Vec<usize>, usize, Vec<f32>)>,
     blocks: BlockManager,
+    /// Host-side content stash backing the cross-request prefix cache:
+    /// full-block prefix hash -> that block's KV rows (per (layer, k/v,
+    /// head), `block_size * d_head` floats each).  The block manager is
+    /// accounting-only — dense KV lives per slot — so a prefix-cache hit
+    /// needs these rows copied back into the new sequence's slot before
+    /// its (shortened) prefill runs.  Keyed by content hash, entries are
+    /// never wrong (the chain hash identifies the token prefix and KV is
+    /// a deterministic function of it); they are dropped when the
+    /// manager retires the hash, which bounds the stash by pool size.
+    prefix_kv: HashMap<u64, Vec<f32>>,
     iter: u64,
     pub stats: EngineStats,
 }
@@ -149,7 +172,12 @@ impl ArEngine {
         let eos_id = spec.cfg_usize("eos_id").unwrap_or(2) as u32;
         let slot_len = n_layers * 2 * n_heads * max_seq * d_head;
         let max_batch = opts.max_batch;
-        let blocks = BlockManager::new(opts.kv_blocks, opts.kv_block_size);
+        let blocks = BlockManager::with_cache(
+            opts.kv_blocks,
+            opts.kv_block_size,
+            opts.prefix_cache,
+            opts.eviction,
+        );
         let mut eng = Self {
             rt,
             opts,
@@ -165,6 +193,7 @@ impl ArEngine {
             slot_kv: (0..max_batch).map(|_| vec![0.0f32; slot_len]).collect(),
             batch_kv: None,
             blocks,
+            prefix_kv: HashMap::new(),
             iter: 0,
             stats: EngineStats::default(),
         };
@@ -329,6 +358,14 @@ impl ArEngine {
         for sid in 0..self.slots.len() {
             if self.slots[sid].as_ref().map(|s| s.id == req_id).unwrap_or(false) {
                 let seq = self.slots[sid].take().expect("checked above");
+                // Work already done survives the cancel: blocks up to the
+                // prefill watermark stash their content, so a retry (or
+                // any prompt sharing the prefix) skips that prefill.
+                let computed = match seq.phase {
+                    SeqPhase::Prefill(done) => done,
+                    _ => seq.prompt_len(),
+                };
+                self.stash_prefix_kv(sid, &seq.block_table, computed);
                 self.blocks.release(&seq.block_table);
                 // The batch KV cache may still name this slot; that is
                 // fine — membership changes flush it before the slot is
@@ -379,6 +416,12 @@ impl ArEngine {
     pub fn step(&mut self) -> Result<Vec<StageItem>> {
         self.iter += 1;
         self.stats.iterations += 1;
+        // Hashes the manager retired since the last iteration (evicted or
+        // force-freed blocks) leave the content stash too, keeping it
+        // bounded by the pool's resident set.
+        for h in self.blocks.take_retired_hashes() {
+            self.prefix_kv.remove(&h);
+        }
         let mut out = Vec::new();
 
         self.admit(&mut out);
@@ -478,15 +521,27 @@ impl ArEngine {
                 continue;
             }
             let hash_tokens = prompt_hash_tokens(&seq);
-            match self.blocks.allocate_prompt(&hash_tokens) {
-                Ok(table) => {
+            match self.blocks.allocate_prompt_matched(&hash_tokens) {
+                Ok((table, matched)) => {
                     seq.block_table = table;
-                    seq.phase = SeqPhase::Prefill(0);
                     seq.admitted_iter = self.iter;
                     // The slot's KV may live in the batch cache; flush
                     // before clearing so neighbours are preserved.
                     self.flush_batch_kv();
                     self.slot_kv[slot].iter_mut().for_each(|x| *x = 0.0);
+                    // Prefix-cache hit: restore the leading matched
+                    // blocks' KV rows from the stash and start prefill at
+                    // the first miss instead of position 0.
+                    let skip = if self.opts.prefix_cache && matched > 0 {
+                        self.restore_prefix(slot, &seq.block_table, matched, seq.prompt_len())
+                    } else {
+                        0
+                    };
+                    if skip > 0 {
+                        self.stats.prefix_tokens_skipped += skip as u64;
+                        self.stats.prefix_restored_seqs += 1;
+                    }
+                    seq.phase = SeqPhase::Prefill(skip);
                     self.slots[slot] = Some(seq);
                 }
                 Err(_) => {
@@ -569,6 +624,12 @@ impl ArEngine {
             }
         }
         let blocks = self.blocks.export_seq(&seq.block_table);
+        // Prompt signature for cache-aware routing: the first full
+        // block's chain hash (None for sub-block prompts).  Rides the
+        // item as a tiny side tensor so the stage loop can hint the
+        // prefill→decode router before forwarding.
+        let sig = blocks.full_hashes.first().copied().flatten();
+        self.stash_prefix_kv(sid, &seq.block_table, len);
         self.blocks.release(&seq.block_table);
         let first = *seq.generated.first().expect("prefill sampled the first token");
         let hidden = if self.opts.emit_hiddens { seq.hiddens.clone() } else { vec![] };
@@ -592,6 +653,12 @@ impl ArEngine {
             .with("tokens", HostTensor::i32(vec![1], vec![first as i32]));
         if self.opts.emit_hiddens {
             item = item.with("hiddens", HostTensor::f32(vec![1, self.d_model], hidden));
+        }
+        if let Some(sig) = sig {
+            item = item.with(
+                crate::kv_transfer::KV_SIG_TENSOR,
+                crate::kv_transfer::sig_to_tensor(sig),
+            );
         }
         Ok(item.with(crate::kv_transfer::KV_TENSOR, tensor).finished())
     }
@@ -887,6 +954,7 @@ impl ArEngine {
         }
         if done {
             let seq = self.slots[sid].take().unwrap();
+            self.stash_prefix_kv(sid, &seq.block_table, seq.prompt_len());
             self.blocks.release(&seq.block_table);
         }
     }
@@ -924,6 +992,11 @@ impl ArEngine {
         match youngest {
             Some(v) => {
                 let mut seq = self.slots[v].take().unwrap();
+                let computed = match seq.phase {
+                    SeqPhase::Prefill(done) => done,
+                    _ => seq.prompt_len(),
+                };
+                self.stash_prefix_kv(v, &seq.block_table, computed);
                 self.blocks.release(&seq.block_table);
                 // Prompt sequences re-prefill; imported sequences rewind
                 // to their handoff and re-import at the next admission.
@@ -1046,6 +1119,81 @@ impl ArEngine {
             }
         }
         self.stats.marshal_seconds += t0.elapsed().as_secs_f64();
+    }
+
+    // ------------------------------------------------------------------
+    // Cross-request prefix cache: slot store <-> host content stash
+    // ------------------------------------------------------------------
+
+    /// Copy the stashed KV rows of the table's leading `matched` blocks
+    /// into `slot`'s store, returning how many prompt tokens prefill may
+    /// skip.  Stops at the first block with no stashed content (the
+    /// manager's match is accounting-level; skipping additionally needs
+    /// the rows), and always leaves at least one prompt position for
+    /// prefill to run — sampling the first token needs its logits.  Any
+    /// position not skipped is recomputed over the restored rows, which
+    /// is bit-identical (KV is a deterministic function of the prefix).
+    fn restore_prefix(
+        &mut self,
+        slot: usize,
+        table: &BlockTable,
+        matched: usize,
+        prompt_len: usize,
+    ) -> usize {
+        let bs = self.blocks.block_size();
+        let (chunk, s_max, dh) = (self.kv_chunk(), self.max_seq, self.d_head);
+        let lk = self.n_layers * 2;
+        let row = bs * dh;
+        let mut restored = 0usize;
+        for i in 0..matched {
+            let Some(h) = self.blocks.block_hash(table.blocks[i]) else { break };
+            let Some(rows) = self.prefix_kv.get(&h) else { break };
+            for li in 0..lk {
+                for hd in 0..self.n_heads {
+                    let dst = li * chunk + hd * s_max * dh + i * row;
+                    let src = (li * self.n_heads + hd) * row;
+                    self.slot_kv[slot][dst..dst + row].copy_from_slice(&rows[src..src + row]);
+                }
+            }
+            restored += 1;
+        }
+        (restored * bs).min(prompt_len.saturating_sub(1))
+    }
+
+    /// Stash the computed full prompt blocks' KV rows keyed by prefix
+    /// hash, so future prompts sharing the prefix skip their prefill.
+    /// `computed` is the prefill watermark — only positions with valid
+    /// KV (a cancelled mid-prefill sequence stashes just its finished
+    /// blocks).  Called on every release path: completion, handoff
+    /// export, preemption, and cancel.
+    fn stash_prefix_kv(&mut self, sid: usize, table: &BlockTable, computed: usize) {
+        if !self.opts.prefix_cache {
+            return;
+        }
+        let bs = self.blocks.block_size();
+        let n = computed / bs;
+        if n == 0 {
+            return;
+        }
+        // The slot's latest KV may still live in the batch cache.
+        self.flush_batch_kv();
+        let (chunk, s_max, dh) = (self.kv_chunk(), self.max_seq, self.d_head);
+        let lk = self.n_layers * 2;
+        let row = bs * dh;
+        for i in 0..n.min(table.blocks.len()) {
+            let Some(h) = self.blocks.block_hash(table.blocks[i]) else { continue };
+            if self.prefix_kv.contains_key(&h) {
+                continue;
+            }
+            let mut rows = Vec::with_capacity(lk * self.n_heads * row);
+            for li in 0..lk {
+                for hd in 0..self.n_heads {
+                    let off = li * chunk + hd * s_max * dh + i * row;
+                    rows.extend_from_slice(&self.slot_kv[sid][off..off + row]);
+                }
+            }
+            self.prefix_kv.insert(h, rows);
+        }
     }
 }
 

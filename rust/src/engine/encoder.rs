@@ -7,7 +7,7 @@
 //! own device, producing embedding items that an `embeds2prompt`
 //! transfer turns into Thinker submissions.  Batched across requests.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 
 use anyhow::{Context, Result};
 
@@ -27,9 +27,33 @@ pub struct EncoderStats {
     pub jobs_done: u64,
     pub calls: u64,
     pub exec_seconds: f64,
+    /// Jobs answered from the encoder-output cache without touching the
+    /// device (identical input content re-submitted, ISSUE 7).
+    pub cache_hits: u64,
+    /// Jobs that had to encode (cache enabled but content unseen).
+    pub cache_misses: u64,
 }
 
-/// Batched single-forward encoder engine.
+/// Content identity of an encode input: FNV-style hash over the feature
+/// bit patterns and frame count.  Identical media (duplicate images /
+/// audio clips) hash equal; any bit of difference diverges.
+fn content_hash(feats: &[f32], frames: usize) -> u64 {
+    let mut h = 0xCBF29CE484222325u64 ^ (frames as u64);
+    for &f in feats {
+        h ^= f.to_bits() as u64;
+        h = h.wrapping_mul(0x100000001B3);
+        h ^= h >> 29;
+    }
+    h
+}
+
+/// Default encoder-output cache bound (entries) when no
+/// [`crate::config::CacheConfig`] overrides it.
+pub const DEFAULT_CACHE_CAPACITY: usize = 256;
+
+/// Batched single-forward encoder engine with a content-addressed
+/// output cache in front of the device (Cornserve-style: duplicated
+/// media across requests encodes once).
 pub struct EncoderEngine {
     rt: StageRuntime,
     t_max: usize,
@@ -37,6 +61,13 @@ pub struct EncoderEngine {
     d_out: usize,
     max_batch: usize,
     queue: VecDeque<EncodeJob>,
+    /// Cache hits resolved at submit, emitted by the next `step`.
+    ready: Vec<StageItem>,
+    /// content hash -> (LRU tick, embed rows).  Bounded by
+    /// `cache_capacity` entries; 0 disables the cache.
+    cache: HashMap<u64, (u64, Vec<f32>)>,
+    cache_capacity: usize,
+    tick: u64,
     pub stats: EncoderStats,
 }
 
@@ -52,6 +83,10 @@ impl EncoderEngine {
             rt,
             max_batch,
             queue: VecDeque::new(),
+            ready: Vec::new(),
+            cache: HashMap::new(),
+            cache_capacity: DEFAULT_CACHE_CAPACITY,
+            tick: 0,
             stats: EncoderStats::default(),
         };
         let entries: Vec<String> = eng
@@ -78,30 +113,84 @@ impl EncoderEngine {
         self.d_out
     }
 
+    /// Bound (entries) of the encoder-output cache; 0 disables it.
+    pub fn set_cache_capacity(&mut self, capacity: usize) {
+        self.cache_capacity = capacity;
+        if capacity == 0 {
+            self.cache.clear();
+        }
+        while self.cache.len() > self.cache_capacity {
+            self.evict_one();
+        }
+    }
+
     pub fn submit(&mut self, job: EncodeJob) {
+        if self.cache_capacity > 0 {
+            let h = content_hash(&job.feats, job.frames);
+            if let Some((last, rows)) = self.cache.get_mut(&h) {
+                self.tick += 1;
+                *last = self.tick;
+                let rows = rows.clone();
+                let frames = rows.len() / self.d_out.max(1);
+                self.stats.cache_hits += 1;
+                self.stats.jobs_done += 1;
+                self.ready.push(
+                    StageItem::new(job.req_id)
+                        .with("embeds", HostTensor::f32(vec![frames, self.d_out], rows))
+                        .finished(),
+                );
+                return;
+            }
+            self.stats.cache_misses += 1;
+        }
         self.queue.push_back(job);
     }
 
     pub fn idle(&self) -> bool {
-        self.queue.is_empty()
+        self.queue.is_empty() && self.ready.is_empty()
     }
 
     pub fn queued(&self) -> usize {
         self.queue.len()
     }
 
-    /// Abort a request: its queued encode jobs are dropped.
+    /// Abort a request: its queued encode jobs (and any cache-served
+    /// items not yet emitted) are dropped.
     pub fn cancel(&mut self, req_id: u64) -> bool {
-        let before = self.queue.len();
+        let before = self.queue.len() + self.ready.len();
         self.queue.retain(|j| j.req_id != req_id);
-        before != self.queue.len()
+        self.ready.retain(|i| i.req_id != req_id);
+        before != self.queue.len() + self.ready.len()
+    }
+
+    fn evict_one(&mut self) {
+        if let Some(&h) = self
+            .cache
+            .iter()
+            .min_by_key(|(_, (last, _))| *last)
+            .map(|(h, _)| h)
+        {
+            self.cache.remove(&h);
+        }
+    }
+
+    fn cache_insert(&mut self, h: u64, rows: Vec<f32>) {
+        if self.cache_capacity == 0 {
+            return;
+        }
+        while self.cache.len() >= self.cache_capacity && !self.cache.contains_key(&h) {
+            self.evict_one();
+        }
+        self.tick += 1;
+        self.cache.insert(h, (self.tick, rows));
     }
 
     /// Encode one batch of queued jobs; emits one finished item per job
-    /// carrying `embeds [frames, d_out]`.
+    /// carrying `embeds [frames, d_out]` (cache-served items first).
     pub fn step(&mut self) -> Result<Vec<StageItem>> {
+        let served = std::mem::take(&mut self.ready);
         if self.queue.is_empty() {
-            return Ok(vec![]);
+            return Ok(served);
         }
         let take = self.queue.len().min(self.max_batch);
         let jobs: Vec<EncodeJob> = self.queue.drain(..take).collect();
@@ -136,10 +225,12 @@ impl EncoderEngine {
         self.stats.calls += 1;
         let embeds = outs[0].as_f32()?;
 
-        let mut items = Vec::with_capacity(jobs.len());
+        let mut items = served;
+        items.reserve(jobs.len());
         for (bi, job) in jobs.iter().enumerate() {
             let frames = job.frames.min(t);
             let rows = embeds[bi * t * d..bi * t * d + frames * d].to_vec();
+            self.cache_insert(content_hash(&job.feats, job.frames), rows.clone());
             self.stats.jobs_done += 1;
             items.push(
                 StageItem::new(job.req_id)

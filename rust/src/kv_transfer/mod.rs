@@ -34,6 +34,28 @@ use crate::runtime::HostTensor;
 /// `StageItem` tensor key under which an encoded handoff frame travels.
 pub const KV_TENSOR: &str = "kv_handoff";
 
+/// `StageItem` tensor key carrying the exported prompt's first
+/// full-block chain hash (the request's prompt signature for
+/// cache-aware routing, see [`crate::connector::router`]).  Packed as
+/// two i32 words `[lo, hi]` because [`HostTensor`] has no u64 dtype.
+/// Optional: prompts shorter than one block export no signature.
+pub const KV_SIG_TENSOR: &str = "kv_sig";
+
+/// Pack a prompt signature into its [`KV_SIG_TENSOR`] wire form.
+pub fn sig_to_tensor(sig: u64) -> HostTensor {
+    HostTensor::i32(vec![2], vec![sig as u32 as i32, (sig >> 32) as u32 as i32])
+}
+
+/// Recover a prompt signature from a [`KV_SIG_TENSOR`] tensor (`None`
+/// for malformed shapes rather than an error: the hint is advisory).
+pub fn sig_from_tensor(t: &HostTensor) -> Option<u64> {
+    let v = t.as_i32().ok()?;
+    if v.len() != 2 {
+        return None;
+    }
+    Some((v[0] as u32 as u64) | ((v[1] as u32 as u64) << 32))
+}
+
 /// A sequence's complete KV-cache state in transit between a prefill
 /// engine and a decode engine.
 #[derive(Debug, Clone, PartialEq)]
@@ -132,6 +154,16 @@ impl KvHandoff {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn prompt_signature_roundtrips_through_its_tensor() {
+        for sig in [0u64, 1, 0xDEAD_BEEF, u64::MAX, 0x8000_0000_0000_0001] {
+            assert_eq!(sig_from_tensor(&sig_to_tensor(sig)), Some(sig));
+        }
+        // Malformed shapes degrade to "no hint", never an error.
+        assert_eq!(sig_from_tensor(&HostTensor::i32(vec![3], vec![1, 2, 3])), None);
+        assert_eq!(sig_from_tensor(&HostTensor::f32(vec![2], vec![1.0, 2.0])), None);
+    }
 
     pub(crate) fn sample_handoff() -> KvHandoff {
         let (n_layers, n_heads, d_head, len) = (2usize, 3usize, 4usize, 5usize);

@@ -22,20 +22,28 @@ USAGE:
                     whose deadline is unmeetable get a structured rejection at
                     submit time, and queued work is shed earliest-deadline-first
                     when the backlog projects past the horizon)
-  omni-serve run   --pipeline <name> --dataset <librispeech|food101|ucf101|seedtts|vbench|bursty|prefill-heavy>
+                   [--no-prefix-cache] [--eviction lru|hit_aware] [--encoder-cache N]
+                   (the global prefix cache and the encoder-output cache are ON
+                    by default; these knobs disable or retune them — the `stats`
+                    op reports hit rates live)
+  omni-serve run   --pipeline <name> --dataset <librispeech|food101|ucf101|seedtts|vbench|bursty|prefill-heavy|shared-prefix>
                    [--n 8] [--rate 0] [--seed 1] [--no-streaming] [--baseline]
+                   [--no-prefix-cache] [--eviction lru|hit_aware] [--encoder-cache N]
                    [--deadline S]   (cancel each request end-to-end S seconds
                                      after submission; the summary reports
                                      cancelled counts + freed KV)
-  omni-serve bench [--trace bursty|librispeech|seedtts|prefill-heavy|overload-storm]
+  omni-serve bench [--trace bursty|librispeech|seedtts|prefill-heavy|overload-storm|shared-prefix]
                    [--n 48] [--budget 4] [--seeds 32]
                    (artifact-free: autoscaled vs static replica splits on the AR-stage
                     model; `prefill-heavy` runs the P/D-disaggregation comparison —
                     fused vs split prefill/decode pools — and exits non-zero unless
                     the split wins; `overload-storm` runs admission+shedding vs
                     FIFO-with-deadlines at 2x/3x/5x offered load and exits non-zero
-                    unless admission wins on goodput for every seed — both are CI
-                    smoke gates)
+                    unless admission wins on goodput for every seed; `shared-prefix`
+                    runs the prefix-cache comparison — cached vs cold on the
+                    shared-prefix trace — and exits non-zero unless cached wins
+                    both TTFT and JCT for every seed — all three are CI smoke
+                    gates)
   omni-serve graph [--pipeline <name>] [--list]
   omni-serve help
 
@@ -57,6 +65,28 @@ fn pipeline_from(args: &Args) -> Result<omni_serve::config::PipelineConfig> {
     }
     let name = args.flag("pipeline").unwrap_or("qwen3-omni");
     presets::by_name(name).ok_or_else(|| anyhow::anyhow!("unknown pipeline `{name}` (see `omni-serve help`)"))
+}
+
+/// Cache overrides from the CLI (`--no-prefix-cache`, `--eviction`,
+/// `--encoder-cache`): `None` when no knob is present, so the pipeline's
+/// own `cache` block (or the built-in default: everything on) applies.
+fn cache_from(
+    args: &Args,
+    base: Option<&omni_serve::config::CacheConfig>,
+) -> Result<Option<omni_serve::config::CacheConfig>> {
+    let knobs = args.flag_bool("no-prefix-cache")
+        || args.flag("eviction").is_some()
+        || args.flag("encoder-cache").is_some();
+    if !knobs {
+        return Ok(None);
+    }
+    let mut c = base.cloned().unwrap_or_default();
+    c.prefix_cache = !args.flag_bool("no-prefix-cache");
+    if let Some(name) = args.flag("eviction") {
+        c.eviction = omni_serve::kv_cache::EvictionPolicy::from_name(name)?;
+    }
+    c.encoder_cache_capacity = args.flag_usize("encoder-cache", c.encoder_cache_capacity)?;
+    Ok(Some(c))
 }
 
 fn real_main() -> Result<()> {
@@ -101,16 +131,22 @@ fn real_main() -> Result<()> {
             } else {
                 None
             };
+            let cache = cache_from(&args, config.cache.as_ref())?;
             let server = omni_serve::server::Server::bind(
                 &addr,
                 config,
                 artifacts,
-                omni_serve::server::ServeOptions { autoscaler, admission },
+                omni_serve::server::ServeOptions { autoscaler, admission, cache },
             )?;
             server.serve()
         }
         "run" => {
-            let config = pipeline_from(&args)?;
+            let mut config = pipeline_from(&args)?;
+            // Cache knobs land in the pipeline config: `run_workload`
+            // resolves the session's CacheConfig from it.
+            if let Some(c) = cache_from(&args, config.cache.as_ref())? {
+                config.cache = Some(c);
+            }
             let artifacts = Arc::new(Artifacts::load(&Artifacts::default_dir())?);
             let n = args.flag_usize("n", 8)?;
             let rate = args.flag_f64("rate", 0.0)?;
@@ -126,6 +162,7 @@ fn real_main() -> Result<()> {
                 "prefill-heavy" => {
                     datasets::prefill_heavy(seed, n, if rate > 0.0 { rate } else { 56.0 })
                 }
+                "shared-prefix" => datasets::shared_prefix(seed, n, rate, 0.75),
                 other => bail!("unknown dataset `{other}`"),
             };
             let audio_stage: Option<&'static str> = if config.stage("talker").is_some() {
@@ -247,6 +284,51 @@ fn real_main() -> Result<()> {
                 println!("admission > fifo goodput confirmed at 2x/3x/5x over {seeds} seeds");
                 return Ok(());
             }
+            if trace == "shared-prefix" {
+                // CI smoke contract: at the same GPU budget the
+                // prefix-cached engine must beat the cold engine on BOTH
+                // mean TTFT and mean JCT for EVERY seed, or this command
+                // exits non-zero.
+                let seeds = args.flag_usize("seeds", 32)? as u64;
+                println!(
+                    "trace=shared-prefix-sim max_batch={budget} seeds={seeds} \
+                     (prefix-cached vs cold at equal budget)"
+                );
+                let (mut worst_ttft, mut worst_jct) = (f64::INFINITY, f64::INFINITY);
+                let (mut sum_ttft, mut sum_jct) = (0.0, 0.0);
+                let mut skipped = 0u64;
+                for s in 1..=seeds {
+                    let c = omni_serve::scheduler::sim::prefix_cache_comparison(s, budget);
+                    anyhow::ensure!(
+                        c.cached.mean_ttft() < c.cold.mean_ttft()
+                            && c.cached.mean_jct() < c.cold.mean_jct(),
+                        "prefix cache lost to cold at seed {s}: \
+                         TTFT {} vs {}, JCT {} vs {}",
+                        fmt::dur(c.cached.mean_ttft()),
+                        fmt::dur(c.cold.mean_ttft()),
+                        fmt::dur(c.cached.mean_jct()),
+                        fmt::dur(c.cold.mean_jct()),
+                    );
+                    worst_ttft = worst_ttft.min(c.ttft_margin());
+                    worst_jct = worst_jct.min(c.jct_margin());
+                    sum_ttft += c.ttft_margin();
+                    sum_jct += c.jct_margin();
+                    skipped += c.cached.tokens_skipped;
+                }
+                println!(
+                    "  TTFT margin mean {:+.1}% worst {:+.1}% | JCT margin mean {:+.1}% worst {:+.1}%",
+                    100.0 * sum_ttft / seeds as f64,
+                    100.0 * worst_ttft,
+                    100.0 * sum_jct / seeds as f64,
+                    100.0 * worst_jct,
+                );
+                println!(
+                    "  {} prompt tokens attached from cache across {seeds} seeds",
+                    skipped,
+                );
+                println!("cached < cold on TTFT and JCT confirmed over {seeds} seeds");
+                return Ok(());
+            }
             if trace == "prefill-heavy" {
                 let n = args.flag_usize("n", 64)?;
                 let wl = datasets::prefill_heavy(seed, n, 56.0);
@@ -307,7 +389,7 @@ fn real_main() -> Result<()> {
                 other => {
                     bail!(
                         "unknown trace `{other}` \
-                         (bursty|librispeech|seedtts|prefill-heavy|overload-storm)"
+                         (bursty|librispeech|seedtts|prefill-heavy|overload-storm|shared-prefix)"
                     )
                 }
             };
@@ -398,6 +480,20 @@ fn print_report(r: &omni_serve::metrics::RunReport) {
         tpot,
         if r.rtf.is_empty() { f64::NAN } else { r.mean_rtf() },
     );
+    // Cache effectiveness, when any stage did cache lookups this run.
+    let cache = r.cache_totals();
+    if cache.prefix_hits + cache.prefix_misses + cache.encoder_hits + cache.encoder_misses > 0 {
+        println!(
+            "  cache: prefix {}/{} hits ({:.1}% | {} evictions) | encoder {}/{} hits ({:.1}%)",
+            cache.prefix_hits,
+            cache.prefix_hits + cache.prefix_misses,
+            100.0 * cache.prefix_hit_rate(),
+            cache.evictions,
+            cache.encoder_hits,
+            cache.encoder_hits + cache.encoder_misses,
+            100.0 * cache.encoder_hit_rate(),
+        );
+    }
     let mut stages: Vec<&String> = r.per_stage.keys().collect();
     stages.sort();
     for s in stages {

@@ -64,6 +64,60 @@ pub enum Event {
     /// "flexible GPU allocation" under live traffic): `from` live
     /// replicas became `to`.  Scale-downs are recorded at drain start.
     Scale { stage: String, t: f64, from: usize, to: usize },
+    /// Cross-request cache counters for one engine replica of a stage
+    /// (prefix cache on AR engines, output cache on encoders).  Counters
+    /// are ABSOLUTE totals since engine construction — the recorder
+    /// keeps the latest snapshot per (stage, replica), so stages may
+    /// emit periodically or once at shutdown.
+    CacheStats { stage: &'static str, replica: usize, t: f64, counters: CacheCounters },
+}
+
+/// Cross-request cache counters (see [`Event::CacheStats`]): block-level
+/// prefix-cache hits/misses/evictions from the KV pool plus
+/// encoder-output cache hits/misses.  One engine kind populates one
+/// half; stage- and run-level rollups sum both.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct CacheCounters {
+    /// Prompt blocks served from the cross-request prefix cache.
+    pub prefix_hits: u64,
+    /// Prompt blocks allocated cold (no resident prefix block).
+    pub prefix_misses: u64,
+    /// Cached blocks reclaimed to make room for new sequences.
+    pub evictions: u64,
+    /// Encoder jobs answered from the output cache.
+    pub encoder_hits: u64,
+    /// Encoder jobs that ran the encoder.
+    pub encoder_misses: u64,
+}
+
+impl CacheCounters {
+    pub fn absorb(&mut self, other: &CacheCounters) {
+        self.prefix_hits += other.prefix_hits;
+        self.prefix_misses += other.prefix_misses;
+        self.evictions += other.evictions;
+        self.encoder_hits += other.encoder_hits;
+        self.encoder_misses += other.encoder_misses;
+    }
+
+    /// Fraction of prompt-block lookups served from the prefix cache
+    /// (0.0 when nothing was looked up).
+    pub fn prefix_hit_rate(&self) -> f64 {
+        hit_rate(self.prefix_hits, self.prefix_misses)
+    }
+
+    /// Fraction of encoder jobs answered from the output cache.
+    pub fn encoder_hit_rate(&self) -> f64 {
+        hit_rate(self.encoder_hits, self.encoder_misses)
+    }
+}
+
+fn hit_rate(hits: u64, misses: u64) -> f64 {
+    let total = hits + misses;
+    if total == 0 {
+        0.0
+    } else {
+        hits as f64 / total as f64
+    }
 }
 
 /// One autoscaler decision, as kept by the [`Recorder`] (the replica
@@ -143,6 +197,9 @@ pub struct Recorder {
     inner: Mutex<HashMap<u64, ReqRec>>,
     sched: Mutex<HashMap<(&'static str, usize), SchedAgg>>,
     scale: Mutex<Vec<ScaleEvent>>,
+    /// Latest absolute cache counters per (stage, replica) — see
+    /// [`Event::CacheStats`].
+    cache: Mutex<HashMap<(&'static str, usize), CacheCounters>>,
 }
 
 impl Recorder {
@@ -174,6 +231,11 @@ impl Recorder {
                     from: *from,
                     to: *to,
                 });
+                return;
+            }
+            Event::CacheStats { stage, replica, counters, .. } => {
+                // Absolute totals: the latest snapshot wins.
+                self.cache.lock().unwrap().insert((*stage, *replica), *counters);
                 return;
             }
             _ => {}
@@ -220,7 +282,10 @@ impl Recorder {
                 m.entry(req).or_default().rejected = Some(t);
             }
             // Handled (with an early return) above.
-            Event::SchedSample { .. } | Event::SchedAdmitted { .. } | Event::Scale { .. } => {
+            Event::SchedSample { .. }
+            | Event::SchedAdmitted { .. }
+            | Event::Scale { .. }
+            | Event::CacheStats { .. } => {
                 unreachable!()
             }
         }
@@ -321,6 +386,13 @@ impl Recorder {
         let mut scale_events = self.scale.lock().unwrap().clone();
         scale_events.sort_by(|a, b| a.t.total_cmp(&b.t));
 
+        let by_replica = self.cache.lock().unwrap();
+        let mut cache: HashMap<String, CacheCounters> = HashMap::new();
+        for (&(stage, _), c) in by_replica.iter() {
+            cache.entry(stage.to_string()).or_default().absorb(c);
+        }
+        drop(by_replica);
+
         RunReport {
             wall_s,
             completed,
@@ -337,6 +409,7 @@ impl Recorder {
             sched,
             sched_replicas,
             scale_events,
+            cache,
         }
     }
 }
@@ -389,6 +462,10 @@ pub struct RunReport {
     pub sched_replicas: HashMap<(String, usize), SchedAgg>,
     /// Autoscaler decisions in time order (empty for static runs).
     pub scale_events: Vec<ScaleEvent>,
+    /// Cross-request cache counters per stage, summed across that
+    /// stage's engine replicas (empty when no stage emitted
+    /// [`Event::CacheStats`], e.g. caches disabled).
+    pub cache: HashMap<String, CacheCounters>,
 }
 
 impl RunReport {
@@ -499,6 +576,16 @@ impl RunReport {
             .iter()
             .filter(|e| !e.is_up() && stage.map_or(true, |s| e.stage == s))
             .count()
+    }
+
+    /// Run-wide cache counters: every stage's prefix- and encoder-cache
+    /// totals folded together (the run summary's "cache" line).
+    pub fn cache_totals(&self) -> CacheCounters {
+        let mut acc = CacheCounters::default();
+        for c in self.cache.values() {
+            acc.absorb(c);
+        }
+        acc
     }
 
     /// Replica-count timeline of `stage`: `(t, live_replicas)` starting
@@ -733,6 +820,42 @@ mod tests {
         // Events come back time-sorted regardless of emission order.
         assert!(rep.scale_events.windows(2).all(|w| w[0].t <= w[1].t));
         assert_eq!(rep.replica_timeline("talker"), vec![(0.0, 1), (0.5, 2), (2.0, 1)]);
+    }
+
+    #[test]
+    fn cache_stats_keep_the_latest_snapshot_per_replica() {
+        let r = Recorder::new();
+        let early = CacheCounters { prefix_hits: 1, prefix_misses: 5, ..Default::default() };
+        let late = CacheCounters { prefix_hits: 8, prefix_misses: 8, evictions: 2, ..Default::default() };
+        // Counters are absolute: the second emission REPLACES the first.
+        r.emit(Event::CacheStats { stage: "decode", replica: 0, t: 0.1, counters: early });
+        r.emit(Event::CacheStats { stage: "decode", replica: 0, t: 0.9, counters: late });
+        // A second replica and an encoder stage sum into the rollups.
+        r.emit(Event::CacheStats {
+            stage: "decode",
+            replica: 1,
+            t: 0.9,
+            counters: CacheCounters { prefix_hits: 2, prefix_misses: 2, ..Default::default() },
+        });
+        r.emit(Event::CacheStats {
+            stage: "encoder",
+            replica: 0,
+            t: 0.9,
+            counters: CacheCounters { encoder_hits: 3, encoder_misses: 1, ..Default::default() },
+        });
+        let rep = r.report(1.0, None);
+        assert_eq!(rep.cache["decode"].prefix_hits, 10);
+        assert_eq!(rep.cache["decode"].prefix_misses, 10);
+        assert_eq!(rep.cache["decode"].evictions, 2);
+        assert!((rep.cache["decode"].prefix_hit_rate() - 0.5).abs() < 1e-9);
+        assert!((rep.cache["encoder"].encoder_hit_rate() - 0.75).abs() < 1e-9);
+        let tot = rep.cache_totals();
+        assert_eq!(tot.prefix_hits, 10);
+        assert_eq!(tot.encoder_hits, 3);
+        // A counter-less run reports an empty map and zero rates.
+        let empty = Recorder::new().report(1.0, None);
+        assert!(empty.cache.is_empty());
+        assert_eq!(empty.cache_totals().prefix_hit_rate(), 0.0);
     }
 
     #[test]

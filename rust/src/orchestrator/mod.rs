@@ -118,6 +118,10 @@ pub struct StageSummary {
     pub vocoder: Option<crate::engine::vocoder::VocoderStats>,
     /// Admission-queue counters from the replica's [`crate::scheduler::StageScheduler`].
     pub sched: Option<crate::scheduler::SchedStats>,
+    /// Cross-request cache counters (prefix cache for AR replicas,
+    /// output cache for encoder replicas; `None` for engine kinds that
+    /// hold no cache).
+    pub cache: Option<crate::metrics::CacheCounters>,
     pub bytes_sent: u64,
 }
 
@@ -141,6 +145,8 @@ impl StageSummary {
                 a.kv_export_bytes += b.kv_export_bytes;
                 a.kv_reused_blocks += b.kv_reused_blocks;
                 a.cancelled += b.cancelled;
+                a.prefix_tokens_skipped += b.prefix_tokens_skipped;
+                a.prefix_restored_seqs += b.prefix_restored_seqs;
             }
             (slot @ None, Some(b)) => *slot = Some(b.clone()),
             _ => {}
@@ -163,6 +169,11 @@ impl StageSummary {
                 a.exec_seconds += b.exec_seconds;
             }
             (slot @ None, Some(b)) => *slot = Some(b.clone()),
+            _ => {}
+        }
+        match (&mut self.cache, &other.cache) {
+            (Some(a), Some(b)) => a.absorb(b),
+            (slot @ None, Some(b)) => *slot = Some(*b),
             _ => {}
         }
         match (&mut self.sched, &other.sched) {

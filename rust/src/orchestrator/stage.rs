@@ -15,7 +15,7 @@ use std::thread::JoinHandle;
 use anyhow::{bail, Result};
 
 use super::{RunClock, StageSummary};
-use crate::config::{StageConfig, StageKind};
+use crate::config::{CacheConfig, StageConfig, StageKind};
 use crate::connector::router::{RouterRx, RouterTx};
 use crate::connector::TryRecv;
 use crate::engine::ar::{ArEngine, ArEngineOptions, ArJob, Preprocess, PromptItem};
@@ -85,6 +85,9 @@ pub struct StageSpec {
     pub on_stage_done: Option<StageDoneHook>,
     pub streaming: bool,
     pub lazy_compile: bool,
+    /// Cross-request caching knobs (prefix cache, eviction policy,
+    /// encoder-output cache capacity).
+    pub cache: CacheConfig,
     /// Per-device memory budget (KV sizing).
     pub device_bytes: usize,
     /// Per-tenant WFQ weights for the stage's admission queue, indexed
@@ -216,6 +219,8 @@ fn build_engine(spec: &StageSpec) -> Result<Engine> {
                 lazy_compile: spec.lazy_compile,
                 emit_hiddens: true,
                 role: c.role,
+                prefix_cache: spec.cache.prefix_cache,
+                eviction: spec.cache.eviction,
             };
             Engine::Ar(Box::new(ArEngine::new(&spec.artifacts, &c.model, opts)?))
         }
@@ -243,11 +248,11 @@ fn build_engine(spec: &StageSpec) -> Result<Engine> {
             c.max_batch,
             spec.lazy_compile,
         )?)),
-        StageKind::Encoder => Engine::Encoder(Box::new(EncoderEngine::new(
-            &spec.artifacts,
-            &c.model,
-            c.max_batch,
-        )?)),
+        StageKind::Encoder => {
+            let mut e = EncoderEngine::new(&spec.artifacts, &c.model, c.max_batch)?;
+            e.set_cache_capacity(spec.cache.encoder_cache_capacity);
+            Engine::Encoder(Box::new(e))
+        }
     })
 }
 
@@ -424,6 +429,22 @@ fn run(mut spec: StageSpec) -> Result<StageSummary> {
             for (rx, _, _) in &inputs {
                 rx.publish_queue_depth(depth);
             }
+            if let Some(c) = cache_counters(&engine) {
+                spec.slot.publish_cache(&c);
+            }
+            // Advertise the AR pool's resident prefix hashes so upstream
+            // cache-aware routers can steer matching handoffs here.
+            // Refreshed at the sampling cadence — coverage is advisory
+            // (a stale entry costs one cold first pick, never
+            // correctness), so the hot path skips the Vec + lock churn.
+            if tick % SAMPLE_EVERY == 0 {
+                if let Engine::Ar(e) = &engine {
+                    let cover = e.block_manager().resident_hashes();
+                    for (rx, _, _) in &inputs {
+                        rx.publish_prefix_cover(&cover);
+                    }
+                }
+            }
             spec.slot.publish(depth, !engine.idle());
         }
 
@@ -507,12 +528,22 @@ fn run(mut spec: StageSpec) -> Result<StageSummary> {
                     first_out.remove(&rid);
                     first_tok.remove(&rid);
                 }
+                // Cache-aware routing hint: an exported KV handoff names
+                // its prompt's first full-block chain hash; register it
+                // with each outgoing router BEFORE the send so the first
+                // pick can prefer a consumer already holding the prefix.
+                let sig = item
+                    .tensor(crate::kv_transfer::KV_SIG_TENSOR)
+                    .and_then(crate::kv_transfer::sig_from_tensor);
                 // Forward a copy along every outgoing edge.  A closed
                 // connector after shutdown is benign: the run completes
                 // when the EXIT stage finishes each request (e.g. the
                 // Talker reaches its audio budget before the Thinker
                 // drains its last text chunks), so late items are dropped.
                 for tx in &mut spec.txs {
+                    if let Some(sig) = sig {
+                        tx.hint_prompt_signature(item.req_id, sig);
+                    }
                     if let Err(e) = tx.send(item.clone()) {
                         if !spec.stop.load(Ordering::SeqCst) {
                             // A downstream edge died mid-run.  Surface a
@@ -566,9 +597,24 @@ fn run(mut spec: StageSpec) -> Result<StageSummary> {
     // Final load publication: a retired/stopped replica holds no work.
     spec.slot.publish(0, false);
 
+    // Final cache snapshot: one absolute-counter event per replica (the
+    // recorder keeps the latest, so this IS the run's total) plus the
+    // live slot for post-run `stats` reads.
+    let cache = cache_counters(&engine);
+    if let Some(c) = cache {
+        spec.slot.publish_cache(&c);
+        spec.recorder.emit(Event::CacheStats {
+            stage: stage_name,
+            replica: spec.replica,
+            t: spec.clock.now(),
+            counters: c,
+        });
+    }
+
     let mut summary = StageSummary {
         name: spec.cfg.name.clone(),
         replica: spec.replica,
+        cache,
         ..Default::default()
     };
     match engine {
@@ -580,6 +626,28 @@ fn run(mut spec: StageSpec) -> Result<StageSummary> {
     summary.sched = Some(sched.stats.clone());
     summary.bytes_sent = spec.txs.iter().map(|t| t.bytes_sent()).sum();
     Ok(summary)
+}
+
+/// Current cross-request cache counters of the engine kinds that cache
+/// (`None` for diffusion/vocoder engines, which hold no cache).
+fn cache_counters(engine: &Engine) -> Option<crate::metrics::CacheCounters> {
+    match engine {
+        Engine::Ar(e) => {
+            let m = e.block_manager();
+            Some(crate::metrics::CacheCounters {
+                prefix_hits: m.prefix_hits,
+                prefix_misses: m.prefix_misses,
+                evictions: m.evictions,
+                ..Default::default()
+            })
+        }
+        Engine::Encoder(e) => Some(crate::metrics::CacheCounters {
+            encoder_hits: e.stats.cache_hits,
+            encoder_misses: e.stats.cache_misses,
+            ..Default::default()
+        }),
+        _ => None,
+    }
 }
 
 /// When the stage loop may stop serving (pure; see the loop's exit arm).

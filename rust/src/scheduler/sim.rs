@@ -1137,6 +1137,236 @@ pub fn overload_comparison(seed: u64, lanes: usize, load_mult: f64) -> Admission
     simulate_admission(&wl, lanes, &AdmissionConfig::default())
 }
 
+// ---------------------------------------------------------------------
+// Cross-request prefix-cache model (ISSUE 7): the same slot-filling
+// continuous-batching engine served twice over a shared-prefix trace —
+// once with a global prefix cache (a finished prompt's block-aligned
+// token prefix becomes attachable by later requests, exactly the
+// chain-hash index in `kv_cache`), once cold — at the same GPU budget.
+// The cached arm prefills only from the first miss, so hot repeats trade
+// O(prefix) prefill iterations for an O(1) attach; TTFT drops for the
+// repeats directly and JCT drops for everyone because the engine stops
+// re-spending iterations on tokens it has already computed.  Drives
+// `omni-serve bench --trace shared-prefix` (the CI gate),
+// `benches/sched_batching.rs`, and `tests/scheduler.rs`.
+// ---------------------------------------------------------------------
+
+/// KV block granularity of the model — mirrors the engine's block size
+/// (`orchestrator::stage` sizes `BlockManager` with 16-token blocks), so
+/// skips land on the same boundaries the real chain-hash index uses.
+const PREFIX_BLOCK: usize = 16;
+
+/// One request as the prefix-cache model sees it.
+#[derive(Debug, Clone)]
+pub struct PrefixRequest {
+    pub id: u64,
+    pub arrival_s: f64,
+    /// Text prompt tokens.  Prefix sharing is computed over these,
+    /// block-aligned, exactly like the engine's chain-hash attach.
+    pub tokens: Vec<u32>,
+    /// Multimodal frames appended after the text prompt.  They sit
+    /// behind the unique tail, so the KV prefix cache never covers them
+    /// (only the encoder cache dedups the clip itself) — the model
+    /// prefills them unconditionally.
+    pub mm_tokens: usize,
+    pub decode_tokens: usize,
+}
+
+/// Map a trace workload onto prefix-model requests.
+pub fn prefix_from_workload(wl: &Workload) -> Vec<PrefixRequest> {
+    wl.requests
+        .iter()
+        .map(|r| PrefixRequest {
+            id: r.id,
+            arrival_s: r.arrival_s,
+            tokens: r.prompt_tokens.clone(),
+            mm_tokens: r.mm_frames,
+            decode_tokens: r.max_text_tokens.max(1),
+        })
+        .collect()
+}
+
+/// Results of one prefix-model run.
+#[derive(Debug, Clone)]
+pub struct PrefixSimReport {
+    pub policy: String,
+    pub jct: Samples,
+    /// Arrival → first sampled token, the latency the prefix cache cuts.
+    pub ttft: Samples,
+    pub makespan_s: f64,
+    /// Prompt tokens attached from cache instead of re-prefilled.
+    pub tokens_skipped: u64,
+    /// Requests that attached at least one cached block.
+    pub hits: u64,
+}
+
+impl PrefixSimReport {
+    pub fn mean_jct(&self) -> f64 {
+        self.jct.mean()
+    }
+
+    pub fn mean_ttft(&self) -> f64 {
+        self.ttft.mean()
+    }
+}
+
+/// Longest block-aligned common token prefix (what a chain-hash lookup
+/// can attach: every block hash covers the whole prefix up to it, so a
+/// shared prefix is shared block-by-block from the start).
+fn block_shared(a: &[u32], b: &[u32]) -> usize {
+    let mut n = 0;
+    let lim = a.len().min(b.len());
+    while n < lim && a[n] == b[n] {
+        n += 1;
+    }
+    (n / PREFIX_BLOCK) * PREFIX_BLOCK
+}
+
+/// Serve `reqs` through one slot-filling continuous-batching engine.
+/// With `cache` on, a prompt whose prefill completes publishes its token
+/// prefix; later admissions attach the longest block-aligned prefix any
+/// published prompt shares and prefill only the remainder (at least one
+/// token, mirroring the engine, which always recomputes the last
+/// position to sample from it).  With `cache` off this is a plain cold
+/// engine — the two arms differ ONLY in skipped prefill work.
+pub fn simulate_prefix_cache(
+    reqs: &[PrefixRequest],
+    max_batch: usize,
+    cost: &SimCost,
+    cache: bool,
+) -> PrefixSimReport {
+    assert!(max_batch >= 1);
+    struct Lane<'a> {
+        req: &'a PrefixRequest,
+        prefill_left: usize,
+        decode_left: usize,
+    }
+    let mut order: Vec<&PrefixRequest> = reqs.iter().collect();
+    order.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s).then(a.id.cmp(&b.id)));
+    let mut next_arrival = 0usize;
+    let mut queue: VecDeque<&PrefixRequest> = VecDeque::new();
+    let mut active: Vec<Lane> = Vec::new();
+    let mut resident: Vec<&[u32]> = Vec::new();
+
+    let mut t = 0.0f64;
+    let mut jct = Samples::new();
+    let mut ttft = Samples::new();
+    let mut tokens_skipped = 0u64;
+    let mut hits = 0u64;
+
+    loop {
+        while next_arrival < order.len() && order[next_arrival].arrival_s <= t {
+            queue.push_back(order[next_arrival]);
+            next_arrival += 1;
+        }
+        if active.is_empty() && queue.is_empty() {
+            match order.get(next_arrival) {
+                Some(r) => {
+                    t = r.arrival_s;
+                    continue;
+                }
+                None => break,
+            }
+        }
+
+        // Slot-filling admission; cached blocks attach at admission.
+        while active.len() < max_batch {
+            let Some(r) = queue.pop_front() else { break };
+            let total = r.tokens.len() + r.mm_tokens;
+            let skip = if cache {
+                resident.iter().map(|p| block_shared(&r.tokens, p)).max().unwrap_or(0)
+            } else {
+                0
+            };
+            let skip = skip.min(total.saturating_sub(1));
+            if skip > 0 {
+                hits += 1;
+                tokens_skipped += skip as u64;
+            }
+            active.push(Lane {
+                req: r,
+                prefill_left: total.max(1) - skip,
+                decode_left: r.decode_tokens.max(1),
+            });
+        }
+
+        // One engine iteration (same timing skeleton as `simulate`).
+        let mut tokens = 0usize;
+        for l in &active {
+            tokens += if l.prefill_left > 0 { l.prefill_left.min(cost.prefill_chunk) } else { 1 };
+        }
+        t += cost.base_s + cost.token_s * tokens as f64;
+        for l in &mut active {
+            if l.prefill_left > 0 {
+                let c = l.prefill_left.min(cost.prefill_chunk);
+                l.prefill_left -= c;
+                if l.prefill_left == 0 {
+                    // The iteration finishing a prompt samples the first
+                    // token and publishes the prefix for later requests.
+                    l.decode_left = l.decode_left.saturating_sub(1);
+                    ttft.push(t - l.req.arrival_s);
+                    if cache {
+                        resident.push(&l.req.tokens);
+                    }
+                }
+            } else {
+                l.decode_left = l.decode_left.saturating_sub(1);
+            }
+        }
+        active.retain(|l| {
+            let done = l.prefill_left == 0 && l.decode_left == 0;
+            if done {
+                jct.push(t - l.req.arrival_s);
+            }
+            !done
+        });
+    }
+
+    PrefixSimReport {
+        policy: if cache { "prefix-cached".into() } else { "cold".into() },
+        jct,
+        ttft,
+        makespan_s: t,
+        tokens_skipped,
+        hits,
+    }
+}
+
+/// Cached vs cold on the same engine at the same GPU budget.
+#[derive(Debug, Clone)]
+pub struct PrefixCacheComparison {
+    pub cached: PrefixSimReport,
+    pub cold: PrefixSimReport,
+}
+
+impl PrefixCacheComparison {
+    /// Relative mean-TTFT win of the cached arm (positive = cached wins).
+    pub fn ttft_margin(&self) -> f64 {
+        (self.cold.mean_ttft() - self.cached.mean_ttft()) / self.cold.mean_ttft()
+    }
+
+    /// Relative mean-JCT win of the cached arm.
+    pub fn jct_margin(&self) -> f64 {
+        (self.cold.mean_jct() - self.cached.mean_jct()) / self.cold.mean_jct()
+    }
+}
+
+/// The canonical prefix-cache evaluation (the acceptance property of the
+/// global prefix cache): 64 requests of [`datasets::shared_prefix`] at
+/// 24 req/s with a 0.75 hot fraction, served cached and cold through the
+/// same `max_batch`-slot engine.  Shared by `omni-serve bench --trace
+/// shared-prefix` (the CI gate), `benches/sched_batching.rs`, and
+/// `tests/scheduler.rs` so the harness cannot drift between them.
+pub fn prefix_cache_comparison(seed: u64, max_batch: usize) -> PrefixCacheComparison {
+    let wl = datasets::shared_prefix(seed, 64, 24.0, 0.75);
+    let reqs = prefix_from_workload(&wl);
+    let cost = SimCost::default();
+    PrefixCacheComparison {
+        cached: simulate_prefix_cache(&reqs, max_batch, &cost, true),
+        cold: simulate_prefix_cache(&reqs, max_batch, &cost, false),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1547,6 +1777,77 @@ mod tests {
         assert_eq!(a.admission.in_slo, b.admission.in_slo);
         assert_eq!(a.admission.rejected, b.admission.rejected);
         assert_eq!(a.admission.jct.mean(), b.admission.jct.mean());
+    }
+
+    // -----------------------------------------------------------------
+    // Prefix-cache model.
+    // -----------------------------------------------------------------
+
+    #[test]
+    fn prefix_cache_completes_everything_in_both_arms() {
+        let c = prefix_cache_comparison(2, 4);
+        for rep in [&c.cached, &c.cold] {
+            assert_eq!(rep.jct.len(), 64, "{}", rep.policy);
+            assert_eq!(rep.ttft.len(), 64, "{}", rep.policy);
+            assert!(rep.makespan_s > 0.0);
+        }
+        // The cold arm never attaches anything, by construction.
+        assert_eq!(c.cold.hits, 0);
+        assert_eq!(c.cold.tokens_skipped, 0);
+    }
+
+    #[test]
+    fn prefix_cache_attaches_blocks_on_the_shared_prefix_trace() {
+        let c = prefix_cache_comparison(1, 4);
+        assert!(c.cached.hits >= 8, "only {} attaches on a hot trace", c.cached.hits);
+        // Every attach is block-aligned and at least one block long.
+        assert!(c.cached.tokens_skipped >= c.cached.hits * 16);
+        assert_eq!(c.cached.tokens_skipped % 16, 0);
+    }
+
+    #[test]
+    fn prefix_cache_beats_cold_on_ttft_and_jct() {
+        for seed in [1, 2, 3] {
+            let c = prefix_cache_comparison(seed, 4);
+            assert!(
+                c.cached.mean_ttft() < c.cold.mean_ttft(),
+                "seed {seed}: cached {:.4}s !< cold {:.4}s mean TTFT",
+                c.cached.mean_ttft(),
+                c.cold.mean_ttft()
+            );
+            assert!(
+                c.cached.mean_jct() < c.cold.mean_jct(),
+                "seed {seed}: cached {:.4}s !< cold {:.4}s mean JCT",
+                c.cached.mean_jct(),
+                c.cold.mean_jct()
+            );
+        }
+    }
+
+    #[test]
+    fn prefix_cache_is_inert_without_shared_prefixes() {
+        // Unique prompts never attach: the cached arm must be
+        // byte-for-byte the cold arm (the cache costs nothing when it
+        // cannot help).
+        let wl = datasets::librispeech(5, 24, 8.0);
+        let reqs = prefix_from_workload(&wl);
+        let cost = SimCost::default();
+        let cached = simulate_prefix_cache(&reqs, 4, &cost, true);
+        let cold = simulate_prefix_cache(&reqs, 4, &cost, false);
+        assert_eq!(cached.hits, 0, "librispeech prompts are unique");
+        assert_eq!(cached.makespan_s, cold.makespan_s);
+        assert_eq!(cached.jct.mean(), cold.jct.mean());
+        assert_eq!(cached.ttft.mean(), cold.ttft.mean());
+    }
+
+    #[test]
+    fn prefix_cache_model_is_deterministic() {
+        let a = prefix_cache_comparison(7, 4);
+        let b = prefix_cache_comparison(7, 4);
+        assert_eq!(a.cached.makespan_s, b.cached.makespan_s);
+        assert_eq!(a.cached.tokens_skipped, b.cached.tokens_skipped);
+        assert_eq!(a.cached.jct.mean(), b.cached.jct.mean());
+        assert_eq!(a.cold.ttft.mean(), b.cold.ttft.mean());
     }
 
     #[test]

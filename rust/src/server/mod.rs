@@ -45,7 +45,7 @@ use std::time::Duration;
 
 use anyhow::Result;
 
-use crate::config::{AdmissionConfig, AutoscalerConfig, PipelineConfig};
+use crate::config::{AdmissionConfig, AutoscalerConfig, CacheConfig, PipelineConfig};
 use crate::jobj;
 use crate::json::{self, Value};
 use crate::orchestrator::{Orchestrator, RunOptions};
@@ -65,6 +65,9 @@ pub struct ServeOptions {
     /// SLO-aware admission control; `None` falls back to the pipeline
     /// config's `admission` block (admit-everything if absent too).
     pub admission: Option<AdmissionConfig>,
+    /// Prefix / encoder caching knobs; `None` falls back to the pipeline
+    /// config's `cache` block, then to the defaults (both caches on).
+    pub cache: Option<CacheConfig>,
 }
 
 pub struct Server {
@@ -176,8 +179,14 @@ impl Server {
             .admission
             .clone()
             .or_else(|| self.config.admission.clone());
-        let session =
-            Arc::new(ServingSession::start(&orch, SessionOptions { autoscaler, admission })?);
+        // CacheConfig resolution to the pipeline config's `cache` block
+        // happens inside ServingSession::start; only the CLI override
+        // passes through here.
+        let cache = self.opts.cache.clone();
+        let session = Arc::new(ServingSession::start(
+            &orch,
+            SessionOptions { autoscaler, admission, cache },
+        )?);
         *guard = Some(session.clone());
         Ok(session)
     }
@@ -237,8 +246,14 @@ impl Server {
     fn stats(&self) -> Result<Value> {
         let session = self.session.lock().unwrap().as_ref().cloned();
         if let Some(s) = session {
-            let stages: Vec<Value> = s
-                .stage_stats()
+            let live = s.stage_stats();
+            // Session-wide cache rollup for the headline fields; the
+            // per-stage frames carry the split-out counters.
+            let mut cache = crate::metrics::CacheCounters::default();
+            for st in &live {
+                cache.absorb(&st.cache);
+            }
+            let stages: Vec<Value> = live
                 .iter()
                 .map(|st| {
                     jobj! {
@@ -247,6 +262,11 @@ impl Server {
                         "draining" => st.draining,
                         "queued" => st.queued,
                         "busy" => st.busy,
+                        "prefix_hits" => st.cache.prefix_hits as usize,
+                        "prefix_misses" => st.cache.prefix_misses as usize,
+                        "evictions" => st.cache.evictions as usize,
+                        "encoder_hits" => st.cache.encoder_hits as usize,
+                        "encoder_misses" => st.cache.encoder_misses as usize,
                     }
                 })
                 .collect();
@@ -260,6 +280,10 @@ impl Server {
                 "rejected" => rep.rejected,
                 "shed" => shed,
                 "goodput" => rep.goodput(),
+                "prefix_hits" => cache.prefix_hits as usize,
+                "prefix_hit_rate" => cache.prefix_hit_rate(),
+                "encoder_hits" => cache.encoder_hits as usize,
+                "encoder_hit_rate" => cache.encoder_hit_rate(),
                 "stages" => Value::Arr(stages),
             });
         }
@@ -286,6 +310,10 @@ impl Server {
             "rejected" => 0usize,
             "shed" => 0usize,
             "goodput" => 0.0,
+            "prefix_hits" => 0usize,
+            "prefix_hit_rate" => 0.0,
+            "encoder_hits" => 0usize,
+            "encoder_hit_rate" => 0.0,
             "stages" => Value::Arr(stages),
         })
     }

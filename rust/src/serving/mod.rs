@@ -67,7 +67,9 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use crate::config::{AdmissionConfig, AutoscalerConfig, ConnectorKind, PipelineConfig, RoutingKind};
+use crate::config::{
+    AdmissionConfig, AutoscalerConfig, CacheConfig, ConnectorKind, PipelineConfig, RoutingKind,
+};
 use crate::connector::router::EdgeCtl;
 use crate::connector::tcp::MooncakeStore;
 use crate::device::{DeviceId, DevicePool, Reservation};
@@ -86,6 +88,15 @@ use crate::trace::Request;
 pub struct ReplicaSlot {
     queued: AtomicUsize,
     busy: AtomicBool,
+    /// Live cross-request cache counters ([`CacheCounters`] unpacked
+    /// into relaxed atomics), published by the stage loop and read by
+    /// the `stats` server op.  Monotone totals, so torn multi-field
+    /// reads only ever lag, never lie.
+    prefix_hits: AtomicU64,
+    prefix_misses: AtomicU64,
+    evictions: AtomicU64,
+    encoder_hits: AtomicU64,
+    encoder_misses: AtomicU64,
 }
 
 impl ReplicaSlot {
@@ -101,6 +112,24 @@ impl ReplicaSlot {
     pub fn busy(&self) -> bool {
         self.busy.load(Ordering::Relaxed)
     }
+
+    pub fn publish_cache(&self, c: &crate::metrics::CacheCounters) {
+        self.prefix_hits.store(c.prefix_hits, Ordering::Relaxed);
+        self.prefix_misses.store(c.prefix_misses, Ordering::Relaxed);
+        self.evictions.store(c.evictions, Ordering::Relaxed);
+        self.encoder_hits.store(c.encoder_hits, Ordering::Relaxed);
+        self.encoder_misses.store(c.encoder_misses, Ordering::Relaxed);
+    }
+
+    pub fn cache(&self) -> crate::metrics::CacheCounters {
+        crate::metrics::CacheCounters {
+            prefix_hits: self.prefix_hits.load(Ordering::Relaxed),
+            prefix_misses: self.prefix_misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            encoder_hits: self.encoder_hits.load(Ordering::Relaxed),
+            encoder_misses: self.encoder_misses.load(Ordering::Relaxed),
+        }
+    }
 }
 
 /// Session start options.
@@ -112,13 +141,21 @@ pub struct SessionOptions {
     /// SLO-aware admission control + shedding (see [`admission`]);
     /// `None` admits everything (deadlines still cancel late).
     pub admission: Option<AdmissionConfig>,
+    /// Prefix / encoder caching knobs for every stage engine; `None`
+    /// falls back to the pipeline config's `cache` block, then to the
+    /// defaults (both caches on).
+    pub cache: Option<CacheConfig>,
 }
 
 impl SessionOptions {
-    /// Honor the pipeline config's `autoscaler`/`admission` blocks, if
-    /// present.
+    /// Honor the pipeline config's `autoscaler`/`admission`/`cache`
+    /// blocks, if present.
     pub fn from_config(config: &PipelineConfig) -> Self {
-        Self { autoscaler: config.autoscaler.clone(), admission: config.admission.clone() }
+        Self {
+            autoscaler: config.autoscaler.clone(),
+            admission: config.admission.clone(),
+            cache: config.cache.clone(),
+        }
     }
 }
 
@@ -199,6 +236,8 @@ pub(crate) struct SessionInner {
     /// SLO-aware overload control (submit-time rejection + the
     /// collector's shed sweep); `None` admits everything.
     pub(crate) admission: Option<AdmissionController>,
+    /// Resolved caching knobs every spawned replica inherits.
+    pub(crate) cache: CacheConfig,
     /// `(expiry_t, req_id)` deadlines enforced by the collector tick.
     pub(crate) deadlines: Mutex<Vec<(f64, u64)>>,
     /// Kept for cloning into dynamically spawned exit replicas; dropped
@@ -425,6 +464,9 @@ pub struct StageLiveStats {
     pub queued: usize,
     /// Live replicas whose engine is mid-work.
     pub busy: usize,
+    /// Cross-request cache counters summed across live replicas (zeros
+    /// for stages that cache nothing).
+    pub cache: crate::metrics::CacheCounters,
 }
 
 /// A persistent serving runtime over one pipeline.
@@ -487,6 +529,13 @@ impl ServingSession {
             Some(cfg) => Some(AdmissionController::new(cfg.clone())?),
             None => None,
         };
+        // Session options win over the pipeline's `cache` block; both
+        // absent means the defaults (prefix + encoder caches on).
+        let cache = opts
+            .cache
+            .clone()
+            .or_else(|| graph.config.cache.clone())
+            .unwrap_or_default();
 
         let (sink_tx, sink_rx) = mpsc::channel::<StageItem>();
         let pool = DevicePool::new(graph.config.n_devices, graph.config.device_bytes);
@@ -510,6 +559,7 @@ impl ServingSession {
             streams: Mutex::new(HashMap::new()),
             cancels: Arc::new(Tombstones::new()),
             admission,
+            cache,
             deadlines: Mutex::new(Vec::new()),
             sink_tx: Mutex::new(Some(sink_tx)),
             pool,
@@ -761,6 +811,7 @@ impl ServingSession {
                     draining: 0,
                     queued: 0,
                     busy: 0,
+                    cache: Default::default(),
                 };
                 for r in &st.replicas {
                     if r.draining {
@@ -772,6 +823,7 @@ impl ServingSession {
                     if r.slot.busy() {
                         out.busy += 1;
                     }
+                    out.cache.absorb(&r.slot.cache());
                 }
                 out
             })
@@ -958,6 +1010,7 @@ pub(crate) fn spawn_replica(
         on_stage_done: Some(on_stage_done),
         streaming: inner.opts.streaming,
         lazy_compile: inner.opts.lazy_compile,
+        cache: inner.cache.clone(),
         device_bytes: inner.graph.config.device_bytes,
         downstream_hint: orchestrator::downstream_hint(graph, &inner.artifacts, stage_idx),
         ready: ready.clone(),

@@ -199,6 +199,71 @@ pub fn overload_storm(seed: u64, n: usize, rate: f64) -> Workload {
     Workload { name: "overload-storm-sim".into(), requests }
 }
 
+/// Shared-prefix trace for the prefix/encoder-cache evaluation (ISSUE
+/// 7): a live stream where `hot_frac` of the requests replay one of four
+/// fixed "agent templates" — a class-specific system prompt of 40–64
+/// tokens AND a class-specific media clip — followed by a unique user
+/// tail.  Repeats of a class re-prefill the identical block-aligned
+/// prompt prefix (the KV prefix cache's hit population) and re-encode
+/// the identical clip (the encoder cache's hit population: the media
+/// seed is pinned per class, so the synthesized features are
+/// byte-identical).  The remaining requests are cold one-off chats.
+/// `scheduler::sim::simulate_prefix_cache` serves this trace cached vs
+/// cold at the same GPU budget.
+pub fn shared_prefix(seed: u64, n: usize, rate: f64, hot_frac: f64) -> Workload {
+    let hot_frac = hot_frac.clamp(0.0, 1.0);
+    let mut rng = Prng::new(seed ^ 0x9F1C5);
+    let at = arrivals(&mut rng, n, rate);
+    const CLASSES: usize = 4;
+    let vocab = 4096u64;
+    // Per class: a fixed prompt prefix (40/48/56/64 tokens), a fixed
+    // media seed, and a fixed clip length.  Drawn from a class-local rng
+    // so the templates are independent of `n` and the arrival stream.
+    let classes: Vec<(Vec<u32>, u64, usize)> = (0..CLASSES)
+        .map(|c| {
+            let mut crng = Prng::new(seed ^ 0xC1A55 ^ (c as u64).wrapping_mul(0x9E37_79B9));
+            let plen = 40 + c * 8;
+            let mut toks = vec![crate::tokenizer::BOS_ID];
+            for _ in 1..plen {
+                toks.push((crate::tokenizer::FIRST_ID as u64 + crng.below(vocab - 8)) as u32);
+            }
+            (toks, crng.next_u64(), 24 + c * 8)
+        })
+        .collect();
+    let requests = (0..n)
+        .map(|i| {
+            let hot = rng.f64() < hot_frac;
+            let tail = 8 + rng.below(17) as usize;
+            let text_out = 16 + rng.below(25) as usize;
+            if hot {
+                let (ptoks, media_seed, mm) = &classes[rng.below(CLASSES as u64) as usize];
+                let mut toks = ptoks.clone();
+                for _ in 0..tail {
+                    toks.push((crate::tokenizer::FIRST_ID as u64 + rng.below(vocab - 8)) as u32);
+                }
+                Request {
+                    id: i as u64,
+                    arrival_s: at[i],
+                    modality: Modality::Video,
+                    prompt_tokens: toks,
+                    mm_frames: *mm,
+                    seed: *media_seed,
+                    max_text_tokens: text_out,
+                    max_audio_tokens: 0,
+                    diffusion_steps: 0,
+                    ignore_eos: true,
+                }
+            } else {
+                // Cold one-off chat: unique prompt, unique media seed.
+                let mut r = mk(&mut rng, i as u64, at[i], Modality::Text, 16.0, 0.0, 24.0, 0.0);
+                r.max_text_tokens = text_out;
+                r
+            }
+        })
+        .collect();
+    Workload { name: "shared-prefix-sim".into(), requests }
+}
+
 /// VBench sim: text (or image) prompts for DiT image/video generation.
 pub fn vbench(seed: u64, n: usize, rate: f64, steps: usize, image_cond: bool) -> Workload {
     let mut rng = Prng::new(seed ^ 0xBE9C);
@@ -317,6 +382,47 @@ mod tests {
     }
 
     #[test]
+    fn shared_prefix_replays_hot_prefixes_and_media() {
+        let w = shared_prefix(1, 64, 0.0, 0.75);
+        assert_eq!(w.len(), 64);
+        // Hot requests carry a class clip; cold ones are plain chats.
+        let hot: Vec<_> = w.requests.iter().filter(|r| r.mm_frames > 0).collect();
+        assert!(hot.len() >= 32, "hot fraction collapsed: {}", hot.len());
+        assert!(hot.len() < 64, "no cold requests at hot_frac 0.75");
+        // One media seed == one template class: every member replays the
+        // identical clip AND the identical >= 40-token prompt prefix,
+        // with a unique tail.
+        let mut classes: std::collections::HashMap<u64, Vec<&crate::trace::Request>> =
+            Default::default();
+        for &r in &hot {
+            classes.entry(r.seed).or_default().push(r);
+        }
+        assert!(classes.len() <= 4, "more classes than templates");
+        let mut repeats = 0usize;
+        for members in classes.values() {
+            if members.len() < 2 {
+                continue;
+            }
+            repeats += members.len() - 1;
+            let first = members[0];
+            for r in members {
+                assert_eq!(r.mm_frames, first.mm_frames, "clip length drifts within a class");
+                assert_eq!(
+                    &r.prompt_tokens[..40],
+                    &first.prompt_tokens[..40],
+                    "class prefix drifts"
+                );
+            }
+            // Tails are unique user turns: some pair must differ.
+            assert!(
+                members.windows(2).any(|p| p[0].prompt_tokens != p[1].prompt_tokens),
+                "tails are identical — nothing distinguishes the requests"
+            );
+        }
+        assert!(repeats >= 8, "not enough prefix repeats to exercise the cache: {repeats}");
+    }
+
+    #[test]
     fn prop_limits_respected() {
         quick("trace_limits", |rng| {
             let seed = rng.next_u64();
@@ -330,6 +436,7 @@ mod tests {
                 bursty_mixed(seed, n, 2.0),
                 prefill_heavy(seed, n, 56.0),
                 overload_storm(seed, n, 80.0),
+                shared_prefix(seed, n, 24.0, 0.75),
             ] {
                 for r in &w.requests {
                     assert!(r.total_input_tokens() <= 210, "{}", r.total_input_tokens());

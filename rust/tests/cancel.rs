@@ -96,9 +96,11 @@ fn cancel_at_randomized_points_preserves_kv_invariants() {
             eng.block_manager().check_invariants().unwrap();
             assert!(steps < 10_000, "trial {trial}: engine failed to drain");
         }
-        // Every sequence — completed or cancelled — returned its blocks.
+        // Every sequence — completed or cancelled — returned its blocks
+        // (free, or parked refcount-0 in the prefix cache: both are
+        // reclaimable; only a leaked refcount would not be).
         assert_eq!(
-            eng.block_manager().free_blocks(),
+            eng.block_manager().reclaimable_blocks(),
             n_blocks,
             "trial {trial}: KV blocks leaked (cancelled: {cancelled:?})"
         );
@@ -124,7 +126,11 @@ fn cancel_around_a_kv_handoff_preserves_invariants() {
     let pre_blocks = pre.block_manager().n_blocks();
     pre.submit(token_job(7, &prompt, sampling(12, 3)));
     let items = pre.run_to_completion().unwrap();
-    assert_eq!(pre.block_manager().free_blocks(), pre_blocks, "export must free the prefill pool");
+    assert_eq!(
+        pre.block_manager().reclaimable_blocks(),
+        pre_blocks,
+        "export must return the prefill pool (free or cached, never referenced)"
+    );
     let h = KvHandoff::from_tensor(items[0].tensor(KV_TENSOR).unwrap()).unwrap();
 
     let mk_decode = || {
@@ -142,7 +148,7 @@ fn cancel_around_a_kv_handoff_preserves_invariants() {
     dec.submit_handoff(h.clone()).unwrap();
     assert!(dec.cancel(7), "queued handoff must be cancellable");
     assert!(dec.idle());
-    assert_eq!(dec.block_manager().free_blocks(), dec_blocks);
+    assert_eq!(dec.block_manager().reclaimable_blocks(), dec_blocks);
     dec.block_manager().check_invariants().unwrap();
 
     // (b) Cancelled mid-decode, post-import: the imported blocks (and
@@ -155,14 +161,14 @@ fn cancel_around_a_kv_handoff_preserves_invariants() {
     assert!(dec.stats.kv_imports >= 1, "import must have happened before the cancel");
     assert!(dec.cancel(7));
     assert!(dec.idle());
-    assert_eq!(dec.block_manager().free_blocks(), dec_blocks);
+    assert_eq!(dec.block_manager().reclaimable_blocks(), dec_blocks);
     dec.block_manager().check_invariants().unwrap();
 
     // (c) The engine still serves the same handoff cleanly afterwards.
     dec.submit_handoff(h).unwrap();
     let items = dec.run_to_completion().unwrap();
     assert!(items.iter().any(|i| i.finished && i.req_id == 7));
-    assert_eq!(dec.block_manager().free_blocks(), dec_blocks);
+    assert_eq!(dec.block_manager().reclaimable_blocks(), dec_blocks);
     dec.block_manager().check_invariants().unwrap();
 }
 

@@ -215,6 +215,55 @@ fn admission_beats_fifo_goodput_across_32_seeds_of_overload_storm() {
 }
 
 // ---------------------------------------------------------------------------
+// Global prefix cache: the cached engine beats the cold engine on BOTH
+// mean TTFT and mean JCT at the same GPU budget, deterministically
+// across 32 seeds of the shared-prefix trace — the acceptance property
+// behind `omni-serve bench --trace shared-prefix` (both call
+// `prefix_cache_comparison`, so the gate and this test cannot drift).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prefix_cache_beats_cold_across_32_seeds_of_shared_prefix() {
+    use omni_serve::scheduler::sim::prefix_cache_comparison;
+    let max_batch = 4;
+    let (mut worst_ttft, mut worst_jct) = (f64::INFINITY, f64::INFINITY);
+    for seed in 1..=32u64 {
+        let c = prefix_cache_comparison(seed, max_batch);
+        // Both arms serve the identical offered load to completion.
+        assert_eq!(c.cached.jct.len(), 64, "seed {seed}: cached run incomplete");
+        assert_eq!(c.cold.jct.len(), 64, "seed {seed}: cold run incomplete");
+        assert_eq!(c.cold.hits, 0, "the cold arm must never attach");
+        assert!(c.cached.hits > 0, "seed {seed}: hot trace produced no attaches");
+        assert!(
+            c.cached.mean_ttft() < c.cold.mean_ttft(),
+            "seed {seed}: cached {:.4}s !< cold {:.4}s mean TTFT",
+            c.cached.mean_ttft(),
+            c.cold.mean_ttft()
+        );
+        assert!(
+            c.cached.mean_jct() < c.cold.mean_jct(),
+            "seed {seed}: cached {:.4}s !< cold {:.4}s mean JCT",
+            c.cached.mean_jct(),
+            c.cold.mean_jct()
+        );
+        worst_ttft = worst_ttft.min(c.ttft_margin());
+        worst_jct = worst_jct.min(c.jct_margin());
+    }
+    println!(
+        "shared-prefix over 32 seeds: worst TTFT margin {:+.1}%, worst JCT margin {:+.1}%",
+        100.0 * worst_ttft,
+        100.0 * worst_jct
+    );
+    assert!(worst_ttft > 0.0 && worst_jct > 0.0);
+    // Determinism: the same seed replays to the identical comparison.
+    let a = prefix_cache_comparison(9, max_batch);
+    let b = prefix_cache_comparison(9, max_batch);
+    assert_eq!(a.cached.tokens_skipped, b.cached.tokens_skipped);
+    assert_eq!(a.cached.jct.mean(), b.cached.jct.mean());
+    assert_eq!(a.cold.ttft.mean(), b.cold.ttft.mean());
+}
+
+// ---------------------------------------------------------------------------
 // StageAllocator validation.
 // ---------------------------------------------------------------------------
 
@@ -377,7 +426,7 @@ fn replication_fields_survive_json_roundtrip() {
     let v = omni_serve::json::parse(&s).unwrap();
     let q = omni_serve::config::loader::from_value(&v).unwrap();
     assert_eq!(q.stage("talker").unwrap().replicas, 2);
-    assert_eq!(q.edges[0].routing, omni_serve::config::RoutingKind::Affinity);
+    assert_eq!(q.edges[0].routing, omni_serve::config::RoutingKind::CacheAware);
 }
 
 #[test]

@@ -189,6 +189,86 @@ fn streaming_generate_with_cross_connection_cancel() {
     h.join().unwrap().unwrap();
 }
 
+/// Prefix-cache smoke over real TCP (ISSUE 7): two IDENTICAL streaming
+/// requests back to back on one connection.  The second replays the
+/// first's prompt AND seed, so its prefill attaches the KV blocks the
+/// first request released into the global prefix cache: its TTFT
+/// (submit to first delta frame, wall clock) must be strictly lower,
+/// and the `stats` op must report a nonzero prefix-cache hit count.
+/// Needs artifacts (skipped otherwise, like the other live suites).
+#[test]
+fn identical_repeat_request_hits_the_prefix_cache_and_cuts_ttft() {
+    let dir = Artifacts::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let artifacts = Arc::new(Artifacts::load(&dir).unwrap());
+    let server = Server::bind(
+        "127.0.0.1:0",
+        presets::mimo_audio(1),
+        artifacts,
+        ServeOptions::default(),
+    )
+    .unwrap();
+    let addr = server.addr();
+    let h = std::thread::spawn(move || server.serve_n(1));
+
+    let mut c = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(c.try_clone().unwrap());
+
+    // 33 words -> 34 prompt tokens -> two full 16-token KV blocks for
+    // the repeat to attach (the tokenizer is one id per word plus BOS).
+    let prompt = (0..33).map(|i| format!("w{i}")).collect::<Vec<_>>().join(" ");
+    let req = format!(
+        r#"{{"op": "generate", "stream": true, "prompt": "{prompt}", "seed": 7, "max_text_tokens": 8, "max_audio_tokens": 8}}"#
+    );
+
+    // Submit → first delta, wall clock; then drain to the `done` frame.
+    let run = |c: &mut TcpStream, reader: &mut BufReader<TcpStream>| -> f64 {
+        let start = std::time::Instant::now();
+        let accepted = send(c, reader, &req);
+        assert_eq!(accepted.get("event").as_str(), Some("accepted"), "{accepted:?}");
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let first = json::parse(&line).unwrap_or_else(|e| panic!("bad frame `{line}`: {e}"));
+        assert_eq!(first.get("event").as_str(), Some("delta"), "{first:?}");
+        let ttft = start.elapsed().as_secs_f64();
+        loop {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            let v = json::parse(&line).unwrap_or_else(|e| panic!("bad frame `{line}`: {e}"));
+            match v.get("event").as_str() {
+                Some("delta") => continue,
+                Some("done") => {
+                    assert_eq!(v.get("cancelled").as_bool(), Some(false), "{v:?}");
+                    break;
+                }
+                other => panic!("unexpected frame {other:?}: {v:?}"),
+            }
+        }
+        ttft
+    };
+
+    let cold = run(&mut c, &mut reader);
+    let warm = run(&mut c, &mut reader);
+    assert!(
+        warm < cold,
+        "repeat TTFT {warm:.4}s !< cold TTFT {cold:.4}s — the prefix attach bought nothing"
+    );
+
+    // The stats op surfaces the attach live.
+    let v = send(&mut c, &mut reader, r#"{"op": "stats"}"#);
+    assert_eq!(v.get("live").as_bool(), Some(true));
+    assert!(v.get("prefix_hits").as_usize().unwrap() >= 1, "{v:?}");
+    assert!(v.get("prefix_hit_rate").as_f64().unwrap() > 0.0, "{v:?}");
+
+    let v = send(&mut c, &mut reader, r#"{"op": "shutdown"}"#);
+    assert_eq!(v.get("ok").as_bool(), Some(true));
+    drop((c, reader));
+    h.join().unwrap().unwrap();
+}
+
 /// Overload over real TCP (ISSUE 6): an admission-enabled server answers
 /// a flood of unmeetable-deadline `generate`s with structured
 /// `{"error": "rejected"}` frames on the still-alive connection — one-shot
