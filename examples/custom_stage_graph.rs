@@ -55,6 +55,10 @@ fn main() -> anyhow::Result<()> {
         n_devices: 2,
         device_bytes: omni_serve::device::DEFAULT_DEVICE_BYTES,
         autoscaler: None,
+        admission: None,
+        cache: None,
+        transport: omni_serve::config::TransportConfig::default(),
+        cluster: None,
     };
 
     // 2. Register the custom transfer: keep every other token (a toy

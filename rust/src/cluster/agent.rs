@@ -1,0 +1,257 @@
+//! The node agent: one process per machine, hosting an assigned subset
+//! of stage replicas (`omni-serve agent --node-id n0 --listen ...`).
+//!
+//! Lifecycle (one controller connection, frames from
+//! [`crate::cluster::wire`]):
+//!
+//! 1. bind `--listen`, print the bound address, accept the controller;
+//! 2. send `Register` (node identity + the device slots contributed);
+//! 3. heartbeat every `transport.heartbeat_s`, reporting in-flight work;
+//! 4. for each `Assign`, spawn a replica worker that pulls frames from
+//!    its `in_key` stream on the payload store, executes the hop, and
+//!    pushes to its `out_key` stream — chaining stages across processes
+//!    through store keys, with per-hop transfer stats recorded;
+//! 5. on `Drain`, join the workers, send `Stats` (per-edge counters)
+//!    and the `Drain` ack, then exit.
+//!
+//! Liveness is symmetric: the controller heartbeats too, and the agent
+//! reads its control stream under `transport.read_timeout_s` — a
+//! controller that dies mid-run surfaces as a structured error naming
+//! the silent peer, never a hang (same contract as the store clients in
+//! [`crate::connector::tcp`]).
+//!
+//! Worker execution: a replica worker runs the stage's *transfer loop* —
+//! take a frame, stamp it through, hand it downstream.  Engine compute
+//! requires model artifacts, which the artifact-free CI smoke (and the
+//! loopback tests) do not ship, so the hop is a relay: bytes in, bytes
+//! out, end-of-stream on a zero-length sentinel frame that is forwarded
+//! before the worker exits (so downstream workers and the controller's
+//! collector terminate in order).
+
+use std::io::{self, Write as _};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::TransportConfig;
+use crate::connector::tcp::StoreClient;
+use crate::connector::{EdgeTransferSnapshot, EdgeTransferStats};
+
+use super::wire::{read_msg, write_msg, CtlMsg};
+
+/// Everything `omni-serve agent` needs to come up.
+#[derive(Debug, Clone)]
+pub struct AgentOptions {
+    pub node_id: String,
+    /// Bind address for the control plane, e.g. `127.0.0.1:0`.
+    pub listen: String,
+    /// Device slots this node contributes to the controller's pool.
+    pub gpus: u32,
+    pub device_bytes: u64,
+    pub transport: TransportConfig,
+}
+
+impl AgentOptions {
+    pub fn new(node_id: &str, listen: &str) -> Self {
+        Self {
+            node_id: node_id.to_string(),
+            listen: listen.to_string(),
+            gpus: 2,
+            device_bytes: crate::device::DEFAULT_DEVICE_BYTES as u64,
+            transport: TransportConfig::default(),
+        }
+    }
+}
+
+/// What the agent did before draining.
+#[derive(Debug, Clone)]
+pub struct AgentReport {
+    pub node_id: String,
+    /// Replica workers hosted.
+    pub assignments: usize,
+    /// Frames moved across all hops (sentinels excluded).
+    pub frames_moved: u64,
+    /// Per-hop transfer counters, as sent to the controller.
+    pub edges: Vec<EdgeTransferSnapshot>,
+}
+
+struct Worker {
+    label: String,
+    stats: Arc<EdgeTransferStats>,
+    handle: thread::JoinHandle<Result<u64>>,
+}
+
+/// CLI entry: bind, announce the bound address on stdout (tests and
+/// operators parse it), serve one controller session, exit.
+pub fn run_agent(opts: &AgentOptions) -> Result<AgentReport> {
+    let listener =
+        TcpListener::bind(&opts.listen).with_context(|| format!("agent bind {}", opts.listen))?;
+    println!("agent {} listening on {}", opts.node_id, listener.local_addr()?);
+    io::stdout().flush().ok();
+    let (stream, _) = listener.accept().context("agent accept")?;
+    serve_controller(stream, opts)
+}
+
+/// In-process entry for tests: bind, hand the bound address back, serve
+/// the controller session on a thread.
+pub fn spawn_in_process(
+    opts: AgentOptions,
+) -> Result<(std::net::SocketAddr, thread::JoinHandle<Result<AgentReport>>)> {
+    let listener =
+        TcpListener::bind(&opts.listen).with_context(|| format!("agent bind {}", opts.listen))?;
+    let addr = listener.local_addr()?;
+    let handle = thread::spawn(move || {
+        let (stream, _) = listener.accept().context("agent accept")?;
+        serve_controller(stream, &opts)
+    });
+    Ok((addr, handle))
+}
+
+/// One controller session over an accepted control stream.
+pub fn serve_controller(stream: TcpStream, opts: &AgentOptions) -> Result<AgentReport> {
+    stream.set_nodelay(true).ok();
+    // The controller heartbeats; silence past the read timeout means the
+    // peer died and the agent must not hang on a dead control stream.
+    stream
+        .set_read_timeout(Some(Duration::from_secs_f64(opts.transport.read_timeout_s)))?;
+    let writer = Arc::new(Mutex::new(stream.try_clone()?));
+    let mut reader = stream;
+
+    write_msg(
+        &mut *writer.lock().unwrap(),
+        &CtlMsg::Register {
+            node_id: opts.node_id.clone(),
+            gpus: opts.gpus,
+            device_bytes: opts.device_bytes,
+        },
+    )?;
+
+    let inflight = Arc::new(AtomicU32::new(0));
+    let stop = Arc::new(AtomicBool::new(false));
+    let beats = {
+        let writer = Arc::clone(&writer);
+        let inflight = Arc::clone(&inflight);
+        let stop = Arc::clone(&stop);
+        let node_id = opts.node_id.clone();
+        let period = Duration::from_secs_f64(opts.transport.heartbeat_s);
+        thread::spawn(move || {
+            let mut seq = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                thread::sleep(period);
+                let msg = CtlMsg::Heartbeat {
+                    node_id: node_id.clone(),
+                    seq,
+                    inflight: inflight.load(Ordering::Relaxed),
+                };
+                if write_msg(&mut *writer.lock().unwrap(), &msg).is_err() {
+                    break; // controller gone; the read loop reports it
+                }
+                seq += 1;
+            }
+        })
+    };
+
+    let mut workers: Vec<Worker> = Vec::new();
+    let mut assignments = 0usize;
+    let drain_result = loop {
+        match read_msg(&mut reader) {
+            Ok(CtlMsg::Assign { stage, replica, store, in_key, out_key }) => {
+                assignments += 1;
+                let label = format!("{stage}#{replica}");
+                let stats = Arc::new(EdgeTransferStats::default());
+                let handle = {
+                    let (label, stats) = (label.clone(), Arc::clone(&stats));
+                    let (transport, inflight) = (opts.transport, Arc::clone(&inflight));
+                    thread::spawn(move || {
+                        relay_worker(&store, &in_key, &out_key, &label, &transport, &stats, &inflight)
+                    })
+                };
+                workers.push(Worker { label, stats, handle });
+            }
+            Ok(CtlMsg::Heartbeat { .. }) => {} // controller liveness; the timeout reset is implicit
+            Ok(CtlMsg::Drain { .. }) => break Ok(()),
+            Ok(other) => break Err(anyhow::anyhow!(
+                "agent `{}`: unexpected control message {other:?}",
+                opts.node_id
+            )),
+            Err(e) => {
+                let timed_out = super::wire::is_timeout(&e);
+                break Err(if timed_out {
+                    anyhow::anyhow!(
+                        "agent `{}`: controller dead (no heartbeat within the read timeout)",
+                        opts.node_id
+                    )
+                } else {
+                    e.context(format!("agent `{}`: control stream closed", opts.node_id))
+                });
+            }
+        }
+    };
+
+    stop.store(true, Ordering::Relaxed);
+    // Workers exit on their sentinel frames (the controller flushes the
+    // pipeline before Drain); join them and roll up the hop counters.
+    let mut frames_moved = 0u64;
+    let mut edges = Vec::with_capacity(workers.len());
+    let mut worker_errors = Vec::new();
+    for w in workers {
+        match w.handle.join() {
+            Ok(Ok(frames)) => frames_moved += frames,
+            Ok(Err(e)) => worker_errors.push(format!("{}: {e:#}", w.label)),
+            Err(_) => worker_errors.push(format!("{}: worker panicked", w.label)),
+        }
+        let mut snap = w.stats.snapshot();
+        snap.label = w.label;
+        edges.push(snap);
+    }
+    beats.join().ok();
+
+    drain_result?;
+    if !worker_errors.is_empty() {
+        bail!("agent `{}`: {} worker(s) failed: {}", opts.node_id, worker_errors.len(), worker_errors.join("; "));
+    }
+    // Report the hop counters, then ack the drain and exit.
+    {
+        let mut w = writer.lock().unwrap();
+        write_msg(&mut *w, &CtlMsg::Stats { node_id: opts.node_id.clone(), edges: edges.clone() })?;
+        write_msg(&mut *w, &CtlMsg::Drain { node_id: opts.node_id.clone() })?;
+    }
+    Ok(AgentReport { node_id: opts.node_id.clone(), assignments, frames_moved, edges })
+}
+
+/// One replica worker: pull `{in_key}:{seq}`, push `{out_key}:{seq}`,
+/// stop after forwarding the zero-length end-of-stream sentinel.  Store
+/// GETs are destructive takes, so consumed slots release themselves; a
+/// dead store surfaces the connector's structured dead-peer error.
+fn relay_worker(
+    store: &str,
+    in_key: &str,
+    out_key: &str,
+    label: &str,
+    transport: &TransportConfig,
+    stats: &EdgeTransferStats,
+    inflight: &AtomicU32,
+) -> Result<u64> {
+    let mut cli = StoreClient::connect_with(store, transport, label)?;
+    let mut seq = 0u64;
+    let mut frames = 0u64;
+    loop {
+        let t0 = Instant::now();
+        let val = cli.get(&format!("{in_key}:{seq}"))?;
+        inflight.fetch_add(1, Ordering::Relaxed);
+        let put = cli.put(&format!("{out_key}:{seq}"), &val);
+        inflight.fetch_sub(1, Ordering::Relaxed);
+        put?;
+        stats.record_sent(val.len() as u64);
+        stats.record_latency(t0.elapsed().as_secs_f64());
+        if val.is_empty() {
+            return Ok(frames); // sentinel forwarded downstream
+        }
+        frames += 1;
+        seq += 1;
+    }
+}

@@ -1,0 +1,272 @@
+//! The controller: owns the cluster control plane for one run.
+//!
+//! [`run_cluster_trace`] is the whole lifecycle in one call, used by the
+//! two-process CI smoke and the loopback tests:
+//!
+//! 1. spawn the payload store (the data-plane rendezvous);
+//! 2. connect to every node agent, collect `Register` frames into
+//!    [`crate::config::NodeSpec`]s;
+//! 3. run the placement engine ([`crate::cluster::placement::place`])
+//!    over the registered capacity, then `Assign` each stage replica to
+//!    its node with chained store-key streams;
+//! 4. drive the trace: put request frames into the first stage's
+//!    stream, collect them from the last stage's, then flush a
+//!    zero-length sentinel through the chain;
+//! 5. `Drain` every agent, harvest its `Stats` (per-edge transfer
+//!    counters) and drain ack, and report.
+//!
+//! Liveness: agents heartbeat every `transport.heartbeat_s` and the
+//! controller reads under `transport.read_timeout_s`, so a node that
+//! dies mid-run — silently or with a hangup — surfaces as a structured
+//! error naming the node, and the run aborts instead of hanging.  The
+//! controller heartbeats back on the same cadence so agents get the
+//! symmetric guarantee.
+
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{NodeSpec, PlacementPolicy, TransportConfig};
+use crate::connector::tcp::{MooncakeStore, StoreClient};
+use crate::connector::EdgeTransferSnapshot;
+
+use super::placement::{place, ClusterPlan, EdgeDemand, StageDemand};
+use super::wire::{read_msg, write_msg, CtlMsg};
+
+/// Controller-side knobs for one cluster run.
+#[derive(Debug, Clone)]
+pub struct ControllerOptions {
+    pub transport: TransportConfig,
+    pub placement: PlacementPolicy,
+    /// Per-replica weight bytes demanded from a node for each stage.
+    pub stage_bytes: usize,
+}
+
+impl Default for ControllerOptions {
+    fn default() -> Self {
+        Self {
+            transport: TransportConfig::default(),
+            placement: PlacementPolicy::TransferAware,
+            stage_bytes: 1 << 20,
+        }
+    }
+}
+
+/// What one cluster run did.
+#[derive(Debug, Clone)]
+pub struct ControllerReport {
+    /// Node ids, in registration order.
+    pub nodes: Vec<String>,
+    pub plan: ClusterPlan,
+    /// Requests that made it through the whole chain intact.
+    pub completed: usize,
+    /// Per-edge transfer counters harvested from the agents' `Stats`.
+    pub edges: Vec<EdgeTransferSnapshot>,
+    /// Heartbeats received across all agents.
+    pub heartbeats: u64,
+}
+
+struct AgentConn {
+    node_id: String,
+    writer: Arc<Mutex<TcpStream>>,
+    reader: thread::JoinHandle<Result<(Vec<EdgeTransferSnapshot>, u64)>>,
+}
+
+/// Run a stage chain over a set of node agents, driving `payloads`
+/// through it end to end.  Each stage runs one replica, homed by the
+/// placement engine over the agents' registered capacity.
+pub fn run_cluster_trace(
+    agent_addrs: &[String],
+    stages: &[&str],
+    payloads: &[Vec<u8>],
+    opts: &ControllerOptions,
+) -> Result<ControllerReport> {
+    if agent_addrs.is_empty() || stages.is_empty() {
+        bail!("controller: need at least one agent and one stage");
+    }
+    let store = MooncakeStore::spawn_with("127.0.0.1:0", &opts.transport)?;
+    let dead: Arc<Mutex<Option<String>>> = Arc::new(Mutex::new(None));
+    let done = Arc::new(AtomicBool::new(false));
+
+    // Connect + register every agent.
+    let mut nodes = Vec::with_capacity(agent_addrs.len());
+    let mut conns: Vec<AgentConn> = Vec::with_capacity(agent_addrs.len());
+    for addr in agent_addrs {
+        let stream = TcpStream::connect(addr).with_context(|| format!("controller -> agent {addr}"))?;
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(Some(Duration::from_secs_f64(opts.transport.read_timeout_s)))?;
+        let mut reader = stream.try_clone()?;
+        let node_id = match read_msg(&mut reader)? {
+            CtlMsg::Register { node_id, gpus, device_bytes } => {
+                nodes.push(NodeSpec { id: node_id.clone(), gpus: gpus as usize, device_bytes: device_bytes as usize });
+                node_id
+            }
+            other => bail!("agent {addr}: expected Register, got {other:?}"),
+        };
+        // Reader thread: heartbeats reset the read timeout implicitly;
+        // silence or a hangup before the drain ack marks the node dead.
+        let reader_handle = {
+            let (node_id, dead, done) = (node_id.clone(), Arc::clone(&dead), Arc::clone(&done));
+            thread::spawn(move || -> Result<(Vec<EdgeTransferSnapshot>, u64)> {
+                let mut beats = 0u64;
+                let mut edges = Vec::new();
+                loop {
+                    match read_msg(&mut reader) {
+                        Ok(CtlMsg::Heartbeat { .. }) => beats += 1,
+                        Ok(CtlMsg::Stats { edges: e, .. }) => edges = e,
+                        Ok(CtlMsg::Drain { .. }) => return Ok((edges, beats)),
+                        Ok(other) => {
+                            let msg = format!("node `{node_id}`: unexpected {other:?}");
+                            dead.lock().unwrap().get_or_insert(msg.clone());
+                            bail!(msg);
+                        }
+                        Err(e) => {
+                            let msg = if super::wire::is_timeout(&e) {
+                                format!("node `{node_id}` dead: no heartbeat within the read timeout")
+                            } else {
+                                format!("node `{node_id}` hung up mid-run: {e:#}")
+                            };
+                            if !done.load(Ordering::Relaxed) {
+                                dead.lock().unwrap().get_or_insert(msg.clone());
+                            }
+                            bail!(msg);
+                        }
+                    }
+                }
+            })
+        };
+        conns.push(AgentConn {
+            node_id,
+            writer: Arc::new(Mutex::new(stream)),
+            reader: reader_handle,
+        });
+    }
+
+    // Place the chain over the registered capacity.  Edge weight = mean
+    // payload size, which is what actually moves per request.
+    let mean_bytes = if payloads.is_empty() {
+        0.0
+    } else {
+        payloads.iter().map(|p| p.len()).sum::<usize>() as f64 / payloads.len() as f64
+    };
+    let demands: Vec<StageDemand> = stages
+        .iter()
+        .map(|s| StageDemand { stage: s.to_string(), replicas: 1, tp: 1, bytes: opts.stage_bytes })
+        .collect();
+    let edge_demands: Vec<EdgeDemand> = stages
+        .windows(2)
+        .map(|w| EdgeDemand { from: w[0].to_string(), to: w[1].to_string(), bytes_per_request: mean_bytes })
+        .collect();
+    let plan = place(&nodes, &demands, &edge_demands, opts.placement)?;
+
+    // Assign each stage replica to its node, chaining streams: stage i
+    // pulls from `e{i}` and pushes to `e{i+1}`.
+    for (i, stage) in stages.iter().enumerate() {
+        let node = plan.node_of(stage, 0).expect("placed above");
+        write_msg(
+            &mut *conns[node].writer.lock().unwrap(),
+            &CtlMsg::Assign {
+                stage: stage.to_string(),
+                replica: 0,
+                store: store.addr().to_string(),
+                in_key: format!("e{i}"),
+                out_key: format!("e{}", i + 1),
+            },
+        )?;
+    }
+
+    // Controller-side heartbeats (agents read under the same timeout).
+    let beats_stop = Arc::new(AtomicBool::new(false));
+    let beats_handle = {
+        let writers: Vec<_> = conns.iter().map(|c| Arc::clone(&c.writer)).collect();
+        let stop = Arc::clone(&beats_stop);
+        let period = Duration::from_secs_f64(opts.transport.heartbeat_s);
+        thread::spawn(move || {
+            let mut seq = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                thread::sleep(period);
+                for w in &writers {
+                    let msg = CtlMsg::Heartbeat { node_id: "controller".into(), seq, inflight: 0 };
+                    let _ = write_msg(&mut *w.lock().unwrap(), &msg);
+                }
+                seq += 1;
+            }
+        })
+    };
+
+    // Drive the trace on a thread so the main loop can watch liveness:
+    // put every frame plus the sentinel, then take the chain's output.
+    let (drive_tx, drive_rx) = mpsc::channel::<Result<usize>>();
+    let driver = {
+        let (store_addr, transport) = (store.addr().to_string(), opts.transport);
+        let payloads = payloads.to_vec();
+        let last = stages.len();
+        thread::spawn(move || {
+            let run = || -> Result<usize> {
+                let mut cli = StoreClient::connect_with(&store_addr, &transport, "controller")?;
+                for (i, p) in payloads.iter().enumerate() {
+                    cli.put(&format!("e0:{i}"), p)?;
+                }
+                cli.put(&format!("e0:{}", payloads.len()), &[])?;
+                let mut completed = 0usize;
+                for (i, p) in payloads.iter().enumerate() {
+                    let got = cli.get(&format!("e{last}:{i}"))?;
+                    if &got == p {
+                        completed += 1;
+                    }
+                }
+                let sentinel = cli.get(&format!("e{last}:{}", payloads.len()))?;
+                if !sentinel.is_empty() {
+                    bail!("controller: end-of-stream sentinel came back non-empty");
+                }
+                Ok(completed)
+            };
+            drive_tx.send(run()).ok();
+        })
+    };
+
+    // Watch the drive and the node liveness together: a dead node must
+    // abort the run with its structured error, not hang the collector.
+    let completed = loop {
+        if let Some(msg) = dead.lock().unwrap().clone() {
+            beats_stop.store(true, Ordering::Relaxed);
+            bail!("cluster run aborted: {msg}");
+        }
+        match drive_rx.recv_timeout(Duration::from_millis(10)) {
+            Ok(res) => break res?,
+            Err(mpsc::RecvTimeoutError::Timeout) => continue,
+            Err(mpsc::RecvTimeoutError::Disconnected) => bail!("controller: trace driver died"),
+        }
+    };
+    driver.join().ok();
+    done.store(true, Ordering::Relaxed);
+
+    // Drain: every agent sends Stats then acks; readers return both.
+    for c in &conns {
+        write_msg(&mut *c.writer.lock().unwrap(), &CtlMsg::Drain { node_id: c.node_id.clone() })?;
+    }
+    beats_stop.store(true, Ordering::Relaxed);
+    let mut edges = Vec::new();
+    let mut heartbeats = 0u64;
+    for c in conns {
+        let node_id = c.node_id;
+        match c.reader.join() {
+            Ok(Ok((mut e, beats))) => {
+                for s in &mut e {
+                    s.label = format!("{node_id}/{}", s.label);
+                }
+                edges.extend(e);
+                heartbeats += beats;
+            }
+            Ok(Err(e)) => bail!("node `{node_id}` failed to drain cleanly: {e:#}"),
+            Err(_) => bail!("node `{node_id}`: reader panicked"),
+        }
+    }
+    beats_handle.join().ok();
+
+    Ok(ControllerReport { nodes: nodes.into_iter().map(|n| n.id).collect(), plan, completed, edges, heartbeats })
+}

@@ -1,0 +1,35 @@
+//! Multi-node disaggregation (paper §3.1: the stages of an any-to-any
+//! pipeline need not share a machine, only a transport).
+//!
+//! The single-process serving path wires stages with in-proc channels,
+//! shm rings, or the TCP payload store ([`crate::connector`]).  This
+//! module adds the pieces that let those stages span processes and
+//! machines:
+//!
+//! * [`wire`] — the `OCTL` control-plane frame set
+//!   (register/assign/heartbeat/drain/stats), checksummed and
+//!   truncation-safe like the data-plane `OKVH` frames;
+//! * [`placement`] — the controller-side cluster allocator: replicas →
+//!   nodes under per-device memory admission, with transfer-cost-aware
+//!   co-location and a per-edge transport selection matrix
+//!   (cross-node ⇒ TCP, heavy local ⇒ shm, light local ⇒ in-proc);
+//! * [`agent`] — the per-machine node agent (`omni-serve agent`):
+//!   registers its capacity, hosts assigned stage replicas, heartbeats,
+//!   drains cleanly;
+//! * [`controller`] — the run driver: registration, placement,
+//!   assignment, trace driving, liveness watching, drain + per-edge
+//!   transfer-stat harvest.
+//!
+//! The link-aware half of the story — why transfer-aware placement wins
+//! — is modeled in [`crate::scheduler::sim`]'s cross-node simulation and
+//! gated in CI by `omni-serve bench --trace cross-node`.
+
+pub mod agent;
+pub mod controller;
+pub mod placement;
+pub mod wire;
+
+pub use agent::{run_agent, AgentOptions, AgentReport};
+pub use controller::{run_cluster_trace, ControllerOptions, ControllerReport};
+pub use placement::{place, ClusterPlan, EdgeDemand, EdgeRoute, ReplicaPlacement, StageDemand};
+pub use wire::CtlMsg;

@@ -1,0 +1,381 @@
+//! Control-plane wire format for the cluster subsystem (ISSUE 8).
+//!
+//! One frame (`OCTL`), little-endian, carrying every message exchanged
+//! between a node agent and the controller:
+//!
+//! `magic u32 | version u8 | tag u8 | body | fnv1a u64`
+//!
+//! Strings are `len u32 | utf8 bytes` (bounded — see [`MAX_STR`]); the
+//! trailing FNV-1a checksum covers everything before it, so a flipped
+//! byte anywhere in the frame is a decode error, never a panic or a
+//! silently-wrong assignment (same contract as the `OKVH` KV-handoff
+//! frame in [`crate::connector::wire`]).
+//!
+//! On a TCP stream, frames are length-prefixed (`len u32 | frame`) by
+//! [`write_msg`] / [`read_msg`], with the length bounded by
+//! [`MAX_FRAME`] so a corrupt prefix cannot OOM the reader.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Result};
+
+use crate::connector::EdgeTransferSnapshot;
+
+const MAGIC: u32 = 0x4F43544C; // "OCTL"
+const VERSION: u8 = 1;
+
+const TAG_REGISTER: u8 = 1;
+const TAG_ASSIGN: u8 = 2;
+const TAG_HEARTBEAT: u8 = 3;
+const TAG_DRAIN: u8 = 4;
+const TAG_STATS: u8 = 5;
+
+/// Longest string any control message may carry.
+const MAX_STR: usize = 4096;
+/// Longest whole frame [`read_msg`] accepts.
+pub const MAX_FRAME: usize = 64 * 1024;
+
+/// A control-plane message between a node agent and the controller.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CtlMsg {
+    /// Agent → controller, first frame after connect: the node's
+    /// identity and the device slots it contributes to the pool.
+    Register { node_id: String, gpus: u32, device_bytes: u64 },
+    /// Controller → agent: host one replica of `stage`, pulling inputs
+    /// from `in_key`-prefixed store keys and pushing outputs to
+    /// `out_key`-prefixed ones, with the payload store at `store`.
+    Assign { stage: String, replica: u32, store: String, in_key: String, out_key: String },
+    /// Agent → controller, periodic liveness + load signal.
+    Heartbeat { node_id: String, seq: u64, inflight: u32 },
+    /// Either direction.  Controller → agent: stop pulling new work,
+    /// finish what is in flight, and shut down.  Agent → controller:
+    /// the drain acknowledgement (echo), after which the agent exits.
+    Drain { node_id: String },
+    /// Agent → controller, sent right before the drain ack: per-edge
+    /// transfer counters for the hops this agent executed.
+    Stats { node_id: String, edges: Vec<EdgeTransferSnapshot> },
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xCBF29CE484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001B3);
+    }
+    h
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+pub fn encode(msg: &CtlMsg) -> Vec<u8> {
+    let mut out = Vec::with_capacity(64);
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.push(VERSION);
+    match msg {
+        CtlMsg::Register { node_id, gpus, device_bytes } => {
+            out.push(TAG_REGISTER);
+            put_str(&mut out, node_id);
+            out.extend_from_slice(&gpus.to_le_bytes());
+            out.extend_from_slice(&device_bytes.to_le_bytes());
+        }
+        CtlMsg::Assign { stage, replica, store, in_key, out_key } => {
+            out.push(TAG_ASSIGN);
+            put_str(&mut out, stage);
+            out.extend_from_slice(&replica.to_le_bytes());
+            put_str(&mut out, store);
+            put_str(&mut out, in_key);
+            put_str(&mut out, out_key);
+        }
+        CtlMsg::Heartbeat { node_id, seq, inflight } => {
+            out.push(TAG_HEARTBEAT);
+            put_str(&mut out, node_id);
+            out.extend_from_slice(&seq.to_le_bytes());
+            out.extend_from_slice(&inflight.to_le_bytes());
+        }
+        CtlMsg::Drain { node_id } => {
+            out.push(TAG_DRAIN);
+            put_str(&mut out, node_id);
+        }
+        CtlMsg::Stats { node_id, edges } => {
+            out.push(TAG_STATS);
+            put_str(&mut out, node_id);
+            out.extend_from_slice(&(edges.len() as u32).to_le_bytes());
+            for e in edges {
+                put_str(&mut out, &e.label);
+                out.extend_from_slice(&e.bytes.to_le_bytes());
+                out.extend_from_slice(&e.frames.to_le_bytes());
+                out.extend_from_slice(&e.p50_ms.to_le_bytes());
+                out.extend_from_slice(&e.p95_ms.to_le_bytes());
+            }
+        }
+    }
+    let sum = fnv1a(&out);
+    out.extend_from_slice(&sum.to_le_bytes());
+    out
+}
+
+pub fn decode(bytes: &[u8]) -> Result<CtlMsg> {
+    // Checksum first: a flipped byte anywhere is caught even when it
+    // lands somewhere a structural check cannot see.
+    if bytes.len() < 8 {
+        bail!("ctl wire: frame too short ({} bytes)", bytes.len());
+    }
+    let (body, sum_bytes) = bytes.split_at(bytes.len() - 8);
+    let declared = u64::from_le_bytes(sum_bytes.try_into().unwrap());
+    if fnv1a(body) != declared {
+        bail!("ctl wire: checksum mismatch (corrupt frame)");
+    }
+    let mut pos = 0usize;
+    let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+        if *pos + n > body.len() {
+            bail!("ctl wire: truncated at {} (+{n} > {})", *pos, body.len());
+        }
+        let s = &body[*pos..*pos + n];
+        *pos += n;
+        Ok(s)
+    };
+    let get_str = |pos: &mut usize| -> Result<String> {
+        let len = u32::from_le_bytes(take(&mut *pos, 4)?.try_into().unwrap()) as usize;
+        if len > MAX_STR {
+            bail!("ctl wire: string of {len} bytes exceeds the {MAX_STR} cap");
+        }
+        String::from_utf8(take(&mut *pos, len)?.to_vec())
+            .map_err(|_| anyhow::anyhow!("ctl wire: non-utf8 string"))
+    };
+    let magic = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+    if magic != MAGIC {
+        bail!("ctl wire: bad magic {magic:#x}");
+    }
+    let version = take(&mut pos, 1)?[0];
+    if version != VERSION {
+        bail!("ctl wire: unsupported version {version}");
+    }
+    let tag = take(&mut pos, 1)?[0];
+    let msg = match tag {
+        TAG_REGISTER => {
+            let node_id = get_str(&mut pos)?;
+            let gpus = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+            let device_bytes = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
+            CtlMsg::Register { node_id, gpus, device_bytes }
+        }
+        TAG_ASSIGN => {
+            let stage = get_str(&mut pos)?;
+            let replica = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+            let store = get_str(&mut pos)?;
+            let in_key = get_str(&mut pos)?;
+            let out_key = get_str(&mut pos)?;
+            CtlMsg::Assign { stage, replica, store, in_key, out_key }
+        }
+        TAG_HEARTBEAT => {
+            let node_id = get_str(&mut pos)?;
+            let seq = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
+            let inflight = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+            CtlMsg::Heartbeat { node_id, seq, inflight }
+        }
+        TAG_DRAIN => CtlMsg::Drain { node_id: get_str(&mut pos)? },
+        TAG_STATS => {
+            let node_id = get_str(&mut pos)?;
+            let n = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+            // Bound by the frame size before allocating (a corrupt count
+            // must not OOM; each entry is at least 4 bytes of label len).
+            if n > body.len() - pos {
+                bail!("ctl wire: {n} edge stats cannot fit the remaining frame");
+            }
+            let mut edges = Vec::with_capacity(n);
+            for _ in 0..n {
+                let label = get_str(&mut pos)?;
+                let bytes_moved = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
+                let frames = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
+                let p50_ms = f64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
+                let p95_ms = f64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
+                edges.push(EdgeTransferSnapshot {
+                    label,
+                    bytes: bytes_moved,
+                    frames,
+                    p50_ms,
+                    p95_ms,
+                });
+            }
+            CtlMsg::Stats { node_id, edges }
+        }
+        other => bail!("ctl wire: unknown tag {other}"),
+    };
+    if pos != body.len() {
+        bail!("ctl wire: {} trailing bytes after payload", body.len() - pos);
+    }
+    Ok(msg)
+}
+
+/// Write one length-prefixed frame to a stream.
+pub fn write_msg(w: &mut impl Write, msg: &CtlMsg) -> Result<()> {
+    let frame = encode(msg);
+    w.write_all(&(frame.len() as u32).to_le_bytes())?;
+    w.write_all(&frame)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Marker carried in [`read_msg`]'s error when the socket read timed
+/// out.  The vendored `anyhow` keeps message strings only (no
+/// downcasting), so liveness code asks [`is_timeout`] instead of
+/// inspecting an [`std::io::Error`] it can no longer reach.
+const TIMEOUT_MARK: &str = "ctl wire: silent peer (read timed out)";
+
+/// Whether an error from [`read_msg`] was a read timeout — a silent
+/// peer — rather than a hangup or a corrupt frame.
+pub fn is_timeout(e: &anyhow::Error) -> bool {
+    e.chain().any(|m| m.contains(TIMEOUT_MARK))
+}
+
+fn read_exact_classified(r: &mut impl Read, buf: &mut [u8]) -> Result<()> {
+    use std::io::ErrorKind;
+    r.read_exact(buf).map_err(|e| {
+        if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) {
+            anyhow::anyhow!("{TIMEOUT_MARK}")
+        } else {
+            e.into()
+        }
+    })
+}
+
+/// Read one length-prefixed frame from a stream.
+pub fn read_msg(r: &mut impl Read) -> Result<CtlMsg> {
+    let mut len4 = [0u8; 4];
+    read_exact_classified(r, &mut len4)?;
+    let len = u32::from_le_bytes(len4) as usize;
+    if len > MAX_FRAME {
+        bail!("ctl wire: frame of {len} bytes exceeds the {MAX_FRAME} cap");
+    }
+    let mut frame = vec![0u8; len];
+    read_exact_classified(r, &mut frame)?;
+    decode(&frame)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::quick;
+    use crate::util::Prng;
+
+    fn rand_str(rng: &mut Prng, max: usize) -> String {
+        (0..rng.range(0, max)).map(|_| (b'a' + rng.below(26) as u8) as char).collect()
+    }
+
+    fn sample(rng: &mut Prng) -> CtlMsg {
+        match rng.below(5) {
+            0 => CtlMsg::Register {
+                node_id: rand_str(rng, 16),
+                gpus: rng.below(16) as u32,
+                device_bytes: rng.next_u64(),
+            },
+            1 => CtlMsg::Assign {
+                stage: rand_str(rng, 16),
+                replica: rng.below(8) as u32,
+                store: rand_str(rng, 24),
+                in_key: rand_str(rng, 24),
+                out_key: rand_str(rng, 24),
+            },
+            2 => CtlMsg::Heartbeat {
+                node_id: rand_str(rng, 16),
+                seq: rng.next_u64(),
+                inflight: rng.below(1000) as u32,
+            },
+            3 => CtlMsg::Drain { node_id: rand_str(rng, 16) },
+            _ => CtlMsg::Stats {
+                node_id: rand_str(rng, 16),
+                edges: (0..rng.range(0, 4))
+                    .map(|_| EdgeTransferSnapshot {
+                        label: rand_str(rng, 24),
+                        bytes: rng.next_u64(),
+                        frames: rng.next_u64(),
+                        p50_ms: rng.f64() * 100.0,
+                        p95_ms: rng.f64() * 100.0,
+                    })
+                    .collect(),
+            },
+        }
+    }
+
+    #[test]
+    fn prop_ctl_frame_roundtrips() {
+        quick("ctl_wire_roundtrip", |rng| {
+            let msg = sample(rng);
+            let got = decode(&encode(&msg)).unwrap();
+            assert_eq!(got, msg);
+        });
+    }
+
+    #[test]
+    fn ctl_frame_rejects_every_truncation() {
+        let mut rng = Prng::new(13);
+        for _ in 0..5 {
+            let bytes = encode(&sample(&mut rng));
+            // Every proper prefix must decode to an error, never a panic.
+            for cut in 0..bytes.len() {
+                assert!(decode(&bytes[..cut]).is_err(), "prefix of {cut} bytes decoded");
+            }
+            assert!(decode(&bytes).is_ok());
+        }
+    }
+
+    #[test]
+    fn prop_ctl_frame_rejects_bit_flips() {
+        // The trailing checksum makes ANY single-byte corruption — tag,
+        // strings, counters — a decode error.
+        quick("ctl_wire_corruption", |rng| {
+            let msg = sample(rng);
+            let mut bytes = encode(&msg);
+            let i = rng.range(0, bytes.len() - 1);
+            let flip = (rng.below(255) + 1) as u8;
+            bytes[i] ^= flip;
+            assert!(decode(&bytes).is_err(), "flip at byte {i} slipped through");
+        });
+    }
+
+    #[test]
+    fn ctl_frame_rejects_wrong_magic_version_and_tag() {
+        let msg = CtlMsg::Drain { node_id: "n0".into() };
+        // Wrong magic, checksum recomputed so only the magic check fires.
+        let mut bytes = encode(&msg);
+        bytes[0] ^= 0xFF;
+        let body_len = bytes.len() - 8;
+        let sum = fnv1a(&bytes[..body_len]);
+        bytes[body_len..].copy_from_slice(&sum.to_le_bytes());
+        assert!(decode(&bytes).is_err());
+        // Unsupported version.
+        let mut bytes = encode(&msg);
+        bytes[4] = 99;
+        let sum = fnv1a(&bytes[..body_len]);
+        bytes[body_len..].copy_from_slice(&sum.to_le_bytes());
+        assert!(decode(&bytes).is_err());
+        // Unknown tag.
+        let mut bytes = encode(&msg);
+        bytes[5] = 200;
+        let sum = fnv1a(&bytes[..body_len]);
+        bytes[body_len..].copy_from_slice(&sum.to_le_bytes());
+        assert!(decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn stream_framing_roundtrips_and_bounds_length() {
+        let msgs = vec![
+            CtlMsg::Register { node_id: "n0".into(), gpus: 2, device_bytes: 1 << 20 },
+            CtlMsg::Heartbeat { node_id: "n0".into(), seq: 7, inflight: 3 },
+            CtlMsg::Drain { node_id: "n0".into() },
+        ];
+        let mut buf: Vec<u8> = Vec::new();
+        for m in &msgs {
+            write_msg(&mut buf, m).unwrap();
+        }
+        let mut r = &buf[..];
+        for m in &msgs {
+            assert_eq!(&read_msg(&mut r).unwrap(), m);
+        }
+        // A corrupt length prefix is rejected before allocation.
+        let huge = (MAX_FRAME as u32 + 1).to_le_bytes();
+        assert!(read_msg(&mut &huge[..]).is_err());
+    }
+}

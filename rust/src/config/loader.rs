@@ -6,8 +6,9 @@ use std::path::Path;
 use anyhow::{Context, Result};
 
 use super::{
-    AdmissionConfig, AutoscalerConfig, CacheConfig, ConnectorKind, DiffusionParams, EdgeConfig,
-    PipelineConfig, RoutingKind, SchedParams, SchedPolicyKind, StageConfig, StageKind, StageRole,
+    AdmissionConfig, AutoscalerConfig, CacheConfig, ClusterConfig, ConnectorKind, DiffusionParams,
+    EdgeConfig, NodeSpec, PipelineConfig, PlacementPolicy, RoutingKind, SchedParams,
+    SchedPolicyKind, StageConfig, StageKind, StageRole, TransportConfig,
 };
 use crate::kv_cache::EvictionPolicy;
 use crate::jobj;
@@ -156,6 +157,47 @@ pub fn from_value(v: &Value) -> Result<PipelineConfig> {
                 .unwrap_or(d.encoder_cache_capacity),
         })
     };
+    let tv = v.get("transport");
+    let transport = if tv.is_null() {
+        TransportConfig::default()
+    } else {
+        // Same guard as the autoscaler: `"transport": true` is a typo,
+        // not "enable with defaults".
+        anyhow::ensure!(tv.as_obj().is_some(), "`transport` must be an object");
+        let d = TransportConfig::default();
+        TransportConfig {
+            heartbeat_s: tv.get("heartbeat_s").as_f64().unwrap_or(d.heartbeat_s),
+            read_timeout_s: tv.get("read_timeout_s").as_f64().unwrap_or(d.read_timeout_s),
+        }
+    };
+    let clv = v.get("cluster");
+    let cluster = if clv.is_null() {
+        None
+    } else {
+        // Same guard as the autoscaler: a topology must be spelled out.
+        anyhow::ensure!(clv.as_obj().is_some(), "`cluster` must be an object");
+        let d = ClusterConfig::default();
+        let mut nodes = Vec::new();
+        for nv in clv.req_arr("nodes")? {
+            nodes.push(NodeSpec {
+                id: nv.req_str("id")?.to_string(),
+                gpus: nv.get("gpus").as_usize().unwrap_or(1),
+                device_bytes: nv
+                    .get("device_bytes")
+                    .as_usize()
+                    .unwrap_or(crate::device::DEFAULT_DEVICE_BYTES),
+            });
+        }
+        Some(ClusterConfig {
+            nodes,
+            placement: match clv.get("placement").as_str() {
+                Some(name) => PlacementPolicy::from_name(name)?,
+                None => d.placement,
+            },
+            link_gbps: clv.get("link_gbps").as_f64().unwrap_or(d.link_gbps),
+            link_latency_ms: clv.get("link_latency_ms").as_f64().unwrap_or(d.link_latency_ms),
+        })
+    };
     let cfg = PipelineConfig {
         name: v.req_str("name")?.to_string(),
         stages,
@@ -168,6 +210,8 @@ pub fn from_value(v: &Value) -> Result<PipelineConfig> {
         autoscaler,
         admission,
         cache,
+        transport,
+        cluster,
     };
     cfg.validate()?;
     Ok(cfg)
@@ -269,6 +313,41 @@ pub fn to_value(p: &PipelineConfig) -> Value {
             );
         }
     }
+    if p.transport != TransportConfig::default() {
+        if let Value::Obj(m) = &mut out {
+            m.insert(
+                "transport".to_string(),
+                jobj! {
+                    "heartbeat_s" => p.transport.heartbeat_s,
+                    "read_timeout_s" => p.transport.read_timeout_s,
+                },
+            );
+        }
+    }
+    if let Some(c) = &p.cluster {
+        if let Value::Obj(m) = &mut out {
+            let nodes: Vec<Value> = c
+                .nodes
+                .iter()
+                .map(|n| {
+                    jobj! {
+                        "id" => n.id.clone(),
+                        "gpus" => n.gpus,
+                        "device_bytes" => n.device_bytes,
+                    }
+                })
+                .collect();
+            m.insert(
+                "cluster".to_string(),
+                jobj! {
+                    "nodes" => Value::Arr(nodes),
+                    "placement" => c.placement.name(),
+                    "link_gbps" => c.link_gbps,
+                    "link_latency_ms" => c.link_latency_ms,
+                },
+            );
+        }
+    }
     out
 }
 
@@ -310,6 +389,8 @@ mod tests {
                 assert_eq!(a.connector, b.connector);
                 assert_eq!(a.routing, b.routing);
             }
+            assert_eq!(p.transport, q.transport);
+            assert_eq!(p.cluster, q.cluster);
         }
     }
 
@@ -494,6 +575,85 @@ mod tests {
             r#"{"name": "x", "n_devices": 1, "stages": [
                 {"name": "a", "model": "mimo", "kind": "ar", "devices": [0]}
             ], "cache": false}"#,
+        )
+        .unwrap();
+        assert!(from_value(&typo).is_err());
+    }
+
+    #[test]
+    fn transport_block_roundtrips_and_defaults() {
+        let mut p = presets::qwen3_omni();
+        p.transport = TransportConfig { heartbeat_s: 0.1, read_timeout_s: 1.0 };
+        let s = to_json_string(&p);
+        let q = from_value(&json::parse(&s).unwrap()).unwrap();
+        assert_eq!(q.transport, p.transport);
+        // Partial block: unspecified fields take the defaults.
+        let v = json::parse(
+            r#"{"name": "x", "n_devices": 1, "stages": [
+                {"name": "a", "model": "mimo", "kind": "ar", "devices": [0]}
+            ], "transport": {"read_timeout_s": 2.5}}"#,
+        )
+        .unwrap();
+        let q = from_value(&v).unwrap();
+        assert_eq!(q.transport.read_timeout_s, 2.5);
+        assert_eq!(q.transport.heartbeat_s, TransportConfig::default().heartbeat_s);
+        // No block at all: the defaults.
+        assert_eq!(presets::qwen3_omni().transport, TransportConfig::default());
+        // Invalid block rejected at load time (timeout under heartbeat).
+        let bad = json::parse(
+            r#"{"name": "x", "n_devices": 1, "stages": [
+                {"name": "a", "model": "mimo", "kind": "ar", "devices": [0]}
+            ], "transport": {"heartbeat_s": 3.0, "read_timeout_s": 1.0}}"#,
+        )
+        .unwrap();
+        assert!(from_value(&bad).is_err());
+        // A non-object value is a config mistake, not "all defaults".
+        let typo = json::parse(
+            r#"{"name": "x", "n_devices": 1, "stages": [
+                {"name": "a", "model": "mimo", "kind": "ar", "devices": [0]}
+            ], "transport": true}"#,
+        )
+        .unwrap();
+        assert!(from_value(&typo).is_err());
+    }
+
+    #[test]
+    fn cluster_block_roundtrips_and_defaults() {
+        let p = presets::qwen3_omni_cluster();
+        let s = to_json_string(&p);
+        let q = from_value(&json::parse(&s).unwrap()).unwrap();
+        assert_eq!(q.cluster, p.cluster);
+        // Partial block: node gpus/device_bytes and the link model take
+        // defaults; the placement name accepts the hyphenated spelling.
+        let v = json::parse(
+            r#"{"name": "x", "n_devices": 2, "stages": [
+                {"name": "a", "model": "mimo", "kind": "ar", "devices": [0]}
+            ], "cluster": {"nodes": [{"id": "n0"}, {"id": "n1", "gpus": 3}],
+                           "placement": "round-robin"}}"#,
+        )
+        .unwrap();
+        let q = from_value(&v).unwrap();
+        let c = q.cluster.unwrap();
+        assert_eq!(c.nodes[0].gpus, 1);
+        assert_eq!(c.nodes[0].device_bytes, crate::device::DEFAULT_DEVICE_BYTES);
+        assert_eq!(c.nodes[1].gpus, 3);
+        assert_eq!(c.placement, PlacementPolicy::RoundRobin);
+        assert_eq!(c.link_gbps, ClusterConfig::default().link_gbps);
+        // No block at all: None (single-process deployment).
+        assert!(presets::qwen3_omni().cluster.is_none());
+        // A topology without nodes is rejected at load time.
+        let bad = json::parse(
+            r#"{"name": "x", "n_devices": 1, "stages": [
+                {"name": "a", "model": "mimo", "kind": "ar", "devices": [0]}
+            ], "cluster": {"nodes": []}}"#,
+        )
+        .unwrap();
+        assert!(from_value(&bad).is_err());
+        // A non-object value is a config mistake, not "all defaults".
+        let typo = json::parse(
+            r#"{"name": "x", "n_devices": 1, "stages": [
+                {"name": "a", "model": "mimo", "kind": "ar", "devices": [0]}
+            ], "cluster": true}"#,
         )
         .unwrap();
         assert!(from_value(&typo).is_err());

@@ -565,6 +565,153 @@ impl CacheConfig {
     }
 }
 
+/// Liveness knobs for the payload transports (ISSUE 8).  The TCP store's
+/// blocking GET path emits a heartbeat byte every `heartbeat_s` while a
+/// consumer waits; a consumer that hears nothing — no heartbeat, no data
+/// — for `read_timeout_s` declares the peer dead and surfaces a
+/// structured error naming the edge instead of hanging forever.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TransportConfig {
+    /// Seconds between server-side heartbeat bytes on a blocked GET.
+    pub heartbeat_s: f64,
+    /// Seconds of total silence after which the receiving side declares
+    /// the peer dead.  Must exceed `heartbeat_s`, or a perfectly healthy
+    /// peer would be declared dead between two heartbeats.
+    pub read_timeout_s: f64,
+}
+
+impl Default for TransportConfig {
+    fn default() -> Self {
+        Self { heartbeat_s: 0.25, read_timeout_s: 5.0 }
+    }
+}
+
+impl TransportConfig {
+    pub fn validate(&self) -> Result<()> {
+        if !(self.heartbeat_s.is_finite() && self.heartbeat_s > 0.0) {
+            bail!("transport heartbeat_s must be > 0, got {}", self.heartbeat_s);
+        }
+        if !(self.read_timeout_s.is_finite() && self.read_timeout_s > self.heartbeat_s) {
+            bail!(
+                "transport read_timeout_s ({}) must exceed heartbeat_s ({})",
+                self.read_timeout_s,
+                self.heartbeat_s
+            );
+        }
+        Ok(())
+    }
+}
+
+/// One node of a multi-node deployment (ISSUE 8): an `omni-serve agent`
+/// process contributing `gpus` device slots of `device_bytes` each.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NodeSpec {
+    /// Node identity (matches the agent's `--node-id`).
+    pub id: String,
+    /// Device slots this node contributes to the cluster pool.
+    pub gpus: usize,
+    /// Per-device memory budget in bytes.
+    pub device_bytes: usize,
+}
+
+/// How the cluster allocator assigns stage replicas to nodes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementPolicy {
+    /// Co-locate the endpoints of byte-heavy edges (prefill→decode KV
+    /// handoffs) on one node and let light edges (talker→vocoder codes)
+    /// stream cross-node.  The default.
+    TransferAware,
+    /// Scatter replicas across nodes in declaration order, ignoring edge
+    /// transfer volumes — the naive baseline the placement bench beats.
+    RoundRobin,
+}
+
+impl PlacementPolicy {
+    pub fn name(self) -> &'static str {
+        match self {
+            PlacementPolicy::TransferAware => "transfer_aware",
+            PlacementPolicy::RoundRobin => "round_robin",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<Self> {
+        Ok(match s {
+            "transfer_aware" | "transfer-aware" => PlacementPolicy::TransferAware,
+            "round_robin" | "round-robin" => PlacementPolicy::RoundRobin,
+            other => bail!("unknown placement policy `{other}`"),
+        })
+    }
+}
+
+/// Multi-node deployment topology (ISSUE 8): the nodes contributing
+/// device slots, the placement policy assigning stage replicas to them,
+/// and the cross-node link model the placement cost (and the link-aware
+/// simulation) prices transfers with.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    pub nodes: Vec<NodeSpec>,
+    pub placement: PlacementPolicy,
+    /// Cross-node link bandwidth in Gbit/s.
+    pub link_gbps: f64,
+    /// Cross-node link latency in milliseconds.
+    pub link_latency_ms: f64,
+}
+
+impl Default for ClusterConfig {
+    /// Field defaults for partial config blocks (a commodity 10 Gbit/s /
+    /// 2 ms interconnect).  The empty node list does NOT validate — a
+    /// topology must always spell out its nodes.
+    fn default() -> Self {
+        Self {
+            nodes: Vec::new(),
+            placement: PlacementPolicy::TransferAware,
+            link_gbps: 10.0,
+            link_latency_ms: 2.0,
+        }
+    }
+}
+
+impl ClusterConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.nodes.is_empty() {
+            bail!("cluster has no nodes");
+        }
+        let mut seen = std::collections::HashSet::new();
+        for n in &self.nodes {
+            if n.id.is_empty() {
+                bail!("cluster node needs a non-empty id");
+            }
+            if !seen.insert(&n.id) {
+                bail!("duplicate cluster node id `{}`", n.id);
+            }
+            if n.gpus == 0 {
+                bail!("cluster node `{}` contributes no device slots", n.id);
+            }
+            if n.device_bytes == 0 {
+                bail!("cluster node `{}` device_bytes must be > 0", n.id);
+            }
+        }
+        if !(self.link_gbps.is_finite() && self.link_gbps > 0.0) {
+            bail!("cluster link_gbps must be > 0, got {}", self.link_gbps);
+        }
+        if !(self.link_latency_ms.is_finite() && self.link_latency_ms >= 0.0) {
+            bail!("cluster link_latency_ms must be >= 0, got {}", self.link_latency_ms);
+        }
+        Ok(())
+    }
+
+    /// Total device slots across nodes.
+    pub fn total_gpus(&self) -> usize {
+        self.nodes.iter().map(|n| n.gpus).sum()
+    }
+
+    /// Cross-node link as (bytes/s, latency seconds) — what the
+    /// placement cost and the link-aware sim actually consume.
+    pub fn link(&self) -> (f64, f64) {
+        (self.link_gbps * 1e9 / 8.0, self.link_latency_ms / 1e3)
+    }
+}
+
 /// An edge of the stage graph: a named transfer function plus transport.
 #[derive(Debug, Clone)]
 pub struct EdgeConfig {
@@ -597,6 +744,12 @@ pub struct PipelineConfig {
     /// Cross-request prefix / encoder caching; `None` = defaults (both
     /// caches on, LRU eviction).
     pub cache: Option<CacheConfig>,
+    /// Transport liveness knobs for shm/tcp edges (heartbeats, peer-dead
+    /// timeouts).  The defaults are right for single-process runs.
+    pub transport: TransportConfig,
+    /// Multi-node deployment topology; `None` = single-process (every
+    /// stage thread in this process, the pre-cluster behaviour).
+    pub cluster: Option<ClusterConfig>,
 }
 
 impl PipelineConfig {
@@ -648,6 +801,10 @@ impl PipelineConfig {
             a.validate()?;
         }
         if let Some(c) = &self.cache {
+            c.validate()?;
+        }
+        self.transport.validate()?;
+        if let Some(c) = &self.cluster {
             c.validate()?;
         }
         for e in &self.edges {
@@ -712,6 +869,8 @@ mod tests {
             autoscaler: None,
             admission: None,
             cache: None,
+            transport: TransportConfig::default(),
+            cluster: None,
         }
     }
 
@@ -882,6 +1041,81 @@ mod tests {
         };
         assert_eq!(a.tenant_weight("acme"), 4.0);
         assert_eq!(a.tenant_weight("unlisted"), 1.0);
+    }
+
+    #[test]
+    fn transport_config_validates() {
+        let mut p = two_stage();
+        p.transport = TransportConfig::default();
+        p.validate().unwrap();
+        p.transport = TransportConfig { heartbeat_s: 0.0, read_timeout_s: 1.0 };
+        assert!(p.validate().is_err());
+        // A timeout at or under the heartbeat would declare healthy peers
+        // dead between beats.
+        p.transport = TransportConfig { heartbeat_s: 1.0, read_timeout_s: 1.0 };
+        assert!(p.validate().is_err());
+        p.transport = TransportConfig { heartbeat_s: 0.05, read_timeout_s: f64::NAN };
+        assert!(p.validate().is_err());
+    }
+
+    fn two_nodes() -> ClusterConfig {
+        ClusterConfig {
+            nodes: vec![
+                NodeSpec { id: "n0".into(), gpus: 2, device_bytes: 1 << 20 },
+                NodeSpec { id: "n1".into(), gpus: 2, device_bytes: 1 << 20 },
+            ],
+            placement: PlacementPolicy::TransferAware,
+            link_gbps: 10.0,
+            link_latency_ms: 2.0,
+        }
+    }
+
+    #[test]
+    fn cluster_config_validates() {
+        let mut p = two_stage();
+        p.cluster = Some(two_nodes());
+        p.validate().unwrap();
+        let mut c = two_nodes();
+        c.nodes.clear();
+        p.cluster = Some(c);
+        assert!(p.validate().is_err());
+        let mut c = two_nodes();
+        c.nodes[1].id = "n0".into();
+        p.cluster = Some(c);
+        assert!(p.validate().is_err());
+        let mut c = two_nodes();
+        c.nodes[0].gpus = 0;
+        p.cluster = Some(c);
+        assert!(p.validate().is_err());
+        let mut c = two_nodes();
+        c.link_gbps = 0.0;
+        p.cluster = Some(c);
+        assert!(p.validate().is_err());
+        let mut c = two_nodes();
+        c.link_latency_ms = -1.0;
+        p.cluster = Some(c);
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn cluster_link_and_totals() {
+        let c = two_nodes();
+        assert_eq!(c.total_gpus(), 4);
+        let (bw, lat) = c.link();
+        assert_eq!(bw, 1.25e9, "10 Gbit/s is 1.25 GB/s");
+        assert_eq!(lat, 0.002);
+    }
+
+    #[test]
+    fn placement_policy_roundtrip() {
+        for p in [PlacementPolicy::TransferAware, PlacementPolicy::RoundRobin] {
+            assert_eq!(PlacementPolicy::from_name(p.name()).unwrap(), p);
+        }
+        assert_eq!(
+            PlacementPolicy::from_name("transfer-aware").unwrap(),
+            PlacementPolicy::TransferAware
+        );
+        assert!(PlacementPolicy::from_name("nope").is_err());
     }
 
     #[test]

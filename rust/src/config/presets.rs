@@ -11,8 +11,8 @@
 //! `max_batch` to the compiled bucket limit (8).
 
 use super::{
-    ConnectorKind, DiffusionParams, EdgeConfig, PipelineConfig, RoutingKind, SchedParams,
-    StageConfig, StageKind, StageRole,
+    ClusterConfig, ConnectorKind, DiffusionParams, EdgeConfig, NodeSpec, PipelineConfig,
+    PlacementPolicy, RoutingKind, SchedParams, StageConfig, StageKind, StageRole, TransportConfig,
 };
 
 fn edge(from: &str, to: &str, transfer: &str) -> EdgeConfig {
@@ -55,6 +55,8 @@ pub fn qwen25_omni() -> PipelineConfig {
         autoscaler: None,
         admission: None,
         cache: None,
+        transport: TransportConfig::default(),
+        cluster: None,
     }
 }
 
@@ -85,6 +87,8 @@ pub fn qwen3_omni() -> PipelineConfig {
         autoscaler: None,
         admission: None,
         cache: None,
+        transport: TransportConfig::default(),
+        cluster: None,
     }
 }
 
@@ -148,6 +152,32 @@ pub fn qwen3_omni_epd() -> PipelineConfig {
     p
 }
 
+/// Qwen3-Omni E/P/D spread over a 3-node cluster (paper §3.4 at
+/// deployment scale): every stage replicated 2x, placed by the
+/// transfer-cost-aware engine so the heavy prefill→decode KV edge stays
+/// node-local while the light decode→talker / talker→vocoder streams may
+/// cross the interconnect.  The link numbers model a commodity 10 Gbit/s
+/// datacenter network.
+pub fn qwen3_omni_cluster() -> PipelineConfig {
+    let mut p = qwen3_omni_epd();
+    p.name = "qwen3-omni-sim-cluster".into();
+    for s in &mut p.stages {
+        s.replicas = 2;
+    }
+    p.n_devices = 6;
+    p.cluster = Some(ClusterConfig {
+        nodes: vec![
+            NodeSpec { id: "n0".into(), gpus: 2, device_bytes: p.device_bytes },
+            NodeSpec { id: "n1".into(), gpus: 2, device_bytes: p.device_bytes },
+            NodeSpec { id: "n2".into(), gpus: 2, device_bytes: p.device_bytes },
+        ],
+        placement: PlacementPolicy::TransferAware,
+        link_gbps: 10.0,
+        link_latency_ms: 2.0,
+    });
+    p
+}
+
 /// BAGEL sim: understanding expert (AR) -> generation expert (DiT).
 /// `i2i` switches the generation expert to the longer image-conditioned
 /// variant (ref-image tokens concatenated into the latent sequence).
@@ -174,6 +204,8 @@ pub fn bagel(i2i: bool) -> PipelineConfig {
         autoscaler: None,
         admission: None,
         cache: None,
+        transport: TransportConfig::default(),
+        cluster: None,
     }
 }
 
@@ -197,6 +229,8 @@ pub fn mimo_audio(multi_step: usize) -> PipelineConfig {
         autoscaler: None,
         admission: None,
         cache: None,
+        transport: TransportConfig::default(),
+        cluster: None,
     }
 }
 
@@ -219,6 +253,8 @@ pub fn dit_single(model: &str, steps: usize, stepcache: f32) -> PipelineConfig {
         autoscaler: None,
         admission: None,
         cache: None,
+        transport: TransportConfig::default(),
+        cluster: None,
     }
 }
 
@@ -229,6 +265,7 @@ pub fn all() -> Vec<PipelineConfig> {
         qwen3_omni(),
         qwen3_omni_replicated(),
         qwen3_omni_epd(),
+        qwen3_omni_cluster(),
         bagel(false),
         bagel(true),
         mimo_audio(1),
@@ -246,6 +283,7 @@ pub fn by_name(name: &str) -> Option<PipelineConfig> {
         "qwen3-omni" => Some(qwen3_omni()),
         "qwen3-omni-rep2" => Some(qwen3_omni_replicated()),
         "qwen3-omni-epd" => Some(qwen3_omni_epd()),
+        "qwen3-omni-cluster" => Some(qwen3_omni_cluster()),
         "bagel-t2i" => Some(bagel(false)),
         "bagel-i2i" => Some(bagel(true)),
         "mimo-audio" => Some(mimo_audio(1)),
@@ -298,6 +336,17 @@ mod tests {
             .any(|e| e.from == "prefill" && e.to == "decode" && e.transfer == "kv2decode"));
         // Decode admission is bounded (handoff backpressure to prefill).
         assert!(p.stage("decode").unwrap().sched.queue_depth > 0);
+    }
+
+    #[test]
+    fn cluster_preset_declares_topology() {
+        let p = qwen3_omni_cluster();
+        p.validate().unwrap();
+        let c = p.cluster.as_ref().unwrap();
+        assert_eq!(c.nodes.len(), 3);
+        assert_eq!(c.total_gpus(), p.n_devices);
+        assert_eq!(c.placement, PlacementPolicy::TransferAware);
+        assert!(p.stages.iter().all(|s| s.replicas == 2));
     }
 
     #[test]

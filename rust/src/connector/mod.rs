@@ -19,12 +19,63 @@ pub mod shm;
 pub mod tcp;
 pub mod wire;
 
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::config::ConnectorKind;
+use crate::config::{ConnectorKind, TransportConfig};
 use crate::engine::StageItem;
+use crate::util::stats::Samples;
+
+/// Shared per-edge transfer counters (ISSUE 8): bytes and frames moved
+/// through the payload plane, plus send→resolve latency samples.  One
+/// instance is shared by every connector pair fanning out a logical
+/// edge, so the numbers describe the edge, not a single replica link.
+/// Without these, placement decisions fly blind.
+#[derive(Default)]
+pub struct EdgeTransferStats {
+    bytes: AtomicU64,
+    frames: AtomicU64,
+    lat: Mutex<Samples>,
+}
+
+/// Point-in-time copy of an edge's transfer counters, for
+/// `StageSummary`/`RunReport` rollups and the `stats` op.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct EdgeTransferSnapshot {
+    /// Edge label ("thinker->talker"), filled in by the roll-up layer.
+    pub label: String,
+    pub bytes: u64,
+    pub frames: u64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+}
+
+impl EdgeTransferStats {
+    pub(crate) fn record_sent(&self, bytes: u64) {
+        self.bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.frames.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn record_latency(&self, secs: f64) {
+        self.lat.lock().unwrap().push(secs * 1e3);
+    }
+
+    /// Snapshot with an empty label (the caller knows which edge it is).
+    pub fn snapshot(&self) -> EdgeTransferSnapshot {
+        // `percentile` returns 0.0 on an empty sample set.
+        let mut lat = self.lat.lock().unwrap();
+        EdgeTransferSnapshot {
+            label: String::new(),
+            bytes: self.bytes.load(Ordering::Relaxed),
+            frames: self.frames.load(Ordering::Relaxed),
+            p50_ms: lat.percentile(50.0),
+            p95_ms: lat.percentile(95.0),
+        }
+    }
+}
 
 /// Name of a written shm segment.  Unlinks on drop, so the segment can
 /// never leak no matter where its control message dies: resolved by the
@@ -61,10 +112,16 @@ impl Drop for TcpValue {
 
 /// Control-plane message: either the payload itself (inline) or a
 /// reference to where the payload was put.
-enum Ctrl {
+enum CtrlBody {
     Inline(Box<StageItem>),
     Shm { seg: ShmSegment, len: usize },
     Tcp { val: TcpValue },
+}
+
+/// Control message plus its send timestamp (per-edge transfer latency).
+struct Ctrl {
+    sent_at: Instant,
+    body: CtrlBody,
 }
 
 /// Sending half (owned by the producer stage thread).
@@ -78,12 +135,15 @@ pub struct ConnectorTx {
     label: String,
     /// Bytes moved through the payload plane (metrics / Table 1).
     pub bytes_sent: u64,
+    /// Shared per-edge counters; `None` when nobody is watching.
+    stats: Option<Arc<EdgeTransferStats>>,
 }
 
 /// Receiving half (owned by the consumer stage thread).
 pub struct ConnectorRx {
     ctrl: mpsc::Receiver<Ctrl>,
     tcp: Option<tcp::StoreClient>,
+    stats: Option<Arc<EdgeTransferStats>>,
 }
 
 /// Outcome of a non-blocking receive.  `Closed` (producer hung up and the
@@ -99,14 +159,26 @@ pub enum TryRecv {
 /// Create a connected pair.  For `Tcp`, `store_addr` must point at a
 /// running [`tcp::MooncakeStore`].
 pub fn pair(kind: ConnectorKind, label: &str, store_addr: Option<&str>) -> Result<(ConnectorTx, ConnectorRx)> {
+    pair_with(kind, label, store_addr, &TransportConfig::default(), None)
+}
+
+/// [`pair`] with explicit transport liveness knobs and optional shared
+/// per-edge transfer counters (ISSUE 8).
+pub fn pair_with(
+    kind: ConnectorKind,
+    label: &str,
+    store_addr: Option<&str>,
+    transport: &TransportConfig,
+    stats: Option<Arc<EdgeTransferStats>>,
+) -> Result<(ConnectorTx, ConnectorRx)> {
     let (tx, rx) = mpsc::channel();
     let (tcp_tx, tcp_rx, addr) = match kind {
         ConnectorKind::Tcp => {
             let addr = store_addr
                 .ok_or_else(|| anyhow::anyhow!("tcp connector needs a store address"))?;
             (
-                Some(tcp::StoreClient::connect(addr)?),
-                Some(tcp::StoreClient::connect(addr)?),
+                Some(tcp::StoreClient::connect_with(addr, transport, label)?),
+                Some(tcp::StoreClient::connect_with(addr, transport, label)?),
                 Some(addr.to_string()),
             )
         }
@@ -121,49 +193,53 @@ pub fn pair(kind: ConnectorKind, label: &str, store_addr: Option<&str>) -> Resul
             seq: 0,
             label: label.to_string(),
             bytes_sent: 0,
+            stats: stats.clone(),
         },
-        ConnectorRx { ctrl: rx, tcp: tcp_rx },
+        ConnectorRx { ctrl: rx, tcp: tcp_rx, stats },
     ))
 }
 
 impl ConnectorTx {
     pub fn send(&mut self, item: StageItem) -> Result<()> {
-        match self.kind {
+        let frame_bytes;
+        let body = match self.kind {
             ConnectorKind::Inline => {
-                self.bytes_sent += item.payload_bytes() as u64;
-                self.ctrl
-                    .send(Ctrl::Inline(Box::new(item)))
-                    .map_err(|_| anyhow::anyhow!("connector closed"))?;
+                frame_bytes = item.payload_bytes() as u64;
+                CtrlBody::Inline(Box::new(item))
             }
             ConnectorKind::Shm => {
                 let bytes = wire::encode(&item);
-                self.bytes_sent += bytes.len() as u64;
+                frame_bytes = bytes.len() as u64;
                 let name = format!("/omni_{}_{}_{}", std::process::id(), self.label, self.seq);
                 self.seq += 1;
                 shm::write_segment(&name, &bytes)?;
                 // On failure the `SendError` carries the message back and
                 // drops it here, which unlinks the orphaned segment.
-                self.ctrl
-                    .send(Ctrl::Shm { seg: ShmSegment(name), len: bytes.len() })
-                    .map_err(|_| anyhow::anyhow!("connector closed"))?;
+                CtrlBody::Shm { seg: ShmSegment(name), len: bytes.len() }
             }
             ConnectorKind::Tcp => {
                 let bytes = wire::encode(&item);
-                self.bytes_sent += bytes.len() as u64;
+                frame_bytes = bytes.len() as u64;
                 let key = format!("{}:{}", self.label, self.seq);
                 self.seq += 1;
                 self.tcp.as_mut().unwrap().put(&key, &bytes)?;
-                let val = TcpValue {
-                    key,
-                    store_addr: self.store_addr.clone().expect("set for Tcp in pair()"),
-                    resolved: false,
-                };
                 // On failure the `SendError` carries the message back and
                 // drops it here; the guard DELs the parked value.
-                self.ctrl
-                    .send(Ctrl::Tcp { val })
-                    .map_err(|_| anyhow::anyhow!("connector closed"))?;
+                CtrlBody::Tcp {
+                    val: TcpValue {
+                        key,
+                        store_addr: self.store_addr.clone().expect("set for Tcp in pair()"),
+                        resolved: false,
+                    },
+                }
             }
+        };
+        self.bytes_sent += frame_bytes;
+        self.ctrl
+            .send(Ctrl { sent_at: Instant::now(), body })
+            .map_err(|_| anyhow::anyhow!("connector closed"))?;
+        if let Some(stats) = &self.stats {
+            stats.record_sent(frame_bytes);
         }
         Ok(())
     }
@@ -190,23 +266,27 @@ impl ConnectorRx {
     }
 
     fn resolve(&mut self, ctrl: Ctrl) -> Result<StageItem> {
-        match ctrl {
-            Ctrl::Inline(item) => Ok(*item),
-            Ctrl::Shm { seg, len } => {
+        let item = match ctrl.body {
+            CtrlBody::Inline(item) => *item,
+            CtrlBody::Shm { seg, len } => {
                 // `seg` drops (and unlinks) at the end of this arm —
                 // including on a read or decode error.
                 let bytes = shm::read_segment(&seg.0, len)?;
-                wire::decode(&bytes)
+                wire::decode(&bytes)?
             }
-            Ctrl::Tcp { mut val } => {
+            CtrlBody::Tcp { mut val } => {
                 let bytes = self.tcp.as_mut().unwrap().get(&val.key)?;
                 // The blocking get removed the value; disarm the guard so
                 // its drop skips the redundant DEL round trip.  (On a get
                 // error the guard stays armed and DELs best-effort.)
                 val.resolved = true;
-                wire::decode(&bytes)
+                wire::decode(&bytes)?
             }
+        };
+        if let Some(stats) = &self.stats {
+            stats.record_latency(ctrl.sent_at.elapsed().as_secs_f64());
         }
+        Ok(item)
     }
 }
 
@@ -223,7 +303,7 @@ impl Drop for ConnectorRx {
     /// way; the drain only makes reclamation prompt.
     fn drop(&mut self) {
         while let Ok(ctrl) = self.ctrl.try_recv() {
-            if let Ctrl::Tcp { mut val } = ctrl {
+            if let CtrlBody::Tcp { mut val } = ctrl.body {
                 if let Some(tcp) = self.tcp.as_mut() {
                     if tcp.del(&val.key).is_ok() {
                         val.resolved = true; // reclaimed; disarm the guard
@@ -339,6 +419,30 @@ mod tests {
             let got = rx.recv().unwrap().unwrap();
             assert_eq!(got.req_id, i);
         }
+    }
+
+    #[test]
+    fn edge_stats_count_bytes_frames_and_latency() {
+        let stats = Arc::new(EdgeTransferStats::default());
+        let (mut tx, mut rx) = pair_with(
+            ConnectorKind::Inline,
+            "stat",
+            None,
+            &TransportConfig::default(),
+            Some(stats.clone()),
+        )
+        .unwrap();
+        for i in 0..4 {
+            tx.send(item(i)).unwrap();
+        }
+        for _ in 0..4 {
+            rx.recv().unwrap().unwrap();
+        }
+        let snap = stats.snapshot();
+        assert_eq!(snap.frames, 4);
+        assert_eq!(snap.bytes, tx.bytes_sent);
+        assert!(snap.bytes > 0);
+        assert!(snap.p50_ms >= 0.0 && snap.p95_ms >= snap.p50_ms);
     }
 
     #[test]

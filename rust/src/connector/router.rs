@@ -66,10 +66,10 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
-use crate::config::{ConnectorKind, RoutingKind};
+use crate::config::{ConnectorKind, RoutingKind, TransportConfig};
 use crate::engine::StageItem;
 
-use super::{pair, ConnectorRx, ConnectorTx, TryRecv};
+use super::{pair_with, ConnectorRx, ConnectorTx, EdgeTransferSnapshot, EdgeTransferStats, TryRecv};
 
 /// Shared load signal for one consumer replica of one edge.
 ///
@@ -418,6 +418,10 @@ pub struct EdgeCtl {
     routing: RoutingKind,
     label: String,
     store_addr: Option<String>,
+    /// Liveness knobs passed to every channel the edge wires (ISSUE 8).
+    transport: TransportConfig,
+    /// Per-edge transfer counters, shared by every channel of the edge.
+    stats: Arc<EdgeTransferStats>,
     sticky: Arc<StickyMap>,
     hints: Arc<HintMap>,
     state: Mutex<EdgeState>,
@@ -441,11 +445,28 @@ impl EdgeCtl {
             routing,
             label: label.to_string(),
             store_addr: store_addr.map(|s| s.to_string()),
+            transport: TransportConfig::default(),
+            stats: Arc::new(EdgeTransferStats::default()),
             sticky: Arc::new(Mutex::new(HashMap::new())),
             hints: Arc::new(Mutex::new(HashMap::new())),
             state: Mutex::new(EdgeState::default()),
             next_uid: AtomicU64::new(0),
         }
+    }
+
+    /// Set the transport liveness knobs for every channel wired AFTER
+    /// this call (builder-style, before the first endpoint is added).
+    pub fn with_transport(mut self, transport: &TransportConfig) -> Self {
+        self.transport = *transport;
+        self
+    }
+
+    /// Point-in-time per-edge transfer counters, labelled with the edge
+    /// name (`StageSummary`/`RunReport` rollups and the `stats` op).
+    pub fn transfer_snapshot(&self) -> EdgeTransferSnapshot {
+        let mut s = self.stats.snapshot();
+        s.label = self.label.clone();
+        s
     }
 
     fn route_state(&self) -> RouteState {
@@ -468,10 +489,12 @@ impl EdgeCtl {
         let draining = Arc::new(AtomicBool::new(false));
         let sources: Arc<Mutex<Vec<Source>>> = Arc::new(Mutex::new(Vec::new()));
         for p in &st.producers {
-            let (tx, rx) = pair(
+            let (tx, rx) = pair_with(
                 self.kind,
                 &format!("{}_p{}c{}", self.label, p.uid, uid),
                 self.store_addr.as_deref(),
+                &self.transport,
+                Some(self.stats.clone()),
             )?;
             p.shared.lock().unwrap().eps.push(Endpoint {
                 uid,
@@ -498,10 +521,12 @@ impl EdgeCtl {
         let uid = self.next_uid.fetch_add(1, Ordering::Relaxed);
         let shared = Arc::new(Mutex::new(TxShared { eps: Vec::new(), retired_bytes: 0 }));
         for c in &st.consumers {
-            let (tx, rx) = pair(
+            let (tx, rx) = pair_with(
                 self.kind,
                 &format!("{}_p{}c{}", self.label, uid, c.uid),
                 self.store_addr.as_deref(),
+                &self.transport,
+                Some(self.stats.clone()),
             )?;
             shared.lock().unwrap().eps.push(Endpoint {
                 uid: c.uid,
@@ -912,6 +937,28 @@ mod tests {
         // the router only guarantees it avoids the draining one).
         tx.send(item(2)).unwrap();
         assert_eq!(drain(&mut rx0), Vec::<u64>::new());
+    }
+
+    #[test]
+    fn transfer_snapshot_aggregates_the_whole_edge() {
+        // Stats are per logical edge: two consumers, one producer — every
+        // frame lands in one labelled snapshot regardless of the replica
+        // it routed to.
+        let ctl = EdgeCtl::new(ConnectorKind::Inline, RoutingKind::Affinity, "dynstats", None)
+            .with_transport(&TransportConfig::default());
+        let (mut rx0, _u0) = ctl.add_consumer().unwrap();
+        let (mut rx1, _u1) = ctl.add_consumer().unwrap();
+        let (mut tx, _p) = ctl.add_producer().unwrap();
+        for req in [2u64, 3, 2] {
+            tx.send(item(req)).unwrap();
+        }
+        drain(&mut rx0);
+        drain(&mut rx1);
+        let snap = ctl.transfer_snapshot();
+        assert_eq!(snap.label, "dynstats");
+        assert_eq!(snap.frames, 3);
+        assert_eq!(snap.bytes, 3 * 4, "3 i32 payloads over the inline plane");
+        assert!(snap.p95_ms >= snap.p50_ms);
     }
 
     #[test]

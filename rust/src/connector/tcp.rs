@@ -5,10 +5,20 @@
 //!
 //! Protocol (little-endian):
 //!   PUT: `b'P' | key_len u32 | key | val_len u64 | val`      -> `b'K'`
-//!   GET: `b'G' | key_len u32 | key`  -> `b'V' | val_len u64 | val`
-//!        (blocks server-side until the key exists, then removes it)
+//!   GET: `b'G' | key_len u32 | key`  -> `b'H'* | b'V' | val_len u64 | val`
+//!        (blocks server-side until the key exists, then removes it; a
+//!        heartbeat byte `b'H'` is emitted every `heartbeat_s` while the
+//!        wait lasts, so a live-but-idle peer is distinguishable from a
+//!        dead one)
 //!   DEL: `b'D' | key_len u32 | key`  -> `b'K'`
 //!        (removes the key if present; never blocks — leak reclamation)
+//!
+//! Liveness (ISSUE 8): clients set a socket read timeout of
+//! [`TransportConfig::read_timeout_s`].  A healthy blocked GET hears a
+//! heartbeat well inside that window; total silence (peer process gone
+//! without a FIN — the case that used to hang the receiver forever)
+//! surfaces as a structured error naming the edge, and an explicit
+//! hangup (FIN/RST) errors immediately.
 //!
 //! One thread per connection; the store is an in-memory map + condvar.
 
@@ -16,13 +26,17 @@ use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
-#[derive(Default)]
+use crate::config::TransportConfig;
+
 struct Shared {
     map: Mutex<HashMap<String, Vec<u8>>>,
     cv: Condvar,
+    /// Interval between `b'H'` bytes on a blocked GET.
+    heartbeat: Duration,
 }
 
 /// The store server.  Dropping the handle leaves the daemon thread
@@ -35,9 +49,19 @@ pub struct MooncakeStore {
 
 impl MooncakeStore {
     pub fn spawn(bind: &str) -> Result<Self> {
+        Self::spawn_with(bind, &TransportConfig::default())
+    }
+
+    /// Spawn with explicit liveness knobs (the serving layer passes the
+    /// pipeline's [`TransportConfig`] here).
+    pub fn spawn_with(bind: &str, transport: &TransportConfig) -> Result<Self> {
         let listener = TcpListener::bind(bind).context("binding mooncake store")?;
         let addr = listener.local_addr()?.to_string();
-        let shared = Arc::new(Shared::default());
+        let shared = Arc::new(Shared {
+            map: Mutex::new(HashMap::new()),
+            cv: Condvar::new(),
+            heartbeat: Duration::from_secs_f64(transport.heartbeat_s),
+        });
         let s2 = shared.clone();
         std::thread::Builder::new()
             .name("mooncake-store".into())
@@ -91,13 +115,26 @@ fn serve_conn(mut stream: TcpStream, shared: Arc<Shared>) -> Result<()> {
             }
             b'G' => {
                 let key = read_key(&mut stream)?;
-                let val = {
-                    let mut map = shared.map.lock().unwrap();
-                    loop {
-                        if let Some(v) = map.remove(&key) {
-                            break v;
+                let val = 'got: loop {
+                    {
+                        let mut map = shared.map.lock().unwrap();
+                        loop {
+                            if let Some(v) = map.remove(&key) {
+                                break 'got v;
+                            }
+                            let (guard, timed_out) =
+                                shared.cv.wait_timeout(map, shared.heartbeat).unwrap();
+                            map = guard;
+                            if timed_out.timed_out() {
+                                break; // drop the lock before touching the socket
+                            }
                         }
-                        map = shared.cv.wait(map).unwrap();
+                    }
+                    // Still waiting: prove liveness to the blocked
+                    // client.  A failed write means the client hung up —
+                    // stop waiting on its behalf.
+                    if stream.write_all(b"H").is_err() {
+                        return Ok(());
                     }
                 };
                 stream.write_all(b"V")?;
@@ -129,13 +166,39 @@ fn read_key(stream: &mut TcpStream) -> Result<String> {
 /// Client handle (one TCP connection; not thread-safe — one per thread).
 pub struct StoreClient {
     stream: TcpStream,
+    /// Edge name for structured dead-peer errors ("thinker->talker").
+    label: String,
 }
 
 impl StoreClient {
     pub fn connect(addr: &str) -> Result<Self> {
-        let stream = TcpStream::connect(addr).context("connecting to mooncake store")?;
+        Self::connect_with(addr, &TransportConfig::default(), "store")
+    }
+
+    /// Connect with explicit liveness knobs and an edge label used in
+    /// dead-peer errors.  The socket read timeout is the peer-dead
+    /// horizon: a healthy blocked GET hears a heartbeat every
+    /// [`TransportConfig::heartbeat_s`], so only true silence trips it.
+    pub fn connect_with(addr: &str, transport: &TransportConfig, label: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("edge `{label}`: connecting to mooncake store {addr}"))?;
         stream.set_nodelay(true).ok();
-        Ok(Self { stream })
+        stream.set_read_timeout(Some(Duration::from_secs_f64(transport.read_timeout_s)))?;
+        Ok(Self { stream, label: label.to_string() })
+    }
+
+    /// Map an I/O failure while awaiting the peer into a structured
+    /// error naming the dead edge (ISSUE 8 liveness).
+    fn dead_peer(&self, key: &str, e: std::io::Error) -> anyhow::Error {
+        use std::io::ErrorKind;
+        if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) {
+            anyhow::anyhow!(
+                "edge `{}`: peer dead (no heartbeat within the read timeout) awaiting `{key}`",
+                self.label
+            )
+        } else {
+            anyhow::anyhow!("edge `{}`: peer hung up awaiting `{key}`: {e}", self.label)
+        }
     }
 
     pub fn put(&mut self, key: &str, val: &[u8]) -> Result<()> {
@@ -166,21 +229,27 @@ impl StoreClient {
         Ok(())
     }
 
-    /// Blocking get-and-remove.
+    /// Blocking get-and-remove.  Waits indefinitely for a HEALTHY peer
+    /// (heartbeats keep the socket warm); a silent or hung-up peer
+    /// surfaces a structured error naming the edge instead of hanging.
     pub fn get(&mut self, key: &str) -> Result<Vec<u8>> {
         self.stream.write_all(b"G")?;
         self.stream.write_all(&(key.len() as u32).to_le_bytes())?;
         self.stream.write_all(key.as_bytes())?;
-        let mut tag = [0u8; 1];
-        self.stream.read_exact(&mut tag)?;
-        if tag[0] != b'V' {
-            bail!("mooncake: bad GET tag");
+        loop {
+            let mut tag = [0u8; 1];
+            self.stream.read_exact(&mut tag).map_err(|e| self.dead_peer(key, e))?;
+            match tag[0] {
+                b'H' => continue, // heartbeat: peer alive, value not ready yet
+                b'V' => break,
+                other => bail!("mooncake: bad GET tag {other}"),
+            }
         }
         let mut len8 = [0u8; 8];
-        self.stream.read_exact(&mut len8)?;
+        self.stream.read_exact(&mut len8).map_err(|e| self.dead_peer(key, e))?;
         let vlen = u64::from_le_bytes(len8) as usize;
         let mut val = vec![0u8; vlen];
-        self.stream.read_exact(&mut val)?;
+        self.stream.read_exact(&mut val).map_err(|e| self.dead_peer(key, e))?;
         Ok(val)
     }
 }
@@ -225,6 +294,65 @@ mod tests {
         let mut c = StoreClient::connect(store.addr()).unwrap();
         c.put("later", b"worth-the-wait").unwrap();
         assert_eq!(getter.join().unwrap(), b"worth-the-wait");
+    }
+
+    #[test]
+    fn heartbeats_keep_a_slow_put_alive() {
+        // The put arrives well AFTER the client's read timeout; only the
+        // server heartbeats keep the blocked GET from tripping it.
+        let fast = TransportConfig { heartbeat_s: 0.02, read_timeout_s: 0.15 };
+        let store = MooncakeStore::spawn_with("127.0.0.1:0", &fast).unwrap();
+        let addr = store.addr().to_string();
+        let t = fast;
+        let getter = std::thread::spawn(move || {
+            let mut c = StoreClient::connect_with(&addr, &t, "a->b").unwrap();
+            c.get("slow").unwrap()
+        });
+        std::thread::sleep(Duration::from_millis(400));
+        let mut c = StoreClient::connect(store.addr()).unwrap();
+        c.put("slow", b"late-but-alive").unwrap();
+        assert_eq!(getter.join().unwrap(), b"late-but-alive");
+    }
+
+    #[test]
+    fn silent_peer_surfaces_structured_timeout_error() {
+        // A listener that accepts but never speaks: total silence, the
+        // way a wedged/vanished peer looks without a FIN.  The old code
+        // blocked forever here.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let hold = std::thread::spawn(move || {
+            let conn = listener.accept().map(|(s, _)| s);
+            std::thread::sleep(Duration::from_millis(800));
+            drop(conn);
+        });
+        let t = TransportConfig { heartbeat_s: 0.02, read_timeout_s: 0.15 };
+        let mut c = StoreClient::connect_with(&addr, &t, "talker->vocoder").unwrap();
+        let err = c.get("never").unwrap_err().to_string();
+        assert!(err.contains("talker->vocoder"), "error names the edge: {err}");
+        assert!(err.contains("peer dead"), "error names the cause: {err}");
+        hold.join().unwrap();
+    }
+
+    #[test]
+    fn hung_up_peer_errors_immediately() {
+        // An explicit FIN mid-wait errors right away (no need to burn
+        // the whole read timeout).
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let closer = std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            std::thread::sleep(Duration::from_millis(30));
+            drop(s);
+        });
+        let t = TransportConfig { heartbeat_s: 0.5, read_timeout_s: 30.0 };
+        let start = std::time::Instant::now();
+        let mut c = StoreClient::connect_with(&addr, &t, "prefill->decode").unwrap();
+        let err = c.get("gone").unwrap_err().to_string();
+        assert!(err.contains("prefill->decode"), "error names the edge: {err}");
+        assert!(err.contains("hung up"), "error names the cause: {err}");
+        assert!(start.elapsed() < Duration::from_secs(5), "no timeout burn on FIN");
+        closer.join().unwrap();
     }
 
     #[test]

@@ -28,7 +28,10 @@
 //! return a [`serving::ResponseStream`] of mid-flight
 //! [`serving::OutputDelta`]s — text tokens, audio chunks, image frames,
 //! stage markers — with end-to-end cancellation that drops queued work
-//! and frees in-flight KV at every stage.
+//! and frees in-flight KV at every stage.  Pipelines can also span
+//! machines: the [`cluster`] module adds node agents, an `OCTL` control
+//! plane, and a transfer-cost-aware placement engine that keeps heavy
+//! KV edges node-local while letting byte-light edges cross nodes.
 //!
 //! Model compute is AOT-lowered from JAX/Pallas (see `python/compile/`)
 //! into HLO-text artifacts executed through the PJRT CPU client
@@ -46,6 +49,7 @@ pub mod audio;
 pub mod baseline;
 pub mod bench_util;
 pub mod cli;
+pub mod cluster;
 pub mod config;
 pub mod connector;
 pub mod device;

@@ -32,7 +32,7 @@ USAGE:
                    [--deadline S]   (cancel each request end-to-end S seconds
                                      after submission; the summary reports
                                      cancelled counts + freed KV)
-  omni-serve bench [--trace bursty|librispeech|seedtts|prefill-heavy|overload-storm|shared-prefix]
+  omni-serve bench [--trace bursty|librispeech|seedtts|prefill-heavy|overload-storm|shared-prefix|cross-node]
                    [--n 48] [--budget 4] [--seeds 32]
                    (artifact-free: autoscaled vs static replica splits on the AR-stage
                     model; `prefill-heavy` runs the P/D-disaggregation comparison —
@@ -42,8 +42,17 @@ USAGE:
                     unless admission wins on goodput for every seed; `shared-prefix`
                     runs the prefix-cache comparison — cached vs cold on the
                     shared-prefix trace — and exits non-zero unless cached wins
-                    both TTFT and JCT for every seed — all three are CI smoke
-                    gates)
+                    both TTFT and JCT for every seed; `cross-node` runs the
+                    cluster-placement comparison — transfer-aware vs round-robin
+                    replica→node assignment at equal hardware — and exits non-zero
+                    unless transfer-aware wins mean JCT for every seed — all four
+                    are CI smoke gates)
+  omni-serve agent --node-id <id> --listen <host:port> [--gpus 2] [--device-bytes N]
+                   [--heartbeat 0.25] [--read-timeout 5.0]
+                   (multi-node mode: host this machine's share of a pipeline —
+                    bind, print the bound address, register with the controller
+                    that connects, host assigned stage replicas, heartbeat,
+                    drain on request; see docs/architecture.md §13)
   omni-serve graph [--pipeline <name>] [--list]
   omni-serve help
 
@@ -329,6 +338,49 @@ fn real_main() -> Result<()> {
                 println!("cached < cold on TTFT and JCT confirmed over {seeds} seeds");
                 return Ok(());
             }
+            if trace == "cross-node" {
+                // CI smoke contract: at equal hardware (3 nodes x 2
+                // GPUs, same replica counts) the transfer-aware cluster
+                // placement must beat round-robin on mean JCT for EVERY
+                // seed, or this command exits non-zero.
+                let seeds = args.flag_usize("seeds", 32)? as u64;
+                println!(
+                    "trace=cross-node-sim seeds={seeds} \
+                     (transfer-aware vs round-robin placement, 3 nodes x 2 gpus)"
+                );
+                let mut worst = f64::INFINITY;
+                let mut sum = 0.0;
+                for s in 1..=seeds {
+                    let c = omni_serve::scheduler::sim::cross_node_comparison(s);
+                    let m = c.jct_margin();
+                    anyhow::ensure!(
+                        m > 0.0,
+                        "transfer-aware placement lost to round-robin at seed {s}: \
+                         JCT {} vs {} ({} vs {} cross-node transfers)",
+                        fmt::dur(c.transfer_aware.mean_jct()),
+                        fmt::dur(c.round_robin.mean_jct()),
+                        c.transfer_aware.cross_transfers,
+                        c.round_robin.cross_transfers,
+                    );
+                    sum += m;
+                    worst = worst.min(m);
+                }
+                let c = omni_serve::scheduler::sim::cross_node_comparison(1);
+                println!(
+                    "  JCT margin mean {:+.1}% worst {:+.1}% | cross-node transfers {} vs {} \
+                     | wire time {} vs {} (seed 1)",
+                    100.0 * sum / seeds as f64,
+                    100.0 * worst,
+                    c.transfer_aware.cross_transfers,
+                    c.round_robin.cross_transfers,
+                    fmt::dur(c.transfer_aware.transfer_s),
+                    fmt::dur(c.round_robin.transfer_s),
+                );
+                println!(
+                    "transfer-aware < round-robin on mean JCT confirmed over {seeds} seeds"
+                );
+                return Ok(());
+            }
             if trace == "prefill-heavy" {
                 let n = args.flag_usize("n", 64)?;
                 let wl = datasets::prefill_heavy(seed, n, 56.0);
@@ -389,7 +441,8 @@ fn real_main() -> Result<()> {
                 other => {
                     bail!(
                         "unknown trace `{other}` \
-                         (bursty|librispeech|seedtts|prefill-heavy|overload-storm|shared-prefix)"
+                         (bursty|librispeech|seedtts|prefill-heavy|overload-storm|\
+                         shared-prefix|cross-node)"
                     )
                 }
             };
@@ -414,6 +467,47 @@ fn real_main() -> Result<()> {
                 auto.scale_downs,
                 auto.max_slots,
             );
+            Ok(())
+        }
+        "agent" => {
+            // Multi-node mode: host this machine's share of a pipeline.
+            // Binds --listen (port 0 picks a free port), prints the
+            // bound address for the operator/controller to read, serves
+            // one controller session, and exits after a clean drain.
+            args.unknown_check(&[
+                "node-id",
+                "listen",
+                "gpus",
+                "device-bytes",
+                "heartbeat",
+                "read-timeout",
+            ])?;
+            let mut opts = omni_serve::cluster::AgentOptions::new(
+                args.require("node-id")?,
+                args.require("listen")?,
+            );
+            opts.gpus = args.flag_usize("gpus", opts.gpus as usize)? as u32;
+            opts.device_bytes =
+                args.flag_usize("device-bytes", opts.device_bytes as usize)? as u64;
+            opts.transport.heartbeat_s =
+                args.flag_f64("heartbeat", opts.transport.heartbeat_s)?;
+            opts.transport.read_timeout_s =
+                args.flag_f64("read-timeout", opts.transport.read_timeout_s)?;
+            let report = omni_serve::cluster::run_agent(&opts)?;
+            println!(
+                "agent {} drained: {} replicas hosted, {} frames moved",
+                report.node_id, report.assignments, report.frames_moved,
+            );
+            for e in &report.edges {
+                println!(
+                    "  hop {:>14}: {} frames, {} | transfer p50 {:.2} ms p95 {:.2} ms",
+                    e.label,
+                    e.frames,
+                    fmt::bytes(e.bytes as usize),
+                    e.p50_ms,
+                    e.p95_ms,
+                );
+            }
             Ok(())
         }
         "graph" => {
@@ -492,6 +586,17 @@ fn print_report(r: &omni_serve::metrics::RunReport) {
             cache.encoder_hits,
             cache.encoder_hits + cache.encoder_misses,
             100.0 * cache.encoder_hit_rate(),
+        );
+    }
+    // Per-edge transfer counters, when any edge moved payload frames.
+    for e in r.edges.iter().filter(|e| e.frames > 0) {
+        println!(
+            "  edge  {:>14}: {} frames, {} | transfer p50 {:.2} ms p95 {:.2} ms",
+            e.label,
+            e.frames,
+            fmt::bytes(e.bytes as usize),
+            e.p50_ms,
+            e.p95_ms,
         );
     }
     let mut stages: Vec<&String> = r.per_stage.keys().collect();

@@ -9,6 +9,7 @@ use std::collections::HashMap;
 use std::sync::Mutex;
 
 use crate::audio;
+use crate::connector::EdgeTransferSnapshot;
 use crate::util::stats::Samples;
 
 /// Lifecycle events for one request flowing through the stage graph.
@@ -70,6 +71,12 @@ pub enum Event {
     /// keeps the latest snapshot per (stage, replica), so stages may
     /// emit periodically or once at shutdown.
     CacheStats { stage: &'static str, replica: usize, t: f64, counters: CacheCounters },
+    /// Per-edge transfer counters (ISSUE 8): bytes/frames moved and
+    /// send→resolve latency percentiles for one logical edge, labelled
+    /// inside the snapshot.  Counters are ABSOLUTE totals since edge
+    /// construction — the latest snapshot per label wins, so edges may
+    /// emit periodically or once at shutdown.
+    EdgeStats { t: f64, snapshot: EdgeTransferSnapshot },
 }
 
 /// Cross-request cache counters (see [`Event::CacheStats`]): block-level
@@ -200,6 +207,9 @@ pub struct Recorder {
     /// Latest absolute cache counters per (stage, replica) — see
     /// [`Event::CacheStats`].
     cache: Mutex<HashMap<(&'static str, usize), CacheCounters>>,
+    /// Latest absolute transfer counters per edge label — see
+    /// [`Event::EdgeStats`].
+    edges: Mutex<HashMap<String, EdgeTransferSnapshot>>,
 }
 
 impl Recorder {
@@ -236,6 +246,11 @@ impl Recorder {
             Event::CacheStats { stage, replica, counters, .. } => {
                 // Absolute totals: the latest snapshot wins.
                 self.cache.lock().unwrap().insert((*stage, *replica), *counters);
+                return;
+            }
+            Event::EdgeStats { snapshot, .. } => {
+                // Absolute totals: the latest snapshot wins.
+                self.edges.lock().unwrap().insert(snapshot.label.clone(), snapshot.clone());
                 return;
             }
             _ => {}
@@ -285,7 +300,8 @@ impl Recorder {
             Event::SchedSample { .. }
             | Event::SchedAdmitted { .. }
             | Event::Scale { .. }
-            | Event::CacheStats { .. } => {
+            | Event::CacheStats { .. }
+            | Event::EdgeStats { .. } => {
                 unreachable!()
             }
         }
@@ -393,6 +409,10 @@ impl Recorder {
         }
         drop(by_replica);
 
+        let mut edges: Vec<EdgeTransferSnapshot> =
+            self.edges.lock().unwrap().values().cloned().collect();
+        edges.sort_by(|a, b| a.label.cmp(&b.label));
+
         RunReport {
             wall_s,
             completed,
@@ -410,6 +430,7 @@ impl Recorder {
             sched_replicas,
             scale_events,
             cache,
+            edges,
         }
     }
 }
@@ -466,6 +487,10 @@ pub struct RunReport {
     /// stage's engine replicas (empty when no stage emitted
     /// [`Event::CacheStats`], e.g. caches disabled).
     pub cache: HashMap<String, CacheCounters>,
+    /// Per-edge transfer counters (bytes, frames, p50/p95 send→resolve
+    /// latency), sorted by edge label — empty when nothing emitted
+    /// [`Event::EdgeStats`].
+    pub edges: Vec<EdgeTransferSnapshot>,
 }
 
 impl RunReport {
@@ -586,6 +611,11 @@ impl RunReport {
             acc.absorb(c);
         }
         acc
+    }
+
+    /// Transfer counters for one edge by label, if it emitted any.
+    pub fn edge(&self, label: &str) -> Option<&EdgeTransferSnapshot> {
+        self.edges.iter().find(|e| e.label == label)
     }
 
     /// Replica-count timeline of `stage`: `(t, live_replicas)` starting

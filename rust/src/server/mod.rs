@@ -21,7 +21,7 @@
 //! -> {"op": "cancel", "req_id": N}   <- {"ok": true, "req_id": N, "cancelled": true}
 //!
 //! -> {"op": "ping"}     <- {"ok": true}
-//! -> {"op": "stats"}    <- {"live": true, "inflight": N, "stages": [...]}
+//! -> {"op": "stats"}    <- {"live": true, "inflight": N, "stages": [...], "edges": [...]}
 //! -> {"op": "shutdown"} <- drains + stops the shared session
 //! ```
 //!
@@ -272,6 +272,21 @@ impl Server {
                 .collect();
             let rep = s.live_report();
             let shed = s.admission_stats().map(|a| a.shed as usize).unwrap_or(0);
+            // Per-edge transfer counters: what each connector edge moved
+            // (bytes/frames) and its send→resolve latency percentiles.
+            let edges: Vec<Value> = s
+                .edge_stats()
+                .iter()
+                .map(|e| {
+                    jobj! {
+                        "edge" => e.label.clone(),
+                        "bytes" => e.bytes as usize,
+                        "frames" => e.frames as usize,
+                        "p50_ms" => e.p50_ms,
+                        "p95_ms" => e.p95_ms,
+                    }
+                })
+                .collect();
             return Ok(jobj! {
                 "live" => true,
                 "inflight" => s.inflight(),
@@ -285,6 +300,7 @@ impl Server {
                 "encoder_hits" => cache.encoder_hits as usize,
                 "encoder_hit_rate" => cache.encoder_hit_rate(),
                 "stages" => Value::Arr(stages),
+                "edges" => Value::Arr(edges),
             });
         }
         // No session yet: the resolved allocation plan's replica counts.
@@ -315,6 +331,7 @@ impl Server {
             "encoder_hits" => 0usize,
             "encoder_hit_rate" => 0.0,
             "stages" => Value::Arr(stages),
+            "edges" => Value::Arr(Vec::new()),
         })
     }
 

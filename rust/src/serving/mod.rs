@@ -516,12 +516,15 @@ impl ServingSession {
                 RoutingKind::Auto => RoutingKind::Affinity,
                 explicit => explicit,
             };
-            edges.push(Arc::new(EdgeCtl::new(
-                e.connector,
-                routing,
-                &format!("{}2{}", e.from, e.to),
-                store_addr.as_deref(),
-            )));
+            edges.push(Arc::new(
+                EdgeCtl::new(
+                    e.connector,
+                    routing,
+                    &format!("{}2{}", e.from, e.to),
+                    store_addr.as_deref(),
+                )
+                .with_transport(&graph.config.transport),
+            ));
             edge_routing.push(routing);
         }
 
@@ -839,7 +842,26 @@ impl ServingSession {
     /// Live run metrics (goodput, JCT/TTFT/TPOT so far) without shutting
     /// the session down — the server's `stats` op reads goodput here.
     pub fn live_report(&self) -> crate::metrics::RunReport {
+        self.record_edge_stats();
         self.inner.recorder.report(self.inner.clock.now(), None)
+    }
+
+    /// Live per-edge transfer counters (bytes, frames, p50/p95
+    /// send→resolve latency) for every edge of the stage graph — the
+    /// server's `stats` op reports these alongside goodput.
+    pub fn edge_stats(&self) -> Vec<crate::connector::EdgeTransferSnapshot> {
+        self.inner.edges.iter().map(|e| e.transfer_snapshot()).collect()
+    }
+
+    /// Push the current edge snapshots into the recorder (absolute
+    /// counters — the latest emission per edge wins in the report).
+    fn record_edge_stats(&self) {
+        let t = self.inner.clock.now();
+        for e in self.inner.edges.iter() {
+            self.inner
+                .recorder
+                .emit(Event::EdgeStats { t, snapshot: e.transfer_snapshot() });
+        }
     }
 
     /// Live replica count of one stage.
@@ -912,6 +934,7 @@ impl ServingSession {
         summaries.sort_by_key(|s| {
             (self.inner.graph.stage_index(&s.name).unwrap_or(usize::MAX), s.replica)
         });
+        self.record_edge_stats();
         let wall = self.inner.clock.now();
         let report = self.inner.recorder.report(wall, audio_stage);
         Ok(RunSummary { report, stages: summaries, wall_s: wall })

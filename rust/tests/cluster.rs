@@ -1,0 +1,179 @@
+//! Cluster-subsystem integration tests (ISSUE 8): the controller/agent
+//! loopback lifecycle — register, place, assign, drive a trace through
+//! chained store streams, drain with per-edge stats — plus the liveness
+//! contract: a node that goes silent or hangs up mid-run surfaces as a
+//! structured error naming the node, never a hang.  The two-PROCESS
+//! variant (real `omni-serve agent` child) lives in
+//! `tests/serve_smoke.rs`; these run the agents in-process for speed.
+
+use std::io::Read;
+use std::net::TcpListener;
+use std::time::Duration;
+
+use omni_serve::cluster::agent::spawn_in_process;
+use omni_serve::cluster::wire::{write_msg, CtlMsg};
+use omni_serve::cluster::{run_cluster_trace, AgentOptions, ControllerOptions};
+use omni_serve::config::{PlacementPolicy, TransportConfig};
+
+/// Fast control-plane cadence so the suite stays quick: beats every
+/// 2 ms, silence declared after 2 s.
+fn fast_transport() -> TransportConfig {
+    TransportConfig { heartbeat_s: 0.002, read_timeout_s: 2.0 }
+}
+
+fn agent_opts(node_id: &str) -> AgentOptions {
+    let mut o = AgentOptions::new(node_id, "127.0.0.1:0");
+    o.transport = fast_transport();
+    o
+}
+
+#[test]
+fn loopback_cluster_trace_runs_end_to_end_with_per_edge_stats() {
+    // Two in-process agents hosting a 3-stage chain.  Round-robin
+    // placement scatters the stages (0, 1, 0), so every frame genuinely
+    // crosses between both agents' relay workers.
+    let (addr_a, handle_a) = spawn_in_process(agent_opts("n0")).unwrap();
+    let (addr_b, handle_b) = spawn_in_process(agent_opts("n1")).unwrap();
+
+    let payloads: Vec<Vec<u8>> = (0..24u8).map(|i| vec![i; 32 + i as usize]).collect();
+    let opts = ControllerOptions {
+        transport: fast_transport(),
+        placement: PlacementPolicy::RoundRobin,
+        ..Default::default()
+    };
+    let report = run_cluster_trace(
+        &[addr_a.to_string(), addr_b.to_string()],
+        &["prefill", "decode", "vocoder"],
+        &payloads,
+        &opts,
+    )
+    .unwrap();
+
+    assert_eq!(report.nodes, vec!["n0".to_string(), "n1".to_string()]);
+    assert_eq!(report.completed, 24, "every frame must survive the whole chain");
+    assert_eq!(report.plan.placements.len(), 3, "one replica per stage");
+    let nodes: Vec<usize> = report.plan.placements.iter().map(|p| p.node).collect();
+    assert_eq!(nodes, vec![0, 1, 0], "round-robin alternates over the registered nodes");
+    // Per-hop transfer counters crossed the control plane in `Stats`,
+    // labelled `{node}/{stage}#{replica}`.  Every hop moved every frame
+    // plus the end-of-stream sentinel.
+    assert_eq!(report.edges.len(), 3);
+    let total_bytes: usize = payloads.iter().map(|p| p.len()).sum();
+    for e in &report.edges {
+        assert!(
+            e.label.starts_with("n0/") || e.label.starts_with("n1/"),
+            "stat label must name its node: {e:?}"
+        );
+        assert_eq!(e.frames, 25, "24 payloads + sentinel: {e:?}");
+        assert_eq!(e.bytes as usize, total_bytes, "{e:?}");
+        assert!(e.p95_ms >= e.p50_ms, "{e:?}");
+    }
+    assert!(report.heartbeats > 0, "agents must have heartbeated during the run");
+
+    // Both agents drained cleanly and report what they hosted.
+    let rep_a = handle_a.join().unwrap().unwrap();
+    let rep_b = handle_b.join().unwrap().unwrap();
+    assert_eq!(rep_a.assignments, 2, "round-robin gave n0 stages 0 and 2");
+    assert_eq!(rep_b.assignments, 1);
+    assert_eq!(rep_a.frames_moved + rep_b.frames_moved, 3 * 24);
+}
+
+#[test]
+fn transfer_aware_policy_colocates_a_chain_that_fits_one_node() {
+    // With equal edge weights and room to spare, transfer-aware
+    // placement chains every stage onto the upstream's node: zero
+    // cross-node hops, the whole pipeline on the first agent.
+    let (addr_a, handle_a) = spawn_in_process(agent_opts("ta0")).unwrap();
+    let (addr_b, handle_b) = spawn_in_process(agent_opts("ta1")).unwrap();
+    let opts = ControllerOptions { transport: fast_transport(), ..Default::default() };
+    let payloads = vec![b"one".to_vec(), b"two".to_vec()];
+    let report =
+        run_cluster_trace(&[addr_a.to_string(), addr_b.to_string()], &["a", "b"], &payloads, &opts)
+            .unwrap();
+    assert_eq!(report.completed, 2);
+    let nodes: Vec<usize> = report.plan.placements.iter().map(|p| p.node).collect();
+    assert_eq!(nodes, vec![0, 0], "transfer-aware co-locates the edge's endpoints");
+    assert_eq!(report.plan.cross_pairs(), 0);
+    let rep_a = handle_a.join().unwrap().unwrap();
+    let rep_b = handle_b.join().unwrap().unwrap();
+    assert_eq!(rep_a.assignments, 2);
+    assert_eq!(rep_b.assignments, 0, "the second node idles; nothing crossed to it");
+}
+
+#[test]
+fn silent_node_aborts_the_run_with_a_structured_error_naming_it() {
+    // A zombie agent: registers, then never heartbeats.  The controller
+    // must abort with an error naming the node — not hang the collector.
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let zombie = std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().unwrap();
+        write_msg(
+            &mut s,
+            &CtlMsg::Register { node_id: "zombie".into(), gpus: 2, device_bytes: 1 << 30 },
+        )
+        .unwrap();
+        // Hold the socket open silently until the controller gives up.
+        std::thread::sleep(Duration::from_secs(2));
+        drop(s);
+    });
+
+    let opts = ControllerOptions {
+        transport: TransportConfig { heartbeat_s: 0.05, read_timeout_s: 0.3 },
+        ..Default::default()
+    };
+    let err = run_cluster_trace(&[addr.to_string()], &["relay"], &[b"x".to_vec()], &opts)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("zombie"), "error must name the dead node: {err}");
+    assert!(err.contains("no heartbeat within the read timeout"), "{err}");
+    zombie.join().unwrap();
+}
+
+#[test]
+fn node_hangup_mid_run_aborts_with_a_structured_error() {
+    // A crasher: registers, then drops the control stream.  Distinct
+    // message from the silent case — the peer hung up, it did not stall.
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let crasher = std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().unwrap();
+        write_msg(
+            &mut s,
+            &CtlMsg::Register { node_id: "crasher".into(), gpus: 2, device_bytes: 1 << 30 },
+        )
+        .unwrap();
+        drop(s);
+    });
+
+    let opts = ControllerOptions {
+        transport: TransportConfig { heartbeat_s: 0.05, read_timeout_s: 1.0 },
+        ..Default::default()
+    };
+    let err = run_cluster_trace(&[addr.to_string()], &["relay"], &[b"x".to_vec()], &opts)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("crasher"), "error must name the dead node: {err}");
+    assert!(err.contains("hung up"), "{err}");
+    crasher.join().unwrap();
+}
+
+#[test]
+fn agent_surfaces_a_dead_controller_instead_of_hanging() {
+    // The symmetric contract: an agent whose controller vanishes after
+    // the handshake errors out naming the silent peer.
+    let mut opts = agent_opts("orphan");
+    opts.transport = TransportConfig { heartbeat_s: 0.05, read_timeout_s: 0.3 };
+    let (addr, handle) = spawn_in_process(opts).unwrap();
+
+    let mut ctl = std::net::TcpStream::connect(addr).unwrap();
+    // Consume the Register frame, then go silent WITHOUT heartbeating.
+    let mut buf = [0u8; 256];
+    let _ = ctl.read(&mut buf).unwrap();
+    std::thread::sleep(Duration::from_millis(600));
+    drop(ctl);
+
+    let err = handle.join().unwrap().unwrap_err().to_string();
+    assert!(err.contains("orphan"), "error must name the agent: {err}");
+    assert!(err.contains("controller dead"), "{err}");
+}

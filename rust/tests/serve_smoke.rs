@@ -81,6 +81,7 @@ fn loopback_ping_generate_stats_shutdown() {
     assert_eq!(v.get("offered").as_usize(), Some(0));
     assert_eq!(v.get("rejected").as_usize(), Some(0));
     assert_eq!(v.get("goodput").as_f64(), Some(0.0));
+    assert_eq!(v.get("edges").as_arr().unwrap().len(), 0, "no session, no edge counters");
 
     // 3. generate
     let v = send(
@@ -91,12 +92,17 @@ fn loopback_ping_generate_stats_shutdown() {
     if have_artifacts {
         assert_eq!(v.get("completed").as_bool(), Some(true), "{v:?}");
         assert!(v.get("jct_s").as_f64().unwrap() >= 0.0);
-        // 3b. stats now reports the LIVE session.
+        // 3b. stats now reports the LIVE session, including per-edge
+        // transfer counters for the backbone→patch_dec hop.
         let v = send(&mut c, &mut reader, r#"{"op": "stats"}"#);
         assert_eq!(v.get("live").as_bool(), Some(true));
         let stages = v.get("stages").as_arr().unwrap();
         assert!(stages.iter().all(|s| s.get("replicas").as_usize() == Some(1)));
         assert_eq!(v.get("inflight").as_usize(), Some(0));
+        let edges = v.get("edges").as_arr().unwrap();
+        assert_eq!(edges.len(), 1, "mimo pipeline has one edge: {v:?}");
+        assert!(edges[0].get("frames").as_usize().unwrap() > 0, "{v:?}");
+        assert!(edges[0].get("bytes").as_usize().unwrap() > 0, "{v:?}");
     } else {
         // No compiled models: a structured error, not a dropped line.
         let err = v.get("error").as_str().unwrap_or_default().to_string();
@@ -187,6 +193,71 @@ fn streaming_generate_with_cross_connection_cancel() {
     assert_eq!(v.get("ok").as_bool(), Some(true));
     drop((a, ra, b, rb));
     h.join().unwrap().unwrap();
+}
+
+/// Two-process multi-node smoke (ISSUE 8): spawn a REAL `omni-serve
+/// agent` child process on 127.0.0.1, drive a two-stage trace across
+/// the process boundary with the in-process controller, and assert
+/// clean registration, end-to-end frame delivery, per-edge transfer
+/// stats harvested over the control plane, and a clean drain (the
+/// child exits 0).  Artifact-free, like the loopback smoke above.
+#[test]
+fn two_process_agent_runs_a_cluster_trace_end_to_end() {
+    use omni_serve::cluster::{run_cluster_trace, ControllerOptions};
+    use omni_serve::config::TransportConfig;
+    use std::io::Read;
+    use std::process::{Command, Stdio};
+
+    let mut child = Command::new(env!("CARGO_BIN_EXE_omni-serve"))
+        .args([
+            "agent",
+            "--node-id",
+            "smoke0",
+            "--listen",
+            "127.0.0.1:0",
+            "--heartbeat",
+            "0.005",
+        ])
+        .stdout(Stdio::piped())
+        .spawn()
+        .unwrap();
+    // The agent announces its bound address on stdout before accepting.
+    let mut out = BufReader::new(child.stdout.take().unwrap());
+    let mut line = String::new();
+    out.read_line(&mut line).unwrap();
+    assert!(line.starts_with("agent smoke0 listening on "), "unexpected banner: {line:?}");
+    let addr = line.trim().rsplit(' ').next().unwrap().to_string();
+
+    let payloads: Vec<Vec<u8>> = (0..16u8).map(|i| vec![i; 64 + i as usize]).collect();
+    let opts = ControllerOptions {
+        transport: TransportConfig { heartbeat_s: 0.005, read_timeout_s: 5.0 },
+        ..Default::default()
+    };
+    let report =
+        run_cluster_trace(&[addr], &["prefill", "decode"], &payloads, &opts).unwrap();
+
+    assert_eq!(report.nodes, vec!["smoke0".to_string()]);
+    assert_eq!(report.completed, 16, "every frame must cross the process boundary intact");
+    assert_eq!(report.plan.placements.len(), 2, "both stages homed on the one node");
+    // Per-hop transfer counters crossed the control plane in `Stats`.
+    assert_eq!(report.edges.len(), 2);
+    let total_bytes: usize = payloads.iter().map(|p| p.len()).sum();
+    for e in &report.edges {
+        assert!(e.label.starts_with("smoke0/"), "{e:?}");
+        assert_eq!(e.frames, 17, "16 payloads + the end-of-stream sentinel: {e:?}");
+        assert_eq!(e.bytes as usize, total_bytes, "{e:?}");
+    }
+    assert!(report.heartbeats > 0, "the agent must have heartbeated during the run");
+
+    // The child drains cleanly: prints its hop summary and exits 0.
+    let status = child.wait().unwrap();
+    assert!(status.success(), "agent exited {status:?}");
+    let mut rest = String::new();
+    out.read_to_string(&mut rest).unwrap();
+    assert!(
+        rest.contains("agent smoke0 drained: 2 replicas hosted"),
+        "missing drain summary: {rest:?}"
+    );
 }
 
 /// Prefix-cache smoke over real TCP (ISSUE 7): two IDENTICAL streaming
