@@ -1,6 +1,18 @@
-//! Building a custom any-to-any pipeline with the public API (paper
+//! Building custom any-to-any pipelines with the public API (paper
 //! §3.2: "users define any-to-any models as a stage graph"):
 //!
+//! Part 1 (runs everywhere, no artifacts needed) — branching fan-out:
+//! * load the `qwen3-omni-branching` preset, where one prompt fans out
+//!   from the thinker into a parallel image arm and a speech arm that
+//!   share its prefill,
+//! * validate it into a [`StageGraph`] and walk [`BranchInfo`] to see
+//!   which stages belong to which branch and where each branch exits,
+//! * show the fractional-sharing config (encoder + vocoder as 300-milli
+//!   slots co-resident on device 0 under the time-slice scheduler),
+//! * show the validator rejecting a *partial* fan-in (an edge that
+//!   merges only some of the branches).
+//!
+//! Part 2 (needs `make artifacts`, skipped gracefully otherwise):
 //! * compose a new two-stage graph (MiMo backbone -> CNN vocoder — a
 //!   combination no preset ships),
 //! * register a CUSTOM transfer function for the edge,
@@ -16,17 +28,86 @@
 use std::sync::Arc;
 
 use omni_serve::config::{
-    ConnectorKind, EdgeConfig, PipelineConfig, RoutingKind, StageConfig, StageKind,
+    presets, ConnectorKind, EdgeConfig, PipelineConfig, RoutingKind, StageConfig, StageKind,
 };
 use omni_serve::engine::vocoder::VocoderJob;
+use omni_serve::gpu_share::DEVICE_MILLI;
 use omni_serve::orchestrator::{Orchestrator, RunOptions};
 use omni_serve::runtime::Artifacts;
 use omni_serve::stage_graph::transfers::{EngineCmd, Registry, TransferCtx};
+use omni_serve::stage_graph::StageGraph;
 use omni_serve::tokenizer::Tokenizer;
 use omni_serve::trace::{Modality, Request, Workload};
 
+/// Part 1: validate a branching fan-out graph and inspect its branches.
+fn branching_fanout_tour() -> anyhow::Result<()> {
+    let registry = Registry::builtin();
+    let config = presets::by_name("qwen3-omni-branching").expect("preset registered");
+    let graph = StageGraph::build(config, &registry)?;
+
+    let name = |i: usize| graph.stage(i).name.as_str();
+    println!(
+        "pipeline `{}`: entry `{}`, {} exit stage(s)",
+        graph.config.name,
+        name(graph.entry),
+        graph.exits.len()
+    );
+    for s in &graph.config.stages {
+        if s.compute_milli < DEVICE_MILLI {
+            println!(
+                "  stage `{}` is fractional: {}/{} of device {:?}",
+                s.name, s.compute_milli, DEVICE_MILLI, s.devices
+            );
+        }
+    }
+    // One prompt -> parallel image + speech arms sharing the thinker's
+    // prefill.  A request completes when BOTH branch exits deliver.
+    for b in graph.branches() {
+        let stages: Vec<&str> = b.stages.iter().map(|&i| name(i)).collect();
+        let exits: Vec<&str> = b.exits.iter().map(|&i| name(i)).collect();
+        println!(
+            "  branch from `{}` via `{}`: stages {:?}, exits {:?}",
+            name(b.root),
+            name(b.head),
+            stages,
+            exits
+        );
+    }
+
+    // The validator rejects fan-ins that merge only SOME branches: add
+    // a thinker->vocoder shortcut so the vocoder would join the speech
+    // arm with the fan-out root while the image arm runs free.
+    let mut bad = presets::by_name("qwen3-omni-branching").unwrap();
+    bad.edges.push(EdgeConfig {
+        from: "thinker".into(),
+        to: "vocoder".into(),
+        transfer: "talker2vocoder".into(),
+        connector: ConnectorKind::Shm,
+        routing: RoutingKind::Affinity,
+    });
+    match StageGraph::build(bad, &registry) {
+        Ok(_) => anyhow::bail!("partial fan-in unexpectedly accepted"),
+        Err(e) => println!("  partial fan-in rejected as expected: {e}"),
+    }
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
-    let artifacts = Arc::new(Artifacts::load(&Artifacts::default_dir())?);
+    branching_fanout_tour()?;
+
+    // Part 2 needs the AOT artifacts produced by `make artifacts`.
+    // Exit cleanly when they are absent (CI containers have no JAX) so
+    // this example can be *run*, not just built, everywhere.
+    let dir = Artifacts::default_dir();
+    if !dir.join("manifest.json").exists() {
+        println!(
+            "custom_stage_graph: no compiled artifacts at {} — run `make artifacts` first \
+             (skipping the serving part)",
+            dir.display()
+        );
+        return Ok(());
+    }
+    let artifacts = Arc::new(Artifacts::load(&dir)?);
 
     // 1. Define the stage graph: MiMo AR backbone -> Qwen3 CNN vocoder,
     //    connected over the SHARED-MEMORY connector with a custom edge fn.
@@ -59,6 +140,7 @@ fn main() -> anyhow::Result<()> {
         cache: None,
         transport: omni_serve::config::TransportConfig::default(),
         cluster: None,
+        share: None,
     };
 
     // 2. Register the custom transfer: keep every other token (a toy

@@ -155,7 +155,13 @@ pub fn run_cluster_trace(
     };
     let demands: Vec<StageDemand> = stages
         .iter()
-        .map(|s| StageDemand { stage: s.to_string(), replicas: 1, tp: 1, bytes: opts.stage_bytes })
+        .map(|s| StageDemand {
+            stage: s.to_string(),
+            replicas: 1,
+            tp: 1,
+            bytes: opts.stage_bytes,
+            compute_milli: crate::gpu_share::DEVICE_MILLI,
+        })
         .collect();
     let edge_demands: Vec<EdgeDemand> = stages
         .windows(2)

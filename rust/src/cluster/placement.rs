@@ -29,6 +29,7 @@ use anyhow::{bail, Result};
 
 use crate::config::{ConnectorKind, NodeSpec, PlacementPolicy};
 use crate::device::{DeviceId, DevicePool};
+use crate::gpu_share::{MilliLedger, DEVICE_MILLI};
 use crate::scheduler::allocator::{commit_group, pack_group};
 
 /// Below this per-request frame size a node-local edge sticks with the
@@ -44,6 +45,11 @@ pub struct StageDemand {
     pub tp: usize,
     /// Per-replica weight bytes, sharded evenly across its TP group.
     pub bytes: usize,
+    /// Per-replica compute share in milli-GPUs
+    /// ([`crate::gpu_share::DEVICE_MILLI`] = a whole device).  Fractional
+    /// single-device replicas pack into spare slivers of already-carved
+    /// devices before claiming fresh ones.
+    pub compute_milli: u32,
 }
 
 /// What one edge moves per request (drives transport selection and the
@@ -139,6 +145,8 @@ pub fn place(
     let pools: Vec<DevicePool> =
         nodes.iter().map(|n| DevicePool::new(n.gpus, n.device_bytes)).collect();
     let mut node_load: Vec<Vec<usize>> = nodes.iter().map(|n| vec![0usize; n.gpus]).collect();
+    let mut node_milli: Vec<MilliLedger> =
+        nodes.iter().map(|n| MilliLedger::new(n.gpus)).collect();
     let mut placements: Vec<ReplicaPlacement> = Vec::new();
     // Reservations are held for the duration of placement so later
     // replicas see earlier ones' memory (the pools are dropped with the
@@ -150,6 +158,14 @@ pub fn place(
         if s.replicas == 0 || s.tp == 0 {
             bail!("placement: stage `{}` demands {} replicas x tp {}", s.stage, s.replicas, s.tp);
         }
+        if s.compute_milli == 0 || s.compute_milli > DEVICE_MILLI {
+            bail!(
+                "placement: stage `{}` compute_milli {} outside 1..={DEVICE_MILLI}",
+                s.stage,
+                s.compute_milli
+            );
+        }
+        let frac_demand = s.tp == 1 && s.compute_milli < DEVICE_MILLI;
         // The heaviest in-edge decides who this stage wants to sit with.
         let heaviest_in = edges
             .iter()
@@ -158,16 +174,26 @@ pub fn place(
         for r in 0..s.replicas {
             let mut try_node = |ni: usize,
                                 node_load: &mut Vec<Vec<usize>>,
+                                node_milli: &mut Vec<MilliLedger>,
                                 holds: &mut Vec<_>|
              -> Option<Vec<DeviceId>> {
                 if nodes[ni].gpus < s.tp {
                     return None;
                 }
-                let group = pack_group(&node_load[ni], s.tp);
+                // Fraction-first within the node: a fractional replica
+                // slots into spare milli on an already-carved device
+                // before least-loaded packing claims a fresh one.
+                let group = match node_milli[ni].pack(s.compute_milli) {
+                    Some(d) if frac_demand => vec![DeviceId(d)],
+                    _ => pack_group(&node_load[ni], s.tp),
+                };
                 match pools[ni].reserve_tp(&group, s.bytes, &format!("{}#{r}", s.stage)) {
                     Ok(res) => {
                         holds.extend(res);
                         commit_group(&mut node_load[ni], &group);
+                        for d in &group {
+                            node_milli[ni].commit(d.0, s.compute_milli);
+                        }
                         Some(group)
                     }
                     Err(_) => None,
@@ -185,24 +211,32 @@ pub fn place(
                             .map(|p| p.node)
                     });
                     let mut order: Vec<usize> = (0..nodes.len()).collect();
-                    // Fallback preference: fewest replicas first, index
-                    // tie-break (mirrors pack_group's device policy).
+                    // Fallback preference: for fractional demands, nodes
+                    // holding a partially-carved device with room come
+                    // first (slot packing per node); then fewest replicas,
+                    // index tie-break (mirrors pack_group's device policy).
                     order.sort_by_key(|&ni| {
-                        (placements.iter().filter(|p| p.node == ni).count(), ni)
+                        let sliver = frac_demand
+                            && (0..nodes[ni].gpus).any(|d| {
+                                let u = node_milli[ni].used(d);
+                                u > 0 && node_milli[ni].fits(d, s.compute_milli)
+                            });
+                        (!sliver, placements.iter().filter(|p| p.node == ni).count(), ni)
                     });
                     if let Some(p) = preferred {
                         order.retain(|&ni| ni != p);
                         order.insert(0, p);
                     }
-                    order
-                        .into_iter()
-                        .find_map(|ni| try_node(ni, &mut node_load, &mut holds).map(|g| (ni, g)))
+                    order.into_iter().find_map(|ni| {
+                        try_node(ni, &mut node_load, &mut node_milli, &mut holds)
+                            .map(|g| (ni, g))
+                    })
                 }
                 PlacementPolicy::RoundRobin => {
                     let n = nodes.len();
                     (0..n).find_map(|attempt| {
                         let ni = (rr + attempt) % n;
-                        try_node(ni, &mut node_load, &mut holds).map(|g| {
+                        try_node(ni, &mut node_load, &mut node_milli, &mut holds).map(|g| {
                             rr = ni + 1;
                             (ni, g)
                         })
@@ -283,6 +317,7 @@ mod tests {
             replicas: 2,
             tp: 1,
             bytes,
+            compute_milli: DEVICE_MILLI,
         };
         let stages = vec![demand("prefill"), demand("decode"), demand("vocoder")];
         let edges = vec![
@@ -335,8 +370,8 @@ mod tests {
     #[test]
     fn local_light_edge_stays_inline() {
         let stages = vec![
-            StageDemand { stage: "a".into(), replicas: 1, tp: 1, bytes: 10 },
-            StageDemand { stage: "b".into(), replicas: 1, tp: 1, bytes: 10 },
+            StageDemand { stage: "a".into(), replicas: 1, tp: 1, bytes: 10, compute_milli: 1000 },
+            StageDemand { stage: "b".into(), replicas: 1, tp: 1, bytes: 10, compute_milli: 1000 },
         ];
         let edges = vec![EdgeDemand { from: "a".into(), to: "b".into(), bytes_per_request: 100.0 }];
         let plan = place(&nodes(2, 2, 100), &stages, &edges, PlacementPolicy::TransferAware).unwrap();
@@ -344,20 +379,76 @@ mod tests {
     }
 
     #[test]
+    fn fractional_replicas_pack_into_node_slivers() {
+        // Two 300-milli encoder replicas and a 300-milli vocoder replica
+        // all fit a single device; the ledger packs them onto node 0's
+        // carved device instead of scattering one per node.
+        let stages = vec![
+            StageDemand { stage: "enc".into(), replicas: 2, tp: 1, bytes: 10, compute_milli: 300 },
+            StageDemand { stage: "voc".into(), replicas: 1, tp: 1, bytes: 10, compute_milli: 300 },
+        ];
+        let plan =
+            place(&nodes(2, 1, 100), &stages, &[], PlacementPolicy::TransferAware).unwrap();
+        assert_eq!(plan.node_of("enc", 0), Some(0));
+        assert_eq!(plan.node_of("enc", 1), Some(0), "second fraction joins the sliver");
+        assert_eq!(plan.node_of("voc", 0), Some(0), "third fraction still fits (900 milli)");
+        assert_eq!(plan.replicas_on(1), 0, "node 1 stays free for whole replicas");
+        // A whole-device demand then lands on the untouched node.
+        let mut stages = stages;
+        stages.push(StageDemand {
+            stage: "thinker".into(),
+            replicas: 1,
+            tp: 1,
+            bytes: 10,
+            compute_milli: DEVICE_MILLI,
+        });
+        let plan =
+            place(&nodes(2, 1, 100), &stages, &[], PlacementPolicy::TransferAware).unwrap();
+        assert_eq!(plan.node_of("thinker", 0), Some(1));
+    }
+
+    #[test]
     fn infeasible_demand_bails_with_the_replica_named() {
-        let stages = vec![StageDemand { stage: "big".into(), replicas: 1, tp: 1, bytes: 1000 }];
+        let stages = vec![StageDemand {
+            stage: "big".into(),
+            replicas: 1,
+            tp: 1,
+            bytes: 1000,
+            compute_milli: 1000,
+        }];
         let err = place(&nodes(2, 1, 100), &stages, &[], PlacementPolicy::TransferAware)
             .unwrap_err()
             .to_string();
         assert!(err.contains("`big` replica 0"), "got: {err}");
         // TP degree beyond any node's gpus also fails cleanly.
-        let stages = vec![StageDemand { stage: "wide".into(), replicas: 1, tp: 4, bytes: 1 }];
+        let stages = vec![StageDemand {
+            stage: "wide".into(),
+            replicas: 1,
+            tp: 4,
+            bytes: 1,
+            compute_milli: 1000,
+        }];
         assert!(place(&nodes(2, 2, 100), &stages, &[], PlacementPolicy::RoundRobin).is_err());
+        // compute_milli outside 1..=1000 is a demand error, not a panic.
+        let stages = vec![StageDemand {
+            stage: "zero".into(),
+            replicas: 1,
+            tp: 1,
+            bytes: 1,
+            compute_milli: 0,
+        }];
+        assert!(place(&nodes(1, 1, 100), &stages, &[], PlacementPolicy::RoundRobin).is_err());
     }
 
     #[test]
     fn unknown_edge_endpoint_is_rejected() {
-        let stages = vec![StageDemand { stage: "a".into(), replicas: 1, tp: 1, bytes: 1 }];
+        let stages = vec![StageDemand {
+            stage: "a".into(),
+            replicas: 1,
+            tp: 1,
+            bytes: 1,
+            compute_milli: 1000,
+        }];
         let edges = vec![EdgeDemand { from: "a".into(), to: "ghost".into(), bytes_per_request: 1.0 }];
         assert!(place(&nodes(1, 1, 100), &stages, &edges, PlacementPolicy::RoundRobin).is_err());
     }
@@ -382,6 +473,7 @@ mod tests {
                     replicas: rng.range(1, 3),
                     tp: rng.range(1, 2),
                     bytes: rng.range(1, 12_000),
+                    compute_milli: rng.range(50, 1000) as u32,
                 })
                 .collect();
             let edges: Vec<EdgeDemand> = stages

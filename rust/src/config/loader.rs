@@ -8,7 +8,7 @@ use anyhow::{Context, Result};
 use super::{
     AdmissionConfig, AutoscalerConfig, CacheConfig, ClusterConfig, ConnectorKind, DiffusionParams,
     EdgeConfig, NodeSpec, PipelineConfig, PlacementPolicy, RoutingKind, SchedParams,
-    SchedPolicyKind, StageConfig, StageKind, StageRole, TransportConfig,
+    SchedPolicyKind, ShareConfig, StageConfig, StageKind, StageRole, TransportConfig,
 };
 use crate::kv_cache::EvictionPolicy;
 use crate::jobj;
@@ -35,6 +35,9 @@ pub fn from_value(v: &Value) -> Result<PipelineConfig> {
         }
         if let Some(r) = sv.get("replicas").as_usize() {
             s.replicas = r;
+        }
+        if let Some(m) = sv.get("compute_milli").as_usize() {
+            s.compute_milli = m as u32;
         }
         if let Some(f) = sv.get("kv_memory_frac").as_f64() {
             s.kv_memory_frac = f;
@@ -198,6 +201,27 @@ pub fn from_value(v: &Value) -> Result<PipelineConfig> {
             link_latency_ms: clv.get("link_latency_ms").as_f64().unwrap_or(d.link_latency_ms),
         })
     };
+    let shv = v.get("share");
+    let share = if shv.is_null() {
+        None
+    } else {
+        // Same guard as the autoscaler: `"share": true` is a typo, not
+        // "enable fractional sharing with defaults".
+        anyhow::ensure!(shv.as_obj().is_some(), "`share` must be an object");
+        let d = ShareConfig::default();
+        Some(ShareConfig {
+            quantum_ms: shv.get("quantum_ms").as_f64().unwrap_or(d.quantum_ms),
+            max_slots_per_device: shv
+                .get("max_slots_per_device")
+                .as_usize()
+                .unwrap_or(d.max_slots_per_device),
+            min_compute_milli: shv
+                .get("min_compute_milli")
+                .as_usize()
+                .map(|m| m as u32)
+                .unwrap_or(d.min_compute_milli),
+        })
+    };
     let cfg = PipelineConfig {
         name: v.req_str("name")?.to_string(),
         stages,
@@ -212,6 +236,7 @@ pub fn from_value(v: &Value) -> Result<PipelineConfig> {
         cache,
         transport,
         cluster,
+        share,
     };
     cfg.validate()?;
     Ok(cfg)
@@ -229,6 +254,7 @@ pub fn to_value(p: &PipelineConfig) -> Value {
                 "role" => s.role.name(),
                 "devices" => s.devices.clone(),
                 "replicas" => s.replicas,
+                "compute_milli" => s.compute_milli as usize,
                 "max_batch" => s.max_batch,
                 "kv_memory_frac" => s.kv_memory_frac,
                 "chunked_prefill" => s.chunked_prefill,
@@ -324,6 +350,18 @@ pub fn to_value(p: &PipelineConfig) -> Value {
             );
         }
     }
+    if let Some(sh) = &p.share {
+        if let Value::Obj(m) = &mut out {
+            m.insert(
+                "share".to_string(),
+                jobj! {
+                    "quantum_ms" => sh.quantum_ms,
+                    "max_slots_per_device" => sh.max_slots_per_device,
+                    "min_compute_milli" => sh.min_compute_milli as usize,
+                },
+            );
+        }
+    }
     if let Some(c) = &p.cluster {
         if let Value::Obj(m) = &mut out {
             let nodes: Vec<Value> = c
@@ -375,6 +413,7 @@ mod tests {
                 assert_eq!(a.role, b.role);
                 assert_eq!(a.devices, b.devices);
                 assert_eq!(a.replicas, b.replicas);
+                assert_eq!(a.compute_milli, b.compute_milli);
                 assert_eq!(a.max_batch, b.max_batch);
                 assert_eq!(a.multi_step, b.multi_step);
                 assert_eq!(a.diffusion.steps, b.diffusion.steps);
@@ -391,7 +430,54 @@ mod tests {
             }
             assert_eq!(p.transport, q.transport);
             assert_eq!(p.cluster, q.cluster);
+            assert_eq!(p.share, q.share);
         }
+    }
+
+    #[test]
+    fn share_block_roundtrips_and_defaults() {
+        let p = presets::qwen3_omni_branching();
+        assert!(p.share.is_some(), "branching preset enables fractional sharing");
+        let s = to_json_string(&p);
+        let q = from_value(&json::parse(&s).unwrap()).unwrap();
+        assert_eq!(q.share, p.share);
+        // Partial block: unspecified fields take the defaults, and a
+        // fractional stage is accepted once the block is present.
+        let v = json::parse(
+            r#"{"name": "x", "n_devices": 2, "stages": [
+                {"name": "a", "model": "enc3", "kind": "encoder", "devices": [0],
+                 "compute_milli": 400},
+                {"name": "b", "model": "thinker3", "kind": "ar", "devices": [1]}
+            ], "edges": [
+                {"from": "a", "to": "b", "transfer": "embeds2prompt"}
+            ], "share": {"quantum_ms": 2.0}}"#,
+        )
+        .unwrap();
+        let q = from_value(&v).unwrap();
+        let sh = q.share.unwrap();
+        assert_eq!(sh.quantum_ms, 2.0);
+        assert_eq!(sh.max_slots_per_device, ShareConfig::default().max_slots_per_device);
+        assert_eq!(q.stages[0].compute_milli, 400);
+        assert_eq!(q.stages[1].compute_milli, 1000, "compute_milli defaults to a whole device");
+        // No block at all: None (whole-GPU allocation only).
+        assert!(presets::qwen3_omni().share.is_none());
+        // A fractional stage without a share block is rejected at load time.
+        let bad = json::parse(
+            r#"{"name": "x", "n_devices": 1, "stages": [
+                {"name": "a", "model": "mimo", "kind": "ar", "devices": [0],
+                 "compute_milli": 400}
+            ]}"#,
+        )
+        .unwrap();
+        assert!(from_value(&bad).is_err());
+        // A non-object value is a config mistake, not "all defaults".
+        let typo = json::parse(
+            r#"{"name": "x", "n_devices": 1, "stages": [
+                {"name": "a", "model": "mimo", "kind": "ar", "devices": [0]}
+            ], "share": true}"#,
+        )
+        .unwrap();
+        assert!(from_value(&typo).is_err());
     }
 
     #[test]

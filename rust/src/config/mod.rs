@@ -299,6 +299,12 @@ pub struct StageConfig {
     pub diffusion: DiffusionParams,
     /// Scheduling parameters (batching policy, token budget, queue depth).
     pub sched: SchedParams,
+    /// Compute share per replica in milli-GPUs (fractional GPU sharing;
+    /// see [`crate::gpu_share`]).  1000 (the default) is a whole device —
+    /// the pre-sharing behaviour.  Smaller values let several stages
+    /// co-reside on one device under the per-device time-slice scheduler,
+    /// subject to the pipeline's [`ShareConfig`].
+    pub compute_milli: u32,
 }
 
 impl StageConfig {
@@ -317,6 +323,7 @@ impl StageConfig {
             stream_chunk: 16,
             diffusion: DiffusionParams::default(),
             sched: SchedParams::default(),
+            compute_milli: crate::gpu_share::DEVICE_MILLI,
         }
     }
 
@@ -367,6 +374,13 @@ impl StageConfig {
 
     pub fn with_max_batch_tokens(mut self, t: usize) -> Self {
         self.sched.max_batch_tokens = t;
+        self
+    }
+
+    /// Serve each replica on a fractional slot of `milli` milli-GPUs
+    /// (1000 = whole device).  Requires the pipeline's `share` block.
+    pub fn with_fraction(mut self, milli: u32) -> Self {
+        self.compute_milli = milli;
         self
     }
 }
@@ -712,6 +726,46 @@ impl ClusterConfig {
     }
 }
 
+/// Fractional GPU sharing knobs (see [`crate::gpu_share`]): the
+/// per-device time-slice scheduler's quantum and the packing limits for
+/// fractional slots.  `None` on the pipeline keeps whole-GPU allocation
+/// (every `compute_milli` must then be 1000, the default).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShareConfig {
+    /// Turn length of a whole-device (1000 milli) slot under the
+    /// per-device weighted-round-robin scheduler, in milliseconds.  A
+    /// fractional slot's turn is `quantum_ms * compute_milli / 1000`.
+    /// 0 passes the turn at every step boundary.
+    pub quantum_ms: f64,
+    /// Resident-slot cap per device (stages co-located on one device);
+    /// 0 = unbounded.
+    pub max_slots_per_device: usize,
+    /// Smallest carvable compute share in milli-GPUs.
+    pub min_compute_milli: u32,
+}
+
+impl Default for ShareConfig {
+    fn default() -> Self {
+        Self { quantum_ms: 5.0, max_slots_per_device: 4, min_compute_milli: 50 }
+    }
+}
+
+impl ShareConfig {
+    pub fn validate(&self) -> Result<()> {
+        if !(self.quantum_ms.is_finite() && self.quantum_ms >= 0.0) {
+            bail!("share quantum_ms must be >= 0, got {}", self.quantum_ms);
+        }
+        if self.min_compute_milli == 0 || self.min_compute_milli > crate::gpu_share::DEVICE_MILLI {
+            bail!(
+                "share min_compute_milli must be in 1..={}, got {}",
+                crate::gpu_share::DEVICE_MILLI,
+                self.min_compute_milli
+            );
+        }
+        Ok(())
+    }
+}
+
 /// An edge of the stage graph: a named transfer function plus transport.
 #[derive(Debug, Clone)]
 pub struct EdgeConfig {
@@ -750,6 +804,9 @@ pub struct PipelineConfig {
     /// Multi-node deployment topology; `None` = single-process (every
     /// stage thread in this process, the pre-cluster behaviour).
     pub cluster: Option<ClusterConfig>,
+    /// Fractional GPU sharing; `None` = whole-GPU allocation only (the
+    /// pre-sharing behaviour, and the default for most presets).
+    pub share: Option<ShareConfig>,
 }
 
 impl PipelineConfig {
@@ -793,6 +850,33 @@ impl PipelineConfig {
                     s.kind.name()
                 );
             }
+            if s.compute_milli == 0 || s.compute_milli > crate::gpu_share::DEVICE_MILLI {
+                bail!(
+                    "stage `{}` compute_milli must be in 1..={}, got {}",
+                    s.name,
+                    crate::gpu_share::DEVICE_MILLI,
+                    s.compute_milli
+                );
+            }
+            if s.compute_milli < crate::gpu_share::DEVICE_MILLI && self.share.is_none() {
+                bail!(
+                    "stage `{}` requests a fractional slot ({} milli) but the pipeline \
+                     has no `share` block",
+                    s.name,
+                    s.compute_milli
+                );
+            }
+            // A fractional slot is carved out of ONE device; tensor
+            // parallelism splits a model across whole devices.
+            if s.compute_milli < crate::gpu_share::DEVICE_MILLI && s.devices.len() != 1 {
+                bail!(
+                    "stage `{}` is fractional ({} milli) but has a TP group of {} devices \
+                     — fractional slots are single-device",
+                    s.name,
+                    s.compute_milli,
+                    s.devices.len()
+                );
+            }
         }
         if let Some(a) = &self.autoscaler {
             a.validate()?;
@@ -806,6 +890,46 @@ impl PipelineConfig {
         self.transport.validate()?;
         if let Some(c) = &self.cluster {
             c.validate()?;
+        }
+        if let Some(sh) = &self.share {
+            sh.validate()?;
+            // Per-device compute ledger for the *configured* placements
+            // (further replicas pack through the allocator's ledger).
+            // Whole-GPU stages keep time-multiplexing as before; the
+            // ledger binds once any resident of a device is fractional.
+            for d in 0..self.n_devices {
+                let residents: Vec<&StageConfig> =
+                    self.stages.iter().filter(|s| s.devices.contains(&d)).collect();
+                if !residents.iter().any(|s| s.compute_milli < crate::gpu_share::DEVICE_MILLI) {
+                    continue;
+                }
+                let milli: u32 = residents.iter().map(|s| s.compute_milli).sum();
+                if milli > crate::gpu_share::DEVICE_MILLI {
+                    bail!(
+                        "device {d} compute over-subscribed: stages {:?} carve {milli} milli \
+                         (> {})",
+                        residents.iter().map(|s| s.name.as_str()).collect::<Vec<_>>(),
+                        crate::gpu_share::DEVICE_MILLI
+                    );
+                }
+                if sh.max_slots_per_device > 0 && residents.len() > sh.max_slots_per_device {
+                    bail!(
+                        "device {d} holds {} slots, over the share cap of {}",
+                        residents.len(),
+                        sh.max_slots_per_device
+                    );
+                }
+                for s in &residents {
+                    if s.compute_milli < sh.min_compute_milli {
+                        bail!(
+                            "stage `{}` slot of {} milli is under min_compute_milli {}",
+                            s.name,
+                            s.compute_milli,
+                            sh.min_compute_milli
+                        );
+                    }
+                }
+            }
         }
         for e in &self.edges {
             for end in [&e.from, &e.to] {
@@ -871,6 +995,7 @@ mod tests {
             cache: None,
             transport: TransportConfig::default(),
             cluster: None,
+            share: None,
         }
     }
 
@@ -1138,6 +1263,64 @@ mod tests {
         let mut p = two_stage();
         p.stages[0].role = StageRole::Prefill;
         p.stages[1].role = StageRole::Decode;
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn fractional_slots_require_a_share_block() {
+        let mut p = two_stage();
+        p.stages[1].devices = vec![1];
+        p.stages[0].compute_milli = 300;
+        assert!(p.validate().is_err(), "fraction without share block");
+        p.share = Some(ShareConfig::default());
+        p.validate().unwrap();
+        // Out-of-range milli rejected with or without the block.
+        p.stages[0].compute_milli = 0;
+        assert!(p.validate().is_err());
+        p.stages[0].compute_milli = 1001;
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn share_ledger_rejects_oversubscribed_device() {
+        // Both stages fractional on device 0: fits at 500+500...
+        let mut p = two_stage();
+        p.share = Some(ShareConfig::default());
+        p.stages[0].devices = vec![0];
+        p.stages[1].devices = vec![0];
+        p.stages[0].compute_milli = 500;
+        p.stages[1].compute_milli = 500;
+        p.validate().unwrap();
+        // ...but a fractional resident next to a whole-GPU one (500 +
+        // 1000) over-subscribes the ledger.
+        p.stages[1].compute_milli = 1000;
+        assert!(p.validate().is_err());
+        // Whole-GPU stages alone keep time-multiplexing as before.
+        p.stages[0].compute_milli = 1000;
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn share_config_bounds_validate() {
+        let mut p = two_stage();
+        p.stages[1].devices = vec![1];
+        p.stages[0].compute_milli = 300;
+        p.share = Some(ShareConfig { quantum_ms: f64::NAN, ..Default::default() });
+        assert!(p.validate().is_err());
+        p.share = Some(ShareConfig { min_compute_milli: 0, ..Default::default() });
+        assert!(p.validate().is_err());
+        // A slot under min_compute_milli is rejected.
+        p.share = Some(ShareConfig { min_compute_milli: 400, ..Default::default() });
+        assert!(p.validate().is_err());
+        // Slot cap per device.
+        let mut p = two_stage();
+        p.stages[0].devices = vec![0];
+        p.stages[1].devices = vec![0];
+        p.stages[0].compute_milli = 200;
+        p.stages[1].compute_milli = 200;
+        p.share = Some(ShareConfig { max_slots_per_device: 1, ..Default::default() });
+        assert!(p.validate().is_err());
+        p.share = Some(ShareConfig { max_slots_per_device: 2, ..Default::default() });
         p.validate().unwrap();
     }
 

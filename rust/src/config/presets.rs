@@ -12,7 +12,8 @@
 
 use super::{
     ClusterConfig, ConnectorKind, DiffusionParams, EdgeConfig, NodeSpec, PipelineConfig,
-    PlacementPolicy, RoutingKind, SchedParams, StageConfig, StageKind, StageRole, TransportConfig,
+    PlacementPolicy, RoutingKind, SchedParams, ShareConfig, StageConfig, StageKind, StageRole,
+    TransportConfig,
 };
 
 fn edge(from: &str, to: &str, transfer: &str) -> EdgeConfig {
@@ -57,6 +58,7 @@ pub fn qwen25_omni() -> PipelineConfig {
         cache: None,
         transport: TransportConfig::default(),
         cluster: None,
+        share: None,
     }
 }
 
@@ -89,6 +91,7 @@ pub fn qwen3_omni() -> PipelineConfig {
         cache: None,
         transport: TransportConfig::default(),
         cluster: None,
+        share: None,
     }
 }
 
@@ -178,6 +181,65 @@ pub fn qwen3_omni_cluster() -> PipelineConfig {
     p
 }
 
+/// Qwen3-Omni with a branching any-to-any fan-out (paper §3.2's "any"
+/// output side): one prompt's prefill feeds BOTH an image branch
+/// (Thinker hidden states conditioning a DiT generator) and a speech
+/// branch (Talker -> CNN vocoder) in parallel.  The request completes
+/// when every branch exit has delivered, and each branch's finish is
+/// surfaced to streaming clients as a per-branch marker.
+///
+/// The preset is also the showcase for fractional GPU sharing
+/// ([`crate::gpu_share`]): the encoder and the vocoder are light,
+/// bursty stages, so instead of pinning a whole device each they run as
+/// 300-milli slots co-resident on device 0 under the per-device
+/// time-slice scheduler — the capacity freed is what pays for the extra
+/// image branch at equal hardware.
+pub fn qwen3_omni_branching() -> PipelineConfig {
+    PipelineConfig {
+        name: "qwen3-omni-sim-branching".into(),
+        stages: vec![
+            StageConfig::new("encoder", "enc3", StageKind::Encoder)
+                .on_devices(&[0])
+                .with_batch(4)
+                .with_fraction(300),
+            StageConfig::new("thinker", "thinker3", StageKind::Ar)
+                .on_devices(&[1])
+                .with_batch(2),
+            StageConfig::new("imagegen", "qwen_image", StageKind::Dit)
+                .on_devices(&[2])
+                .with_batch(1)
+                .with_diffusion(DiffusionParams {
+                    steps: 20,
+                    cfg_scale: 3.0,
+                    stepcache_threshold: 0.15,
+                }),
+            StageConfig::new("talker", "talker3", StageKind::Ar)
+                .on_devices(&[1])
+                .with_batch(2)
+                .with_multi_step(crate::engine::ar::SCAN_STEPS),
+            StageConfig::new("vocoder", "voc_cnn3", StageKind::CnnVocoder)
+                .on_devices(&[0])
+                .with_batch(4)
+                .with_fraction(300),
+        ],
+        edges: vec![
+            edge("encoder", "thinker", "embeds2prompt"),
+            edge("thinker", "imagegen", "hidden2cond"),
+            edge("thinker", "talker", "thinker2talker"),
+            edge("talker", "vocoder", "talker2vocoder"),
+        ],
+        n_devices: 3,
+        // Thinker and Talker weights co-reside on device 1.
+        device_bytes: 2 * crate::device::DEFAULT_DEVICE_BYTES,
+        autoscaler: None,
+        admission: None,
+        cache: None,
+        transport: TransportConfig::default(),
+        cluster: None,
+        share: Some(ShareConfig::default()),
+    }
+}
+
 /// BAGEL sim: understanding expert (AR) -> generation expert (DiT).
 /// `i2i` switches the generation expert to the longer image-conditioned
 /// variant (ref-image tokens concatenated into the latent sequence).
@@ -206,6 +268,7 @@ pub fn bagel(i2i: bool) -> PipelineConfig {
         cache: None,
         transport: TransportConfig::default(),
         cluster: None,
+        share: None,
     }
 }
 
@@ -231,6 +294,7 @@ pub fn mimo_audio(multi_step: usize) -> PipelineConfig {
         cache: None,
         transport: TransportConfig::default(),
         cluster: None,
+        share: None,
     }
 }
 
@@ -255,6 +319,7 @@ pub fn dit_single(model: &str, steps: usize, stepcache: f32) -> PipelineConfig {
         cache: None,
         transport: TransportConfig::default(),
         cluster: None,
+        share: None,
     }
 }
 
@@ -266,6 +331,7 @@ pub fn all() -> Vec<PipelineConfig> {
         qwen3_omni_replicated(),
         qwen3_omni_epd(),
         qwen3_omni_cluster(),
+        qwen3_omni_branching(),
         bagel(false),
         bagel(true),
         mimo_audio(1),
@@ -284,6 +350,7 @@ pub fn by_name(name: &str) -> Option<PipelineConfig> {
         "qwen3-omni-rep2" => Some(qwen3_omni_replicated()),
         "qwen3-omni-epd" => Some(qwen3_omni_epd()),
         "qwen3-omni-cluster" => Some(qwen3_omni_cluster()),
+        "qwen3-omni-branching" => Some(qwen3_omni_branching()),
         "bagel-t2i" => Some(bagel(false)),
         "bagel-i2i" => Some(bagel(true)),
         "mimo-audio" => Some(mimo_audio(1)),
@@ -347,6 +414,30 @@ mod tests {
         assert_eq!(c.total_gpus(), p.n_devices);
         assert_eq!(c.placement, PlacementPolicy::TransferAware);
         assert!(p.stages.iter().all(|s| s.replicas == 2));
+    }
+
+    #[test]
+    fn branching_preset_fans_out_with_fractional_slots() {
+        let p = qwen3_omni_branching();
+        p.validate().unwrap();
+        // One prefill, two output branches.
+        let outs: Vec<&str> = p
+            .edges
+            .iter()
+            .filter(|e| e.from == "thinker")
+            .map(|e| e.to.as_str())
+            .collect();
+        assert_eq!(outs, vec!["imagegen", "talker"]);
+        // Encoder and vocoder share device 0 as 300-milli slots.
+        assert_eq!(p.stage("encoder").unwrap().compute_milli, 300);
+        assert_eq!(p.stage("vocoder").unwrap().compute_milli, 300);
+        assert_eq!(p.stage("encoder").unwrap().devices, vec![0]);
+        assert_eq!(p.stage("vocoder").unwrap().devices, vec![0]);
+        assert!(p.share.is_some());
+        // The heavy stages keep whole devices.
+        assert_eq!(p.stage("thinker").unwrap().compute_milli, 1000);
+        assert_eq!(p.stage("imagegen").unwrap().compute_milli, 1000);
+        assert!(by_name("qwen3-omni-branching").is_some());
     }
 
     #[test]

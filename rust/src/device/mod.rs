@@ -6,9 +6,16 @@
 //! that over-subscribe a device are rejected at pipeline-build time, the
 //! same admission role the real system's allocator plays.
 
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use anyhow::{anyhow, bail, Result};
+
+/// Monotonic reservation ids (process-wide): each successful `reserve`
+/// gets one, so release can be idempotent across `Reservation` clones
+/// and the pool can audit what is still outstanding.
+static NEXT_RES_ID: AtomicU64 = AtomicU64::new(1);
 
 /// Scaled testbed: the paper uses 2 x 80 GB; our models are ~1000x
 /// smaller, so the default pool is 2 x 80 MB to keep admission pressure
@@ -28,21 +35,26 @@ struct Device {
 #[derive(Debug)]
 pub struct DevicePool {
     devices: Mutex<Vec<Device>>,
+    /// Live (not yet released) reservations by id — the release-once
+    /// gate and the leak audit ([`DevicePool::outstanding`]).
+    live: Mutex<HashMap<u64, (usize, String)>>,
 }
 
 /// A successful reservation; freeing is explicit (engines hold these for
-/// their lifetime).
+/// their lifetime).  Releasing is idempotent per reservation *id*, so
+/// releasing both a clone and its original subtracts exactly once.
 #[derive(Debug, Clone)]
 pub struct Reservation {
     pub device: DeviceId,
     pub bytes: usize,
     pub label: String,
+    id: u64,
 }
 
 impl DevicePool {
     pub fn new(n_devices: usize, bytes_per_device: usize) -> Self {
         let devices = (0..n_devices).map(|_| Device { total: bytes_per_device, used: 0 }).collect();
-        Self { devices: Mutex::new(devices) }
+        Self { devices: Mutex::new(devices), live: Mutex::new(HashMap::new()) }
     }
 
     /// The paper's testbed: two 80 GB accelerators (scaled).
@@ -70,7 +82,10 @@ impl DevicePool {
             );
         }
         d.used += bytes;
-        Ok(Reservation { device, bytes, label: label.to_string() })
+        drop(devs);
+        let id = NEXT_RES_ID.fetch_add(1, Ordering::Relaxed);
+        self.live.lock().unwrap().insert(id, (bytes, label.to_string()));
+        Ok(Reservation { device, bytes, label: label.to_string(), id })
     }
 
     /// Reserve a tensor-parallel allocation: `bytes` split evenly across
@@ -96,19 +111,71 @@ impl DevicePool {
     }
 
     pub fn release(&self, r: &Reservation) {
+        // Release-once gate: a reservation already released (possibly
+        // through a clone — the autoscaler hands clones around) must not
+        // subtract again.
+        if self.live.lock().unwrap().remove(&r.id).is_none() {
+            return;
+        }
         let mut devs = self.devices.lock().unwrap();
         if let Some(d) = devs.get_mut(r.device.0) {
             d.used = d.used.saturating_sub(r.bytes);
         }
     }
 
+    /// Bytes reserved on `device`; 0 for an unknown device id, mirroring
+    /// `release()`'s tolerance instead of panicking on a bad index.
     pub fn used(&self, device: DeviceId) -> usize {
-        self.devices.lock().unwrap()[device.0].used
+        self.devices.lock().unwrap().get(device.0).map(|d| d.used).unwrap_or(0)
     }
 
+    /// Bytes still unreserved on `device`; 0 for an unknown device id.
     pub fn free(&self, device: DeviceId) -> usize {
-        let devs = self.devices.lock().unwrap();
-        devs[device.0].total - devs[device.0].used
+        self.devices.lock().unwrap().get(device.0).map(|d| d.total - d.used).unwrap_or(0)
+    }
+
+    /// Leak audit: every reservation handed out and not yet released, as
+    /// `(label, bytes)`.  Tests wrap teardown with an emptiness assert so
+    /// a replica path that forgets `release()` fails an invariant instead
+    /// of silently shrinking the pool.
+    pub fn outstanding(&self) -> Vec<(String, usize)> {
+        let mut v: Vec<(String, usize)> =
+            self.live.lock().unwrap().values().map(|(b, l)| (l.clone(), *b)).collect();
+        v.sort();
+        v
+    }
+}
+
+/// RAII debug guard over a [`Reservation`]: releases on drop unless
+/// explicitly kept with [`ScopedReservation::into_inner`].  Paths that
+/// reserve-then-maybe-fail (allocator packing, autoscaler scale-up) hold
+/// their reservations through this so every early return frees memory.
+pub struct ScopedReservation<'a> {
+    pool: &'a DevicePool,
+    res: Option<Reservation>,
+}
+
+impl<'a> ScopedReservation<'a> {
+    pub fn new(pool: &'a DevicePool, res: Reservation) -> Self {
+        Self { pool, res: Some(res) }
+    }
+
+    pub fn get(&self) -> &Reservation {
+        self.res.as_ref().expect("reservation held until drop")
+    }
+
+    /// Keep the reservation past the guard's scope (ownership transfer to
+    /// a long-lived holder, e.g. a spawned replica).
+    pub fn into_inner(mut self) -> Reservation {
+        self.res.take().expect("reservation held until drop")
+    }
+}
+
+impl Drop for ScopedReservation<'_> {
+    fn drop(&mut self) {
+        if let Some(r) = self.res.take() {
+            self.pool.release(&r);
+        }
     }
 }
 
@@ -146,6 +213,104 @@ mod tests {
     fn invalid_device_rejected() {
         let p = DevicePool::new(1, 10);
         assert!(p.reserve(DeviceId(3), 1, "x").is_err());
+    }
+
+    #[test]
+    fn out_of_range_queries_return_zero() {
+        // Regression: `used`/`free` indexed the device vec unchecked and
+        // panicked on an out-of-range id; they now answer 0, mirroring
+        // release()'s tolerance.
+        let p = DevicePool::new(2, 1000);
+        assert_eq!(p.used(DeviceId(7)), 0);
+        assert_eq!(p.free(DeviceId(7)), 0);
+        let _r = p.reserve(DeviceId(0), 100, "w").unwrap();
+        assert_eq!(p.used(DeviceId(usize::MAX)), 0);
+        assert_eq!(p.free(DeviceId(usize::MAX)), 0);
+    }
+
+    #[test]
+    fn release_is_idempotent_across_clones() {
+        let p = DevicePool::new(1, 1000);
+        let r = p.reserve(DeviceId(0), 400, "w").unwrap();
+        let c = r.clone();
+        p.release(&c);
+        assert_eq!(p.used(DeviceId(0)), 0);
+        // Second release through the original must not underflow or
+        // double-subtract against later reservations.
+        p.release(&r);
+        let _again = p.reserve(DeviceId(0), 1000, "x").unwrap();
+        assert_eq!(p.used(DeviceId(0)), 1000);
+    }
+
+    #[test]
+    fn outstanding_audit_catches_leaks() {
+        let p = DevicePool::new(2, 1000);
+        let a = p.reserve(DeviceId(0), 100, "thinker").unwrap();
+        let _leaked = p.reserve(DeviceId(1), 200, "vocoder").unwrap();
+        p.release(&a);
+        // The forgotten reservation surfaces by label in the audit.
+        assert_eq!(p.outstanding(), vec![("vocoder".to_string(), 200)]);
+    }
+
+    #[test]
+    fn scoped_reservation_releases_on_drop() {
+        let p = DevicePool::new(1, 1000);
+        {
+            let g = ScopedReservation::new(&p, p.reserve(DeviceId(0), 300, "w").unwrap());
+            assert_eq!(g.get().bytes, 300);
+            assert_eq!(p.used(DeviceId(0)), 300);
+        }
+        assert_eq!(p.used(DeviceId(0)), 0);
+        assert!(p.outstanding().is_empty());
+        // into_inner transfers ownership: nothing released at drop.
+        let kept = {
+            let g = ScopedReservation::new(&p, p.reserve(DeviceId(0), 300, "w").unwrap());
+            g.into_inner()
+        };
+        assert_eq!(p.used(DeviceId(0)), 300);
+        p.release(&kept);
+        assert!(p.outstanding().is_empty());
+    }
+
+    #[test]
+    fn prop_reserve_tp_failure_restores_exact_usage() {
+        // Satellite: a mid-group reservation failure must leave every
+        // device's `used` bytes exactly as before the call.
+        quick("reserve_tp_rollback", |rng| {
+            let n = rng.range(2, 5);
+            let total = rng.range(200, 5_000);
+            let p = DevicePool::new(n, total);
+            // Random pre-existing load.
+            let mut held: Vec<Reservation> = vec![];
+            for d in 0..n {
+                if rng.bool(0.7) {
+                    let b = rng.range(1, total);
+                    if let Ok(r) = p.reserve(DeviceId(d), b, "pre") {
+                        held.push(r);
+                    }
+                }
+            }
+            let before: Vec<usize> = (0..n).map(|d| p.used(DeviceId(d))).collect();
+            let group: Vec<DeviceId> = (0..n).map(DeviceId).collect();
+            let bytes = rng.range(1, total * n);
+            match p.reserve_tp(&group, bytes, "tp") {
+                Ok(rs) => {
+                    for r in &rs {
+                        p.release(r);
+                    }
+                    let after: Vec<usize> = (0..n).map(|d| p.used(DeviceId(d))).collect();
+                    assert_eq!(before, after, "release after success must restore usage");
+                }
+                Err(_) => {
+                    let after: Vec<usize> = (0..n).map(|d| p.used(DeviceId(d))).collect();
+                    assert_eq!(before, after, "failed reserve_tp must roll back exactly");
+                }
+            }
+            for r in &held {
+                p.release(r);
+            }
+            assert!(p.outstanding().is_empty(), "leak audit after full release");
+        });
     }
 
     #[test]

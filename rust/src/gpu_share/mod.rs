@@ -1,0 +1,489 @@
+//! Fractional GPU sharing (ROADMAP: "fractional GPU sharing + richer
+//! any-to-any topologies").
+//!
+//! The paper's flexible GPU allocation stops at whole-GPU granularity,
+//! yet encoder and vocoder stages are tiny next to prefill/decode and
+//! the DiT — a whole device per replica strands most of its capacity.
+//! This module turns each simulated device into a *partitionable*
+//! resource:
+//!
+//! * [`FracSlot`] — a fraction of one device: a compute share in
+//!   milli-GPUs (1000 = the whole device) plus a hard memory partition.
+//! * [`DeviceShare`] — the per-device slot registry.  Carving a slot
+//!   checks the compute ledger (Σ milli ≤ [`DEVICE_MILLI`]) and reserves
+//!   the slot's memory through [`DevicePool`], so memory partitioning is
+//!   enforced by the same admission that rejects over-subscribed
+//!   whole-GPU pipelines.
+//! * [`TimeSlice`] — the per-device scheduler engine loops yield to:
+//!   weighted round-robin over resident slots with a configurable
+//!   quantum, preemption only at step boundaries (a grant wraps exactly
+//!   one engine iteration; an exhausted turn passes to the next waiting
+//!   slot), and per-slot utilization/wait counters.
+//! * [`MilliLedger`] — the packing-side compute ledger shared by the
+//!   stage allocator, the autoscaler, and cluster placement: fractional
+//!   replicas pack onto the least-loaded device *by milli*, so an
+//!   encoder and a vocoder co-reside on one device and the freed
+//!   capacity buys extra replicas for the bottleneck stage.
+//!
+//! Ground truth for the win lives in
+//! [`crate::scheduler::sim::fractional_comparison`]: packed fractional
+//! allocation must beat whole-GPU packing on mean JCT at equal hardware
+//! for every seed.
+
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::device::{DeviceId, DevicePool, Reservation};
+
+/// Compute capacity of one device in milli-GPUs.
+pub const DEVICE_MILLI: u32 = 1000;
+
+/// A fractional slot carved out of one device.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FracSlot {
+    /// Compute share in milli-GPUs (1..=1000; 1000 = the whole device).
+    pub compute_milli: u32,
+    /// Hard memory partition backing the slot (weights + KV).
+    pub mem_bytes: usize,
+}
+
+/// Handle to one resident slot of a device's [`TimeSlice`]/[`DeviceShare`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SlotId(pub usize);
+
+/// Per-slot scheduling counters (monotone; read via
+/// [`TimeSlice::counters`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SliceCounters {
+    /// Step grants issued to the slot.
+    pub grants: u64,
+    /// Turns taken away at a step boundary while the slot still wanted
+    /// the device (quantum exhausted with a competitor waiting).
+    pub preemptions: u64,
+    /// Seconds the slot held the device (utilization numerator).
+    pub held_s: f64,
+    /// Seconds the slot spent blocked waiting for its turn.
+    pub waited_s: f64,
+}
+
+#[derive(Debug)]
+struct SlotState {
+    weight_milli: u32,
+    /// Threads currently blocked in `acquire` for this slot.
+    waiting: usize,
+    live: bool,
+    counters: SliceCounters,
+}
+
+#[derive(Debug)]
+struct Wrr {
+    slots: Vec<SlotState>,
+    /// Slot index whose turn it is.
+    current: usize,
+    /// Seconds left of the current slot's turn.
+    budget_s: f64,
+    /// Whether a grant is outstanding (grants are exclusive).
+    busy: bool,
+}
+
+/// Weighted round-robin time-slice scheduler for one device.
+///
+/// Engine stage loops wrap each `engine.step()` in
+/// [`TimeSlice::acquire`]: the returned [`StepGrant`] is exclusive, so
+/// co-resident stages interleave at step boundaries — never mid-step —
+/// with turn lengths proportional to their compute share.
+#[derive(Debug)]
+pub struct TimeSlice {
+    state: Mutex<Wrr>,
+    turn: Condvar,
+    /// Full turn length for a whole-device (1000 milli) slot, seconds.
+    quantum_s: f64,
+}
+
+impl TimeSlice {
+    pub fn new(quantum_ms: f64) -> Self {
+        Self {
+            state: Mutex::new(Wrr { slots: Vec::new(), current: 0, budget_s: 0.0, busy: false }),
+            turn: Condvar::new(),
+            quantum_s: quantum_ms.max(0.0) / 1e3,
+        }
+    }
+
+    /// Register a resident slot; its turn length is
+    /// `quantum * weight_milli / 1000`.
+    pub fn add_slot(&self, weight_milli: u32) -> SlotId {
+        let mut s = self.state.lock().unwrap();
+        s.slots.push(SlotState {
+            weight_milli: weight_milli.clamp(1, DEVICE_MILLI),
+            waiting: 0,
+            live: true,
+            counters: SliceCounters::default(),
+        });
+        SlotId(s.slots.len() - 1)
+    }
+
+    /// Retire a slot (elastic scale-down): it stops being scheduled and
+    /// its turn passes on.
+    pub fn remove_slot(&self, id: SlotId) {
+        let mut s = self.state.lock().unwrap();
+        if let Some(slot) = s.slots.get_mut(id.0) {
+            slot.live = false;
+        }
+        self.turn.notify_all();
+    }
+
+    /// One slot's turn length in seconds (weighted quantum).
+    pub fn turn_budget_s(&self, weight_milli: u32) -> f64 {
+        self.quantum_s * f64::from(weight_milli.clamp(1, DEVICE_MILLI)) / f64::from(DEVICE_MILLI)
+    }
+
+    /// Threads currently blocked waiting for a turn (test visibility).
+    pub fn waiting(&self) -> usize {
+        self.state.lock().unwrap().slots.iter().map(|s| s.waiting).sum()
+    }
+
+    /// Snapshot one slot's counters.
+    pub fn counters(&self, id: SlotId) -> SliceCounters {
+        let s = self.state.lock().unwrap();
+        s.slots.get(id.0).map(|x| x.counters).unwrap_or_default()
+    }
+
+    /// Block until `id` may run one engine step, then return the
+    /// exclusive grant.  Work-conserving: when the turn-holding slot is
+    /// idle (no thread asking), the turn skips ahead to the next waiting
+    /// slot instead of stalling the device.
+    pub fn acquire(&self, id: SlotId) -> StepGrant<'_> {
+        let t0 = Instant::now();
+        let mut s = self.state.lock().unwrap();
+        s.slots[id.0].waiting += 1;
+        loop {
+            if !s.busy {
+                let cur = &s.slots[s.current];
+                if !cur.live || cur.waiting == 0 {
+                    // Current slot is retired or not asking: pass the
+                    // turn along to the next waiting live slot.
+                    if let Some(next) = next_wanting(&s.slots, s.current) {
+                        s.current = next;
+                        s.budget_s = self.turn_budget_s(s.slots[next].weight_milli);
+                    }
+                }
+                if s.current == id.0 {
+                    s.busy = true;
+                    let slot = &mut s.slots[id.0];
+                    slot.waiting -= 1;
+                    slot.counters.grants += 1;
+                    slot.counters.waited_s += t0.elapsed().as_secs_f64();
+                    return StepGrant { ts: self, id, t0: Instant::now() };
+                }
+            }
+            s = self.turn.wait(s).unwrap();
+        }
+    }
+
+    /// Grant-drop bookkeeping: charge the held time against the turn
+    /// budget; an exhausted turn passes to the next waiting slot (a
+    /// step-boundary preemption when the holder still wants more).
+    fn release(&self, id: SlotId, held: f64) {
+        let mut s = self.state.lock().unwrap();
+        s.busy = false;
+        s.slots[id.0].counters.held_s += held;
+        s.budget_s -= held;
+        if s.budget_s <= 0.0 {
+            if let Some(next) = next_wanting(&s.slots, s.current) {
+                if next != s.current {
+                    if s.slots[s.current].waiting > 0 {
+                        s.slots[s.current].counters.preemptions += 1;
+                    }
+                    s.current = next;
+                }
+                s.budget_s = self.turn_budget_s(s.slots[s.current].weight_milli);
+            }
+        }
+        drop(s);
+        self.turn.notify_all();
+    }
+}
+
+/// Next live slot at or after `from + 1` (wrapping) with a waiter;
+/// `None` when nobody is asking.
+fn next_wanting(slots: &[SlotState], from: usize) -> Option<usize> {
+    let n = slots.len();
+    (1..=n).map(|k| (from + k) % n).find(|&i| slots[i].live && slots[i].waiting > 0)
+}
+
+/// Exclusive permission for one engine step on a shared device.
+pub struct StepGrant<'a> {
+    ts: &'a TimeSlice,
+    id: SlotId,
+    t0: Instant,
+}
+
+impl Drop for StepGrant<'_> {
+    fn drop(&mut self) {
+        self.ts.release(self.id, self.t0.elapsed().as_secs_f64());
+    }
+}
+
+/// Per-device slot registry: carving a slot checks the compute ledger
+/// and hard-partitions the slot's memory through [`DevicePool`].
+#[derive(Debug)]
+pub struct DeviceShare {
+    device: DeviceId,
+    carved_milli: Mutex<u32>,
+}
+
+/// A successfully carved slot: the compute grant plus the memory
+/// partition backing it.
+#[derive(Debug)]
+pub struct CarvedSlot {
+    pub device: DeviceId,
+    pub slot: FracSlot,
+    pub reservation: Reservation,
+}
+
+impl DeviceShare {
+    pub fn new(device: DeviceId) -> Self {
+        Self { device, carved_milli: Mutex::new(0) }
+    }
+
+    pub fn device(&self) -> DeviceId {
+        self.device
+    }
+
+    /// Milli-GPUs already carved out of the device.
+    pub fn carved_milli(&self) -> u32 {
+        *self.carved_milli.lock().unwrap()
+    }
+
+    /// Carve a fractional slot: admit the compute share against the
+    /// 1000-milli ledger and hard-partition `mem_bytes` through `pool`
+    /// (the same admission that rejects over-subscribed whole-GPU
+    /// pipelines).  Either both succeed or nothing is held.
+    pub fn carve(&self, pool: &DevicePool, slot: FracSlot, label: &str) -> Result<CarvedSlot> {
+        if slot.compute_milli == 0 || slot.compute_milli > DEVICE_MILLI {
+            bail!(
+                "slot `{label}`: compute_milli {} out of range 1..={DEVICE_MILLI}",
+                slot.compute_milli
+            );
+        }
+        let mut carved = self.carved_milli.lock().unwrap();
+        if *carved + slot.compute_milli > DEVICE_MILLI {
+            bail!(
+                "device {} compute over-subscribed: {} milli carved + {} requested \
+                 ({label}) > {DEVICE_MILLI}",
+                self.device.0,
+                *carved,
+                slot.compute_milli
+            );
+        }
+        let reservation = pool.reserve(self.device, slot.mem_bytes, label)?;
+        *carved += slot.compute_milli;
+        Ok(CarvedSlot { device: self.device, slot, reservation })
+    }
+
+    /// Return a carved slot: frees the compute share and the memory
+    /// partition.
+    pub fn free(&self, pool: &DevicePool, carved: &CarvedSlot) {
+        let mut c = self.carved_milli.lock().unwrap();
+        *c = c.saturating_sub(carved.slot.compute_milli);
+        pool.release(&carved.reservation);
+    }
+}
+
+/// Packing-side compute ledger: per-device carved milli, shared by the
+/// stage allocator, the autoscaler, and cluster placement.
+#[derive(Debug, Clone)]
+pub struct MilliLedger {
+    used: Vec<u32>,
+}
+
+impl MilliLedger {
+    pub fn new(n_devices: usize) -> Self {
+        Self { used: vec![0; n_devices] }
+    }
+
+    /// Seed the ledger from per-device whole-slot counts (each occupied
+    /// whole slot consumes the full 1000 milli).
+    pub fn from_slots(slots: &[usize]) -> Self {
+        Self { used: slots.iter().map(|&s| (s as u32).saturating_mul(DEVICE_MILLI)).collect() }
+    }
+
+    pub fn used(&self, d: usize) -> u32 {
+        self.used.get(d).copied().unwrap_or(DEVICE_MILLI)
+    }
+
+    pub fn fits(&self, d: usize, milli: u32) -> bool {
+        d < self.used.len() && self.used[d] + milli <= DEVICE_MILLI
+    }
+
+    pub fn commit(&mut self, d: usize, milli: u32) {
+        if let Some(u) = self.used.get_mut(d) {
+            *u += milli;
+        }
+    }
+
+    pub fn release(&mut self, d: usize, milli: u32) {
+        if let Some(u) = self.used.get_mut(d) {
+            *u = u.saturating_sub(milli);
+        }
+    }
+
+    /// Least-loaded device (by carved milli) where `milli` still fits;
+    /// lowest index wins ties for determinism.  `None` when no device
+    /// has room.
+    pub fn pack(&self, milli: u32) -> Option<usize> {
+        (0..self.used.len())
+            .filter(|&d| self.fits(d, milli))
+            .min_by_key(|&d| (self.used[d], d))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn carve_enforces_compute_and_memory() {
+        let pool = DevicePool::new(1, 1000);
+        let share = DeviceShare::new(DeviceId(0));
+        let enc = share
+            .carve(&pool, FracSlot { compute_milli: 300, mem_bytes: 400 }, "encoder")
+            .unwrap();
+        assert_eq!(share.carved_milli(), 300);
+        assert_eq!(pool.used(DeviceId(0)), 400);
+        // Compute over-subscription rejected, memory untouched.
+        let err = share.carve(&pool, FracSlot { compute_milli: 800, mem_bytes: 100 }, "big");
+        assert!(err.is_err());
+        assert_eq!(pool.used(DeviceId(0)), 400);
+        // Memory over-subscription rejected, compute ledger untouched.
+        let err = share.carve(&pool, FracSlot { compute_milli: 100, mem_bytes: 900 }, "fat");
+        assert!(err.is_err());
+        assert_eq!(share.carved_milli(), 300);
+        // Freeing returns both resources.
+        share.free(&pool, &enc);
+        assert_eq!(share.carved_milli(), 0);
+        assert_eq!(pool.used(DeviceId(0)), 0);
+    }
+
+    #[test]
+    fn zero_and_oversized_milli_rejected() {
+        let pool = DevicePool::new(1, 1000);
+        let share = DeviceShare::new(DeviceId(0));
+        assert!(share.carve(&pool, FracSlot { compute_milli: 0, mem_bytes: 1 }, "z").is_err());
+        assert!(share
+            .carve(&pool, FracSlot { compute_milli: DEVICE_MILLI + 1, mem_bytes: 1 }, "o")
+            .is_err());
+        assert_eq!(pool.used(DeviceId(0)), 0);
+    }
+
+    #[test]
+    fn milli_ledger_packs_least_loaded() {
+        let mut l = MilliLedger::new(3);
+        l.commit(0, 800);
+        l.commit(1, 200);
+        // Least-loaded device that fits wins; index breaks ties.
+        assert_eq!(l.pack(300), Some(2));
+        l.commit(2, 200);
+        assert_eq!(l.pack(300), Some(1));
+        // Too big for any device.
+        assert_eq!(l.pack(900), None);
+        l.release(0, 800);
+        assert_eq!(l.pack(900), Some(0));
+        // Seeding from whole-device slot counts marks them full.
+        let l2 = MilliLedger::from_slots(&[1, 0]);
+        assert!(!l2.fits(0, 1));
+        assert!(l2.fits(1, 1000));
+    }
+
+    #[test]
+    fn weighted_turn_budgets_are_proportional() {
+        let ts = TimeSlice::new(4.0);
+        let b750 = ts.turn_budget_s(750);
+        let b250 = ts.turn_budget_s(250);
+        assert!((b750 / b250 - 3.0).abs() < 1e-9);
+        assert!((ts.turn_budget_s(DEVICE_MILLI) - 4.0e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_slot_never_waits_on_itself() {
+        let ts = TimeSlice::new(1.0);
+        let a = ts.add_slot(1000);
+        for _ in 0..5 {
+            let _g = ts.acquire(a);
+        }
+        let c = ts.counters(a);
+        assert_eq!(c.grants, 5);
+        assert_eq!(c.preemptions, 0);
+    }
+
+    #[test]
+    fn turn_passes_to_waiter_at_step_boundary() {
+        // Quantum 0: every step boundary is a potential preemption point.
+        let ts = Arc::new(TimeSlice::new(0.0));
+        let a = ts.add_slot(500);
+        let b = ts.add_slot(500);
+        let grant_a = ts.acquire(a);
+        // A competitor blocks for its turn while A holds the device.
+        let ts2 = ts.clone();
+        let waiter = std::thread::spawn(move || {
+            let _g = ts2.acquire(b);
+        });
+        while ts.waiting() == 0 {
+            std::thread::yield_now();
+        }
+        // Releasing at the step boundary hands the turn to B and counts
+        // a preemption against... nobody: A was not asking again.
+        drop(grant_a);
+        waiter.join().unwrap();
+        assert_eq!(ts.counters(a).grants, 1);
+        assert_eq!(ts.counters(b).grants, 1);
+        assert!(ts.counters(b).waited_s >= 0.0);
+    }
+
+    #[test]
+    fn co_resident_slots_interleave_to_completion() {
+        // Two threads hammer the same device; both must finish all their
+        // steps (no starvation, no deadlock) and the device is exclusive
+        // per grant.
+        let ts = Arc::new(TimeSlice::new(0.01));
+        let a = ts.add_slot(750);
+        let b = ts.add_slot(250);
+        let excl = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let mut joins = Vec::new();
+        for slot in [a, b] {
+            let ts = ts.clone();
+            let excl = excl.clone();
+            joins.push(std::thread::spawn(move || {
+                for _ in 0..50 {
+                    let _g = ts.acquire(slot);
+                    assert!(!excl.swap(true, std::sync::atomic::Ordering::SeqCst));
+                    std::thread::yield_now();
+                    excl.store(false, std::sync::atomic::Ordering::SeqCst);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!(ts.counters(a).grants, 50);
+        assert_eq!(ts.counters(b).grants, 50);
+    }
+
+    #[test]
+    fn retired_slot_releases_the_turn() {
+        let ts = Arc::new(TimeSlice::new(0.0));
+        let a = ts.add_slot(500);
+        let b = ts.add_slot(500);
+        {
+            let _g = ts.acquire(a);
+        }
+        ts.remove_slot(a);
+        // B acquires immediately even though the rotation points at the
+        // retired slot.
+        let _g = ts.acquire(b);
+        assert_eq!(ts.counters(b).grants, 1);
+    }
+}

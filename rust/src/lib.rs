@@ -54,6 +54,7 @@ pub mod config;
 pub mod connector;
 pub mod device;
 pub mod engine;
+pub mod gpu_share;
 pub mod json;
 pub mod kv_cache;
 pub mod kv_transfer;

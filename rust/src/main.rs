@@ -26,13 +26,13 @@ USAGE:
                    (the global prefix cache and the encoder-output cache are ON
                     by default; these knobs disable or retune them — the `stats`
                     op reports hit rates live)
-  omni-serve run   --pipeline <name> --dataset <librispeech|food101|ucf101|seedtts|vbench|bursty|prefill-heavy|shared-prefix>
+  omni-serve run   --pipeline <name> --dataset <librispeech|food101|ucf101|seedtts|vbench|bursty|prefill-heavy|shared-prefix|branching>
                    [--n 8] [--rate 0] [--seed 1] [--no-streaming] [--baseline]
                    [--no-prefix-cache] [--eviction lru|hit_aware] [--encoder-cache N]
                    [--deadline S]   (cancel each request end-to-end S seconds
                                      after submission; the summary reports
                                      cancelled counts + freed KV)
-  omni-serve bench [--trace bursty|librispeech|seedtts|prefill-heavy|overload-storm|shared-prefix|cross-node]
+  omni-serve bench [--trace bursty|librispeech|seedtts|prefill-heavy|overload-storm|shared-prefix|cross-node|fractional]
                    [--n 48] [--budget 4] [--seeds 32]
                    (artifact-free: autoscaled vs static replica splits on the AR-stage
                     model; `prefill-heavy` runs the P/D-disaggregation comparison —
@@ -45,8 +45,13 @@ USAGE:
                     both TTFT and JCT for every seed; `cross-node` runs the
                     cluster-placement comparison — transfer-aware vs round-robin
                     replica→node assignment at equal hardware — and exits non-zero
-                    unless transfer-aware wins mean JCT for every seed — all four
-                    are CI smoke gates)
+                    unless transfer-aware wins mean JCT for every seed;
+                    `fractional` runs the fractional-GPU comparison — encoder +
+                    vocoder carved onto one shared device buying a third DiT
+                    replica vs whole-device packing on the branching fan-out
+                    trace — and exits non-zero unless the packed-fractional
+                    layout wins mean JCT for every seed — all five are CI smoke
+                    gates)
   omni-serve agent --node-id <id> --listen <host:port> [--gpus 2] [--device-bytes N]
                    [--heartbeat 0.25] [--read-timeout 5.0]
                    (multi-node mode: host this machine's share of a pipeline —
@@ -56,9 +61,9 @@ USAGE:
   omni-serve graph [--pipeline <name>] [--list]
   omni-serve help
 
-Pipelines: qwen2.5-omni, qwen3-omni, qwen3-omni-rep2, qwen3-omni-epd, bagel-t2i,
-           bagel-i2i, mimo-audio, mimo-audio-compiled, qwen-image,
-           qwen-image-edit, wan22-t2v, wan22-i2v
+Pipelines: qwen2.5-omni, qwen3-omni, qwen3-omni-rep2, qwen3-omni-epd,
+           qwen3-omni-branching, bagel-t2i, bagel-i2i, mimo-audio,
+           mimo-audio-compiled, qwen-image, qwen-image-edit, wan22-t2v, wan22-i2v
 ";
 
 fn main() {
@@ -172,6 +177,7 @@ fn real_main() -> Result<()> {
                     datasets::prefill_heavy(seed, n, if rate > 0.0 { rate } else { 56.0 })
                 }
                 "shared-prefix" => datasets::shared_prefix(seed, n, rate, 0.75),
+                "branching" => datasets::branching_fanout(seed, n, rate, 20),
                 other => bail!("unknown dataset `{other}`"),
             };
             let audio_stage: Option<&'static str> = if config.stage("talker").is_some() {
@@ -381,6 +387,49 @@ fn real_main() -> Result<()> {
                 );
                 return Ok(());
             }
+            if trace == "fractional" {
+                // CI smoke contract: at equal hardware (6 devices either
+                // way) the packed-fractional layout — encoder + vocoder
+                // co-resident on one shared device, third DiT replica on
+                // the freed one — must beat whole-device packing on mean
+                // JCT for EVERY seed, or this command exits non-zero.
+                let seeds = args.flag_usize("seeds", 32)? as u64;
+                println!(
+                    "trace=branching-fanout-sim seeds={seeds} \
+                     (packed-fractional vs whole-device layout, 6 devices)"
+                );
+                let mut worst = f64::INFINITY;
+                let mut sum = 0.0;
+                for s in 1..=seeds {
+                    let c = omni_serve::scheduler::sim::fractional_comparison(s);
+                    anyhow::ensure!(
+                        c.fractional.jct.len() == c.whole.jct.len(),
+                        "seed {s}: incomplete run ({} vs {} completions)",
+                        c.fractional.jct.len(),
+                        c.whole.jct.len(),
+                    );
+                    let m = c.jct_margin();
+                    anyhow::ensure!(
+                        m > 0.0,
+                        "fractional packing lost to whole-device packing at seed {s}: \
+                         JCT {} vs {}",
+                        fmt::dur(c.fractional.mean_jct()),
+                        fmt::dur(c.whole.mean_jct()),
+                    );
+                    sum += m;
+                    worst = worst.min(m);
+                }
+                let c = omni_serve::scheduler::sim::fractional_comparison(1);
+                println!(
+                    "  JCT margin mean {:+.1}% worst {:+.1}% | seed 1: fractional {} vs whole {}",
+                    100.0 * sum / seeds as f64,
+                    100.0 * worst,
+                    fmt::dur(c.fractional.mean_jct()),
+                    fmt::dur(c.whole.mean_jct()),
+                );
+                println!("fractional < whole on mean JCT confirmed over {seeds} seeds");
+                return Ok(());
+            }
             if trace == "prefill-heavy" {
                 let n = args.flag_usize("n", 64)?;
                 let wl = datasets::prefill_heavy(seed, n, 56.0);
@@ -442,7 +491,7 @@ fn real_main() -> Result<()> {
                     bail!(
                         "unknown trace `{other}` \
                          (bursty|librispeech|seedtts|prefill-heavy|overload-storm|\
-                         shared-prefix|cross-node)"
+                         shared-prefix|cross-node|fractional)"
                     )
                 }
             };

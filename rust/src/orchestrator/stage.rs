@@ -76,6 +76,12 @@ pub struct StageSpec {
     pub front_rx: Option<mpsc::Receiver<Request>>,
     /// Exit stage only: completed-item sink.
     pub sink: Option<mpsc::Sender<StageItem>>,
+    /// Fractional GPU sharing: the replica's slot on its device's
+    /// time-slice scheduler.  When set, every engine step runs under an
+    /// exclusive [`crate::gpu_share::StepGrant`], so co-resident slots
+    /// interleave at step boundaries (`None` = whole device, no
+    /// slicing).
+    pub share: Option<(Arc<crate::gpu_share::TimeSlice>, crate::gpu_share::SlotId)>,
     /// Cancelled-request tombstones (end-to-end cancellation): items of
     /// tombstoned requests are dropped at every pull, and on each
     /// generation change the loop sweeps its admission queue and engine.
@@ -256,8 +262,26 @@ fn build_engine(spec: &StageSpec) -> Result<Engine> {
     })
 }
 
+/// Removes the replica's time-slice slot when the stage thread exits
+/// (any path: drain, retire, failure), so a retired fractional replica
+/// stops holding WRR turns on its device.
+struct ShareSlotGuard {
+    ts: Arc<crate::gpu_share::TimeSlice>,
+    id: crate::gpu_share::SlotId,
+}
+
+impl Drop for ShareSlotGuard {
+    fn drop(&mut self) {
+        self.ts.remove_slot(self.id);
+    }
+}
+
 fn run(mut spec: StageSpec) -> Result<StageSummary> {
     let stage_name: &'static str = Box::leak(spec.cfg.name.clone().into_boxed_str());
+    let _share_guard = spec
+        .share
+        .clone()
+        .map(|(ts, id)| ShareSlotGuard { ts, id });
     let engine_result = build_engine(&spec);
     // Rendezvous even on failure so the orchestrator never deadlocks.
     spec.ready.wait();
@@ -482,9 +506,16 @@ fn run(mut spec: StageSpec) -> Result<StageSummary> {
             });
         }
 
-        // 4) One engine iteration.
+        // 4) One engine iteration.  On a shared device the step runs
+        // under an exclusive time-slice grant: the thread blocks until
+        // its slot's turn, and the grant drop charges the held time
+        // against the slot's weighted quantum (preemption happens here,
+        // at the step boundary — never mid-step).
         if !engine.idle() {
-            let items = engine.step()?;
+            let items = {
+                let _grant = spec.share.as_ref().map(|(ts, id)| ts.acquire(*id));
+                engine.step()?
+            };
             worked = true;
             for item in items {
                 let rid = item.req_id;

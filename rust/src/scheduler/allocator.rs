@@ -39,6 +39,9 @@ pub struct StageAssignment {
     /// Device group per replica; `replica_devices[0] == devices`, every
     /// group has the same TP degree.
     pub replica_devices: Vec<Vec<DeviceId>>,
+    /// Compute share per replica in milli-GPUs (1000 = a whole device;
+    /// less = a fractional slot under [`crate::gpu_share`]).
+    pub compute_milli: u32,
     /// Resolved batching policy (never [`SchedPolicyKind::Auto`]).
     pub policy: SchedPolicyKind,
     pub max_batch: usize,
@@ -119,6 +122,21 @@ impl AllocationPlan {
         load
     }
 
+    /// Per-device compute-milli ledger seeded from every planned
+    /// replica — the serving session and autoscaler start from this to
+    /// pack further fractional replicas into spare slivers.
+    pub fn device_milli(&self, n_devices: usize) -> crate::gpu_share::MilliLedger {
+        let mut m = crate::gpu_share::MilliLedger::new(n_devices);
+        for a in &self.assignments {
+            for group in &a.replica_devices {
+                for g in group {
+                    m.commit(g.0, a.compute_milli);
+                }
+            }
+        }
+        m
+    }
+
     /// Total device slots this plan occupies (Σ replicas × TP degree) —
     /// what the autoscaler's GPU budget counts.
     pub fn device_slots(&self) -> usize {
@@ -163,9 +181,14 @@ impl<'a> StageAllocator<'a> {
         // every stage's configured (replica 0) group so extra replicas
         // route around the whole pipeline's baseline placement.
         let mut dev_load = vec![0usize; self.config.n_devices];
+        // Compute-share pressure for fractional replicas: milli-GPUs
+        // carved per device, seeded with every stage's configured
+        // placement (whole stages charge the full 1000 per group member).
+        let mut milli = crate::gpu_share::MilliLedger::new(self.config.n_devices);
         for s in &self.config.stages {
             for &d in &s.devices {
                 dev_load[d] += 1;
+                milli.commit(d, s.compute_milli);
             }
         }
         for s in &self.config.stages {
@@ -225,8 +248,18 @@ impl<'a> StageAllocator<'a> {
             let mut replica_devices = Vec::with_capacity(s.replicas);
             replica_devices.push(devices.clone());
             for _ in 1..s.replicas {
-                let group = pack_group(&dev_load, devices.len());
+                // Fractional replicas pack by spare milli first (filling
+                // partially-carved devices), falling back to whole-slot
+                // packing when no device has compute headroom left.
+                let fractional = s.compute_milli < crate::gpu_share::DEVICE_MILLI;
+                let group = match milli.pack(s.compute_milli) {
+                    Some(d) if fractional => vec![DeviceId(d)],
+                    _ => pack_group(&dev_load, devices.len()),
+                };
                 commit_group(&mut dev_load, &group);
+                for g in &group {
+                    milli.commit(g.0, s.compute_milli);
+                }
                 replica_devices.push(group);
             }
             for group in &replica_devices {
@@ -240,6 +273,7 @@ impl<'a> StageAllocator<'a> {
                 devices,
                 replicas: s.replicas,
                 replica_devices,
+                compute_milli: s.compute_milli,
                 policy,
                 max_batch: s.max_batch,
                 max_batch_tokens: s.sched.max_batch_tokens,
@@ -345,6 +379,39 @@ mod tests {
         }
         // First packed replica prefers the empty devices {2,3}.
         assert_eq!(thinker.replica_devices[1], vec![DeviceId(2), DeviceId(3)]);
+    }
+
+    #[test]
+    fn fractional_replicas_pack_by_spare_milli() {
+        // Branching preset seed: dev0 = encoder 300 + vocoder 300 (600
+        // milli), dev1 = thinker + talker (whole), dev2 = imagegen
+        // (whole).  A second encoder replica fits in dev0's headroom, so
+        // it co-resides there — whole-slot packing would have sent it to
+        // the least-loaded dev2 and wasted a whole device.
+        let mut p = presets::qwen3_omni_branching();
+        p.stages.iter_mut().find(|s| s.name == "encoder").unwrap().replicas = 2;
+        let plan = StageAllocator::new(&p).plan(None).unwrap();
+        let enc = plan.by_name("encoder").unwrap();
+        assert_eq!(enc.compute_milli, 300);
+        assert_eq!(enc.replica_devices[0], vec![DeviceId(0)]);
+        assert_eq!(enc.replica_devices[1], vec![DeviceId(0)], "packs into spare milli");
+        // Whole stages carry the full share in their assignment.
+        assert_eq!(plan.by_name("thinker").unwrap().compute_milli, 1000);
+    }
+
+    #[test]
+    fn fractional_replicas_fall_back_to_whole_packing_when_full() {
+        // Carve the headroom away: a 900-milli encoder leaves no device
+        // with room for a second 900 slot, so the extra replica falls
+        // back to least-loaded whole-slot packing (dev2 holds only the
+        // imagegen placement).
+        let mut p = presets::qwen3_omni_branching();
+        let enc = p.stages.iter_mut().find(|s| s.name == "encoder").unwrap();
+        enc.compute_milli = 700;
+        enc.replicas = 2;
+        let plan = StageAllocator::new(&p).plan(None).unwrap();
+        let enc = plan.by_name("encoder").unwrap();
+        assert_eq!(enc.replica_devices[1], vec![DeviceId(2)], "no spare milli anywhere");
     }
 
     #[test]

@@ -10,7 +10,10 @@
 //!   ([`pack_group`]), pass memory admission on the session's
 //!   [`crate::device::DevicePool`], wire the replica into every routed
 //!   edge, and spawn its engine thread.  Gated by the per-stage
-//!   `max_replicas` cap and the global `gpu_budget` in device slots.
+//!   `max_replicas` cap and the global `gpu_budget`, counted in
+//!   milli-GPUs so fractional replicas ([`crate::gpu_share`]) scale by
+//!   their share first — spare slivers of carved devices are spent
+//!   before a whole fresh device is.
 //! * **scale down** — mean queue depth < `scale_down_queue` and an idle
 //!   replica exists: *drain before retire*.  The victim's incoming edges
 //!   stop routing new requests to it
@@ -29,6 +32,7 @@ use std::time::Duration;
 use anyhow::Result;
 
 use crate::config::{AutoscalerConfig, RoutingKind};
+use crate::gpu_share::DEVICE_MILLI;
 use crate::metrics::Event;
 use crate::scheduler::allocator::{commit_group, pack_group, release_group};
 
@@ -72,7 +76,7 @@ pub(crate) fn tick(inner: &Arc<SessionInner>, cfg: &AutoscalerConfig) -> Result<
     let mut stages = inner.stages.lock().unwrap();
 
     // ---- 1. Progress draining replicas (drain → retire → reap). ----
-    for st in stages.iter_mut() {
+    for (si, st) in stages.iter_mut().enumerate() {
         for r in st.replicas.iter() {
             if r.draining && !r.retire.load(Ordering::SeqCst) {
                 let quiesced = r
@@ -104,6 +108,13 @@ pub(crate) fn tick(inner: &Arc<SessionInner>, cfg: &AutoscalerConfig) -> Result<
                 inner.pool.release(res);
             }
             release_group(&mut inner.dev_load.lock().unwrap(), &r.devices);
+            {
+                let cm = inner.plan.assignment(si).compute_milli;
+                let mut m = inner.dev_milli.lock().unwrap();
+                for g in &r.devices {
+                    m.release(g.0, cm);
+                }
+            }
             match r.join.join() {
                 Ok(Ok(summary)) => inner.retired.lock().unwrap().push(summary),
                 Ok(Err(e)) => inner.record_error(e),
@@ -113,11 +124,17 @@ pub(crate) fn tick(inner: &Arc<SessionInner>, cfg: &AutoscalerConfig) -> Result<
     }
 
     // ---- 2. Scale decisions (at most one per stage per tick). ----
-    // Device slots currently held by every replica, live or draining —
-    // a draining replica's devices free only when it is reaped.
-    let mut slots_used: usize = stages
+    // Compute currently held by every replica, live or draining (a
+    // draining replica's devices free only when it is reaped), counted
+    // in milli-GPUs: a fractional replica charges only its share, so
+    // fractions scale up before whole devices are spent.
+    let mut milli_used: u64 = stages
         .iter()
-        .map(|st| st.replicas.iter().map(|r| r.devices.len()).sum::<usize>())
+        .enumerate()
+        .map(|(si, st)| {
+            let m = inner.plan.assignment(si).compute_milli as u64;
+            st.replicas.iter().map(|r| r.devices.len() as u64 * m).sum::<u64>()
+        })
         .sum();
 
     for si in 0..stages.len() {
@@ -171,13 +188,25 @@ pub(crate) fn tick(inner: &Arc<SessionInner>, cfg: &AutoscalerConfig) -> Result<
             && pressure >= cfg.scale_up_queue
             && scalable(inner, &stage_name)
         {
-            let tp = inner.plan.assignment(si).devices.len().max(1);
-            if cfg.gpu_budget > 0 && slots_used + tp > cfg.gpu_budget {
+            let a = inner.plan.assignment(si);
+            let tp = a.devices.len().max(1);
+            let frac = a.compute_milli < DEVICE_MILLI;
+            let need = tp as u64 * a.compute_milli as u64;
+            if cfg.gpu_budget > 0
+                && milli_used + need > cfg.gpu_budget as u64 * DEVICE_MILLI as u64
+            {
                 continue;
             }
+            // Fraction-first packing: a fractional replica fills spare
+            // milli on an already-carved device before whole-slot
+            // packing claims a fresh one.
             let group = {
                 let load = inner.dev_load.lock().unwrap();
-                pack_group(&load, tp)
+                let milli = inner.dev_milli.lock().unwrap();
+                match milli.pack(a.compute_milli) {
+                    Some(d) if frac => vec![crate::device::DeviceId(d)],
+                    _ => pack_group(&load, tp),
+                }
             };
             let model = inner.artifacts.model(&inner.graph.stage(si).model)?;
             let ord = st.next_ord;
@@ -190,6 +219,12 @@ pub(crate) fn tick(inner: &Arc<SessionInner>, cfg: &AutoscalerConfig) -> Result<
                 continue;
             };
             commit_group(&mut inner.dev_load.lock().unwrap(), &group);
+            {
+                let mut m = inner.dev_milli.lock().unwrap();
+                for g in &group {
+                    m.commit(g.0, a.compute_milli);
+                }
+            }
             let reservation_copy = reservations.clone();
             // Size-1 barrier: the replica thread's readiness rendezvous
             // returns immediately, so the control loop never holds the
@@ -201,7 +236,7 @@ pub(crate) fn tick(inner: &Arc<SessionInner>, cfg: &AutoscalerConfig) -> Result<
                     st.next_ord += 1;
                     st.replicas.push(h);
                     st.last_scale_t = now;
-                    slots_used += tp;
+                    milli_used += need;
                     inner.recorder.emit(Event::Scale {
                         stage: stage_name,
                         t: now,
@@ -214,6 +249,10 @@ pub(crate) fn tick(inner: &Arc<SessionInner>, cfg: &AutoscalerConfig) -> Result<
                         inner.pool.release(res);
                     }
                     release_group(&mut inner.dev_load.lock().unwrap(), &group);
+                    let mut m = inner.dev_milli.lock().unwrap();
+                    for g in &group {
+                        m.release(g.0, a.compute_milli);
+                    }
                     eprintln!("autoscaler: spawning `{label}` failed: {e:#}");
                 }
             }

@@ -175,6 +175,9 @@ pub(crate) struct ReplicaHandle {
     pub(crate) out_edges: Vec<(usize, u64)>,
     /// Entry replicas only: uid of the front sender registered for it.
     pub(crate) front_uid: Option<u64>,
+    /// Time-slice slot on the replica's (single) device, when the
+    /// session runs with fractional sharing — read for slice counters.
+    pub(crate) share: Option<(Arc<crate::gpu_share::TimeSlice>, crate::gpu_share::SlotId)>,
     pub(crate) draining: bool,
 }
 
@@ -201,6 +204,11 @@ pub(crate) struct ReqStream {
     pub(crate) audio: bool,
     pub(crate) submitted_t: f64,
     pub(crate) usage: Usage,
+    /// Exit stages that have not yet delivered their final item for this
+    /// request.  Branching fan-out graphs have several exits; the
+    /// terminal `Done` resolves only when the LAST branch finishes
+    /// (single-exit graphs start at 1, preserving the old semantics).
+    pub(crate) exits_left: usize,
 }
 
 /// Shared interior of a session (stage threads, the collector, the
@@ -245,6 +253,14 @@ pub(crate) struct SessionInner {
     pub(crate) sink_tx: Mutex<Option<mpsc::Sender<StageItem>>>,
     pub(crate) pool: DevicePool,
     pub(crate) dev_load: Mutex<Vec<usize>>,
+    /// Per-device carved-compute ledger (milli-GPUs), seeded from the
+    /// plan; the autoscaler packs fractional replicas through it.
+    pub(crate) dev_milli: Mutex<crate::gpu_share::MilliLedger>,
+    /// Per-device time-slice schedulers — one per device when the
+    /// pipeline has a `share` block, empty otherwise (whole-GPU, no
+    /// slicing).  Single-device replicas register a slot weighted by
+    /// their `compute_milli` and wrap every engine step in a grant.
+    pub(crate) shares: Vec<Arc<crate::gpu_share::TimeSlice>>,
     pub(crate) next_uid: AtomicU64,
     /// Summaries of replicas retired mid-run.
     pub(crate) retired: Mutex<Vec<StageSummary>>,
@@ -325,11 +341,19 @@ impl SessionInner {
 
     /// Stage-loop hook: a stage finished producing for a request —
     /// forward a `StageDone` marker to its (streaming) delta channel.
+    /// On a branching graph (several exit stages), an exit's finish also
+    /// emits `BranchDone`, so clients see each branch land while the
+    /// terminal `Done` waits for the rest.
     pub(crate) fn stage_done_delta(&self, req: u64, stage: &'static str, t: f64) {
+        let branch_exit = self.graph.exits.len() > 1
+            && self.graph.exits.iter().any(|&i| self.graph.stage(i).name == stage);
         let streams = self.streams.lock().unwrap();
         if let Some(st) = streams.get(&req) {
             if st.stream {
                 let _ = st.tx.send(OutputDelta::StageDone { stage, t });
+                if branch_exit {
+                    let _ = st.tx.send(OutputDelta::BranchDone { branch: stage, t });
+                }
             }
         }
     }
@@ -361,6 +385,12 @@ impl SessionInner {
             }
         }
         if item.finished {
+            // One branch exit delivered its last item; the request
+            // resolves only when every exit has.
+            st.exits_left = st.exits_left.saturating_sub(1);
+            if st.exits_left > 0 {
+                return;
+            }
             let st = streams.remove(&item.req_id).expect("entry held above");
             drop(streams);
             if let Some(a) = &self.admission {
@@ -467,6 +497,9 @@ pub struct StageLiveStats {
     /// Cross-request cache counters summed across live replicas (zeros
     /// for stages that cache nothing).
     pub cache: crate::metrics::CacheCounters,
+    /// Time-slice counters summed across live replicas (zeros when the
+    /// session runs without fractional sharing).
+    pub slice: crate::gpu_share::SliceCounters,
 }
 
 /// A persistent serving runtime over one pipeline.
@@ -543,6 +576,13 @@ impl ServingSession {
         let (sink_tx, sink_rx) = mpsc::channel::<StageItem>();
         let pool = DevicePool::new(graph.config.n_devices, graph.config.device_bytes);
         let dev_load = plan.device_load(graph.config.n_devices);
+        let dev_milli = plan.device_milli(graph.config.n_devices);
+        let shares: Vec<Arc<crate::gpu_share::TimeSlice>> = match &graph.config.share {
+            Some(sh) => (0..graph.config.n_devices)
+                .map(|_| Arc::new(crate::gpu_share::TimeSlice::new(sh.quantum_ms)))
+                .collect(),
+            None => Vec::new(),
+        };
         let inner = Arc::new(SessionInner {
             graph,
             plan,
@@ -567,6 +607,8 @@ impl ServingSession {
             sink_tx: Mutex::new(Some(sink_tx)),
             pool,
             dev_load: Mutex::new(dev_load),
+            dev_milli: Mutex::new(dev_milli),
+            shares,
             next_uid: AtomicU64::new(0),
             retired: Mutex::new(Vec::new()),
             first_error: Mutex::new(None),
@@ -740,6 +782,7 @@ impl ServingSession {
                 audio: req.max_audio_tokens > 0,
                 submitted_t: now,
                 usage: Usage::default(),
+                exits_left: self.inner.graph.exits.len().max(1),
             },
         );
         if let Some(d) = deadline_s {
@@ -815,6 +858,7 @@ impl ServingSession {
                     queued: 0,
                     busy: 0,
                     cache: Default::default(),
+                    slice: Default::default(),
                 };
                 for r in &st.replicas {
                     if r.draining {
@@ -827,6 +871,13 @@ impl ServingSession {
                         out.busy += 1;
                     }
                     out.cache.absorb(&r.slot.cache());
+                    if let Some((ts, id)) = &r.share {
+                        let c = ts.counters(*id);
+                        out.slice.grants += c.grants;
+                        out.slice.preemptions += c.preemptions;
+                        out.slice.held_s += c.held_s;
+                        out.slice.waited_s += c.waited_s;
+                    }
                 }
                 out
             })
@@ -1000,6 +1051,17 @@ pub(crate) fn spawn_replica(
 
     let retire = Arc::new(AtomicBool::new(false));
     let slot = Arc::new(ReplicaSlot::default());
+    // Fractional sharing: a single-device replica registers a slot on
+    // its device's time-slice scheduler, weighted by its compute share
+    // (whole-device residents weigh 1000 — the WRR is work-conserving,
+    // so a lone slot never waits).  TP replicas span devices and are
+    // not sliced.
+    let share = match devices.as_slice() {
+        [d] => inner.shares.get(d.0).map(|ts| {
+            (ts.clone(), ts.add_slot(inner.plan.assignment(stage_idx).compute_milli))
+        }),
+        _ => None,
+    };
     // Stage-done deltas flow through a hook so the stage loop stays
     // decoupled from the session internals.
     let on_stage_done: stage::StageDoneHook = {
@@ -1024,6 +1086,7 @@ pub(crate) fn spawn_replica(
         failed: inner.failed.clone(),
         front_rx,
         sink,
+        share: share.clone(),
         cancels: inner.cancels.clone(),
         tenant_weights: inner
             .admission
@@ -1054,6 +1117,7 @@ pub(crate) fn spawn_replica(
         in_edges,
         out_edges,
         front_uid,
+        share,
         draining: false,
     })
 }

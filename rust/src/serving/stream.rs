@@ -62,6 +62,12 @@ pub enum OutputDelta {
     ImageFrame { tokens: usize, t: f64 },
     /// A (possibly interior) stage finished producing for this request.
     StageDone { stage: &'static str, t: f64 },
+    /// One branch of a fan-out graph delivered its last output for this
+    /// request (`branch` is the branch's exit stage).  Only emitted on
+    /// multi-exit graphs; the terminal `Done` still waits for EVERY
+    /// branch, so clients can act on a finished branch (e.g. show the
+    /// image) while the other is still speaking.
+    BranchDone { branch: &'static str, t: f64 },
     /// Terminal event: the request completed (`cancelled: false`) or was
     /// cancelled/deadline-expired (`cancelled: true`).  Always the last
     /// delta on the stream.

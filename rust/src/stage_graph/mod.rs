@@ -14,6 +14,24 @@ use anyhow::{bail, Result};
 
 use crate::config::{EdgeConfig, PipelineConfig, StageConfig, StageRole};
 
+/// One branch of a fan-out stage: the sub-DAG hanging off a single
+/// out-neighbor of a stage with out-degree ≥ 2 (e.g. a thinker fanning
+/// out to a parallel image arm and a speech arm that share its prefill).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BranchInfo {
+    /// The fan-out stage the branches split from.
+    pub root: usize,
+    /// First stage of the branch (`root`'s out-neighbor).
+    pub head: usize,
+    /// Stages private to this branch, in topological order.  A full
+    /// join — a stage every branch reaches — belongs to no branch and
+    /// is excluded.
+    pub stages: Vec<usize>,
+    /// Exit stages private to this branch (empty when the branches
+    /// re-join before exiting — completion is then the join's exit).
+    pub exits: Vec<usize>,
+}
+
 /// A validated stage graph: topology checked, transfers resolvable.
 #[derive(Debug, Clone)]
 pub struct StageGraph {
@@ -172,6 +190,51 @@ impl StageGraph {
             bail!("stage graph `{}` has a cycle", config.name);
         }
 
+        // Branching fan-out / fan-in validation (any-to-any fan-out: one
+        // prompt forks into parallel output arms).  For every stage that
+        // fans out, each downstream stage must sit on exactly ONE branch
+        // (branch-private) or on ALL of them (a full join).  A partial
+        // join — fed by some but not all branches — has no completion
+        // semantics (whose branch-done would it ride?), so it is
+        // rejected at build time.
+        let reach = |start: usize| -> Vec<bool> {
+            let mut seen = vec![false; n];
+            let mut stack = vec![start];
+            while let Some(u) = stack.pop() {
+                if seen[u] {
+                    continue;
+                }
+                seen[u] = true;
+                stack.extend(adj[u].iter().copied());
+            }
+            seen
+        };
+        for root in 0..n {
+            let mut heads = adj[root].clone();
+            heads.sort_unstable();
+            heads.dedup();
+            if heads.len() < 2 {
+                continue;
+            }
+            let reaches: Vec<Vec<bool>> = heads.iter().map(|&h| reach(h)).collect();
+            for i in 0..n {
+                if i == root {
+                    continue;
+                }
+                let cnt = reaches.iter().filter(|r| r[i]).count();
+                if cnt > 1 && cnt < heads.len() {
+                    bail!(
+                        "stage graph `{}`: stage `{}` joins {cnt} of {} branches fanned \
+                         out from `{}` — a fan-in must merge ALL branches (or none)",
+                        config.name,
+                        config.stages[i].name,
+                        heads.len(),
+                        config.stages[root].name
+                    );
+                }
+            }
+        }
+
         // Entry/exits.
         let entries: Vec<usize> = (0..n)
             .filter(|&i| !config.edges.iter().any(|e| idx_of(&e.to) == i))
@@ -212,6 +275,59 @@ impl StageGraph {
     pub fn outgoing(&self, i: usize) -> Vec<&EdgeConfig> {
         let name = &self.config.stages[i].name;
         self.config.edges.iter().filter(|e| &e.from == name).collect()
+    }
+
+    /// Stages reachable from `start` by following edges (incl. `start`).
+    fn reachable_from(&self, start: usize) -> Vec<bool> {
+        let mut seen = vec![false; self.n_stages()];
+        let mut stack = vec![start];
+        while let Some(u) = stack.pop() {
+            if seen[u] {
+                continue;
+            }
+            seen[u] = true;
+            for e in self.outgoing(u) {
+                stack.push(self.stage_index(&e.to).expect("validated edge"));
+            }
+        }
+        seen
+    }
+
+    /// Branches of every fan-out stage: one [`BranchInfo`] per distinct
+    /// out-neighbor of each stage with out-degree ≥ 2.  [`Self::build`]
+    /// has already verified every downstream stage is branch-private or
+    /// a full join, so membership here is unambiguous.
+    pub fn branches(&self) -> Vec<BranchInfo> {
+        let mut out = Vec::new();
+        for root in 0..self.n_stages() {
+            let mut heads: Vec<usize> = self
+                .outgoing(root)
+                .iter()
+                .filter_map(|e| self.stage_index(&e.to))
+                .collect();
+            heads.sort_unstable();
+            heads.dedup();
+            if heads.len() < 2 {
+                continue;
+            }
+            let reaches: Vec<Vec<bool>> =
+                heads.iter().map(|&h| self.reachable_from(h)).collect();
+            for (bi, &head) in heads.iter().enumerate() {
+                let stages: Vec<usize> = self
+                    .topo
+                    .iter()
+                    .copied()
+                    .filter(|&i| {
+                        reaches[bi][i]
+                            && reaches.iter().enumerate().all(|(o, r)| o == bi || !r[i])
+                    })
+                    .collect();
+                let exits =
+                    stages.iter().copied().filter(|i| self.exits.contains(i)).collect();
+                out.push(BranchInfo { root, head, stages, exits });
+            }
+        }
+        out
     }
 
     /// Device-memory admission: reserve weights for every engine replica
@@ -413,6 +529,70 @@ mod tests {
         // prefill now has no outgoing edge at all.
         let err = StageGraph::build(p, &reg()).unwrap_err();
         assert!(format!("{err:#}").contains("no outgoing edge"), "{err:#}");
+    }
+
+    #[test]
+    fn branching_preset_fans_out_into_two_branches() {
+        let g = StageGraph::build(presets::qwen3_omni_branching(), &reg()).unwrap();
+        let idx = |n: &str| g.stage_index(n).unwrap();
+        assert_eq!(g.entry, idx("encoder"));
+        let mut exits = g.exits.clone();
+        exits.sort_unstable();
+        let mut want = vec![idx("imagegen"), idx("vocoder")];
+        want.sort_unstable();
+        assert_eq!(exits, want, "both arms terminate the request");
+        let branches = g.branches();
+        assert_eq!(branches.len(), 2);
+        for b in &branches {
+            assert_eq!(b.root, idx("thinker"), "the thinker is the fan-out root");
+        }
+        let image = branches.iter().find(|b| b.head == idx("imagegen")).unwrap();
+        assert_eq!(image.stages, vec![idx("imagegen")]);
+        assert_eq!(image.exits, vec![idx("imagegen")]);
+        let speech = branches.iter().find(|b| b.head == idx("talker")).unwrap();
+        assert_eq!(speech.stages, vec![idx("talker"), idx("vocoder")]);
+        assert_eq!(speech.exits, vec![idx("vocoder")]);
+    }
+
+    #[test]
+    fn rejects_partial_fan_in() {
+        // Fan the thinker out three ways (image, speech, and a direct
+        // edge to the vocoder).  The vocoder is now fed by two of the
+        // three branches — a partial join with no completion semantics.
+        let mut p = presets::qwen3_omni_branching();
+        p.edges.push(crate::config::EdgeConfig {
+            from: "thinker".into(),
+            to: "vocoder".into(),
+            transfer: "talker2vocoder".into(),
+            connector: crate::config::ConnectorKind::Inline,
+            routing: crate::config::RoutingKind::Auto,
+        });
+        let err = StageGraph::build(p, &reg()).unwrap_err();
+        assert!(format!("{err:#}").contains("a fan-in must merge ALL branches"), "{err:#}");
+    }
+
+    #[test]
+    fn full_join_of_all_branches_is_accepted() {
+        // Route the image arm into the vocoder as well: the vocoder is
+        // now reachable from BOTH branches — a full join, accepted, and
+        // it belongs to neither branch's private stage set.
+        let mut p = presets::qwen3_omni_branching();
+        p.edges.push(crate::config::EdgeConfig {
+            from: "imagegen".into(),
+            to: "vocoder".into(),
+            transfer: "hidden2cond".into(),
+            connector: crate::config::ConnectorKind::Inline,
+            routing: crate::config::RoutingKind::Auto,
+        });
+        let g = StageGraph::build(p, &reg()).unwrap();
+        let idx = |n: &str| g.stage_index(n).unwrap();
+        assert_eq!(g.exits, vec![idx("vocoder")], "the join is the single exit");
+        let branches = g.branches();
+        assert_eq!(branches.len(), 2);
+        for b in &branches {
+            assert!(!b.stages.contains(&idx("vocoder")), "join is branch-neutral");
+            assert!(b.exits.is_empty(), "completion rides the join's exit");
+        }
     }
 
     #[test]

@@ -264,6 +264,27 @@ pub fn shared_prefix(seed: u64, n: usize, rate: f64, hot_frac: f64) -> Workload 
     Workload { name: "shared-prefix-sim".into(), requests }
 }
 
+/// Branching fan-out trace (ISSUE 9): every request is ONE prompt whose
+/// answer is BOTH an image and a spoken reply — the stage graph forks
+/// after the shared thinker prefill into a parallel DiT arm (budgeted by
+/// `diffusion_steps`) and a talker→vocoder arm (budgeted by
+/// `max_audio_tokens`).  The image arm dominates per-request work, which
+/// is what lets fractional packing's extra DiT replica pay off in
+/// `scheduler::sim::fractional_comparison`.
+pub fn branching_fanout(seed: u64, n: usize, rate: f64, steps: usize) -> Workload {
+    let mut rng = Prng::new(seed ^ 0xB4A9C);
+    let at = arrivals(&mut rng, n, rate);
+    let requests = (0..n)
+        .map(|i| {
+            let mut r =
+                mk(&mut rng, i as u64, at[i], Modality::Text, 18.0, 0.0, 16.0, 2.4);
+            r.diffusion_steps = steps;
+            r
+        })
+        .collect();
+    Workload { name: "branching-fanout-sim".into(), requests }
+}
+
 /// VBench sim: text (or image) prompts for DiT image/video generation.
 pub fn vbench(seed: u64, n: usize, rate: f64, steps: usize, image_cond: bool) -> Workload {
     let mut rng = Prng::new(seed ^ 0xBE9C);
@@ -423,6 +444,18 @@ mod tests {
     }
 
     #[test]
+    fn branching_fanout_requests_carry_both_arms() {
+        let w = branching_fanout(5, 32, 12.0, 20);
+        assert_eq!(w.len(), 32);
+        for r in &w.requests {
+            assert_eq!(r.diffusion_steps, 20, "image arm budget");
+            assert!(r.max_audio_tokens >= 8, "speech arm budget");
+            assert!(r.max_text_tokens > 0, "shared thinker decode");
+        }
+        assert!(w.requests.last().unwrap().arrival_s > 0.0, "online by construction");
+    }
+
+    #[test]
     fn prop_limits_respected() {
         quick("trace_limits", |rng| {
             let seed = rng.next_u64();
@@ -437,6 +470,7 @@ mod tests {
                 prefill_heavy(seed, n, 56.0),
                 overload_storm(seed, n, 80.0),
                 shared_prefix(seed, n, 24.0, 0.75),
+                branching_fanout(seed, n, 12.0, 20),
             ] {
                 for r in &w.requests {
                     assert!(r.total_input_tokens() <= 210, "{}", r.total_input_tokens());
