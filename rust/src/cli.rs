@@ -25,6 +25,8 @@ pub const BOOL_FLAGS: &[&str] = &[
     "autoscale",
     "admission",
     "no-prefix-cache",
+    "event-core",
+    "replay-record",
 ];
 
 impl Args {
@@ -145,6 +147,19 @@ mod tests {
         assert!(a.flag_bool("no-prefix-cache"));
         assert_eq!(a.flag("eviction"), Some("hit_aware"));
         assert_eq!(a.flag_usize("encoder-cache", 256).unwrap(), 0);
+    }
+
+    #[test]
+    fn event_core_and_replay_record_are_bool_flags() {
+        // `--event-core` / `--replay-record` must not swallow the value
+        // that follows (trace name, replay path).
+        let a = parse("bench --trace bursty-mixed --event-core --seeds 32");
+        assert!(a.flag_bool("event-core"));
+        assert_eq!(a.flag("trace"), Some("bursty-mixed"));
+        assert_eq!(a.flag_usize("seeds", 0).unwrap(), 32);
+        let b = parse("bench --replay-record --replay-path smoke.evl");
+        assert!(b.flag_bool("replay-record"));
+        assert_eq!(b.flag("replay-path"), Some("smoke.evl"));
     }
 
     #[test]

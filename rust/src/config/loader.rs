@@ -7,8 +7,8 @@ use anyhow::{Context, Result};
 
 use super::{
     AdmissionConfig, AutoscalerConfig, CacheConfig, ClusterConfig, ConnectorKind, DiffusionParams,
-    EdgeConfig, NodeSpec, PipelineConfig, PlacementPolicy, RoutingKind, SchedParams,
-    SchedPolicyKind, ShareConfig, StageConfig, StageKind, StageRole, TransportConfig,
+    DriverKind, EdgeConfig, NodeSpec, PipelineConfig, PlacementPolicy, RoutingKind, RuntimeConfig,
+    SchedParams, SchedPolicyKind, ShareConfig, StageConfig, StageKind, StageRole, TransportConfig,
 };
 use crate::kv_cache::EvictionPolicy;
 use crate::jobj;
@@ -222,6 +222,27 @@ pub fn from_value(v: &Value) -> Result<PipelineConfig> {
                 .unwrap_or(d.min_compute_milli),
         })
     };
+    let rv = v.get("runtime");
+    let runtime = if rv.is_null() {
+        None
+    } else {
+        // Same guard as the autoscaler: `"runtime": true` is a typo, not
+        // "enable replay recording with defaults".
+        anyhow::ensure!(rv.as_obj().is_some(), "`runtime` must be an object");
+        let d = RuntimeConfig::default();
+        Some(RuntimeConfig {
+            driver: match rv.get("driver").as_str() {
+                Some(name) => DriverKind::from_name(name)?,
+                None => d.driver,
+            },
+            replay_record: rv.get("replay_record").as_bool().unwrap_or(d.replay_record),
+            replay_path: rv
+                .get("replay_path")
+                .as_str()
+                .map(|s| s.to_string())
+                .unwrap_or(d.replay_path),
+        })
+    };
     let cfg = PipelineConfig {
         name: v.req_str("name")?.to_string(),
         stages,
@@ -237,6 +258,7 @@ pub fn from_value(v: &Value) -> Result<PipelineConfig> {
         transport,
         cluster,
         share,
+        runtime,
     };
     cfg.validate()?;
     Ok(cfg)
@@ -362,6 +384,18 @@ pub fn to_value(p: &PipelineConfig) -> Value {
             );
         }
     }
+    if let Some(r) = &p.runtime {
+        if let Value::Obj(m) = &mut out {
+            m.insert(
+                "runtime".to_string(),
+                jobj! {
+                    "driver" => r.driver.name(),
+                    "replay_record" => r.replay_record,
+                    "replay_path" => r.replay_path.clone(),
+                },
+            );
+        }
+    }
     if let Some(c) = &p.cluster {
         if let Value::Obj(m) = &mut out {
             let nodes: Vec<Value> = c
@@ -431,6 +465,7 @@ mod tests {
             assert_eq!(p.transport, q.transport);
             assert_eq!(p.cluster, q.cluster);
             assert_eq!(p.share, q.share);
+            assert_eq!(p.runtime, q.runtime);
         }
     }
 
@@ -740,6 +775,49 @@ mod tests {
             r#"{"name": "x", "n_devices": 1, "stages": [
                 {"name": "a", "model": "mimo", "kind": "ar", "devices": [0]}
             ], "cluster": true}"#,
+        )
+        .unwrap();
+        assert!(from_value(&typo).is_err());
+    }
+
+    #[test]
+    fn runtime_block_roundtrips_and_defaults() {
+        let mut p = presets::qwen3_omni();
+        p.runtime = Some(RuntimeConfig {
+            driver: DriverKind::Real,
+            replay_record: true,
+            replay_path: "run.evl".to_string(),
+        });
+        let s = to_json_string(&p);
+        let q = from_value(&json::parse(&s).unwrap()).unwrap();
+        assert_eq!(q.runtime, p.runtime);
+        // Partial block: unspecified fields take the defaults.
+        let v = json::parse(
+            r#"{"name": "x", "n_devices": 1, "stages": [
+                {"name": "a", "model": "mimo", "kind": "ar", "devices": [0]}
+            ], "runtime": {"driver": "sim"}}"#,
+        )
+        .unwrap();
+        let q = from_value(&v).unwrap();
+        let r = q.runtime.unwrap();
+        assert_eq!(r.driver, DriverKind::Sim);
+        assert!(!r.replay_record);
+        assert_eq!(r.replay_path, RuntimeConfig::default().replay_path);
+        // No block at all: None (real driver, no recording).
+        assert!(presets::qwen3_omni().runtime.is_none());
+        // Unknown driver rejected at load time.
+        let bad = json::parse(
+            r#"{"name": "x", "n_devices": 1, "stages": [
+                {"name": "a", "model": "mimo", "kind": "ar", "devices": [0]}
+            ], "runtime": {"driver": "fiber"}}"#,
+        )
+        .unwrap();
+        assert!(from_value(&bad).is_err());
+        // A non-object value is a config mistake, not "all defaults".
+        let typo = json::parse(
+            r#"{"name": "x", "n_devices": 1, "stages": [
+                {"name": "a", "model": "mimo", "kind": "ar", "devices": [0]}
+            ], "runtime": true}"#,
         )
         .unwrap();
         assert!(from_value(&typo).is_err());

@@ -766,6 +766,64 @@ impl ShareConfig {
     }
 }
 
+/// Which clock the event-core [`crate::event_core::Driver`] runs stage
+/// loops against.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DriverKind {
+    /// Wall clock, real threads parked on wake mailboxes (live serving).
+    Real,
+    /// Virtual clock, single-threaded (simulation and trace replay only;
+    /// a live session refuses to start under it).
+    Sim,
+}
+
+impl DriverKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DriverKind::Real => "real",
+            DriverKind::Sim => "sim",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<Self> {
+        match s {
+            "real" => Ok(DriverKind::Real),
+            "sim" => Ok(DriverKind::Sim),
+            other => bail!("unknown driver `{other}` (expected real|sim)"),
+        }
+    }
+}
+
+/// Event-core runtime knobs: driver selection and deterministic trace
+/// recording (see [`crate::event_core`]).  `None` on the pipeline means
+/// the defaults — real driver, no recording.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RuntimeConfig {
+    /// Clock/parking backend for stage loops.
+    pub driver: DriverKind,
+    /// Record every request arrival into a checksummed event log,
+    /// written to `replay_path` at session shutdown and replayable with
+    /// `omni-serve replay <log>`.
+    pub replay_record: bool,
+    /// Where the recorded event log is written.
+    pub replay_path: String,
+}
+
+impl Default for RuntimeConfig {
+    fn default() -> Self {
+        Self { driver: DriverKind::Real, replay_record: false, replay_path: "replay.evl".into() }
+    }
+}
+
+impl RuntimeConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.replay_record && self.replay_path.is_empty() {
+            bail!("runtime replay_record is on but replay_path is empty");
+        }
+        Ok(())
+    }
+}
+
 /// An edge of the stage graph: a named transfer function plus transport.
 #[derive(Debug, Clone)]
 pub struct EdgeConfig {
@@ -807,6 +865,9 @@ pub struct PipelineConfig {
     /// Fractional GPU sharing; `None` = whole-GPU allocation only (the
     /// pre-sharing behaviour, and the default for most presets).
     pub share: Option<ShareConfig>,
+    /// Event-core runtime knobs (driver, trace recording); `None` =
+    /// real driver, no recording.
+    pub runtime: Option<RuntimeConfig>,
 }
 
 impl PipelineConfig {
@@ -890,6 +951,9 @@ impl PipelineConfig {
         self.transport.validate()?;
         if let Some(c) = &self.cluster {
             c.validate()?;
+        }
+        if let Some(r) = &self.runtime {
+            r.validate()?;
         }
         if let Some(sh) = &self.share {
             sh.validate()?;
@@ -996,12 +1060,29 @@ mod tests {
             transport: TransportConfig::default(),
             cluster: None,
             share: None,
+            runtime: None,
         }
     }
 
     #[test]
     fn valid_pipeline_passes() {
         two_stage().validate().unwrap();
+    }
+
+    #[test]
+    fn runtime_block_validates() {
+        let mut p = two_stage();
+        p.runtime = Some(RuntimeConfig::default());
+        p.validate().unwrap();
+        p.runtime = Some(RuntimeConfig {
+            replay_record: true,
+            replay_path: String::new(),
+            ..Default::default()
+        });
+        assert!(p.validate().is_err(), "recording without a path must be rejected");
+        assert_eq!(DriverKind::from_name("sim").unwrap(), DriverKind::Sim);
+        assert_eq!(DriverKind::from_name("real").unwrap().name(), "real");
+        assert!(DriverKind::from_name("quantum").is_err());
     }
 
     #[test]

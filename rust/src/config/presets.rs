@@ -59,6 +59,7 @@ pub fn qwen25_omni() -> PipelineConfig {
         transport: TransportConfig::default(),
         cluster: None,
         share: None,
+        runtime: None,
     }
 }
 
@@ -92,6 +93,7 @@ pub fn qwen3_omni() -> PipelineConfig {
         transport: TransportConfig::default(),
         cluster: None,
         share: None,
+        runtime: None,
     }
 }
 
@@ -237,6 +239,7 @@ pub fn qwen3_omni_branching() -> PipelineConfig {
         transport: TransportConfig::default(),
         cluster: None,
         share: Some(ShareConfig::default()),
+        runtime: None,
     }
 }
 
@@ -269,6 +272,7 @@ pub fn bagel(i2i: bool) -> PipelineConfig {
         transport: TransportConfig::default(),
         cluster: None,
         share: None,
+        runtime: None,
     }
 }
 
@@ -295,6 +299,7 @@ pub fn mimo_audio(multi_step: usize) -> PipelineConfig {
         transport: TransportConfig::default(),
         cluster: None,
         share: None,
+        runtime: None,
     }
 }
 
@@ -320,6 +325,7 @@ pub fn dit_single(model: &str, steps: usize, stepcache: f32) -> PipelineConfig {
         transport: TransportConfig::default(),
         cluster: None,
         share: None,
+        runtime: None,
     }
 }
 

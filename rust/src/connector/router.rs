@@ -68,6 +68,7 @@ use anyhow::Result;
 
 use crate::config::{ConnectorKind, RoutingKind, TransportConfig};
 use crate::engine::StageItem;
+use crate::event_core::{WakeSet, WAKE_CLOSE, WAKE_EDGE};
 
 use super::{pair_with, ConnectorRx, ConnectorTx, EdgeTransferSnapshot, EdgeTransferStats, TryRecv};
 
@@ -84,6 +85,11 @@ pub struct ReplicaLoad {
     /// Prompt signatures the replica's prefix cache covers, published by
     /// the consumer stage thread (cache-aware routing).
     cover: Mutex<HashSet<u64>>,
+    /// The consumer stage thread's wake mailbox (event core), registered
+    /// once at thread start via [`RouterRx::register_wake`]; producers
+    /// signal it on every push and on edge close, so the thread parks
+    /// between items instead of polling.
+    wake: Mutex<Option<Arc<WakeSet>>>,
 }
 
 impl ReplicaLoad {
@@ -94,6 +100,12 @@ impl ReplicaLoad {
 
     fn covers(&self, sig: u64) -> bool {
         self.cover.lock().unwrap().contains(&sig)
+    }
+
+    fn wake(&self, mask: u64) {
+        if let Some(w) = self.wake.lock().unwrap().as_ref() {
+            w.wake(mask);
+        }
     }
 }
 
@@ -286,6 +298,9 @@ impl RouterTx {
             );
             return Err(e);
         }
+        // Unpark the chosen consumer's stage thread (event core): the
+        // item is in its channel, so a parked worker picks it up at once.
+        sh.eps[i].load.wake(WAKE_EDGE);
         Ok(())
     }
 
@@ -308,6 +323,37 @@ impl RouterTx {
     pub fn hint_prompt_signature(&self, req_id: u64, sig: u64) {
         if matches!(self.state, RouteState::CacheAware) {
             self.hints.lock().unwrap().insert(req_id, sig);
+        }
+    }
+}
+
+impl Drop for RouterTx {
+    /// Close-wake every consumer when the producer replica's thread
+    /// exits, so a parked downstream worker observes the closed edge and
+    /// runs its drain-and-flush path exactly once instead of sleeping
+    /// forever (the never-flush hazard).  When this sender holds the
+    /// last reference to its channel set (the edge control plane already
+    /// forgot the producer, or never retained it), the senders are
+    /// dropped HERE, before the wake, so the woken consumer sees
+    /// `Closed` on its very next poll; otherwise the channels stay open
+    /// (the edge may still wire this producer to new consumers) and the
+    /// wake is a harmless hint.
+    fn drop(&mut self) {
+        let mut loads: Vec<Arc<ReplicaLoad>> = Vec::new();
+        if let Ok(mut sh) = self.shared.lock() {
+            if Arc::strong_count(&self.shared) == 1 {
+                let eps = std::mem::take(&mut sh.eps);
+                for ep in eps {
+                    sh.retired_bytes += ep.tx.bytes_sent;
+                    loads.push(ep.load.clone());
+                    // `ep.tx` drops here: the channel closes.
+                }
+            } else {
+                loads.extend(sh.eps.iter().map(|e| e.load.clone()));
+            }
+        }
+        for l in loads {
+            l.wake(WAKE_CLOSE);
         }
     }
 }
@@ -389,6 +435,13 @@ impl RouterRx {
     /// Number of producer replicas currently feeding this receiver.
     pub fn fanin(&self) -> usize {
         self.sources.lock().unwrap().len()
+    }
+
+    /// Register the consuming stage thread's wake mailbox (event core):
+    /// producers signal it after every push and when the edge closes, so
+    /// the thread parks at idle instead of polling this receiver.
+    pub fn register_wake(&self, wake: Arc<WakeSet>) {
+        *self.load.wake.lock().unwrap() = Some(wake);
     }
 }
 
@@ -581,6 +634,7 @@ impl EdgeCtl {
     /// its receiver drains whatever is left and then reports closed.
     pub fn remove_consumer(&self, uid: u64) {
         let mut st = self.state.lock().unwrap();
+        let load = st.consumers.iter().find(|c| c.uid == uid).map(|c| c.load.clone());
         for p in &st.producers {
             let mut sh = p.shared.lock().unwrap();
             let mut kept = Vec::with_capacity(sh.eps.len());
@@ -594,6 +648,13 @@ impl EdgeCtl {
             sh.eps = kept;
         }
         st.consumers.retain(|c| c.uid != uid);
+        drop(st);
+        // The detached replica's receiver now reports `Closed` once
+        // drained: wake its (possibly parked) thread so the close is
+        // observed immediately rather than at the liveness backstop.
+        if let Some(l) = load {
+            l.wake(WAKE_CLOSE);
+        }
     }
 
     /// Forget producer `uid`.  The producer's own [`RouterTx`] drop (on
@@ -974,5 +1035,63 @@ mod tests {
         ctl.remove_consumer(u0);
         tx.send(item(1).finished()).unwrap(); // 4 more bytes to the survivor
         assert_eq!(tx.bytes_sent(), 8, "retired endpoint's bytes are not lost");
+    }
+
+    // -----------------------------------------------------------------
+    // Event-core wake hooks (parked consumers, edge-close signalling).
+    // -----------------------------------------------------------------
+
+    #[test]
+    fn send_wakes_a_parked_consumer_thread() {
+        let (mut txs, mut rxs) =
+            wire(ConnectorKind::Inline, RoutingKind::RoundRobin, "wake", None, 1, 1).unwrap();
+        let wake = Arc::new(WakeSet::new());
+        rxs[0].register_wake(wake.clone());
+        let w = wake.clone();
+        let t = std::thread::spawn(move || w.park(std::time::Duration::from_secs(30)));
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        txs[0].send(item(1)).unwrap();
+        let mask = t.join().unwrap();
+        assert_eq!(mask & WAKE_EDGE, WAKE_EDGE);
+        assert_eq!(drain(&mut rxs[0]), vec![1]);
+    }
+
+    #[test]
+    fn producer_drop_close_wakes_and_the_flush_happens_exactly_once() {
+        // Never-flush regression: a consumer parked on a quiet edge must
+        // be woken when its last producer hangs up, and must then observe
+        // the remaining items followed by `Closed`.  `Closed` is stable
+        // on every further poll — the stage loop flushes on the single
+        // open→closed transition and never polls the edge again, so a
+        // double flush is impossible.
+        let (mut txs, mut rxs) =
+            wire(ConnectorKind::Inline, RoutingKind::RoundRobin, "close", None, 1, 1).unwrap();
+        txs[0].send(item(7)).unwrap();
+        let wake = Arc::new(WakeSet::new());
+        rxs[0].register_wake(wake.clone());
+        let w = wake.clone();
+        let t = std::thread::spawn(move || w.park(std::time::Duration::from_secs(30)));
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        // `wire` did not retain the edge control plane, so this drop
+        // holds the last reference: channels close BEFORE the wake.
+        drop(txs);
+        let mask = t.join().unwrap();
+        assert_eq!(mask & WAKE_CLOSE, WAKE_CLOSE);
+        assert!(matches!(rxs[0].try_recv().unwrap(), TryRecv::Item(it) if it.req_id == 7));
+        assert!(matches!(rxs[0].try_recv().unwrap(), TryRecv::Closed));
+        assert!(matches!(rxs[0].try_recv().unwrap(), TryRecv::Closed));
+    }
+
+    #[test]
+    fn remove_consumer_close_wakes_the_detached_replica() {
+        let ctl = EdgeCtl::new(ConnectorKind::Inline, RoutingKind::Affinity, "rmwake", None);
+        let (mut rx0, u0) = ctl.add_consumer().unwrap();
+        let (_rx1, _u1) = ctl.add_consumer().unwrap();
+        let (_tx, _p) = ctl.add_producer().unwrap();
+        let wake = Arc::new(WakeSet::new());
+        rx0.register_wake(wake.clone());
+        ctl.remove_consumer(u0);
+        assert_eq!(wake.try_drain() & WAKE_CLOSE, WAKE_CLOSE);
+        assert!(matches!(rx0.try_recv().unwrap(), TryRecv::Closed));
     }
 }

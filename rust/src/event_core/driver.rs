@@ -1,0 +1,275 @@
+//! The [`Driver`] trait and [`drive`] loop: one stage-loop body, two
+//! clocks.
+//!
+//! A loop body is a closure over `&mut dyn Driver` returning a
+//! [`Tick`]:
+//!
+//! * [`Tick::Progress`] — work was done; run the body again at once.
+//! * [`Tick::Idle`]`(deadline)` — nothing to do; park on the worker's
+//!   [`WakeSet`] until a wake or the *absolute* run-relative deadline
+//!   (seconds).  `None` parks indefinitely (bounded by the real
+//!   driver's liveness backstop).
+//! * [`Tick::Exit`] — the loop is over.
+//!
+//! [`RealDriver`] reads the shared [`RunClock`] and really blocks;
+//! [`SimDriver`] owns a virtual `f64` clock, never blocks, and treats a
+//! deadline park as "advance time to the deadline" — so
+//! `scheduler::sim` and the live runtime execute the *same* body with
+//! identical semantics, which is the whole point: the two code paths
+//! cannot drift apart because there is only one.
+
+use anyhow::Result;
+
+use crate::orchestrator::RunClock;
+
+use super::wake::{WakeSet, WAKE_TIMER};
+
+/// What one pass of a stage-loop body did (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Tick {
+    /// Work happened; tick again immediately.
+    Progress,
+    /// Nothing to do; park until a wake or the absolute deadline
+    /// (run-relative seconds).  `None` = no deadline.
+    Idle(Option<f64>),
+    /// The loop terminates.
+    Exit,
+}
+
+/// Clock + parking behaviour a [`drive`] loop runs against.
+pub trait Driver {
+    /// Current run-relative time in seconds.
+    fn now(&self) -> f64;
+
+    /// Account `dt` seconds of work.  The virtual clock advances by
+    /// exactly `dt`; the wall clock ignores it (real work already
+    /// consumed the time).
+    fn advance(&mut self, dt: f64);
+
+    /// Park until a wake arrives or the absolute `deadline` passes.
+    /// Returns the drained wake mask (`0` = timeout/spurious on the
+    /// real driver; the sim driver reports [`WAKE_TIMER`] for a
+    /// deadline advance).
+    fn park(&mut self, wake: &WakeSet, deadline: Option<f64>) -> u64;
+}
+
+/// Run `tick` to completion under `drv`, parking on `wake` whenever the
+/// body reports idle.  The body is fallible so live stage loops can
+/// propagate engine/edge errors with `?`; sim bodies just wrap their
+/// tick in `Ok`.
+pub fn drive<F>(drv: &mut dyn Driver, wake: &WakeSet, mut tick: F) -> Result<()>
+where
+    F: FnMut(&mut dyn Driver) -> Result<Tick>,
+{
+    loop {
+        match tick(drv)? {
+            Tick::Progress => {}
+            Tick::Idle(deadline) => {
+                drv.park(wake, deadline);
+            }
+            Tick::Exit => return Ok(()),
+        }
+    }
+}
+
+/// How long an indefinite (`Idle(None)`) real park may sleep before
+/// re-ticking anyway.  Every event source wakes its worker explicitly,
+/// so this is a liveness backstop, not a polling interval: it bounds
+/// the damage of any wake hook a future change forgets, and it is the
+/// worst-case latency for conditions no hook covers by design (e.g. a
+/// peer process dying without closing a channel).  Counted as a
+/// spurious wakeup, so a hot backstop is visible in the stats.
+pub const REAL_PARK_BACKSTOP: std::time::Duration = std::time::Duration::from_millis(25);
+
+/// Wall-clock driver for live stage threads: `now` reads the shared
+/// [`RunClock`], `advance` is a no-op, `park` really blocks on the
+/// worker's [`WakeSet`].
+#[derive(Debug, Clone)]
+pub struct RealDriver {
+    clock: RunClock,
+}
+
+impl RealDriver {
+    pub fn new(clock: RunClock) -> Self {
+        Self { clock }
+    }
+}
+
+impl Driver for RealDriver {
+    fn now(&self) -> f64 {
+        self.clock.now()
+    }
+
+    fn advance(&mut self, _dt: f64) {}
+
+    fn park(&mut self, wake: &WakeSet, deadline: Option<f64>) -> u64 {
+        let timeout = match deadline {
+            Some(d) => {
+                let dt = d - self.clock.now();
+                if dt <= 0.0 {
+                    // Already past the deadline: report the timer
+                    // without sleeping (the body re-checks time).
+                    return WAKE_TIMER;
+                }
+                std::time::Duration::from_secs_f64(dt)
+            }
+            None => REAL_PARK_BACKSTOP,
+        };
+        wake.park(timeout)
+    }
+}
+
+/// Virtual-clock driver for single-threaded simulation and replay:
+/// `advance` moves time forward by exactly `dt`, and a deadline park
+/// jumps the clock to the deadline — no thread ever sleeps.  A park
+/// with neither a deadline nor a pending wake is a stalled simulation
+/// (nothing can ever make progress again) and panics loudly rather
+/// than spinning forever.
+#[derive(Debug, Clone)]
+pub struct SimDriver {
+    now: f64,
+}
+
+impl SimDriver {
+    pub fn new() -> Self {
+        Self { now: 0.0 }
+    }
+}
+
+impl Default for SimDriver {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Driver for SimDriver {
+    fn now(&self) -> f64 {
+        self.now
+    }
+
+    fn advance(&mut self, dt: f64) {
+        self.now += dt;
+    }
+
+    fn park(&mut self, wake: &WakeSet, deadline: Option<f64>) -> u64 {
+        let pending = wake.try_drain();
+        if pending != 0 {
+            // An event was injected (sim harness): handle it at the
+            // current virtual time; the deadline no longer applies.
+            return pending;
+        }
+        match deadline {
+            Some(d) => {
+                if d > self.now {
+                    self.now = d;
+                }
+                WAKE_TIMER
+            }
+            None => panic!(
+                "SimDriver stalled at t={}: parked with no deadline and no pending wake",
+                self.now
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::event_core::wake::{WAKE_EDGE, WAKE_STEP};
+
+    #[test]
+    fn sim_driver_park_advances_to_the_deadline_exactly() {
+        let wake = WakeSet::new();
+        let mut drv = SimDriver::new();
+        drv.advance(1.25);
+        assert_eq!(drv.now(), 1.25);
+        assert_eq!(drv.park(&wake, Some(3.5)), WAKE_TIMER);
+        assert_eq!(drv.now(), 3.5, "deadline park is an exact assignment");
+        // A deadline in the past does not move time backwards.
+        assert_eq!(drv.park(&wake, Some(2.0)), WAKE_TIMER);
+        assert_eq!(drv.now(), 3.5);
+    }
+
+    #[test]
+    fn sim_driver_pending_wake_preempts_the_deadline() {
+        let wake = WakeSet::new();
+        let mut drv = SimDriver::new();
+        wake.wake(WAKE_STEP);
+        assert_eq!(drv.park(&wake, Some(9.0)), WAKE_STEP);
+        assert_eq!(drv.now(), 0.0, "an injected event is handled at the current time");
+    }
+
+    #[test]
+    #[should_panic(expected = "SimDriver stalled")]
+    fn sim_driver_panics_on_a_stalled_simulation() {
+        let wake = WakeSet::new();
+        let mut drv = SimDriver::new();
+        drv.park(&wake, None);
+    }
+
+    #[test]
+    fn drive_runs_the_same_body_under_both_drivers() {
+        // One body, two worlds: count three work items separated by
+        // idle-to-deadline gaps.  Under the sim driver this is instant
+        // and lands at exactly t=0.3; under the real driver the parks
+        // really sleep (timer wakes, nothing else is running).
+        fn body(n: &mut u32) -> impl FnMut(&mut dyn Driver) -> Result<Tick> + '_ {
+            move |drv| {
+                if *n >= 3 {
+                    return Ok(Tick::Exit);
+                }
+                *n += 1;
+                Ok(Tick::Idle(Some(drv.now() + 0.1)))
+            }
+        }
+        let wake = WakeSet::new();
+        let mut sim = SimDriver::new();
+        let mut n = 0;
+        drive(&mut sim, &wake, body(&mut n)).unwrap();
+        assert_eq!(n, 3);
+        assert!((sim.now() - 0.3).abs() < 1e-12);
+
+        let wake = WakeSet::new();
+        let mut real = RealDriver::new(RunClock::new());
+        let mut n = 0;
+        let t0 = std::time::Instant::now();
+        drive(&mut real, &wake, body(&mut n)).unwrap();
+        assert_eq!(n, 3);
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(250));
+    }
+
+    #[test]
+    fn real_driver_deadline_park_wakes_early_on_an_event() {
+        let wake = std::sync::Arc::new(WakeSet::new());
+        let clock = RunClock::new();
+        let w2 = wake.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            w2.wake(WAKE_EDGE);
+        });
+        let mut drv = RealDriver::new(clock);
+        let t0 = std::time::Instant::now();
+        let mask = drv.park(&wake, Some(drv.now() + 30.0));
+        assert_eq!(mask, WAKE_EDGE);
+        assert!(t0.elapsed() < std::time::Duration::from_secs(10), "woke well before deadline");
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn real_driver_past_deadline_returns_without_sleeping() {
+        let mut drv = RealDriver::new(RunClock::new());
+        let wake = WakeSet::new();
+        let t0 = std::time::Instant::now();
+        assert_eq!(drv.park(&wake, Some(0.0)), WAKE_TIMER);
+        assert!(t0.elapsed() < std::time::Duration::from_secs(1));
+    }
+
+    #[test]
+    fn drive_propagates_a_body_error() {
+        let wake = WakeSet::new();
+        let mut drv = SimDriver::new();
+        let err = drive(&mut drv, &wake, |_| anyhow::bail!("engine exploded")).unwrap_err();
+        assert!(err.to_string().contains("engine exploded"));
+    }
+}

@@ -1,0 +1,236 @@
+//! The `OEVL` event-log wire format: seeded, ordered, checksummed —
+//! the same frame idiom as [`crate::connector::wire`] (magic, version,
+//! length-prefixed records, trailing FNV-1a over everything before it).
+//!
+//! Layout, little-endian:
+//! `magic u32 | version u8 | seed u64 | lanes u32 | count u32 |`
+//! per event: `tag u8 | fields` where
+//! `1 = Arrive { id u64, t_us u64, cost_us u64 }`,
+//! `2 = Start  { id u64, t_us u64, lane u32 }`,
+//! `3 = Finish { id u64, t_us u64, lane u32 }`,
+//! then `fnv1a u64` over the whole body.  Timestamps are integer
+//! microseconds so encode(decode(x)) is bit-identical — no float
+//! formatting anywhere near the replay contract.  Truncated or
+//! corrupted frames decode to an error, never a panic.
+
+use anyhow::{bail, Result};
+
+const EVL_MAGIC: u32 = 0x4C56454F; // "OEVL"
+const EVL_VERSION: u8 = 1;
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xCBF29CE484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001B3);
+    }
+    h
+}
+
+/// One recorded event.  Times and costs are integer microseconds of
+/// virtual (or run-relative wall) time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimEvent {
+    /// A job entered the system with a known execution cost.
+    Arrive { id: u64, t_us: u64, cost_us: u64 },
+    /// The job began executing on `lane`.
+    Start { id: u64, t_us: u64, lane: u32 },
+    /// The job finished on `lane`.
+    Finish { id: u64, t_us: u64, lane: u32 },
+}
+
+/// A seeded, ordered event recording — the unit of deterministic
+/// replay.  Two logs are "identical" under plain `==`, and
+/// [`EventLog::encode`] is a pure function of the contents, so
+/// byte-level diffs and structural diffs agree.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct EventLog {
+    /// The seed that generated the run (recorded for reproduction; not
+    /// consumed by replay, which re-drives from the events themselves).
+    pub seed: u64,
+    /// Executor lanes (replica slots) the run was driven with.
+    pub lanes: u32,
+    pub events: Vec<SimEvent>,
+}
+
+impl EventLog {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(21 + self.events.len() * 25 + 8);
+        out.extend_from_slice(&EVL_MAGIC.to_le_bytes());
+        out.push(EVL_VERSION);
+        out.extend_from_slice(&self.seed.to_le_bytes());
+        out.extend_from_slice(&self.lanes.to_le_bytes());
+        out.extend_from_slice(&(self.events.len() as u32).to_le_bytes());
+        for e in &self.events {
+            match *e {
+                SimEvent::Arrive { id, t_us, cost_us } => {
+                    out.push(1);
+                    out.extend_from_slice(&id.to_le_bytes());
+                    out.extend_from_slice(&t_us.to_le_bytes());
+                    out.extend_from_slice(&cost_us.to_le_bytes());
+                }
+                SimEvent::Start { id, t_us, lane } => {
+                    out.push(2);
+                    out.extend_from_slice(&id.to_le_bytes());
+                    out.extend_from_slice(&t_us.to_le_bytes());
+                    out.extend_from_slice(&lane.to_le_bytes());
+                }
+                SimEvent::Finish { id, t_us, lane } => {
+                    out.push(3);
+                    out.extend_from_slice(&id.to_le_bytes());
+                    out.extend_from_slice(&t_us.to_le_bytes());
+                    out.extend_from_slice(&lane.to_le_bytes());
+                }
+            }
+        }
+        let sum = fnv1a(&out);
+        out.extend_from_slice(&sum.to_le_bytes());
+        out
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<EventLog> {
+        // Checksum first: a flipped byte anywhere in the frame is
+        // caught even where a structural check cannot see it.
+        if bytes.len() < 8 {
+            bail!("event log: frame too short ({} bytes)", bytes.len());
+        }
+        let (body, sum_bytes) = bytes.split_at(bytes.len() - 8);
+        let declared = u64::from_le_bytes(sum_bytes.try_into().unwrap());
+        if fnv1a(body) != declared {
+            bail!("event log: checksum mismatch (corrupt frame)");
+        }
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+            if *pos + n > body.len() {
+                bail!("event log: truncated at {} (+{n} > {})", *pos, body.len());
+            }
+            let s = &body[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        };
+        let magic = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+        if magic != EVL_MAGIC {
+            bail!("event log: bad magic {magic:#x}");
+        }
+        let version = take(&mut pos, 1)?[0];
+        if version != EVL_VERSION {
+            bail!("event log: unsupported version {version}");
+        }
+        let seed = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
+        let lanes = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+        let count = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+        // Bound by the frame size before allocating (a corrupt count
+        // must not OOM; each event is at least 21 bytes).
+        if count > (body.len() - pos) / 21 {
+            bail!("event log: {count} events cannot fit the remaining frame");
+        }
+        let mut events = Vec::with_capacity(count);
+        for _ in 0..count {
+            let tag = take(&mut pos, 1)?[0];
+            let id = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
+            let t_us = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
+            events.push(match tag {
+                1 => {
+                    let cost_us = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
+                    SimEvent::Arrive { id, t_us, cost_us }
+                }
+                2 => {
+                    let lane = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+                    SimEvent::Start { id, t_us, lane }
+                }
+                3 => {
+                    let lane = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+                    SimEvent::Finish { id, t_us, lane }
+                }
+                other => bail!("event log: bad event tag {other}"),
+            });
+        }
+        if pos != body.len() {
+            bail!("event log: {} trailing bytes after events", body.len() - pos);
+        }
+        Ok(EventLog { seed, lanes, events })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::quick;
+    use crate::util::Prng;
+
+    fn sample(rng: &mut Prng) -> EventLog {
+        let n = rng.range(0, 12);
+        let events = (0..n)
+            .map(|i| match rng.below(3) {
+                0 => SimEvent::Arrive {
+                    id: i as u64,
+                    t_us: rng.below(1 << 40),
+                    cost_us: rng.below(1 << 20),
+                },
+                1 => SimEvent::Start {
+                    id: i as u64,
+                    t_us: rng.below(1 << 40),
+                    lane: rng.below(8) as u32,
+                },
+                _ => SimEvent::Finish {
+                    id: i as u64,
+                    t_us: rng.below(1 << 40),
+                    lane: rng.below(8) as u32,
+                },
+            })
+            .collect();
+        EventLog { seed: rng.next_u64(), lanes: 1 + rng.below(7) as u32, events }
+    }
+
+    #[test]
+    fn prop_log_roundtrips() {
+        quick("event_log_roundtrip", |rng| {
+            let log = sample(rng);
+            let got = EventLog::decode(&log.encode()).unwrap();
+            assert_eq!(got, log);
+            // Encoding is a pure function: structural equality and
+            // byte-level equality agree.
+            assert_eq!(got.encode(), log.encode());
+        });
+    }
+
+    #[test]
+    fn log_rejects_every_truncation() {
+        let mut rng = Prng::new(7);
+        let bytes = sample(&mut rng).encode();
+        for cut in 0..bytes.len() {
+            assert!(EventLog::decode(&bytes[..cut]).is_err(), "prefix of {cut} bytes decoded");
+        }
+        assert!(EventLog::decode(&bytes).is_ok());
+    }
+
+    #[test]
+    fn prop_log_rejects_bit_flips() {
+        quick("event_log_corruption", |rng| {
+            let mut bytes = sample(rng).encode();
+            let i = rng.range(0, bytes.len() - 1);
+            let flip = (rng.below(255) + 1) as u8;
+            bytes[i] ^= flip;
+            assert!(EventLog::decode(&bytes).is_err(), "flip at byte {i} slipped through");
+        });
+    }
+
+    #[test]
+    fn log_rejects_wrong_magic_and_version() {
+        let mut rng = Prng::new(11);
+        let log = sample(&mut rng);
+        let mut bytes = log.encode();
+        bytes[0] ^= 0xFF;
+        // Recompute the checksum so only the magic check can reject it.
+        let body_len = bytes.len() - 8;
+        let sum = fnv1a(&bytes[..body_len]);
+        bytes[body_len..].copy_from_slice(&sum.to_le_bytes());
+        assert!(EventLog::decode(&bytes).is_err());
+
+        let mut bytes = log.encode();
+        bytes[4] = 99; // version byte
+        let sum = fnv1a(&bytes[..body_len]);
+        bytes[body_len..].copy_from_slice(&sum.to_le_bytes());
+        assert!(EventLog::decode(&bytes).is_err());
+    }
+}

@@ -1,0 +1,40 @@
+//! Event-driven runtime core (ISSUE 10): parked-worker wakeups, a
+//! unified real/sim driver, and deterministic trace replay.
+//!
+//! Three layers:
+//!
+//! * **[`WakeSet`]** ([`wake`]) — a condvar-backed wake mailbox one
+//!   stage-replica thread parks on.  Every event source that used to be
+//!   discovered by spin-polling (edge pushes, cancel tombstones,
+//!   scale/drain commands, frontend submissions, collector sink items,
+//!   edge closes) now ORs a reason bit into the mailbox and notifies,
+//!   so the worker sleeps at zero CPU until there is work.  Wakes are
+//!   never lost: a bit set while nobody is parked is drained by the
+//!   next park.
+//!
+//! * **[`Driver`]** ([`driver`]) — the tick/event layering.  A loop
+//!   body is a closure returning [`Tick`] (`Progress` / `Idle(deadline)`
+//!   / `Exit`) and [`drive`] runs it against either clock:
+//!   [`RealDriver`] (wall clock, condvar parks, real threads) for the
+//!   live runtime and [`SimDriver`] (virtual clock, single-threaded,
+//!   parks advance time) for `scheduler::sim` — the *same* loop body
+//!   executes in both worlds, eliminating the sim/runtime drift hazard.
+//!
+//! * **[`EventLog`]** ([`log`]) + **[`replay`]** — deterministic replay.
+//!   Events are recorded as seeded, ordered, checksummed `OEVL` wire
+//!   frames (the `connector::wire` idiom) and `replay::replay` re-drives
+//!   the core from a log bit-for-bit: same seed ⇒ identical log ⇒
+//!   identical report, asserted by propcheck across seeds.
+
+pub mod driver;
+pub mod log;
+pub mod replay;
+pub mod wake;
+
+pub use driver::{drive, Driver, RealDriver, SimDriver, Tick};
+pub use log::{EventLog, SimEvent};
+pub use replay::{record, record_polling, replay, ReplayReport};
+pub use wake::{
+    WakeCounters, WakeSet, WAKE_CANCEL, WAKE_CLOSE, WAKE_CTL, WAKE_EDGE, WAKE_FRONT, WAKE_SINK,
+    WAKE_STEP, WAKE_TIMER,
+};

@@ -1,0 +1,171 @@
+//! Condvar-backed wake mailbox ([`WakeSet`]): the parking primitive one
+//! worker thread blocks on instead of spin-polling its inputs.
+//!
+//! A `WakeSet` is a 64-bit pending mask guarded by a mutex plus a
+//! condvar.  Event sources OR a *reason bit* into the mask and notify;
+//! a parked worker drains the whole mask on wake.  The protocol is
+//! lost-wakeup safe by construction: [`WakeSet::wake`] records the bit
+//! whether or not anybody is parked, and [`WakeSet::park`] checks the
+//! mask *before* sleeping — a wake that races a park is observed either
+//! by the pre-sleep check or by the notify.
+//!
+//! The set also keeps the idle-observability counters the run report
+//! surfaces per stage: `wakeups` (parks that returned with work),
+//! `spurious_wakeups` (timeouts and empty condvar wakes), and the total
+//! nanoseconds spent parked.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// An upstream edge delivered an item.
+pub const WAKE_EDGE: u64 = 1 << 0;
+/// An engine step completed (used by sim harnesses; the live stage loop
+/// steps its engine on the same thread, so no cross-thread wake).
+pub const WAKE_STEP: u64 = 1 << 1;
+/// A cancel tombstone was marked (sweep queued/in-flight work).
+pub const WAKE_CANCEL: u64 = 1 << 2;
+/// A control command: stop, retire, scale, or drain.
+pub const WAKE_CTL: u64 = 1 << 3;
+/// A deadline timer fired (park timed out at its requested deadline).
+pub const WAKE_TIMER: u64 = 1 << 4;
+/// The frontend submitted a request to this entry replica.
+pub const WAKE_FRONT: u64 = 1 << 5;
+/// An exit-stage item landed on the collector sink.
+pub const WAKE_SINK: u64 = 1 << 6;
+/// An edge endpoint closed (producer dropped or consumer removed) —
+/// the parked peer must re-poll so `TryRecv::Closed` drain-and-flush
+/// paths run instead of hanging.
+pub const WAKE_CLOSE: u64 = 1 << 7;
+
+/// Point-in-time snapshot of a [`WakeSet`]'s idle-observability
+/// counters.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct WakeCounters {
+    /// Parks that returned with at least one pending reason bit.
+    pub wakeups: u64,
+    /// Parks that returned empty (deadline/backstop timeout or an
+    /// OS-level spurious condvar wake).
+    pub spurious_wakeups: u64,
+    /// Total time spent parked, in nanoseconds.
+    pub idle_ns: u64,
+}
+
+/// Per-worker wake mailbox (see module docs).
+#[derive(Debug, Default)]
+pub struct WakeSet {
+    pending: Mutex<u64>,
+    cv: Condvar,
+    wakeups: AtomicU64,
+    spurious: AtomicU64,
+    idle_ns: AtomicU64,
+}
+
+impl WakeSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// OR `mask` into the pending set and notify any parked worker.
+    /// Safe to call from any thread, parked worker or not.
+    pub fn wake(&self, mask: u64) {
+        let mut p = self.pending.lock().unwrap();
+        *p |= mask;
+        // Notify under the lock so a parker between its pre-sleep check
+        // and its wait cannot miss this (the mutex serializes us behind
+        // either the check or the wait).
+        self.cv.notify_all();
+    }
+
+    /// Block until a wake arrives or `timeout` elapses.  Drains and
+    /// returns the pending mask; `0` means the park timed out (or the
+    /// condvar woke spuriously) with nothing pending.
+    pub fn park(&self, timeout: Duration) -> u64 {
+        let t0 = Instant::now();
+        let mut p = self.pending.lock().unwrap();
+        if *p == 0 {
+            let (guard, _timed_out) = self.cv.wait_timeout(p, timeout).unwrap();
+            p = guard;
+        }
+        let mask = std::mem::replace(&mut *p, 0);
+        drop(p);
+        self.idle_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        if mask != 0 {
+            self.wakeups.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.spurious.fetch_add(1, Ordering::Relaxed);
+        }
+        mask
+    }
+
+    /// Non-blocking drain (the virtual-clock driver's "park": nothing
+    /// ever sleeps in a single-threaded sim).  Counts a wakeup when the
+    /// mask was non-empty, nothing otherwise — a timer advance is not a
+    /// spurious wake.
+    pub fn try_drain(&self) -> u64 {
+        let mask = std::mem::replace(&mut *self.pending.lock().unwrap(), 0);
+        if mask != 0 {
+            self.wakeups.fetch_add(1, Ordering::Relaxed);
+        }
+        mask
+    }
+
+    pub fn counters(&self) -> WakeCounters {
+        WakeCounters {
+            wakeups: self.wakeups.load(Ordering::Relaxed),
+            spurious_wakeups: self.spurious.load(Ordering::Relaxed),
+            idle_ns: self.idle_ns.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn wake_before_park_is_not_lost() {
+        let w = WakeSet::new();
+        w.wake(WAKE_EDGE | WAKE_CANCEL);
+        // The bits were recorded with nobody parked; the next park
+        // returns them without sleeping.
+        let mask = w.park(Duration::from_secs(5));
+        assert_eq!(mask, WAKE_EDGE | WAKE_CANCEL);
+        assert_eq!(w.counters().wakeups, 1);
+    }
+
+    #[test]
+    fn park_times_out_empty_and_counts_spurious() {
+        let w = WakeSet::new();
+        let mask = w.park(Duration::from_millis(1));
+        assert_eq!(mask, 0);
+        let c = w.counters();
+        assert_eq!(c.spurious_wakeups, 1);
+        assert!(c.idle_ns > 0, "parked time must be accounted");
+    }
+
+    #[test]
+    fn cross_thread_wake_unparks_promptly() {
+        let w = Arc::new(WakeSet::new());
+        let w2 = w.clone();
+        let t = std::thread::spawn(move || w2.park(Duration::from_secs(30)));
+        // Let the worker reach its park (any interleaving is correct —
+        // the bit is sticky — this just exercises the condvar path too).
+        std::thread::sleep(Duration::from_millis(20));
+        w.wake(WAKE_CTL);
+        let mask = t.join().unwrap();
+        assert_eq!(mask, WAKE_CTL, "parked worker must see the control wake");
+    }
+
+    #[test]
+    fn try_drain_clears_and_counts() {
+        let w = WakeSet::new();
+        assert_eq!(w.try_drain(), 0);
+        w.wake(WAKE_TIMER);
+        w.wake(WAKE_SINK);
+        assert_eq!(w.try_drain(), WAKE_TIMER | WAKE_SINK);
+        assert_eq!(w.try_drain(), 0, "drain must clear the mask");
+        assert_eq!(w.counters().wakeups, 1);
+    }
+}

@@ -32,6 +32,11 @@
 //! machines: the [`cluster`] module adds node agents, an `OCTL` control
 //! plane, and a transfer-cost-aware placement engine that keeps heavy
 //! KV edges node-local while letting byte-light edges cross nodes.
+//! Stage workers are event-driven: the [`event_core`] layer parks idle
+//! threads on condvar wake mailboxes (no spin-polling), runs the live
+//! runtime and `scheduler::sim` over one shared loop body via its
+//! `Driver` trait, and records checksummed event logs for
+//! deterministic, bit-identical trace replay.
 //!
 //! Model compute is AOT-lowered from JAX/Pallas (see `python/compile/`)
 //! into HLO-text artifacts executed through the PJRT CPU client
@@ -54,6 +59,7 @@ pub mod config;
 pub mod connector;
 pub mod device;
 pub mod engine;
+pub mod event_core;
 pub mod gpu_share;
 pub mod json;
 pub mod kv_cache;

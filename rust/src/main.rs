@@ -1,8 +1,8 @@
-//! omni-serve launcher: `serve`, `run`, `bench`, `graph`, `baseline`.
+//! omni-serve launcher: `serve`, `run`, `bench`, `replay`, `graph`, `baseline`.
 
 use std::sync::Arc;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 use omni_serve::cli::Args;
 use omni_serve::config::{loader, presets};
 use omni_serve::orchestrator::{Orchestrator, RunOptions};
@@ -32,8 +32,9 @@ USAGE:
                    [--deadline S]   (cancel each request end-to-end S seconds
                                      after submission; the summary reports
                                      cancelled counts + freed KV)
-  omni-serve bench [--trace bursty|librispeech|seedtts|prefill-heavy|overload-storm|shared-prefix|cross-node|fractional]
-                   [--n 48] [--budget 4] [--seeds 32]
+  omni-serve bench [--trace bursty|bursty-mixed|librispeech|seedtts|prefill-heavy|overload-storm|shared-prefix|cross-node|fractional]
+                   [--n 48] [--budget 4] [--seeds 32] [--event-core]
+                   [--replay-record] [--replay-path file.evl]
                    (artifact-free: autoscaled vs static replica splits on the AR-stage
                     model; `prefill-heavy` runs the P/D-disaggregation comparison —
                     fused vs split prefill/decode pools — and exits non-zero unless
@@ -50,8 +51,21 @@ USAGE:
                     vocoder carved onto one shared device buying a third DiT
                     replica vs whole-device packing on the branching fan-out
                     trace — and exits non-zero unless the packed-fractional
-                    layout wins mean JCT for every seed — all five are CI smoke
-                    gates)
+                    layout wins mean JCT for every seed; `bursty-mixed
+                    --event-core` runs the event-driven-core comparison —
+                    parked-worker wakeups vs bounded-backoff polling on the
+                    FCFS lane executor — and exits non-zero unless the event
+                    core wins mean JCT and p95 queue-wait for every seed —
+                    all six are CI smoke gates; `bursty-mixed --replay-record`
+                    captures one seeded run as an OEVL event log that
+                    `omni-serve replay` re-drives bit-for-bit)
+  omni-serve replay <log.evl>
+                   (re-drive a recorded OEVL event log deterministically and
+                    print the canonical replay report line; a log that carries
+                    execution events must regenerate them bit-for-bit or this
+                    command exits non-zero — record one with `bench --trace
+                    bursty-mixed --replay-record` or a serving session's
+                    `runtime.replay_record` config block)
   omni-serve agent --node-id <id> --listen <host:port> [--gpus 2] [--device-bytes N]
                    [--heartbeat 0.25] [--read-timeout 5.0]
                    (multi-node mode: host this machine's share of a pipeline —
@@ -250,6 +264,18 @@ fn real_main() -> Result<()> {
                             fmt::dur(sc.queue_wait.mean()),
                         );
                     }
+                    // Event-core mailbox counters: spurious wakes mean a
+                    // park ended with nothing pending (liveness backstop
+                    // firing — a hot value flags a missing wake hook).
+                    if s.wakeups + s.spurious_wakeups > 0 {
+                        println!(
+                            "wake  {:>10}: {} wakeups ({} spurious) | parked {}",
+                            label,
+                            s.wakeups,
+                            s.spurious_wakeups,
+                            fmt::dur(s.idle_ms / 1e3),
+                        );
+                    }
                 }
             }
             Ok(())
@@ -430,6 +456,79 @@ fn real_main() -> Result<()> {
                 println!("fractional < whole on mean JCT confirmed over {seeds} seeds");
                 return Ok(());
             }
+            if trace == "bursty-mixed" {
+                // The event-core harness on the bursty-mixed trace:
+                // `--event-core` is the CI smoke gate (the event-driven
+                // executor must beat the bounded-backoff polling baseline
+                // on EVERY seed, or this command exits non-zero);
+                // `--replay-record` captures one seeded run as an OEVL
+                // log that `omni-serve replay` re-drives bit-for-bit.
+                let n = args.flag_usize("n", 64)?;
+                let lanes = budget.max(1) as u32;
+                if args.flag_bool("event-core") {
+                    let seeds = args.flag_usize("seeds", 32)? as u64;
+                    println!(
+                        "trace=bursty-mixed-replay lanes={lanes} n={n} seeds={seeds} \
+                         (event-driven core vs bounded-backoff polling)"
+                    );
+                    let (mut sum_jct, mut worst_jct) = (0.0, f64::INFINITY);
+                    let (mut sum_wait, mut worst_wait) = (0.0, f64::INFINITY);
+                    for s in 1..=seeds {
+                        let (_, ev) = omni_serve::event_core::replay::record(s, n, lanes);
+                        let poll = omni_serve::event_core::replay::record_polling(s, n, lanes);
+                        anyhow::ensure!(
+                            ev.mean_jct_s() <= poll.mean_jct_s(),
+                            "event core lost to polling on mean JCT at seed {s}: \
+                             {:.6}s vs {:.6}s",
+                            ev.mean_jct_s(),
+                            poll.mean_jct_s(),
+                        );
+                        anyhow::ensure!(
+                            ev.p95_wait_s() < poll.p95_wait_s(),
+                            "event core did not improve p95 queue-wait at seed {s}: \
+                             {:.6}s vs {:.6}s",
+                            ev.p95_wait_s(),
+                            poll.p95_wait_s(),
+                        );
+                        let mj = (poll.mean_jct_s() - ev.mean_jct_s()) / poll.mean_jct_s();
+                        let mw = (poll.p95_wait_s() - ev.p95_wait_s()) / poll.p95_wait_s();
+                        sum_jct += mj;
+                        worst_jct = worst_jct.min(mj);
+                        sum_wait += mw;
+                        worst_wait = worst_wait.min(mw);
+                    }
+                    println!(
+                        "  JCT margin mean {:+.2}% worst {:+.2}% | \
+                         p95 queue-wait margin mean {:+.2}% worst {:+.2}%",
+                        100.0 * sum_jct / seeds as f64,
+                        100.0 * worst_jct,
+                        100.0 * sum_wait / seeds as f64,
+                        100.0 * worst_wait,
+                    );
+                    println!(
+                        "event-core <= polling mean JCT and < p95 queue-wait \
+                         confirmed over {seeds} seeds"
+                    );
+                }
+                if args.flag_bool("replay-record") {
+                    let path = args.flag("replay-path").unwrap_or("replay.evl");
+                    let (log, report) = omni_serve::event_core::replay::record(seed, n, lanes);
+                    std::fs::write(path, log.encode())
+                        .with_context(|| format!("writing replay log to {path}"))?;
+                    println!(
+                        "recorded seed={seed} lanes={lanes}: {} events to {path}",
+                        log.events.len()
+                    );
+                    println!("{}", report.line());
+                }
+                if !args.flag_bool("event-core") && !args.flag_bool("replay-record") {
+                    bail!(
+                        "--trace bursty-mixed needs --event-core (the CI gate) \
+                         and/or --replay-record (capture an OEVL log)"
+                    );
+                }
+                return Ok(());
+            }
             if trace == "prefill-heavy" {
                 let n = args.flag_usize("n", 64)?;
                 let wl = datasets::prefill_heavy(seed, n, 56.0);
@@ -490,8 +589,8 @@ fn real_main() -> Result<()> {
                 other => {
                     bail!(
                         "unknown trace `{other}` \
-                         (bursty|librispeech|seedtts|prefill-heavy|overload-storm|\
-                         shared-prefix|cross-node|fractional)"
+                         (bursty|bursty-mixed|librispeech|seedtts|prefill-heavy|\
+                         overload-storm|shared-prefix|cross-node|fractional)"
                     )
                 }
             };
@@ -516,6 +615,30 @@ fn real_main() -> Result<()> {
                 auto.scale_downs,
                 auto.max_slots,
             );
+            Ok(())
+        }
+        "replay" => {
+            // Re-drive a recorded OEVL event log deterministically and
+            // print the canonical report line.  A log that carries
+            // execution events (a sim capture) must regenerate them
+            // bit-for-bit; an arrivals-only log (a serving capture) is
+            // re-executed on the deterministic FCFS lane model.
+            let path = args
+                .positional
+                .first()
+                .map(String::as_str)
+                .or_else(|| args.flag("log"))
+                .ok_or_else(|| anyhow::anyhow!("usage: omni-serve replay <log.evl>"))?;
+            let bytes = std::fs::read(path).with_context(|| format!("reading {path}"))?;
+            let log = omni_serve::event_core::EventLog::decode(&bytes)?;
+            println!(
+                "decoded {path}: seed={} lanes={} events={}",
+                log.seed,
+                log.lanes,
+                log.events.len(),
+            );
+            let report = omni_serve::event_core::replay::replay(&log)?;
+            println!("{}", report.line());
             Ok(())
         }
         "agent" => {

@@ -123,12 +123,23 @@ pub struct StageSummary {
     /// hold no cache).
     pub cache: Option<crate::metrics::CacheCounters>,
     pub bytes_sent: u64,
+    /// Event-core wake counters: how often the replica's parked thread
+    /// was woken with at least one event pending…
+    pub wakeups: u64,
+    /// …how often a park ended with nothing pending (timeout or liveness
+    /// backstop — a hot value here means a missing wake hook)…
+    pub spurious_wakeups: u64,
+    /// …and how long the thread spent parked, in milliseconds.
+    pub idle_ms: f64,
 }
 
 impl StageSummary {
     /// Fold another replica's summary into this one (stage-level rollup).
     pub fn absorb(&mut self, other: &StageSummary) {
         self.bytes_sent += other.bytes_sent;
+        self.wakeups += other.wakeups;
+        self.spurious_wakeups += other.spurious_wakeups;
+        self.idle_ms += other.idle_ms;
         match (&mut self.ar, &other.ar) {
             (Some(a), Some(b)) => {
                 a.iterations += b.iterations;

@@ -6,6 +6,13 @@
 //! through a [`StageScheduler`] whose [`crate::scheduler::BatchPolicy`]
 //! decides, at each token boundary, what joins the engine's batch
 //! (paper §3.3 per-stage request batching).
+//!
+//! The loop body runs under [`crate::event_core::drive`]: when an
+//! iteration finds no work, the thread parks on the replica's
+//! [`WakeSet`] until an edge push/close, frontend submission, cancel
+//! mark, or control command wakes it — no spin-polling.  The same body
+//! shape (a closure returning [`Tick`]) is what `scheduler::sim` drives
+//! under a virtual clock.
 
 use std::collections::HashMap;
 use std::sync::atomic::Ordering;
@@ -23,6 +30,7 @@ use crate::engine::diffusion::{DiffusionEngine, DiffusionOptions};
 use crate::engine::encoder::{EncodeJob, EncoderEngine};
 use crate::engine::vocoder::{VocoderEngine, VocoderKind};
 use crate::engine::{SamplingParams, StageItem};
+use crate::event_core::{drive, RealDriver, Tick, WakeSet, WAKE_SINK};
 use crate::metrics::{Event, Recorder};
 use crate::runtime::{Artifacts, HostTensor, StageRuntime};
 use crate::scheduler::{EngineView, StageAssignment, StageScheduler};
@@ -104,6 +112,14 @@ pub struct StageSpec {
     /// Rendezvous after engine construction (compilation excluded from
     /// request timing).
     pub ready: Arc<std::sync::Barrier>,
+    /// The replica's wake mailbox (event core): edge pushes and closes,
+    /// frontend submissions, cancel tombstones, and control commands all
+    /// wake the thread, so an idle iteration parks instead of polling.
+    pub wake: Arc<WakeSet>,
+    /// Exit stage only: the session collector's wake mailbox, signalled
+    /// after every sink send so the collector never sleeps on a full
+    /// channel.
+    pub sink_wake: Option<Arc<WakeSet>>,
 }
 
 enum Engine {
@@ -329,11 +345,18 @@ fn run(mut spec: StageSpec) -> Result<StageSummary> {
     let mut tick: u64 = 0;
     // Tombstone sweep generation already processed (see the sweep arm).
     let mut cancel_gen: u64 = 0;
-    // Bounded-backoff idle waiting: spin briefly for burst reaction, then
-    // escalate sleeps instead of spinning on empty connectors.
-    let mut backoff = crate::util::Backoff::new();
 
-    loop {
+    // Event-core wiring: every input edge wakes this worker on pushes and
+    // closes.  Items sent before registration are caught by the first
+    // body pass below (the loop always ticks once before parking), so no
+    // item can be missed in the registration window.
+    for (rx, _, _) in &inputs {
+        rx.register_wake(spec.wake.clone());
+    }
+    let wake = spec.wake.clone();
+    let mut real = RealDriver::new(spec.clock.clone());
+
+    drive(&mut real, &wake, |_drv| {
         let mut worked = false;
         tick += 1;
 
@@ -595,7 +618,14 @@ fn run(mut spec: StageSpec) -> Result<StageSummary> {
                     }
                 }
                 if let Some(sink) = &spec.sink {
-                    let _ = sink.send(item);
+                    if sink.send(item).is_ok() {
+                        // Unpark the session collector: completed items
+                        // are consumed promptly instead of at the next
+                        // sweep tick.
+                        if let Some(sw) = &spec.sink_wake {
+                            sw.wake(WAKE_SINK);
+                        }
+                    }
                 }
             }
         }
@@ -618,13 +648,15 @@ fn run(mut spec: StageSpec) -> Result<StageSummary> {
                 engine.idle(),
                 sched.is_empty(),
             ) {
-                break;
+                return Ok(Tick::Exit);
             }
-            backoff.idle_wait();
-        } else {
-            backoff.reset();
+            // Nothing to do: park until an edge push/close, frontend
+            // submission, cancel tombstone, or control command wakes
+            // us (the real driver's backstop bounds the sleep).
+            return Ok(Tick::Idle(None));
         }
-    }
+        Ok(Tick::Progress)
+    })?;
     // Final load publication: a retired/stopped replica holds no work.
     spec.slot.publish(0, false);
 
@@ -656,6 +688,10 @@ fn run(mut spec: StageSpec) -> Result<StageSummary> {
     }
     summary.sched = Some(sched.stats.clone());
     summary.bytes_sent = spec.txs.iter().map(|t| t.bytes_sent()).sum();
+    let wc = spec.wake.counters();
+    summary.wakeups = wc.wakeups;
+    summary.spurious_wakeups = wc.spurious_wakeups;
+    summary.idle_ms = wc.idle_ns as f64 / 1e6;
     Ok(summary)
 }
 

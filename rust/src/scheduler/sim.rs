@@ -17,6 +17,7 @@
 //! traces) so it cannot silently regress.
 
 use super::policy::{BatchPolicy, EngineView, PendingJob};
+use crate::event_core::{drive, Driver, SimDriver, Tick, WakeSet};
 use crate::trace::Workload;
 use crate::util::stats::Samples;
 
@@ -120,26 +121,30 @@ pub fn simulate(
     let mut queue: Vec<&SimRequest> = Vec::new();
     let mut active: Vec<Active> = Vec::new();
 
-    let mut t = 0.0f64;
     let mut jct = Samples::new();
     let mut iterations = 0u64;
     let mut occupancy = 0u64;
 
-    loop {
+    // The same tick/event skeleton the live stage loop runs under
+    // ([`crate::event_core::drive`]), here against the virtual clock: an
+    // idle engine *parks to a deadline* (the next arrival) and the
+    // [`SimDriver`] jumps time there, exactly like the old `t = r
+    // .arrival_s; continue` arm — one loop-body idiom for both worlds.
+    let wake = WakeSet::new();
+    let mut sim = SimDriver::new();
+    drive(&mut sim, &wake, |drv| {
+        let t = drv.now();
         // Arrivals up to the current time.
         while next_arrival < arrivals.len() && arrivals[next_arrival].arrival_s <= t {
             queue.push(arrivals[next_arrival]);
             next_arrival += 1;
         }
         if active.is_empty() && queue.is_empty() {
-            match arrivals.get(next_arrival) {
-                // Idle until the next request arrives.
-                Some(r) => {
-                    t = r.arrival_s;
-                    continue;
-                }
-                None => break,
-            }
+            return match arrivals.get(next_arrival) {
+                // Park until the next request arrives.
+                Some(r) => Ok(Tick::Idle(Some(r.arrival_s))),
+                None => Ok(Tick::Exit),
+            };
         }
 
         // Admission at the token boundary.
@@ -175,7 +180,7 @@ pub fn simulate(
         if active.is_empty() {
             // Queue non-empty but policy is waiting (cannot happen with an
             // empty engine thanks to the valve above).
-            continue;
+            return Ok(Tick::Progress);
         }
 
         // One engine iteration.
@@ -183,7 +188,8 @@ pub fn simulate(
         for a in &active {
             tokens += if a.prefill_left > 0 { a.prefill_left.min(cost.prefill_chunk) } else { 1 };
         }
-        t += cost.base_s + cost.token_s * tokens as f64;
+        drv.advance(cost.base_s + cost.token_s * tokens as f64);
+        let t = drv.now();
         iterations += 1;
         occupancy += active.len() as u64;
 
@@ -208,13 +214,15 @@ pub fn simulate(
             }
             !done
         });
-    }
+        Ok(Tick::Progress)
+    })
+    .expect("sim loop body never errors");
 
     SimReport {
         policy: policy.name().to_string(),
         jct,
         iterations,
-        makespan_s: t,
+        makespan_s: sim.now(),
         mean_batch: if iterations > 0 { occupancy as f64 / iterations as f64 } else { 0.0 },
     }
 }
@@ -474,7 +482,6 @@ pub fn simulate_elastic(
     });
     let mut next_arrival = 0usize;
     let mut next_tick = 0.0f64;
-    let mut now = 0.0f64;
     let mut jct = Samples::new();
     let mut ttft = Samples::new();
     let mut first_token_seen = vec![false; reqs.len()];
@@ -489,7 +496,15 @@ pub fn simulate_elastic(
     };
     let mut max_slots = sims.iter().map(|s| s.reps.len()).sum::<usize>();
 
-    loop {
+    // The elastic model runs under the same [`crate::event_core::drive`]
+    // skeleton as the live stage loop: each tick consumes every event due
+    // `now`, then parks to the next event time and the [`SimDriver`]
+    // jumps the virtual clock there (the old `now = t_next` assignment,
+    // verbatim, so reports stay bit-identical).
+    let wake = WakeSet::new();
+    let mut sim = SimDriver::new();
+    drive(&mut sim, &wake, |drv| {
+        let now = drv.now();
         // (a) Arrivals due now enter the first stage's queue.
         while next_arrival < order.len() && reqs[order[next_arrival]].arrival_s <= now {
             let ri = order[next_arrival];
@@ -658,13 +673,13 @@ pub fn simulate_elastic(
         }
         max_slots = max_slots.max(sims.iter().map(|s| s.reps.len()).sum());
 
-        // (f) Advance to the next event, or stop when nothing is left.
+        // (f) Park to the next event, or exit when nothing is left.
         let work_pending = next_arrival < order.len()
             || sims.iter().any(|s| {
                 !s.queue.is_empty() || s.reps.iter().any(|r| r.busy || !r.active.is_empty())
             });
         if !work_pending {
-            break;
+            return Ok(Tick::Exit);
         }
         let mut t_next = f64::INFINITY;
         if next_arrival < order.len() {
@@ -685,8 +700,9 @@ pub fn simulate_elastic(
         let t_next = if t_next > now { t_next } else { now + 1e-9 };
         let slots: usize = sims.iter().map(|s| s.reps.len()).sum();
         replica_seconds += slots as f64 * (t_next - now);
-        now = t_next;
-    }
+        Ok(Tick::Idle(Some(t_next)))
+    })
+    .expect("sim loop body never errors");
 
     ElasticReport {
         policy: match alloc {
@@ -698,7 +714,7 @@ pub fn simulate_elastic(
         },
         jct,
         ttft,
-        makespan_s: now,
+        makespan_s: sim.now(),
         scale_ups,
         scale_downs,
         stage_scale_ups,

@@ -179,13 +179,13 @@ impl Server {
             .admission
             .clone()
             .or_else(|| self.config.admission.clone());
-        // CacheConfig resolution to the pipeline config's `cache` block
-        // happens inside ServingSession::start; only the CLI override
-        // passes through here.
+        // CacheConfig / RuntimeConfig resolution to the pipeline
+        // config's `cache` / `runtime` blocks happens inside
+        // ServingSession::start; no CLI override passes through here.
         let cache = self.opts.cache.clone();
         let session = Arc::new(ServingSession::start(
             &orch,
-            SessionOptions { autoscaler, admission, cache },
+            SessionOptions { autoscaler, admission, cache, runtime: None },
         )?);
         *guard = Some(session.clone());
         Ok(session)
@@ -267,6 +267,9 @@ impl Server {
                         "evictions" => st.cache.evictions as usize,
                         "encoder_hits" => st.cache.encoder_hits as usize,
                         "encoder_misses" => st.cache.encoder_misses as usize,
+                        "wakeups" => st.wakeups as usize,
+                        "spurious_wakeups" => st.spurious_wakeups as usize,
+                        "idle_ms" => st.idle_ms,
                     }
                 })
                 .collect();

@@ -86,8 +86,11 @@ pub(crate) fn tick(inner: &Arc<SessionInner>, cfg: &AutoscalerConfig) -> Result<
                     && r.slot.queued() == 0
                     && !r.slot.busy();
                 if quiesced {
-                    // The replica thread exits once its engine drains.
+                    // The replica thread exits once its engine drains;
+                    // wake it so a parked worker sees the retire flag
+                    // now instead of at its liveness backstop.
                     r.retire.store(true, Ordering::SeqCst);
+                    r.wake.wake(crate::event_core::WAKE_CTL);
                 }
             }
         }
@@ -172,6 +175,9 @@ pub(crate) fn tick(inner: &Arc<SessionInner>, cfg: &AutoscalerConfig) -> Result<
                     inner.edges[ei].drain_consumer(uid);
                 }
                 st.replicas[k].draining = true;
+                // A parked victim must notice the drain (publish its
+                // now-empty state) without waiting for traffic.
+                st.replicas[k].wake.wake(crate::event_core::WAKE_CTL);
                 st.last_scale_t = now;
                 inner.recorder.emit(Event::Scale {
                     stage: stage_name.clone(),

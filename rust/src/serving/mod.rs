@@ -68,12 +68,16 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use crate::config::{
-    AdmissionConfig, AutoscalerConfig, CacheConfig, ConnectorKind, PipelineConfig, RoutingKind,
+    AdmissionConfig, AutoscalerConfig, CacheConfig, ConnectorKind, DriverKind, PipelineConfig,
+    RoutingKind, RuntimeConfig,
 };
 use crate::connector::router::EdgeCtl;
 use crate::connector::tcp::MooncakeStore;
 use crate::device::{DeviceId, DevicePool, Reservation};
 use crate::engine::StageItem;
+use crate::event_core::{
+    drive, EventLog, RealDriver, SimEvent, Tick, WakeSet, WAKE_CANCEL, WAKE_CTL, WAKE_FRONT,
+};
 use crate::metrics::{Event, Recorder};
 use crate::orchestrator::{self, stage, Orchestrator, RunClock, RunOptions, RunSummary, StageSummary};
 use crate::runtime::Artifacts;
@@ -145,16 +149,21 @@ pub struct SessionOptions {
     /// falls back to the pipeline config's `cache` block, then to the
     /// defaults (both caches on).
     pub cache: Option<CacheConfig>,
+    /// Event-core runtime knobs (driver kind, replay recording); `None`
+    /// falls back to the pipeline config's `runtime` block, then to the
+    /// defaults (real driver, no recording).
+    pub runtime: Option<RuntimeConfig>,
 }
 
 impl SessionOptions {
-    /// Honor the pipeline config's `autoscaler`/`admission`/`cache`
-    /// blocks, if present.
+    /// Honor the pipeline config's `autoscaler`/`admission`/`cache`/
+    /// `runtime` blocks, if present.
     pub fn from_config(config: &PipelineConfig) -> Self {
         Self {
             autoscaler: config.autoscaler.clone(),
             admission: config.admission.clone(),
             cache: config.cache.clone(),
+            runtime: config.runtime.clone(),
         }
     }
 }
@@ -166,6 +175,9 @@ pub(crate) struct ReplicaHandle {
     pub(crate) ord: usize,
     pub(crate) join: JoinHandle<Result<StageSummary>>,
     pub(crate) retire: Arc<AtomicBool>,
+    /// The replica thread's wake mailbox: retire/drain commands and
+    /// cancel tombstones interrupt a parked worker through it.
+    pub(crate) wake: Arc<WakeSet>,
     pub(crate) slot: Arc<ReplicaSlot>,
     pub(crate) devices: Vec<DeviceId>,
     pub(crate) reservations: Vec<Reservation>,
@@ -190,6 +202,9 @@ pub(crate) struct StageState {
 pub(crate) struct FrontTx {
     pub(crate) uid: u64,
     pub(crate) tx: mpsc::Sender<Request>,
+    /// The entry replica's wake mailbox, signalled after every front
+    /// send so a parked entry worker picks the request up immediately.
+    pub(crate) wake: Arc<WakeSet>,
 }
 
 /// Collector-side state of one in-flight request's delta stream.
@@ -251,6 +266,15 @@ pub(crate) struct SessionInner {
     /// Kept for cloning into dynamically spawned exit replicas; dropped
     /// at shutdown so the collector sees the channel close.
     pub(crate) sink_tx: Mutex<Option<mpsc::Sender<StageItem>>>,
+    /// The collector thread's wake mailbox: exit replicas signal it
+    /// after every sink send (and shutdown signals the close), so the
+    /// collector parks instead of polling `recv_timeout`.
+    pub(crate) collector_wake: Arc<WakeSet>,
+    /// Replay recording (`RuntimeConfig::replay_record`): accepted
+    /// request arrivals tee into this log, written to `replay_path` at
+    /// shutdown for `omni-serve replay`.
+    pub(crate) replay_log: Mutex<Option<EventLog>>,
+    pub(crate) replay_path: Option<String>,
     pub(crate) pool: DevicePool,
     pub(crate) dev_load: Mutex<Vec<usize>>,
     /// Per-device carved-compute ledger (milli-GPUs), seeded from the
@@ -285,6 +309,19 @@ impl SessionInner {
             .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| Some(v.saturating_sub(1)));
     }
 
+    /// Wake every replica thread's mailbox.  Cancel tombstones and
+    /// control transitions must interrupt a parked worker, not wait for
+    /// its liveness backstop.  Poison-tolerant: also called from `Drop`.
+    pub(crate) fn wake_replicas(&self, mask: u64) {
+        if let Ok(stages) = self.stages.lock() {
+            for st in stages.iter() {
+                for r in &st.replicas {
+                    r.wake.wake(mask);
+                }
+            }
+        }
+    }
+
     /// Cancel one in-flight request end-to-end.  Returns false when the
     /// request already resolved (completed or cancelled earlier).
     pub(crate) fn cancel_request(&self, req_id: u64) -> bool {
@@ -305,6 +342,9 @@ impl SessionInner {
         if let Some(a) = &self.admission {
             a.resolve(req_id, None);
         }
+        // Parked workers sweep tombstones on their next tick — get them
+        // there now so queued work of this request dies immediately.
+        self.wake_replicas(WAKE_CANCEL);
         self.recorder.emit(Event::Cancelled { req: req_id, t });
         self.dec_inflight();
         let _ = st.tx.send(OutputDelta::Done {
@@ -333,6 +373,7 @@ impl SessionInner {
         for e in &self.edges {
             e.purge_request(req_id);
         }
+        self.wake_replicas(WAKE_CANCEL);
         self.recorder.emit(Event::Rejected { req: req_id, t });
         self.dec_inflight();
         let _ = st.tx.send(OutputDelta::Rejected { t, reason, retry_after_s });
@@ -500,6 +541,14 @@ pub struct StageLiveStats {
     /// Time-slice counters summed across live replicas (zeros when the
     /// session runs without fractional sharing).
     pub slice: crate::gpu_share::SliceCounters,
+    /// Event-core wake counters summed across live replicas: parks that
+    /// ended with an event pending...
+    pub wakeups: u64,
+    /// ...parks that ended empty (timeout / liveness backstop — a hot
+    /// value means a missing wake hook)...
+    pub spurious_wakeups: u64,
+    /// ...and total parked time, in milliseconds.
+    pub idle_ms: f64,
 }
 
 /// A persistent serving runtime over one pipeline.
@@ -572,6 +621,21 @@ impl ServingSession {
             .clone()
             .or_else(|| graph.config.cache.clone())
             .unwrap_or_default();
+        // Runtime block: session options win over the pipeline config.
+        // A live session only runs under the real driver — the sim
+        // driver belongs to `scheduler::sim`, which shares the same
+        // stage-loop body through `event_core::drive`.
+        let runtime = opts
+            .runtime
+            .clone()
+            .or_else(|| graph.config.runtime.clone())
+            .unwrap_or_default();
+        runtime.validate()?;
+        anyhow::ensure!(
+            runtime.driver == DriverKind::Real,
+            "serving sessions require `driver = real` (the sim driver is scheduler-only)"
+        );
+        let entry_lanes = plan.assignment(graph.entry).replicas as u32;
 
         let (sink_tx, sink_rx) = mpsc::channel::<StageItem>();
         let pool = DevicePool::new(graph.config.n_devices, graph.config.device_bytes);
@@ -605,6 +669,13 @@ impl ServingSession {
             cache,
             deadlines: Mutex::new(Vec::new()),
             sink_tx: Mutex::new(Some(sink_tx)),
+            collector_wake: Arc::new(WakeSet::new()),
+            replay_log: Mutex::new(if runtime.replay_record {
+                Some(EventLog { seed: 0, lanes: entry_lanes, events: Vec::new() })
+            } else {
+                None
+            }),
+            replay_path: runtime.replay_record.then(|| runtime.replay_path.clone()),
             pool,
             dev_load: Mutex::new(dev_load),
             dev_milli: Mutex::new(dev_milli),
@@ -666,16 +737,35 @@ impl ServingSession {
         let collector = {
             let inner = inner.clone();
             std::thread::Builder::new().name("serving-collector".into()).spawn(move || {
-                loop {
-                    match sink_rx.recv_timeout(Duration::from_millis(50)) {
-                        Ok(item) => inner.collect_item(item),
-                        Err(mpsc::RecvTimeoutError::Timeout) => {}
-                        // Every sink sender is gone (all exit replicas
-                        // joined and the session dropped its clone).
-                        Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                // Parked on the session's collector mailbox: exit
+                // replicas signal every sink send and shutdown signals
+                // the close, so the thread sleeps at zero CPU between
+                // items.  The 50ms idle deadline keeps housekeeping
+                // (deadline expiry, shed sweeps, failure teardown) on a
+                // clock, matching the old `recv_timeout` cadence.
+                let wake = inner.collector_wake.clone();
+                let mut real = RealDriver::new(inner.clock.clone());
+                let _ = drive(&mut real, &wake, |drv| {
+                    let mut closed = false;
+                    loop {
+                        match sink_rx.try_recv() {
+                            Ok(item) => inner.collect_item(item),
+                            Err(mpsc::TryRecvError::Empty) => break,
+                            // Every sink sender is gone (all exit
+                            // replicas joined and the session dropped
+                            // its clone): flush and exit — exactly once.
+                            Err(mpsc::TryRecvError::Disconnected) => {
+                                closed = true;
+                                break;
+                            }
+                        }
                     }
                     inner.collector_tick();
-                }
+                    if closed {
+                        return Ok(Tick::Exit);
+                    }
+                    Ok(Tick::Idle(Some(drv.now() + 0.05)))
+                });
                 // Session over: close every remaining stream so blocked
                 // clients see `Closed` instead of hanging.
                 inner.streams.lock().unwrap().clear();
@@ -792,6 +882,20 @@ impl ServingSession {
         self.inner
             .recorder
             .emit(Event::Arrived { req: id, t: now, deadline: deadline_s.map(|d| now + d) });
+        // Replay recording: tee the accepted arrival (priced by the same
+        // deterministic cost model the replay executor uses) into the
+        // session's event log, written out at shutdown.
+        if let Some(log) = self.inner.replay_log.lock().unwrap().as_mut() {
+            log.events.push(SimEvent::Arrive {
+                id,
+                t_us: (now * 1e6).round() as u64,
+                cost_us: crate::event_core::replay::price_request_us(
+                    req.total_input_tokens(),
+                    req.max_text_tokens,
+                    req.max_audio_tokens,
+                ),
+            });
+        }
 
         let mut front = self.inner.front.lock().unwrap();
         let (txs, next) = &mut *front;
@@ -800,6 +904,7 @@ impl ServingSession {
             let i = *next % txs.len();
             match txs[i].tx.send(pending.take().expect("requeued on failure")) {
                 Ok(()) => {
+                    txs[i].wake.wake(WAKE_FRONT);
                     *next = (i + 1) % txs.len();
                     return Ok(ResponseStream::new(id, now, rx, self.inner.clone()));
                 }
@@ -859,6 +964,9 @@ impl ServingSession {
                     busy: 0,
                     cache: Default::default(),
                     slice: Default::default(),
+                    wakeups: 0,
+                    spurious_wakeups: 0,
+                    idle_ms: 0.0,
                 };
                 for r in &st.replicas {
                     if r.draining {
@@ -871,6 +979,10 @@ impl ServingSession {
                         out.busy += 1;
                     }
                     out.cache.absorb(&r.slot.cache());
+                    let wc = r.wake.counters();
+                    out.wakeups += wc.wakeups;
+                    out.spurious_wakeups += wc.spurious_wakeups;
+                    out.idle_ms += wc.idle_ns as f64 / 1e6;
                     if let Some((ts, id)) = &r.share {
                         let c = ts.counters(*id);
                         out.slice.grants += c.grants;
@@ -953,6 +1065,7 @@ impl ServingSession {
         for st in states {
             for r in st.replicas {
                 r.retire.store(true, Ordering::SeqCst);
+                r.wake.wake(WAKE_CTL);
                 match r.join.join() {
                     Ok(Ok(summary)) => summaries.push(summary),
                     Ok(Err(e)) => {
@@ -975,8 +1088,17 @@ impl ServingSession {
         // channel closes and the collector exits after draining it
         // (closing any stream still open).
         *self.inner.sink_tx.lock().unwrap() = None;
+        self.inner.collector_wake.wake(WAKE_CTL);
         if let Some(h) = self.collector.lock().unwrap().take() {
             let _ = h.join();
+        }
+        // Persist the recorded replay log, if the session kept one.
+        if let (Some(path), Some(log)) = (
+            self.inner.replay_path.as_ref(),
+            self.inner.replay_log.lock().unwrap().take(),
+        ) {
+            std::fs::write(path, log.encode())
+                .with_context(|| format!("writing replay log to {path}"))?;
         }
         if let Some(e) = first_err {
             return Err(e);
@@ -999,6 +1121,8 @@ impl Drop for ServingSession {
         self.inner.stop.store(true, Ordering::SeqCst);
         self.inner.front.lock().unwrap().0.clear();
         *self.inner.sink_tx.lock().unwrap() = None;
+        self.inner.wake_replicas(WAKE_CTL);
+        self.inner.collector_wake.wake(WAKE_CTL);
     }
 }
 
@@ -1050,6 +1174,9 @@ pub(crate) fn spawn_replica(
     };
 
     let retire = Arc::new(AtomicBool::new(false));
+    let wake = Arc::new(WakeSet::new());
+    // Exit stages signal the collector's mailbox after every sink send.
+    let sink_wake = sink.as_ref().map(|_| inner.collector_wake.clone());
     let slot = Arc::new(ReplicaSlot::default());
     // Fractional sharing: a single-device replica registers a slot on
     // its device's time-slice scheduler, weighted by its compute share
@@ -1100,10 +1227,12 @@ pub(crate) fn spawn_replica(
         device_bytes: inner.graph.config.device_bytes,
         downstream_hint: orchestrator::downstream_hint(graph, &inner.artifacts, stage_idx),
         ready: ready.clone(),
+        wake: wake.clone(),
+        sink_wake,
     };
     let join = stage::spawn(spec)?;
     let front_uid = front_tx.map(|t| {
-        inner.front.lock().unwrap().0.push(FrontTx { uid, tx: t });
+        inner.front.lock().unwrap().0.push(FrontTx { uid, tx: t, wake: wake.clone() });
         uid
     });
     Ok(ReplicaHandle {
@@ -1111,6 +1240,7 @@ pub(crate) fn spawn_replica(
         ord,
         join,
         retire,
+        wake,
         slot,
         devices,
         reservations,

@@ -1,13 +1,25 @@
-//! Bounded-backoff idle sleeping for poll loops.
+//! Bounded-backoff idle sleeping for *external* poll loops.
 //!
-//! Stage threads and other pollers drive non-blocking receivers
-//! ([`crate::connector::ConnectorRx::try_recv`] and the routed
-//! [`crate::connector::router::RouterRx`]) in a loop.  Sleeping a fixed
-//! interval on every empty poll either burns CPU (interval too short) or
-//! adds latency to the first item after an idle spell (too long).
-//! [`Backoff`] escalates instead: a few busy spins for sub-microsecond
-//! reaction to bursts, then sleeps that double from [`Backoff::MIN_SLEEP`]
-//! up to a hard cap, reset to zero the moment any work appears.
+//! [`Backoff`] escalates an idle wait: a few busy spins for
+//! sub-microsecond reaction to bursts, then sleeps that double from
+//! [`Backoff::MIN_SLEEP`] up to a hard cap, reset to zero the moment
+//! any work appears.
+//!
+//! **No internal loop uses this anymore.**  Stage threads, the routed
+//! edges, and the serving collector used to drive their non-blocking
+//! receivers under a `Backoff` sleep; they now park on an
+//! [`crate::event_core::WakeSet`] mailbox and are woken by the sender,
+//! so the first item after an idle spell pays no backoff latency at
+//! all.  The type is kept for two reasons only:
+//!
+//! * it is the *measured baseline* the event-core bench gate compares
+//!   against — [`crate::event_core::replay::record_polling`] charges a
+//!   dequeue delay sampled from exactly the `[MIN_SLEEP, MAX_SLEEP]`
+//!   bounds below, and the tests here pin those bounds;
+//! * it remains the right tool for a genuine *external* poll — a
+//!   resource with no wake hook to register (e.g. a non-blocking TCP
+//!   accept loop).  Today every TCP path blocks with an OS read
+//!   timeout, so no such caller exists in-tree.
 
 use std::time::Duration;
 
